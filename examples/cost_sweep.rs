@@ -1,0 +1,57 @@
+//! Budget-ratio sweep (Fig 6/7 style): how TTFT and cost move with b,
+//! for DiSCo vs the stochastic baseline, under both constraint regimes.
+//!
+//!   cargo run --release --example cost_sweep [-- --requests 500]
+
+use disco::cost::unified::Constraint;
+use disco::experiments::common::*;
+use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::engine::{Scenario, SimConfig};
+use disco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n = args.get_usize("requests", 500)?;
+    let seeds = args.get_u64("seeds", 3)?;
+    let service = ServerProfile::deepseek_v25();
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+
+    for constraint in [Constraint::Server, Constraint::Device] {
+        let scenario = Scenario::new(
+            service.clone(),
+            device.clone(),
+            constraint,
+            SimConfig::default(),
+        );
+        println!(
+            "\n=== {} × {} — {}-constrained ===",
+            service.name,
+            device.name,
+            constraint_name(constraint)
+        );
+        println!(
+            "{:>4} {:>14} {:>14} {:>16} {:>16}",
+            "b", "DiSCo mean", "Stoch mean", "DiSCo cost ($)", "w/o migration ($)"
+        );
+        for &b in &BUDGET_GRID {
+            let disco = run_cell(
+                &service, &device, constraint, disco_for(constraint), b, true, n, seeds,
+            );
+            let stoch = run_cell(
+                &service, &device, constraint, stoch_for(constraint), b, false, n, seeds,
+            );
+            let nomig = run_cell(
+                &service, &device, constraint, disco_for(constraint), b, false, n, seeds,
+            );
+            println!(
+                "{:>4.1} {:>13.3}s {:>13.3}s {:>16.6} {:>16.6}",
+                b,
+                avg_mean_ttft(&disco),
+                avg_mean_ttft(&stoch),
+                avg_cost(&disco, &scenario.costs),
+                avg_cost(&nomig, &scenario.costs),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end driver (the repo's required full-stack proof): serve a
+//! batched streaming workload where the DEVICE endpoint is a REAL
+//! transformer executed through all three layers —
+//!
+//!   L1 Pallas flash-attention/matmul kernels (interpret-lowered)
+//!     → L2 JAX transformer prefill/decode, AOT-lowered to HLO text
+//!       → L3 Rust coordinator executing via the PJRT CPU client
+//!
+//! — racing an emulated commercial server endpoint under the DiSCo
+//! dispatch policy, with latency/throughput reported at the end.
+//!
+//!   make artifacts && cargo run --release --example serve_live
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use disco::coordinator::policy::{Policy, PolicyKind};
+use disco::profiles::ServerProfile;
+use disco::runtime::{Manifest, ModelRunner};
+use disco::serve::{LiveConfig, LiveRequest, LiveServer};
+use disco::stats::describe::Summary;
+
+fn main() -> anyhow::Result<()> {
+    disco::util::logging::init();
+    let dir = disco::runtime::artifacts_dir();
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let runner = ModelRunner::load(&client, manifest.variant("device_sm")?)?;
+    println!(
+        "loaded device model '{}' ({} params) via PJRT {}",
+        runner.manifest.name,
+        runner.manifest.param_count,
+        client.platform_name()
+    );
+
+    // Server latencies scaled 0.2× so the demo finishes quickly; device
+    // compute is REAL wall-clock PJRT execution.
+    let server = LiveServer::new(
+        runner,
+        ServerProfile::gpt4o_mini(),
+        LiveConfig {
+            server_time_scale: 0.2,
+            consumption_rate: 5.0,
+            seed: 7,
+        },
+    );
+
+    let n_requests = 24;
+    let max_new = 24;
+    let reqs: Vec<LiveRequest> = (0..n_requests as u64)
+        .map(|id| LiveRequest {
+            id,
+            prompt: server
+                .runner
+                .tokenizer
+                .synthetic_prompt(8 + (id as u32 * 17) % 120, id),
+            max_new,
+        })
+        .collect();
+
+    // Race both endpoints on every request (device budget b = 1).
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, false);
+    let t0 = std::time::Instant::now();
+    let records = server.serve(&reqs, &policy);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let ttfts: Vec<f64> = records.iter().map(|r| r.ttft).collect();
+    let mut tbts: Vec<f64> = Vec::new();
+    for r in &records {
+        tbts.extend_from_slice(&r.tbts);
+    }
+    let ttft = Summary::of(&ttfts);
+    let tbt = Summary::of(&tbts);
+    let total_tokens: usize = records.iter().map(|r| r.tokens.len()).sum();
+    let device_wins = records
+        .iter()
+        .filter(|r| r.winner == disco::endpoint::EndpointKind::Device)
+        .count();
+
+    println!("\n=== end-to-end serving report ===");
+    println!("requests        : {n_requests} (max_new = {max_new})");
+    println!("wall time       : {wall:.2} s");
+    println!("throughput      : {:.1} tokens/s end-to-end", total_tokens as f64 / wall);
+    println!("TTFT            : mean {:.3} s, p99 {:.3} s", ttft.mean, ttft.p99);
+    println!("perceived TBT   : mean {:.3} s, p99 {:.3} s", tbt.mean, tbt.p99);
+    println!("prefill winners : device {device_wins} / server {}", records.len() - device_wins);
+    println!("\nsample streams (device text is real greedy model output):");
+    for r in records.iter().take(4) {
+        println!(
+            "  req {:>2} [{}]: ttft {:.3}s, {:?}",
+            r.id,
+            r.winner,
+            r.ttft,
+            r.text.chars().take(32).collect::<String>()
+        );
+    }
+    anyhow::ensure!(total_tokens > 0, "no tokens generated");
+    Ok(())
+}

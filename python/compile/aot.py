@@ -1,0 +1,152 @@
+"""AOT pipeline: lower the L2 model to HLO text + parameter blobs.
+
+For each model variant this emits into artifacts/:
+
+  <variant>.prefill.hlo.txt   — HLO text of prefill(params..., tokens, length)
+  <variant>.decode.hlo.txt    — HLO text of decode(params..., token, pos, kc, vc)
+  <variant>.params.bin        — little-endian f32 parameter data, in
+                                param_spec order, contiguous
+  manifest.json               — shapes/ABI for the Rust runtime
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids (see /opt/xla-example).
+
+Python runs only at build time: `make artifacts` is a no-op when outputs
+are newer than their inputs.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text.
+
+    return_tuple=True: xla_extension 0.5.1's PJRT returns the root as a
+    single tuple buffer either way (no output flattening in this build —
+    verified, return_tuple=False crashes its compiler), so the Rust side
+    unwraps with to_tuple3(). print_large_constants=True keeps baked
+    weights in the text (the default printer elides them to `{...}`,
+    which the parser silently reads as zeros)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits source_end_line/column metadata the 0.5.1 HLO parser
+    # rejects; strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_variant(
+    cfg: M.TransformerConfig,
+    seed: int,
+    out_dir: pathlib.Path,
+    bake_params: bool = True,
+) -> dict:
+    """Lower one model variant; returns its manifest entry.
+
+    bake_params=True closes the weights into the HLO as constants (§Perf:
+    this PJRT build re-converts every literal argument per execute() call
+    — ~4 MB/step for device_sm — so baking removes the dominant per-token
+    host cost; the runtime then passes only (tokens, length) / (token,
+    pos, caches))."""
+    spec = M.param_spec(cfg)
+    param_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+
+    s = cfg.max_seq
+    cache_shape = (cfg.n_layers, s, cfg.n_heads, cfg.head_dim)
+    tokens = jax.ShapeDtypeStruct((s,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+
+    if bake_params:
+        const_params = M.init_params(cfg, seed)
+        prefill_fn = lambda t, l: M.prefill(cfg, const_params, t, l)  # noqa: E731
+        decode_fn = lambda tok, p, kc, vc: M.decode_step(  # noqa: E731
+            cfg, const_params, tok, p, kc, vc
+        )
+        prefill_lowered = jax.jit(prefill_fn).lower(tokens, scalar)
+        decode_lowered = jax.jit(decode_fn).lower(scalar, scalar, cache, cache)
+    else:
+        prefill_lowered = jax.jit(M.prefill_fn(cfg)).lower(*param_shapes, tokens, scalar)
+        decode_lowered = jax.jit(M.decode_fn(cfg)).lower(
+            *param_shapes, scalar, scalar, cache, cache
+        )
+
+    prefill_path = out_dir / f"{cfg.name}.prefill.hlo.txt"
+    decode_path = out_dir / f"{cfg.name}.decode.hlo.txt"
+    prefill_path.write_text(to_hlo_text(prefill_lowered))
+    decode_path.write_text(to_hlo_text(decode_lowered))
+
+    # Parameter blob: contiguous f32 little-endian in spec order.
+    params = M.init_params(cfg, seed)
+    blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+    params_path = out_dir / f"{cfg.name}.params.bin"
+    params_path.write_bytes(blob)
+
+    return {
+        "name": cfg.name,
+        "baked_params": bake_params,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "vocab": cfg.vocab,
+        "head_dim": cfg.head_dim,
+        "seed": seed,
+        "param_count": int(sum(int(np.prod(s)) for _, s in spec)),
+        "params": [
+            {"name": name, "shape": list(shape)} for name, shape in spec
+        ],
+        "prefill_hlo": prefill_path.name,
+        "decode_hlo": decode_path.name,
+        "params_bin": params_path.name,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--variants",
+        default=",".join(M.VARIANTS),
+        help="comma-separated variant names",
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    entries = []
+    for name in args.variants.split(","):
+        cfg = M.VARIANTS[name]
+        print(f"lowering {name}: {cfg.param_count():,} params ...", flush=True)
+        entries.append(lower_variant(cfg, args.seed, out_dir))
+
+    manifest = {
+        "format": 1,
+        "bos_id": M.BOS_ID,
+        "eos_id": M.EOS_ID,
+        "vocab": M.VOCAB,
+        "variants": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir}/manifest.json with {len(entries)} variants")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .attention import flash_attention
+from .matmul import blocked_matmul
+from . import ref
+
+__all__ = ["flash_attention", "blocked_matmul", "ref"]

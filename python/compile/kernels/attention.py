@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: Flash-style blocked causal attention.
+
+TPU-oriented design (DESIGN.md §Hardware-Adaptation): the HBM↔VMEM
+schedule is expressed through BlockSpecs — the grid iterates (head,
+q-block) and each kernel invocation streams K/V for its head through VMEM
+while maintaining the online-softmax running max/denominator in f32
+scratch. On a real TPU the inner contractions map onto the MXU; here
+`interpret=True` lowers the same program to plain HLO so the CPU PJRT
+client can execute it (Mosaic custom-calls cannot run on CPU).
+
+VMEM budget per grid step (f32 words):
+  q block:       block_q × head_dim
+  k, v (head):   2 × seq × head_dim
+  accumulators:  block_q × head_dim + 2 × block_q
+With the defaults (block_q=64, head_dim ≤ 128, seq ≤ 1024) this stays
+well under a 16 MB VMEM budget; see EXPERIMENTS.md §Perf for the
+utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_q, block_kv, causal):
+    """One (head, q-block) grid step with an online-softmax kv loop."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    q = q * scale
+
+    seq = k_ref.shape[0]
+    n_kv = seq // block_kv
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+    valid_len = len_ref[0]
+
+    neg = jnp.finfo(jnp.float32).min
+
+    def body(kv_i, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = pl.load(
+            k_ref, (pl.dslice(kv_i * block_kv, block_kv), slice(None))
+        ).astype(jnp.float32)
+        v_blk = pl.load(
+            v_ref, (pl.dslice(kv_i * block_kv, block_kv), slice(None))
+        ).astype(jnp.float32)
+        s = q @ k_blk.T  # [block_q, block_kv] — MXU contraction on TPU
+        k_pos = kv_i * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        mask = k_pos[None, :] < valid_len
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, neg)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (exp(neg - neg) would be exp(0)).
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m0 = jnp.full((block_q,), neg, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+
+    if causal:
+        # Skip kv blocks entirely above the diagonal.
+        last_kv = jnp.minimum(((qi + 1) * block_q + block_kv - 1) // block_kv, n_kv)
+    else:
+        last_kv = n_kv
+    acc, _, l = jax.lax.fori_loop(0, last_kv, body, (acc0, m0, l0))
+    l = jnp.where(l == 0.0, 1.0, l)  # padded rows produce zeros
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array | None = None,
+    causal: bool = True,
+    block_q: int = 64,
+    block_kv: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked causal attention.
+
+    Args:
+      q, k, v: [heads, seq, head_dim]; seq must be divisible by block_q
+        and block_kv (pad upstream).
+      length: scalar int32 valid length (keys >= length masked); defaults
+        to seq.
+      causal: apply the causal mask.
+      interpret: MUST stay True for CPU execution (see module docstring).
+
+    Returns:
+      [heads, seq, head_dim], same dtype as q.
+    """
+    h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    if length is None:
+        length = jnp.array(s, dtype=jnp.int32)
+    len_arr = jnp.reshape(length.astype(jnp.int32), (1,))
+
+    grid = (h, s // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_kv=block_kv, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, len_arr)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: MXU-tiled blocked matmul.
+
+Tiles (M, N, K) into MXU-native blocks with an f32 VMEM accumulator; the
+K dimension is the innermost grid axis so the output block is revisited
+and accumulated in place (`@pl.when` zero-initialises on the first K
+step). With 128×128 blocks the VMEM footprint is
+3 × 128 × 128 × 4 B ≈ 192 KB — far inside budget — and each step is one
+native MXU tile contraction. `interpret=True` for CPU execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += (a @ b).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is ≤ preferred (dims here are ≥1)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def blocked_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = A @ B with MXU-style tiling.
+
+    Args:
+      a: [M, K]; b: [K, N]. Block sizes self-adjust to divide the dims.
+
+    Returns:
+      [M, N] in a's dtype (f32 accumulation inside).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops. pytest asserts allclose between the two
+across shape/dtype sweeps; the reference is also what the L2 model uses on
+paths that are not compute hot-spots (single-token decode attention).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    length: jax.Array | None = None,
+) -> jax.Array:
+    """Multi-head attention oracle.
+
+    Args:
+      q, k, v: [heads, seq, head_dim].
+      causal: apply a causal mask.
+      length: optional valid-length scalar; keys at positions >= length are
+        masked out (padding).
+
+    Returns:
+      [heads, seq, head_dim] attention output.
+    """
+    h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(ki <= qi, logits, neg)
+    if length is not None:
+        ki = jnp.arange(s)[None, None, :]
+        logits = jnp.where(ki < length, logits, neg)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Single-query attention against a KV cache.
+
+    Args:
+      q: [heads, head_dim] query for the token at position `pos`.
+      k_cache, v_cache: [seq, heads, head_dim].
+      pos: scalar int32 position of the query (attends to 0..=pos).
+
+    Returns:
+      [heads, head_dim].
+    """
+    s = k_cache.shape[0]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "hd,shd->hs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(s)[None, :] <= pos
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hs,shd->hd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

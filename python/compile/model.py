@@ -1,0 +1,249 @@
+"""L2: decoder-only transformer LM in JAX, calling the L1 Pallas kernels.
+
+This is the "model" half of the three-layer stack: a pre-norm transformer
+with byte-level vocabulary whose *prefill* path routes attention through
+the Pallas flash-attention kernel and its FFN through the Pallas blocked
+matmul. The *decode* path is single-token work (matvecs) where a blocked
+kernel has nothing to tile, so it uses the jnp reference ops.
+
+Both entry points are pure functions over an explicit parameter list so
+they AOT-lower cleanly (aot.py) and the Rust runtime can feed parameters
+positionally:
+
+  prefill(params..., tokens[S] i32, length[] i32)
+      -> (logits[V], k_cache[L,S,H,Dh], v_cache[L,S,H,Dh])
+  decode(params..., token[] i32, pos[] i32, k_cache, v_cache)
+      -> (logits[V], k_cache, v_cache)
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import blocked_matmul, flash_attention
+from .kernels import ref as kref
+
+# Byte-level tokenizer: 256 bytes + BOS + EOS, padded to a lane-friendly
+# table size. Must match rust/src/runtime/tokenizer.rs.
+BOS_ID = 256
+EOS_ID = 257
+VOCAB = 512
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """Model hyperparameters for one AOT variant."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    vocab: int = VOCAB
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model**2 + 2 * self.d_model * self.d_ff + 2 * self.d_model
+        return (
+            2 * self.vocab * self.d_model
+            + self.max_seq * self.d_model
+            + self.n_layers * per_layer
+            + self.d_model  # final norm
+        )
+
+
+# The two serving variants: the "device" model is the small fast one, the
+# "server" model the larger one (synthetic weights; see DESIGN.md).
+DEVICE_SM = TransformerConfig(
+    name="device_sm", n_layers=4, d_model=128, n_heads=4, d_ff=512, max_seq=256
+)
+SERVER_MD = TransformerConfig(
+    name="server_md", n_layers=6, d_model=192, n_heads=6, d_ff=768, max_seq=256
+)
+VARIANTS = {c.name: c for c in (DEVICE_SM, SERVER_MD)}
+
+
+def param_spec(cfg: TransformerConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the ABI between aot.py and Rust."""
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec += [
+        ("ln_f", (cfg.d_model,)),
+        ("unembed", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def init_params(cfg: TransformerConfig, seed: int = 0) -> list[jax.Array]:
+    """Deterministic synthetic weights (no pretrained weights offline)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return params
+
+
+def _unpack(cfg: TransformerConfig, params: list[jax.Array]) -> dict:
+    spec = param_spec(cfg)
+    assert len(params) == len(spec), (len(params), len(spec))
+    return {name: p for (name, _), p in zip(spec, params)}
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _ffn_prefill(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    # Pallas blocked matmul on the [S, d]×[d, ff] hot path.
+    h = blocked_matmul(x, w_up)
+    h = jax.nn.gelu(h)
+    return blocked_matmul(h, w_down)
+
+
+def prefill(cfg: TransformerConfig, params: list[jax.Array], tokens: jax.Array,
+            length: jax.Array):
+    """Process a (padded) prompt; return next-token logits and KV caches.
+
+    Args:
+      tokens: [max_seq] int32, padded with zeros beyond `length`.
+      length: scalar int32 valid prompt length (1..max_seq).
+
+    Returns:
+      logits: [vocab] for the position after the prompt.
+      k_cache, v_cache: [n_layers, max_seq, n_heads, head_dim].
+    """
+    p = _unpack(cfg, params)
+    s = cfg.max_seq
+    x = p["tok_emb"][tokens] + p["pos_emb"]
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        xn = _rmsnorm(x, p[f"l{i}.ln1"])
+        q = blocked_matmul(xn, p[f"l{i}.wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        k = blocked_matmul(xn, p[f"l{i}.wk"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        v = blocked_matmul(xn, p[f"l{i}.wv"]).reshape(s, cfg.n_heads, cfg.head_dim)
+        k_caches.append(k)
+        v_caches.append(v)
+        # [S,H,D] -> [H,S,D] for the kernel.
+        o = flash_attention(
+            q.transpose(1, 0, 2),
+            k.transpose(1, 0, 2),
+            v.transpose(1, 0, 2),
+            length=length,
+            causal=True,
+        ).transpose(1, 0, 2)
+        x = x + blocked_matmul(o.reshape(s, cfg.d_model), p[f"l{i}.wo"])
+        xn2 = _rmsnorm(x, p[f"l{i}.ln2"])
+        x = x + _ffn_prefill(xn2, p[f"l{i}.w_up"], p[f"l{i}.w_down"])
+    x = _rmsnorm(x, p["ln_f"])
+    last = x[length - 1]
+    logits = last @ p["unembed"]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(cfg: TransformerConfig, params: list[jax.Array], token: jax.Array,
+                pos: jax.Array, k_cache: jax.Array, v_cache: jax.Array):
+    """Generate logits for one new token at position `pos`.
+
+    Args:
+      token: scalar int32 (the previously emitted token).
+      pos: scalar int32 position this token occupies.
+      k_cache, v_cache: [n_layers, max_seq, n_heads, head_dim].
+
+    Returns:
+      (logits[vocab], k_cache, v_cache) with caches updated at `pos`.
+    """
+    p = _unpack(cfg, params)
+    x = p["tok_emb"][token] + p["pos_emb"][pos]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        xn = _rmsnorm(x, p[f"l{i}.ln1"])
+        q = (xn @ p[f"l{i}.wq"]).reshape(cfg.n_heads, cfg.head_dim)
+        k = (xn @ p[f"l{i}.wk"]).reshape(cfg.n_heads, cfg.head_dim)
+        v = (xn @ p[f"l{i}.wv"]).reshape(cfg.n_heads, cfg.head_dim)
+        kc = jax.lax.dynamic_update_index_in_dim(k_cache[i], k, pos, axis=0)
+        vc = jax.lax.dynamic_update_index_in_dim(v_cache[i], v, pos, axis=0)
+        new_k.append(kc)
+        new_v.append(vc)
+        o = kref.decode_attention_ref(q, kc, vc, pos)
+        x = x + o.reshape(cfg.d_model) @ p[f"l{i}.wo"]
+        xn2 = _rmsnorm(x, p[f"l{i}.ln2"])
+        h = jax.nn.gelu(xn2 @ p[f"l{i}.w_up"])
+        x = x + h @ p[f"l{i}.w_down"]
+    x = _rmsnorm(x, p["ln_f"])
+    logits = x @ p["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill_fn(cfg: TransformerConfig):
+    """Positional-args prefill callable for AOT lowering."""
+    n_params = len(param_spec(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, length = args[n_params], args[n_params + 1]
+        return prefill(cfg, params, tokens, length)
+
+    return fn
+
+
+def decode_fn(cfg: TransformerConfig):
+    """Positional-args decode callable for AOT lowering."""
+    n_params = len(param_spec(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        token, pos, k_cache, v_cache = args[n_params : n_params + 4]
+        return decode_step(cfg, params, token, pos, k_cache, v_cache)
+
+    return fn
+
+
+def reference_generate(
+    cfg: TransformerConfig, params: list[jax.Array], prompt: list[int], n_new: int
+) -> list[int]:
+    """Greedy generation oracle used by tests (prefill + decode loop)."""
+    s = cfg.max_seq
+    assert len(prompt) + n_new <= s
+    tokens = jnp.zeros((s,), jnp.int32).at[: len(prompt)].set(jnp.array(prompt))
+    length = jnp.array(len(prompt), jnp.int32)
+    logits, kc, vc = prefill(cfg, params, tokens, length)
+    out = []
+    tok = int(jnp.argmax(logits))
+    out.append(tok)
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        logits, kc, vc = decode_step(
+            cfg, params, jnp.array(tok, jnp.int32), jnp.array(pos, jnp.int32), kc, vc
+        )
+        tok = int(jnp.argmax(logits))
+        out.append(tok)
+        pos += 1
+    return out

@@ -1,0 +1,104 @@
+"""AOT pipeline: HLO text + manifest + parameter blob integrity."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+MICRO = M.TransformerConfig(
+    name="micro", n_layers=1, d_model=32, n_heads=2, d_ff=64, max_seq=32
+)
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.lower_variant(MICRO, seed=1, out_dir=out)
+    return out, entry
+
+
+def test_hlo_text_is_parseable_hlo(lowered):
+    out, entry = lowered
+    for key in ("prefill_hlo", "decode_hlo"):
+        text = (out / entry[key]).read_text()
+        assert text.startswith("HloModule"), key
+        assert "ENTRY" in text
+        # Tuple return (rust unwraps with to_tuple).
+        assert "tuple(" in text or "ROOT" in text
+
+
+def test_params_blob_roundtrip(lowered):
+    out, entry = lowered
+    blob = np.fromfile(out / entry["params_bin"], dtype="<f4")
+    assert blob.size == entry["param_count"]
+    params = M.init_params(MICRO, seed=1)
+    flat = np.concatenate([np.asarray(p).ravel() for p in params])
+    np.testing.assert_array_equal(blob, flat.astype("<f4"))
+
+
+def test_manifest_entry_shapes(lowered):
+    _, entry = lowered
+    spec = M.param_spec(MICRO)
+    assert len(entry["params"]) == len(spec)
+    for rec, (name, shape) in zip(entry["params"], spec):
+        assert rec["name"] == name
+        assert tuple(rec["shape"]) == shape
+    assert entry["head_dim"] == MICRO.head_dim
+
+
+def test_hlo_executes_via_jax_roundtrip(lowered):
+    """The lowered prefill HLO must produce the same logits as eager
+    execution — executed through jax's own CPU client from the HLO text's
+    source computation."""
+    params = M.init_params(MICRO, seed=1)
+    s = MICRO.max_seq
+    tokens = jnp.zeros((s,), jnp.int32).at[:3].set(jnp.array([256, 1, 2]))
+    length = jnp.array(3, jnp.int32)
+    eager_logits, _, _ = M.prefill(MICRO, params, tokens, length)
+    jit_logits, _, _ = jax.jit(M.prefill_fn(MICRO))(*params, tokens, length)
+    np.testing.assert_allclose(
+        np.array(eager_logits), np.array(jit_logits), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_repo_manifest_if_built():
+    """When `make artifacts` has run, validate the real manifest."""
+    path = pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts/ not built")
+    manifest = json.loads(path.read_text())
+    assert manifest["format"] == 1
+    names = {v["name"] for v in manifest["variants"]}
+    assert {"device_sm", "server_md"} <= names
+    for v in manifest["variants"]:
+        base = path.parent
+        assert (base / v["prefill_hlo"]).exists()
+        assert (base / v["decode_hlo"]).exists()
+        blob = np.fromfile(base / v["params_bin"], dtype="<f4")
+        assert blob.size == v["param_count"]
+
+
+def test_hlo_has_no_elided_constants(lowered):
+    """print_large_constants must keep baked weights in the text — the
+    0.5.1 parser silently reads elided `{...}` constants as zeros."""
+    out, entry = lowered
+    for key in ("prefill_hlo", "decode_hlo"):
+        text = (out / entry[key]).read_text()
+        assert "constant({...})" not in text, key
+        # Metadata must be stripped (the old parser rejects
+        # source_end_line attributes emitted by jax 0.8 printers).
+        assert "source_end_line" not in text, key
+
+
+def test_tokenizer_constants_match_rust_defaults():
+    """model.py's vocab constants are the ABI shared with
+    rust/src/runtime/tokenizer.rs."""
+    assert M.BOS_ID == 256
+    assert M.EOS_ID == 257
+    assert M.VOCAB == 512

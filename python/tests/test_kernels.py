@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the
+core correctness signal for the whole stack (the same kernels lower into
+the AOT HLO the Rust runtime executes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blocked_matmul, flash_attention
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------
+# blocked_matmul
+# ---------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shapes(m, k, n, seed):
+    a = rand(seed, (m, k), jnp.float32)
+    b = rand(seed + 1, (k, n), jnp.float32)
+    got = blocked_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a = rand(7, (64, 96), dtype)
+    b = rand(8, (96, 32), dtype)
+    got = blocked_matmul(a, b)
+    assert got.dtype == dtype
+    want = np.array(a, np.float32) @ np.array(b, np.float32)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.array(got, np.float32), want, rtol=tol, atol=tol * np.abs(want).max()
+    )
+
+
+@pytest.mark.parametrize("block", [16, 128, 999])
+def test_matmul_block_size_invariance(block):
+    a = rand(9, (80, 120), jnp.float32)
+    b = rand(10, (120, 72), jnp.float32)
+    got = blocked_matmul(a, b, block_m=block, block_n=block, block_k=block)
+    np.testing.assert_allclose(
+        np.array(got), np.array(a @ b), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matmul_identity():
+    a = rand(11, (32, 32), jnp.float32)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.array(blocked_matmul(a, eye)), np.array(a), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_rejects_mismatched_k():
+    a = rand(1, (8, 16), jnp.float32)
+    b = rand(2, (17, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        blocked_matmul(a, b)
+
+
+# ---------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 8),
+    s_pow=st.integers(4, 8),  # seq = 16..256
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_shapes(h, s_pow, d, seed):
+    s = 2**s_pow
+    q = rand(seed, (h, s, d), jnp.float32)
+    k = rand(seed + 1, (h, s, d), jnp.float32)
+    v = rand(seed + 2, (h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, block_q=32, block_kv=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    length=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_padding_mask(length, seed):
+    h, s, d = 2, 128, 16
+    q = rand(seed, (h, s, d), jnp.float32)
+    k = rand(seed + 1, (h, s, d), jnp.float32)
+    v = rand(seed + 2, (h, s, d), jnp.float32)
+    la = jnp.array(length, jnp.int32)
+    got = flash_attention(q, k, v, length=la)
+    want = ref.attention_ref(q, k, v, causal=True, length=la)
+    # Only the valid rows are contractually defined.
+    np.testing.assert_allclose(
+        np.array(got)[:, :length], np.array(want)[:, :length], rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_noncausal():
+    h, s, d = 3, 64, 32
+    q, k, v = (rand(i, (h, s, d), jnp.float32) for i in range(3))
+    got = flash_attention(q, k, v, causal=False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_block_shape_invariance():
+    h, s, d = 2, 128, 16
+    q, k, v = (rand(i + 10, (h, s, d), jnp.float32) for i in range(3))
+    a = flash_attention(q, k, v, block_q=32, block_kv=64)
+    b = flash_attention(q, k, v, block_q=128, block_kv=16)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_bf16():
+    h, s, d = 2, 64, 32
+    q, k, v = (rand(i + 20, (h, s, d), jnp.bfloat16) for i in range(3))
+    got = flash_attention(q, k, v)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.array(got, np.float32), np.array(want, np.float32), rtol=5e-2, atol=5e-2
+    )
+    assert got.dtype == jnp.bfloat16
+
+
+def test_attention_first_row_attends_self_only():
+    # Causal row 0 output = v[0] exactly (softmax over one element).
+    h, s, d = 1, 32, 8
+    q, k, v = (rand(i + 30, (h, s, d), jnp.float32) for i in range(3))
+    got = flash_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.array(got)[:, 0], np.array(v)[:, 0], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_decode_attention_ref_matches_full():
+    # Single-query oracle must agree with the full attention at that row.
+    h, s, d = 2, 64, 16
+    q, k, v = (rand(i + 40, (h, s, d), jnp.float32) for i in range(3))
+    pos = 17
+    full = ref.attention_ref(q, k, v, causal=True)
+    kc = jnp.transpose(k, (1, 0, 2))  # [s, h, d]
+    vc = jnp.transpose(v, (1, 0, 2))
+    single = ref.decode_attention_ref(q[:, pos], kc, vc, jnp.array(pos))
+    np.testing.assert_allclose(
+        np.array(single), np.array(full)[:, pos], rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_numerically_stable_large_logits():
+    """Online softmax must not overflow with large score magnitudes."""
+    h, s, d = 2, 64, 16
+    q = 30.0 * rand(51, (h, s, d), jnp.float32)
+    k = 30.0 * rand(52, (h, s, d), jnp.float32)
+    v = rand(53, (h, s, d), jnp.float32)
+    got = np.array(flash_attention(q, k, v))
+    assert np.isfinite(got).all()
+    want = np.array(ref.attention_ref(q, k, v, causal=True))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_attention_length_one():
+    """Degenerate valid-length: only position 0 defined."""
+    h, s, d = 1, 32, 8
+    q, k, v = (rand(i + 60, (h, s, d), jnp.float32) for i in range(3))
+    got = flash_attention(q, k, v, length=jnp.array(1, jnp.int32))
+    np.testing.assert_allclose(
+        np.array(got)[:, 0], np.array(v)[:, 0], rtol=1e-5, atol=1e-5
+    )

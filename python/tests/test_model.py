@@ -1,0 +1,105 @@
+"""L2 correctness: transformer shapes, prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.TransformerConfig(
+    name="tiny", n_layers=2, d_model=64, n_heads=2, d_ff=128, max_seq=64
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return M.init_params(TINY, seed=3)
+
+
+def test_param_spec_matches_init(tiny_params):
+    spec = M.param_spec(TINY)
+    assert len(spec) == len(tiny_params)
+    for (name, shape), p in zip(spec, tiny_params):
+        assert tuple(p.shape) == shape, name
+    assert sum(int(np.prod(s)) for _, s in spec) == TINY.param_count()
+
+
+def test_init_is_deterministic():
+    a = M.init_params(TINY, seed=5)
+    b = M.init_params(TINY, seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.array(x), np.array(y))
+    c = M.init_params(TINY, seed=6)
+    assert any(not np.array_equal(np.array(x), np.array(y)) for x, y in zip(a, c))
+
+
+def test_prefill_shapes(tiny_params):
+    tokens = jnp.zeros((TINY.max_seq,), jnp.int32).at[:5].set(
+        jnp.array([256, 72, 105, 33, 257])
+    )
+    logits, kc, vc = M.prefill(TINY, tiny_params, tokens, jnp.array(5, jnp.int32))
+    assert logits.shape == (TINY.vocab,)
+    assert kc.shape == (TINY.n_layers, TINY.max_seq, TINY.n_heads, TINY.head_dim)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.array(logits)).all()
+
+
+def test_prefill_ignores_padding(tiny_params):
+    """Logits must depend only on tokens[:length]."""
+    base = jnp.zeros((TINY.max_seq,), jnp.int32).at[:4].set(jnp.array([1, 2, 3, 4]))
+    noisy = base.at[10:20].set(99)
+    l = jnp.array(4, jnp.int32)
+    la, _, _ = M.prefill(TINY, tiny_params, base, l)
+    lb, _, _ = M.prefill(TINY, tiny_params, noisy, l)
+    np.testing.assert_allclose(np.array(la), np.array(lb), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_consistent_with_prefill(tiny_params):
+    """decode_step at position L must equal prefill over L+1 tokens."""
+    prompt = [256, 10, 20, 30]
+    s = TINY.max_seq
+    # Prefill over the 4-token prompt, then decode token 40 at position 4.
+    tokens4 = jnp.zeros((s,), jnp.int32).at[:4].set(jnp.array(prompt))
+    _, kc, vc = M.prefill(TINY, tiny_params, tokens4, jnp.array(4, jnp.int32))
+    logits_step, _, _ = M.decode_step(
+        TINY, tiny_params, jnp.array(40, jnp.int32), jnp.array(4, jnp.int32), kc, vc
+    )
+    # Ground truth: prefill over the 5-token sequence.
+    tokens5 = jnp.zeros((s,), jnp.int32).at[:5].set(jnp.array(prompt + [40]))
+    logits_full, _, _ = M.prefill(TINY, tiny_params, tokens5, jnp.array(5, jnp.int32))
+    np.testing.assert_allclose(
+        np.array(logits_step), np.array(logits_full), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_reference_generate_is_deterministic(tiny_params):
+    a = M.reference_generate(TINY, tiny_params, [256, 5, 6], 8)
+    b = M.reference_generate(TINY, tiny_params, [256, 5, 6], 8)
+    assert a == b
+    assert len(a) == 8
+    assert all(0 <= t < TINY.vocab for t in a)
+
+
+def test_decode_updates_cache_at_pos(tiny_params):
+    s = TINY.max_seq
+    kc = jnp.zeros((TINY.n_layers, s, TINY.n_heads, TINY.head_dim))
+    vc = jnp.zeros_like(kc)
+    _, kc2, vc2 = M.decode_step(
+        TINY, tiny_params, jnp.array(1, jnp.int32), jnp.array(7, jnp.int32), kc, vc
+    )
+    # Only position 7 changed.
+    changed_k = np.any(np.array(kc2) != 0.0, axis=(0, 2, 3))
+    assert changed_k[7]
+    assert changed_k.sum() == 1
+    changed_v = np.any(np.array(vc2) != 0.0, axis=(0, 2, 3))
+    assert changed_v[7]
+
+
+def test_variants_are_well_formed():
+    for name, cfg in M.VARIANTS.items():
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.param_count() > 0
+        assert cfg.vocab == M.VOCAB
+    assert M.DEVICE_SM.param_count() < M.SERVER_MD.param_count()

@@ -1,0 +1,61 @@
+//! End-to-end simulation throughput benches — one per paper table family:
+//! the whole-trace replay that regenerates Fig 6 / Table 2 cells, the
+//! migration-enabled replay behind Table 3 / Fig 7, and (when artifacts
+//! are built) the real PJRT decode step on the serving path.
+//!
+//!   cargo bench --bench endtoend
+
+use disco::benchlib::Bench;
+use disco::coordinator::policy::{Policy, PolicyKind};
+use disco::cost::unified::Constraint;
+use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::engine::{Scenario, SimConfig};
+use disco::trace::generator::WorkloadSpec;
+
+fn main() {
+    let mut b = Bench::new();
+    let trace = WorkloadSpec::alpaca(1000).generate(3);
+    let tokens: f64 = trace.requests.iter().map(|r| r.output_len.min(128) as f64).sum();
+
+    for (label, constraint, kind, migration) in [
+        ("sim/fig6-cell DiSCo-S 1K reqs", Constraint::Server, PolicyKind::DiscoS, false),
+        ("sim/fig6-cell Stoch-S 1K reqs", Constraint::Server, PolicyKind::StochS, false),
+        ("sim/table3-cell DiSCo-D+mig 1K reqs", Constraint::Device, PolicyKind::DiscoD, true),
+        ("sim/baseline ServerOnly 1K reqs", Constraint::Server, PolicyKind::ServerOnly, false),
+    ] {
+        let scenario = Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::pixel7pro_bloom1b1(),
+            constraint,
+            SimConfig::default(),
+        );
+        let policy = match kind {
+            PolicyKind::DiscoS | PolicyKind::DiscoD => {
+                let ecdf = scenario.profile_server_ttft(2000, 1);
+                Policy::plan(kind, 0.5, migration, &ecdf, &trace.prompt_lens())
+            }
+            _ => Policy::simple(kind, 0.5, migration),
+        };
+        let r = b.run(label, || scenario.run(&trace, &policy));
+        b.throughput(&r, trace.len() as f64, "requests");
+        b.throughput(&r, tokens, "token-events");
+    }
+
+    // Real PJRT path (skipped when artifacts are absent).
+    let dir = disco::runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        use disco::runtime::{Manifest, ModelRunner};
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let runner = ModelRunner::load(&client, manifest.variant("device_sm").unwrap()).unwrap();
+        let prompt = runner.tokenizer.synthetic_prompt(64, 1);
+        let r = b.run("pjrt/prefill+8-decode device_sm", || {
+            runner.generate(&prompt, 8).unwrap().tokens.len()
+        });
+        b.throughput(&r, 8.0, "tokens");
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    let _ = b.write_csv(std::path::Path::new("results/bench_endtoend.csv"));
+}

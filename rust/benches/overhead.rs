@@ -1,0 +1,73 @@
+//! Scheduler-overhead micro-benchmarks (paper Fig 9 + hot-path pieces).
+//!
+//!   cargo bench --bench overhead
+//!
+//! criterion is unavailable offline; this uses the in-repo `benchlib`
+//! harness (warmup + calibrated iteration counts + MAD).
+
+use disco::benchlib::Bench;
+use disco::coordinator::dispatch::{DeviceConstrainedPlan, ServerConstrainedPlan};
+use disco::coordinator::migration::{MigrationConfig, MigrationPlanner};
+use disco::cost::unified::{Constraint, CostParams};
+use disco::endpoint::EndpointKind;
+use disco::profiles::server::ServerProfile;
+use disco::sim::delivery;
+use disco::stats::ecdf::Ecdf;
+use disco::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(5);
+    let service = ServerProfile::gpt4o_mini();
+    let ttfts: Vec<f64> = (0..2000).map(|_| service.sample_ttft(&mut rng)).collect();
+    let lens: Vec<u32> = (0..10_000)
+        .map(|_| (rng.lognormal(3.0, 0.9).round() as u32).clamp(1, 4096))
+        .collect();
+    let ecdf = Ecdf::new(ttfts);
+
+    // --- planning (once per profile refresh) ---------------------------
+    b.run("plan/server-constrained (10K lengths)", || {
+        ServerConstrainedPlan::plan(&lens, 0.5)
+    });
+    b.run("plan/device-constrained (10K lengths)", || {
+        DeviceConstrainedPlan::plan(&ecdf, &lens, 0.5, 0.05)
+    });
+
+    // --- per-request decisions (the Fig 9 hot path) ---------------------
+    let splan = ServerConstrainedPlan::plan(&lens, 0.5);
+    let dplan = DeviceConstrainedPlan::plan(&ecdf, &lens, 0.5, 0.05);
+    let mut i = 0usize;
+    let r = b.run("decide/DiSCo-S per request", || {
+        i = (i + 1) % lens.len();
+        splan.decide(lens[i])
+    });
+    b.throughput(&r, 1.0, "decisions");
+    let mut j = 0usize;
+    let r = b.run("decide/DiSCo-D per request", || {
+        j = (j + 1) % lens.len();
+        dplan.wait_for(lens[j])
+    });
+    b.throughput(&r, 1.0, "decisions");
+
+    // --- migration controller ------------------------------------------
+    let costs = CostParams {
+        server_prefill: 1.5e-7,
+        server_decode: 6.0e-7,
+        device_prefill: 4.0e-6,
+        device_decode: 4.1e-6,
+    };
+    let planner = MigrationPlanner::new(MigrationConfig::default(), costs);
+    b.run("migration/plan (Eq.4 + Eq.5)", || {
+        planner.plan(Constraint::Device, EndpointKind::Device, 100, 64, 0.8)
+    });
+
+    // --- delivery smoothing ----------------------------------------------
+    let gen: Vec<f64> = (0..128).map(|i| i as f64 * 0.05).collect();
+    b.run("delivery/smooth 128 tokens", || delivery::smooth(&gen, 5.0));
+
+    // --- ECDF query ------------------------------------------------------
+    b.run("ecdf/quantile", || ecdf.quantile(0.95));
+    b.run("ecdf/cdf", || ecdf.cdf(0.4));
+
+    let _ = b.write_csv(std::path::Path::new("results/bench_overhead.csv"));
+}

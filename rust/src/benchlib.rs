@@ -1,0 +1,185 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration-count calibration, and robust
+//! statistics (median, MAD, throughput). `cargo bench` targets use
+//! `harness = false` and drive this directly.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall time per iteration (seconds).
+    pub median: f64,
+    /// Mean wall time per iteration (seconds).
+    pub mean: f64,
+    /// Median absolute deviation (seconds).
+    pub mad: f64,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_display(&self) -> String {
+        fmt_duration(self.median)
+    }
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Benchmark runner with calibrated sample counts.
+pub struct Bench {
+    /// Target wall time per sample.
+    sample_target: Duration,
+    /// Number of timed samples to collect.
+    n_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Honour quick mode for CI: DISCO_BENCH_FAST=1
+        let fast = std::env::var("DISCO_BENCH_FAST").is_ok();
+        Bench {
+            sample_target: if fast {
+                Duration::from_millis(5)
+            } else {
+                Duration::from_millis(50)
+            },
+            n_samples: if fast { 7 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform ONE logical iteration and return a
+    /// value (passed through `black_box` to defeat dead-code elimination).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: find iters such that a sample ≈ target.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.sample_target || iters > 1 << 30 {
+                break;
+            }
+            let scale = (self.sample_target.as_secs_f64() / dt.as_secs_f64().max(1e-9))
+                .clamp(1.5, 100.0);
+            iters = ((iters as f64) * scale).ceil() as u64;
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.n_samples);
+        for _ in 0..self.n_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_iter[per_iter.len() / 2];
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let mut devs: Vec<f64> = per_iter.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let res = BenchResult {
+            name: name.to_string(),
+            median,
+            mean,
+            mad,
+            samples: per_iter.len(),
+            iters_per_sample: iters,
+        };
+        println!(
+            "{:<44} {:>12}/iter  (mean {:>12}, ±{} MAD, {} iters × {} samples)",
+            res.name,
+            fmt_duration(res.median),
+            fmt_duration(res.mean),
+            fmt_duration(res.mad),
+            res.iters_per_sample,
+            res.samples,
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Report a throughput line for a result measured over `items` items.
+    pub fn throughput(&self, res: &BenchResult, items: f64, unit: &str) {
+        let per_sec = items / res.median;
+        println!(
+            "{:<44} {:>12.0} {unit}/s",
+            format!("{} (throughput)", res.name),
+            per_sec
+        );
+    }
+
+    /// Write results as CSV next to other experiment outputs.
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::new(&[
+            "name",
+            "median_s",
+            "mean_s",
+            "mad_s",
+            "iters_per_sample",
+            "samples",
+        ]);
+        for r in &self.results {
+            w.row(vec![
+                r.name.clone(),
+                format!("{:e}", r.median),
+                format!("{:e}", r.mean),
+                format!("{:e}", r.mad),
+                r.iters_per_sample.to_string(),
+                r.samples.to_string(),
+            ]);
+        }
+        w.write(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("DISCO_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let r = b.run("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.median > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,570 @@
+//! Cost-aware dispatch control (§4.2, Algorithms 1–3).
+//!
+//! Planning happens offline from profiled distributions: the server TTFT
+//! ECDF `F` (length-independent, §3) and the empirical prompt-length
+//! distribution `p(l)`. Per-request decisions are then O(log n) lookups.
+//!
+//! * **Device-constrained** (Algorithm 2): every request goes to the
+//!   server; the device additionally starts after a per-length wait
+//!   `w(l)`, chosen so expected device prefill spend stays within
+//!   `b·E[l]` while reserving a tail-protection share `α` (Eq. 1–2).
+//! * **Server-constrained** (Algorithm 3): prompts shorter than a length
+//!   threshold `l_th` run device-only; longer prompts run on both
+//!   endpoints concurrently (Eq. 3).
+
+use crate::stats::ecdf::Ecdf;
+
+/// Per-request dispatch decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// Run only on the device (llama.cpp-style).
+    DeviceOnly,
+    /// Run only on the server (vLLM-style).
+    ServerOnly,
+    /// Start the server immediately; start the device after `device_wait`
+    /// seconds unless the server produced a token first. `device_wait`
+    /// may be 0 (fully concurrent) or `f64::INFINITY` (never — degenerate
+    /// but representable).
+    Both { device_wait: f64 },
+}
+
+impl Decision {
+    pub fn uses_server(&self) -> bool {
+        matches!(self, Decision::ServerOnly | Decision::Both { .. })
+    }
+    pub fn uses_device(&self) -> bool {
+        !matches!(self, Decision::ServerOnly)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Device-constrained scheduling (Algorithm 2)
+// ---------------------------------------------------------------------
+
+/// Wait-time plan for device-constrained scenarios.
+///
+/// Greedy construction over ascending prompt lengths yields a prefix
+/// structure: lengths ≤ `l_immediate` start the device at once (w = 0),
+/// one boundary length gets a partial wait `w_star`, and everything
+/// longer waits the tail-protection wait `w_tail`.
+#[derive(Clone, Debug)]
+pub struct DeviceConstrainedPlan {
+    pub b: f64,
+    pub alpha: f64,
+    /// Maximum wait, F⁻¹(1 − min(α, b)) — Phase 1 tail protection.
+    pub w_tail: f64,
+    /// Largest prompt length whose wait is 0 (None if none).
+    pub l_immediate: Option<u32>,
+    /// The single partially-funded boundary length and its wait.
+    pub boundary: Option<(u32, f64)>,
+}
+
+impl DeviceConstrainedPlan {
+    /// Algorithm 2 over an empirical length sample and a server-TTFT ECDF.
+    ///
+    /// `b` is the budget ratio (expected device prefill tokens / expected
+    /// prompt tokens); `alpha` the tail-protection reservation.
+    pub fn plan(server_ttft: &Ecdf, lengths: &[u32], b: f64, alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&b), "budget b must be in [0,1]");
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        assert!(!lengths.is_empty(), "need a profiled length sample");
+
+        // Phase 1: maximum wait time for tail protection.
+        let reserve = alpha.min(b);
+        let w_tail = if reserve <= 0.0 {
+            // No budget at all: the device never starts.
+            f64::INFINITY
+        } else {
+            server_ttft.quantile(1.0 - reserve)
+        };
+
+        let mut plan = DeviceConstrainedPlan {
+            b,
+            alpha,
+            w_tail,
+            l_immediate: None,
+            boundary: None,
+        };
+        if b <= alpha || !w_tail.is_finite() {
+            // Entire budget consumed by tail protection.
+            return plan;
+        }
+
+        // Phase 2: spend (b − α)·E[l] granting w = 0 to short prompts.
+        let n = lengths.len() as f64;
+        let mean_len = lengths.iter().map(|&l| l as f64).sum::<f64>() / n;
+        let mut available = (b - alpha) * mean_len;
+
+        // Distinct lengths ascending with empirical probabilities.
+        let mut sorted = lengths.to_vec();
+        sorted.sort_unstable();
+        let mut i = 0usize;
+        let f_wtail = server_ttft.cdf(w_tail);
+        while i < sorted.len() {
+            let l = sorted[i];
+            let mut count = 0usize;
+            while i < sorted.len() && sorted[i] == l {
+                count += 1;
+                i += 1;
+            }
+            let p = count as f64 / n;
+            // Upgrading this length from w_tail to 0 raises device-run
+            // probability from (1 − F(w_tail)) = α to 1.
+            let length_cost = p * l as f64 * (1.0 - reserve);
+            if available >= length_cost {
+                plan.l_immediate = Some(l);
+                available -= length_cost;
+            } else {
+                // Partially fund this boundary length: find w* with
+                // p·l·(F(w_tail) − F(w*)) = available.
+                let target_f = f_wtail - available / (p * l as f64);
+                let w_star = if target_f <= 0.0 {
+                    0.0
+                } else {
+                    server_ttft.quantile(target_f)
+                };
+                plan.boundary = Some((l, w_star.min(w_tail)));
+                break;
+            }
+        }
+        plan
+    }
+
+    /// Eq. 1–2's *smooth* variant: instead of Algorithm 2's stepwise
+    /// waits, lengths above the immediate threshold get `w(l) =
+    /// min(β·l, w_tail)` with β solved numerically so the expected spend
+    /// (Eq. 2) exhausts the remaining budget. Exposed as an ablation
+    /// against the stepwise plan (`disco exp abl-smooth`).
+    pub fn plan_smooth(
+        server_ttft: &Ecdf,
+        lengths: &[u32],
+        b: f64,
+        alpha: f64,
+    ) -> SmoothDevicePlan {
+        let base = Self::plan(server_ttft, lengths, b, alpha);
+        let l_th = base.l_immediate.unwrap_or(0);
+        if b <= alpha || !base.w_tail.is_finite() {
+            return SmoothDevicePlan {
+                base,
+                l_th,
+                beta: f64::INFINITY,
+            };
+        }
+        // Spend(β) = Σ_{l ≤ l_th} l + Σ_{l > l_th} (1 − F(min(βl, w_tail)))·l,
+        // monotone nonincreasing in β → bisection to hit b·E[l]·n.
+        let n = lengths.len() as f64;
+        let target = b * lengths.iter().map(|&l| l as f64).sum::<f64>() / n;
+        let spend = |beta: f64| -> f64 {
+            lengths
+                .iter()
+                .map(|&l| {
+                    if l <= l_th {
+                        l as f64
+                    } else {
+                        let w = (beta * l as f64).min(base.w_tail);
+                        (1.0 - server_ttft.cdf(w)) * l as f64
+                    }
+                })
+                .sum::<f64>()
+                / n
+        };
+        // β = w_tail saturates every l ≥ 1 at w_tail, so it brackets.
+        let (mut lo, mut hi) = (0.0f64, base.w_tail.max(1e-9));
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if spend(mid) > target {
+                lo = mid; // spending too much → wait longer (bigger β)
+            } else {
+                hi = mid;
+            }
+        }
+        SmoothDevicePlan {
+            base,
+            l_th,
+            beta: 0.5 * (lo + hi),
+        }
+    }
+
+    /// Per-request wait time w(l) (Eq. 1's implementable form).
+    pub fn wait_for(&self, prompt_len: u32) -> f64 {
+        if let Some(l_imm) = self.l_immediate {
+            if prompt_len <= l_imm {
+                return 0.0;
+            }
+        }
+        if let Some((l_b, w_star)) = self.boundary {
+            if prompt_len == l_b {
+                return w_star;
+            }
+        }
+        self.w_tail
+    }
+
+    /// The dispatch decision: server always starts; device after w(l).
+    pub fn decide(&self, prompt_len: u32) -> Decision {
+        Decision::Both {
+            device_wait: self.wait_for(prompt_len),
+        }
+    }
+
+    /// Expected device prefill spend as a fraction of E[l] under this plan
+    /// — used by tests to verify the budget constraint E[I_d·l] ≤ b·E[l].
+    pub fn expected_spend_fraction(&self, server_ttft: &Ecdf, lengths: &[u32]) -> f64 {
+        let n = lengths.len() as f64;
+        let mean_len = lengths.iter().map(|&l| l as f64).sum::<f64>() / n;
+        let spend: f64 = lengths
+            .iter()
+            .map(|&l| {
+                let w = self.wait_for(l);
+                let p_run = if w.is_infinite() {
+                    0.0
+                } else {
+                    1.0 - server_ttft.cdf(w)
+                };
+                p_run * l as f64
+            })
+            .sum::<f64>()
+            / n;
+        spend / mean_len
+    }
+}
+
+/// The Eq. 1–2 smooth wait plan (see [`DeviceConstrainedPlan::plan_smooth`]).
+#[derive(Clone, Debug)]
+pub struct SmoothDevicePlan {
+    pub base: DeviceConstrainedPlan,
+    /// Immediate-start threshold l_th.
+    pub l_th: u32,
+    /// Slope β of Eq. 1.
+    pub beta: f64,
+}
+
+impl SmoothDevicePlan {
+    /// Eq. 1: w(l) = 0 below l_th, else min(β·l, w_tail).
+    pub fn wait_for(&self, prompt_len: u32) -> f64 {
+        if prompt_len <= self.l_th {
+            0.0
+        } else if self.beta.is_infinite() {
+            self.base.w_tail
+        } else {
+            (self.beta * prompt_len as f64).min(self.base.w_tail)
+        }
+    }
+
+    pub fn decide(&self, prompt_len: u32) -> Decision {
+        Decision::Both {
+            device_wait: self.wait_for(prompt_len),
+        }
+    }
+
+    /// Expected device prefill spend fraction under this plan.
+    pub fn expected_spend_fraction(&self, server_ttft: &Ecdf, lengths: &[u32]) -> f64 {
+        let n = lengths.len() as f64;
+        let mean_len = lengths.iter().map(|&l| l as f64).sum::<f64>() / n;
+        let spend: f64 = lengths
+            .iter()
+            .map(|&l| {
+                let w = self.wait_for(l);
+                if w.is_infinite() {
+                    0.0
+                } else {
+                    (1.0 - server_ttft.cdf(w)) * l as f64
+                }
+            })
+            .sum::<f64>()
+            / n;
+        spend / mean_len
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server-constrained scheduling (Algorithm 3)
+// ---------------------------------------------------------------------
+
+/// Length-threshold plan for server-constrained scenarios (Eq. 3).
+#[derive(Clone, Debug)]
+pub struct ServerConstrainedPlan {
+    pub b: f64,
+    /// Prompts strictly shorter run device-only; the rest run both.
+    pub l_threshold: u32,
+}
+
+impl ServerConstrainedPlan {
+    /// Eq. 3: choose l_th so prompts below it carry (1−b) of expected
+    /// prompt tokens — the device-only share.
+    pub fn plan(lengths: &[u32], b: f64) -> Self {
+        assert!((0.0..=1.0).contains(&b), "budget b must be in [0,1]");
+        assert!(!lengths.is_empty(), "need a profiled length sample");
+        let mut sorted = lengths.to_vec();
+        sorted.sort_unstable();
+        let total: f64 = sorted.iter().map(|&l| l as f64).sum();
+        let target = (1.0 - b) * total;
+        let mut cum = 0.0;
+        for &l in &sorted {
+            if cum >= target {
+                return ServerConstrainedPlan { b, l_threshold: l };
+            }
+            cum += l as f64;
+        }
+        // Budget 0 (or rounding): everything device-only.
+        ServerConstrainedPlan {
+            b,
+            l_threshold: u32::MAX,
+        }
+    }
+
+    /// Algorithm 3's execution map.
+    pub fn decide(&self, prompt_len: u32) -> Decision {
+        if prompt_len < self.l_threshold {
+            Decision::DeviceOnly
+        } else {
+            Decision::Both { device_wait: 0.0 }
+        }
+    }
+
+    /// Expected server prefill spend fraction (≤ b up to discretization).
+    pub fn expected_spend_fraction(&self, lengths: &[u32]) -> f64 {
+        let total: f64 = lengths.iter().map(|&l| l as f64).sum();
+        let server: f64 = lengths
+            .iter()
+            .filter(|&&l| l >= self.l_threshold)
+            .map(|&l| l as f64)
+            .sum();
+        server / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiles::server::ServerProfile;
+    use crate::util::rng::Rng;
+
+    fn server_ecdf(seed: u64) -> Ecdf {
+        let p = ServerProfile::gpt4o_mini();
+        let mut rng = Rng::new(seed);
+        Ecdf::new((0..3000).map(|_| p.sample_ttft(&mut rng)).collect())
+    }
+
+    fn sample_lengths(seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (rng.lognormal(3.0, 0.9).round() as u32).clamp(4, 1024))
+            .collect()
+    }
+
+    // ---- device-constrained (Algorithm 2) ----
+
+    #[test]
+    fn device_plan_respects_budget() {
+        let f = server_ecdf(1);
+        let lens = sample_lengths(2, 4000);
+        for b in [0.05, 0.2, 0.5, 0.8, 1.0] {
+            let plan = DeviceConstrainedPlan::plan(&f, &lens, b, 0.05);
+            let spend = plan.expected_spend_fraction(&f, &lens);
+            assert!(
+                spend <= b + 0.02,
+                "b={b}: spend fraction {spend:.3} exceeds budget"
+            );
+        }
+    }
+
+    #[test]
+    fn device_plan_spends_most_of_budget() {
+        // The plan should not be overly conservative: spend ≥ 80% of b.
+        let f = server_ecdf(3);
+        let lens = sample_lengths(4, 4000);
+        for b in [0.2, 0.5, 0.8] {
+            let plan = DeviceConstrainedPlan::plan(&f, &lens, b, 0.05);
+            let spend = plan.expected_spend_fraction(&f, &lens);
+            assert!(spend >= 0.8 * b, "b={b}: spend {spend:.3} too conservative");
+        }
+    }
+
+    #[test]
+    fn device_plan_short_prompts_start_immediately() {
+        let f = server_ecdf(5);
+        let lens = sample_lengths(6, 4000);
+        let plan = DeviceConstrainedPlan::plan(&f, &lens, 0.5, 0.05);
+        let l_imm = plan.l_immediate.expect("b=0.5 funds some immediate starts");
+        assert_eq!(plan.wait_for(l_imm), 0.0);
+        assert_eq!(plan.wait_for(4), 0.0);
+        // A very long prompt waits w_tail.
+        assert_eq!(plan.wait_for(100_000), plan.w_tail);
+        assert!(plan.w_tail.is_finite());
+    }
+
+    #[test]
+    fn device_plan_tail_protection_quantile() {
+        let f = server_ecdf(7);
+        let lens = sample_lengths(8, 2000);
+        let alpha = 0.1;
+        let plan = DeviceConstrainedPlan::plan(&f, &lens, 0.5, alpha);
+        // w_tail = F⁻¹(1 − α): server exceeds it with probability α.
+        assert!((f.survival(plan.w_tail) - alpha).abs() < 0.02);
+    }
+
+    #[test]
+    fn device_plan_zero_budget_never_runs_device() {
+        let f = server_ecdf(9);
+        let lens = sample_lengths(10, 500);
+        let plan = DeviceConstrainedPlan::plan(&f, &lens, 0.0, 0.1);
+        assert!(plan.w_tail.is_infinite());
+        assert_eq!(plan.expected_spend_fraction(&f, &lens), 0.0);
+    }
+
+    #[test]
+    fn device_plan_b_below_alpha_all_wait_tail() {
+        let f = server_ecdf(11);
+        let lens = sample_lengths(12, 500);
+        let plan = DeviceConstrainedPlan::plan(&f, &lens, 0.05, 0.2);
+        assert!(plan.l_immediate.is_none());
+        assert!(plan.boundary.is_none());
+        // Reserve is min(α,b) = b: survival(w_tail) = b.
+        assert!((f.survival(plan.w_tail) - 0.05).abs() < 0.02);
+    }
+
+    #[test]
+    fn device_plan_monotone_waits() {
+        // w(l) must be nondecreasing in l (short prompts never wait more).
+        let f = server_ecdf(13);
+        let lens = sample_lengths(14, 3000);
+        let plan = DeviceConstrainedPlan::plan(&f, &lens, 0.4, 0.05);
+        let mut last = 0.0;
+        for l in (4..1024).step_by(7) {
+            let w = plan.wait_for(l);
+            assert!(w + 1e-12 >= last, "w({l})={w} < w(prev)={last}");
+            last = w;
+        }
+    }
+
+    // ---- smooth Eq. 1–2 variant ----
+
+    #[test]
+    fn smooth_plan_respects_budget_and_monotone() {
+        let f = server_ecdf(23);
+        let lens = sample_lengths(24, 4000);
+        for b in [0.2, 0.5, 0.8] {
+            let plan = DeviceConstrainedPlan::plan_smooth(&f, &lens, b, 0.05);
+            let spend = plan.expected_spend_fraction(&f, &lens);
+            assert!(spend <= b + 0.03, "b={b}: smooth spend {spend:.3}");
+            assert!(spend >= 0.7 * b, "b={b}: smooth spend {spend:.3} too low");
+            // Waits nondecreasing in l, capped at w_tail.
+            let mut last = 0.0;
+            for l in (1..2048).step_by(13) {
+                let w = plan.wait_for(l);
+                assert!(w + 1e-12 >= last);
+                assert!(w <= plan.base.w_tail + 1e-12);
+                last = w;
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_plan_zero_budget_degenerates() {
+        let f = server_ecdf(25);
+        let lens = sample_lengths(26, 500);
+        let plan = DeviceConstrainedPlan::plan_smooth(&f, &lens, 0.0, 0.1);
+        assert!(plan.beta.is_infinite());
+        assert_eq!(plan.expected_spend_fraction(&f, &lens), 0.0);
+    }
+
+    #[test]
+    fn smooth_and_stepwise_spend_similarly() {
+        let f = server_ecdf(27);
+        let lens = sample_lengths(28, 3000);
+        let b = 0.5;
+        let step = DeviceConstrainedPlan::plan(&f, &lens, b, 0.05);
+        let smooth = DeviceConstrainedPlan::plan_smooth(&f, &lens, b, 0.05);
+        let s1 = step.expected_spend_fraction(&f, &lens);
+        let s2 = smooth.expected_spend_fraction(&f, &lens);
+        assert!((s1 - s2).abs() < 0.1, "step {s1:.3} vs smooth {s2:.3}");
+    }
+
+    // ---- server-constrained (Algorithm 3) ----
+
+    #[test]
+    fn server_plan_respects_budget() {
+        let lens = sample_lengths(15, 4000);
+        for b in [0.0, 0.1, 0.3, 0.6, 0.9, 1.0] {
+            let plan = ServerConstrainedPlan::plan(&lens, b);
+            let spend = plan.expected_spend_fraction(&lens);
+            assert!(spend <= b + 0.02, "b={b}: server share {spend:.3}");
+            // And uses most of the budget (long prompts are coarse-grained,
+            // so allow slack proportional to the largest prompt).
+            if b > 0.1 {
+                assert!(spend >= b - 0.1, "b={b}: spend {spend:.3} too low");
+            }
+        }
+    }
+
+    #[test]
+    fn server_plan_threshold_split() {
+        let lens = sample_lengths(17, 2000);
+        let plan = ServerConstrainedPlan::plan(&lens, 0.5);
+        assert_eq!(plan.decide(plan.l_threshold - 1), Decision::DeviceOnly);
+        assert_eq!(
+            plan.decide(plan.l_threshold),
+            Decision::Both { device_wait: 0.0 }
+        );
+    }
+
+    #[test]
+    fn server_plan_extremes() {
+        let lens = sample_lengths(19, 1000);
+        // b=1: everything may use the server.
+        let p1 = ServerConstrainedPlan::plan(&lens, 1.0);
+        assert!(p1.l_threshold <= *lens.iter().min().unwrap());
+        // b=0: nothing uses the server.
+        let p0 = ServerConstrainedPlan::plan(&lens, 0.0);
+        assert_eq!(p0.l_threshold, u32::MAX);
+        assert_eq!(p0.expected_spend_fraction(&lens), 0.0);
+    }
+
+    #[test]
+    fn decision_helpers() {
+        assert!(Decision::ServerOnly.uses_server());
+        assert!(!Decision::ServerOnly.uses_device());
+        assert!(Decision::DeviceOnly.uses_device());
+        assert!(!Decision::DeviceOnly.uses_server());
+        let both = Decision::Both { device_wait: 1.0 };
+        assert!(both.uses_server() && both.uses_device());
+    }
+
+    // ---- property tests ----
+
+    #[test]
+    fn prop_budget_invariant_holds_for_random_workloads() {
+        let f = server_ecdf(21);
+        crate::proptest::check(
+            "dispatch-budget-invariant",
+            crate::proptest::default_cases().min(64),
+            |r| {
+                let n = 200 + r.below(800) as usize;
+                let median = 8.0 + r.f64() * 200.0;
+                let sigma = 0.3 + r.f64() * 1.0;
+                let lens: Vec<u32> = (0..n)
+                    .map(|_| (r.lognormal(median.ln(), sigma).round() as u32).clamp(1, 4096))
+                    .collect();
+                let b = r.f64();
+                let alpha = r.f64() * 0.3;
+                (lens, b, alpha)
+            },
+            |(lens, b, alpha)| {
+                let dplan = DeviceConstrainedPlan::plan(&f, lens, *b, *alpha);
+                let dspend = dplan.expected_spend_fraction(&f, lens);
+                crate::prop_assert!(
+                    dspend <= b + 0.03,
+                    "device spend {dspend:.3} > b {b:.3}"
+                );
+                let splan = ServerConstrainedPlan::plan(lens, *b);
+                let sspend = splan.expected_spend_fraction(lens);
+                crate::prop_assert!(
+                    sspend <= b + 0.03,
+                    "server spend {sspend:.3} > b {b:.3}"
+                );
+                Ok(())
+            },
+        );
+    }
+}

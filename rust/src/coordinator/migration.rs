@@ -1,0 +1,254 @@
+//! Token-level migration control (§4.3).
+//!
+//! When both endpoints were dispatched and the prefill winner is the
+//! *cost-constrained* endpoint, decode can be handed to the cheaper
+//! endpoint. Migration transfers token IDs only — no KV cache (§4.3's two
+//! practical reasons) — so the target must re-prefill prompt + generated
+//! prefix. The controller fires only when projected savings exceed that
+//! overhead (Eq. 4), and delays the handoff until a token buffer of
+//! `B = r_c × t_m` (Eq. 5) can mask the target's warm-up.
+
+use crate::cost::unified::{Constraint, CostParams};
+use crate::endpoint::EndpointKind;
+
+/// Migration tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationConfig {
+    pub enabled: bool,
+    /// Human consumption rate r_c, tokens/s (§2.2: reading ≈ 4–5 tok/s).
+    pub consumption_rate: f64,
+    /// Network round-trip added to the target warm-up estimate (seconds).
+    pub rtt: f64,
+    /// Ablation knob: scales Eq. 5's buffer (1.0 = paper's sizing;
+    /// <1 under-buffers and should delay tokens — `disco exp abl-buffer`).
+    pub buffer_scale: f64,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        MigrationConfig {
+            enabled: true,
+            consumption_rate: 5.0,
+            rtt: 0.05,
+            buffer_scale: 1.0,
+        }
+    }
+}
+
+/// A concrete migration decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationPlan {
+    /// Buffer size B in tokens (Eq. 5).
+    pub buffer_tokens: u32,
+    /// Estimated migration overhead t_m (target re-prefill + RTT).
+    pub t_m_est: f64,
+    /// Endpoint generation moves to.
+    pub target: EndpointKind,
+}
+
+/// Stateless migration planner.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationPlanner {
+    pub config: MigrationConfig,
+    pub costs: CostParams,
+}
+
+impl MigrationPlanner {
+    pub fn new(config: MigrationConfig, costs: CostParams) -> Self {
+        MigrationPlanner { config, costs }
+    }
+
+    /// The migration direction for a given winner, if any: generation
+    /// moves *off* the constrained endpoint (§4.3 "the constrained
+    /// endpoint may win the prefill phase but incur higher decode costs").
+    pub fn direction(&self, constraint: Constraint, winner: EndpointKind) -> Option<EndpointKind> {
+        match (constraint, winner) {
+            (Constraint::Device, EndpointKind::Device) => Some(EndpointKind::Server),
+            (Constraint::Server, EndpointKind::Server) => Some(EndpointKind::Device),
+            _ => None,
+        }
+    }
+
+    /// Eq. 4 trigger: projected decode-cost savings on the remaining
+    /// tokens must exceed the target's re-prefill cost over
+    /// `reprefill_len = prompt + generated prefix` tokens.
+    pub fn worth_migrating(
+        &self,
+        target: EndpointKind,
+        remaining_tokens: u32,
+        reprefill_len: u32,
+    ) -> bool {
+        let savings = self.costs.decode_delta() * remaining_tokens as f64;
+        let overhead = match target {
+            EndpointKind::Server => self.costs.server_prefill * reprefill_len as f64,
+            EndpointKind::Device => self.costs.device_prefill * reprefill_len as f64,
+        };
+        savings > overhead
+    }
+
+    /// Build the concrete plan (Eq. 5). `target_expected_ttft` is the
+    /// target endpoint's expected warm-up for re-prefilling
+    /// `reprefill_len` tokens.
+    pub fn plan(
+        &self,
+        constraint: Constraint,
+        winner: EndpointKind,
+        remaining_tokens: u32,
+        reprefill_len: u32,
+        target_expected_ttft: f64,
+    ) -> Option<MigrationPlan> {
+        if !self.config.enabled || remaining_tokens == 0 {
+            return None;
+        }
+        let target = self.direction(constraint, winner)?;
+        if !self.worth_migrating(target, remaining_tokens, reprefill_len) {
+            return None;
+        }
+        let t_m = target_expected_ttft + self.config.rtt;
+        let buffer =
+            (self.config.consumption_rate * t_m * self.config.buffer_scale).ceil() as u32;
+        Some(MigrationPlan {
+            buffer_tokens: buffer.max(1),
+            t_m_est: t_m,
+            target,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device_constrained_costs() -> CostParams {
+        // λ = 5 $/PFLOP-style scenario: device ≫ server.
+        CostParams {
+            server_prefill: 1.5e-7,
+            server_decode: 6.0e-7,
+            device_prefill: 4.0e-6,
+            device_decode: 4.1e-6,
+        }
+    }
+
+    fn server_constrained_costs() -> CostParams {
+        CostParams {
+            server_prefill: 1.5e-7,
+            server_decode: 6.0e-7,
+            device_prefill: 1.2e-7,
+            device_decode: 8.0e-8,
+        }
+    }
+
+    #[test]
+    fn direction_moves_off_constrained_endpoint() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        assert_eq!(
+            p.direction(Constraint::Device, EndpointKind::Device),
+            Some(EndpointKind::Server)
+        );
+        assert_eq!(p.direction(Constraint::Device, EndpointKind::Server), None);
+        assert_eq!(
+            p.direction(Constraint::Server, EndpointKind::Server),
+            Some(EndpointKind::Device)
+        );
+        assert_eq!(p.direction(Constraint::Server, EndpointKind::Device), None);
+    }
+
+    #[test]
+    fn eq4_trigger_scales_with_remaining() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), server_constrained_costs());
+        // Δc_decode = 5.2e-7; device re-prefill 1.2e-7/token.
+        // remaining=100, reprefill=50: savings 5.2e-5 > 6e-6 → migrate.
+        assert!(p.worth_migrating(EndpointKind::Device, 100, 50));
+        // remaining=5, reprefill=500: savings 2.6e-6 < 6e-5 → don't.
+        assert!(!p.worth_migrating(EndpointKind::Device, 5, 500));
+    }
+
+    #[test]
+    fn buffer_follows_eq5() {
+        let cfg = MigrationConfig {
+            enabled: true,
+            consumption_rate: 5.0,
+            rtt: 0.1,
+            buffer_scale: 1.0,
+        };
+        let p = MigrationPlanner::new(cfg, device_constrained_costs());
+        let plan = p
+            .plan(Constraint::Device, EndpointKind::Device, 100, 40, 0.5)
+            .expect("should migrate");
+        // t_m = 0.5 + 0.1 = 0.6 → B = ceil(5 × 0.6) = 3.
+        assert_eq!(plan.target, EndpointKind::Server);
+        assert!((plan.t_m_est - 0.6).abs() < 1e-12);
+        assert_eq!(plan.buffer_tokens, 3);
+    }
+
+    #[test]
+    fn disabled_or_empty_never_migrates() {
+        let cfg = MigrationConfig {
+            enabled: false,
+            ..Default::default()
+        };
+        let p = MigrationPlanner::new(cfg, device_constrained_costs());
+        assert!(p
+            .plan(Constraint::Device, EndpointKind::Device, 100, 40, 0.5)
+            .is_none());
+        let p2 = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        assert!(p2
+            .plan(Constraint::Device, EndpointKind::Device, 0, 40, 0.5)
+            .is_none());
+    }
+
+    #[test]
+    fn wrong_direction_winner_never_migrates() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        // Server won in a device-constrained setting: server decode is the
+        // cheap side already — no migration.
+        assert!(p
+            .plan(Constraint::Device, EndpointKind::Server, 100, 40, 0.5)
+            .is_none());
+    }
+
+    #[test]
+    fn buffer_scale_shrinks_buffer() {
+        let mk = |scale| MigrationConfig {
+            buffer_scale: scale,
+            ..Default::default()
+        };
+        let costs = device_constrained_costs();
+        let full = MigrationPlanner::new(mk(1.0), costs)
+            .plan(Constraint::Device, EndpointKind::Device, 100, 40, 2.0)
+            .unwrap();
+        let half = MigrationPlanner::new(mk(0.5), costs)
+            .plan(Constraint::Device, EndpointKind::Device, 100, 40, 2.0)
+            .unwrap();
+        assert!(half.buffer_tokens < full.buffer_tokens);
+        let none = MigrationPlanner::new(mk(0.0), costs)
+            .plan(Constraint::Device, EndpointKind::Device, 100, 40, 2.0)
+            .unwrap();
+        assert_eq!(none.buffer_tokens, 1); // floor of 1 token
+    }
+
+    #[test]
+    fn prop_buffer_masks_overhead() {
+        // Property: B/r_c ≥ t_m, i.e. a full buffer covers the warm-up.
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        crate::proptest::check(
+            "buffer-masks-overhead",
+            128,
+            |r| (r.f64() * 5.0, 1 + r.below(500) as u32, 1 + r.below(500) as u32),
+            |&(ttft, remaining, reprefill)| {
+                if let Some(plan) =
+                    p.plan(Constraint::Device, EndpointKind::Device, remaining, reprefill, ttft)
+                {
+                    let cover = plan.buffer_tokens as f64 / p.config.consumption_rate;
+                    crate::prop_assert!(
+                        cover + 1e-9 >= plan.t_m_est,
+                        "buffer {} covers only {cover:.3}s of t_m {:.3}s",
+                        plan.buffer_tokens,
+                        plan.t_m_est
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! The DiSCo coordinator — the paper's system contribution (§4).
+//!
+//! Two controllers cooperate per request:
+//!
+//! 1. the **dispatch controller** ([`dispatch`]) decides *where to start*
+//!    token generation (device, server, or both with a device wait time),
+//!    trading TTFT against the unified cost budget (Algorithms 1–3);
+//! 2. the **migration controller** ([`migration`]) decides *where to
+//!    finish* it, handing generation off mid-decode when the projected
+//!    decode-cost savings exceed the re-prefill overhead (Eqs. 4–5),
+//!    masked by a consumption-rate-aware token buffer.
+//!
+//! [`policy`] packages both behind one interface together with the
+//! paper's baselines (ServerOnly/vLLM, DeviceOnly/llama.cpp, Stoch-S,
+//! Stoch-D).
+
+pub mod dispatch;
+pub mod migration;
+pub mod policy;
+
+pub use dispatch::{Decision, DeviceConstrainedPlan, ServerConstrainedPlan};
+pub use migration::{MigrationConfig, MigrationPlanner};
+pub use policy::{Policy, PolicyKind};

@@ -1,0 +1,274 @@
+//! Dispatch policies: DiSCo and the paper's baselines (§5.1).
+//!
+//! * `ServerOnly` — all requests on the server (the vLLM baseline);
+//! * `DeviceOnly` — all requests on the device (the llama.cpp baseline);
+//! * `StochS` / `StochD` — stochastic dispatching that caps the
+//!   constrained endpoint's budget by routing a Bernoulli(b) coin flip;
+//! * `DiscoS` / `DiscoD` — the paper's cost-aware planners (Algorithms
+//!   2–3), optionally with token-level migration.
+
+use crate::coordinator::dispatch::{
+    Decision, DeviceConstrainedPlan, ServerConstrainedPlan, SmoothDevicePlan,
+};
+use crate::cost::unified::Constraint;
+use crate::stats::ecdf::Ecdf;
+use crate::util::rng::Rng;
+
+/// Policy family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    ServerOnly,
+    DeviceOnly,
+    StochS,
+    StochD,
+    DiscoS,
+    DiscoD,
+    /// Eq. 1–2's smooth β-interpolated wait variant (ablation).
+    DiscoDSmooth,
+}
+
+impl PolicyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::ServerOnly => "vLLM (server-only)",
+            PolicyKind::DeviceOnly => "llama.cpp (device-only)",
+            PolicyKind::StochS => "Stoch-S",
+            PolicyKind::StochD => "Stoch-D",
+            PolicyKind::DiscoS => "DiSCo-S",
+            PolicyKind::DiscoD => "DiSCo-D",
+            PolicyKind::DiscoDSmooth => "DiSCo-D (smooth)",
+        }
+    }
+
+    /// Which endpoint this policy treats as budget-constrained.
+    pub fn constraint(&self) -> Option<Constraint> {
+        match self {
+            PolicyKind::StochS | PolicyKind::DiscoS => Some(Constraint::Server),
+            PolicyKind::StochD | PolicyKind::DiscoD | PolicyKind::DiscoDSmooth => {
+                Some(Constraint::Device)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A ready-to-run policy (planning already done).
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    /// Budget ratio b ∈ [0,1] (meaning depends on the constraint).
+    pub b: f64,
+    /// Whether the migration controller may act during decode.
+    pub migration: bool,
+    device_plan: Option<DeviceConstrainedPlan>,
+    server_plan: Option<ServerConstrainedPlan>,
+    smooth_plan: Option<SmoothDevicePlan>,
+}
+
+/// Tail-protection reservation α (§4.2 Phase 1). The paper leaves the
+/// value free; 0.05 reserves the P95+ tail.
+pub const DEFAULT_ALPHA: f64 = 0.05;
+
+impl Policy {
+    /// Plan a policy from profiling data: the server TTFT ECDF and an
+    /// empirical prompt-length sample (uses [`DEFAULT_ALPHA`]).
+    pub fn plan(
+        kind: PolicyKind,
+        b: f64,
+        migration: bool,
+        server_ttft: &Ecdf,
+        lengths: &[u32],
+    ) -> Policy {
+        Self::plan_with_alpha(kind, b, migration, server_ttft, lengths, DEFAULT_ALPHA)
+    }
+
+    /// Like [`Policy::plan`] with an explicit tail-protection α
+    /// (exercised by the `abl-alpha` ablation).
+    pub fn plan_with_alpha(
+        kind: PolicyKind,
+        b: f64,
+        migration: bool,
+        server_ttft: &Ecdf,
+        lengths: &[u32],
+        alpha: f64,
+    ) -> Policy {
+        let (device_plan, server_plan, smooth_plan) = match kind {
+            PolicyKind::DiscoD => (
+                Some(DeviceConstrainedPlan::plan(
+                    server_ttft,
+                    lengths,
+                    b,
+                    alpha.min(b),
+                )),
+                None,
+                None,
+            ),
+            PolicyKind::DiscoDSmooth => (
+                None,
+                None,
+                Some(DeviceConstrainedPlan::plan_smooth(
+                    server_ttft,
+                    lengths,
+                    b,
+                    alpha.min(b),
+                )),
+            ),
+            PolicyKind::DiscoS => (None, Some(ServerConstrainedPlan::plan(lengths, b)), None),
+            _ => (None, None, None),
+        };
+        Policy {
+            kind,
+            b,
+            migration,
+            device_plan,
+            server_plan,
+            smooth_plan,
+        }
+    }
+
+    /// Simple policies that need no planning.
+    pub fn simple(kind: PolicyKind, b: f64, migration: bool) -> Policy {
+        assert!(
+            !matches!(
+                kind,
+                PolicyKind::DiscoS | PolicyKind::DiscoD | PolicyKind::DiscoDSmooth
+            ),
+            "DiSCo policies need Policy::plan"
+        );
+        Policy {
+            kind,
+            b,
+            migration,
+            device_plan: None,
+            server_plan: None,
+            smooth_plan: None,
+        }
+    }
+
+    /// Per-request dispatch decision.
+    pub fn decide(&self, prompt_len: u32, rng: &mut Rng) -> Decision {
+        match self.kind {
+            PolicyKind::ServerOnly => Decision::ServerOnly,
+            PolicyKind::DeviceOnly => Decision::DeviceOnly,
+            // Stoch-S: spend the server budget on a random b-fraction of
+            // requests (device covers the rest alone).
+            PolicyKind::StochS => {
+                if rng.chance(self.b) {
+                    Decision::Both { device_wait: 0.0 }
+                } else {
+                    Decision::DeviceOnly
+                }
+            }
+            // Stoch-D: spend the device budget on a random b-fraction
+            // (server covers the rest alone).
+            PolicyKind::StochD => {
+                if rng.chance(self.b) {
+                    Decision::Both { device_wait: 0.0 }
+                } else {
+                    Decision::ServerOnly
+                }
+            }
+            PolicyKind::DiscoS => self.server_plan.as_ref().unwrap().decide(prompt_len),
+            PolicyKind::DiscoD => self.device_plan.as_ref().unwrap().decide(prompt_len),
+            PolicyKind::DiscoDSmooth => self.smooth_plan.as_ref().unwrap().decide(prompt_len),
+        }
+    }
+
+    /// The constraint this policy manages (None for unconstrained
+    /// baselines, which also never migrate).
+    pub fn constraint(&self) -> Option<Constraint> {
+        self.kind.constraint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiles::server::ServerProfile;
+
+    fn fixtures() -> (Ecdf, Vec<u32>) {
+        let p = ServerProfile::command();
+        let mut rng = Rng::new(33);
+        let ecdf = Ecdf::new((0..2000).map(|_| p.sample_ttft(&mut rng)).collect());
+        let lens: Vec<u32> = (0..2000)
+            .map(|_| (rng.lognormal(3.0, 0.9).round() as u32).clamp(4, 1024))
+            .collect();
+        (ecdf, lens)
+    }
+
+    #[test]
+    fn baselines_are_degenerate() {
+        let mut rng = Rng::new(1);
+        let s = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let d = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+        for l in [4u32, 100, 1000] {
+            assert_eq!(s.decide(l, &mut rng), Decision::ServerOnly);
+            assert_eq!(d.decide(l, &mut rng), Decision::DeviceOnly);
+        }
+    }
+
+    #[test]
+    fn stoch_policies_hit_budget_fraction() {
+        let mut rng = Rng::new(2);
+        let b = 0.3;
+        let ps = Policy::simple(PolicyKind::StochS, b, false);
+        let n = 20_000;
+        let server_used = (0..n)
+            .filter(|_| ps.decide(50, &mut rng).uses_server())
+            .count();
+        let frac = server_used as f64 / n as f64;
+        assert!((frac - b).abs() < 0.02, "frac={frac}");
+
+        let pd = Policy::simple(PolicyKind::StochD, b, false);
+        let device_used = (0..n)
+            .filter(|_| pd.decide(50, &mut rng).uses_device())
+            .count();
+        let frac = device_used as f64 / n as f64;
+        assert!((frac - b).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn disco_policies_plan_and_decide() {
+        let (ecdf, lens) = fixtures();
+        let mut rng = Rng::new(3);
+        let ds = Policy::plan(PolicyKind::DiscoS, 0.5, true, &ecdf, &lens);
+        // Short prompt → device-only; long → both.
+        assert_eq!(ds.decide(4, &mut rng), Decision::DeviceOnly);
+        assert_eq!(
+            ds.decide(1024, &mut rng),
+            Decision::Both { device_wait: 0.0 }
+        );
+        let dd = Policy::plan(PolicyKind::DiscoD, 0.5, true, &ecdf, &lens);
+        match dd.decide(1024, &mut rng) {
+            Decision::Both { device_wait } => assert!(device_wait > 0.0),
+            other => panic!("expected Both, got {other:?}"),
+        }
+        match dd.decide(4, &mut rng) {
+            Decision::Both { device_wait } => assert_eq!(device_wait, 0.0),
+            other => panic!("expected Both, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn constraint_mapping() {
+        assert_eq!(PolicyKind::DiscoS.constraint(), Some(Constraint::Server));
+        assert_eq!(PolicyKind::StochD.constraint(), Some(Constraint::Device));
+        assert_eq!(PolicyKind::ServerOnly.constraint(), None);
+        for k in [
+            PolicyKind::ServerOnly,
+            PolicyKind::DeviceOnly,
+            PolicyKind::StochS,
+            PolicyKind::StochD,
+            PolicyKind::DiscoS,
+            PolicyKind::DiscoD,
+        ] {
+            assert!(!k.label().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need Policy::plan")]
+    fn disco_simple_panics() {
+        Policy::simple(PolicyKind::DiscoS, 0.5, false);
+    }
+}

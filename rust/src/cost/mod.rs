@@ -1,0 +1,14 @@
+//! Unified cost model (§4.1, Appendix E).
+//!
+//! Server usage is metered in dollars (API pricing, Table 8); device usage
+//! in FLOPs-derived energy (Eqs. 7–9, Tables 6–7). A dynamic exchange
+//! rate λ (`energy_to_money`) converts energy into the same dollar unit so
+//! the dispatcher can reason about one budget.
+
+pub mod flops;
+pub mod pricing;
+pub mod unified;
+
+pub use flops::ModelArch;
+pub use pricing::ServicePricing;
+pub use unified::{Constraint, CostMeter, CostParams};

@@ -1,0 +1,97 @@
+//! Commercial LLM service pricing (Appendix E.2, Table 8), USD per 1M
+//! tokens as of 2024-10-28 — the exact values the paper tabulates.
+
+/// Dual-rate pricing: input (prompt) and output (generated) tokens.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServicePricing {
+    pub model: &'static str,
+    pub vendor: &'static str,
+    /// USD per 1M prompt tokens.
+    pub input_per_mtok: f64,
+    /// USD per 1M generated tokens.
+    pub output_per_mtok: f64,
+}
+
+impl ServicePricing {
+    pub const fn new(
+        model: &'static str,
+        vendor: &'static str,
+        input: f64,
+        output: f64,
+    ) -> ServicePricing {
+        ServicePricing {
+            model,
+            vendor,
+            input_per_mtok: input,
+            output_per_mtok: output,
+        }
+    }
+
+    /// Cost in USD for a request with the given token counts.
+    pub fn request_cost(&self, prompt_tokens: u64, output_tokens: u64) -> f64 {
+        prompt_tokens as f64 * self.input_per_mtok / 1e6
+            + output_tokens as f64 * self.output_per_mtok / 1e6
+    }
+
+    /// Per-token prefill cost (USD).
+    pub fn prefill_per_token(&self) -> f64 {
+        self.input_per_mtok / 1e6
+    }
+
+    /// Per-token decode cost (USD).
+    pub fn decode_per_token(&self) -> f64 {
+        self.output_per_mtok / 1e6
+    }
+}
+
+/// Table 8 verbatim.
+pub const PRICING_TABLE: &[ServicePricing] = &[
+    ServicePricing::new("DeepSeek-V2.5", "DeepSeek", 0.14, 0.28),
+    ServicePricing::new("GPT-4o-mini", "OpenAI", 0.15, 0.60),
+    ServicePricing::new("LLaMa-3.1-70b", "Hyperbolic", 0.40, 0.40),
+    ServicePricing::new("LLaMa-3.1-70b", "Amazon", 0.99, 0.99),
+    ServicePricing::new("Command", "Cohere", 1.25, 2.00),
+    ServicePricing::new("GPT-4o", "OpenAI", 2.50, 10.0),
+    ServicePricing::new("Claude-3.5-Sonnet", "Anthropic", 3.00, 15.0),
+    ServicePricing::new("o1-preview", "OpenAI", 15.0, 60.0),
+];
+
+/// Look up pricing by model name.
+pub fn pricing_for(model: &str) -> Option<ServicePricing> {
+    PRICING_TABLE.iter().find(|p| p.model == model).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_has_eight_rows() {
+        assert_eq!(PRICING_TABLE.len(), 8);
+    }
+
+    #[test]
+    fn request_cost_math() {
+        let p = pricing_for("GPT-4o-mini").unwrap();
+        // 1M input + 1M output = 0.15 + 0.60
+        assert!((p.request_cost(1_000_000, 1_000_000) - 0.75).abs() < 1e-12);
+        assert!((p.request_cost(100, 0) - 15e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn output_never_cheaper_than_input() {
+        for p in PRICING_TABLE {
+            assert!(
+                p.output_per_mtok >= p.input_per_mtok,
+                "{} {}",
+                p.vendor,
+                p.model
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_miss_is_none() {
+        assert!(pricing_for("nonexistent-model").is_none());
+    }
+}

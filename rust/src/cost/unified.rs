@@ -1,0 +1,183 @@
+//! Unified cost accounting (§4.1).
+//!
+//! Per-token costs for the four (endpoint × phase) combinations, all in
+//! one dollar unit after converting device energy via the exchange rate
+//! λ (`energy_to_money`, $ per MFLOP — Appendix E uses 0.3 for
+//! server-constrained and 5 for device-constrained experiments).
+
+use crate::cost::flops::ModelArch;
+use crate::cost::pricing::ServicePricing;
+
+/// Which endpoint the budget constrains (Algorithm 1's classification).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Constraint {
+    /// min(c_d^p, c_d^d) > max(c_s^p, c_s^d): device energy dominates.
+    Device,
+    /// max(c_s^p, c_s^d) > min(c_d^p, c_d^d): server dollars dominate.
+    Server,
+}
+
+/// Unified per-token costs (USD) for both endpoints and phases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostParams {
+    /// Server prefill $/token (c_s^p).
+    pub server_prefill: f64,
+    /// Server decode $/token (c_s^d).
+    pub server_decode: f64,
+    /// Device prefill $/token (c_d^p), energy × λ.
+    pub device_prefill: f64,
+    /// Device decode $/token (c_d^d), energy × λ.
+    pub device_decode: f64,
+}
+
+impl CostParams {
+    /// Build from API pricing + device FLOPs model + exchange rate.
+    /// `lambda` is USD per MFLOP; `ctx` is the representative context
+    /// length at which per-token device FLOPs are evaluated (the paper
+    /// uses its generation limit, 128).
+    pub fn from_profiles(
+        pricing: &ServicePricing,
+        arch: &ModelArch,
+        lambda: f64,
+        ctx: u32,
+    ) -> CostParams {
+        CostParams {
+            server_prefill: pricing.prefill_per_token(),
+            server_decode: pricing.decode_per_token(),
+            device_prefill: arch.prefill_flops_per_token(ctx) / 1e6 * lambda,
+            device_decode: arch.decode_flops_per_token(ctx) / 1e6 * lambda,
+        }
+    }
+
+    /// Algorithm 1's scenario classification. Falls back to comparing
+    /// mean costs when neither strict dominance condition holds.
+    pub fn constraint(&self) -> Constraint {
+        let min_d = self.device_prefill.min(self.device_decode);
+        let max_d = self.device_prefill.max(self.device_decode);
+        let min_s = self.server_prefill.min(self.server_decode);
+        let max_s = self.server_prefill.max(self.server_decode);
+        if min_d > max_s {
+            Constraint::Device
+        } else if max_s > min_d && min_s > max_d {
+            Constraint::Server
+        } else if self.device_prefill + self.device_decode
+            > self.server_prefill + self.server_decode
+        {
+            Constraint::Device
+        } else {
+            Constraint::Server
+        }
+    }
+
+    /// Per-token decode cost difference |c_s^d − c_d^d| (Eq. 4's Δc).
+    pub fn decode_delta(&self) -> f64 {
+        (self.server_decode - self.device_decode).abs()
+    }
+}
+
+/// Running cost meter for a workload (drives Fig. 7 and budget checks).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostMeter {
+    pub server_prefill_tokens: u64,
+    pub server_decode_tokens: u64,
+    pub device_prefill_tokens: u64,
+    pub device_decode_tokens: u64,
+}
+
+impl CostMeter {
+    pub fn add(&mut self, other: &CostMeter) {
+        self.server_prefill_tokens += other.server_prefill_tokens;
+        self.server_decode_tokens += other.server_decode_tokens;
+        self.device_prefill_tokens += other.device_prefill_tokens;
+        self.device_decode_tokens += other.device_decode_tokens;
+    }
+
+    /// Total unified cost in USD under `params`.
+    pub fn total_cost(&self, params: &CostParams) -> f64 {
+        self.server_prefill_tokens as f64 * params.server_prefill
+            + self.server_decode_tokens as f64 * params.server_decode
+            + self.device_prefill_tokens as f64 * params.device_prefill
+            + self.device_decode_tokens as f64 * params.device_decode
+    }
+
+    /// Prefill tokens executed by the constrained endpoint — the quantity
+    /// the budget ratio b bounds (§5.1: "ratio of input tokens processed
+    /// by the constrained endpoint to the total input tokens").
+    pub fn constrained_prefill_tokens(&self, c: Constraint) -> u64 {
+        match c {
+            Constraint::Device => self.device_prefill_tokens,
+            Constraint::Server => self.server_prefill_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::pricing::pricing_for;
+
+    #[test]
+    fn constraint_classification_strict() {
+        let device_heavy = CostParams {
+            server_prefill: 1.0,
+            server_decode: 2.0,
+            device_prefill: 5.0,
+            device_decode: 4.0,
+        };
+        assert_eq!(device_heavy.constraint(), Constraint::Device);
+        let server_heavy = CostParams {
+            server_prefill: 5.0,
+            server_decode: 6.0,
+            device_prefill: 1.0,
+            device_decode: 2.0,
+        };
+        assert_eq!(server_heavy.constraint(), Constraint::Server);
+    }
+
+    #[test]
+    fn paper_lambdas_produce_expected_constraints() {
+        let arch = ModelArch::bloom_560m();
+        let pricing = pricing_for("GPT-4o-mini").unwrap();
+        // Appendix E: 5 $/MFLOP → device-constrained.
+        let p_dev = CostParams::from_profiles(&pricing, &arch, 5.0, 128);
+        assert_eq!(p_dev.constraint(), Constraint::Device);
+        // Tiny λ → server-constrained.
+        let p_srv = CostParams::from_profiles(&pricing, &arch, 1e-12, 128);
+        assert_eq!(p_srv.constraint(), Constraint::Server);
+    }
+
+    #[test]
+    fn meter_accumulates_and_prices() {
+        let params = CostParams {
+            server_prefill: 1.0,
+            server_decode: 2.0,
+            device_prefill: 3.0,
+            device_decode: 4.0,
+        };
+        let mut m = CostMeter::default();
+        m.add(&CostMeter {
+            server_prefill_tokens: 1,
+            server_decode_tokens: 1,
+            device_prefill_tokens: 1,
+            device_decode_tokens: 1,
+        });
+        m.add(&CostMeter {
+            server_prefill_tokens: 1,
+            ..Default::default()
+        });
+        assert_eq!(m.total_cost(&params), 1.0 + 1.0 + 2.0 + 3.0 + 4.0);
+        assert_eq!(m.constrained_prefill_tokens(Constraint::Server), 2);
+        assert_eq!(m.constrained_prefill_tokens(Constraint::Device), 1);
+    }
+
+    #[test]
+    fn decode_delta_symmetric() {
+        let p = CostParams {
+            server_prefill: 0.0,
+            server_decode: 3.0,
+            device_prefill: 0.0,
+            device_decode: 5.0,
+        };
+        assert_eq!(p.decode_delta(), 2.0);
+    }
+}

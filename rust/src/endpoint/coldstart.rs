@@ -1,0 +1,143 @@
+//! Cold-start model (Appendix B, Table 4).
+//!
+//! On-device models are not always resident: loading weights dominates
+//! the first request's latency. Table 4 shows load time growing linearly
+//! with parameter count while warm TTFT stays tens of milliseconds. The
+//! model here: `load = intercept + params_gb / disk_gbps` and
+//! `ttft = ttft_base + ttft_per_b × params_b`, fitted per platform to the
+//! paper's measurements.
+
+/// A host platform's cold-start characteristics.
+#[derive(Clone, Copy, Debug)]
+pub struct ColdStartProfile {
+    pub platform: &'static str,
+    /// Fixed load overhead (allocator, runtime init), seconds.
+    pub load_intercept: f64,
+    /// Effective weight-streaming bandwidth, GB/s (fp16 weights).
+    pub disk_gbps: f64,
+    /// Warm-TTFT intercept, seconds.
+    pub ttft_base: f64,
+    /// Warm-TTFT slope per billion parameters, seconds.
+    pub ttft_per_b: f64,
+    /// GPU memory capacity in GB (models beyond this cannot load).
+    pub vram_gb: f64,
+}
+
+impl ColdStartProfile {
+    /// Windows 10 + RTX 3060 12 GB (Table 4 upper half).
+    pub fn rtx3060() -> ColdStartProfile {
+        ColdStartProfile {
+            platform: "RTX 3060 12GB",
+            load_intercept: 0.55,
+            disk_gbps: 1.55,
+            ttft_base: 0.032,
+            ttft_per_b: 0.038,
+            vram_gb: 12.0,
+        }
+    }
+
+    /// Linux + A40 48 GB (Table 4 lower half): slower effective load path,
+    /// much faster and size-insensitive compute.
+    pub fn a40() -> ColdStartProfile {
+        ColdStartProfile {
+            platform: "A40 48GB",
+            load_intercept: 0.48,
+            disk_gbps: 1.02,
+            ttft_base: 0.024,
+            ttft_per_b: 0.0013,
+            vram_gb: 48.0,
+        }
+    }
+
+    /// Can this platform host a model of `params_b` billion fp16 params?
+    pub fn fits(&self, params_b: f64) -> bool {
+        // fp16 weights + ~25% runtime overhead must fit in VRAM.
+        params_b * 2.0 * 1.25 <= self.vram_gb
+    }
+
+    /// Model load (cold start) time in seconds.
+    pub fn load_time(&self, params_b: f64) -> f64 {
+        self.load_intercept + params_b * 2.0 / self.disk_gbps
+    }
+
+    /// Warm TTFT for a short prompt.
+    pub fn warm_ttft(&self, params_b: f64) -> f64 {
+        self.ttft_base + self.ttft_per_b * params_b
+    }
+
+    /// First-request latency = load + warm TTFT.
+    pub fn cold_ttft(&self, params_b: f64) -> f64 {
+        self.load_time(params_b) + self.warm_ttft(params_b)
+    }
+}
+
+/// Qwen-2.5 model sizes measured in Table 4 (billions of parameters).
+pub const QWEN_SIZES_B: &[(&str, f64)] = &[
+    ("0.5B", 0.5),
+    ("1.5B", 1.5),
+    ("3B", 3.0),
+    ("7B", 7.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 4: fitted model must land near every measured cell.
+    #[test]
+    fn matches_table4_measurements() {
+        let rtx = ColdStartProfile::rtx3060();
+        let a40 = ColdStartProfile::a40();
+        // (params_b, load_s, ttft_s)
+        let rtx_rows = [(0.5, 1.29, 0.051), (1.5, 2.48, 0.105), (3.0, 4.45, 0.145)];
+        let a40_rows = [
+            (0.5, 1.53, 0.025),
+            (1.5, 3.12, 0.026),
+            (3.0, 5.72, 0.033),
+            (7.0, 13.43, 0.033),
+        ];
+        for (b, load, ttft) in rtx_rows {
+            assert!(
+                (rtx.load_time(b) - load).abs() / load < 0.15,
+                "rtx load {b}B: {} vs {load}",
+                rtx.load_time(b)
+            );
+            assert!(
+                (rtx.warm_ttft(b) - ttft).abs() < 0.03,
+                "rtx ttft {b}B: {} vs {ttft}",
+                rtx.warm_ttft(b)
+            );
+        }
+        for (b, load, ttft) in a40_rows {
+            assert!(
+                (a40.load_time(b) - load).abs() / load < 0.15,
+                "a40 load {b}B: {} vs {load}",
+                a40.load_time(b)
+            );
+            assert!(
+                (a40.warm_ttft(b) - ttft).abs() < 0.012,
+                "a40 ttft {b}B: {} vs {ttft}",
+                a40.warm_ttft(b)
+            );
+        }
+    }
+
+    /// The 7B model exceeds the RTX 3060's memory (Table 4 footnote).
+    #[test]
+    fn memory_capacity_gate() {
+        assert!(!ColdStartProfile::rtx3060().fits(7.0));
+        assert!(ColdStartProfile::rtx3060().fits(3.0));
+        assert!(ColdStartProfile::a40().fits(7.0));
+    }
+
+    /// Appendix B's headline: loading dominates cold TTFT.
+    #[test]
+    fn load_dominates_cold_start() {
+        for p in [ColdStartProfile::rtx3060(), ColdStartProfile::a40()] {
+            for (_, b) in QWEN_SIZES_B.iter().take(3) {
+                assert!(p.load_time(*b) > 10.0 * p.warm_ttft(*b));
+                assert!(p.cold_ttft(*b) > p.load_time(*b));
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Simulated on-device endpoint.
+//!
+//! Wraps a [`DeviceProfile`]: linear-in-length prefill, steady decode,
+//! FLOPs-based energy metering, and single-inference-at-a-time occupancy
+//! (the simulator serializes device work through `busy_until`).
+
+use crate::endpoint::{EndpointKind, SimEndpoint};
+use crate::profiles::device::DeviceProfile;
+use crate::util::rng::Rng;
+
+/// Device endpoint driven by a mobile (or local GPU) profile.
+#[derive(Clone, Debug)]
+pub struct DeviceEndpoint {
+    pub profile: DeviceProfile,
+}
+
+impl DeviceEndpoint {
+    pub fn new(profile: DeviceProfile) -> DeviceEndpoint {
+        DeviceEndpoint { profile }
+    }
+
+    /// FLOPs charged for a prefill of `l` tokens (energy accounting).
+    pub fn prefill_flops(&self, l: u32) -> f64 {
+        self.profile.prefill_flops(l)
+    }
+
+    /// FLOPs charged for decoding `n` tokens from context `l0`.
+    pub fn decode_flops(&self, l0: u32, n: u32) -> f64 {
+        self.profile.decode_flops(l0, n)
+    }
+}
+
+impl SimEndpoint for DeviceEndpoint {
+    fn kind(&self) -> EndpointKind {
+        EndpointKind::Device
+    }
+
+    fn sample_ttft(&self, prompt_len: u32, rng: &mut Rng) -> f64 {
+        self.profile.sample_ttft(prompt_len, rng)
+    }
+
+    fn sample_gaps(&self, _ctx: u32, n: u32, rng: &mut Rng) -> Vec<f64> {
+        self.profile.sample_gaps(n, rng)
+    }
+
+    fn decode_rate(&self) -> f64 {
+        self.profile.decode_tps
+    }
+
+    fn expected_ttft(&self, prompt_len: u32) -> f64 {
+        self.profile.ttft_expected(prompt_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_scaling() {
+        let ep = DeviceEndpoint::new(DeviceProfile::pixel7pro_bloom1b1());
+        let t100 = ep.expected_ttft(100);
+        let t200 = ep.expected_ttft(200);
+        // Slope = 1/prefill_tps exactly.
+        assert!(((t200 - t100) - 100.0 / 31.32).abs() < 1e-9);
+        assert_eq!(ep.kind(), EndpointKind::Device);
+    }
+
+    #[test]
+    fn sampled_near_expected() {
+        let ep = DeviceEndpoint::new(DeviceProfile::xiaomi14_qwen0b5());
+        let mut rng = Rng::new(8);
+        let samples: Vec<f64> = (0..500).map(|_| ep.sample_ttft(160, &mut rng)).collect();
+        let mean = crate::stats::describe::mean(&samples);
+        let exp = ep.expected_ttft(160);
+        assert!((mean - exp).abs() / exp < 0.02, "mean={mean} exp={exp}");
+    }
+
+    #[test]
+    fn energy_meters_positive() {
+        let ep = DeviceEndpoint::new(DeviceProfile::pixel7pro_bloom560m());
+        assert!(ep.prefill_flops(64) > 0.0);
+        assert!(ep.decode_flops(64, 32) > 0.0);
+    }
+}

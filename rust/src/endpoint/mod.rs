@@ -1,0 +1,61 @@
+//! Inference endpoints.
+//!
+//! An endpoint answers two questions for the simulator/scheduler:
+//! *when does the first token arrive* (prefill) and *how do subsequent
+//! tokens pace* (decode gaps). Simulated endpoints draw from calibrated
+//! profiles; the real endpoint (in [`crate::runtime`]) executes an
+//! AOT-compiled transformer via PJRT.
+
+pub mod coldstart;
+pub mod device;
+pub mod server;
+
+pub use device::DeviceEndpoint;
+pub use server::ServerEndpoint;
+
+use crate::util::rng::Rng;
+
+/// Which side of the network an endpoint lives on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EndpointKind {
+    Server,
+    Device,
+}
+
+impl std::fmt::Display for EndpointKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EndpointKind::Server => write!(f, "server"),
+            EndpointKind::Device => write!(f, "device"),
+        }
+    }
+}
+
+/// Timing model interface used by the discrete-event simulator.
+pub trait SimEndpoint {
+    fn kind(&self) -> EndpointKind;
+
+    /// Seconds from request start to first token.
+    fn sample_ttft(&self, prompt_len: u32, rng: &mut Rng) -> f64;
+
+    /// Inter-token gaps for `n` decode tokens starting at context `ctx`.
+    fn sample_gaps(&self, ctx: u32, n: u32, rng: &mut Rng) -> Vec<f64>;
+
+    /// Expected decode rate (tokens/s) — used by migration planning.
+    fn decode_rate(&self) -> f64;
+
+    /// Expected TTFT for a prompt (used by migration planning for the
+    /// re-prefill estimate). For servers this is the distribution mean.
+    fn expected_ttft(&self, prompt_len: u32) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_display() {
+        assert_eq!(EndpointKind::Server.to_string(), "server");
+        assert_eq!(EndpointKind::Device.to_string(), "device");
+    }
+}

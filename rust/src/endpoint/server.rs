@@ -1,0 +1,95 @@
+//! Simulated on-server endpoint.
+//!
+//! Wraps a [`ServerProfile`] behind the [`SimEndpoint`] interface. Server
+//! TTFT already folds in queueing, batching interference, and last-hop
+//! network latency (§2.3) — that is precisely why it is modeled as a
+//! length-independent heavy-tailed distribution rather than a mechanistic
+//! queue: the paper's dispatcher treats it as an opaque profiled CDF.
+
+use crate::endpoint::{EndpointKind, SimEndpoint};
+use crate::profiles::server::ServerProfile;
+use crate::util::rng::Rng;
+
+/// Server endpoint driven by a calibrated service profile.
+#[derive(Clone, Debug)]
+pub struct ServerEndpoint {
+    pub profile: ServerProfile,
+    /// Additional fixed last-hop RTT folded into every TTFT (seconds).
+    pub extra_rtt: f64,
+}
+
+impl ServerEndpoint {
+    pub fn new(profile: ServerProfile) -> ServerEndpoint {
+        ServerEndpoint {
+            profile,
+            extra_rtt: 0.0,
+        }
+    }
+
+    pub fn with_rtt(profile: ServerProfile, extra_rtt: f64) -> ServerEndpoint {
+        ServerEndpoint { profile, extra_rtt }
+    }
+}
+
+impl SimEndpoint for ServerEndpoint {
+    fn kind(&self) -> EndpointKind {
+        EndpointKind::Server
+    }
+
+    fn sample_ttft(&self, _prompt_len: u32, rng: &mut Rng) -> f64 {
+        // Length-independent (Table 1).
+        self.extra_rtt + self.profile.sample_ttft(rng)
+    }
+
+    fn sample_gaps(&self, _ctx: u32, n: u32, rng: &mut Rng) -> Vec<f64> {
+        self.profile.sample_gaps(n, rng)
+    }
+
+    fn decode_rate(&self) -> f64 {
+        self.profile.decode_rate()
+    }
+
+    fn expected_ttft(&self, _prompt_len: u32) -> f64 {
+        self.extra_rtt + self.profile.mean_ttft()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::corr::pearson;
+
+    #[test]
+    fn ttft_is_length_independent() {
+        let ep = ServerEndpoint::new(ServerProfile::gpt4o_mini());
+        let mut rng = Rng::new(21);
+        let lens: Vec<u32> = (0..3000).map(|_| rng.range_u64(4, 2048) as u32).collect();
+        let xs: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+        let ys: Vec<f64> = lens
+            .iter()
+            .map(|&l| ep.sample_ttft(l, &mut rng))
+            .collect();
+        let r = pearson(&xs, &ys);
+        assert!(r.abs() < 0.06, "pearson={r}, Table 1 reports ~0.02");
+    }
+
+    #[test]
+    fn extra_rtt_shifts_ttft() {
+        let base = ServerEndpoint::new(ServerProfile::command());
+        let shifted = ServerEndpoint::with_rtt(ServerProfile::command(), 0.5);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = base.sample_ttft(10, &mut r1);
+        let b = shifted.sample_ttft(10, &mut r2);
+        assert!((b - a - 0.5).abs() < 1e-12);
+        assert!((shifted.expected_ttft(10) - base.expected_ttft(10) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_count_matches_request() {
+        let ep = ServerEndpoint::new(ServerProfile::deepseek_v25());
+        let mut rng = Rng::new(2);
+        assert_eq!(ep.sample_gaps(0, 57, &mut rng).len(), 57);
+        assert_eq!(ep.kind(), EndpointKind::Server);
+    }
+}

@@ -1,0 +1,187 @@
+//! §5.3 ablations: Fig 5 (DiffusionDB sending intervals) and Fig 9
+//! (scheduler overhead scalability).
+
+use crate::coordinator::dispatch::{DeviceConstrainedPlan, ServerConstrainedPlan};
+use crate::coordinator::policy::{Policy, PolicyKind};
+use crate::cost::unified::Constraint;
+use crate::experiments::common::*;
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::stats::ecdf::Ecdf;
+use crate::stats::fit::LogNormalFit;
+use crate::trace::diffusiondb;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Fig 5: mean-TTFT reduction across DiffusionDB user activity levels
+/// (real-world request intervals × Alpaca prompts).
+///
+/// Reported in BOTH regimes: `replay` matches the paper's methodology
+/// (per-request latencies replayed independently — Fig 5's claim
+/// reproduces); `queueing` additionally models single-flight device
+/// occupancy, where the reproduction surfaces a finding the paper does
+/// not discuss: for users with sub-10 s gaps the device saturates and
+/// the advantage inverts (see EXPERIMENTS.md).
+pub fn fig5(ctx: &ExpContext) -> anyhow::Result<String> {
+    let service = ServerProfile::gpt4o_mini();
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+    let b = 0.5;
+    let per_user = (ctx.n_requests / 5).max(50);
+    let mut csv = CsvWriter::new(&[
+        "regime",
+        "user",
+        "median_gap_s",
+        "disco_mean_ttft",
+        "stoch_mean_ttft",
+        "reduction_pct",
+    ]);
+    let mut rows = Vec::new();
+    for (regime, queueing) in [("replay", false), ("queueing", true)] {
+        for user in diffusiondb::ten_users() {
+            let mut disco_means = Vec::new();
+            let mut stoch_means = Vec::new();
+            for seed in 0..ctx.n_seeds {
+                let trace = diffusiondb::user_trace(&user, per_user, seed);
+                let scenario = Scenario::new(
+                    service.clone(),
+                    device.clone(),
+                    Constraint::Server,
+                    SimConfig {
+                        seed,
+                        device_queueing: queueing,
+                        ..Default::default()
+                    },
+                );
+                let disco = make_policy(PolicyKind::DiscoS, b, false, &scenario, &trace, seed);
+                let stoch = Policy::simple(PolicyKind::StochS, b, false);
+                disco_means.push(scenario.run_report(&trace, &disco).ttft.mean);
+                stoch_means.push(scenario.run_report(&trace, &stoch).ttft.mean);
+            }
+            let dm = crate::stats::describe::mean(&disco_means);
+            let sm = crate::stats::describe::mean(&stoch_means);
+            let red = (sm - dm) / sm * 100.0;
+            csv.rowd(&[
+                regime.to_string(),
+                format!("u{}", user.user_id),
+                format!("{:.1}", user.median_gap),
+                format!("{dm:.3}"),
+                format!("{sm:.3}"),
+                format!("{red:.1}"),
+            ]);
+            rows.push(vec![
+                regime.to_string(),
+                format!("u{}", user.user_id),
+                format!("{:.1}", user.median_gap),
+                format!("{dm:.3}"),
+                format!("{sm:.3}"),
+                format!("{red:.1}%"),
+            ]);
+        }
+    }
+    csv.write(&ctx.csv_path("fig5"))?;
+    Ok(render_table(
+        &[
+            "regime",
+            "user",
+            "median gap (s)",
+            "DiSCo mean TTFT",
+            "Stoch mean TTFT",
+            "reduction",
+        ],
+        &rows,
+    ))
+}
+
+/// Fig 9: scheduler overhead — wall-clock to plan + decide over 1K/10K/
+/// 100K requests whose lengths/TTFTs follow log-normal fits of a real
+/// trace (the paper's synthetic-data methodology, §5.3).
+pub fn fig9(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["policy", "n_samples", "total_ms", "per_request_us"]);
+    let mut rows = Vec::new();
+    // Log-normal fits of a GPT trace (lengths + TTFT), per the paper.
+    let mut rng = Rng::new(99);
+    let service = ServerProfile::gpt4o_mini();
+    let ttft_fit = LogNormalFit::fit(
+        &(0..2000)
+            .map(|_| service.sample_ttft(&mut rng))
+            .collect::<Vec<_>>(),
+    );
+    let len_fit = LogNormalFit { mu: 3.0, sigma: 0.9 };
+
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let ttfts: Vec<f64> = ttft_fit.sample_n(&mut rng, 2000);
+        let lens: Vec<u32> = (0..n)
+            .map(|_| (len_fit.sample(&mut rng).round() as u32).clamp(1, 4096))
+            .collect();
+
+        // DiSCo-S: plan once (Eq. 3) + one decide per request.
+        let t0 = Instant::now();
+        let plan_s = ServerConstrainedPlan::plan(&lens, 0.5);
+        let mut acc = 0u64;
+        for &l in &lens {
+            acc += matches!(
+                plan_s.decide(l),
+                crate::coordinator::dispatch::Decision::DeviceOnly
+            ) as u64;
+        }
+        let ms_s = t0.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(acc);
+
+        // DiSCo-D: ECDF + Algorithm 2 plan + one wait lookup per request.
+        let t0 = Instant::now();
+        let ecdf = Ecdf::new(ttfts.clone());
+        let plan_d = DeviceConstrainedPlan::plan(&ecdf, &lens, 0.5, 0.05);
+        let mut acc = 0.0f64;
+        for &l in &lens {
+            acc += plan_d.wait_for(l);
+        }
+        let ms_d = t0.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(acc);
+
+        for (name, ms) in [("DiSCo-S", ms_s), ("DiSCo-D", ms_d)] {
+            csv.rowd(&[
+                name.to_string(),
+                n.to_string(),
+                format!("{ms:.3}"),
+                format!("{:.3}", ms * 1e3 / n as f64),
+            ]);
+            rows.push(vec![
+                name.to_string(),
+                n.to_string(),
+                format!("{ms:.3} ms"),
+                format!("{:.3} µs", ms * 1e3 / n as f64),
+            ]);
+        }
+    }
+    csv.write(&ctx.csv_path("fig9"))?;
+    Ok(render_table(
+        &["policy", "samples", "total time", "per request"],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_overhead_is_trivial() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_abl"),
+            n_seeds: 1,
+            n_requests: 100,
+        };
+        let out = fig9(&ctx).unwrap();
+        assert!(out.contains("DiSCo-S"));
+        // The paper's headline: ~0.1–15 ms. Parse our own CSV and check
+        // the 1K case stays under 50 ms even in debug CI noise.
+        let csv = std::fs::read_to_string(ctx.csv_path("fig9")).unwrap();
+        let line = csv.lines().find(|l| l.starts_with("DiSCo-S,1000")).unwrap();
+        let total_ms: f64 = line.split(',').nth(2).unwrap().parse().unwrap();
+        assert!(total_ms < 50.0, "1K dispatch took {total_ms} ms");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

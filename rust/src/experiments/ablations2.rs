@@ -1,0 +1,239 @@
+//! Extension ablations beyond the paper's figures — the design choices
+//! DESIGN.md calls out, each isolated with everything else held fixed:
+//!
+//! * `abl-alpha`  — Phase-1 tail-protection reservation α (§4.2)
+//! * `abl-buffer` — Eq. 5 buffer sizing (scale 0 → no masking)
+//! * `abl-rc`     — consumption-rate sensitivity of TBT/delays
+//! * `abl-smooth` — Algorithm-2 stepwise waits vs Eq. 1–2 smooth β waits
+
+use crate::coordinator::migration::MigrationConfig;
+use crate::coordinator::policy::{Policy, PolicyKind};
+use crate::cost::unified::Constraint;
+use crate::experiments::common::make_policy;
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::trace::generator::WorkloadSpec;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+fn scenario_with(constraint: Constraint, seed: u64, migration: MigrationConfig) -> Scenario {
+    Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::pixel7pro_bloom1b1(),
+        constraint,
+        SimConfig {
+            seed,
+            migration,
+            ..Default::default()
+        },
+    )
+}
+
+/// α sweep: a larger tail reservation spends more budget on w_tail
+/// protection and less on immediate device starts.
+pub fn abl_alpha(ctx: &ExpContext) -> anyhow::Result<String> {
+    let b = 0.3;
+    let mut csv = CsvWriter::new(&["alpha", "mean_ttft", "p99_ttft", "budget_frac"]);
+    let mut rows = Vec::new();
+    for alpha in [0.0, 0.02, 0.05, 0.1, 0.2] {
+        let mut means = Vec::new();
+        let mut p99s = Vec::new();
+        let mut fracs = Vec::new();
+        for seed in 0..ctx.n_seeds {
+            let sc = scenario_with(Constraint::Device, seed, MigrationConfig::default());
+            let trace = WorkloadSpec::alpaca(ctx.n_requests).generate(seed ^ 0xA1FA);
+            let ecdf = sc.profile_server_ttft(2000, seed);
+            let policy = Policy::plan_with_alpha(
+                PolicyKind::DiscoD,
+                b,
+                false,
+                &ecdf,
+                &trace.prompt_lens(),
+                alpha,
+            );
+            let r = sc.run_report(&trace, &policy);
+            means.push(r.ttft.mean);
+            p99s.push(r.ttft.p99);
+            fracs.push(r.constrained_prefill_fraction.unwrap_or(0.0));
+        }
+        let cells = vec![
+            format!("{alpha}"),
+            format!("{:.4}", crate::stats::describe::mean(&means)),
+            format!("{:.4}", crate::stats::describe::mean(&p99s)),
+            format!("{:.3}", crate::stats::describe::mean(&fracs)),
+        ];
+        csv.row(cells.clone());
+        rows.push(cells);
+    }
+    csv.write(&ctx.csv_path("abl-alpha"))?;
+    Ok(render_table(
+        &["alpha", "mean TTFT", "p99 TTFT", "budget frac"],
+        &rows,
+    ))
+}
+
+/// Eq. 5 buffer-scale ablation: under-buffering must delay tokens.
+pub fn abl_buffer(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["buffer_scale", "delay_mean", "delay_p99", "tbt_p99"]);
+    let mut rows = Vec::new();
+    for scale in [0.0, 0.5, 1.0, 2.0] {
+        let mut dmeans = Vec::new();
+        let mut dp99s = Vec::new();
+        let mut tbts = Vec::new();
+        for seed in 0..ctx.n_seeds {
+            let cfg = MigrationConfig {
+                buffer_scale: scale,
+                ..Default::default()
+            };
+            let sc = scenario_with(Constraint::Device, seed, cfg);
+            let trace = WorkloadSpec::alpaca(ctx.n_requests).generate(seed ^ 0xA1FA);
+            let policy = make_policy(PolicyKind::DiscoD, 0.6, true, &sc, &trace, seed);
+            let r = sc.run_report(&trace, &policy);
+            dmeans.push(r.delay_num_mean);
+            dp99s.push(r.delay_num_p99);
+            tbts.push(r.tbt.p99);
+        }
+        let cells = vec![
+            format!("{scale}"),
+            format!("{:.3}", crate::stats::describe::mean(&dmeans)),
+            format!("{:.3}", crate::stats::describe::mean(&dp99s)),
+            format!("{:.4}", crate::stats::describe::mean(&tbts)),
+        ];
+        csv.row(cells.clone());
+        rows.push(cells);
+    }
+    csv.write(&ctx.csv_path("abl-buffer"))?;
+    Ok(render_table(
+        &["buffer scale", "delay_num mean", "delay_num p99", "TBT p99"],
+        &rows,
+    ))
+}
+
+/// Consumption-rate sensitivity.
+pub fn abl_rc(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["r_c", "tbt_p99", "delay_mean", "migrated"]);
+    let mut rows = Vec::new();
+    for rc in [3.0, 4.0, 5.0, 8.0] {
+        let mut tbts = Vec::new();
+        let mut dmeans = Vec::new();
+        let mut migs = Vec::new();
+        for seed in 0..ctx.n_seeds {
+            let cfg = MigrationConfig {
+                consumption_rate: rc,
+                ..Default::default()
+            };
+            let sc = scenario_with(Constraint::Device, seed, cfg);
+            let trace = WorkloadSpec::alpaca(ctx.n_requests).generate(seed ^ 0xA1FA);
+            let policy = make_policy(PolicyKind::DiscoD, 0.6, true, &sc, &trace, seed);
+            let r = sc.run_report(&trace, &policy);
+            tbts.push(r.tbt.p99);
+            dmeans.push(r.delay_num_mean);
+            migs.push(r.migrated_requests as f64);
+        }
+        let cells = vec![
+            format!("{rc}"),
+            format!("{:.4}", crate::stats::describe::mean(&tbts)),
+            format!("{:.3}", crate::stats::describe::mean(&dmeans)),
+            format!("{:.0}", crate::stats::describe::mean(&migs)),
+        ];
+        csv.row(cells.clone());
+        rows.push(cells);
+    }
+    csv.write(&ctx.csv_path("abl-rc"))?;
+    Ok(render_table(
+        &["r_c (tok/s)", "TBT p99", "delay mean", "migrated/run"],
+        &rows,
+    ))
+}
+
+/// Stepwise (Algorithm 2) vs smooth (Eq. 1–2) device-constrained waits.
+pub fn abl_smooth(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["b", "policy", "mean_ttft", "p99_ttft", "budget_frac"]);
+    let mut rows = Vec::new();
+    for &b in &[0.2, 0.4, 0.6, 0.8] {
+        for kind in [PolicyKind::DiscoD, PolicyKind::DiscoDSmooth] {
+            let mut means = Vec::new();
+            let mut p99s = Vec::new();
+            let mut fracs = Vec::new();
+            for seed in 0..ctx.n_seeds {
+                let sc = scenario_with(Constraint::Device, seed, MigrationConfig::default());
+                let trace = WorkloadSpec::alpaca(ctx.n_requests).generate(seed ^ 0xA1FA);
+                let policy = make_policy(kind, b, false, &sc, &trace, seed);
+                let r = sc.run_report(&trace, &policy);
+                means.push(r.ttft.mean);
+                p99s.push(r.ttft.p99);
+                fracs.push(r.constrained_prefill_fraction.unwrap_or(0.0));
+            }
+            let cells = vec![
+                format!("{b}"),
+                kind.label().to_string(),
+                format!("{:.4}", crate::stats::describe::mean(&means)),
+                format!("{:.4}", crate::stats::describe::mean(&p99s)),
+                format!("{:.3}", crate::stats::describe::mean(&fracs)),
+            ];
+            csv.row(cells.clone());
+            rows.push(cells);
+        }
+    }
+    csv.write(&ctx.csv_path("abl-smooth"))?;
+    Ok(render_table(
+        &["b", "policy", "mean TTFT", "p99 TTFT", "budget frac"],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx(tag: &str) -> ExpContext {
+        ExpContext {
+            out_dir: std::env::temp_dir().join(format!("disco_abl_{tag}")),
+            n_seeds: 1,
+            n_requests: 150,
+        }
+    }
+
+    #[test]
+    fn buffer_ablation_shows_masking_effect() {
+        let ctx = quick_ctx("buf");
+        abl_buffer(&ctx).unwrap();
+        let csv = std::fs::read_to_string(ctx.csv_path("abl-buffer")).unwrap();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').skip(1).map(|c| c.parse().unwrap()).collect())
+            .collect();
+        // delay_num mean with no buffer (scale 0) ≥ with full buffer.
+        assert!(
+            rows[0][0] >= rows[2][0],
+            "no-buffer delays {} < full-buffer {}",
+            rows[0][0],
+            rows[2][0]
+        );
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn smooth_ablation_budget_compliance() {
+        let ctx = quick_ctx("smooth");
+        abl_smooth(&ctx).unwrap();
+        let csv = std::fs::read_to_string(ctx.csv_path("abl-smooth")).unwrap();
+        for line in csv.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            let b: f64 = cols[0].parse().unwrap();
+            let frac: f64 = cols[4].parse().unwrap();
+            assert!(frac <= b + 0.1, "line {line}");
+        }
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn alpha_ablation_runs() {
+        let ctx = quick_ctx("alpha");
+        let out = abl_alpha(&ctx).unwrap();
+        assert!(out.contains("p99"));
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

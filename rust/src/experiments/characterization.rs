@@ -1,0 +1,188 @@
+//! §3 characterization experiments: Fig 2, Fig 3, Table 1.
+
+use crate::endpoint::{DeviceEndpoint, ServerEndpoint, SimEndpoint};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::stats::corr::pearson;
+use crate::stats::describe::Summary;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+use crate::util::rng::Rng;
+
+/// Fig 2: identical prompt fired at 60 s intervals — device TTFT is
+/// stable, server TTFT spikes.
+pub fn fig2(ctx: &ExpContext) -> anyhow::Result<String> {
+    let n = 60usize;
+    let prompt_len = 64u32;
+    let mut csv = CsvWriter::new(&["setup", "sample_idx", "ttft_s"]);
+    let mut rows = Vec::new();
+
+    let servers = ServerProfile::all();
+    let devices = [
+        DeviceProfile::a40_qwen7b(),
+        DeviceProfile::rtx3080x2_llama8b(),
+    ];
+
+    for p in &servers {
+        let ep = ServerEndpoint::new(p.clone());
+        let mut rng = Rng::new(2);
+        let ttfts: Vec<f64> = (0..n).map(|_| ep.sample_ttft(prompt_len, &mut rng)).collect();
+        for (i, t) in ttfts.iter().enumerate() {
+            csv.rowd(&[format!("server/{}", p.name), i.to_string(), format!("{t:.4}")]);
+        }
+        let s = Summary::of(&ttfts);
+        rows.push(vec![
+            format!("server/{}", p.name),
+            format!("{:.3}", s.mean),
+            format!("{:.3}", s.std),
+            format!("{:.2}", s.std / s.mean),
+            format!("{:.3}", s.max),
+        ]);
+    }
+    for p in &devices {
+        let ep = DeviceEndpoint::new(p.clone());
+        let mut rng = Rng::new(3);
+        let ttfts: Vec<f64> = (0..n).map(|_| ep.sample_ttft(prompt_len, &mut rng)).collect();
+        for (i, t) in ttfts.iter().enumerate() {
+            csv.rowd(&[format!("device/{}", p.name), i.to_string(), format!("{t:.4}")]);
+        }
+        let s = Summary::of(&ttfts);
+        rows.push(vec![
+            format!("device/{}", p.name),
+            format!("{:.3}", s.mean),
+            format!("{:.3}", s.std),
+            format!("{:.2}", s.std / s.mean),
+            format!("{:.3}", s.max),
+        ]);
+    }
+    csv.write(&ctx.csv_path("fig2"))?;
+    Ok(render_table(
+        &["setup", "mean_ttft", "std", "cv", "max"],
+        &rows,
+    ))
+}
+
+/// Table 1: Pearson coefficient between prompt length and TTFT.
+pub fn table1(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["model", "deployment", "pearson", "paper_value"]);
+    let mut rows = Vec::new();
+    let paper: &[(&str, f64)] = &[
+        ("Command", 0.0142),
+        ("GPT", 0.0236),
+        ("DeepSeek", -0.0273),
+        ("LLaMA", 0.0402),
+    ];
+    let mut rng = Rng::new(11);
+    let lens: Vec<u32> = (0..ctx.n_requests)
+        .map(|_| (rng.lognormal(3.0, 0.9).round() as u32).clamp(4, 1024))
+        .collect();
+    let xs: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+
+    for p in ServerProfile::all() {
+        let ep = ServerEndpoint::new(p.clone());
+        let ys: Vec<f64> = lens.iter().map(|&l| ep.sample_ttft(l, &mut rng)).collect();
+        let r = pearson(&xs, &ys);
+        let paper_v = paper
+            .iter()
+            .find(|(n, _)| *n == p.name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0);
+        csv.rowd(&[
+            p.name.to_string(),
+            "Server".into(),
+            format!("{r:.4}"),
+            format!("{paper_v:.4}"),
+        ]);
+        rows.push(vec![
+            p.name.to_string(),
+            "Server".into(),
+            format!("{r:.4}"),
+            format!("{paper_v:.4}"),
+        ]);
+    }
+    let dev = DeviceEndpoint::new(DeviceProfile::rtx3080x2_llama8b());
+    let ys: Vec<f64> = lens.iter().map(|&l| dev.sample_ttft(l, &mut rng)).collect();
+    let r = pearson(&xs, &ys);
+    csv.rowd(&[
+        "LLaMA-3.1-8b".into(),
+        "Device".into(),
+        format!("{r:.4}"),
+        "0.8424".to_string(),
+    ]);
+    rows.push(vec![
+        "LLaMA-3.1-8b".into(),
+        "Device".into(),
+        format!("{r:.4}"),
+        "0.8424".into(),
+    ]);
+    csv.write(&ctx.csv_path("table1"))?;
+    Ok(render_table(
+        &["model", "deployment", "pearson", "paper"],
+        &rows,
+    ))
+}
+
+/// Fig 3: TBT distributions — device steady, server packetized/variable.
+pub fn fig3(ctx: &ExpContext) -> anyhow::Result<String> {
+    let mut csv = CsvWriter::new(&["setup", "mean_tbt", "p50", "p99", "zero_frac"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(21);
+    let n_tokens = 20_000u32;
+
+    let mut push = |name: String, gaps: Vec<f64>| {
+        let zero = gaps.iter().filter(|g| **g == 0.0).count() as f64 / gaps.len() as f64;
+        let s = Summary::of(&gaps);
+        let row = vec![
+            name,
+            format!("{:.4}", s.mean),
+            format!("{:.4}", s.p50),
+            format!("{:.4}", s.p99),
+            format!("{zero:.2}"),
+        ];
+        rows.push(row.clone());
+        row
+    };
+
+    for p in ServerProfile::all() {
+        let ep = ServerEndpoint::new(p.clone());
+        let gaps = ep.sample_gaps(0, n_tokens, &mut rng);
+        let row = push(format!("server/{}", p.name), gaps);
+        csv.row(row);
+    }
+    for p in [
+        DeviceProfile::a40_qwen7b(),
+        DeviceProfile::rtx3080x2_llama8b(),
+    ] {
+        let ep = DeviceEndpoint::new(p.clone());
+        let gaps = ep.sample_gaps(0, n_tokens, &mut rng);
+        let row = push(format!("device/{}", p.name), gaps);
+        csv.row(row);
+    }
+    csv.write(&ctx.csv_path("fig3"))?;
+    Ok(render_table(
+        &["setup", "mean_tbt", "p50", "p99", "zero_frac"],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn characterization_experiments_run() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_char"),
+            n_seeds: 2,
+            n_requests: 200,
+        };
+        let t1 = table1(&ctx).unwrap();
+        assert!(t1.contains("Device"));
+        let f2 = fig2(&ctx).unwrap();
+        assert!(f2.contains("server/GPT"));
+        let f3 = fig3(&ctx).unwrap();
+        assert!(f3.contains("zero_frac"));
+        assert!(ctx.csv_path("table1").exists());
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

@@ -1,0 +1,135 @@
+//! Shared sweep machinery for the evaluation experiments.
+
+use crate::coordinator::policy::{Policy, PolicyKind};
+use crate::cost::unified::Constraint;
+use crate::metrics::Report;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::trace::generator::WorkloadSpec;
+use crate::trace::Trace;
+
+/// The budget-ratio grid the sweeps use ("across the whole cost budget
+/// range", Table 2).
+pub const BUDGET_GRID: [f64; 9] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Build a policy (planning DiSCo variants from profiled distributions).
+pub fn make_policy(
+    kind: PolicyKind,
+    b: f64,
+    migration: bool,
+    scenario: &Scenario,
+    trace: &Trace,
+    seed: u64,
+) -> Policy {
+    match kind {
+        PolicyKind::DiscoS | PolicyKind::DiscoD | PolicyKind::DiscoDSmooth => {
+            let ecdf = scenario.profile_server_ttft(2000, seed);
+            Policy::plan(kind, b, migration, &ecdf, &trace.prompt_lens())
+        }
+        _ => Policy::simple(kind, b, migration),
+    }
+}
+
+/// Run one (service, device, constraint, policy, b) cell over several
+/// seeds; returns the per-seed reports.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    service: &ServerProfile,
+    device: &DeviceProfile,
+    constraint: Constraint,
+    kind: PolicyKind,
+    b: f64,
+    migration: bool,
+    n_requests: usize,
+    n_seeds: u64,
+) -> Vec<Report> {
+    (0..n_seeds)
+        .map(|seed| {
+            let scenario = Scenario::new(
+                service.clone(),
+                device.clone(),
+                constraint,
+                SimConfig {
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let trace = WorkloadSpec::alpaca(n_requests).generate(seed ^ 0xA1FA);
+            let policy = make_policy(kind, b, migration, &scenario, &trace, seed);
+            scenario.run_report(&trace, &policy)
+        })
+        .collect()
+}
+
+/// Seed-averaged mean TTFT.
+pub fn avg_mean_ttft(reports: &[Report]) -> f64 {
+    crate::stats::describe::mean(&reports.iter().map(|r| r.ttft.mean).collect::<Vec<_>>())
+}
+
+/// Seed-averaged P99 TTFT.
+pub fn avg_p99_ttft(reports: &[Report]) -> f64 {
+    crate::stats::describe::mean(&reports.iter().map(|r| r.ttft.p99).collect::<Vec<_>>())
+}
+
+/// Seed-averaged total cost.
+pub fn avg_cost(reports: &[Report], scenario_costs: &crate::cost::unified::CostParams) -> f64 {
+    crate::stats::describe::mean(
+        &reports
+            .iter()
+            .map(|r| r.total_cost(scenario_costs))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// The stochastic baseline matching a constraint.
+pub fn stoch_for(constraint: Constraint) -> PolicyKind {
+    match constraint {
+        Constraint::Server => PolicyKind::StochS,
+        Constraint::Device => PolicyKind::StochD,
+    }
+}
+
+/// The DiSCo policy matching a constraint.
+pub fn disco_for(constraint: Constraint) -> PolicyKind {
+    match constraint {
+        Constraint::Server => PolicyKind::DiscoS,
+        Constraint::Device => PolicyKind::DiscoD,
+    }
+}
+
+/// Display name for a constraint.
+pub fn constraint_name(c: Constraint) -> &'static str {
+    match c {
+        Constraint::Server => "Server",
+        Constraint::Device => "Device",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_cell_produces_seeded_reports() {
+        let reports = run_cell(
+            &ServerProfile::command(),
+            &DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Server,
+            PolicyKind::StochS,
+            0.5,
+            false,
+            100,
+            2,
+        );
+        assert_eq!(reports.len(), 2);
+        assert!(avg_mean_ttft(&reports) > 0.0);
+        assert!(avg_p99_ttft(&reports) >= avg_mean_ttft(&reports));
+    }
+
+    #[test]
+    fn helpers_map_constraints() {
+        assert_eq!(stoch_for(Constraint::Server), PolicyKind::StochS);
+        assert_eq!(disco_for(Constraint::Device), PolicyKind::DiscoD);
+        assert_eq!(constraint_name(Constraint::Server), "Server");
+    }
+}

@@ -1,0 +1,168 @@
+//! §5.2 end-to-end: Fig 6 (mean TTFT vs budget) and Table 2 (tail TTFT
+//! reduction vs stochastic dispatching).
+
+use crate::cost::unified::Constraint;
+use crate::experiments::common::*;
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// Fig 6: mean TTFT vs budget ratio, per trace × constraint × policy.
+pub fn fig6(ctx: &ExpContext) -> anyhow::Result<String> {
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+    let mut csv = CsvWriter::new(&[
+        "service",
+        "constraint",
+        "b",
+        "policy",
+        "mean_ttft",
+        "p99_ttft",
+    ]);
+    let mut rows = Vec::new();
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            let mut disco_means = Vec::new();
+            let mut stoch_means = Vec::new();
+            for &b in &BUDGET_GRID {
+                let disco = disco_for(constraint);
+                let stoch = stoch_for(constraint);
+                for kind in [disco, stoch] {
+                    let reports = run_cell(
+                        &service,
+                        &device,
+                        constraint,
+                        kind,
+                        b,
+                        false,
+                        ctx.n_requests,
+                        ctx.n_seeds,
+                    );
+                    let mean = avg_mean_ttft(&reports);
+                    if kind == disco {
+                        disco_means.push(mean);
+                    } else {
+                        stoch_means.push(mean);
+                    }
+                    csv.rowd(&[
+                        service.name.to_string(),
+                        constraint_name(constraint).to_string(),
+                        format!("{b:.1}"),
+                        kind.label().to_string(),
+                        format!("{mean:.4}"),
+                        format!("{:.4}", avg_p99_ttft(&reports)),
+                    ]);
+                }
+            }
+            // Summary row: averaged improvement across the budget grid.
+            let dm = crate::stats::describe::mean(&disco_means);
+            let sm = crate::stats::describe::mean(&stoch_means);
+            rows.push(vec![
+                service.name.to_string(),
+                constraint_name(constraint).to_string(),
+                format!("{dm:.3}"),
+                format!("{sm:.3}"),
+                format!("{:.1}%", (sm - dm) / sm * 100.0),
+            ]);
+        }
+    }
+    csv.write(&ctx.csv_path("fig6"))?;
+    Ok(render_table(
+        &[
+            "service",
+            "constraint",
+            "DiSCo mean TTFT",
+            "Stoch mean TTFT",
+            "reduction",
+        ],
+        &rows,
+    ))
+}
+
+/// Table 2: average tail-TTFT reduction vs stochastic dispatching across
+/// the whole budget range, per service × device × constraint.
+pub fn table2(ctx: &ExpContext) -> anyhow::Result<String> {
+    let devices = DeviceProfile::all_mobile();
+    let mut csv = CsvWriter::new(&[
+        "service",
+        "constraint",
+        "device",
+        "tail_reduction_pct",
+    ]);
+    let mut rows = Vec::new();
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            let mut row = vec![
+                service.name.to_string(),
+                constraint_name(constraint).to_string(),
+            ];
+            for device in &devices {
+                let mut reductions = Vec::new();
+                for &b in &BUDGET_GRID {
+                    let d = run_cell(
+                        &service,
+                        device,
+                        constraint,
+                        disco_for(constraint),
+                        b,
+                        false,
+                        ctx.n_requests,
+                        ctx.n_seeds,
+                    );
+                    let s = run_cell(
+                        &service,
+                        device,
+                        constraint,
+                        stoch_for(constraint),
+                        b,
+                        false,
+                        ctx.n_requests,
+                        ctx.n_seeds,
+                    );
+                    let (dp, sp) = (avg_p99_ttft(&d), avg_p99_ttft(&s));
+                    if sp > 0.0 {
+                        reductions.push((sp - dp) / sp * 100.0);
+                    }
+                }
+                let avg = crate::stats::describe::mean(&reductions);
+                csv.rowd(&[
+                    service.name.to_string(),
+                    constraint_name(constraint).to_string(),
+                    device.name.to_string(),
+                    format!("{avg:.2}"),
+                ]);
+                row.push(format!("{avg:.2}%"));
+            }
+            rows.push(row);
+        }
+    }
+    csv.write(&ctx.csv_path("table2"))?;
+    Ok(render_table(
+        &[
+            "service",
+            "constraint",
+            "Pixel7Pro B-1.1B",
+            "Pixel7Pro B-560M",
+            "Xiaomi14 Q-0.5B",
+        ],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_smoke() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_e2e"),
+            n_seeds: 1,
+            n_requests: 80,
+        };
+        let out = fig6(&ctx).unwrap();
+        assert!(out.contains("DiSCo"));
+        assert!(ctx.csv_path("fig6").exists());
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

@@ -1,0 +1,208 @@
+//! Experiment registry: one runner per table/figure of the paper.
+//!
+//! `disco exp <id>` (or `all`) regenerates the artifact: each runner
+//! prints the same rows/series the paper reports and writes
+//! `results/<id>.csv`. See DESIGN.md's experiment index for the mapping.
+
+pub mod ablation;
+pub mod ablations2;
+pub mod appendix;
+pub mod characterization;
+pub mod common;
+pub mod endtoend;
+pub mod migration_exp;
+pub mod quality_exp;
+
+use std::path::PathBuf;
+
+/// Shared experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    /// Output directory for CSVs (default `results/`).
+    pub out_dir: PathBuf,
+    /// Number of seeds to average over (the paper uses 10 runs).
+    pub n_seeds: u64,
+    /// Requests per trace (the paper samples 1,000).
+    pub n_requests: usize,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            out_dir: PathBuf::from("results"),
+            n_seeds: 10,
+            n_requests: 1000,
+        }
+    }
+}
+
+impl ExpContext {
+    /// Reduced-cost context for CI / smoke runs.
+    pub fn quick() -> Self {
+        ExpContext {
+            out_dir: PathBuf::from("results"),
+            n_seeds: 3,
+            n_requests: 300,
+        }
+    }
+
+    pub fn csv_path(&self, id: &str) -> PathBuf {
+        self.out_dir.join(format!("{id}.csv"))
+    }
+}
+
+/// An experiment runner entry.
+pub struct ExperimentDef {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn(&ExpContext) -> anyhow::Result<String>,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<ExperimentDef> {
+    vec![
+        ExperimentDef {
+            id: "fig2",
+            title: "Fig 2: on-device TTFT stability vs on-server spikes",
+            run: characterization::fig2,
+        },
+        ExperimentDef {
+            id: "table1",
+            title: "Table 1: Pearson(prompt length, TTFT) per deployment",
+            run: characterization::table1,
+        },
+        ExperimentDef {
+            id: "fig3",
+            title: "Fig 3: TBT stability across setups",
+            run: characterization::fig3,
+        },
+        ExperimentDef {
+            id: "fig6",
+            title: "Fig 6: mean TTFT vs budget ratio (4 traces)",
+            run: endtoend::fig6,
+        },
+        ExperimentDef {
+            id: "table2",
+            title: "Table 2: tail TTFT reduction vs stochastic dispatching",
+            run: endtoend::table2,
+        },
+        ExperimentDef {
+            id: "table3",
+            title: "Table 3: migration delay_num + TBT P99",
+            run: migration_exp::table3,
+        },
+        ExperimentDef {
+            id: "fig7",
+            title: "Fig 7: end-to-end cost with/without migration",
+            run: migration_exp::fig7,
+        },
+        ExperimentDef {
+            id: "fig5",
+            title: "Fig 5: mean TTFT reduction on DiffusionDB activity levels",
+            run: ablation::fig5,
+        },
+        ExperimentDef {
+            id: "fig8",
+            title: "Fig 8: response quality across migration points",
+            run: quality_exp::fig8,
+        },
+        ExperimentDef {
+            id: "fig9",
+            title: "Fig 9: scheduler overhead scalability",
+            run: ablation::fig9,
+        },
+        ExperimentDef {
+            id: "fig10",
+            title: "Fig 10: quality bounds (translation + instruct)",
+            run: quality_exp::fig10,
+        },
+        ExperimentDef {
+            id: "table4",
+            title: "Table 4: cold-start load time vs TTFT",
+            run: appendix::table4,
+        },
+        ExperimentDef {
+            id: "table5",
+            title: "Table 5: TTFT predictor accuracy (MAPE/MAE)",
+            run: appendix::table5,
+        },
+        ExperimentDef {
+            id: "table6",
+            title: "Table 6: prefill/decode FLOPs per token",
+            run: appendix::table6,
+        },
+        ExperimentDef {
+            id: "table7",
+            title: "Table 7: FLOPs component ratios at L=128",
+            run: appendix::table7,
+        },
+        ExperimentDef {
+            id: "table8",
+            title: "Table 8: LLM service pricing",
+            run: appendix::table8,
+        },
+        ExperimentDef {
+            id: "abl-alpha",
+            title: "Ablation: tail-protection reservation α (§4.2 Phase 1)",
+            run: ablations2::abl_alpha,
+        },
+        ExperimentDef {
+            id: "abl-buffer",
+            title: "Ablation: Eq. 5 token-buffer sizing",
+            run: ablations2::abl_buffer,
+        },
+        ExperimentDef {
+            id: "abl-rc",
+            title: "Ablation: consumption-rate sensitivity",
+            run: ablations2::abl_rc,
+        },
+        ExperimentDef {
+            id: "abl-smooth",
+            title: "Ablation: Algorithm-2 stepwise vs Eq. 1–2 smooth waits",
+            run: ablations2::abl_smooth,
+        },
+    ]
+}
+
+/// Run one experiment by id (or "all"); returns rendered output.
+pub fn run(id: &str, ctx: &ExpContext) -> anyhow::Result<String> {
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    if id == "all" {
+        let mut out = String::new();
+        for def in registry() {
+            log::info!("running {} — {}", def.id, def.title);
+            out.push_str(&format!("\n=== {} — {} ===\n", def.id, def.title));
+            out.push_str(&(def.run)(ctx)?);
+        }
+        return Ok(out);
+    }
+    let def = registry()
+        .into_iter()
+        .find(|d| d.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see `disco list`)"))?;
+    (def.run)(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let defs = registry();
+        let ids: std::collections::BTreeSet<&str> = defs.iter().map(|d| d.id).collect();
+        assert_eq!(ids.len(), defs.len());
+        for required in [
+            "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
+            "table2", "table3", "table4", "table5", "table6", "table7", "table8",
+        ] {
+            assert!(ids.contains(required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let ctx = ExpContext::quick();
+        assert!(run("nope", &ctx).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! # DiSCo — Device-Server Cooperative LLM text streaming
+//!
+//! Reproduction of *"DiSCo: Device-Server Collaborative LLM-based Text
+//! Streaming Services"* (ACL 2025 Findings) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`util`] — zero-dependency substrates (RNG, JSON, CSV, CLI, logging)
+//! - [`stats`] — distributions, descriptive statistics, ECDF, fitting
+//! - [`cost`] — unified cost model: FLOPs energy + API pricing + λ
+//! - [`profiles`] — calibrated service (server) and device models
+//! - [`trace`] — workload/trace generation and IO
+//! - [`endpoint`] — simulated + real (PJRT) inference endpoints
+//! - [`coordinator`] — the paper's contribution: dispatch + migration
+//! - [`sim`] — deterministic discrete-event simulation engine
+//! - [`metrics`] — QoE accounting (TTFT/TBT/delay_num/cost)
+//! - [`predictor`] — TTFT predictors (Appendix C)
+//! - [`quality`] — migration quality bounds (Appendix D)
+//! - [`runtime`] — PJRT bridge: load AOT HLO artifacts, run the model
+//! - [`serve`] — live thread-based serving loop over real endpoints
+//! - [`experiments`] — regenerate every table/figure of the paper
+//! - [`benchlib`] / [`proptest`] — in-repo micro-bench & property-test
+//!   harnesses (criterion/proptest are unavailable offline)
+
+pub mod benchlib;
+pub mod coordinator;
+pub mod cost;
+pub mod endpoint;
+pub mod experiments;
+pub mod metrics;
+pub mod predictor;
+pub mod profiles;
+pub mod proptest;
+pub mod quality;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod stats;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,245 @@
+//! `disco` — the DiSCo coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         list available experiments
+//!   exp <id|all> [--quick] [--seeds N] [--requests N] [--out DIR]
+//!   simulate [--service S] [--device D] [--policy P] [--b B]
+//!            [--constraint server|device] [--requests N] [--seed N]
+//!            [--migration] [--queueing] [--trace FILE]
+//!   trace-gen [--n N] [--seed N] [--out FILE] [--workload alpaca|long]
+//!   serve [--variant NAME] [--requests N] [--max-new N] [--scale X]
+//!         run the LIVE loop: real PJRT device model + emulated server
+
+use disco::coordinator::policy::PolicyKind;
+use disco::cost::unified::Constraint;
+use disco::experiments::{registry, run as run_exp, ExpContext};
+use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::engine::{Scenario, SimConfig};
+use disco::trace::generator::WorkloadSpec;
+use disco::util::cli::Args;
+
+fn main() {
+    disco::util::logging::init();
+    let args = Args::from_env(&["quick", "migration", "queueing", "help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "list" => cmd_list(),
+        "exp" => cmd_exp(&args),
+        "simulate" => cmd_simulate(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "disco — Device-Server Cooperative LLM text streaming (ACL 2025 reproduction)\n\n\
+         usage: disco <command> [options]\n\n\
+         commands:\n\
+         \x20 list        list all paper experiments\n\
+         \x20 exp <id>    regenerate a table/figure (or `all`) → results/*.csv\n\
+         \x20 simulate    run one scenario and print the QoE report\n\
+         \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
+         \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
+    );
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    for def in registry() {
+        println!("{:<8} {}", def.id, def.title);
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: disco exp <id|all>"))?;
+    let mut ctx = if args.flag("quick") {
+        ExpContext::quick()
+    } else {
+        ExpContext::default()
+    };
+    ctx.n_seeds = args.get_u64("seeds", ctx.n_seeds)?;
+    ctx.n_requests = args.get_usize("requests", ctx.n_requests)?;
+    if let Some(dir) = args.get("out") {
+        ctx.out_dir = dir.into();
+    }
+    let out = run_exp(id, &ctx)?;
+    println!("{out}");
+    println!("CSV written under {}", ctx.out_dir.display());
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "server-only" | "vllm" => PolicyKind::ServerOnly,
+        "device-only" | "llamacpp" => PolicyKind::DeviceOnly,
+        "stoch-s" => PolicyKind::StochS,
+        "stoch-d" => PolicyKind::StochD,
+        "disco-s" => PolicyKind::DiscoS,
+        "disco-d" => PolicyKind::DiscoD,
+        other => anyhow::bail!("unknown policy '{other}'"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let service = ServerProfile::by_name(args.get_or("service", "GPT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown service (GPT|LLaMA|DeepSeek|Command)"))?;
+    let device = DeviceProfile::by_name(args.get_or("device", "Pixel7Pro/B-1.1B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device profile"))?;
+    let kind = parse_policy(args.get_or("policy", "disco-s"))?;
+    let constraint = match args.get_or("constraint", "server") {
+        "device" => Constraint::Device,
+        _ => Constraint::Server,
+    };
+    let b = args.get_f64("b", 0.5)?;
+    let n = args.get_usize("requests", 1000)?;
+    let seed = args.get_u64("seed", 0)?;
+    let migration = args.flag("migration");
+
+    let scenario = Scenario::new(
+        service.clone(),
+        device.clone(),
+        constraint,
+        SimConfig {
+            seed,
+            device_queueing: args.flag("queueing"),
+            ..Default::default()
+        },
+    );
+    // Replay a recorded trace (`disco trace-gen` output) or generate one.
+    let trace = match args.get("trace") {
+        Some(path) => disco::trace::Trace::load(std::path::Path::new(path))?,
+        None => WorkloadSpec::alpaca(n).generate(seed ^ 0xA1FA),
+    };
+    let policy =
+        disco::experiments::common::make_policy(kind, b, migration, &scenario, &trace, seed);
+    let report = scenario.run_report(&trace, &policy);
+
+    println!(
+        "scenario : {} × {} ({:?}-constrained)",
+        service.name, device.name, constraint
+    );
+    println!("policy   : {} (b={b}, migration={migration})", kind.label());
+    println!("requests : {}", report.n);
+    println!(
+        "TTFT     : mean {:.3}s  p50 {:.3}s  p99 {:.3}s",
+        report.ttft.mean, report.ttft.p50, report.ttft.p99
+    );
+    println!(
+        "TBT      : mean {:.3}s  p99 {:.3}s",
+        report.tbt.mean, report.tbt.p99
+    );
+    println!(
+        "migrated : {} requests, delay_num mean {:.2} / p99 {:.2}",
+        report.migrated_requests, report.delay_num_mean, report.delay_num_p99
+    );
+    if let Some(frac) = report.constrained_prefill_fraction {
+        println!("budget   : constrained prefill fraction {frac:.3} (b = {b})");
+    }
+    println!(
+        "cost     : ${:.6} unified",
+        report.total_cost(&scenario.costs)
+    );
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1000)?;
+    let seed = args.get_u64("seed", 0)?;
+    let spec = match args.get_or("workload", "alpaca") {
+        "long" => WorkloadSpec::long_prompts(n),
+        _ => WorkloadSpec::alpaca(n),
+    };
+    let trace = spec.generate(seed);
+    let out = args.get_or("out", "trace.jsonl");
+    trace.save(std::path::Path::new(out))?;
+    println!(
+        "wrote {} requests (mean prompt {:.1} tok) to {out}",
+        trace.len(),
+        trace.mean_prompt_len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use disco::runtime::{Manifest, ModelRunner};
+    use disco::serve::{LiveConfig, LiveRequest, LiveServer};
+
+    let dir = disco::runtime::artifacts_dir();
+    let manifest =
+        Manifest::load(&dir).map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+    let variant = args.get_or("variant", "device_sm");
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let runner = ModelRunner::load(&client, manifest.variant(variant)?)?;
+
+    let n = args.get_usize("requests", 8)?;
+    let max_new = args.get_usize("max-new", 16)? as u32;
+    let scale = args.get_f64("scale", 1.0)?;
+    let server = LiveServer::new(
+        runner,
+        ServerProfile::gpt4o_mini(),
+        LiveConfig {
+            server_time_scale: scale,
+            consumption_rate: 5.0,
+            seed: args.get_u64("seed", 0)?,
+        },
+    );
+    let reqs: Vec<LiveRequest> = (0..n as u64)
+        .map(|id| LiveRequest {
+            id,
+            prompt: server
+                .runner
+                .tokenizer
+                .synthetic_prompt(8 + (id as u32 * 13) % 48, id),
+            max_new,
+        })
+        .collect();
+    let policy = disco::coordinator::policy::Policy::simple(PolicyKind::StochD, 1.0, false);
+    let t0 = std::time::Instant::now();
+    let records = server.serve(&reqs, &policy);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let ttfts: Vec<f64> = records.iter().map(|r| r.ttft).collect();
+    let s = disco::stats::describe::Summary::of(&ttfts);
+    let total_tokens: usize = records.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "served {} requests in {:.2}s ({:.1} tok/s end-to-end)",
+        records.len(),
+        wall,
+        total_tokens as f64 / wall
+    );
+    println!(
+        "TTFT: mean {:.3}s p99 {:.3}s | winners: device {} / server {}",
+        s.mean,
+        s.p99,
+        records
+            .iter()
+            .filter(|r| r.winner == disco::endpoint::EndpointKind::Device)
+            .count(),
+        records
+            .iter()
+            .filter(|r| r.winner == disco::endpoint::EndpointKind::Server)
+            .count()
+    );
+    for r in records.iter().take(3) {
+        println!(
+            "  req {}: {:?} won, ttft {:.3}s, text {:?}",
+            r.id,
+            r.winner,
+            r.ttft,
+            r.text.chars().take(40).collect::<String>()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! QoE metrics (§2.2, §5.1): TTFT, TBT, delayed-token counts, and cost.
+
+use crate::cost::unified::{Constraint, CostMeter, CostParams};
+use crate::endpoint::EndpointKind;
+use crate::stats::describe::{sorted_percentile, Summary};
+
+/// Everything measured about one request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    /// Time-to-first-token (seconds from arrival).
+    pub ttft: f64,
+    /// Perceived inter-token gaps after delivery smoothing (§4.3):
+    /// `tbts.len() == output_len − 1`.
+    pub tbts: Vec<f64>,
+    /// Tokens whose generation missed the consumption schedule (Table 3's
+    /// `delay_num`).
+    pub delay_num: u32,
+    /// Whether generation migrated endpoints mid-decode.
+    pub migrated: bool,
+    /// Endpoint that won the prefill race.
+    pub winner: EndpointKind,
+    /// Token-level cost accounting.
+    pub cost: CostMeter,
+    pub used_server: bool,
+    pub used_device: bool,
+}
+
+/// Aggregated workload report — the rows of the paper's tables.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub n: usize,
+    pub ttft: Summary,
+    /// Summary over ALL perceived inter-token gaps in the workload.
+    pub tbt: Summary,
+    /// Mean delayed tokens over migrated requests only (Table 3).
+    pub delay_num_mean: f64,
+    /// P99 of delayed tokens over migrated requests.
+    pub delay_num_p99: f64,
+    pub migrated_requests: usize,
+    pub cost: CostMeter,
+    /// Fraction of prompt tokens prefilled by the constrained endpoint
+    /// (the budget-ratio metric of §5.1).
+    pub constrained_prefill_fraction: Option<f64>,
+}
+
+impl Report {
+    pub fn from_records(records: &[RequestRecord], constraint: Option<Constraint>) -> Report {
+        let ttfts: Vec<f64> = records.iter().map(|r| r.ttft).collect();
+        let mut all_tbts: Vec<f64> = Vec::new();
+        for r in records {
+            all_tbts.extend_from_slice(&r.tbts);
+        }
+        let migrated: Vec<&RequestRecord> = records.iter().filter(|r| r.migrated).collect();
+        let mut delays: Vec<f64> = migrated.iter().map(|r| r.delay_num as f64).collect();
+        delays.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cost = CostMeter::default();
+        for r in records {
+            cost.add(&r.cost);
+        }
+        let constrained_prefill_fraction = constraint.map(|c| {
+            let total: u64 = records.iter().map(|r| r.prompt_len as u64).sum();
+            if total == 0 {
+                0.0
+            } else {
+                cost.constrained_prefill_tokens(c) as f64 / total as f64
+            }
+        });
+        Report {
+            n: records.len(),
+            ttft: Summary::of(&ttfts),
+            tbt: Summary::of(&all_tbts),
+            delay_num_mean: crate::stats::describe::mean(&delays),
+            delay_num_p99: sorted_percentile(&delays, 99.0),
+            migrated_requests: migrated.len(),
+            cost,
+            constrained_prefill_fraction,
+        }
+    }
+
+    /// Total unified cost in USD.
+    pub fn total_cost(&self, params: &CostParams) -> f64 {
+        self.cost.total_cost(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, ttft: f64, migrated: bool, delay: u32) -> RequestRecord {
+        RequestRecord {
+            id,
+            prompt_len: 50,
+            output_len: 3,
+            ttft,
+            tbts: vec![0.2, 0.25],
+            delay_num: delay,
+            migrated,
+            winner: EndpointKind::Server,
+            cost: CostMeter {
+                server_prefill_tokens: 50,
+                server_decode_tokens: 3,
+                ..Default::default()
+            },
+            used_server: true,
+            used_device: false,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let records = vec![
+            record(0, 0.5, false, 0),
+            record(1, 1.0, true, 4),
+            record(2, 1.5, true, 8),
+        ];
+        let rep = Report::from_records(&records, Some(Constraint::Server));
+        assert_eq!(rep.n, 3);
+        assert!((rep.ttft.mean - 1.0).abs() < 1e-12);
+        assert_eq!(rep.migrated_requests, 2);
+        assert!((rep.delay_num_mean - 6.0).abs() < 1e-12);
+        assert_eq!(rep.tbt.n, 6);
+        // All 150 prompt tokens went through the server.
+        assert!((rep.constrained_prefill_fraction.unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_stats_only_over_migrated() {
+        let records = vec![record(0, 0.5, false, 99), record(1, 1.0, true, 4)];
+        let rep = Report::from_records(&records, None);
+        // The non-migrated request's delay_num is excluded.
+        assert!((rep.delay_num_mean - 4.0).abs() < 1e-12);
+        assert!(rep.constrained_prefill_fraction.is_none());
+    }
+
+    #[test]
+    fn empty_report() {
+        let rep = Report::from_records(&[], Some(Constraint::Device));
+        assert_eq!(rep.n, 0);
+        assert_eq!(rep.migrated_requests, 0);
+        assert_eq!(rep.constrained_prefill_fraction, Some(0.0));
+    }
+}

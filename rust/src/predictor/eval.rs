@@ -1,0 +1,72 @@
+//! Walk-forward evaluation with the paper's Table 5 metrics (MAPE, MAE).
+
+use crate::predictor::Predictor;
+
+/// Evaluation result for one (predictor, trace) pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredEval {
+    /// Mean absolute percentage error, percent.
+    pub mape_pct: f64,
+    /// Mean absolute error (seconds).
+    pub mae: f64,
+    pub n: usize,
+}
+
+/// Fit on the first `warmup` points, then predict each subsequent point
+/// from the full preceding history (one-step-ahead walk-forward).
+pub fn evaluate(p: &mut dyn Predictor, series: &[f64], warmup: usize) -> PredEval {
+    assert!(warmup < series.len(), "warmup must leave evaluation points");
+    p.fit(&series[..warmup]);
+    let mut abs_err = 0.0;
+    let mut pct_err = 0.0;
+    let mut n = 0usize;
+    for t in warmup..series.len() {
+        let pred = p.predict_next(&series[..t]);
+        let actual = series[t];
+        abs_err += (pred - actual).abs();
+        if actual.abs() > 1e-12 {
+            pct_err += ((pred - actual) / actual).abs();
+        }
+        n += 1;
+    }
+    PredEval {
+        mape_pct: pct_err / n as f64 * 100.0,
+        mae: abs_err / n as f64,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::smoothing::MovingAverage;
+
+    #[test]
+    fn perfect_constant_series_zero_error() {
+        let series = vec![2.0; 100];
+        let mut p = MovingAverage::new(4);
+        let e = evaluate(&mut p, &series, 50);
+        assert!(e.mape_pct < 1e-9);
+        assert!(e.mae < 1e-9);
+        assert_eq!(e.n, 50);
+    }
+
+    #[test]
+    fn noisy_series_nonzero_error() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4);
+        let series: Vec<f64> = (0..500).map(|_| rng.lognormal(0.0, 0.5)).collect();
+        let mut p = MovingAverage::new(8);
+        let e = evaluate(&mut p, &series, 100);
+        // Log-normal σ=0.5 noise: predictors can't beat ~30% MAPE.
+        assert!(e.mape_pct > 20.0, "mape={}", e.mape_pct);
+        assert!(e.mae > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn warmup_must_be_less_than_len() {
+        let mut p = MovingAverage::new(2);
+        evaluate(&mut p, &[1.0, 2.0], 2);
+    }
+}

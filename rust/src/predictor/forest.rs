@@ -1,0 +1,112 @@
+//! Random forest: bagged regression trees over lag features.
+
+use crate::predictor::tree::{lag_features, RegressionTree};
+use crate::predictor::Predictor;
+use crate::util::rng::Rng;
+
+/// Bootstrap-aggregated regression trees (the paper's "Random Forest").
+pub struct RandomForest {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub lags: usize,
+    seed: u64,
+    trees: Vec<RegressionTree>,
+    fallback: f64,
+}
+
+impl RandomForest {
+    pub fn new(n_trees: usize, max_depth: usize, lags: usize, seed: u64) -> Self {
+        RandomForest {
+            n_trees,
+            max_depth,
+            lags,
+            seed,
+            trees: Vec::new(),
+            fallback: 0.0,
+        }
+    }
+}
+
+impl Predictor for RandomForest {
+    fn name(&self) -> &'static str {
+        "Random Forest"
+    }
+
+    fn fit(&mut self, history: &[f64]) {
+        self.trees.clear();
+        self.fallback = crate::stats::describe::mean(history);
+        let (x, y) = lag_features(history, self.lags);
+        if x.len() < 4 {
+            return;
+        }
+        let mut rng = Rng::new(self.seed);
+        for _ in 0..self.n_trees {
+            // Bootstrap sample.
+            let bx_by: Vec<(Vec<f64>, f64)> = (0..x.len())
+                .map(|_| {
+                    let i = rng.below(x.len() as u64) as usize;
+                    (x[i].clone(), y[i])
+                })
+                .collect();
+            let bx: Vec<Vec<f64>> = bx_by.iter().map(|(a, _)| a.clone()).collect();
+            let by: Vec<f64> = bx_by.iter().map(|(_, b)| *b).collect();
+            let mut t = RegressionTree::new(self.max_depth, 4);
+            t.fit(&bx, &by);
+            self.trees.push(t);
+        }
+    }
+
+    fn predict_next(&self, history: &[f64]) -> f64 {
+        if self.trees.is_empty() || history.len() < self.lags {
+            return if history.is_empty() {
+                self.fallback
+            } else {
+                crate::stats::describe::mean(history)
+            };
+        }
+        let row = &history[history.len() - self.lags..];
+        let sum: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
+        sum / self.trees.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_autoregressive_pattern() {
+        // x_t = 0.9·x_{t-1}: the forest should predict a value close to
+        // 0.9 times the last observation.
+        let mut series = vec![10.0];
+        for _ in 0..400 {
+            series.push(series.last().unwrap() * 0.9 + 0.5);
+        }
+        let mut rf = RandomForest::new(10, 4, 4, 1);
+        rf.fit(&series);
+        let pred = rf.predict_next(&series);
+        let expected = series.last().unwrap() * 0.9 + 0.5;
+        assert!(
+            (pred - expected).abs() < 0.5,
+            "pred={pred} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn short_history_falls_back_to_mean() {
+        let mut rf = RandomForest::new(5, 3, 8, 2);
+        rf.fit(&[1.0, 2.0, 3.0]);
+        let p = rf.predict_next(&[4.0, 6.0]);
+        assert!((p - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let series: Vec<f64> = (0..200).map(|i| ((i * 7) % 13) as f64).collect();
+        let mut a = RandomForest::new(8, 4, 4, 7);
+        let mut b = RandomForest::new(8, 4, 4, 7);
+        a.fit(&series);
+        b.fit(&series);
+        assert_eq!(a.predict_next(&series), b.predict_next(&series));
+    }
+}

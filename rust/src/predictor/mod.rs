@@ -1,0 +1,36 @@
+//! TTFT predictors (Appendix C, Table 5).
+//!
+//! The paper evaluates four lightweight time-series predictors on server
+//! TTFT traces and shows none reaches useful accuracy (MAPE ≥ 20%) — the
+//! negative result motivating DiSCo's distribution-based planning instead
+//! of point prediction. All four are implemented from scratch here
+//! (moving average, exponential smoothing, random forest, gradient-boosted
+//! trees) plus the walk-forward MAPE/MAE evaluation harness.
+
+pub mod eval;
+pub mod forest;
+pub mod gbdt;
+pub mod smoothing;
+pub mod tree;
+
+pub use eval::{evaluate, PredEval};
+
+/// A one-step-ahead time-series predictor.
+pub trait Predictor {
+    fn name(&self) -> &'static str;
+    /// Fit on an initial history (walk-forward evaluation refits never —
+    /// matching lightweight on-device deployment).
+    fn fit(&mut self, history: &[f64]);
+    /// Predict the next value given everything observed so far.
+    fn predict_next(&self, history: &[f64]) -> f64;
+}
+
+/// The paper's four predictors with their Table 5 configurations.
+pub fn table5_predictors() -> Vec<Box<dyn Predictor>> {
+    vec![
+        Box::new(smoothing::MovingAverage::new(8)),
+        Box::new(smoothing::ExponentialSmoothing::new(0.3)),
+        Box::new(forest::RandomForest::new(20, 4, 8, 0x5EED)),
+        Box::new(gbdt::Gbdt::new(40, 3, 0.1, 8)),
+    ]
+}

@@ -1,0 +1,91 @@
+//! Moving-average and exponential-smoothing predictors.
+
+use crate::predictor::Predictor;
+
+/// Mean of the last `window` observations.
+#[derive(Clone, Debug)]
+pub struct MovingAverage {
+    pub window: usize,
+}
+
+impl MovingAverage {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingAverage { window }
+    }
+}
+
+impl Predictor for MovingAverage {
+    fn name(&self) -> &'static str {
+        "Moving Average"
+    }
+    fn fit(&mut self, _history: &[f64]) {}
+    fn predict_next(&self, history: &[f64]) -> f64 {
+        if history.is_empty() {
+            return 0.0;
+        }
+        let start = history.len().saturating_sub(self.window);
+        crate::stats::describe::mean(&history[start..])
+    }
+}
+
+/// Simple exponential smoothing: s_t = γ·x_t + (1−γ)·s_{t−1}.
+#[derive(Clone, Debug)]
+pub struct ExponentialSmoothing {
+    pub gamma: f64,
+}
+
+impl ExponentialSmoothing {
+    pub fn new(gamma: f64) -> Self {
+        assert!((0.0..=1.0).contains(&gamma));
+        ExponentialSmoothing { gamma }
+    }
+}
+
+impl Predictor for ExponentialSmoothing {
+    fn name(&self) -> &'static str {
+        "ExponentialSmoothing"
+    }
+    fn fit(&mut self, _history: &[f64]) {}
+    fn predict_next(&self, history: &[f64]) -> f64 {
+        let mut s = match history.first() {
+            Some(&x) => x,
+            None => return 0.0,
+        };
+        for &x in &history[1..] {
+            s = self.gamma * x + (1.0 - self.gamma) * s;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ma_of_constant_is_constant() {
+        let ma = MovingAverage::new(4);
+        assert_eq!(ma.predict_next(&[2.0; 10]), 2.0);
+        assert_eq!(ma.predict_next(&[]), 0.0);
+    }
+
+    #[test]
+    fn ma_uses_only_window() {
+        let ma = MovingAverage::new(2);
+        // Last two values are 10, 20.
+        assert!((ma.predict_next(&[1000.0, 10.0, 20.0]) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn es_converges_to_level() {
+        let es = ExponentialSmoothing::new(0.5);
+        let hist = vec![4.0; 50];
+        assert!((es.predict_next(&hist) - 4.0).abs() < 1e-9);
+        // Step change tracks toward the new level.
+        let mut hist = vec![0.0; 10];
+        hist.extend(vec![10.0; 10]);
+        let p = es.predict_next(&hist);
+        assert!(p > 9.0 && p <= 10.0, "p={p}");
+    }
+}

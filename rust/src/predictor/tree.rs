@@ -1,0 +1,191 @@
+//! CART-style regression tree on lag features — the building block for
+//! the random forest and GBDT predictors.
+
+/// A binary regression tree (greedy variance-reduction splits).
+#[derive(Clone, Debug)]
+pub struct RegressionTree {
+    pub max_depth: usize,
+    pub min_samples: usize,
+    nodes: Vec<Node>,
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+impl RegressionTree {
+    pub fn new(max_depth: usize, min_samples: usize) -> Self {
+        RegressionTree {
+            max_depth,
+            min_samples: min_samples.max(2),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Fit on rows `x` (each a feature vector) with targets `y`.
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.nodes.clear();
+        if x.is_empty() {
+            self.nodes.push(Node::Leaf { value: 0.0 });
+            return;
+        }
+        let idx: Vec<usize> = (0..x.len()).collect();
+        self.build(x, y, idx, 0);
+    }
+
+    fn build(&mut self, x: &[Vec<f64>], y: &[f64], idx: Vec<usize>, depth: usize) -> usize {
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        if depth >= self.max_depth || idx.len() < self.min_samples {
+            self.nodes.push(Node::Leaf { value: mean });
+            return self.nodes.len() - 1;
+        }
+        // Greedy best split by SSE reduction.
+        let n_features = x[idx[0]].len();
+        let parent_sse: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, sse)
+        for f in 0..n_features {
+            let mut vals: Vec<(f64, f64)> = idx.iter().map(|&i| (x[i][f], y[i])).collect();
+            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // Prefix sums for O(n) split scan.
+            let total_sum: f64 = vals.iter().map(|v| v.1).sum();
+            let total_sq: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+            let mut lsum = 0.0;
+            let mut lsq = 0.0;
+            for k in 0..vals.len() - 1 {
+                lsum += vals[k].1;
+                lsq += vals[k].1 * vals[k].1;
+                if vals[k].0 == vals[k + 1].0 {
+                    continue; // can't split between equal values
+                }
+                let nl = (k + 1) as f64;
+                let nr = (vals.len() - k - 1) as f64;
+                let sse_l = lsq - lsum * lsum / nl;
+                let rsum = total_sum - lsum;
+                let sse_r = (total_sq - lsq) - rsum * rsum / nr;
+                let sse = sse_l + sse_r;
+                if best.map(|(_, _, b)| sse < b).unwrap_or(sse < parent_sse - 1e-12) {
+                    best = Some((f, (vals[k].0 + vals[k + 1].0) / 2.0, sse));
+                }
+            }
+        }
+        match best {
+            None => {
+                self.nodes.push(Node::Leaf { value: mean });
+                self.nodes.len() - 1
+            }
+            Some((feature, threshold, _)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.into_iter().partition(|&i| x[i][feature] <= threshold);
+                let placeholder = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: mean }); // replaced below
+                let left = self.build(x, y, li, depth + 1);
+                let right = self.build(x, y, ri, depth + 1);
+                self.nodes[placeholder] = Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                };
+                placeholder
+            }
+        }
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    i = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// Build lag-feature rows from a series: row t = [x_{t-k}..x_{t-1}],
+/// target x_t.
+pub fn lag_features(series: &[f64], lags: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for t in lags..series.len() {
+        xs.push(series[t - lags..t].to_vec());
+        ys.push(series[t]);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_step_function() {
+        // y = 1 if x > 0.5 else 0 — one split suffices.
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| if r[0] > 0.5 { 1.0 } else { 0.0 }).collect();
+        let mut t = RegressionTree::new(3, 2);
+        t.fit(&x, &y);
+        assert!(t.predict(&[0.1]) < 0.1);
+        assert!(t.predict(&[0.9]) > 0.9);
+    }
+
+    #[test]
+    fn deeper_tree_fits_xor_grid() {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..10 {
+            for b in 0..10 {
+                let (fa, fb) = (a as f64 / 10.0, b as f64 / 10.0);
+                x.push(vec![fa, fb]);
+                y.push(if (fa > 0.5) ^ (fb > 0.5) { 1.0 } else { 0.0 });
+            }
+        }
+        let mut t = RegressionTree::new(4, 2);
+        t.fit(&x, &y);
+        assert!(t.predict(&[0.9, 0.1]) > 0.8);
+        assert!(t.predict(&[0.9, 0.9]) < 0.2);
+    }
+
+    #[test]
+    fn constant_target_is_leaf() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![3.0; 10];
+        let mut t = RegressionTree::new(5, 2);
+        t.fit(&x, &y);
+        assert_eq!(t.predict(&[4.2]), 3.0);
+    }
+
+    #[test]
+    fn empty_fit_predicts_zero() {
+        let mut t = RegressionTree::new(3, 2);
+        t.fit(&[], &[]);
+        assert_eq!(t.predict(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn lag_features_shapes() {
+        let series = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let (x, y) = lag_features(&series, 2);
+        assert_eq!(x.len(), 3);
+        assert_eq!(x[0], vec![1.0, 2.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Calibrated endpoint profiles.
+//!
+//! The paper's testbed (live commercial APIs, physical phones) is not
+//! reachable here; these profiles are stochastic models calibrated to the
+//! statistics the paper itself publishes (§3 Figures 2–3, Table 1, Table 5
+//! MAE/MAPE, §5.1 device speeds). See DESIGN.md §Substitutions.
+
+pub mod device;
+pub mod server;
+
+pub use device::DeviceProfile;
+pub use server::ServerProfile;

@@ -1,0 +1,94 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random inputs; on failure it reports
+//! the failing case number and seed so the case can be replayed
+//! deterministically. Shrinking is out of scope — failures carry the full
+//! generated input via `Debug` formatting instead.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with DISCO_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("DISCO_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen` from a seeded RNG.
+/// Panics (test failure) with seed + case context when the property fails.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base_seed = 0xD15C0u64;
+    for case in 0..cases {
+        let mut rng =
+            Rng::new(base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases}\n  input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0usize;
+        check(
+            "addition-commutes",
+            64,
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            |&(a, b)| {
+                n += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            8,
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check(
+            "macro-works",
+            16,
+            |r| r.f64(),
+            |&x| {
+                prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+                Ok(())
+            },
+        );
+    }
+}

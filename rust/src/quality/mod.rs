@@ -1,0 +1,188 @@
+//! Response-quality model under migration (Appendix D, Figs. 8 & 10).
+//!
+//! Appendix D.1 proves the bound (Eq. 6): a migrated sequence's quality
+//! lies between the two endpoints' individual qualities,
+//! `min(Q_A, Q_B) ≤ Q_M ≤ max(Q_A, Q_B)`. The paper's Figure 8/10
+//! evaluation (LLM judges are unreachable offline — see DESIGN.md) is
+//! reproduced by the bound's implied model: migrated quality is a
+//! position-weighted mixture of endpoint qualities plus per-judge
+//! observation noise, clamped to the bound.
+
+use crate::util::rng::Rng;
+
+/// A model endpoint's intrinsic quality on a task family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelQuality {
+    pub name: &'static str,
+    /// Mean judge score on instruction following (1–10 scale; the paper
+    /// observes 4–6 for 0.5B–7B models).
+    pub instruct_score: f64,
+    /// Mean ROUGE-1 on zho→eng translation (paper band: 0.23–0.26).
+    pub rouge1: f64,
+}
+
+/// Qwen-2.5 model family qualities (calibrated to Appendix D's observed
+/// ranges: larger models better, all within the reported bands).
+pub fn qwen(size_b: f64) -> ModelQuality {
+    // Smooth log-scaling through the reported 4–6 band.
+    let instruct = 4.2 + 0.75 * (size_b.max(0.1)).ln_1p();
+    let rouge = 0.232 + 0.012 * (size_b.max(0.1)).ln_1p();
+    let name = match size_b {
+        s if s < 1.0 => "Qwen-0.5B",
+        s if s < 4.0 => "Qwen-3B",
+        _ => "Qwen-7B",
+    };
+    ModelQuality {
+        name,
+        instruct_score: instruct.min(6.0),
+        rouge1: rouge.min(0.26),
+    }
+}
+
+/// An LLM judge with its own bias and dispersion.
+#[derive(Clone, Copy, Debug)]
+pub struct Judge {
+    pub name: &'static str,
+    pub bias: f64,
+    pub noise: f64,
+}
+
+/// The paper's three judges (GPT-4o, Gemini-1.5-pro, Qwen-2.5-72b).
+pub fn judges() -> [Judge; 3] {
+    [
+        Judge {
+            name: "GPT-4o",
+            bias: 0.0,
+            noise: 0.25,
+        },
+        Judge {
+            name: "Gemini1.5-pro",
+            bias: -0.15,
+            noise: 0.30,
+        },
+        Judge {
+            name: "QWen2.5-72b",
+            bias: 0.20,
+            noise: 0.35,
+        },
+    ]
+}
+
+/// Eq. 6: clamp a migrated-sequence quality into the endpoint bound.
+pub fn quality_bound(q_a: f64, q_b: f64, q_m: f64) -> f64 {
+    q_m.clamp(q_a.min(q_b), q_a.max(q_b))
+}
+
+/// Expected quality of a sequence whose first `first_len` of `total_len`
+/// tokens came from endpoint A and the rest from endpoint B — the
+/// position-weighted mixture implied by the bound's derivation.
+pub fn migrated_quality(q_a: f64, q_b: f64, first_len: u32, total_len: u32) -> f64 {
+    assert!(total_len > 0);
+    let w = (first_len.min(total_len)) as f64 / total_len as f64;
+    let mixed = w * q_a + (1.0 - w) * q_b;
+    quality_bound(q_a, q_b, mixed)
+}
+
+/// One judged observation of a migrated generation (Fig. 8 data point).
+pub fn judge_score(
+    judge: &Judge,
+    q_a: f64,
+    q_b: f64,
+    first_len: u32,
+    total_len: u32,
+    rng: &mut Rng,
+) -> f64 {
+    let q = migrated_quality(q_a, q_b, first_len, total_len);
+    (q + judge.bias + judge.noise * rng.normal()).clamp(1.0, 10.0)
+}
+
+/// ROUGE-1 observation for the translation task (Fig. 10 top panel).
+pub fn rouge_score(
+    q_a: &ModelQuality,
+    q_b: &ModelQuality,
+    first_len: u32,
+    total_len: u32,
+    rng: &mut Rng,
+) -> f64 {
+    let q = migrated_quality(q_a.rouge1, q_b.rouge1, first_len, total_len);
+    (q + 0.004 * rng.normal()).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_clamps_both_sides() {
+        assert_eq!(quality_bound(4.0, 6.0, 7.0), 6.0);
+        assert_eq!(quality_bound(4.0, 6.0, 3.0), 4.0);
+        assert_eq!(quality_bound(6.0, 4.0, 5.0), 5.0);
+    }
+
+    #[test]
+    fn migrated_quality_endpoints() {
+        // first_len = 0 ⇒ pure B; first_len = total ⇒ pure A.
+        assert_eq!(migrated_quality(4.0, 6.0, 0, 100), 6.0);
+        assert_eq!(migrated_quality(4.0, 6.0, 100, 100), 4.0);
+        let mid = migrated_quality(4.0, 6.0, 50, 100);
+        assert!((mid - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_eq6_always_holds() {
+        crate::proptest::check(
+            "quality-bound-eq6",
+            256,
+            |r| {
+                let qa = 1.0 + r.f64() * 9.0;
+                let qb = 1.0 + r.f64() * 9.0;
+                let total = 1 + r.below(256) as u32;
+                let first = r.below(total as u64 + 1) as u32;
+                (qa, qb, first, total)
+            },
+            |&(qa, qb, first, total)| {
+                let qm = migrated_quality(qa, qb, first, total);
+                crate::prop_assert!(
+                    qm >= qa.min(qb) - 1e-12 && qm <= qa.max(qb) + 1e-12,
+                    "Eq.6 violated: qa={qa} qb={qb} qm={qm}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn qwen_family_monotone_in_size() {
+        let q05 = qwen(0.5);
+        let q3 = qwen(3.0);
+        let q7 = qwen(7.0);
+        assert!(q05.instruct_score < q3.instruct_score);
+        assert!(q3.instruct_score < q7.instruct_score);
+        // Paper's bands: scores in 4–6, ROUGE in 0.23–0.26.
+        for q in [q05, q3, q7] {
+            assert!((4.0..=6.0).contains(&q.instruct_score), "{q:?}");
+            assert!((0.23..=0.26).contains(&q.rouge1), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn judge_scores_stay_on_scale() {
+        let mut rng = Rng::new(5);
+        let [j1, _, _] = judges();
+        for _ in 0..500 {
+            let s = judge_score(&j1, 4.5, 5.5, 16, 256, &mut rng);
+            assert!((1.0..=10.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn rouge_band_preserved() {
+        let mut rng = Rng::new(6);
+        let a = qwen(0.5);
+        let b = qwen(7.0);
+        for first in [0u32, 4, 16, 64, 256] {
+            let s = rouge_score(&a, &b, first, 256, &mut rng);
+            assert!((0.2..=0.28).contains(&s), "first={first} s={s}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Artifact manifest: the ABI between `python/compile/aot.py` and the
+//! Rust runtime (model shapes, parameter layout, file names).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor's layout within the params blob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct VariantManifest {
+    pub name: String,
+    /// Weights baked into the HLO as constants (no param args at runtime).
+    pub baked_params: bool,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub prefill_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+    pub params_bin: PathBuf,
+}
+
+/// The whole artifacts bundle.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub vocab: usize,
+    pub variants: Vec<VariantManifest>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
+        let v = Json::parse(&text)?;
+        anyhow::ensure!(
+            v.req_f64("format")? as u32 == 1,
+            "unsupported manifest format"
+        );
+        let mut variants = Vec::new();
+        for entry in v
+            .get("variants")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants"))?
+        {
+            let params = entry
+                .get("params")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("variant missing params"))?
+                .iter()
+                .map(|p| -> anyhow::Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.req_str("name")?.to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                            .collect(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            variants.push(VariantManifest {
+                name: entry.req_str("name")?.to_string(),
+                baked_params: entry
+                    .get("baked_params")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                n_layers: entry.req_f64("n_layers")? as usize,
+                d_model: entry.req_f64("d_model")? as usize,
+                n_heads: entry.req_f64("n_heads")? as usize,
+                d_ff: entry.req_f64("d_ff")? as usize,
+                max_seq: entry.req_f64("max_seq")? as usize,
+                vocab: entry.req_f64("vocab")? as usize,
+                head_dim: entry.req_f64("head_dim")? as usize,
+                param_count: entry.req_f64("param_count")? as usize,
+                params,
+                prefill_hlo: dir.join(entry.req_str("prefill_hlo")?),
+                decode_hlo: dir.join(entry.req_str("decode_hlo")?),
+                params_bin: dir.join(entry.req_str("params_bin")?),
+            });
+        }
+        Ok(Manifest {
+            bos_id: v.req_f64("bos_id")? as u32,
+            eos_id: v.req_f64("eos_id")? as u32,
+            vocab: v.req_f64("vocab")? as usize,
+            variants,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&VariantManifest> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow::anyhow!("variant '{name}' not in manifest"))
+    }
+}
+
+impl VariantManifest {
+    /// Read the parameter blob, split per tensor (validates sizes).
+    pub fn load_params(&self) -> anyhow::Result<Vec<(ParamSpec, Vec<f32>)>> {
+        let bytes = std::fs::read(&self.params_bin)?;
+        anyhow::ensure!(
+            bytes.len() == self.param_count * 4,
+            "params blob {} has {} bytes, expected {}",
+            self.params_bin.display(),
+            bytes.len(),
+            self.param_count * 4
+        );
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut offset = 0usize;
+        for spec in &self.params {
+            let n = spec.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(offset + i) * 4..(offset + i) * 4 + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            offset += n;
+            out.push((spec.clone(), data));
+        }
+        anyhow::ensure!(offset == self.param_count, "param layout mismatch");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("disco_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+          "format": 1, "bos_id": 256, "eos_id": 257, "vocab": 512,
+          "variants": [{
+            "name": "t", "n_layers": 1, "d_model": 4, "n_heads": 2,
+            "d_ff": 8, "max_seq": 8, "vocab": 512, "head_dim": 2,
+            "seed": 0, "param_count": 6,
+            "params": [
+              {"name": "a", "shape": [2, 2]},
+              {"name": "b", "shape": [2]}
+            ],
+            "prefill_hlo": "t.prefill.hlo.txt",
+            "decode_hlo": "t.decode.hlo.txt",
+            "params_bin": "t.params.bin"
+          }]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.params.bin"), bytes).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_and_split_params() {
+        let dir = fake_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bos_id, 256);
+        let v = m.variant("t").unwrap();
+        assert_eq!(v.params.len(), 2);
+        let params = v.load_params().unwrap();
+        assert_eq!(params[0].1, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(params[1].1, vec![5.0, 6.0]);
+        assert!(m.variant("missing").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn wrong_blob_size_rejected() {
+        let dir = fake_manifest_dir();
+        std::fs::write(dir.join("t.params.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variant("t").unwrap().load_params().is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variant("device_sm").is_ok());
+        let v = m.variant("device_sm").unwrap();
+        let params = v.load_params().unwrap();
+        let total: usize = params.iter().map(|(s, _)| s.numel()).sum();
+        assert_eq!(total, v.param_count);
+    }
+}

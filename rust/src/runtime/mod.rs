@@ -1,0 +1,44 @@
+//! PJRT runtime bridge — the only place Rust touches XLA.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` (HLO text +
+//! parameter blobs + manifest), compiles them once on the PJRT CPU client,
+//! and exposes a token-streaming [`model_runner::ModelRunner`]. Python
+//! never runs on this path: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod manifest;
+pub mod model_runner;
+pub mod tokenizer;
+
+pub use manifest::{Manifest, VariantManifest};
+pub use model_runner::{GenEvent, GenResult, ModelRunner};
+pub use tokenizer::ByteTokenizer;
+
+use std::path::Path;
+
+/// Compile an HLO-text file on a PJRT client.
+///
+/// HLO *text* is the interchange format: xla_extension 0.5.1 rejects
+/// jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+/// reassigns ids (see /opt/xla-example/README.md).
+pub fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+/// Default artifacts directory: `$DISCO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DISCO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,95 @@
+//! Byte-level tokenizer matching `python/compile/model.py`'s vocabulary:
+//! ids 0–255 are raw bytes, 256 = BOS, 257 = EOS, table padded to 512.
+
+/// Byte tokenizer (stateless).
+#[derive(Clone, Copy, Debug)]
+pub struct ByteTokenizer {
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub vocab: usize,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer {
+            bos_id: 256,
+            eos_id: 257,
+            vocab: 512,
+        }
+    }
+}
+
+impl ByteTokenizer {
+    /// Encode text as BOS + bytes (no EOS — generation appends it).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos_id);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode token ids back to text (specials and invalid UTF-8 are
+    /// rendered lossily).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// A deterministic synthetic prompt with exactly `len` tokens —
+    /// used by workload drivers that only care about token counts.
+    pub fn synthetic_prompt(&self, len: u32, seed: u64) -> Vec<u32> {
+        let mut state = seed | 1;
+        let mut out = Vec::with_capacity(len as usize);
+        out.push(self.bos_id);
+        for _ in 1..len {
+            // Printable ASCII bytes keep decode() readable.
+            let b = 32 + (crate::util::rng::splitmix64(&mut state) % 95) as u32;
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::default();
+        let ids = t.encode("hello, DiSCo!");
+        assert_eq!(ids[0], 256);
+        assert_eq!(ids.len(), 14);
+        assert_eq!(t.decode(&ids), "hello, DiSCo!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::default();
+        let s = "héllo ∆";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_are_skipped_on_decode() {
+        let t = ByteTokenizer::default();
+        assert_eq!(t.decode(&[256, 104, 105, 257]), "hi");
+    }
+
+    #[test]
+    fn synthetic_prompt_len_and_determinism() {
+        let t = ByteTokenizer::default();
+        let a = t.synthetic_prompt(40, 9);
+        let b = t.synthetic_prompt(40, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 40);
+        assert_eq!(a[0], t.bos_id);
+        assert!(a[1..].iter().all(|&x| (32..127).contains(&x)));
+        let c = t.synthetic_prompt(40, 10);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,373 @@
+//! Live serving loop: the coordinator over a REAL device endpoint.
+//!
+//! The device endpoint executes the AOT-compiled transformer through PJRT
+//! (`runtime::ModelRunner`); the server endpoint is emulated in wall-clock
+//! time from a calibrated service profile (no network offline). Both race
+//! per the dispatch decision exactly as in simulation — first token wins,
+//! the loser is cooperatively cancelled — proving the three layers
+//! compose on a real request path.
+//!
+//! Threading note: the `xla` crate's handles are not `Send` (internal
+//! `Rc`s), so the real model runs on the coordinator thread while the
+//! emulated server runs on a spawned thread; the race is resolved by
+//! first-token timestamps, and the device cancels cooperatively through
+//! its streaming callback. tokio is unavailable offline; this is plain
+//! threads + channels.
+
+use crate::coordinator::dispatch::Decision;
+use crate::coordinator::policy::Policy;
+use crate::endpoint::EndpointKind;
+use crate::profiles::server::ServerProfile;
+use crate::runtime::model_runner::ModelRunner;
+use crate::sim::delivery;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One live request.
+#[derive(Clone, Debug)]
+pub struct LiveRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: u32,
+}
+
+/// Measured outcome of one live request.
+#[derive(Clone, Debug)]
+pub struct LiveRecord {
+    pub id: u64,
+    pub prompt_len: u32,
+    pub winner: EndpointKind,
+    /// Wall-clock TTFT (seconds).
+    pub ttft: f64,
+    /// Raw generation gaps from the winning endpoint.
+    pub gaps: Vec<f64>,
+    /// Perceived TBTs after delivery smoothing.
+    pub tbts: Vec<f64>,
+    pub delay_num: u32,
+    pub tokens: Vec<u32>,
+    /// Decoded text (device tokens are real model output).
+    pub text: String,
+}
+
+/// Live loop configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveConfig {
+    /// Wall-clock scale on the *emulated server* latencies (<1 speeds up
+    /// demos without touching real device compute).
+    pub server_time_scale: f64,
+    /// Consumption rate for delivery smoothing (unscaled).
+    pub consumption_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            server_time_scale: 1.0,
+            consumption_rate: 5.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Timestamped token from the emulated server.
+#[derive(Clone, Copy, Debug)]
+struct ServerToken {
+    token: u32,
+    at: f64,
+}
+
+/// The live coordinator.
+pub struct LiveServer {
+    pub runner: ModelRunner,
+    pub server_profile: ServerProfile,
+    pub config: LiveConfig,
+}
+
+impl LiveServer {
+    pub fn new(runner: ModelRunner, server_profile: ServerProfile, config: LiveConfig) -> Self {
+        LiveServer {
+            runner,
+            server_profile,
+            config,
+        }
+    }
+
+    /// Serve a batch of requests sequentially (the device is single-flight
+    /// hardware; concurrency happens *within* a request via the race).
+    pub fn serve(&self, requests: &[LiveRequest], policy: &Policy) -> Vec<LiveRecord> {
+        let mut rng = Rng::new(self.config.seed);
+        requests
+            .iter()
+            .map(|r| self.serve_one(r, policy, &mut rng))
+            .collect()
+    }
+
+    fn spawn_server(
+        &self,
+        max_new: u32,
+        rng: &mut Rng,
+        t0: Instant,
+        cancel: Arc<AtomicBool>,
+    ) -> Receiver<ServerToken> {
+        let (tx, rx) = mpsc::channel::<ServerToken>();
+        let profile = self.server_profile.clone();
+        let scale = self.config.server_time_scale;
+        let mut srng = rng.fork(0x5e);
+        std::thread::spawn(move || {
+            let ttft = profile.sample_ttft(&mut srng) * scale;
+            sleep_unless(ttft, &cancel);
+            if cancel.load(Ordering::Relaxed) {
+                return;
+            }
+            // Emulated content: printable bytes (not model output).
+            let _ = tx.send(ServerToken {
+                token: 32 + (srng.below(95) as u32),
+                at: t0.elapsed().as_secs_f64(),
+            });
+            let mut emitted = 1u32;
+            for gap in profile.sample_gaps(max_new.saturating_sub(1), &mut srng) {
+                sleep_unless(gap * scale, &cancel);
+                if cancel.load(Ordering::Relaxed) {
+                    return;
+                }
+                if tx
+                    .send(ServerToken {
+                        token: 32 + (srng.below(95) as u32),
+                        at: t0.elapsed().as_secs_f64(),
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                emitted += 1;
+                if emitted >= max_new {
+                    return;
+                }
+            }
+        });
+        rx
+    }
+
+    fn serve_one(&self, req: &LiveRequest, policy: &Policy, rng: &mut Rng) -> LiveRecord {
+        let decision = policy.decide(req.prompt.len() as u32, rng);
+        let t0 = Instant::now();
+        let cancel_server = Arc::new(AtomicBool::new(false));
+        let scale = self.config.server_time_scale;
+
+        let server_rx = if decision.uses_server() {
+            Some(self.spawn_server(req.max_new, rng, t0, cancel_server.clone()))
+        } else {
+            None
+        };
+
+        let device_wait = match decision {
+            Decision::DeviceOnly => 0.0,
+            Decision::ServerOnly => f64::INFINITY,
+            Decision::Both { device_wait } => device_wait,
+        };
+        let use_device = decision.uses_device() && device_wait.is_finite();
+
+        let mut server_tokens: Vec<ServerToken> = Vec::new();
+        let drain = |rx: &Receiver<ServerToken>, out: &mut Vec<ServerToken>| loop {
+            match rx.try_recv() {
+                Ok(t) => out.push(t),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        };
+
+        // Wait-time strategy: idle until device_wait, watching the server.
+        let mut server_won_early = false;
+        if use_device {
+            let deadline = t0 + Duration::from_secs_f64(device_wait * scale);
+            while Instant::now() < deadline {
+                if let Some(rx) = &server_rx {
+                    drain(rx, &mut server_tokens);
+                    if !server_tokens.is_empty() {
+                        server_won_early = true;
+                        break;
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+
+        // Run the real device model unless the server already answered.
+        let mut device_events: Vec<(u32, f64)> = Vec::new();
+        if use_device && !server_won_early {
+            let res = self.runner.generate_with(&req.prompt, req.max_new, |e| {
+                if let Some(rx) = &server_rx {
+                    drain(rx, &mut server_tokens);
+                }
+                let at = t0.elapsed().as_secs_f64();
+                // If the server produced its first token before the device
+                // did, the server won the race: stop device generation.
+                let lost = device_events.is_empty()
+                    && server_tokens.first().map(|s| s.at < at).unwrap_or(false);
+                if !lost {
+                    device_events.push((e.token, at));
+                }
+                !lost
+            });
+            if let Err(e) = res {
+                log::error!("device generation failed: {e:#}");
+            }
+        }
+
+        // Decide the winner by first-token timestamps.
+        let device_first = device_events.first().map(|&(_, at)| at);
+        let server_first = server_tokens.first().map(|s| s.at);
+        let winner = match (device_first, server_first) {
+            (Some(d), Some(s)) => {
+                if d <= s {
+                    EndpointKind::Device
+                } else {
+                    EndpointKind::Server
+                }
+            }
+            (Some(_), None) => EndpointKind::Device,
+            _ => EndpointKind::Server,
+        };
+
+        let (tokens, times): (Vec<u32>, Vec<f64>) = match winner {
+            EndpointKind::Device => {
+                cancel_server.store(true, Ordering::Relaxed);
+                device_events.iter().copied().unzip()
+            }
+            EndpointKind::Server => {
+                // Collect the remaining server stream (blocking).
+                if let Some(rx) = &server_rx {
+                    while server_tokens.len() < req.max_new as usize {
+                        match rx.recv_timeout(Duration::from_secs(30)) {
+                            Ok(t) => server_tokens.push(t),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                server_tokens.iter().map(|s| (s.token, s.at)).unzip()
+            }
+        };
+
+        let ttft = times.first().copied().unwrap_or(0.0);
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        // Smooth at a scaled consumption rate so perceived pacing matches
+        // the scaled clock.
+        let r_c = self.config.consumption_rate / scale.max(1e-9);
+        let d = delivery::smooth(&times, r_c);
+        let text = self.runner.tokenizer.decode(&tokens);
+        LiveRecord {
+            id: req.id,
+            prompt_len: req.prompt.len() as u32,
+            winner,
+            ttft,
+            gaps,
+            tbts: d.tbts,
+            delay_num: d.delay_num,
+            tokens,
+            text,
+        }
+    }
+}
+
+/// Sleep in small slices so cancellation stays responsive.
+fn sleep_unless(secs: f64, cancel: &AtomicBool) {
+    let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
+    while Instant::now() < deadline {
+        if cancel.load(Ordering::Relaxed) {
+            return;
+        }
+        let left = deadline - Instant::now();
+        std::thread::sleep(left.min(Duration::from_millis(2)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::runtime::manifest::Manifest;
+
+    fn live_server() -> Option<LiveServer> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping live test: artifacts not built");
+            return None;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let runner = ModelRunner::load(&client, manifest.variant("device_sm").unwrap()).unwrap();
+        Some(LiveServer::new(
+            runner,
+            ServerProfile::gpt4o_mini(),
+            LiveConfig {
+                server_time_scale: 0.05,
+                consumption_rate: 5.0,
+                seed: 3,
+            },
+        ))
+    }
+
+    #[test]
+    fn live_race_produces_tokens() {
+        let Some(srv) = live_server() else { return };
+        let reqs: Vec<LiveRequest> = (0..3)
+            .map(|i| LiveRequest {
+                id: i,
+                prompt: srv.runner.tokenizer.encode("hello disco"),
+                max_new: 6,
+            })
+            .collect();
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, false); // always race
+        let records = srv.serve(&reqs, &policy);
+        assert_eq!(records.len(), 3);
+        for r in &records {
+            assert!(!r.tokens.is_empty());
+            assert!(r.ttft > 0.0);
+            assert_eq!(r.gaps.len() + 1, r.tokens.len());
+        }
+    }
+
+    #[test]
+    fn device_only_runs_real_model() {
+        let Some(srv) = live_server() else { return };
+        let reqs = vec![LiveRequest {
+            id: 0,
+            prompt: srv.runner.tokenizer.encode("abc"),
+            max_new: 5,
+        }];
+        let policy = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+        let records = srv.serve(&reqs, &policy);
+        assert_eq!(records[0].winner, EndpointKind::Device);
+        assert!(records[0].tokens.len() <= 5);
+        assert!(!records[0].text.is_empty() || records[0].tokens == vec![257]);
+    }
+
+    #[test]
+    fn server_only_never_touches_device() {
+        let Some(srv) = live_server() else { return };
+        let reqs = vec![LiveRequest {
+            id: 0,
+            prompt: srv.runner.tokenizer.encode("xyz"),
+            max_new: 4,
+        }];
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let records = srv.serve(&reqs, &policy);
+        assert_eq!(records[0].winner, EndpointKind::Server);
+        assert_eq!(records[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn sleep_unless_cancels_quickly() {
+        let flag = AtomicBool::new(false);
+        let t0 = Instant::now();
+        sleep_unless(0.02, &flag);
+        assert!(t0.elapsed().as_secs_f64() >= 0.015);
+        let flag = AtomicBool::new(true);
+        let t0 = Instant::now();
+        sleep_unless(5.0, &flag);
+        assert!(t0.elapsed().as_secs_f64() < 0.5);
+    }
+}

@@ -1,0 +1,144 @@
+//! Token delivery smoothing (§4.3, Fig. 4).
+//!
+//! Generation runs faster than human consumption (r_g > r_c, §2.2), so
+//! perceived TBT is the *delivery* gap, not the raw generation gap: the
+//! client paces tokens at the consumption rate while a buffer absorbs
+//! generation jitter. A token is **delayed** (Table 3's `delay_num`) when
+//! it is not yet generated at the moment the consumption schedule wants
+//! it.
+
+/// Result of smoothing one request's token stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delivery {
+    /// When each token is shown to the user (absolute, seconds).
+    pub read_times: Vec<f64>,
+    /// Perceived inter-token gaps (len = tokens − 1).
+    pub tbts: Vec<f64>,
+    /// Number of tokens that missed the consumption schedule.
+    pub delay_num: u32,
+}
+
+/// Smooth generation times into a delivery schedule at consumption rate
+/// `r_c` tokens/s. `gen_times` must be nondecreasing; the first entry is
+/// the TTFT.
+pub fn smooth(gen_times: &[f64], r_c: f64) -> Delivery {
+    assert!(r_c > 0.0);
+    if gen_times.is_empty() {
+        return Delivery {
+            read_times: vec![],
+            tbts: vec![],
+            delay_num: 0,
+        };
+    }
+    let step = 1.0 / r_c;
+    let mut read_times = Vec::with_capacity(gen_times.len());
+    let mut tbts = Vec::with_capacity(gen_times.len().saturating_sub(1));
+    let mut delay_num = 0u32;
+    read_times.push(gen_times[0]);
+    for i in 1..gen_times.len() {
+        let want = read_times[i - 1] + step;
+        let actual = if gen_times[i] > want + 1e-9 {
+            // Token wasn't ready when the user wanted it.
+            delay_num += 1;
+            gen_times[i]
+        } else {
+            want
+        };
+        tbts.push(actual - read_times[i - 1]);
+        read_times.push(actual);
+    }
+    Delivery {
+        read_times,
+        tbts,
+        delay_num,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_generation_paces_at_consumption_rate() {
+        // Tokens generated every 50 ms, consumed at 5/s (200 ms).
+        let gen: Vec<f64> = (0..20).map(|i| 1.0 + 0.05 * i as f64).collect();
+        let d = smooth(&gen, 5.0);
+        assert_eq!(d.delay_num, 0);
+        for tbt in &d.tbts {
+            assert!((tbt - 0.2).abs() < 1e-9);
+        }
+        assert_eq!(d.read_times[0], 1.0);
+    }
+
+    #[test]
+    fn slow_tokens_are_counted_delayed() {
+        // Second token arrives 1 s after the first: delayed.
+        let d = smooth(&[0.0, 1.0, 1.05], 5.0);
+        assert_eq!(d.delay_num, 1);
+        assert!((d.tbts[0] - 1.0).abs() < 1e-9);
+        // Third token was already buffered: paced at 0.2.
+        assert!((d.tbts[1] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gap_burst_absorbed_by_buffer() {
+        // Packetized arrival: 4 tokens at once, then a 0.5 s stall, 4 more.
+        let gen = vec![0.0, 0.0, 0.0, 0.0, 0.5, 0.5, 0.5, 0.5];
+        let d = smooth(&gen, 5.0);
+        // Schedule wants tokens at 0, .2, .4, .6, .8 ... the stall until
+        // 0.5 is fully hidden (token 5 wanted at 0.8 > 0.5).
+        assert_eq!(d.delay_num, 0);
+        for tbt in &d.tbts {
+            assert!((tbt - 0.2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(smooth(&[], 5.0).read_times.len(), 0);
+        let d = smooth(&[2.5], 5.0);
+        assert_eq!(d.read_times, vec![2.5]);
+        assert!(d.tbts.is_empty());
+        assert_eq!(d.delay_num, 0);
+    }
+
+    #[test]
+    fn prop_read_times_monotone_and_cover_gen() {
+        crate::proptest::check(
+            "delivery-monotone",
+            128,
+            |r| {
+                let n = 1 + r.below(200) as usize;
+                let mut t = r.f64() * 2.0;
+                let mut gen = Vec::with_capacity(n);
+                for _ in 0..n {
+                    gen.push(t);
+                    t += r.f64() * 0.5;
+                }
+                let rc = 1.0 + r.f64() * 9.0;
+                (gen, rc)
+            },
+            |(gen, rc)| {
+                let d = smooth(gen, *rc);
+                crate::prop_assert!(d.read_times.len() == gen.len(), "len mismatch");
+                for i in 1..d.read_times.len() {
+                    crate::prop_assert!(
+                        d.read_times[i] >= d.read_times[i - 1],
+                        "read times must be monotone"
+                    );
+                    // Never shown before it exists, never slower than r_c
+                    // once buffered.
+                    crate::prop_assert!(
+                        d.read_times[i] + 1e-9 >= gen[i],
+                        "token shown before generated"
+                    );
+                    crate::prop_assert!(
+                        d.read_times[i] + 1e-9 >= d.read_times[i - 1] + 1.0 / rc,
+                        "faster than consumption rate"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,639 @@
+//! The workload simulation engine.
+//!
+//! Replays a trace against a (server, device) endpoint pair under a
+//! dispatch policy, reproducing the paper's evaluation methodology: the
+//! prefill race between endpoints, loser cancellation, token-level
+//! migration with buffered handoff, consumption-rate delivery smoothing,
+//! unified cost metering, and single-flight device occupancy.
+
+use crate::coordinator::dispatch::Decision;
+use crate::coordinator::migration::{MigrationConfig, MigrationPlanner};
+use crate::coordinator::policy::Policy;
+use crate::cost::unified::{Constraint, CostMeter, CostParams};
+use crate::endpoint::{DeviceEndpoint, EndpointKind, ServerEndpoint, SimEndpoint};
+use crate::metrics::{Report, RequestRecord};
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::delivery;
+use crate::stats::ecdf::Ecdf;
+use crate::trace::{Request, Trace};
+use crate::util::rng::Rng;
+
+/// Simulation-wide configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Serving-side generation length limit (Appendix E: 128).
+    pub gen_limit: u32,
+    /// Migration controller settings (consumption rate, RTT).
+    pub migration: MigrationConfig,
+    /// Base seed; combined with a per-request fork.
+    pub seed: u64,
+    /// Model single-flight device occupancy across requests. The paper's
+    /// evaluation replays trace requests independently (per-request
+    /// latencies sampled from the measured distributions), so this is
+    /// OFF by default; enable it to study queueing effects at high
+    /// arrival rates (see the `device_occupancy` tests and Fig 5's
+    /// activity-level sweep).
+    pub device_queueing: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            gen_limit: 128,
+            migration: MigrationConfig::default(),
+            seed: 0,
+            device_queueing: false,
+        }
+    }
+}
+
+/// One evaluation scenario: a service trace model, a device configuration,
+/// and the unified cost parameters.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub server: ServerEndpoint,
+    pub device: DeviceEndpoint,
+    pub costs: CostParams,
+    pub cfg: SimConfig,
+}
+
+/// Exchange rates λ ($ per PFLOP) calibrated per Appendix E so each
+/// scenario is internally consistent (see DESIGN.md §Substitutions: the
+/// paper's "per million FLOPs" unit is taken as per 10⁹ MFLOPs, the only
+/// reading under which both constraint regimes arise with Table 8 prices).
+pub const LAMBDA_SERVER_CONSTRAINED: f64 = 0.1;
+pub const LAMBDA_DEVICE_CONSTRAINED: f64 = 5.0;
+
+impl Scenario {
+    /// Build a scenario for the given constraint regime.
+    pub fn new(
+        server: ServerProfile,
+        device: DeviceProfile,
+        constraint: Constraint,
+        cfg: SimConfig,
+    ) -> Scenario {
+        let lambda = match constraint {
+            Constraint::Server => LAMBDA_SERVER_CONSTRAINED,
+            Constraint::Device => LAMBDA_DEVICE_CONSTRAINED,
+        };
+        // λ is $ / PFLOP: convert via FLOPs-per-token / 1e15 × λ·1e9 ≡
+        // (FLOPs/1e6) × (λ·1e-9) in the CostParams MFLOP interface.
+        let costs = CostParams::from_profiles(
+            &server.pricing,
+            &device.arch,
+            lambda * 1e-9,
+            cfg.gen_limit,
+        );
+        Scenario {
+            server: ServerEndpoint::new(server),
+            device: DeviceEndpoint::new(device),
+            costs,
+            cfg,
+        }
+    }
+
+    /// Profile the server TTFT distribution (what a deployed client
+    /// gathers before planning — §4.2 "obtained either from
+    /// server-provided information or device-side profiling").
+    pub fn profile_server_ttft(&self, n: usize, seed: u64) -> Ecdf {
+        let mut rng = Rng::new(seed ^ 0x5E4E4);
+        Ecdf::new(
+            (0..n)
+                .map(|_| self.server.profile.sample_ttft(&mut rng))
+                .collect(),
+        )
+    }
+
+    /// Run a trace under a policy; returns per-request records.
+    pub fn run(&self, trace: &Trace, policy: &Policy) -> Vec<RequestRecord> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let planner = MigrationPlanner::new(self.cfg.migration, self.costs);
+        let mut device_free_at = f64::NEG_INFINITY;
+        let mut records = Vec::with_capacity(trace.len());
+        for req in &trace.requests {
+            let mut req_rng = rng.fork(req.id);
+            let rec = simulate_request(
+                req,
+                policy,
+                &self.server,
+                &self.device,
+                &planner,
+                &self.cfg,
+                &mut device_free_at,
+                &mut req_rng,
+            );
+            records.push(rec);
+        }
+        records
+    }
+
+    /// Run and aggregate.
+    pub fn run_report(&self, trace: &Trace, policy: &Policy) -> Report {
+        let records = self.run(trace, policy);
+        Report::from_records(&records, policy.constraint())
+    }
+}
+
+/// Consumed-token count at absolute time `t` for a stream whose first
+/// token appeared at `ttft` (ideal pacing at `r_c`).
+fn consumed_at(t: f64, ttft: f64, r_c: f64, n: u32) -> u32 {
+    if t < ttft {
+        return 0;
+    }
+    let k = 1 + ((t - ttft) * r_c).floor() as u32;
+    k.min(n)
+}
+
+/// Simulate one request. Times inside are relative to arrival; device
+/// occupancy converts through `device_free_at` (absolute).
+#[allow(clippy::too_many_arguments)]
+fn simulate_request(
+    req: &Request,
+    policy: &Policy,
+    server: &ServerEndpoint,
+    device: &DeviceEndpoint,
+    planner: &MigrationPlanner,
+    cfg: &SimConfig,
+    device_free_at: &mut f64,
+    rng: &mut Rng,
+) -> RequestRecord {
+    let l = req.prompt_len;
+    let n = req.output_len.min(cfg.gen_limit).max(1);
+    let r_c = cfg.migration.consumption_rate;
+    let decision = policy.decide(l, rng);
+
+    let mut cost = CostMeter::default();
+
+    // --- prefill race -------------------------------------------------
+    let use_server = decision.uses_server();
+    let server_first = if use_server {
+        Some(server.sample_ttft(l, rng))
+    } else {
+        None
+    };
+
+    let device_wait = match decision {
+        Decision::DeviceOnly => 0.0,
+        Decision::ServerOnly => f64::INFINITY,
+        Decision::Both { device_wait } => device_wait,
+    };
+    // Device is single-flight: wait for any earlier request to finish
+    // (only when cross-request queueing is modeled).
+    let queue_wait = if cfg.device_queueing {
+        (*device_free_at - req.arrival).max(0.0)
+    } else {
+        0.0
+    };
+    let dev_start = device_wait.max(queue_wait);
+    let mut use_device = decision.uses_device() && dev_start.is_finite();
+    // The wait-time strategy (§4.2): skip device start if the server
+    // already produced a token.
+    if use_device {
+        if let Some(sf) = server_first {
+            if sf <= dev_start {
+                use_device = false;
+            }
+        }
+    }
+    let dev_prefill_dur = device.sample_ttft(l, rng);
+    let device_first = dev_start + dev_prefill_dur;
+
+    assert!(
+        use_server || use_device,
+        "request {} dispatched nowhere",
+        req.id
+    );
+
+    let (winner, ttft) = match (use_server.then_some(server_first).flatten(), use_device) {
+        (Some(sf), true) => {
+            if sf <= device_first {
+                (EndpointKind::Server, sf)
+            } else {
+                (EndpointKind::Device, device_first)
+            }
+        }
+        (Some(sf), false) => (EndpointKind::Server, sf),
+        (None, true) => (EndpointKind::Device, device_first),
+        (None, false) => unreachable!(),
+    };
+
+    // Prefill costs. The server bills the full prompt once dispatched;
+    // the device burns energy for however much prefill it ran.
+    if use_server {
+        cost.server_prefill_tokens += l as u64;
+    }
+    let mut device_busy_until_rel: f64 = f64::NEG_INFINITY;
+    if use_device {
+        if winner == EndpointKind::Device {
+            cost.device_prefill_tokens += l as u64;
+        } else {
+            // Cancelled mid-prefill at `ttft`.
+            let elapsed = (ttft - dev_start).max(0.0);
+            let done = ((elapsed / dev_prefill_dur) * l as f64).ceil() as u64;
+            cost.device_prefill_tokens += done.min(l as u64);
+            device_busy_until_rel = ttft;
+        }
+    }
+
+    // --- decode -------------------------------------------------------
+    // Token i (1-based) generated at gen[i-1]; token 1 at ttft.
+    let mut gen = Vec::with_capacity(n as usize);
+    gen.push(ttft);
+    {
+        let gaps = match winner {
+            EndpointKind::Server => server.sample_gaps(l, n - 1, rng),
+            EndpointKind::Device => device.sample_gaps(l, n - 1, rng),
+        };
+        for g in gaps {
+            gen.push(gen.last().unwrap() + g);
+        }
+    }
+
+    // --- migration (§4.3) ----------------------------------------------
+    let mut migrated = false;
+    let mut migrate_at_idx = 0u32; // tokens produced by the source
+    if policy.migration {
+        if let Some(constraint) = policy.constraint() {
+            if let Some(target) = planner.direction(constraint, winner) {
+                // In server-constrained scenarios migrating to the device
+                // must respect single-flight occupancy: only migrate if
+                // the device is free (it is, for this request, unless a
+                // previous request still runs — approximated by
+                // queue_wait == 0).
+                let target_available = match target {
+                    EndpointKind::Device => queue_wait <= 0.0,
+                    EndpointKind::Server => true,
+                };
+                if target_available {
+                    // Walk the stream until the buffer masks t_m (Eq. 5)
+                    // and Eq. 4 still favors migrating.
+                    for i in 1..n {
+                        let reprefill = l + i;
+                        let t_exp = match target {
+                            EndpointKind::Server => server.expected_ttft(reprefill),
+                            EndpointKind::Device => device.expected_ttft(reprefill),
+                        };
+                        if let Some(plan) =
+                            planner.plan(constraint, winner, n - i, reprefill, t_exp)
+                        {
+                            let t_now = gen[i as usize - 1];
+                            let buffered =
+                                i.saturating_sub(consumed_at(t_now, ttft, r_c, n));
+                            if buffered >= plan.buffer_tokens {
+                                // Trigger: target re-prefills prompt+prefix.
+                                migrated = true;
+                                migrate_at_idx = i;
+                                let t_m_actual = planner.config.rtt
+                                    + match target {
+                                        EndpointKind::Server => {
+                                            server.sample_ttft(reprefill, rng)
+                                        }
+                                        EndpointKind::Device => {
+                                            device.sample_ttft(reprefill, rng)
+                                        }
+                                    };
+                                let ready = t_now + t_m_actual;
+                                // Rebuild the tail from the target.
+                                gen.truncate(i as usize);
+                                gen.push(ready);
+                                let gaps = match target {
+                                    EndpointKind::Server => {
+                                        server.sample_gaps(reprefill, n - i - 1, rng)
+                                    }
+                                    EndpointKind::Device => {
+                                        device.sample_gaps(reprefill, n - i - 1, rng)
+                                    }
+                                };
+                                for g in gaps {
+                                    gen.push(gen.last().unwrap() + g);
+                                }
+                                // Costs: source decoded i tokens, target
+                                // re-prefilled and decodes the rest.
+                                match winner {
+                                    EndpointKind::Server => {
+                                        cost.server_decode_tokens += i as u64
+                                    }
+                                    EndpointKind::Device => {
+                                        cost.device_decode_tokens += i as u64
+                                    }
+                                }
+                                match target {
+                                    EndpointKind::Server => {
+                                        cost.server_prefill_tokens += reprefill as u64;
+                                        cost.server_decode_tokens += (n - i) as u64;
+                                    }
+                                    EndpointKind::Device => {
+                                        cost.device_prefill_tokens += reprefill as u64;
+                                        cost.device_decode_tokens += (n - i) as u64;
+                                    }
+                                }
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if !migrated {
+        match winner {
+            EndpointKind::Server => cost.server_decode_tokens += n as u64,
+            EndpointKind::Device => cost.device_decode_tokens += n as u64,
+        }
+    }
+
+    // --- device occupancy ----------------------------------------------
+    let device_active = use_device
+        && (winner == EndpointKind::Device
+            || device_busy_until_rel > f64::NEG_INFINITY);
+    if device_active {
+        let until = if winner == EndpointKind::Device {
+            if migrated {
+                gen[migrate_at_idx as usize - 1]
+            } else {
+                *gen.last().unwrap()
+            }
+        } else {
+            device_busy_until_rel
+        };
+        *device_free_at = (req.arrival + until).max(*device_free_at);
+    }
+    if migrated && winner == EndpointKind::Server {
+        // Device became the decode target.
+        *device_free_at = (req.arrival + *gen.last().unwrap()).max(*device_free_at);
+    }
+
+    // --- delivery smoothing & metrics -----------------------------------
+    let d = delivery::smooth(&gen, r_c);
+
+    RequestRecord {
+        id: req.id,
+        prompt_len: l,
+        output_len: n,
+        ttft,
+        tbts: d.tbts,
+        delay_num: d.delay_num,
+        migrated,
+        winner,
+        cost,
+        used_server: use_server,
+        used_device: use_device,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::trace::generator::WorkloadSpec;
+
+    fn scenario(constraint: Constraint, seed: u64) -> Scenario {
+        Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::pixel7pro_bloom560m(),
+            constraint,
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn planned(kind: PolicyKind, b: f64, migration: bool, sc: &Scenario, trace: &Trace) -> Policy {
+        let ecdf = sc.profile_server_ttft(2000, 1);
+        let lens = trace.prompt_lens();
+        match kind {
+            PolicyKind::DiscoS | PolicyKind::DiscoD => {
+                Policy::plan(kind, b, migration, &ecdf, &lens)
+            }
+            _ => Policy::simple(kind, b, migration),
+        }
+    }
+
+    #[test]
+    fn server_only_matches_server_distribution() {
+        let sc = scenario(Constraint::Server, 7);
+        let trace = WorkloadSpec::alpaca(500).generate(3);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let report = sc.run_report(&trace, &policy);
+        assert_eq!(report.n, 500);
+        // Mean near the GPT profile's mean TTFT.
+        let expected = sc.server.profile.mean_ttft();
+        assert!(
+            (report.ttft.mean - expected).abs() / expected < 0.25,
+            "mean {} vs profile {}",
+            report.ttft.mean,
+            expected
+        );
+        // No device usage at all.
+        assert_eq!(report.cost.device_prefill_tokens, 0);
+        assert_eq!(report.cost.device_decode_tokens, 0);
+    }
+
+    #[test]
+    fn device_only_ttft_scales_with_length() {
+        let sc = scenario(Constraint::Server, 8);
+        // Wide fixed gaps isolate prefill scaling from queueing (the
+        // paper's §3 methodology: identical prompts at 60 s intervals).
+        let trace = WorkloadSpec {
+            arrival: crate::trace::generator::Arrival::Fixed { gap: 120.0 },
+            ..WorkloadSpec::alpaca(300)
+        }
+        .generate(4);
+        let policy = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+        let records = sc.run(&trace, &policy);
+        let xs: Vec<f64> = records.iter().map(|r| r.prompt_len as f64).collect();
+        let ys: Vec<f64> = records.iter().map(|r| r.ttft).collect();
+        let r = crate::stats::corr::pearson(&xs, &ys);
+        assert!(r > 0.7, "device TTFT should correlate with length, r={r}");
+        for rec in &records {
+            assert_eq!(rec.winner, EndpointKind::Device);
+            assert!(!rec.used_server);
+        }
+    }
+
+    #[test]
+    fn both_dispatch_beats_either_alone() {
+        // Racing both endpoints: TTFT = min of the two ⇒ mean TTFT must
+        // be ≤ each single-endpoint policy (same seeds).
+        let sc = scenario(Constraint::Server, 9);
+        let trace = WorkloadSpec::alpaca(600).generate(5);
+        let both = Policy::simple(PolicyKind::StochS, 1.0, false); // b=1 ⇒ always Both
+        let server = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let device = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+        let rb = sc.run_report(&trace, &both);
+        let rs = sc.run_report(&trace, &server);
+        let rd = sc.run_report(&trace, &device);
+        assert!(rb.ttft.mean <= rs.ttft.mean * 1.02);
+        assert!(rb.ttft.mean <= rd.ttft.mean * 1.02);
+        assert!(rb.ttft.p99 <= rs.ttft.p99 * 1.05);
+    }
+
+    #[test]
+    fn disco_s_respects_server_budget_at_runtime() {
+        let sc = scenario(Constraint::Server, 10);
+        let trace = WorkloadSpec::alpaca(1500).generate(6);
+        for b in [0.1, 0.4, 0.8] {
+            let policy = planned(PolicyKind::DiscoS, b, false, &sc, &trace);
+            let report = sc.run_report(&trace, &policy);
+            let frac = report.constrained_prefill_fraction.unwrap();
+            assert!(
+                frac <= b + 0.06,
+                "b={b}: server prefill fraction {frac:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn disco_d_respects_device_budget_at_runtime() {
+        let sc = scenario(Constraint::Device, 11);
+        let trace = WorkloadSpec::alpaca(1500).generate(7);
+        for b in [0.1, 0.4, 0.8] {
+            let policy = planned(PolicyKind::DiscoD, b, false, &sc, &trace);
+            let report = sc.run_report(&trace, &policy);
+            let frac = report.constrained_prefill_fraction.unwrap();
+            assert!(
+                frac <= b + 0.08,
+                "b={b}: device prefill fraction {frac:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn migration_reduces_cost_device_constrained() {
+        // Fig. 7's claim: with migration, end-to-end cost drops.
+        let sc = scenario(Constraint::Device, 12);
+        let trace = WorkloadSpec::alpaca(800).generate(8);
+        let with = planned(PolicyKind::DiscoD, 0.6, true, &sc, &trace);
+        let without = planned(PolicyKind::DiscoD, 0.6, false, &sc, &trace);
+        let rw = sc.run_report(&trace, &with);
+        let ro = sc.run_report(&trace, &without);
+        assert!(rw.migrated_requests > 0, "some requests must migrate");
+        let cw = rw.total_cost(&sc.costs);
+        let co = ro.total_cost(&sc.costs);
+        assert!(
+            cw < co,
+            "migration should cut cost: with={cw:.4} without={co:.4}"
+        );
+    }
+
+    #[test]
+    fn migration_preserves_tbt() {
+        // Table 3's claim: migration does not break delivery smoothness.
+        let sc = scenario(Constraint::Device, 13);
+        let trace = WorkloadSpec::alpaca(600).generate(9);
+        let policy = planned(PolicyKind::DiscoD, 0.6, true, &sc, &trace);
+        let report = sc.run_report(&trace, &policy);
+        let r_c = sc.cfg.migration.consumption_rate;
+        // P99 TBT stays near the consumption interval (paper: 0.209–0.217
+        // at r_c = 5).
+        assert!(
+            report.tbt.p99 < 1.5 / r_c,
+            "TBT p99 {} vs 1/r_c {}",
+            report.tbt.p99,
+            1.0 / r_c
+        );
+        // Delayed tokens are few relative to generation lengths.
+        assert!(
+            report.delay_num_mean < 20.0,
+            "delay_num mean {}",
+            report.delay_num_mean
+        );
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let sc = scenario(Constraint::Server, 14);
+        let trace = WorkloadSpec::alpaca(200).generate(10);
+        let policy = planned(PolicyKind::DiscoS, 0.5, true, &sc, &trace);
+        let a = sc.run(&trace, &policy);
+        let b = sc.run(&trace, &policy);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ttft, y.ttft);
+            assert_eq!(x.migrated, y.migrated);
+            assert_eq!(x.cost, y.cost);
+        }
+    }
+
+    #[test]
+    fn device_occupancy_serializes_requests() {
+        // Two requests arriving back-to-back on device-only must queue.
+        let sc = scenario(Constraint::Server, 15);
+        let trace = Trace::new(
+            "b2b",
+            vec![
+                Request {
+                    id: 0,
+                    arrival: 0.0,
+                    prompt_len: 400,
+                    output_len: 64,
+                },
+                Request {
+                    id: 1,
+                    arrival: 0.1,
+                    prompt_len: 400,
+                    output_len: 64,
+                },
+            ],
+        );
+        let policy = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+        let mut sc_q = sc.clone();
+        sc_q.cfg.device_queueing = true;
+        let records = sc_q.run(&trace, &policy);
+        // Request 1's TTFT includes waiting for request 0's completion.
+        assert!(
+            records[1].ttft > records[0].ttft * 1.5,
+            "queued TTFT {} vs {}",
+            records[1].ttft,
+            records[0].ttft
+        );
+        // With queueing off (paper methodology) the two are independent.
+        let records = sc.run(&trace, &policy);
+        assert!(records[1].ttft < records[0].ttft * 1.5);
+    }
+
+    #[test]
+    fn prop_ttft_positive_and_tokens_conserved() {
+        let sc = scenario(Constraint::Device, 16);
+        crate::proptest::check(
+            "sim-conservation",
+            32,
+            |r| {
+                let n = 20 + r.below(80) as usize;
+                let seed = r.next_u64();
+                let b = r.f64();
+                (n, seed, b)
+            },
+            |&(n, seed, b)| {
+                let trace = WorkloadSpec::alpaca(n).generate(seed);
+                let ecdf = sc.profile_server_ttft(500, seed);
+                let policy = Policy::plan(
+                    PolicyKind::DiscoD,
+                    b,
+                    true,
+                    &ecdf,
+                    &trace.prompt_lens(),
+                );
+                let records = sc.run(&trace, &policy);
+                for rec in &records {
+                    crate::prop_assert!(rec.ttft > 0.0, "ttft {} <= 0", rec.ttft);
+                    crate::prop_assert!(
+                        rec.tbts.len() as u32 == rec.output_len - 1,
+                        "tbt count {} vs output {}",
+                        rec.tbts.len(),
+                        rec.output_len
+                    );
+                    // Decode tokens across endpoints must equal output_len.
+                    let decoded =
+                        rec.cost.server_decode_tokens + rec.cost.device_decode_tokens;
+                    crate::prop_assert!(
+                        decoded == rec.output_len as u64,
+                        "decoded {decoded} vs output {}",
+                        rec.output_len
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

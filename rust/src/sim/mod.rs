@@ -1,0 +1,12 @@
+//! Deterministic workload simulation.
+//!
+//! [`delivery`] models the user-side token consumption schedule (§4.3);
+//! [`engine`] replays a trace against simulated endpoints under a policy,
+//! producing per-request [`crate::metrics::RequestRecord`]s. Every run is
+//! reproducible from its seed; the paper's "mean over 10 runs" becomes a
+//! seed sweep.
+
+pub mod delivery;
+pub mod engine;
+
+pub use engine::{Scenario, SimConfig};

@@ -1,0 +1,101 @@
+//! Correlation measures. The paper's Table 1 reports the Pearson
+//! coefficient between prompt length and TTFT for each deployment.
+
+/// Pearson correlation coefficient of two equal-length samples.
+/// Returns 0.0 when either sample is degenerate (zero variance or n < 2).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Ordinary least squares fit y = k·x + c. Returns (k, c).
+/// Used to recover the device TTFT model from profiling samples (§3).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for i in 0..xs.len() {
+        sxy += (xs[i] - mx) * (ys[i] - my);
+        sxx += (xs[i] - mx) * (xs[i] - mx);
+    }
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let k = sxy / sxx;
+    (k, my - k * mx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_positive() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_negative() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &ys) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_is_zero() {
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn independent_near_zero() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        let ys: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.03);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let (k, c) = linear_fit(&xs, &ys);
+        assert!((k - 3.0).abs() < 1e-9);
+        assert!((c - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_degenerate_x() {
+        let (k, c) = linear_fit(&[2.0, 2.0], &[1.0, 3.0]);
+        assert_eq!(k, 0.0);
+        assert_eq!(c, 2.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Empirical cumulative distribution function with inverse.
+//!
+//! The dispatch controller (§4.2) treats the server TTFT distribution as
+//! a profiled empirical distribution: Algorithm 2 evaluates F(t) and
+//! F⁻¹(q); Eq. 2's integral is solved numerically over the same samples.
+
+/// ECDF over a sorted sample.
+#[derive(Clone, Debug)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    /// Build from (possibly unsorted) samples. Panics on empty/NaN input.
+    pub fn new(mut samples: Vec<f64>) -> Ecdf {
+        assert!(!samples.is_empty(), "ECDF needs at least one sample");
+        assert!(
+            samples.iter().all(|x| x.is_finite()),
+            "ECDF samples must be finite"
+        );
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ecdf { sorted: samples }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// F(t) = P(X <= t), right-continuous step function.
+    pub fn cdf(&self, t: f64) -> f64 {
+        // partition_point: count of samples <= t.
+        let count = self.sorted.partition_point(|&x| x <= t);
+        count as f64 / self.sorted.len() as f64
+    }
+
+    /// F⁻¹(q): the q-quantile, with linear interpolation between order
+    /// statistics (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        crate::stats::describe::sorted_percentile(&self.sorted, q.clamp(0.0, 1.0) * 100.0)
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        crate::stats::describe::mean(&self.sorted)
+    }
+
+    /// P(X > t) = 1 - F(t): the survival function used in Eq. 2.
+    pub fn survival(&self, t: f64) -> f64 {
+        1.0 - self.cdf(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ecdf4() -> Ecdf {
+        Ecdf::new(vec![4.0, 1.0, 3.0, 2.0])
+    }
+
+    #[test]
+    fn cdf_step_values() {
+        let e = ecdf4();
+        assert_eq!(e.cdf(0.5), 0.0);
+        assert_eq!(e.cdf(1.0), 0.25);
+        assert_eq!(e.cdf(2.5), 0.5);
+        assert_eq!(e.cdf(4.0), 1.0);
+        assert_eq!(e.cdf(9.0), 1.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let e = ecdf4();
+        assert_eq!(e.quantile(0.0), 1.0);
+        assert_eq!(e.quantile(1.0), 4.0);
+        assert!((e.quantile(0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_cdf_roundtrip() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(2);
+        let e = Ecdf::new((0..5000).map(|_| r.lognormal(0.0, 0.5)).collect());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let t = e.quantile(q);
+            assert!((e.cdf(t) - q).abs() < 0.01, "q={q} cdf={}", e.cdf(t));
+        }
+    }
+
+    #[test]
+    fn survival_complements_cdf() {
+        let e = ecdf4();
+        for t in [0.0, 1.5, 3.0, 5.0] {
+            assert!((e.survival(t) + e.cdf(t) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Ecdf::new(vec![]);
+    }
+
+    #[test]
+    fn mean_min_max() {
+        let e = ecdf4();
+        assert_eq!(e.mean(), 2.5);
+        assert_eq!(e.min(), 1.0);
+        assert_eq!(e.max(), 4.0);
+        assert_eq!(e.n(), 4);
+    }
+}

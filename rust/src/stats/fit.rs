@@ -1,0 +1,91 @@
+//! Distribution fitting. §5.3 of the paper fits log-normal distributions
+//! to prompt lengths and TTFTs "by following the mean and standard
+//! deviation of the logarithm" — this module implements exactly that.
+
+use crate::util::rng::Rng;
+
+/// Log-normal fit: (mu, sigma) of the underlying normal in log-space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogNormalFit {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormalFit {
+    /// MLE fit from positive samples (non-positive samples are skipped).
+    pub fn fit(samples: &[f64]) -> LogNormalFit {
+        let logs: Vec<f64> = samples
+            .iter()
+            .copied()
+            .filter(|&x| x > 0.0)
+            .map(f64::ln)
+            .collect();
+        if logs.is_empty() {
+            return LogNormalFit { mu: 0.0, sigma: 0.0 };
+        }
+        let mu = crate::stats::describe::mean(&logs);
+        let sigma = if logs.len() < 2 {
+            0.0
+        } else {
+            // MLE uses the population std (n denominator).
+            let ss: f64 = logs.iter().map(|x| (x - mu) * (x - mu)).sum();
+            (ss / logs.len() as f64).sqrt()
+        };
+        LogNormalFit { mu, sigma }
+    }
+
+    /// Distribution mean exp(mu + sigma^2/2).
+    pub fn mean(&self) -> f64 {
+        (self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+
+    /// Distribution median exp(mu).
+    pub fn median(&self) -> f64 {
+        self.mu.exp()
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.mu, self.sigma)
+    }
+
+    /// Draw n samples.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let mut r = Rng::new(71);
+        let truth = LogNormalFit { mu: 1.2, sigma: 0.4 };
+        let xs = truth.sample_n(&mut r, 100_000);
+        let fit = LogNormalFit::fit(&xs);
+        assert!((fit.mu - truth.mu).abs() < 0.01, "mu={}", fit.mu);
+        assert!((fit.sigma - truth.sigma).abs() < 0.01, "sigma={}", fit.sigma);
+    }
+
+    #[test]
+    fn mean_formula() {
+        let f = LogNormalFit { mu: 0.0, sigma: 1.0 };
+        assert!((f.mean() - (0.5f64).exp()).abs() < 1e-12);
+        assert_eq!(f.median(), 1.0);
+    }
+
+    #[test]
+    fn skips_nonpositive() {
+        let fit = LogNormalFit::fit(&[-1.0, 0.0, 1.0, std::f64::consts::E]);
+        assert!((fit.mu - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fit_is_degenerate() {
+        let fit = LogNormalFit::fit(&[]);
+        assert_eq!(fit.mu, 0.0);
+        assert_eq!(fit.sigma, 0.0);
+    }
+}

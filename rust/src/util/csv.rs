@@ -1,0 +1,112 @@
+//! Tiny CSV writer used by the experiment harness to dump `results/*.csv`.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates rows and writes an RFC-4180-ish CSV file.
+pub struct CsvWriter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(headers: &[&str]) -> Self {
+        CsvWriter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the column count mismatches the header.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "CSV row width mismatch ({} vs {})",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Convenience: append a row of displayable values.
+    pub fn rowd<D: std::fmt::Display>(&mut self, cells: &[D]) {
+        self.row(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&Self::encode_row(&self.headers));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&Self::encode_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn encode_row(cells: &[String]) -> String {
+        cells
+            .iter()
+            .map(|c| Self::escape(c))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    /// Write to disk, creating parent directories.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.rowd(&["1", "2"]);
+        w.rowd(&["x,y", "q\"t"]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,2\n\"x,y\",\"q\"\"t\"\n");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.rowd(&["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("disco_csv_test");
+        let path = dir.join("out.csv");
+        let mut w = CsvWriter::new(&["h"]);
+        w.rowd(&["v"]);
+        w.write(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(read, "h\nv\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,68 @@
+//! Lightweight logger backend for the `log` facade.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        // SAFETY: START is written once under `Once` before any logging.
+        let elapsed = unsafe {
+            #[allow(static_mut_refs)]
+            START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+        };
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{elapsed:10.4}s {tag}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Initialize logging once. Level comes from `DISCO_LOG`
+/// (error|warn|info|debug|trace), defaulting to `info`.
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe {
+            START = Some(Instant::now());
+        }
+        let level = match std::env::var("DISCO_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,282 @@
+//! Cross-module integration tests: the paper's headline claims, checked
+//! end-to-end through the public API (profiles → trace → policy → sim →
+//! metrics → cost).
+
+use disco::coordinator::policy::{Policy, PolicyKind};
+use disco::cost::unified::Constraint;
+use disco::experiments::common::{
+    avg_cost, avg_mean_ttft, avg_p99_ttft, disco_for, make_policy, run_cell, stoch_for,
+};
+use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::engine::{Scenario, SimConfig};
+use disco::trace::generator::WorkloadSpec;
+
+const N: usize = 600;
+const SEEDS: u64 = 3;
+
+/// Headline: DiSCo reduces tail TTFT vs stochastic dispatching across the
+/// budget range (Table 2's direction, every service × constraint).
+#[test]
+fn disco_beats_stochastic_tail_ttft() {
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            let mut disco_p99 = Vec::new();
+            let mut stoch_p99 = Vec::new();
+            for b in [0.3, 0.5, 0.7] {
+                let d = run_cell(
+                    &service,
+                    &device,
+                    constraint,
+                    disco_for(constraint),
+                    b,
+                    false,
+                    N,
+                    SEEDS,
+                );
+                let s = run_cell(
+                    &service,
+                    &device,
+                    constraint,
+                    stoch_for(constraint),
+                    b,
+                    false,
+                    N,
+                    SEEDS,
+                );
+                disco_p99.push(avg_p99_ttft(&d));
+                stoch_p99.push(avg_p99_ttft(&s));
+            }
+            let d: f64 = disco_p99.iter().sum();
+            let s: f64 = stoch_p99.iter().sum();
+            assert!(
+                d <= s * 1.02,
+                "{} {:?}: DiSCo p99 {d:.3} vs Stoch {s:.3}",
+                service.name,
+                constraint
+            );
+        }
+    }
+}
+
+/// Headline: mean TTFT also improves on average (Fig 6's direction).
+#[test]
+fn disco_beats_stochastic_mean_ttft_on_average() {
+    let device = DeviceProfile::pixel7pro_bloom560m();
+    let mut wins = 0;
+    let mut cells = 0;
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            for b in [0.3, 0.6] {
+                let d = run_cell(
+                    &service, &device, constraint, disco_for(constraint), b, false, N, SEEDS,
+                );
+                let s = run_cell(
+                    &service, &device, constraint, stoch_for(constraint), b, false, N, SEEDS,
+                );
+                cells += 1;
+                if avg_mean_ttft(&d) <= avg_mean_ttft(&s) * 1.01 {
+                    wins += 1;
+                }
+            }
+        }
+    }
+    // The paper notes DiSCo trades a little mean for tail at low budgets
+    // in some configs; require a strong majority, not unanimity.
+    assert!(
+        wins * 4 >= cells * 3,
+        "DiSCo mean-TTFT wins only {wins}/{cells} cells"
+    );
+}
+
+/// Headline: migration reduces end-to-end cost (Fig 7's direction) in
+/// every service, both constraint regimes, at high budget.
+#[test]
+fn migration_cuts_cost_everywhere() {
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            let scenario = Scenario::new(
+                service.clone(),
+                device.clone(),
+                constraint,
+                SimConfig::default(),
+            );
+            let kind = disco_for(constraint);
+            let with = run_cell(&service, &device, constraint, kind, 0.8, true, N, SEEDS);
+            let without = run_cell(&service, &device, constraint, kind, 0.8, false, N, SEEDS);
+            let cw = avg_cost(&with, &scenario.costs);
+            let co = avg_cost(&without, &scenario.costs);
+            assert!(
+                cw <= co,
+                "{} {:?}: migration raised cost {cw:.5} > {co:.5}",
+                service.name,
+                constraint
+            );
+        }
+    }
+}
+
+/// Migration must not break TBT (Table 3's direction): P99 TBT stays near
+/// the consumption interval 1/r_c.
+#[test]
+fn migration_preserves_tbt_everywhere() {
+    let device = DeviceProfile::xiaomi14_qwen0b5();
+    for service in ServerProfile::all() {
+        for constraint in [Constraint::Server, Constraint::Device] {
+            let reports = run_cell(
+                &service,
+                &device,
+                constraint,
+                disco_for(constraint),
+                0.5,
+                true,
+                N,
+                SEEDS,
+            );
+            for r in &reports {
+                assert!(
+                    r.tbt.p99 < 0.35,
+                    "{} {:?}: TBT p99 {:.3} (paper band ≈0.21)",
+                    service.name,
+                    constraint,
+                    r.tbt.p99
+                );
+            }
+        }
+    }
+}
+
+/// Budget compliance at runtime for every budget and both DiSCo planners.
+#[test]
+fn budget_respected_across_grid() {
+    let service = ServerProfile::llama3_70b();
+    let device = DeviceProfile::pixel7pro_bloom1b1();
+    for constraint in [Constraint::Server, Constraint::Device] {
+        for b in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let reports = run_cell(
+                &service,
+                &device,
+                constraint,
+                disco_for(constraint),
+                b,
+                false,
+                N,
+                SEEDS,
+            );
+            for r in &reports {
+                let frac = r.constrained_prefill_fraction.unwrap();
+                assert!(
+                    frac <= b + 0.08,
+                    "{constraint:?} b={b}: constrained fraction {frac:.3}"
+                );
+            }
+        }
+    }
+}
+
+/// vLLM/llama.cpp baselines bracket the cooperative policies sensibly:
+/// racing both endpoints at b=1 never loses to either single endpoint.
+#[test]
+fn racing_dominates_single_endpoints() {
+    let scenario = Scenario::new(
+        ServerProfile::command(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig::default(),
+    );
+    let trace = WorkloadSpec::alpaca(N).generate(9);
+    let both = Policy::simple(PolicyKind::StochS, 1.0, false);
+    let server = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let device = Policy::simple(PolicyKind::DeviceOnly, 1.0, false);
+    let rb = scenario.run_report(&trace, &both);
+    let rs = scenario.run_report(&trace, &server);
+    let rd = scenario.run_report(&trace, &device);
+    assert!(rb.ttft.mean <= rs.ttft.mean * 1.02);
+    assert!(rb.ttft.mean <= rd.ttft.mean * 1.02);
+}
+
+/// Failure injection: under a degraded server (30% of requests hit a 20×
+/// load spike), DiSCo-D's Phase-1 tail protection (w_tail = F⁻¹(1−α))
+/// bounds worst-case TTFT near the device's own worst case, while
+/// ServerOnly's tail explodes.
+#[test]
+fn tail_protection_bounds_server_outage()  {
+    let mut profile = ServerProfile::gpt4o_mini();
+    profile.spike_prob = 0.30;
+    profile.spike_scale = 20.0;
+    let device = DeviceProfile::xiaomi14_qwen0b5();
+    let scenario = Scenario::new(
+        profile.clone(),
+        device.clone(),
+        Constraint::Device,
+        SimConfig::default(),
+    );
+    let trace = WorkloadSpec::alpaca(N).generate(17);
+    let ecdf = scenario.profile_server_ttft(3000, 17);
+    let disco = Policy::plan(PolicyKind::DiscoD, 0.5, false, &ecdf, &trace.prompt_lens());
+    let server_only = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let rd = scenario.run_report(&trace, &disco);
+    let rs = scenario.run_report(&trace, &server_only);
+    // ServerOnly tail is dominated by the outage spikes.
+    assert!(rs.ttft.p99 > 4.0, "outage should blow up p99: {}", rs.ttft.p99);
+    // DiSCo-D bounds the tail: device kicks in at w_tail at the latest.
+    let max_l = trace.prompt_lens().iter().copied().max().unwrap();
+    let bound = ecdf.quantile(0.97) + device.ttft_expected(max_l) * 1.2;
+    assert!(
+        rd.ttft.p99 < bound,
+        "DiSCo-D p99 {} should stay under {bound}",
+        rd.ttft.p99
+    );
+    assert!(rd.ttft.p99 < rs.ttft.p99 * 0.8);
+}
+
+/// The smooth Eq. 1–2 dispatcher behaves like Algorithm 2 end-to-end:
+/// comparable QoE, same budget compliance.
+#[test]
+fn smooth_dispatcher_parity() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::pixel7pro_bloom1b1(),
+        Constraint::Device,
+        SimConfig::default(),
+    );
+    let trace = WorkloadSpec::alpaca(N).generate(23);
+    let ecdf = scenario.profile_server_ttft(2000, 23);
+    for b in [0.3, 0.6] {
+        let step = Policy::plan(PolicyKind::DiscoD, b, false, &ecdf, &trace.prompt_lens());
+        let smooth = Policy::plan(
+            PolicyKind::DiscoDSmooth,
+            b,
+            false,
+            &ecdf,
+            &trace.prompt_lens(),
+        );
+        let r1 = scenario.run_report(&trace, &step);
+        let r2 = scenario.run_report(&trace, &smooth);
+        assert!(r2.constrained_prefill_fraction.unwrap() <= b + 0.08);
+        // Within 25% of each other on both metrics.
+        assert!((r1.ttft.mean - r2.ttft.mean).abs() / r1.ttft.mean < 0.25);
+        assert!((r1.ttft.p99 - r2.ttft.p99).abs() / r1.ttft.p99 < 0.35);
+    }
+}
+
+/// Planning from one seed generalizes to traces drawn with other seeds
+/// (the deployed-profiling story of §4.2).
+#[test]
+fn plans_generalize_across_seeds() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::pixel7pro_bloom1b1(),
+        Constraint::Server,
+        SimConfig::default(),
+    );
+    let plan_trace = WorkloadSpec::alpaca(N).generate(100);
+    let policy = make_policy(PolicyKind::DiscoS, 0.5, false, &scenario, &plan_trace, 100);
+    for seed in 200..203 {
+        let eval_trace = WorkloadSpec::alpaca(N).generate(seed);
+        let report = scenario.run_report(&eval_trace, &policy);
+        let frac = report.constrained_prefill_fraction.unwrap();
+        assert!(frac <= 0.6, "seed {seed}: budget drift {frac:.3}");
+    }
+}
