@@ -1,0 +1,134 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this reimplements the
+//! small slice of `anyhow` the workspace uses: [`Error`], [`Result`], and
+//! the [`anyhow!`], [`bail!`], [`ensure!`] macros. Like the real crate,
+//! [`Error`] deliberately does **not** implement `std::error::Error`, so
+//! the blanket `From<E: Error>` conversion (what makes `?` work) does not
+//! conflict with the identity `From` impl.
+
+use std::fmt;
+
+/// A type-erased error with a display message.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>`, with an overridable error type like the
+/// real crate's alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Wrap any displayable message into an error.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn inner(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("unlucky {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(inner(2).unwrap(), 2);
+        assert_eq!(inner(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(inner(12).unwrap_err().to_string(), "n too big: 12");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+        assert_eq!(format!("{e:?}"), "code 7");
+    }
+}

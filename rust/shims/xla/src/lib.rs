@@ -1,0 +1,140 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate links against a vendored `xla_extension` build that is
+//! not present in this environment. This stub keeps the `runtime`/`serve`
+//! layers compiling so the simulator, experiments, and tests build and run
+//! everywhere; any attempt to actually create a PJRT client reports a
+//! clear "runtime unavailable" error instead. Swap the `xla` entry in
+//! `rust/Cargo.toml` back to the real bindings to run the live path.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's (Debug-formatted at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built with the offline `xla` stub; \
+         link the real xla bindings to enable the live serving path)"
+    ))
+}
+
+/// Element dtypes (only what the workspace constructs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host-side literal value (stub: carries no data).
+#[derive(Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn vec1(_data: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_value: i32) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple3"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literals_construct_but_do_not_read() {
+        let l = Literal::vec1(&[1, 2, 3]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(4).to_tuple3().is_err());
+    }
+}

@@ -1,4 +1,8 @@
-//! Shared sweep machinery for the evaluation experiments.
+//! Shared sweep machinery for the evaluation experiments, including the
+//! scoped-thread parallel runner ([`par_map`]) that fans grid cells out
+//! across cores. Determinism is preserved by construction: each cell
+//! carries its own seed (derived through `util::rng`-style mixing, never
+//! from thread identity) and results land by input index.
 
 use crate::coordinator::policy::{Policy, PolicyKind};
 use crate::cost::unified::Constraint;
@@ -7,10 +11,70 @@ use crate::profiles::{DeviceProfile, ServerProfile};
 use crate::sim::engine::{Scenario, SimConfig};
 use crate::trace::generator::WorkloadSpec;
 use crate::trace::Trace;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The budget-ratio grid the sweeps use ("across the whole cost budget
 /// range", Table 2).
 pub const BUDGET_GRID: [f64; 9] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Worker-thread count: `DISCO_THREADS` override, else available cores.
+pub fn worker_threads() -> usize {
+    std::env::var("DISCO_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Map `f` over `items` on scoped worker threads, preserving input order.
+///
+/// Work is distributed by an atomic cursor (cheap dynamic balancing for
+/// uneven cells); outputs are returned in input order regardless of which
+/// thread computed them, so parallel sweeps stay deterministic as long as
+/// `f(i, item)` itself is (all simulator cells are: they seed their own
+/// RNGs). Panics in `f` propagate.
+pub fn par_map<I, O, F>(items: &[I], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let n = items.len();
+    let threads = worker_threads().min(n);
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let cursor = &cursor;
+    let mut indexed: Vec<(usize, O)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, o)| o).collect()
+}
 
 /// Build a policy (planning DiSCo variants from profiled distributions).
 pub fn make_policy(
@@ -31,7 +95,8 @@ pub fn make_policy(
 }
 
 /// Run one (service, device, constraint, policy, b) cell over several
-/// seeds; returns the per-seed reports.
+/// seeds — in parallel, one worker per seed; returns the per-seed
+/// reports in seed order.
 #[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     service: &ServerProfile,
@@ -43,22 +108,21 @@ pub fn run_cell(
     n_requests: usize,
     n_seeds: u64,
 ) -> Vec<Report> {
-    (0..n_seeds)
-        .map(|seed| {
-            let scenario = Scenario::new(
-                service.clone(),
-                device.clone(),
-                constraint,
-                SimConfig {
-                    seed,
-                    ..Default::default()
-                },
-            );
-            let trace = WorkloadSpec::alpaca(n_requests).generate(seed ^ 0xA1FA);
-            let policy = make_policy(kind, b, migration, &scenario, &trace, seed);
-            scenario.run_report(&trace, &policy)
-        })
-        .collect()
+    let seeds: Vec<u64> = (0..n_seeds).collect();
+    par_map(&seeds, |_, &seed| {
+        let scenario = Scenario::new(
+            service.clone(),
+            device.clone(),
+            constraint,
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        );
+        let trace = WorkloadSpec::alpaca(n_requests).generate(seed ^ 0xA1FA);
+        let policy = make_policy(kind, b, migration, &scenario, &trace, seed);
+        scenario.run_report(&trace, &policy)
+    })
 }
 
 /// Seed-averaged mean TTFT.
@@ -124,6 +188,59 @@ mod tests {
         assert_eq!(reports.len(), 2);
         assert!(avg_mean_ttft(&reports) > 0.0);
         assert!(avg_p99_ttft(&reports) >= avg_mean_ttft(&reports));
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_results() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        let parallel = par_map(&items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x + 1
+        });
+        assert_eq!(parallel, serial);
+        // Empty and single-item inputs pass through.
+        assert_eq!(par_map::<u64, u64, _>(&[], |_, &x| x), Vec::<u64>::new());
+        assert_eq!(par_map(&[7u64], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_matches_serial_simulation() {
+        // A sweep computed in parallel must be bit-identical to the same
+        // sweep computed serially (per-cell seeding, no shared state).
+        let reports = run_cell(
+            &ServerProfile::gpt4o_mini(),
+            &DeviceProfile::pixel7pro_bloom560m(),
+            Constraint::Server,
+            PolicyKind::StochS,
+            0.5,
+            false,
+            80,
+            4,
+        );
+        for (seed, r) in reports.iter().enumerate() {
+            let scenario = Scenario::new(
+                ServerProfile::gpt4o_mini(),
+                DeviceProfile::pixel7pro_bloom560m(),
+                Constraint::Server,
+                SimConfig {
+                    seed: seed as u64,
+                    ..Default::default()
+                },
+            );
+            let trace = WorkloadSpec::alpaca(80).generate(seed as u64 ^ 0xA1FA);
+            let policy = make_policy(
+                PolicyKind::StochS,
+                0.5,
+                false,
+                &scenario,
+                &trace,
+                seed as u64,
+            );
+            let serial = scenario.run_report(&trace, &policy);
+            assert_eq!(r.ttft.mean.to_bits(), serial.ttft.mean.to_bits());
+            assert_eq!(r.ttft.p99.to_bits(), serial.ttft.p99.to_bits());
+        }
     }
 
     #[test]

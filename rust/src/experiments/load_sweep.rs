@@ -1,0 +1,279 @@
+//! Fleet load sweep: a Fig-5-style activity-level scan, but through the
+//! discrete-event fleet simulator instead of independent replay.
+//!
+//! Each grid cell is (arrival rate × policy): a Poisson workload at the
+//! target aggregate rate runs against a bounded server admission pool and
+//! the single-flight device, and the cell reports load-dependent QoE —
+//! mean/p99 TTFT *including* queue delay, the queue delay itself, and
+//! server utilization. Cells fan out across cores via
+//! [`common::par_map`] with per-cell deterministic seeding, so the wall
+//! clock drops by ≈ #cores while results stay bit-reproducible.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, par_map};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::FleetConfig;
+use crate::trace::generator::WorkloadSpec;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// One cell of the sweep grid.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub rate_rps: f64,
+    pub kind: PolicyKind,
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: GridCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub p99_tbt: f64,
+    pub mean_queue_delay: f64,
+    pub p99_queue_delay: f64,
+    pub server_utilization: f64,
+}
+
+/// Sweep parameters, shared by the `load-sweep` experiment and the
+/// `fleet_sweep` CLI subcommand.
+#[derive(Clone, Debug)]
+pub struct SweepParams {
+    pub rates: Vec<f64>,
+    pub policies: Vec<PolicyKind>,
+    pub server_slots: usize,
+    pub b: f64,
+    pub n_requests: usize,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for SweepParams {
+    fn default() -> Self {
+        SweepParams {
+            // Activity levels from idle chat to saturation (requests/s).
+            rates: vec![0.05, 0.2, 0.5, 1.0, 2.0],
+            policies: vec![
+                PolicyKind::ServerOnly,
+                PolicyKind::DeviceOnly,
+                PolicyKind::StochS,
+                PolicyKind::DiscoS,
+            ],
+            server_slots: 2,
+            b: 0.5,
+            n_requests: 400,
+            n_seeds: 3,
+            service: ServerProfile::gpt4o_mini(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+/// Run the (rate × policy) grid in parallel; cells come back in grid
+/// order (rates outer, policies inner).
+pub fn run_grid(params: &SweepParams) -> Vec<CellResult> {
+    let cells: Vec<GridCell> = params
+        .rates
+        .iter()
+        .flat_map(|&rate_rps| {
+            params
+                .policies
+                .iter()
+                .map(move |&kind| GridCell { rate_rps, kind })
+        })
+        .collect();
+    par_map(&cells, |_, cell| run_cell(params, cell))
+}
+
+fn run_cell(params: &SweepParams, cell: &GridCell) -> CellResult {
+    let fleet = FleetConfig {
+        server_slots: Some(params.server_slots),
+        device_queueing: true,
+    };
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut p99_tbt = Vec::new();
+    let mut qd_mean = Vec::new();
+    let mut qd_p99 = Vec::new();
+    let mut util = Vec::new();
+    for seed in 0..params.n_seeds {
+        // Deterministic seeding from the cell's *content* (not its grid
+        // position or worker thread): the same (rate, seed) reproduces
+        // identical numbers no matter which other cells are in the grid,
+        // and policies at the same rate run against the same trace —
+        // paired comparisons, not unpaired variance.
+        let cell_seed = seed
+            ^ cell
+                .rate_rps
+                .to_bits()
+                .rotate_left(17)
+                .wrapping_mul(0x9E3779B97F4A7C15);
+        let scenario = Scenario::new(
+            params.service.clone(),
+            params.device.clone(),
+            Constraint::Server,
+            SimConfig {
+                seed: cell_seed,
+                ..Default::default()
+            },
+        );
+        let trace = WorkloadSpec::alpaca(params.n_requests)
+            .at_rate(cell.rate_rps)
+            .generate(cell_seed ^ 0xF1EE7);
+        let policy = make_policy(cell.kind, params.b, false, &scenario, &trace, cell_seed);
+        let rep = scenario.run_fleet_report(&trace, &policy, &fleet);
+        mean_ttft.push(rep.qoe.ttft.mean);
+        p99_ttft.push(rep.qoe.ttft.p99);
+        p99_tbt.push(rep.qoe.tbt.p99);
+        qd_mean.push(rep.load.server_queue_delay.mean);
+        qd_p99.push(rep.load.server_queue_delay.p99);
+        util.push(rep.load.server_utilization().unwrap_or(0.0));
+    }
+    let avg = crate::stats::describe::mean;
+    CellResult {
+        cell: cell.clone(),
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        p99_tbt: avg(&p99_tbt),
+        mean_queue_delay: avg(&qd_mean),
+        p99_queue_delay: avg(&qd_p99),
+        server_utilization: avg(&util),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[CellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.2}", r.cell.rate_rps),
+                r.cell.kind.label().to_string(),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.3}", r.mean_queue_delay),
+                format!("{:.3}", r.p99_queue_delay),
+                format!("{:.2}", r.server_utilization),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "rate (req/s)",
+            "policy",
+            "mean TTFT",
+            "p99 TTFT",
+            "mean queue",
+            "p99 queue",
+            "server util",
+        ],
+        &rows,
+    )
+}
+
+/// The `load-sweep` experiment entry: default grid, CSV + table output.
+pub fn load_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = SweepParams {
+        n_requests: ctx.n_requests.clamp(50, 400),
+        n_seeds: ctx.n_seeds.clamp(1, 3),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "rate_rps",
+        "policy",
+        "mean_ttft",
+        "p99_ttft",
+        "p99_tbt",
+        "mean_queue_delay",
+        "p99_queue_delay",
+        "server_utilization",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            format!("{:.3}", r.cell.rate_rps),
+            r.cell.kind.label().to_string(),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.p99_tbt),
+            format!("{:.4}", r.mean_queue_delay),
+            format!("{:.4}", r.p99_queue_delay),
+            format!("{:.4}", r.server_utilization),
+        ]);
+    }
+    csv.write(&ctx.csv_path("load-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> SweepParams {
+        SweepParams {
+            rates: vec![0.05, 0.5, 2.0],
+            policies: vec![PolicyKind::ServerOnly, PolicyKind::StochS],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_rates_times_policies_in_order() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.cell.rate_rps, params.rates[i / 2]);
+            assert_eq!(r.cell.kind, params.policies[i % 2]);
+            assert!(r.mean_ttft > 0.0);
+            assert!(r.p99_ttft >= r.mean_ttft * 0.5);
+        }
+    }
+
+    #[test]
+    fn same_cell_reproduces_regardless_of_grid_shape() {
+        // A cell's numbers must depend on its content, not its position:
+        // the (0.5 rps, ServerOnly) cell from a 1-rate grid and from a
+        // 3-rate grid must be bit-identical.
+        let solo = run_grid(&SweepParams {
+            rates: vec![0.5],
+            policies: vec![PolicyKind::ServerOnly],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        });
+        let grid = run_grid(&tiny_params());
+        let in_grid = grid
+            .iter()
+            .find(|r| r.cell.rate_rps == 0.5 && r.cell.kind == PolicyKind::ServerOnly)
+            .unwrap();
+        assert_eq!(solo[0].mean_ttft.to_bits(), in_grid.mean_ttft.to_bits());
+        assert_eq!(solo[0].p99_ttft.to_bits(), in_grid.p99_ttft.to_bits());
+        assert_eq!(
+            solo[0].mean_queue_delay.to_bits(),
+            in_grid.mean_queue_delay.to_bits()
+        );
+    }
+
+    #[test]
+    fn load_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_load_sweep"),
+            n_seeds: 1,
+            n_requests: 50,
+        };
+        let out = load_sweep(&ctx).unwrap();
+        assert!(out.contains("rate (req/s)"));
+        let csv = std::fs::read_to_string(ctx.csv_path("load-sweep")).unwrap();
+        // Header + 5 rates × 4 policies.
+        assert_eq!(csv.lines().count(), 1 + 20);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

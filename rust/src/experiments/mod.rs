@@ -10,6 +10,7 @@ pub mod appendix;
 pub mod characterization;
 pub mod common;
 pub mod endtoend;
+pub mod load_sweep;
 pub mod migration_exp;
 pub mod quality_exp;
 
@@ -140,6 +141,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "table8",
             title: "Table 8: LLM service pricing",
             run: appendix::table8,
+        },
+        ExperimentDef {
+            id: "load-sweep",
+            title: "Fleet: TTFT/queue-delay vs arrival rate under server admission limits",
+            run: load_sweep::load_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

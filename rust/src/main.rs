@@ -26,6 +26,7 @@ fn main() {
         "list" => cmd_list(),
         "exp" => cmd_exp(&args),
         "simulate" => cmd_simulate(&args),
+        "fleet_sweep" | "fleet-sweep" => cmd_fleet_sweep(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         _ => {
@@ -47,6 +48,9 @@ fn print_help() {
          \x20 list        list all paper experiments\n\
          \x20 exp <id>    regenerate a table/figure (or `all`) → results/*.csv\n\
          \x20 simulate    run one scenario and print the QoE report\n\
+         \x20 fleet_sweep parallel (arrival-rate × policy) grid on the fleet simulator\n\
+         \x20             [--rates R1,R2,..] [--policies p1,p2,..] [--slots N] [--b B]\n\
+         \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
     );
@@ -151,6 +155,65 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "cost     : ${:.6} unified",
         report.total_cost(&scenario.costs)
     );
+    Ok(())
+}
+
+fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::load_sweep::{render_grid, run_grid, SweepParams};
+
+    let defaults = SweepParams::default();
+    let rates = match args.get("rates") {
+        None => defaults.rates,
+        Some(s) => s
+            .split(',')
+            .map(|r| {
+                r.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--rates expects numbers, got '{r}'"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?,
+    };
+    let policies = match args.get("policies") {
+        None => defaults.policies,
+        Some(s) => s
+            .split(',')
+            .map(|p| parse_policy(p.trim()))
+            .collect::<anyhow::Result<Vec<PolicyKind>>>()?,
+    };
+    anyhow::ensure!(!rates.is_empty(), "need at least one arrival rate");
+    anyhow::ensure!(!policies.is_empty(), "need at least one policy");
+    anyhow::ensure!(rates.iter().all(|r| *r > 0.0), "rates must be positive");
+
+    let service = ServerProfile::by_name(args.get_or("service", "GPT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown service (GPT|LLaMA|DeepSeek|Command)"))?;
+    let device = DeviceProfile::by_name(args.get_or("device", "Xiaomi14/Q-0.5B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device profile"))?;
+    let params = SweepParams {
+        rates,
+        policies,
+        server_slots: args.get_usize("slots", defaults.server_slots)?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    let n_cells = params.rates.len() * params.policies.len();
+    println!(
+        "fleet sweep: {} rates × {} policies = {n_cells} cells, \
+         {} server slots, {} requests × {} seeds per cell",
+        params.rates.len(),
+        params.policies.len(),
+        params.server_slots,
+        params.n_requests,
+        params.n_seeds
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -5,13 +5,19 @@ use crate::endpoint::EndpointKind;
 use crate::stats::describe::{sorted_percentile, Summary};
 
 /// Everything measured about one request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestRecord {
     pub id: u64,
     pub prompt_len: u32,
     pub output_len: u32,
     /// Time-to-first-token (seconds from arrival).
     pub ttft: f64,
+    /// Time the request waited in the server admission queue before its
+    /// prefill started (seconds; 0 when the server pool is unlimited or
+    /// the request never dispatched to the server).
+    pub server_queue_delay: f64,
+    /// Time the request waited for the single-flight device (seconds).
+    pub device_queue_delay: f64,
     /// Perceived inter-token gaps after delivery smoothing (§4.3):
     /// `tbts.len() == output_len − 1`.
     pub tbts: Vec<f64>,
@@ -86,6 +92,65 @@ impl Report {
     }
 }
 
+/// Load-dependent metrics surfaced by the fleet simulator: admission-queue
+/// delays, resource busy time, and concurrency over the trace horizon.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Server admission-queue delay over requests that dispatched to the
+    /// server (seconds).
+    pub server_queue_delay: Summary,
+    /// Single-flight device queue delay over requests that were granted
+    /// the device (seconds).
+    pub device_queue_delay: Summary,
+    /// Total server slot-seconds consumed.
+    pub server_busy_seconds: f64,
+    /// Total device busy seconds.
+    pub device_busy_seconds: f64,
+    /// Simulated horizon: last event time minus the first arrival
+    /// (seconds), so delayed-start traces don't dilute utilization.
+    pub horizon: f64,
+    /// Server concurrency limit, if the pool was bounded.
+    pub server_slots: Option<usize>,
+}
+
+impl LoadReport {
+    /// Mean number of concurrently-held server slots.
+    pub fn mean_server_concurrency(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.server_busy_seconds / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Server utilization in [0,1] (None when the pool is unlimited).
+    pub fn server_utilization(&self) -> Option<f64> {
+        self.server_slots.map(|slots| {
+            if self.horizon > 0.0 && slots > 0 {
+                self.server_busy_seconds / (self.horizon * slots as f64)
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Device utilization in [0,1] of the single-flight device.
+    pub fn device_utilization(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.device_busy_seconds / self.horizon
+        } else {
+            0.0
+        }
+    }
+}
+
+/// QoE report plus the load metrics of the fleet run that produced it.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub qoe: Report,
+    pub load: LoadReport,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +161,8 @@ mod tests {
             prompt_len: 50,
             output_len: 3,
             ttft,
+            server_queue_delay: 0.0,
+            device_queue_delay: 0.0,
             tbts: vec![0.2, 0.25],
             delay_num: delay,
             migrated,

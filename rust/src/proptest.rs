@@ -49,6 +49,134 @@ macro_rules! prop_assert {
 mod tests {
     use super::*;
 
+    /// The migration invariant (§4.3): under *arbitrary* handoff timing —
+    /// any migration point, any target warm-up, any source/target pacing —
+    /// the delivered token stream has no gaps, no duplicates, and
+    /// preserves order. In the timeline representation that means: the
+    /// delivery schedule emits exactly one read time per generated token
+    /// (count preserved ⇒ no gaps/duplicates), read times are monotone
+    /// (order preserved across the handoff boundary), nothing is shown
+    /// before it is generated, and pacing never beats the consumption
+    /// rate.
+    #[test]
+    fn prop_migrated_stream_no_gaps_no_dups_order_preserved() {
+        check(
+            "migration-stream-integrity",
+            256,
+            |r| {
+                let n = 2 + r.below(200) as usize;
+                let ttft = 0.02 + r.f64();
+                let r_c = 1.0 + r.f64() * 9.0;
+                // Source stream up to a random handoff index m ∈ [1, n).
+                let m = 1 + r.below(n as u64 - 1) as usize;
+                let mut gen = Vec::with_capacity(n);
+                gen.push(ttft);
+                for _ in 1..m {
+                    let g = r.f64() * 0.4;
+                    gen.push(gen.last().unwrap() + g);
+                }
+                // Handoff: the target re-prefills for t_m (arbitrary, up
+                // to several consumption intervals), then paces the tail.
+                let t_m = r.f64() * 3.0;
+                gen.push(gen.last().unwrap() + t_m);
+                for _ in (m + 1)..n {
+                    let g = r.f64() * 0.4;
+                    gen.push(gen.last().unwrap() + g);
+                }
+                (gen, r_c)
+            },
+            |(gen, r_c)| {
+                let d = crate::sim::delivery::smooth(gen, *r_c);
+                prop_assert!(
+                    d.read_times.len() == gen.len(),
+                    "token count changed across handoff: {} generated, {} delivered",
+                    gen.len(),
+                    d.read_times.len()
+                );
+                prop_assert!(
+                    d.tbts.len() + 1 == gen.len(),
+                    "perceived-gap count mismatch: {} tbts for {} tokens",
+                    d.tbts.len(),
+                    gen.len()
+                );
+                let step = 1.0 / r_c;
+                for i in 1..d.read_times.len() {
+                    prop_assert!(
+                        d.read_times[i] >= d.read_times[i - 1],
+                        "order violated at {i}"
+                    );
+                    prop_assert!(
+                        d.read_times[i] + 1e-9 >= gen[i],
+                        "token {i} delivered before generated"
+                    );
+                    prop_assert!(
+                        d.read_times[i] + 1e-9 >= d.read_times[i - 1] + step,
+                        "pacing beats consumption rate at {i}"
+                    );
+                    prop_assert!(d.tbts[i - 1] > 0.0, "non-positive perceived gap at {i}");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The same invariant end-to-end: run a migration-heavy scenario and
+    /// check every record's stream accounting survives the handoff.
+    #[test]
+    fn prop_engine_migration_preserves_stream_accounting() {
+        use crate::coordinator::policy::{Policy, PolicyKind};
+        use crate::cost::unified::Constraint;
+        use crate::profiles::{DeviceProfile, ServerProfile};
+        use crate::sim::engine::{Scenario, SimConfig};
+        use crate::trace::generator::WorkloadSpec;
+
+        let sc = Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::pixel7pro_bloom1b1(),
+            Constraint::Device,
+            SimConfig {
+                seed: 99,
+                ..Default::default()
+            },
+        );
+        let mut migrated_total = 0usize;
+        check(
+            "engine-migration-stream",
+            16,
+            |r| r.next_u64(),
+            |&seed| {
+                let trace = WorkloadSpec::alpaca(60).generate(seed);
+                let ecdf = sc.profile_server_ttft(400, seed);
+                let policy =
+                    Policy::plan(PolicyKind::DiscoD, 0.7, true, &ecdf, &trace.prompt_lens());
+                for rec in sc.run(&trace, &policy) {
+                    if rec.migrated {
+                        migrated_total += 1;
+                    }
+                    prop_assert!(
+                        rec.tbts.len() as u32 == rec.output_len - 1,
+                        "stream count broke for request {}",
+                        rec.id
+                    );
+                    let decoded =
+                        rec.cost.server_decode_tokens + rec.cost.device_decode_tokens;
+                    prop_assert!(
+                        decoded == rec.output_len as u64,
+                        "decode conservation broke: {decoded} vs {}",
+                        rec.output_len
+                    );
+                    prop_assert!(
+                        rec.tbts.iter().all(|&t| t > 0.0),
+                        "non-positive perceived gap in request {}",
+                        rec.id
+                    );
+                }
+                Ok(())
+            },
+        );
+        assert!(migrated_total > 0, "property never exercised a migration");
+    }
+
     #[test]
     fn passing_property_runs_all_cases() {
         let mut n = 0usize;

@@ -5,15 +5,24 @@
 //! prefill race between endpoints, loser cancellation, token-level
 //! migration with buffered handoff, consumption-rate delivery smoothing,
 //! unified cost metering, and single-flight device occupancy.
+//!
+//! Since the fleet refactor there is **one** request code path: the
+//! per-request trajectory lives in [`resolve_request`], parameterized by
+//! the absolute times at which the contended resources (server admission
+//! slot, single-flight device) were granted. [`Scenario::run`] is the
+//! degenerate case of the discrete-event loop in [`crate::sim::fleet`]
+//! with an unlimited server pool — exactly the paper's independent-replay
+//! methodology — while finite server pools surface queueing effects.
 
 use crate::coordinator::dispatch::Decision;
 use crate::coordinator::migration::{MigrationConfig, MigrationPlanner};
 use crate::coordinator::policy::Policy;
 use crate::cost::unified::{Constraint, CostMeter, CostParams};
 use crate::endpoint::{DeviceEndpoint, EndpointKind, ServerEndpoint, SimEndpoint};
-use crate::metrics::{Report, RequestRecord};
+use crate::metrics::{FleetReport, Report, RequestRecord};
 use crate::profiles::{DeviceProfile, ServerProfile};
 use crate::sim::delivery;
+use crate::sim::fleet::{self, FleetConfig, FleetOutcome};
 use crate::stats::ecdf::Ecdf;
 use crate::trace::{Request, Trace};
 use crate::util::rng::Rng;
@@ -105,32 +114,39 @@ impl Scenario {
     }
 
     /// Run a trace under a policy; returns per-request records.
+    ///
+    /// This is the fleet loop's degenerate configuration: unlimited server
+    /// admission (the paper's independent replay), device single-flight
+    /// per `cfg.device_queueing`.
     pub fn run(&self, trace: &Trace, policy: &Policy) -> Vec<RequestRecord> {
-        let mut rng = Rng::new(self.cfg.seed);
-        let planner = MigrationPlanner::new(self.cfg.migration, self.costs);
-        let mut device_free_at = f64::NEG_INFINITY;
-        let mut records = Vec::with_capacity(trace.len());
-        for req in &trace.requests {
-            let mut req_rng = rng.fork(req.id);
-            let rec = simulate_request(
-                req,
-                policy,
-                &self.server,
-                &self.device,
-                &planner,
-                &self.cfg,
-                &mut device_free_at,
-                &mut req_rng,
-            );
-            records.push(rec);
-        }
-        records
+        self.run_fleet(trace, policy, &FleetConfig::replay(self.cfg.device_queueing))
+            .records
     }
 
     /// Run and aggregate.
     pub fn run_report(&self, trace: &Trace, policy: &Policy) -> Report {
         let records = self.run(trace, policy);
         Report::from_records(&records, policy.constraint())
+    }
+
+    /// Run under an explicit fleet configuration (finite server pool,
+    /// admission queueing); returns records plus load metrics.
+    pub fn run_fleet(&self, trace: &Trace, policy: &Policy, fleet: &FleetConfig) -> FleetOutcome {
+        fleet::run_fleet(self, trace, policy, fleet)
+    }
+
+    /// Run a fleet configuration and aggregate QoE + load metrics.
+    pub fn run_fleet_report(
+        &self,
+        trace: &Trace,
+        policy: &Policy,
+        fleet: &FleetConfig,
+    ) -> FleetReport {
+        let out = self.run_fleet(trace, policy, fleet);
+        FleetReport {
+            qoe: Report::from_records(&out.records, policy.constraint()),
+            load: out.load,
+        }
     }
 }
 
@@ -144,32 +160,97 @@ fn consumed_at(t: f64, ttft: f64, r_c: f64, n: u32) -> u32 {
     k.min(n)
 }
 
-/// Simulate one request. Times inside are relative to arrival; device
-/// occupancy converts through `device_free_at` (absolute).
-#[allow(clippy::too_many_arguments)]
-fn simulate_request(
+/// Latency samples drawn at dispatch time, before resource grants resolve.
+///
+/// Drawing these up front (in the legacy order: decision, server TTFT,
+/// device prefill) keeps the per-request random stream identical no matter
+/// when the fleet loop resolves the request, so the unlimited-pool fleet
+/// run is byte-identical to the historical per-request replay.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PreDrawn {
+    pub decision: Decision,
+    /// Intrinsic server prefill latency sample (None when the decision
+    /// never dispatches to the server).
+    pub server_sample: Option<f64>,
+    /// Device prefill duration sample (always drawn, as the legacy path
+    /// did, so streams stay aligned).
+    pub dev_prefill_dur: f64,
+}
+
+pub(crate) fn pre_draw(
     req: &Request,
+    policy: &Policy,
+    server: &ServerEndpoint,
+    device: &DeviceEndpoint,
+    rng: &mut Rng,
+) -> PreDrawn {
+    let l = req.prompt_len;
+    let decision = policy.decide(l, rng);
+    let server_sample = if decision.uses_server() {
+        Some(server.sample_ttft(l, rng))
+    } else {
+        None
+    };
+    let dev_prefill_dur = device.sample_ttft(l, rng);
+    PreDrawn {
+        decision,
+        server_sample,
+        dev_prefill_dur,
+    }
+}
+
+/// Absolute times at which the contended resources were granted.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ResourceTimes {
+    /// When the server admitted the request (prefill start). `None` when
+    /// the request never dispatched to the server, or was cancelled while
+    /// still queued (the device produced a token first).
+    pub server_admit: Option<f64>,
+    /// When the single-flight device became available to the request;
+    /// `f64::INFINITY` when the device was never granted (unused, or the
+    /// server produced a token while the request was still queued).
+    pub device_grant: f64,
+}
+
+/// A resolved request trajectory plus the resource-release times the
+/// fleet loop needs to schedule.
+#[derive(Clone, Debug)]
+pub(crate) struct Resolved {
+    pub record: RequestRecord,
+    /// Absolute time the device frees (None when never held).
+    pub device_busy_until: Option<f64>,
+    /// Absolute time the server admission slot frees (None when never
+    /// admitted).
+    pub server_release: Option<f64>,
+}
+
+/// Simulate one request given its resource-grant times. Times inside are
+/// relative to arrival; `ResourceTimes` converts through absolute time.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn resolve_request(
+    req: &Request,
+    pre: &PreDrawn,
     policy: &Policy,
     server: &ServerEndpoint,
     device: &DeviceEndpoint,
     planner: &MigrationPlanner,
     cfg: &SimConfig,
-    device_free_at: &mut f64,
+    times: ResourceTimes,
     rng: &mut Rng,
-) -> RequestRecord {
+) -> Resolved {
     let l = req.prompt_len;
     let n = req.output_len.min(cfg.gen_limit).max(1);
     let r_c = cfg.migration.consumption_rate;
-    let decision = policy.decide(l, rng);
+    let decision = pre.decision;
 
     let mut cost = CostMeter::default();
 
     // --- prefill race -------------------------------------------------
     let use_server = decision.uses_server();
-    let server_first = if use_server {
-        Some(server.sample_ttft(l, rng))
-    } else {
-        None
+    // Perceived server TTFT = admission-queue delay + intrinsic prefill.
+    let server_first = match (times.server_admit, pre.server_sample) {
+        (Some(admit), Some(sample)) => Some((admit - req.arrival).max(0.0) + sample),
+        _ => None,
     };
 
     let device_wait = match decision {
@@ -177,13 +258,8 @@ fn simulate_request(
         Decision::ServerOnly => f64::INFINITY,
         Decision::Both { device_wait } => device_wait,
     };
-    // Device is single-flight: wait for any earlier request to finish
-    // (only when cross-request queueing is modeled).
-    let queue_wait = if cfg.device_queueing {
-        (*device_free_at - req.arrival).max(0.0)
-    } else {
-        0.0
-    };
+    // Device is single-flight: wait for the grant from the device queue.
+    let queue_wait = (times.device_grant - req.arrival).max(0.0);
     let dev_start = device_wait.max(queue_wait);
     let mut use_device = decision.uses_device() && dev_start.is_finite();
     // The wait-time strategy (§4.2): skip device start if the server
@@ -195,7 +271,7 @@ fn simulate_request(
             }
         }
     }
-    let dev_prefill_dur = device.sample_ttft(l, rng);
+    let dev_prefill_dur = pre.dev_prefill_dur;
     let device_first = dev_start + dev_prefill_dur;
 
     assert!(
@@ -217,8 +293,10 @@ fn simulate_request(
         (None, false) => unreachable!(),
     };
 
-    // Prefill costs. The server bills the full prompt once dispatched;
-    // the device burns energy for however much prefill it ran.
+    // Prefill costs. The server bills the full prompt once dispatched
+    // (even when cancelled in the admission queue — the request left the
+    // client and the provider meters it); the device burns energy for
+    // however much prefill it ran.
     if use_server {
         cost.server_prefill_tokens += l as u64;
     }
@@ -346,6 +424,7 @@ fn simulate_request(
     let device_active = use_device
         && (winner == EndpointKind::Device
             || device_busy_until_rel > f64::NEG_INFINITY);
+    let mut device_busy_until: Option<f64> = None;
     if device_active {
         let until = if winner == EndpointKind::Device {
             if migrated {
@@ -356,21 +435,45 @@ fn simulate_request(
         } else {
             device_busy_until_rel
         };
-        *device_free_at = (req.arrival + until).max(*device_free_at);
+        device_busy_until = Some(req.arrival + until);
     }
     if migrated && winner == EndpointKind::Server {
         // Device became the decode target.
-        *device_free_at = (req.arrival + *gen.last().unwrap()).max(*device_free_at);
+        let t = req.arrival + *gen.last().unwrap();
+        device_busy_until = Some(device_busy_until.map_or(t, |u| u.max(t)));
     }
+
+    // --- server slot release --------------------------------------------
+    // The admission slot is held from admit until the server-side stream
+    // ends: last generated token (or the handoff point when generation
+    // migrated off the server), or the cancellation moment when the
+    // server lost the prefill race. Migration *onto* the server joins the
+    // running batch and is not modeled as a second admission.
+    let server_release = times.server_admit.map(|admit| {
+        let rel = if winner == EndpointKind::Server {
+            if migrated {
+                gen[migrate_at_idx as usize - 1]
+            } else {
+                *gen.last().unwrap()
+            }
+        } else {
+            ttft
+        };
+        (req.arrival + rel).max(admit)
+    });
 
     // --- delivery smoothing & metrics -----------------------------------
     let d = delivery::smooth(&gen, r_c);
 
-    RequestRecord {
+    let record = RequestRecord {
         id: req.id,
         prompt_len: l,
         output_len: n,
         ttft,
+        server_queue_delay: times
+            .server_admit
+            .map_or(0.0, |admit| (admit - req.arrival).max(0.0)),
+        device_queue_delay: if queue_wait.is_finite() { queue_wait } else { 0.0 },
         tbts: d.tbts,
         delay_num: d.delay_num,
         migrated,
@@ -378,6 +481,11 @@ fn simulate_request(
         cost,
         used_server: use_server,
         used_device: use_device,
+    };
+    Resolved {
+        record,
+        device_busy_until,
+        server_release,
     }
 }
 
@@ -587,9 +695,11 @@ mod tests {
             records[1].ttft,
             records[0].ttft
         );
+        assert!(records[1].device_queue_delay > 0.0);
         // With queueing off (paper methodology) the two are independent.
         let records = sc.run(&trace, &policy);
         assert!(records[1].ttft < records[0].ttft * 1.5);
+        assert_eq!(records[1].device_queue_delay, 0.0);
     }
 
     #[test]

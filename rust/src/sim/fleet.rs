@@ -1,0 +1,644 @@
+//! Discrete-event fleet simulator: N concurrent requests contending for a
+//! bounded server and a single-flight device.
+//!
+//! The paper evaluates per-request (each request sees the profiled latency
+//! distributions independently). At fleet scale the interesting effects
+//! are *contention* effects: a server with a finite admission capacity
+//! builds a queue as load rises, and the on-device model can only run one
+//! inference at a time. This module adds exactly that, as a binary-heap
+//! event loop over:
+//!
+//! * **Arrival** events — fork the request's RNG, draw its dispatch
+//!   decision through the unchanged `coordinator::policy`, pre-draw its
+//!   latency samples, and enqueue it on the resources it needs;
+//! * **grant** transitions — a FIFO server pool with `server_slots`
+//!   concurrent admissions and a FIFO single-flight device pool;
+//! * **first-token probes** — when one endpoint produces its first token
+//!   while the request is still *queued* on the other endpoint, the
+//!   queued entry is cancelled (the §4.2 wait-time strategy extended
+//!   across the fleet: nobody waits on a resource after the race is won);
+//! * **release** events — slots free at stream end, handoff, or loser
+//!   cancellation, admitting the next queued request.
+//!
+//! The per-request trajectory itself (race, cancellation, migration,
+//! delivery smoothing, cost metering) is [`crate::sim::engine`]'s
+//! [`resolve_request`] — one code path shared with the legacy replay,
+//! which is the degenerate configuration [`FleetConfig::replay`]
+//! (unlimited server pool). With that configuration the fleet loop is
+//! byte-identical to the historical per-request engine: per-request RNG
+//! streams are forked in trace order and all latency samples are
+//! pre-drawn at arrival, so resolution timing cannot perturb them.
+//!
+//! Determinism: the heap orders events by `(time, sequence)` with
+//! `f64::total_cmp`, so runs are bit-reproducible from `SimConfig.seed`.
+
+use crate::coordinator::migration::MigrationPlanner;
+use crate::coordinator::policy::Policy;
+use crate::metrics::{LoadReport, RequestRecord};
+use crate::sim::engine::{pre_draw, resolve_request, PreDrawn, ResourceTimes, Scenario};
+use crate::stats::describe::Summary;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Fleet-level resource configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Concurrent server admissions; `None` = unlimited (the paper's
+    /// independent replay, where server TTFT already folds queueing in
+    /// statistically).
+    pub server_slots: Option<usize>,
+    /// Model the single-flight device across requests.
+    pub device_queueing: bool,
+}
+
+impl FleetConfig {
+    /// The legacy per-request replay configuration.
+    pub fn replay(device_queueing: bool) -> FleetConfig {
+        FleetConfig {
+            server_slots: None,
+            device_queueing,
+        }
+    }
+
+    /// A bounded-server fleet with single-flight device contention.
+    pub fn bounded(server_slots: usize) -> FleetConfig {
+        FleetConfig {
+            server_slots: Some(server_slots.max(1)),
+            device_queueing: true,
+        }
+    }
+}
+
+/// Result of a fleet run: per-request records (trace order) plus load
+/// metrics.
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    pub records: Vec<RequestRecord>,
+    pub load: LoadReport,
+}
+
+// ---------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EvKind {
+    Arrival(usize),
+    /// A server admission slot frees; admit the next queued request.
+    ServerRelease,
+    /// The device frees; grant it to the next queued request.
+    DeviceRelease,
+    /// The server produced its first token while the request was still
+    /// queued for the device: cancel the device entry and resolve.
+    ServerFirstProbe(usize),
+    /// The device produced its first token while the request was still
+    /// queued for server admission: cancel the server entry and resolve.
+    DeviceFirstProbe(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Resource pools
+// ---------------------------------------------------------------------
+
+/// FIFO pool with a (possibly unlimited) concurrency cap. Cancelled
+/// entries are skipped lazily at pop time.
+#[derive(Debug)]
+struct Pool {
+    cap: Option<usize>,
+    in_use: usize,
+    queue: VecDeque<usize>,
+}
+
+impl Pool {
+    fn new(cap: Option<usize>) -> Pool {
+        Pool {
+            cap,
+            in_use: 0,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Try to acquire at `now`; queues and returns None when full.
+    fn acquire(&mut self, i: usize) -> bool {
+        match self.cap {
+            None => true,
+            Some(cap) if self.in_use < cap => {
+                self.in_use += 1;
+                true
+            }
+            _ => {
+                self.queue.push_back(i);
+                false
+            }
+        }
+    }
+
+    /// Release one unit; returns the next non-cancelled queued request to
+    /// grant, if any (the unit transfers to it).
+    fn release(&mut self, cancelled: &[bool]) -> Option<usize> {
+        while let Some(j) = self.queue.pop_front() {
+            if !cancelled[j] {
+                return Some(j);
+            }
+        }
+        self.in_use = self.in_use.saturating_sub(1);
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// The simulator
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct ReqState {
+    pre: PreDrawn,
+    rng: Rng,
+    needs_server: bool,
+    needs_device: bool,
+    server_admit: Option<f64>,
+    device_grant: Option<f64>,
+    resolved: bool,
+}
+
+struct FleetSim<'a> {
+    scenario: &'a Scenario,
+    trace: &'a Trace,
+    policy: &'a Policy,
+    planner: MigrationPlanner,
+    fleet: FleetConfig,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    states: Vec<Option<ReqState>>,
+    /// Queue-entry cancellation flags, indexed by request. These live
+    /// outside `ReqState` (single source of truth) so `Pool::release`
+    /// can consult them while the simulator is otherwise borrowed.
+    server_cancelled: Vec<bool>,
+    device_cancelled: Vec<bool>,
+    server_pool: Pool,
+    device_pool: Pool,
+    records: Vec<Option<RequestRecord>>,
+    server_delays: Vec<f64>,
+    device_delays: Vec<f64>,
+    server_busy: f64,
+    device_busy: f64,
+    horizon: f64,
+}
+
+impl<'a> FleetSim<'a> {
+    fn push(&mut self, time: f64, kind: EvKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Request `i`, borrowed for the trace lifetime (decoupled from
+    /// `&self`, so the loop can mutate simulator state while holding it).
+    fn req(&self, i: usize) -> &'a crate::trace::Request {
+        &self.trace.requests[i]
+    }
+
+    fn run(mut self) -> FleetOutcome {
+        // Fork per-request RNG streams in trace order (not event order):
+        // this pins the root RNG sequence to the trace, matching the
+        // legacy engine draw-for-draw.
+        let trace = self.trace;
+        let mut root = Rng::new(self.scenario.cfg.seed);
+        let mut rngs: Vec<Option<Rng>> = trace
+            .requests
+            .iter()
+            .map(|r| Some(root.fork(r.id)))
+            .collect();
+        for (i, req) in trace.requests.iter().enumerate() {
+            self.push(req.arrival, EvKind::Arrival(i));
+        }
+
+        while let Some(ev) = self.heap.pop() {
+            if ev.time.is_finite() {
+                self.horizon = self.horizon.max(ev.time);
+            }
+            match ev.kind {
+                EvKind::Arrival(i) => {
+                    let req = self.req(i);
+                    let mut rng = rngs[i].take().expect("arrival fires once");
+                    let pre = pre_draw(
+                        req,
+                        self.policy,
+                        &self.scenario.server,
+                        &self.scenario.device,
+                        &mut rng,
+                    );
+                    let needs_server = pre.decision.uses_server();
+                    let needs_device = pre.decision.uses_device();
+                    self.states[i] = Some(ReqState {
+                        pre,
+                        rng,
+                        needs_server,
+                        needs_device,
+                        server_admit: None,
+                        device_grant: None,
+                        resolved: false,
+                    });
+                    if needs_server && self.server_pool.acquire(i) {
+                        self.on_server_admit(i, ev.time);
+                    }
+                    if needs_device
+                        && (!self.fleet.device_queueing || self.device_pool.acquire(i))
+                    {
+                        self.on_device_grant(i, ev.time);
+                    }
+                    self.try_resolve(i, ev.time);
+                }
+                EvKind::ServerRelease => {
+                    let next = self.server_pool.release(&self.server_cancelled);
+                    if let Some(j) = next {
+                        self.on_server_admit(j, ev.time);
+                        self.try_resolve(j, ev.time);
+                    }
+                }
+                EvKind::DeviceRelease => {
+                    let next = self.device_pool.release(&self.device_cancelled);
+                    if let Some(j) = next {
+                        self.on_device_grant(j, ev.time);
+                        self.try_resolve(j, ev.time);
+                    }
+                }
+                EvKind::ServerFirstProbe(i) => {
+                    let pending = !self.device_cancelled[i] && {
+                        let st = self.state(i);
+                        !st.resolved && st.device_grant.is_none()
+                    };
+                    if pending {
+                        // The server answered first: leave the device queue.
+                        self.device_cancelled[i] = true;
+                        self.try_resolve(i, ev.time);
+                    }
+                }
+                EvKind::DeviceFirstProbe(i) => {
+                    let pending = !self.server_cancelled[i] && {
+                        let st = self.state(i);
+                        !st.resolved && st.server_admit.is_none()
+                    };
+                    if pending {
+                        // The device answered first: abandon the admission
+                        // queue (the provider still bills the dispatched
+                        // prompt; see `resolve_request`).
+                        self.server_cancelled[i] = true;
+                        self.try_resolve(i, ev.time);
+                    }
+                }
+            }
+        }
+
+        let records: Vec<RequestRecord> = self
+            .records
+            .into_iter()
+            .map(|r| r.expect("every request resolves"))
+            .collect();
+        // Horizon is measured from the first arrival, not absolute time
+        // zero, so traces with a delayed start (e.g. session ramp-up) do
+        // not dilute utilization with an idle prefix.
+        let t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+        let load = LoadReport {
+            server_queue_delay: Summary::of(&self.server_delays),
+            device_queue_delay: Summary::of(&self.device_delays),
+            server_busy_seconds: self.server_busy,
+            device_busy_seconds: self.device_busy,
+            horizon: (self.horizon - t0).max(0.0),
+            server_slots: self.fleet.server_slots,
+        };
+        FleetOutcome { records, load }
+    }
+
+    fn state(&self, i: usize) -> &ReqState {
+        self.states[i].as_ref().expect("state exists after arrival")
+    }
+
+    fn state_mut(&mut self, i: usize) -> &mut ReqState {
+        self.states[i].as_mut().expect("state exists after arrival")
+    }
+
+    fn on_server_admit(&mut self, i: usize, now: f64) {
+        let arrival = self.trace.requests[i].arrival;
+        let dev_cancelled = self.device_cancelled[i];
+        let (sample, device_pending) = {
+            let st = self.state_mut(i);
+            st.server_admit = Some(now);
+            (
+                st.pre.server_sample.expect("server users have a sample"),
+                st.needs_device && st.device_grant.is_none() && !dev_cancelled,
+            )
+        };
+        self.server_delays.push((now - arrival).max(0.0));
+        if device_pending {
+            // First token lands at admit + intrinsic prefill; if the
+            // device is still queued then, it is skipped (§4.2).
+            self.push(now + sample, EvKind::ServerFirstProbe(i));
+        }
+    }
+
+    fn on_device_grant(&mut self, i: usize, now: f64) {
+        let req = self.req(i);
+        let srv_cancelled = self.server_cancelled[i];
+        let (dev_first_abs, server_pending) = {
+            let st = self.state_mut(i);
+            st.device_grant = Some(now);
+            let device_wait = match st.pre.decision {
+                crate::coordinator::dispatch::Decision::Both { device_wait } => device_wait,
+                _ => 0.0,
+            };
+            let dev_start_rel = device_wait.max((now - req.arrival).max(0.0));
+            let dev_first_abs = req.arrival + dev_start_rel + st.pre.dev_prefill_dur;
+            (
+                dev_first_abs,
+                st.needs_server && st.server_admit.is_none() && !srv_cancelled,
+            )
+        };
+        self.device_delays.push((now - req.arrival).max(0.0));
+        if server_pending && dev_first_abs.is_finite() {
+            self.push(dev_first_abs, EvKind::DeviceFirstProbe(i));
+        }
+    }
+
+    /// Resolve the request once every resource it needs is granted or
+    /// cancelled.
+    fn try_resolve(&mut self, i: usize, now: f64) {
+        let srv_cancelled = self.server_cancelled[i];
+        let dev_cancelled = self.device_cancelled[i];
+        let ready = {
+            let st = self.state(i);
+            !st.resolved
+                && (!st.needs_server || st.server_admit.is_some() || srv_cancelled)
+                && (!st.needs_device || st.device_grant.is_some() || dev_cancelled)
+        };
+        if !ready {
+            return;
+        }
+        let req = self.req(i);
+        let (times, pre, mut rng, device_grant, server_was_admitted) = {
+            let st = self.state_mut(i);
+            st.resolved = true;
+            let times = ResourceTimes {
+                server_admit: if srv_cancelled { None } else { st.server_admit },
+                device_grant: if dev_cancelled {
+                    f64::INFINITY
+                } else {
+                    st.device_grant.unwrap_or(f64::INFINITY)
+                },
+            };
+            (
+                times,
+                st.pre,
+                st.rng.clone(),
+                st.device_grant,
+                st.server_admit.is_some() && !srv_cancelled,
+            )
+        };
+        let resolved = resolve_request(
+            req,
+            &pre,
+            self.policy,
+            &self.scenario.server,
+            &self.scenario.device,
+            &self.planner,
+            &self.scenario.cfg,
+            times,
+            &mut rng,
+        );
+
+        // Completion horizon: last delivered token of this stream.
+        let done = req.arrival + resolved.record.ttft + resolved.record.tbts.iter().sum::<f64>();
+        if done.is_finite() {
+            self.horizon = self.horizon.max(done);
+        }
+
+        // Server slot accounting + release.
+        if server_was_admitted {
+            let admit = times.server_admit.expect("admitted");
+            let release = resolved.server_release.unwrap_or(admit).max(admit);
+            self.server_busy += release - admit;
+            if self.fleet.server_slots.is_some() {
+                self.push(release.max(now), EvKind::ServerRelease);
+            }
+        }
+        // (An entry cancelled while still queued holds no slot; the
+        // lazily-skipped queue entry frees nothing.)
+
+        // Device accounting + release.
+        if let (Some(grant), false) = (device_grant, dev_cancelled) {
+            let until = resolved.device_busy_until.unwrap_or(grant).max(grant);
+            self.device_busy += until - grant;
+            if self.fleet.device_queueing {
+                self.push(until.max(now), EvKind::DeviceRelease);
+            }
+        }
+
+        self.records[i] = Some(resolved.record);
+    }
+}
+
+/// Run a trace through the fleet loop. Requests must arrive in
+/// nondecreasing time order (the trace generators guarantee this); ties
+/// are broken in trace order.
+pub fn run_fleet(
+    scenario: &Scenario,
+    trace: &Trace,
+    policy: &Policy,
+    fleet: &FleetConfig,
+) -> FleetOutcome {
+    let n = trace.len();
+    // A zero-slot pool could never admit anyone; normalize once so the
+    // pool and the reported LoadReport.server_slots always agree.
+    let fleet = FleetConfig {
+        server_slots: fleet.server_slots.map(|s| s.max(1)),
+        device_queueing: fleet.device_queueing,
+    };
+    let sim = FleetSim {
+        scenario,
+        trace,
+        policy,
+        planner: MigrationPlanner::new(scenario.cfg.migration, scenario.costs),
+        fleet,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        states: (0..n).map(|_| None).collect(),
+        server_cancelled: vec![false; n],
+        device_cancelled: vec![false; n],
+        server_pool: Pool::new(fleet.server_slots),
+        device_pool: Pool::new(if fleet.device_queueing { Some(1) } else { None }),
+        records: (0..n).map(|_| None).collect(),
+        server_delays: Vec::new(),
+        device_delays: Vec::new(),
+        server_busy: 0.0,
+        device_busy: 0.0,
+        horizon: 0.0,
+    };
+    sim.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::cost::unified::Constraint;
+    use crate::profiles::{DeviceProfile, ServerProfile};
+    use crate::sim::engine::SimConfig;
+    use crate::trace::generator::{Arrival, WorkloadSpec};
+
+    fn scenario(seed: u64) -> Scenario {
+        Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Server,
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn trace_at_gap(n: usize, gap: f64, seed: u64) -> Trace {
+        WorkloadSpec {
+            arrival: Arrival::Fixed { gap },
+            ..WorkloadSpec::alpaca(n)
+        }
+        .generate(seed)
+    }
+
+    #[test]
+    fn unlimited_fleet_is_byte_identical_to_replay() {
+        let sc = scenario(21);
+        let trace = WorkloadSpec::alpaca(300).generate(5);
+        let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+        let legacy = sc.run(&trace, &policy);
+        let fleet = run_fleet(&sc, &trace, &policy, &FleetConfig::replay(false));
+        assert_eq!(legacy, fleet.records);
+    }
+
+    #[test]
+    fn generous_capacity_matches_replay_closely() {
+        // With capacity far above offered load the admission queue never
+        // forms and the bounded fleet reproduces the replay results.
+        let sc = scenario(22);
+        let trace = trace_at_gap(200, 60.0, 6);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let replay = sc.run_report(&trace, &policy);
+        let fleet = sc.run_fleet_report(
+            &trace,
+            &policy,
+            &FleetConfig {
+                server_slots: Some(64),
+                device_queueing: false,
+            },
+        );
+        let dm = (fleet.qoe.ttft.mean - replay.ttft.mean).abs() / replay.ttft.mean;
+        let dp = (fleet.qoe.ttft.p99 - replay.ttft.p99).abs() / replay.ttft.p99;
+        assert!(dm < 0.02, "mean TTFT drift {dm:.4}");
+        assert!(dp < 0.02, "p99 TTFT drift {dp:.4}");
+        assert!(fleet.load.server_queue_delay.max < 1e-9);
+    }
+
+    // (Queue-delay monotonicity in load is asserted once, end-to-end, in
+    // tests/integration.rs::fleet_queue_delay_monotone_in_load.)
+
+    #[test]
+    fn server_utilization_bounded_by_one() {
+        let sc = scenario(24);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let trace = trace_at_gap(120, 0.5, 8);
+        let out = sc.run_fleet_report(&trace, &policy, &FleetConfig::bounded(2));
+        let util = out.load.server_utilization().unwrap();
+        assert!(util > 0.5, "overloaded pool should be busy, util={util:.3}");
+        assert!(util <= 1.0 + 1e-9, "util {util:.3} > 1");
+        assert!(out.load.mean_server_concurrency() <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn device_fallback_bounds_overloaded_server() {
+        // A slow server (DeepSeek: ~1.25 s TTFT + ~30 tok/s decode) with
+        // one admission slot at ~1.3× overload queues without bound under
+        // ServerOnly. Racing both endpoints lets the single-flight device
+        // absorb the traffic (short outputs keep its service time under
+        // the arrival gap), so the first token stays bounded AND winning
+        // devices cancel the queued server entries, shedding server load.
+        let sc = Scenario::new(
+            ServerProfile::deepseek_v25(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Server,
+            SimConfig {
+                seed: 25,
+                ..Default::default()
+            },
+        );
+        let spec = WorkloadSpec {
+            arrival: Arrival::Fixed { gap: 1.4 },
+            prompt: crate::trace::generator::LengthModel::new(20.0, 0.5, 4, 128),
+            output: crate::trace::generator::LengthModel::new(16.0, 0.3, 4, 32),
+            ..WorkloadSpec::alpaca(120)
+        };
+        let trace = spec.generate(9);
+        let fleet_cfg = FleetConfig {
+            server_slots: Some(1),
+            device_queueing: true,
+        };
+        let server_only = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let race = Policy::simple(PolicyKind::StochS, 1.0, false);
+        let rs = sc.run_fleet_report(&trace, &server_only, &fleet_cfg);
+        let rr = sc.run_fleet_report(&trace, &race, &fleet_cfg);
+        assert!(
+            rs.qoe.ttft.p99 > 3.0 * rr.qoe.ttft.p99,
+            "device fallback should bound p99: ServerOnly {:.2}s vs race {:.2}s",
+            rs.qoe.ttft.p99,
+            rr.qoe.ttft.p99
+        );
+        assert!(
+            rr.qoe.ttft.p99 < 10.0,
+            "raced p99 should stay bounded, got {:.2}s",
+            rr.qoe.ttft.p99
+        );
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic() {
+        let sc = scenario(26);
+        let trace = trace_at_gap(100, 1.0, 10);
+        let policy = Policy::simple(PolicyKind::StochS, 0.8, false);
+        let cfg = FleetConfig::bounded(2);
+        let a = run_fleet(&sc, &trace, &policy, &cfg);
+        let b = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(a.records, b.records);
+    }
+}

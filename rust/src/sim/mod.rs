@@ -1,12 +1,49 @@
 //! Deterministic workload simulation.
 //!
-//! [`delivery`] models the user-side token consumption schedule (§4.3);
-//! [`engine`] replays a trace against simulated endpoints under a policy,
-//! producing per-request [`crate::metrics::RequestRecord`]s. Every run is
-//! reproducible from its seed; the paper's "mean over 10 runs" becomes a
-//! seed sweep.
+//! Three layers, one request code path:
+//!
+//! * [`delivery`] models the user-side token consumption schedule (§4.3):
+//!   tokens are paced at the consumption rate `r_c`, a buffer absorbs
+//!   generation jitter, and tokens that miss the schedule count toward
+//!   `delay_num`.
+//! * [`engine`] holds the per-request trajectory — the prefill race,
+//!   loser cancellation, token-level migration with buffered handoff,
+//!   and unified cost metering — parameterized by the absolute times the
+//!   contended resources were granted, plus the [`engine::Scenario`]
+//!   front door.
+//! * [`fleet`] is the discrete-event loop that produces those grant
+//!   times: a binary-heap event queue in which N concurrent requests
+//!   contend for a server with a configurable concurrency limit
+//!   (`FleetConfig::server_slots`) plus FIFO admission queue, and for
+//!   the single-flight device. Dispatch and migration decisions flow
+//!   through `coordinator::policy` / `coordinator::migration` unchanged.
+//!
+//! # Fleet model and knobs
+//!
+//! * `FleetConfig::replay(device_queueing)` — the degenerate
+//!   configuration: unlimited server admission. This reproduces the
+//!   paper's per-request replay methodology exactly (server TTFT
+//!   distributions already fold the provider's own queueing in
+//!   statistically); [`engine::Scenario::run`] is this configuration.
+//! * `FleetConfig { server_slots: Some(c), .. }` — a bounded admission
+//!   pool: requests beyond `c` concurrent admissions wait in FIFO order,
+//!   and their perceived TTFT includes the queue delay. Load-dependent
+//!   metrics (queue delay, busy seconds, utilization, horizon) surface
+//!   in [`crate::metrics::LoadReport`].
+//! * Arrival processes live in `trace::generator`: Poisson and Gamma
+//!   inter-arrivals (`Arrival::Poisson` / `Arrival::Gamma` — CV above or
+//!   below 1 for burstier or smoother-than-Poisson traffic), fixed gaps,
+//!   and per-user session workloads (`SessionSpec`) that overlay many
+//!   users' request streams into one fleet trace.
+//!
+//! Every run is reproducible bit-for-bit from `SimConfig.seed`: the event
+//! heap breaks time ties deterministically and per-request RNG streams
+//! are forked in trace order, independent of event interleaving. The
+//! paper's "mean over 10 runs" becomes a seed sweep.
 
 pub mod delivery;
 pub mod engine;
+pub mod fleet;
 
 pub use engine::{Scenario, SimConfig};
+pub use fleet::{FleetConfig, FleetOutcome};

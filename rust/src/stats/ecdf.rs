@@ -114,6 +114,56 @@ mod tests {
     }
 
     #[test]
+    fn quantile_single_sample_is_constant() {
+        let e = Ecdf::new(vec![3.5]);
+        for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            assert_eq!(e.quantile(q), 3.5, "q={q}");
+        }
+        // Out-of-range q clamps rather than extrapolating.
+        assert_eq!(e.quantile(-0.5), 3.5);
+        assert_eq!(e.quantile(7.0), 3.5);
+        assert_eq!(e.cdf(3.5), 1.0);
+        assert_eq!(e.cdf(3.4999), 0.0);
+        assert_eq!(e.survival(3.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_q0_q1_are_extremes() {
+        let e = ecdf4();
+        assert_eq!(e.quantile(0.0), e.min());
+        assert_eq!(e.quantile(1.0), e.max());
+        assert_eq!(e.quantile(-3.0), e.min());
+        assert_eq!(e.quantile(42.0), e.max());
+    }
+
+    #[test]
+    fn prop_quantile_extremes_and_monotonicity() {
+        use crate::util::rng::Rng;
+        crate::proptest::check(
+            "ecdf-quantile-edges",
+            64,
+            |r| {
+                let n = 1 + r.below(300) as usize;
+                let mut rr = Rng::new(r.next_u64());
+                (0..n).map(|_| rr.lognormal(0.0, 1.0)).collect::<Vec<f64>>()
+            },
+            |samples| {
+                let e = Ecdf::new(samples.clone());
+                crate::prop_assert!(e.quantile(0.0) == e.min(), "q=0 must be the min");
+                crate::prop_assert!(e.quantile(1.0) == e.max(), "q=1 must be the max");
+                let mut last = f64::NEG_INFINITY;
+                for i in 0..=10 {
+                    let q = i as f64 / 10.0;
+                    let v = e.quantile(q);
+                    crate::prop_assert!(v >= last, "quantile not monotone at q={q}");
+                    last = v;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn mean_min_max() {
         let e = ecdf4();
         assert_eq!(e.mean(), 2.5);

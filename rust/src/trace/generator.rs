@@ -14,8 +14,36 @@ use crate::util::rng::Rng;
 pub enum Arrival {
     /// Poisson process: exponential gaps with the given mean (seconds).
     Poisson { mean_gap: f64 },
+    /// Renewal process with Gamma inter-arrivals: `cv` is the
+    /// coefficient of variation of the gap (cv = 1 recovers Poisson;
+    /// cv > 1 is burstier, cv < 1 smoother). Shape k = 1/cv²,
+    /// scale θ = mean_gap·cv².
+    Gamma { mean_gap: f64, cv: f64 },
     /// Fixed inter-arrival gap (Fig. 2 uses identical prompts @ 60 s).
     Fixed { gap: f64 },
+}
+
+impl Arrival {
+    /// Draw one inter-arrival gap.
+    pub fn sample_gap(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Arrival::Poisson { mean_gap } => rng.exponential(1.0 / mean_gap),
+            Arrival::Gamma { mean_gap, cv } => {
+                assert!(*cv > 0.0, "gamma arrivals need cv > 0");
+                let shape = 1.0 / (cv * cv);
+                rng.gamma(shape, mean_gap / shape)
+            }
+            Arrival::Fixed { gap } => *gap,
+        }
+    }
+
+    /// Mean inter-arrival gap of the process (seconds).
+    pub fn mean_gap(&self) -> f64 {
+        match self {
+            Arrival::Poisson { mean_gap } | Arrival::Gamma { mean_gap, .. } => *mean_gap,
+            Arrival::Fixed { gap } => *gap,
+        }
+    }
 }
 
 /// Log-normal length model with clamping.
@@ -79,6 +107,23 @@ impl WorkloadSpec {
         }
     }
 
+    /// Copy of this spec at a target aggregate arrival rate (requests/s),
+    /// keeping the arrival process family. The fleet load sweeps use this
+    /// to scan activity levels.
+    pub fn at_rate(&self, rate_rps: f64) -> WorkloadSpec {
+        assert!(rate_rps > 0.0, "rate must be positive");
+        let mean_gap = 1.0 / rate_rps;
+        let arrival = match &self.arrival {
+            Arrival::Gamma { cv, .. } => Arrival::Gamma { mean_gap, cv: *cv },
+            Arrival::Fixed { .. } => Arrival::Fixed { gap: mean_gap },
+            Arrival::Poisson { .. } => Arrival::Poisson { mean_gap },
+        };
+        WorkloadSpec {
+            arrival,
+            ..self.clone()
+        }
+    }
+
     /// Generate a concrete trace.
     pub fn generate(&self, seed: u64) -> Trace {
         let mut rng = Rng::new(seed);
@@ -91,12 +136,78 @@ impl WorkloadSpec {
                 prompt_len: self.prompt.sample(&mut rng),
                 output_len: self.output.sample(&mut rng),
             });
-            t += match &self.arrival {
-                Arrival::Poisson { mean_gap } => rng.exponential(1.0 / mean_gap),
-                Arrival::Fixed { gap } => *gap,
-            };
+            t += self.arrival.sample_gap(&mut rng);
         }
         Trace::new(&self.name, requests)
+    }
+}
+
+/// A multi-user session workload: each user runs an independent session of
+/// requests (its own think-time process and session start), and the fleet
+/// trace is the time-ordered overlay of all users' streams — the
+/// "millions of daily requests" shape at miniature scale.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub name: String,
+    /// Number of concurrent users.
+    pub users: usize,
+    /// Requests per user session.
+    pub requests_per_user: usize,
+    /// Think-time process between a user's consecutive requests.
+    pub think: Arrival,
+    /// Users start uniformly over [0, start_spread) seconds.
+    pub start_spread: f64,
+    pub prompt: LengthModel,
+    pub output: LengthModel,
+}
+
+impl SessionSpec {
+    /// A chat-like default: Alpaca lengths, Gamma think times (bursty,
+    /// cv = 1.5) with the given mean, users joining over one mean gap.
+    pub fn chat(users: usize, requests_per_user: usize, mean_think: f64) -> SessionSpec {
+        let alpaca = WorkloadSpec::alpaca(1);
+        SessionSpec {
+            name: format!("sessions-{users}x{requests_per_user}"),
+            users,
+            requests_per_user,
+            think: Arrival::Gamma {
+                mean_gap: mean_think,
+                cv: 1.5,
+            },
+            start_spread: mean_think.max(1.0),
+            prompt: alpaca.prompt,
+            output: alpaca.output,
+        }
+    }
+
+    /// Generate the overlaid trace: per-user streams merged and re-ids
+    /// assigned in global arrival order (so request id == trace index).
+    pub fn generate(&self, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut requests = Vec::with_capacity(self.users * self.requests_per_user);
+        for user in 0..self.users as u64 {
+            let mut urng = rng.fork(user);
+            let mut t = urng.f64() * self.start_spread;
+            for _ in 0..self.requests_per_user {
+                requests.push(Request {
+                    id: 0, // assigned after the merge
+                    arrival: t,
+                    prompt_len: self.prompt.sample(&mut urng),
+                    output_len: self.output.sample(&mut urng),
+                });
+                t += self.think.sample_gap(&mut urng);
+            }
+        }
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Trace::new(&self.name, requests)
+    }
+
+    /// Aggregate offered load in requests/s (ignoring session ramp-up).
+    pub fn offered_rate(&self) -> f64 {
+        self.users as f64 / self.think.mean_gap()
     }
 }
 
@@ -178,5 +289,59 @@ mod tests {
         let a = WorkloadSpec::alpaca(500).generate(1).mean_prompt_len();
         let b = WorkloadSpec::long_prompts(500).generate(1).mean_prompt_len();
         assert!(b > 3.0 * a);
+    }
+
+    #[test]
+    fn gamma_arrivals_hit_mean_and_burstiness() {
+        for cv in [0.3, 1.0, 2.0] {
+            let spec = WorkloadSpec {
+                arrival: Arrival::Gamma { mean_gap: 10.0, cv },
+                ..WorkloadSpec::alpaca(4000)
+            };
+            let t = spec.generate(11);
+            let gaps: Vec<f64> = t
+                .requests
+                .windows(2)
+                .map(|w| w[1].arrival - w[0].arrival)
+                .collect();
+            let mean = crate::stats::describe::mean(&gaps);
+            let std = crate::stats::describe::std_dev(&gaps);
+            assert!((mean - 10.0).abs() < 0.8, "cv={cv}: mean_gap={mean}");
+            let cv_hat = std / mean;
+            assert!((cv_hat - cv).abs() < 0.15, "cv={cv}: measured {cv_hat}");
+        }
+    }
+
+    #[test]
+    fn at_rate_rescales_arrivals() {
+        let spec = WorkloadSpec::alpaca(3000).at_rate(2.0);
+        let t = spec.generate(13);
+        let total = t.requests.last().unwrap().arrival;
+        let rate = (t.len() - 1) as f64 / total;
+        assert!((rate - 2.0).abs() < 0.2, "rate={rate}");
+        // Length models are untouched.
+        assert!((t.mean_prompt_len() - WorkloadSpec::alpaca(3000).generate(13).mean_prompt_len())
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn sessions_overlay_users_in_time_order() {
+        let spec = SessionSpec::chat(8, 25, 20.0);
+        let t = spec.generate(17);
+        assert_eq!(t.len(), 200);
+        let mut last = f64::NEG_INFINITY;
+        for (i, r) in t.requests.iter().enumerate() {
+            assert!(r.arrival >= last, "arrivals must be sorted");
+            assert_eq!(r.id, i as u64, "ids reassigned in arrival order");
+            last = r.arrival;
+        }
+        // Aggregate rate ≈ users/think (8/20 = 0.4 rps).
+        let span = t.requests.last().unwrap().arrival - t.requests[0].arrival;
+        let rate = t.len() as f64 / span;
+        assert!((rate - spec.offered_rate()).abs() / spec.offered_rate() < 0.35, "rate={rate}");
+        // Deterministic.
+        assert_eq!(t.requests, spec.generate(17).requests);
+        assert_ne!(t.requests, spec.generate(18).requests);
     }
 }

@@ -133,6 +133,42 @@ impl Rng {
         -self.f64().ln_1p_neg() / rate
     }
 
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang squeeze (k ≥ 1) with
+    /// the Ahrens–Dieter boost for k < 1. Used for non-Poisson arrival
+    /// processes: a Gamma inter-arrival with k < 1 is burstier than
+    /// exponential (CV > 1), k > 1 is smoother (CV < 1).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma needs positive params");
+        if shape < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) · U^(1/k).
+            let u = loop {
+                let u = self.f64();
+                if u > 1e-300 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return d * v * scale;
+            }
+            if u > 1e-300 && u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+                return d * v * scale;
+            }
+        }
+    }
+
     /// Poisson-distributed count (Knuth for small mean, normal approx large).
     pub fn poisson(&mut self, mean: f64) -> u64 {
         assert!(mean >= 0.0);
@@ -272,6 +308,31 @@ mod tests {
         let n = 100_000;
         let mean = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(19);
+        let n = 60_000;
+        for (shape, scale) in [(0.5, 2.0), (1.0, 1.5), (4.0, 0.25), (9.0, 3.0)] {
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(shape, scale)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            let (em, ev) = (shape * scale, shape * scale * scale);
+            assert!((mean - em).abs() / em < 0.05, "k={shape}: mean={mean} vs {em}");
+            assert!((var - ev).abs() / ev < 0.12, "k={shape}: var={var} vs {ev}");
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_shape_one_is_exponential() {
+        // Gamma(1, θ) ≡ Exp(1/θ): compare tail mass at the 1-θ mark.
+        let mut r = Rng::new(29);
+        let n = 50_000;
+        let tail = (0..n).filter(|_| r.gamma(1.0, 2.0) > 2.0).count() as f64 / n as f64;
+        let expect = (-1.0f64).exp();
+        assert!((tail - expect).abs() < 0.01, "tail={tail} vs {expect}");
     }
 
     #[test]
