@@ -29,6 +29,21 @@ impl ServerEndpoint {
     pub fn with_rtt(profile: ServerProfile, extra_rtt: f64) -> ServerEndpoint {
         ServerEndpoint { profile, extra_rtt }
     }
+
+    /// Build per-shard endpoints for a sharded fleet: one endpoint per
+    /// RTT offset, each adding its shard's offset on top of the base
+    /// endpoint's own `extra_rtt`. An all-zero offset vector yields
+    /// endpoints byte-identical to the base (the homogeneous fleet), so
+    /// the K=1 replay parity is preserved by construction.
+    pub fn shard_fleet(base: &ServerEndpoint, rtt_offsets: &[f64]) -> Vec<ServerEndpoint> {
+        rtt_offsets
+            .iter()
+            .map(|&dr| ServerEndpoint {
+                profile: base.profile.clone(),
+                extra_rtt: base.extra_rtt + dr,
+            })
+            .collect()
+    }
 }
 
 impl SimEndpoint for ServerEndpoint {
@@ -83,6 +98,22 @@ mod tests {
         let b = shifted.sample_ttft(10, &mut r2);
         assert!((b - a - 0.5).abs() < 1e-12);
         assert!((shifted.expected_ttft(10) - base.expected_ttft(10) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_fleet_offsets_stack_on_base_rtt() {
+        let base = ServerEndpoint::with_rtt(ServerProfile::gpt4o_mini(), 0.1);
+        let eps = ServerEndpoint::shard_fleet(&base, &[0.0, 0.25]);
+        assert_eq!(eps.len(), 2);
+        assert_eq!(eps[0].extra_rtt, 0.1);
+        assert_eq!(eps[1].extra_rtt, 0.35);
+        // Zero offset reproduces the base endpoint's samples exactly.
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(
+            base.sample_ttft(32, &mut r1).to_bits(),
+            eps[0].sample_ttft(32, &mut r2).to_bits()
+        );
     }
 
     #[test]

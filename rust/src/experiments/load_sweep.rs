@@ -11,9 +11,10 @@
 
 use crate::coordinator::policy::PolicyKind;
 use crate::cost::unified::Constraint;
-use crate::experiments::common::{make_policy, par_map};
+use crate::experiments::common::{make_policy, par_map, CellSeed};
 use crate::experiments::ExpContext;
 use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
 use crate::sim::engine::{Scenario, SimConfig};
 use crate::sim::fleet::FleetConfig;
 use crate::trace::generator::WorkloadSpec;
@@ -45,7 +46,12 @@ pub struct CellResult {
 pub struct SweepParams {
     pub rates: Vec<f64>,
     pub policies: Vec<PolicyKind>,
+    /// Concurrent admissions per server shard.
     pub server_slots: usize,
+    /// Server shard count (1 = the single-pool fleet).
+    pub shards: usize,
+    /// Balancer fronting the shards (irrelevant at `shards == 1`).
+    pub balancer: BalancerKind,
     pub b: f64,
     pub n_requests: usize,
     pub n_seeds: u64,
@@ -65,6 +71,8 @@ impl Default for SweepParams {
                 PolicyKind::DiscoS,
             ],
             server_slots: 2,
+            shards: 1,
+            balancer: BalancerKind::RoundRobin,
             b: 0.5,
             n_requests: 400,
             n_seeds: 3,
@@ -94,6 +102,9 @@ fn run_cell(params: &SweepParams, cell: &GridCell) -> CellResult {
     let fleet = FleetConfig {
         server_slots: Some(params.server_slots),
         device_queueing: true,
+        shards: params.shards,
+        balancer: params.balancer,
+        shard_rtts: Vec::new(),
     };
     let mut mean_ttft = Vec::new();
     let mut p99_ttft = Vec::new();
@@ -102,30 +113,30 @@ fn run_cell(params: &SweepParams, cell: &GridCell) -> CellResult {
     let mut qd_p99 = Vec::new();
     let mut util = Vec::new();
     for seed in 0..params.n_seeds {
-        // Deterministic seeding from the cell's *content* (not its grid
-        // position or worker thread): the same (rate, seed) reproduces
-        // identical numbers no matter which other cells are in the grid,
-        // and policies at the same rate run against the same trace —
-        // paired comparisons, not unpaired variance.
-        let cell_seed = seed
-            ^ cell
-                .rate_rps
-                .to_bits()
-                .rotate_left(17)
-                .wrapping_mul(0x9E3779B97F4A7C15);
+        // Content-derived seeding (see `CellSeed`): policies at the same
+        // rate run against the same trace — paired comparisons, not
+        // unpaired variance.
+        let cell_seed = CellSeed::new(seed).mix_f64(cell.rate_rps);
         let scenario = Scenario::new(
             params.service.clone(),
             params.device.clone(),
             Constraint::Server,
             SimConfig {
-                seed: cell_seed,
+                seed: cell_seed.scenario(),
                 ..Default::default()
             },
         );
         let trace = WorkloadSpec::alpaca(params.n_requests)
             .at_rate(cell.rate_rps)
-            .generate(cell_seed ^ 0xF1EE7);
-        let policy = make_policy(cell.kind, params.b, false, &scenario, &trace, cell_seed);
+            .generate(cell_seed.trace(0xF1EE7));
+        let policy = make_policy(
+            cell.kind,
+            params.b,
+            false,
+            &scenario,
+            &trace,
+            cell_seed.scenario(),
+        );
         let rep = scenario.run_fleet_report(&trace, &policy, &fleet);
         mean_ttft.push(rep.qoe.ttft.mean);
         p99_ttft.push(rep.qoe.ttft.p99);

@@ -13,6 +13,7 @@ pub mod endtoend;
 pub mod load_sweep;
 pub mod migration_exp;
 pub mod quality_exp;
+pub mod shard_sweep;
 
 use std::path::PathBuf;
 
@@ -146,6 +147,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "load-sweep",
             title: "Fleet: TTFT/queue-delay vs arrival rate under server admission limits",
             run: load_sweep::load_sweep,
+        },
+        ExperimentDef {
+            id: "shard-sweep",
+            title: "Fleet: balancer comparison across shard counts and arrival rates",
+            run: shard_sweep::shard_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

@@ -1,0 +1,309 @@
+//! Shard sweep: balancer comparison across the (shard count × balancer ×
+//! arrival rate) grid of the sharded fleet simulator.
+//!
+//! Each cell fixes a fleet topology (K shards, `slots_per_shard`
+//! admissions each) and a [`BalancerKind`], then replays a Poisson
+//! workload at the target aggregate rate. Balancers at the same
+//! (K, rate, seed) see the *same* trace and the same pre-drawn latency
+//! samples — the balancer RNG stream is disjoint from per-request
+//! streams — so differences in queue delay and tail TTFT are pure
+//! balancing effects, paired cell-for-cell. Cells fan out across cores
+//! via [`common::par_map`] with [`CellSeed`] content-derived seeding, so
+//! results are bit-reproducible and grid-shape independent.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, par_map, CellSeed};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::FleetConfig;
+use crate::trace::generator::WorkloadSpec;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// One cell of the shard-sweep grid.
+#[derive(Clone, Debug)]
+pub struct ShardCell {
+    pub shards: usize,
+    pub balancer: BalancerKind,
+    pub rate_rps: f64,
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct ShardCellResult {
+    pub cell: ShardCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_queue_delay: f64,
+    pub p99_queue_delay: f64,
+    pub server_utilization: f64,
+    /// Max/mean shard utilization (1.0 = perfectly balanced; 0.0 when
+    /// undefined, i.e. a single shard).
+    pub imbalance: f64,
+}
+
+/// Sweep parameters, shared by the `shard-sweep` experiment and the
+/// `shard_sweep` CLI subcommand.
+#[derive(Clone, Debug)]
+pub struct ShardSweepParams {
+    pub shard_counts: Vec<usize>,
+    pub balancers: Vec<BalancerKind>,
+    pub rates: Vec<f64>,
+    /// Concurrent admissions per shard.
+    pub slots_per_shard: usize,
+    /// Dispatch policy every cell runs (the balancer is the axis under
+    /// study; ServerOnly isolates it from device-race effects).
+    pub policy: PolicyKind,
+    pub b: f64,
+    pub n_requests: usize,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for ShardSweepParams {
+    fn default() -> Self {
+        ShardSweepParams {
+            shard_counts: vec![1, 2, 4, 8],
+            balancers: BalancerKind::all(),
+            // From comfortably underloaded to past saturation for the
+            // default K=4 × GPT profile (service ≈ 1.3 s ⇒ capacity ≈
+            // K/1.3 rps per slot).
+            rates: vec![0.5, 2.0, 4.0],
+            slots_per_shard: 1,
+            policy: PolicyKind::ServerOnly,
+            b: 1.0,
+            n_requests: 400,
+            n_seeds: 3,
+            service: ServerProfile::gpt4o_mini(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+/// Run the (K × balancer × rate) grid in parallel; cells come back in
+/// grid order (shard counts outer, balancers middle, rates inner).
+pub fn run_grid(params: &ShardSweepParams) -> Vec<ShardCellResult> {
+    let cells: Vec<ShardCell> = params
+        .shard_counts
+        .iter()
+        .flat_map(|&shards| {
+            params.balancers.iter().flat_map(move |&balancer| {
+                params.rates.iter().map(move |&rate_rps| ShardCell {
+                    shards,
+                    balancer,
+                    rate_rps,
+                })
+            })
+        })
+        .collect();
+    par_map(&cells, |_, cell| run_cell(params, cell))
+}
+
+fn run_cell(params: &ShardSweepParams, cell: &ShardCell) -> ShardCellResult {
+    let fleet = FleetConfig::sharded(cell.shards, params.slots_per_shard, cell.balancer);
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut qd_mean = Vec::new();
+    let mut qd_p99 = Vec::new();
+    let mut util = Vec::new();
+    let mut imb = Vec::new();
+    for seed in 0..params.n_seeds {
+        // Content-derived seed over (rate, K) — deliberately NOT over the
+        // balancer, so every balancer at a (K, rate, seed) cell replays
+        // the identical trace and latency draws (paired comparison).
+        let cell_seed = CellSeed::new(seed)
+            .mix_f64(cell.rate_rps)
+            .mix_u64(cell.shards as u64);
+        let scenario = Scenario::new(
+            params.service.clone(),
+            params.device.clone(),
+            Constraint::Server,
+            SimConfig {
+                seed: cell_seed.scenario(),
+                ..Default::default()
+            },
+        );
+        let trace = WorkloadSpec::alpaca(params.n_requests)
+            .at_rate(cell.rate_rps)
+            .generate(cell_seed.trace(0x5AA4D));
+        let policy = make_policy(
+            params.policy,
+            params.b,
+            false,
+            &scenario,
+            &trace,
+            cell_seed.scenario(),
+        );
+        let rep = scenario.run_fleet_report(&trace, &policy, &fleet);
+        mean_ttft.push(rep.qoe.ttft.mean);
+        p99_ttft.push(rep.qoe.ttft.p99);
+        qd_mean.push(rep.load.server_queue_delay.mean);
+        qd_p99.push(rep.load.server_queue_delay.p99);
+        util.push(rep.load.server_utilization().unwrap_or(0.0));
+        imb.push(rep.load.shard_imbalance().unwrap_or(0.0));
+    }
+    let avg = crate::stats::describe::mean;
+    ShardCellResult {
+        cell: cell.clone(),
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        mean_queue_delay: avg(&qd_mean),
+        p99_queue_delay: avg(&qd_p99),
+        server_utilization: avg(&util),
+        imbalance: avg(&imb),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[ShardCellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.cell.shards),
+                r.cell.balancer.label().to_string(),
+                format!("{:.2}", r.cell.rate_rps),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.3}", r.mean_queue_delay),
+                format!("{:.3}", r.p99_queue_delay),
+                format!("{:.2}", r.server_utilization),
+                format!("{:.2}", r.imbalance),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "shards",
+            "balancer",
+            "rate (req/s)",
+            "mean TTFT",
+            "p99 TTFT",
+            "mean queue",
+            "p99 queue",
+            "util",
+            "imbalance",
+        ],
+        &rows,
+    )
+}
+
+/// The `shard-sweep` experiment entry: default grid, CSV + table output.
+pub fn shard_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = ShardSweepParams {
+        n_requests: ctx.n_requests.clamp(50, 400),
+        n_seeds: ctx.n_seeds.clamp(1, 3),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "shards",
+        "balancer",
+        "rate_rps",
+        "mean_ttft",
+        "p99_ttft",
+        "mean_queue_delay",
+        "p99_queue_delay",
+        "server_utilization",
+        "imbalance",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            format!("{}", r.cell.shards),
+            r.cell.balancer.label().to_string(),
+            format!("{:.3}", r.cell.rate_rps),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.mean_queue_delay),
+            format!("{:.4}", r.p99_queue_delay),
+            format!("{:.4}", r.server_utilization),
+            format!("{:.4}", r.imbalance),
+        ]);
+    }
+    csv.write(&ctx.csv_path("shard-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> ShardSweepParams {
+        ShardSweepParams {
+            shard_counts: vec![1, 2],
+            balancers: vec![BalancerKind::RoundRobin, BalancerKind::JoinShortestQueue],
+            rates: vec![0.5, 2.0],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_all_axes_in_order() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.cell.shards, params.shard_counts[i / 4]);
+            assert_eq!(r.cell.balancer, params.balancers[(i / 2) % 2]);
+            assert_eq!(r.cell.rate_rps, params.rates[i % 2]);
+            assert!(r.mean_ttft > 0.0);
+            assert!(r.server_utilization <= 1.0 + 1e-9);
+        }
+        // At K=1 the balancer is bypassed: RR and JSQ cells are
+        // bit-identical.
+        for j in 0..2 {
+            assert_eq!(
+                results[j].p99_ttft.to_bits(),
+                results[j + 2].p99_ttft.to_bits(),
+                "K=1 balancers must coincide"
+            );
+        }
+    }
+
+    #[test]
+    fn same_cell_reproduces_regardless_of_grid_shape() {
+        let solo = run_grid(&ShardSweepParams {
+            shard_counts: vec![2],
+            balancers: vec![BalancerKind::JoinShortestQueue],
+            rates: vec![2.0],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        });
+        let grid = run_grid(&tiny_params());
+        let in_grid = grid
+            .iter()
+            .find(|r| {
+                r.cell.shards == 2
+                    && r.cell.balancer == BalancerKind::JoinShortestQueue
+                    && r.cell.rate_rps == 2.0
+            })
+            .unwrap();
+        assert_eq!(solo[0].mean_ttft.to_bits(), in_grid.mean_ttft.to_bits());
+        assert_eq!(
+            solo[0].p99_queue_delay.to_bits(),
+            in_grid.p99_queue_delay.to_bits()
+        );
+    }
+
+    #[test]
+    fn shard_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_shard_sweep"),
+            n_seeds: 1,
+            n_requests: 50,
+        };
+        let out = shard_sweep(&ctx).unwrap();
+        assert!(out.contains("balancer"));
+        let csv = std::fs::read_to_string(ctx.csv_path("shard-sweep")).unwrap();
+        // Header + 4 shard counts × 4 balancers × 3 rates.
+        assert_eq!(csv.lines().count(), 1 + 48);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

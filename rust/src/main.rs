@@ -6,6 +6,8 @@
 //!   simulate [--service S] [--device D] [--policy P] [--b B]
 //!            [--constraint server|device] [--requests N] [--seed N]
 //!            [--migration] [--queueing] [--trace FILE]
+//!   fleet_sweep / shard_sweep
+//!            parallel sweep grids over the (sharded) fleet simulator
 //!   trace-gen [--n N] [--seed N] [--out FILE] [--workload alpaca|long]
 //!   serve [--variant NAME] [--requests N] [--max-new N] [--scale X]
 //!         run the LIVE loop: real PJRT device model + emulated server
@@ -14,6 +16,7 @@ use disco::coordinator::policy::PolicyKind;
 use disco::cost::unified::Constraint;
 use disco::experiments::{registry, run as run_exp, ExpContext};
 use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::balancer::BalancerKind;
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::trace::generator::WorkloadSpec;
 use disco::util::cli::Args;
@@ -27,6 +30,7 @@ fn main() {
         "exp" => cmd_exp(&args),
         "simulate" => cmd_simulate(&args),
         "fleet_sweep" | "fleet-sweep" => cmd_fleet_sweep(&args),
+        "shard_sweep" | "shard-sweep" => cmd_shard_sweep(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         _ => {
@@ -50,7 +54,12 @@ fn print_help() {
          \x20 simulate    run one scenario and print the QoE report\n\
          \x20 fleet_sweep parallel (arrival-rate × policy) grid on the fleet simulator\n\
          \x20             [--rates R1,R2,..] [--policies p1,p2,..] [--slots N] [--b B]\n\
+         \x20             [--shards K] [--balancer rr|jsq|p2c|least-work]\n\
          \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
+         \x20 shard_sweep parallel (shards × balancer × rate) grid on the sharded fleet\n\
+         \x20             [--shards K1,K2,..] [--balancers b1,b2,..] [--rates R1,..]\n\
+         \x20             [--slots N] [--policy P] [--requests N] [--seeds N]\n\
+         \x20             [--service S] [--device D]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
     );
@@ -97,10 +106,7 @@ fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let service = ServerProfile::by_name(args.get_or("service", "GPT"))
-        .ok_or_else(|| anyhow::anyhow!("unknown service (GPT|LLaMA|DeepSeek|Command)"))?;
-    let device = DeviceProfile::by_name(args.get_or("device", "Pixel7Pro/B-1.1B"))
-        .ok_or_else(|| anyhow::anyhow!("unknown device profile"))?;
+    let (service, device) = parse_profiles(args, "Pixel7Pro/B-1.1B")?;
     let kind = parse_policy(args.get_or("policy", "disco-s"))?;
     let constraint = match args.get_or("constraint", "server") {
         "device" => Constraint::Device,
@@ -158,40 +164,66 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated list flag (`--key a,b,c`), falling back to
+/// `defaults` when absent.
+fn parse_list<T>(
+    args: &Args,
+    key: &str,
+    defaults: Vec<T>,
+    parse: impl Fn(&str) -> anyhow::Result<T>,
+) -> anyhow::Result<Vec<T>> {
+    let items = match args.get(key) {
+        None => defaults,
+        Some(s) => s
+            .split(',')
+            .map(|item| parse(item.trim()))
+            .collect::<anyhow::Result<Vec<T>>>()?,
+    };
+    anyhow::ensure!(!items.is_empty(), "--{key} needs at least one value");
+    Ok(items)
+}
+
+fn parse_rates(args: &Args, defaults: Vec<f64>) -> anyhow::Result<Vec<f64>> {
+    let rates = parse_list(args, "rates", defaults, |r| {
+        r.parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--rates expects numbers, got '{r}'"))
+    })?;
+    anyhow::ensure!(rates.iter().all(|r| *r > 0.0), "rates must be positive");
+    Ok(rates)
+}
+
+fn parse_balancer(s: &str) -> anyhow::Result<BalancerKind> {
+    BalancerKind::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown balancer '{s}' (rr|jsq|p2c|least-work)"))
+}
+
+/// Resolve the `--service` / `--device` profile pair shared by the
+/// simulate and sweep subcommands.
+fn parse_profiles(
+    args: &Args,
+    default_device: &str,
+) -> anyhow::Result<(ServerProfile, DeviceProfile)> {
+    let service = ServerProfile::by_name(args.get_or("service", "GPT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown service (GPT|LLaMA|DeepSeek|Command)"))?;
+    let device = DeviceProfile::by_name(args.get_or("device", default_device))
+        .ok_or_else(|| anyhow::anyhow!("unknown device profile"))?;
+    Ok((service, device))
+}
+
 fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
     use disco::experiments::load_sweep::{render_grid, run_grid, SweepParams};
 
     let defaults = SweepParams::default();
-    let rates = match args.get("rates") {
-        None => defaults.rates,
-        Some(s) => s
-            .split(',')
-            .map(|r| {
-                r.trim()
-                    .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("--rates expects numbers, got '{r}'"))
-            })
-            .collect::<anyhow::Result<Vec<f64>>>()?,
-    };
-    let policies = match args.get("policies") {
-        None => defaults.policies,
-        Some(s) => s
-            .split(',')
-            .map(|p| parse_policy(p.trim()))
-            .collect::<anyhow::Result<Vec<PolicyKind>>>()?,
-    };
-    anyhow::ensure!(!rates.is_empty(), "need at least one arrival rate");
-    anyhow::ensure!(!policies.is_empty(), "need at least one policy");
-    anyhow::ensure!(rates.iter().all(|r| *r > 0.0), "rates must be positive");
+    let rates = parse_rates(args, defaults.rates)?;
+    let policies = parse_list(args, "policies", defaults.policies, parse_policy)?;
 
-    let service = ServerProfile::by_name(args.get_or("service", "GPT"))
-        .ok_or_else(|| anyhow::anyhow!("unknown service (GPT|LLaMA|DeepSeek|Command)"))?;
-    let device = DeviceProfile::by_name(args.get_or("device", "Xiaomi14/Q-0.5B"))
-        .ok_or_else(|| anyhow::anyhow!("unknown device profile"))?;
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
     let params = SweepParams {
         rates,
         policies,
         server_slots: args.get_usize("slots", defaults.server_slots)?,
+        shards: args.get_usize("shards", defaults.shards)?,
+        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
         b: args.get_f64("b", defaults.b)?,
         n_requests: args.get_usize("requests", defaults.n_requests)?,
         n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
@@ -200,13 +232,72 @@ fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
     };
     anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
     anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    anyhow::ensure!(params.shards > 0, "--shards must be at least 1");
     let n_cells = params.rates.len() * params.policies.len();
     println!(
         "fleet sweep: {} rates × {} policies = {n_cells} cells, \
-         {} server slots, {} requests × {} seeds per cell",
+         {} shard(s) × {} slots ({} balancer), {} requests × {} seeds per cell",
         params.rates.len(),
         params.policies.len(),
+        params.shards,
         params.server_slots,
+        params.balancer.label(),
+        params.n_requests,
+        params.n_seeds
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_shard_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::shard_sweep::{render_grid, run_grid, ShardSweepParams};
+
+    let defaults = ShardSweepParams::default();
+    let shard_counts = parse_list(args, "shards", defaults.shard_counts, |k| {
+        k.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--shards expects integers, got '{k}'"))
+    })?;
+    // Accept the singular spelling too (`fleet_sweep` uses --balancer);
+    // the Args parser ignores unknown keys, so a near-miss would
+    // otherwise silently sweep every balancer.
+    let balancer_key = if args.get("balancers").is_none() && args.get("balancer").is_some() {
+        "balancer"
+    } else {
+        "balancers"
+    };
+    let balancers = parse_list(args, balancer_key, defaults.balancers, parse_balancer)?;
+    let rates = parse_rates(args, defaults.rates)?;
+    anyhow::ensure!(
+        shard_counts.iter().all(|&k| k > 0),
+        "shard counts must be at least 1"
+    );
+
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
+    let params = ShardSweepParams {
+        shard_counts,
+        balancers,
+        rates,
+        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
+        policy: parse_policy(args.get_or("policy", "server-only"))?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    let n_cells = params.shard_counts.len() * params.balancers.len() * params.rates.len();
+    println!(
+        "shard sweep: {} shard counts × {} balancers × {} rates = {n_cells} cells, \
+         {} slots/shard, {} requests × {} seeds per cell",
+        params.shard_counts.len(),
+        params.balancers.len(),
+        params.rates.len(),
+        params.slots_per_shard,
         params.n_requests,
         params.n_seeds
     );

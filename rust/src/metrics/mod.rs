@@ -92,25 +92,42 @@ impl Report {
     }
 }
 
+/// Per-shard slice of a fleet run's load metrics.
+#[derive(Clone, Debug)]
+pub struct ShardLoad {
+    /// Admission-queue delay over requests this shard admitted (seconds).
+    pub queue_delay: Summary,
+    /// Slot-seconds this shard consumed.
+    pub busy_seconds: f64,
+    /// Requests this shard admitted (granted a slot).
+    pub admitted: usize,
+    /// This shard's concurrent-admission cap (`None` = unlimited).
+    pub slots: Option<usize>,
+}
+
 /// Load-dependent metrics surfaced by the fleet simulator: admission-queue
-/// delays, resource busy time, and concurrency over the trace horizon.
+/// delays, resource busy time, concurrency over the trace horizon, and
+/// the per-shard breakdown of the server fleet.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     /// Server admission-queue delay over requests that dispatched to the
-    /// server (seconds).
+    /// server (seconds), aggregated across all shards.
     pub server_queue_delay: Summary,
     /// Single-flight device queue delay over requests that were granted
     /// the device (seconds).
     pub device_queue_delay: Summary,
-    /// Total server slot-seconds consumed.
+    /// Total server slot-seconds consumed across all shards.
     pub server_busy_seconds: f64,
     /// Total device busy seconds.
     pub device_busy_seconds: f64,
     /// Simulated horizon: last event time minus the first arrival
     /// (seconds), so delayed-start traces don't dilute utilization.
     pub horizon: f64,
-    /// Server concurrency limit, if the pool was bounded.
+    /// Per-shard server concurrency limit, if the pools were bounded.
     pub server_slots: Option<usize>,
+    /// Per-shard breakdown (one entry per server shard; the single-pool
+    /// fleet reports exactly one).
+    pub shards: Vec<ShardLoad>,
 }
 
 impl LoadReport {
@@ -123,15 +140,63 @@ impl LoadReport {
         }
     }
 
-    /// Server utilization in [0,1] (None when the pool is unlimited).
+    /// Total concurrent-admission capacity across shards (`None` when any
+    /// shard's pool is unlimited).
+    pub fn total_server_slots(&self) -> Option<usize> {
+        if self.shards.is_empty() {
+            // Hand-built reports without a breakdown: fall back to the
+            // single-pool reading.
+            return self.server_slots;
+        }
+        let mut total = 0usize;
+        for s in &self.shards {
+            total += s.slots?;
+        }
+        Some(total)
+    }
+
+    /// Fleet-wide server utilization in [0,1] (`None` when any pool is
+    /// unlimited). Degenerate inputs — a zero-length horizon or zero
+    /// total capacity — report `Some(0.0)` rather than NaN/∞: an
+    /// instantaneous or capacity-less run did no utilizable work.
     pub fn server_utilization(&self) -> Option<f64> {
-        self.server_slots.map(|slots| {
-            if self.horizon > 0.0 && slots > 0 {
-                self.server_busy_seconds / (self.horizon * slots as f64)
-            } else {
-                0.0
-            }
+        let slots = self.total_server_slots()?;
+        Some(if self.horizon > 0.0 && slots > 0 {
+            self.server_busy_seconds / (self.horizon * slots as f64)
+        } else {
+            0.0
         })
+    }
+
+    /// Per-shard utilizations in [0,1], in shard order. Shards with an
+    /// unlimited pool, zero capacity, or a zero-length horizon report 0.0.
+    pub fn shard_utilizations(&self) -> Vec<f64> {
+        self.shards
+            .iter()
+            .map(|s| match s.slots {
+                Some(c) if c > 0 && self.horizon > 0.0 => {
+                    s.busy_seconds / (self.horizon * c as f64)
+                }
+                _ => 0.0,
+            })
+            .collect()
+    }
+
+    /// Load-imbalance summary: max/mean shard utilization (1.0 = the
+    /// fleet is perfectly balanced; 2.0 = the hottest shard carries twice
+    /// the average). `None` for fewer than two shards or when the fleet
+    /// did no work at all.
+    pub fn shard_imbalance(&self) -> Option<f64> {
+        if self.shards.len() < 2 {
+            return None;
+        }
+        let utils = self.shard_utilizations();
+        let mean = crate::stats::describe::mean(&utils);
+        if mean <= 0.0 {
+            return None;
+        }
+        let max = utils.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Some(max / mean)
     }
 
     /// Device utilization in [0,1] of the single-flight device.
@@ -209,5 +274,69 @@ mod tests {
         assert_eq!(rep.n, 0);
         assert_eq!(rep.migrated_requests, 0);
         assert_eq!(rep.constrained_prefill_fraction, Some(0.0));
+    }
+
+    fn shard(busy: f64, admitted: usize, slots: Option<usize>) -> ShardLoad {
+        ShardLoad {
+            queue_delay: Summary::of(&[]),
+            busy_seconds: busy,
+            admitted,
+            slots,
+        }
+    }
+
+    fn load(horizon: f64, busy: f64, shards: Vec<ShardLoad>) -> LoadReport {
+        LoadReport {
+            server_queue_delay: Summary::of(&[]),
+            device_queue_delay: Summary::of(&[]),
+            server_busy_seconds: busy,
+            device_busy_seconds: 1.0,
+            horizon,
+            server_slots: shards.first().and_then(|s| s.slots),
+            shards,
+        }
+    }
+
+    /// A zero-length horizon (single-instant trace) must report
+    /// `Some(0.0)` utilization, not NaN or ∞.
+    #[test]
+    fn utilization_zero_horizon_is_some_zero() {
+        let lr = load(0.0, 3.0, vec![shard(3.0, 4, Some(2))]);
+        assert_eq!(lr.server_utilization(), Some(0.0));
+        assert_eq!(lr.mean_server_concurrency(), 0.0);
+        assert_eq!(lr.device_utilization(), 0.0);
+        assert!(lr.shard_utilizations().iter().all(|&u| u == 0.0));
+    }
+
+    /// Zero total capacity likewise degrades to `Some(0.0)`.
+    #[test]
+    fn utilization_zero_capacity_is_some_zero() {
+        let lr = load(10.0, 0.0, vec![shard(0.0, 0, Some(0))]);
+        assert_eq!(lr.total_server_slots(), Some(0));
+        assert_eq!(lr.server_utilization(), Some(0.0));
+        assert_eq!(lr.shard_utilizations(), vec![0.0]);
+    }
+
+    /// Any unlimited shard makes fleet utilization undefined (None), as
+    /// the unlimited single pool always did.
+    #[test]
+    fn utilization_unlimited_pool_is_none() {
+        let lr = load(10.0, 5.0, vec![shard(5.0, 7, None)]);
+        assert_eq!(lr.total_server_slots(), None);
+        assert_eq!(lr.server_utilization(), None);
+        let mixed = load(10.0, 5.0, vec![shard(2.0, 3, Some(1)), shard(3.0, 4, None)]);
+        assert_eq!(mixed.server_utilization(), None);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let lr = load(10.0, 2.0, vec![shard(2.0, 5, Some(1)), shard(0.0, 0, Some(1))]);
+        // Utilizations [0.2, 0.0] → mean 0.1, max 0.2 → imbalance 2.0.
+        let imb = lr.shard_imbalance().unwrap();
+        assert!((imb - 2.0).abs() < 1e-12, "imbalance {imb}");
+        // Fewer than two shards, or an idle fleet, has no imbalance.
+        assert_eq!(load(10.0, 2.0, vec![shard(2.0, 5, Some(1))]).shard_imbalance(), None);
+        let idle = load(10.0, 0.0, vec![shard(0.0, 0, Some(1)), shard(0.0, 0, Some(1))]);
+        assert_eq!(idle.shard_imbalance(), None);
     }
 }

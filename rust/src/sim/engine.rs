@@ -8,11 +8,12 @@
 //!
 //! Since the fleet refactor there is **one** request code path: the
 //! per-request trajectory lives in [`resolve_request`], parameterized by
-//! the absolute times at which the contended resources (server admission
-//! slot, single-flight device) were granted. [`Scenario::run`] is the
-//! degenerate case of the discrete-event loop in [`crate::sim::fleet`]
-//! with an unlimited server pool — exactly the paper's independent-replay
-//! methodology — while finite server pools surface queueing effects.
+//! the absolute times at which the contended resources (a server shard's
+//! admission slot, the single-flight device) were granted.
+//! [`Scenario::run`] is the degenerate case of the discrete-event loop in
+//! [`crate::sim::fleet`] with one unlimited server shard — exactly the
+//! paper's independent-replay methodology — while finite sharded fleets
+//! surface queueing and load-balancing effects.
 
 use crate::coordinator::dispatch::Decision;
 use crate::coordinator::migration::{MigrationConfig, MigrationPlanner};
@@ -115,9 +116,9 @@ impl Scenario {
 
     /// Run a trace under a policy; returns per-request records.
     ///
-    /// This is the fleet loop's degenerate configuration: unlimited server
-    /// admission (the paper's independent replay), device single-flight
-    /// per `cfg.device_queueing`.
+    /// This is the fleet loop's degenerate configuration: one server
+    /// shard with unlimited admission (the paper's independent replay),
+    /// device single-flight per `cfg.device_queueing`.
     pub fn run(&self, trace: &Trace, policy: &Policy) -> Vec<RequestRecord> {
         self.run_fleet(trace, policy, &FleetConfig::replay(self.cfg.device_queueing))
             .records

@@ -1,30 +1,41 @@
 //! Discrete-event fleet simulator: N concurrent requests contending for a
-//! bounded server and a single-flight device.
+//! sharded server fleet and a single-flight device.
 //!
 //! The paper evaluates per-request (each request sees the profiled latency
 //! distributions independently). At fleet scale the interesting effects
-//! are *contention* effects: a server with a finite admission capacity
-//! builds a queue as load rises, and the on-device model can only run one
+//! are *contention* effects: servers with finite admission capacity build
+//! queues as load rises, and the on-device model can only run one
 //! inference at a time. This module adds exactly that, as a binary-heap
 //! event loop over:
 //!
 //! * **Arrival** events — fork the request's RNG, draw its dispatch
 //!   decision through the unchanged `coordinator::policy`, pre-draw its
-//!   latency samples, and enqueue it on the resources it needs;
-//! * **grant** transitions — a FIFO server pool with `server_slots`
-//!   concurrent admissions and a FIFO single-flight device pool;
+//!   latency samples, pick a server shard through the configured
+//!   [`Balancer`], and enqueue it on the resources it needs;
+//! * **grant** transitions — per-shard FIFO pools with `server_slots`
+//!   concurrent admissions each, and a FIFO single-flight device pool;
 //! * **first-token probes** — when one endpoint produces its first token
 //!   while the request is still *queued* on the other endpoint, the
 //!   queued entry is cancelled (the §4.2 wait-time strategy extended
 //!   across the fleet: nobody waits on a resource after the race is won);
 //! * **release** events — slots free at stream end, handoff, or loser
-//!   cancellation, admitting the next queued request.
+//!   cancellation, admitting the next queued request on that shard.
+//!
+//! # Shards and balancers
+//!
+//! The server side is a sharded fleet: `K =
+//! FleetConfig::shards` replicas, each with its own bounded slot pool,
+//! FIFO queue, and optional extra RTT (heterogeneous placement), fronted
+//! by a pluggable [`Balancer`] ([`BalancerKind`]: round-robin, JSQ,
+//! power-of-two-choices, least-work). Balancers see only per-shard
+//! occupancy snapshots and draw randomness from a dedicated fleet-level
+//! stream, so shard choice never perturbs per-request latency draws.
 //!
 //! The per-request trajectory itself (race, cancellation, migration,
 //! delivery smoothing, cost metering) is [`crate::sim::engine`]'s
 //! [`resolve_request`] — one code path shared with the legacy replay,
-//! which is the degenerate configuration [`FleetConfig::replay`]
-//! (unlimited server pool). With that configuration the fleet loop is
+//! which is the degenerate configuration [`FleetConfig::replay`] (one
+//! shard, unlimited slots). With that configuration the fleet loop is
 //! byte-identical to the historical per-request engine: per-request RNG
 //! streams are forked in trace order and all latency samples are
 //! pre-drawn at arrival, so resolution timing cannot perturb them.
@@ -34,7 +45,9 @@
 
 use crate::coordinator::migration::MigrationPlanner;
 use crate::coordinator::policy::Policy;
-use crate::metrics::{LoadReport, RequestRecord};
+use crate::endpoint::ServerEndpoint;
+use crate::metrics::{LoadReport, RequestRecord, ShardLoad};
+use crate::sim::balancer::{Balancer, BalancerKind, ShardView};
 use crate::sim::engine::{pre_draw, resolve_request, PreDrawn, ResourceTimes, Scenario};
 use crate::stats::describe::Summary;
 use crate::trace::Trace;
@@ -42,32 +55,65 @@ use crate::util::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
-/// Fleet-level resource configuration.
-#[derive(Clone, Copy, Debug)]
+/// Fleet-level resource configuration: the server fleet topology (shard
+/// count, per-shard admission slots, optional per-shard RTT offsets), the
+/// balancer fronting it, and device single-flight modeling.
+#[derive(Clone, Debug)]
 pub struct FleetConfig {
-    /// Concurrent server admissions; `None` = unlimited (the paper's
+    /// Concurrent admissions *per shard*; `None` = unlimited (the paper's
     /// independent replay, where server TTFT already folds queueing in
     /// statistically).
     pub server_slots: Option<usize>,
     /// Model the single-flight device across requests.
     pub device_queueing: bool,
+    /// Number of server shards (replicas), K ≥ 1. K = 1 is the PR-1
+    /// single-pool fleet; balancers are bypassed entirely at K = 1.
+    pub shards: usize,
+    /// How arriving server-bound requests spread across shards.
+    pub balancer: BalancerKind,
+    /// Optional per-shard extra RTT offsets (seconds), indexed by shard
+    /// and added to that shard's TTFT (heterogeneous replica placement).
+    /// Shorter than `shards` is padded with 0.0; empty = homogeneous.
+    pub shard_rtts: Vec<f64>,
 }
 
 impl FleetConfig {
-    /// The legacy per-request replay configuration.
+    /// The legacy per-request replay configuration (one shard, unlimited
+    /// admission).
     pub fn replay(device_queueing: bool) -> FleetConfig {
         FleetConfig {
             server_slots: None,
             device_queueing,
+            shards: 1,
+            balancer: BalancerKind::RoundRobin,
+            shard_rtts: Vec::new(),
         }
     }
 
-    /// A bounded-server fleet with single-flight device contention.
+    /// A bounded single-shard server with single-flight device contention
+    /// (the PR-1 fleet shape).
     pub fn bounded(server_slots: usize) -> FleetConfig {
         FleetConfig {
             server_slots: Some(server_slots.max(1)),
-            device_queueing: true,
+            ..FleetConfig::replay(true)
         }
+    }
+
+    /// A K-shard fleet with `server_slots` admissions per shard.
+    pub fn sharded(shards: usize, server_slots: usize, balancer: BalancerKind) -> FleetConfig {
+        FleetConfig {
+            server_slots: Some(server_slots.max(1)),
+            device_queueing: true,
+            shards: shards.max(1),
+            balancer,
+            shard_rtts: Vec::new(),
+        }
+    }
+
+    /// Same topology with heterogeneous per-shard RTT offsets.
+    pub fn with_shard_rtts(mut self, rtts: Vec<f64>) -> FleetConfig {
+        self.shard_rtts = rtts;
+        self
     }
 }
 
@@ -86,8 +132,10 @@ pub struct FleetOutcome {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EvKind {
     Arrival(usize),
-    /// A server admission slot frees; admit the next queued request.
-    ServerRelease,
+    /// Request `.0`'s server stream ended: its shard's admission slot
+    /// frees (admit the next queued request) and its work estimate
+    /// retires from the shard.
+    ServerRelease(usize),
     /// The device frees; grant it to the next queued request.
     DeviceRelease,
     /// The server produced its first token while the request was still
@@ -134,12 +182,17 @@ impl Ord for Event {
 // ---------------------------------------------------------------------
 
 /// FIFO pool with a (possibly unlimited) concurrency cap. Cancelled
-/// entries are skipped lazily at pop time.
+/// entries are skipped lazily at pop time; a live-entry counter is
+/// maintained incrementally (decremented at cancellation via
+/// [`Pool::cancel_queued`]) so the balancer's per-arrival snapshot is
+/// O(1) per shard instead of an O(queue) rescan.
 #[derive(Debug)]
 struct Pool {
     cap: Option<usize>,
     in_use: usize,
     queue: VecDeque<usize>,
+    /// Non-cancelled entries currently in `queue`.
+    live: usize,
 }
 
 impl Pool {
@@ -148,34 +201,54 @@ impl Pool {
             cap,
             in_use: 0,
             queue: VecDeque::new(),
+            live: 0,
         }
     }
 
-    /// Try to acquire at `now`; queues and returns None when full.
+    /// Try to acquire; queues and returns false when full. Unlimited
+    /// pools admit immediately but still count `in_use`, so balancers
+    /// see real in-service load even without a slot cap.
     fn acquire(&mut self, i: usize) -> bool {
         match self.cap {
-            None => true,
+            None => {
+                self.in_use += 1;
+                true
+            }
             Some(cap) if self.in_use < cap => {
                 self.in_use += 1;
                 true
             }
             _ => {
                 self.queue.push_back(i);
+                self.live += 1;
                 false
             }
         }
     }
 
     /// Release one unit; returns the next non-cancelled queued request to
-    /// grant, if any (the unit transfers to it).
+    /// grant, if any (the unit transfers to it). Cancelled entries popped
+    /// on the way were already removed from `live` at cancellation time.
     fn release(&mut self, cancelled: &[bool]) -> Option<usize> {
         while let Some(j) = self.queue.pop_front() {
             if !cancelled[j] {
+                self.live = self.live.saturating_sub(1);
                 return Some(j);
             }
         }
         self.in_use = self.in_use.saturating_sub(1);
         None
+    }
+
+    /// A queued entry was cancelled (its lazily-skipped queue slot is now
+    /// dead): keep the live count in sync.
+    fn cancel_queued(&mut self) {
+        self.live = self.live.saturating_sub(1);
+    }
+
+    /// Live (non-cancelled) queue length — the balancer's view.
+    fn live_queued(&self) -> usize {
+        self.live
     }
 }
 
@@ -194,12 +267,35 @@ struct ReqState {
     resolved: bool,
 }
 
+/// One server shard: a bounded slot pool plus its load accounting.
+struct ShardState {
+    pool: Pool,
+    /// Extra RTT (seconds) this shard adds to every first token it serves
+    /// (offset relative to the scenario's base server endpoint).
+    rtt: f64,
+    /// Outstanding estimated service seconds: pre-drawn prefill samples
+    /// of requests assigned to this shard that are queued or still hold
+    /// a slot (retired at `ServerRelease`, or at resolve for entries
+    /// that never held one). The `LeastWork` balancer's signal.
+    work: f64,
+    busy: f64,
+    delays: Vec<f64>,
+    admitted: usize,
+}
+
 struct FleetSim<'a> {
     scenario: &'a Scenario,
     trace: &'a Trace,
     policy: &'a Policy,
     planner: MigrationPlanner,
     fleet: FleetConfig,
+    /// Per-shard endpoints (base profile + shard RTT) used for migration
+    /// re-prefill sampling once a request is pinned to a shard.
+    server_endpoints: Vec<ServerEndpoint>,
+    balancer: Box<dyn Balancer>,
+    /// Fleet-level balancer stream, disjoint from every per-request
+    /// stream (randomized balancers must not perturb latency draws).
+    brng: Rng,
     heap: BinaryHeap<Event>,
     seq: u64,
     states: Vec<Option<ReqState>>,
@@ -208,12 +304,16 @@ struct FleetSim<'a> {
     /// can consult them while the simulator is otherwise borrowed.
     server_cancelled: Vec<bool>,
     device_cancelled: Vec<bool>,
-    server_pool: Pool,
+    shards: Vec<ShardState>,
+    /// Shard each server-bound request was balanced onto (None until
+    /// arrival, and forever for device-only requests).
+    shard_of: Vec<Option<usize>>,
+    /// Scratch buffer for the per-arrival balancer snapshot (reused so
+    /// the hot path allocates nothing).
+    views: Vec<ShardView>,
     device_pool: Pool,
     records: Vec<Option<RequestRecord>>,
-    server_delays: Vec<f64>,
     device_delays: Vec<f64>,
-    server_busy: f64,
     device_busy: f64,
     horizon: f64,
 }
@@ -272,8 +372,11 @@ impl<'a> FleetSim<'a> {
                         device_grant: None,
                         resolved: false,
                     });
-                    if needs_server && self.server_pool.acquire(i) {
-                        self.on_server_admit(i, ev.time);
+                    if needs_server {
+                        let s = self.assign_shard(i);
+                        if self.shards[s].pool.acquire(i) {
+                            self.on_server_admit(i, ev.time);
+                        }
                     }
                     if needs_device
                         && (!self.fleet.device_queueing || self.device_pool.acquire(i))
@@ -282,8 +385,17 @@ impl<'a> FleetSim<'a> {
                     }
                     self.try_resolve(i, ev.time);
                 }
-                EvKind::ServerRelease => {
-                    let next = self.server_pool.release(&self.server_cancelled);
+                EvKind::ServerRelease(i) => {
+                    let s = self.shard_of[i].expect("released requests are assigned");
+                    // The slot holder's service ends here — only now does
+                    // its work estimate leave the LeastWork signal.
+                    let sample = self
+                        .state(i)
+                        .pre
+                        .server_sample
+                        .expect("server users have a sample");
+                    self.shards[s].work -= sample;
+                    let next = self.shards[s].pool.release(&self.server_cancelled);
                     if let Some(j) = next {
                         self.on_server_admit(j, ev.time);
                         self.try_resolve(j, ev.time);
@@ -302,8 +414,13 @@ impl<'a> FleetSim<'a> {
                         !st.resolved && st.device_grant.is_none()
                     };
                     if pending {
-                        // The server answered first: leave the device queue.
+                        // The server answered first: leave the device
+                        // queue (`device_grant` is None, so with device
+                        // queueing on the request is sitting in it).
                         self.device_cancelled[i] = true;
+                        if self.fleet.device_queueing {
+                            self.device_pool.cancel_queued();
+                        }
                         self.try_resolve(i, ev.time);
                     }
                 }
@@ -315,8 +432,12 @@ impl<'a> FleetSim<'a> {
                     if pending {
                         // The device answered first: abandon the admission
                         // queue (the provider still bills the dispatched
-                        // prompt; see `resolve_request`).
+                        // prompt; see `resolve_request`). `server_admit`
+                        // is None, so the entry is sitting in its shard's
+                        // queue.
                         self.server_cancelled[i] = true;
+                        let s = self.shard_of[i].expect("server-bound requests are assigned");
+                        self.shards[s].pool.cancel_queued();
                         self.try_resolve(i, ev.time);
                     }
                 }
@@ -332,13 +453,33 @@ impl<'a> FleetSim<'a> {
         // zero, so traces with a delayed start (e.g. session ramp-up) do
         // not dilute utilization with an idle prefix.
         let t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+        // Fleet-level aggregates derive from the per-shard accounting —
+        // one source of truth (Summary sorts internally, so the shard
+        // concatenation order is irrelevant).
+        let mut all_delays: Vec<f64> = Vec::new();
+        let mut server_busy = 0.0;
+        let shard_loads: Vec<ShardLoad> = self
+            .shards
+            .iter()
+            .map(|s| {
+                all_delays.extend_from_slice(&s.delays);
+                server_busy += s.busy;
+                ShardLoad {
+                    queue_delay: Summary::of(&s.delays),
+                    busy_seconds: s.busy,
+                    admitted: s.admitted,
+                    slots: s.pool.cap,
+                }
+            })
+            .collect();
         let load = LoadReport {
-            server_queue_delay: Summary::of(&self.server_delays),
+            server_queue_delay: Summary::of(&all_delays),
             device_queue_delay: Summary::of(&self.device_delays),
-            server_busy_seconds: self.server_busy,
+            server_busy_seconds: server_busy,
             device_busy_seconds: self.device_busy,
             horizon: (self.horizon - t0).max(0.0),
             server_slots: self.fleet.server_slots,
+            shards: shard_loads,
         };
         FleetOutcome { records, load }
     }
@@ -351,8 +492,45 @@ impl<'a> FleetSim<'a> {
         self.states[i].as_mut().expect("state exists after arrival")
     }
 
+    /// Balance server-bound request `i` onto a shard and book its work
+    /// estimate. With one shard the balancer (and its RNG stream) is
+    /// bypassed entirely, preserving byte-identical K=1 replays.
+    fn assign_shard(&mut self, i: usize) -> usize {
+        let s = if self.shards.len() == 1 {
+            0
+        } else {
+            self.views.clear();
+            for sh in &self.shards {
+                self.views.push(ShardView {
+                    in_use: sh.pool.in_use,
+                    queued: sh.pool.live_queued(),
+                    slots: sh.pool.cap,
+                    work: sh.work,
+                });
+            }
+            let pick = self.balancer.pick(&self.views, &mut self.brng);
+            assert!(
+                pick < self.shards.len(),
+                "balancer {} violated its contract: picked shard {pick} of {}",
+                self.balancer.name(),
+                self.shards.len()
+            );
+            pick
+        };
+        self.shard_of[i] = Some(s);
+        let sample = self
+            .state(i)
+            .pre
+            .server_sample
+            .expect("server users have a sample");
+        self.shards[s].work += sample;
+        s
+    }
+
     fn on_server_admit(&mut self, i: usize, now: f64) {
         let arrival = self.trace.requests[i].arrival;
+        let s = self.shard_of[i].expect("admitted requests are assigned");
+        let rtt = self.shards[s].rtt;
         let dev_cancelled = self.device_cancelled[i];
         let (sample, device_pending) = {
             let st = self.state_mut(i);
@@ -362,11 +540,14 @@ impl<'a> FleetSim<'a> {
                 st.needs_device && st.device_grant.is_none() && !dev_cancelled,
             )
         };
-        self.server_delays.push((now - arrival).max(0.0));
+        let delay = (now - arrival).max(0.0);
+        self.shards[s].delays.push(delay);
+        self.shards[s].admitted += 1;
         if device_pending {
-            // First token lands at admit + intrinsic prefill; if the
-            // device is still queued then, it is skipped (§4.2).
-            self.push(now + sample, EvKind::ServerFirstProbe(i));
+            // First token lands at admit + intrinsic prefill (+ shard
+            // RTT); if the device is still queued then, it is skipped
+            // (§4.2).
+            self.push(now + sample + rtt, EvKind::ServerFirstProbe(i));
         }
     }
 
@@ -408,7 +589,8 @@ impl<'a> FleetSim<'a> {
             return;
         }
         let req = self.req(i);
-        let (times, pre, mut rng, device_grant, server_was_admitted) = {
+        let shard = self.shard_of[i];
+        let (times, mut pre, mut rng, device_grant, server_was_admitted) = {
             let st = self.state_mut(i);
             st.resolved = true;
             let times = ResourceTimes {
@@ -427,11 +609,28 @@ impl<'a> FleetSim<'a> {
                 st.server_admit.is_some() && !srv_cancelled,
             )
         };
+        // The shard's RTT offset folds into the pre-drawn prefill sample
+        // so the perceived first token (and the §4.2 race) see the
+        // shard's real latency. Work-estimate retirement: admissions stay
+        // in the LeastWork signal until their ServerRelease event;
+        // cancelled-in-queue entries (which never held a slot and get no
+        // release) retire now.
+        if let Some(s) = shard {
+            let sample = pre.server_sample.expect("server users have a sample");
+            if !server_was_admitted {
+                self.shards[s].work -= sample;
+            }
+            pre.server_sample = Some(sample + self.shards[s].rtt);
+        }
+        let server_ep = match shard {
+            Some(s) => &self.server_endpoints[s],
+            None => &self.scenario.server,
+        };
         let resolved = resolve_request(
             req,
             &pre,
             self.policy,
-            &self.scenario.server,
+            server_ep,
             &self.scenario.device,
             &self.planner,
             &self.scenario.cfg,
@@ -445,14 +644,18 @@ impl<'a> FleetSim<'a> {
             self.horizon = self.horizon.max(done);
         }
 
-        // Server slot accounting + release.
+        // Server slot accounting + release (on the owning shard).
         if server_was_admitted {
+            let s = shard.expect("admitted requests are assigned");
             let admit = times.server_admit.expect("admitted");
             let release = resolved.server_release.unwrap_or(admit).max(admit);
-            self.server_busy += release - admit;
-            if self.fleet.server_slots.is_some() {
-                self.push(release.max(now), EvKind::ServerRelease);
-            }
+            self.shards[s].busy += release - admit;
+            // Every admission gets a release event — also on unlimited
+            // pools, where it frees no slot but retires the in-service
+            // `in_use`/work signals the balancers read. Release never
+            // exceeds the stream's own completion horizon, so replay
+            // horizons are unchanged.
+            self.push(release.max(now), EvKind::ServerRelease(i));
         }
         // (An entry cancelled while still queued holds no slot; the
         // lazily-skipped queue entry frees nothing.)
@@ -473,6 +676,18 @@ impl<'a> FleetSim<'a> {
 /// Run a trace through the fleet loop. Requests must arrive in
 /// nondecreasing time order (the trace generators guarantee this); ties
 /// are broken in trace order.
+///
+/// # RNG-stream invariant
+///
+/// Per-request RNG streams are forked from `SimConfig.seed` **in trace
+/// order**, tagged by `Request.id` — request `k`'s latency draws depend
+/// on both its position and its id, never on event interleaving. Any
+/// transformation that reorders a trace (randomized replay of session
+/// traces, overlaying several traces) must therefore keep requests
+/// arrival-sorted and reassign ids in the new order; use
+/// [`crate::trace::generator::shuffle_payloads`] /
+/// [`crate::trace::generator::interleave`], which preserve the
+/// invariant by construction.
 pub fn run_fleet(
     scenario: &Scenario,
     trace: &Trace,
@@ -480,29 +695,55 @@ pub fn run_fleet(
     fleet: &FleetConfig,
 ) -> FleetOutcome {
     let n = trace.len();
+    let shard_count = fleet.shards.max(1);
     // A zero-slot pool could never admit anyone; normalize once so the
-    // pool and the reported LoadReport.server_slots always agree.
+    // pools and the reported LoadReport.server_slots always agree. RTT
+    // offsets are padded/truncated to the shard count.
+    let mut rtts = fleet.shard_rtts.clone();
+    rtts.resize(shard_count, 0.0);
     let fleet = FleetConfig {
         server_slots: fleet.server_slots.map(|s| s.max(1)),
         device_queueing: fleet.device_queueing,
+        shards: shard_count,
+        balancer: fleet.balancer,
+        shard_rtts: rtts.clone(),
     };
+    let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &rtts);
+    let shards: Vec<ShardState> = rtts
+        .iter()
+        .map(|&rtt| ShardState {
+            pool: Pool::new(fleet.server_slots),
+            rtt,
+            work: 0.0,
+            busy: 0.0,
+            delays: Vec::new(),
+            admitted: 0,
+        })
+        .collect();
+    let device_pool = Pool::new(if fleet.device_queueing { Some(1) } else { None });
     let sim = FleetSim {
         scenario,
         trace,
         policy,
         planner: MigrationPlanner::new(scenario.cfg.migration, scenario.costs),
+        balancer: fleet.balancer.build(),
+        // Disjoint from the root request-stream RNG by construction (a
+        // different seed expansion), so balancer draws never perturb
+        // request trajectories.
+        brng: Rng::new(scenario.cfg.seed ^ 0xBA1A_7CE5_0C4A_11CE),
         fleet,
+        server_endpoints,
         heap: BinaryHeap::new(),
         seq: 0,
         states: (0..n).map(|_| None).collect(),
         server_cancelled: vec![false; n],
         device_cancelled: vec![false; n],
-        server_pool: Pool::new(fleet.server_slots),
-        device_pool: Pool::new(if fleet.device_queueing { Some(1) } else { None }),
+        shards,
+        shard_of: vec![None; n],
+        views: Vec::new(),
+        device_pool,
         records: (0..n).map(|_| None).collect(),
-        server_delays: Vec::new(),
         device_delays: Vec::new(),
-        server_busy: 0.0,
         device_busy: 0.0,
         horizon: 0.0,
     };
@@ -562,6 +803,7 @@ mod tests {
             &FleetConfig {
                 server_slots: Some(64),
                 device_queueing: false,
+                ..FleetConfig::replay(false)
             },
         );
         let dm = (fleet.qoe.ttft.mean - replay.ttft.mean).abs() / replay.ttft.mean;
@@ -612,7 +854,7 @@ mod tests {
         let trace = spec.generate(9);
         let fleet_cfg = FleetConfig {
             server_slots: Some(1),
-            device_queueing: true,
+            ..FleetConfig::replay(true)
         };
         let server_only = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
         let race = Policy::simple(PolicyKind::StochS, 1.0, false);
@@ -640,5 +882,147 @@ mod tests {
         let a = run_fleet(&sc, &trace, &policy, &cfg);
         let b = run_fleet(&sc, &trace, &policy, &cfg);
         assert_eq!(a.records, b.records);
+    }
+
+    // -----------------------------------------------------------------
+    // Sharded fleet
+    // -----------------------------------------------------------------
+
+    /// Single-pool parity: a K=1 shard "fleet" must reproduce the PR-1
+    /// single-pool records byte-for-byte under every balancer (the
+    /// balancer is bypassed at K=1 and its RNG stream never drawn).
+    #[test]
+    fn k1_shard_matches_single_pool_exactly() {
+        let sc = scenario(27);
+        let trace = trace_at_gap(150, 0.8, 11);
+        let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+        let single = run_fleet(&sc, &trace, &policy, &FleetConfig::bounded(2));
+        for kind in BalancerKind::all() {
+            let cfg = FleetConfig::sharded(1, 2, kind);
+            let sharded = run_fleet(&sc, &trace, &policy, &cfg);
+            assert_eq!(
+                single.records, sharded.records,
+                "K=1 {kind} diverged from the single-pool fleet"
+            );
+            assert_eq!(sharded.load.shards.len(), 1);
+        }
+    }
+
+    /// K shards with S slots each behave like capacity K·S: total
+    /// admissions conserved, every request lands on exactly one shard.
+    #[test]
+    fn shards_conserve_admissions() {
+        let sc = scenario(28);
+        let trace = trace_at_gap(200, 0.5, 12);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        for kind in BalancerKind::all() {
+            let out = run_fleet(&sc, &trace, &policy, &FleetConfig::sharded(4, 1, kind));
+            assert_eq!(out.records.len(), 200);
+            assert_eq!(out.load.shards.len(), 4);
+            let admitted: usize = out.load.shards.iter().map(|s| s.admitted).sum();
+            assert_eq!(admitted, 200, "{kind}: every request admits exactly once");
+            assert_eq!(out.load.total_server_slots(), Some(4));
+            let shard_busy: f64 = out.load.shards.iter().map(|s| s.busy_seconds).sum();
+            assert!(
+                (shard_busy - out.load.server_busy_seconds).abs() < 1e-9,
+                "{kind}: busy-seconds must decompose per shard"
+            );
+            let util = out.load.server_utilization().unwrap();
+            assert!(util <= 1.0 + 1e-9, "{kind}: util {util:.3} > 1");
+        }
+    }
+
+    /// Round-robin spreads a server-only trace evenly across shards.
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let sc = scenario(29);
+        let trace = trace_at_gap(120, 2.0, 13);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let out = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &FleetConfig::sharded(4, 2, BalancerKind::RoundRobin),
+        );
+        for s in &out.load.shards {
+            assert_eq!(s.admitted, 30, "RR must deal 120 requests 30/30/30/30");
+        }
+    }
+
+    /// The power-of-two balancer draws from a seeded fleet-level stream:
+    /// identical runs are byte-identical, and the per-shard assignment
+    /// depends only on the seed.
+    #[test]
+    fn power_of_two_is_deterministic_under_fixed_seed() {
+        let sc = scenario(30);
+        let trace = trace_at_gap(150, 0.6, 14);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::sharded(4, 1, BalancerKind::PowerOfTwoChoices);
+        let a = run_fleet(&sc, &trace, &policy, &cfg);
+        let b = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(a.records, b.records);
+        let counts = |o: &FleetOutcome| -> Vec<usize> {
+            o.load.shards.iter().map(|s| s.admitted).collect()
+        };
+        assert_eq!(counts(&a), counts(&b), "shard assignment must reproduce");
+        // A different scenario seed re-seeds the balancer stream too.
+        let c = run_fleet(&scenario(31), &trace, &policy, &cfg);
+        assert_ne!(a.records, c.records);
+    }
+
+    /// Heterogeneous shard RTTs surface in perceived TTFT: a fleet whose
+    /// shards all carry +Δ RTT shifts every server-won TTFT by ≥ Δ
+    /// relative to the homogeneous fleet.
+    #[test]
+    fn shard_rtt_offsets_shift_ttft() {
+        let sc = scenario(32);
+        let trace = trace_at_gap(80, 30.0, 15);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let base = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &FleetConfig::sharded(2, 4, BalancerKind::RoundRobin),
+        );
+        let slow = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &FleetConfig::sharded(2, 4, BalancerKind::RoundRobin)
+                .with_shard_rtts(vec![0.25, 0.25]),
+        );
+        for (b, s) in base.records.iter().zip(&slow.records) {
+            assert!(
+                (s.ttft - b.ttft - 0.25).abs() < 1e-9,
+                "uniform +0.25s shard RTT must shift TTFT: {} vs {}",
+                s.ttft,
+                b.ttft
+            );
+        }
+    }
+
+    /// JSQ keeps shard queues balanced where round-robin lets them
+    /// diverge: on the same trace, mean queue delay under JSQ must not
+    /// exceed round-robin's, and the imbalance summary must be sane.
+    #[test]
+    fn jsq_queue_delay_not_worse_than_round_robin() {
+        let sc = scenario(33);
+        let trace = trace_at_gap(300, 0.4, 16);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let run = |kind| {
+            run_fleet(&sc, &trace, &policy, &FleetConfig::sharded(4, 1, kind)).load
+        };
+        let rr = run(BalancerKind::RoundRobin);
+        let jsq = run(BalancerKind::JoinShortestQueue);
+        assert!(
+            jsq.server_queue_delay.mean <= rr.server_queue_delay.mean * 1.02,
+            "JSQ mean queue delay {:.3} should not exceed RR {:.3}",
+            jsq.server_queue_delay.mean,
+            rr.server_queue_delay.mean
+        );
+        for load in [&rr, &jsq] {
+            let imb = load.shard_imbalance().unwrap();
+            assert!(imb >= 1.0 - 1e-9 && imb.is_finite(), "imbalance {imb}");
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Deterministic workload simulation.
 //!
-//! Three layers, one request code path:
+//! Four layers, one request code path:
 //!
 //! * [`delivery`] models the user-side token consumption schedule (§4.3):
 //!   tokens are paced at the consumption rate `r_c`, a buffer absorbs
@@ -11,39 +11,52 @@
 //!   and unified cost metering — parameterized by the absolute times the
 //!   contended resources were granted, plus the [`engine::Scenario`]
 //!   front door.
-//! * [`fleet`] is the discrete-event loop that produces those grant
-//!   times: a binary-heap event queue in which N concurrent requests
-//!   contend for a server with a configurable concurrency limit
-//!   (`FleetConfig::server_slots`) plus FIFO admission queue, and for
-//!   the single-flight device. Dispatch and migration decisions flow
-//!   through `coordinator::policy` / `coordinator::migration` unchanged.
+//! * [`balancer`] is the shard-selection layer: a [`balancer::Balancer`]
+//!   trait with round-robin, join-shortest-queue, power-of-two-choices,
+//!   and least-work implementations, selected by
+//!   [`balancer::BalancerKind`].
+//! * [`fleet`] is the discrete-event loop that produces the resource
+//!   grant times: a binary-heap event queue in which N concurrent
+//!   requests contend for a *sharded* server fleet
+//!   (`FleetConfig::shards` replicas, each with
+//!   `FleetConfig::server_slots` admission slots, its own FIFO queue,
+//!   and an optional per-shard RTT offset) and for the single-flight
+//!   device. Dispatch and migration decisions flow through
+//!   `coordinator::policy` / `coordinator::migration` unchanged.
 //!
 //! # Fleet model and knobs
 //!
 //! * `FleetConfig::replay(device_queueing)` — the degenerate
-//!   configuration: unlimited server admission. This reproduces the
+//!   configuration: one shard, unlimited admission. This reproduces the
 //!   paper's per-request replay methodology exactly (server TTFT
 //!   distributions already fold the provider's own queueing in
 //!   statistically); [`engine::Scenario::run`] is this configuration.
-//! * `FleetConfig { server_slots: Some(c), .. }` — a bounded admission
-//!   pool: requests beyond `c` concurrent admissions wait in FIFO order,
-//!   and their perceived TTFT includes the queue delay. Load-dependent
-//!   metrics (queue delay, busy seconds, utilization, horizon) surface
-//!   in [`crate::metrics::LoadReport`].
+//! * `FleetConfig::bounded(c)` — one shard with `c` admission slots:
+//!   requests beyond `c` concurrent admissions wait in FIFO order, and
+//!   their perceived TTFT includes the queue delay.
+//! * `FleetConfig::sharded(k, c, balancer)` — K replicas with `c` slots
+//!   each, fronted by the chosen balancer; heterogeneous placement via
+//!   `with_shard_rtts`. Load-dependent metrics (queue delay, busy
+//!   seconds, utilization, per-shard breakdown, imbalance) surface in
+//!   [`crate::metrics::LoadReport`].
 //! * Arrival processes live in `trace::generator`: Poisson and Gamma
 //!   inter-arrivals (`Arrival::Poisson` / `Arrival::Gamma` — CV above or
 //!   below 1 for burstier or smoother-than-Poisson traffic), fixed gaps,
-//!   and per-user session workloads (`SessionSpec`) that overlay many
-//!   users' request streams into one fleet trace.
+//!   per-user session workloads (`SessionSpec`) that overlay many users'
+//!   request streams into one fleet trace, and the order-preserving
+//!   `shuffle_payloads` / `interleave` helpers for randomized replays.
 //!
 //! Every run is reproducible bit-for-bit from `SimConfig.seed`: the event
-//! heap breaks time ties deterministically and per-request RNG streams
-//! are forked in trace order, independent of event interleaving. The
+//! heap breaks time ties deterministically, per-request RNG streams are
+//! forked in trace order independent of event interleaving, and
+//! randomized balancers draw from their own fleet-level stream. The
 //! paper's "mean over 10 runs" becomes a seed sweep.
 
+pub mod balancer;
 pub mod delivery;
 pub mod engine;
 pub mod fleet;
 
+pub use balancer::{Balancer, BalancerKind, ShardView};
 pub use engine::{Scenario, SimConfig};
 pub use fleet::{FleetConfig, FleetOutcome};

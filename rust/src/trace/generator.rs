@@ -218,6 +218,59 @@ pub fn profiling_lengths(spec: &WorkloadSpec, n: usize, seed: u64) -> Vec<u32> {
     (0..n).map(|_| spec.prompt.sample(&mut rng)).collect()
 }
 
+/// Deterministically shuffle which request payload (prompt/output
+/// lengths) occupies each arrival slot of a trace, keeping the arrival
+/// times — and therefore their sorted order — fixed, and reassigning ids
+/// in arrival order.
+///
+/// Replaying a multi-user session trace in randomized arrival order
+/// cannot simply permute the `Request` list: `run_fleet` forks each
+/// request's RNG stream from the root seed *in trace order*, tagged by
+/// id, so a trace must stay arrival-sorted with ids matching positions
+/// or every downstream latency draw shifts. Shuffling the *payloads*
+/// over the fixed arrival grid sidesteps that: the trace stays sorted,
+/// ids stay positional, and the randomization is reproducible from
+/// `seed` alone.
+pub fn shuffle_payloads(trace: &Trace, seed: u64) -> Trace {
+    let mut payloads: Vec<(u32, u32)> = trace
+        .requests
+        .iter()
+        .map(|r| (r.prompt_len, r.output_len))
+        .collect();
+    let mut rng = Rng::new(seed ^ 0x5AFF1E);
+    rng.shuffle(&mut payloads);
+    let requests = trace
+        .requests
+        .iter()
+        .zip(payloads)
+        .enumerate()
+        .map(|(i, (r, (prompt_len, output_len)))| Request {
+            id: i as u64,
+            arrival: r.arrival,
+            prompt_len,
+            output_len,
+        })
+        .collect();
+    Trace::new(&format!("{}-shuffled", trace.name), requests)
+}
+
+/// Overlay several traces into one global timeline: requests are merged
+/// in arrival order (stable — ties keep input-trace order) and ids are
+/// reassigned to the merged positions, satisfying `run_fleet`'s
+/// RNG-stream invariant (arrival-sorted, positional ids) by
+/// construction.
+pub fn interleave(name: &str, traces: &[Trace]) -> Trace {
+    let mut requests: Vec<Request> = traces
+        .iter()
+        .flat_map(|t| t.requests.iter().copied())
+        .collect();
+    requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace::new(name, requests)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +376,58 @@ mod tests {
         assert!((t.mean_prompt_len() - WorkloadSpec::alpaca(3000).generate(13).mean_prompt_len())
             .abs()
             < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_payloads_permutes_over_fixed_arrival_grid() {
+        let spec = SessionSpec::chat(6, 20, 12.0);
+        let t = spec.generate(21);
+        let s = shuffle_payloads(&t, 99);
+        // Deterministic from the seed; a different seed permutes
+        // differently.
+        assert_eq!(s.requests, shuffle_payloads(&t, 99).requests);
+        assert_ne!(s.requests, shuffle_payloads(&t, 100).requests);
+        // Arrival grid and positional ids are preserved (the `run_fleet`
+        // RNG-stream invariant)...
+        assert_eq!(s.len(), t.len());
+        for (i, (a, b)) in t.requests.iter().zip(&s.requests).enumerate() {
+            assert_eq!(a.arrival, b.arrival, "arrival grid must not move");
+            assert_eq!(b.id, i as u64, "ids must stay positional");
+        }
+        // ...while the payload multiset is conserved but reordered.
+        let key = |r: &Request| (r.prompt_len, r.output_len);
+        let mut before: Vec<_> = t.requests.iter().map(key).collect();
+        let mut after: Vec<_> = s.requests.iter().map(key).collect();
+        assert_ne!(before, after, "seed 99 must actually permute");
+        before.sort_unstable();
+        after.sort_unstable();
+        assert_eq!(before, after, "payloads conserved as a multiset");
+    }
+
+    #[test]
+    fn interleave_merges_sorted_with_positional_ids() {
+        let a = WorkloadSpec {
+            arrival: Arrival::Fixed { gap: 3.0 },
+            ..WorkloadSpec::alpaca(10)
+        }
+        .generate(31);
+        let b = WorkloadSpec {
+            arrival: Arrival::Fixed { gap: 5.0 },
+            ..WorkloadSpec::alpaca(8)
+        }
+        .generate(32);
+        let m = interleave("merged", &[a.clone(), b.clone()]);
+        assert_eq!(m.len(), 18);
+        let mut last = f64::NEG_INFINITY;
+        for (i, r) in m.requests.iter().enumerate() {
+            assert!(r.arrival >= last, "merged trace must stay sorted");
+            assert_eq!(r.id, i as u64, "ids reassigned to merged positions");
+            last = r.arrival;
+        }
+        // Ties (both traces start at t=0) keep input order: trace `a`'s
+        // head precedes trace `b`'s.
+        assert_eq!(m.requests[0].prompt_len, a.requests[0].prompt_len);
+        assert_eq!(m.requests[1].prompt_len, b.requests[0].prompt_len);
     }
 
     #[test]

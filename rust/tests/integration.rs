@@ -15,6 +15,7 @@ use disco::experiments::common::{
     avg_cost, avg_mean_ttft, avg_p99_ttft, disco_for, make_policy, run_cell, stoch_for,
 };
 use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::balancer::BalancerKind;
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::sim::fleet::FleetConfig;
 use disco::trace::generator::{Arrival, WorkloadSpec};
@@ -314,7 +315,7 @@ fn determinism_same_seed_identical_reports_both_paths() {
     // Fleet path (bounded server + device contention).
     let fleet_cfg = FleetConfig {
         server_slots: Some(2),
-        device_queueing: true,
+        ..FleetConfig::replay(true)
     };
     let fa = mk(5).run_fleet(&trace, &policy, &fleet_cfg);
     let fb = mk(5).run_fleet(&trace, &policy, &fleet_cfg);
@@ -381,7 +382,7 @@ fn fleet_sweep_grid_runs_and_zero_load_matches_replay() {
             &policy,
             &FleetConfig {
                 server_slots: Some(params.server_slots),
-                device_queueing: true,
+                ..FleetConfig::replay(true)
             },
         );
         let dm = (fleet.qoe.ttft.mean - legacy.ttft.mean).abs() / legacy.ttft.mean;
@@ -407,7 +408,7 @@ fn fleet_queue_delay_monotone_in_load() {
     let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
     let fleet_cfg = FleetConfig {
         server_slots: Some(2),
-        device_queueing: false,
+        ..FleetConfig::replay(false)
     };
     let mut delays = Vec::new();
     let mut utils = Vec::new();
@@ -452,6 +453,91 @@ fn fleet_handles_session_workloads() {
     assert!(rep.load.horizon > 0.0);
     let util = rep.load.server_utilization().unwrap();
     assert!((0.0..=1.0 + 1e-9).contains(&util), "util {util}");
+}
+
+// ---------------------------------------------------------------------
+// Sharded server fleet
+// ---------------------------------------------------------------------
+
+/// Acceptance: a K=1 unlimited-pool fleet run produces byte-identical
+/// `RequestRecord`s to the legacy replay path, whichever balancer fronts
+/// the (single) shard — the balancer is bypassed at K=1 and its RNG
+/// stream never drawn.
+#[test]
+fn k1_unlimited_fleet_matches_legacy_replay_byte_identical() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 53,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(300).at_rate(1.0).generate(37);
+    for policy in [
+        Policy::simple(PolicyKind::StochS, 0.7, false),
+        Policy::simple(PolicyKind::ServerOnly, 1.0, false),
+    ] {
+        let legacy = scenario.run(&trace, &policy);
+        for balancer in BalancerKind::all() {
+            let cfg = FleetConfig {
+                balancer,
+                ..FleetConfig::replay(false)
+            };
+            let fleet = scenario.run_fleet(&trace, &policy, &cfg);
+            assert_eq!(
+                legacy, fleet.records,
+                "K=1/unlimited under {balancer:?} must replay byte-identically"
+            );
+        }
+    }
+}
+
+/// Acceptance: at high load on a K=4 fleet, load-aware balancers (JSQ,
+/// power-of-two) achieve strictly lower p99 queue delay than oblivious
+/// round-robin. All balancers replay the identical trace and latency
+/// draws, so the gap is a pure balancing effect.
+#[test]
+fn jsq_and_p2c_beat_round_robin_p99_queue_delay_at_high_load() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 59,
+            ..Default::default()
+        },
+    );
+    // ~3.3 req/s against ~2.8 req/s of fleet capacity (4 shards × 1 slot,
+    // ~1.45 s mean service): sustained overload, so admission queues are
+    // always populated and balancer quality dominates the delay tail.
+    let trace = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 0.3 },
+        ..WorkloadSpec::alpaca(400)
+    }
+    .generate(41);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let p99_queue = |balancer: BalancerKind| -> f64 {
+        let cfg = FleetConfig::sharded(4, 1, balancer);
+        scenario
+            .run_fleet_report(&trace, &policy, &cfg)
+            .load
+            .server_queue_delay
+            .p99
+    };
+    let rr = p99_queue(BalancerKind::RoundRobin);
+    let jsq = p99_queue(BalancerKind::JoinShortestQueue);
+    let p2c = p99_queue(BalancerKind::PowerOfTwoChoices);
+    assert!(rr > 1.0, "overloaded RR fleet must queue, p99={rr:.3}");
+    assert!(
+        jsq < rr,
+        "JSQ p99 queue delay {jsq:.3} must beat round-robin {rr:.3}"
+    );
+    assert!(
+        p2c < rr,
+        "P2C p99 queue delay {p2c:.3} must beat round-robin {rr:.3}"
+    );
 }
 
 // ---------------------------------------------------------------------
