@@ -140,4 +140,61 @@ mod tests {
             }
         }
     }
+
+    /// `fits` at the capacity boundary: a model whose fp16 weights plus
+    /// the 25% runtime overhead land a hair inside the VRAM limit fits;
+    /// a hair beyond does not. (The exact boundary itself is subject to
+    /// floating-point rounding of `vram / 2.5`, so the test brackets it.)
+    #[test]
+    fn fits_at_capacity_boundary() {
+        for p in [ColdStartProfile::rtx3060(), ColdStartProfile::a40()] {
+            // params_b × 2.0 × 1.25 == vram_gb at the boundary.
+            let boundary = p.vram_gb / 2.5;
+            assert!(
+                p.fits(boundary * (1.0 - 1e-9)),
+                "{}: just inside the boundary must fit",
+                p.platform
+            );
+            assert!(
+                !p.fits(boundary * (1.0 + 1e-9)),
+                "{}: just over the boundary must not fit",
+                p.platform
+            );
+            // Boundary models still have finite, load-dominated cold
+            // starts.
+            assert!(p.load_time(boundary).is_finite());
+            assert!(p.cold_ttft(boundary) > p.load_time(boundary));
+        }
+    }
+
+    /// Zero-parameter degenerate model: the intercepts survive — load
+    /// time is pure runtime init, warm TTFT is the base latency, and the
+    /// cold TTFT is exactly their sum.
+    #[test]
+    fn zero_parameter_model_reduces_to_intercepts() {
+        for p in [ColdStartProfile::rtx3060(), ColdStartProfile::a40()] {
+            assert!(p.fits(0.0), "{}: a 0B model always fits", p.platform);
+            assert_eq!(p.load_time(0.0), p.load_intercept);
+            assert_eq!(p.warm_ttft(0.0), p.ttft_base);
+            assert_eq!(p.cold_ttft(0.0), p.load_intercept + p.ttft_base);
+            assert!(p.load_time(0.0) > 0.0 && p.warm_ttft(0.0) > 0.0);
+        }
+    }
+
+    /// Load time and cold TTFT grow monotonically in model size (the
+    /// linear Table-4 fit), so the autoscaler's cold-start penalty is
+    /// well-ordered across model choices.
+    #[test]
+    fn cold_start_monotone_in_model_size() {
+        for p in [ColdStartProfile::rtx3060(), ColdStartProfile::a40()] {
+            let mut last_load = -1.0;
+            let mut last_cold = -1.0;
+            for (_, b) in QWEN_SIZES_B {
+                assert!(p.load_time(*b) > last_load);
+                assert!(p.cold_ttft(*b) > last_cold);
+                last_load = p.load_time(*b);
+                last_cold = p.cold_ttft(*b);
+            }
+        }
+    }
 }

@@ -6,8 +6,9 @@
 //! the single-flight device, and the cell reports load-dependent QoE —
 //! mean/p99 TTFT *including* queue delay, the queue delay itself, and
 //! server utilization. Cells fan out across cores via
-//! [`common::par_map`] with per-cell deterministic seeding, so the wall
-//! clock drops by ≈ #cores while results stay bit-reproducible.
+//! [`crate::experiments::common::par_map`] with per-cell deterministic
+//! seeding, so the wall clock drops by ≈ #cores while results stay
+//! bit-reproducible.
 
 use crate::coordinator::policy::PolicyKind;
 use crate::cost::unified::Constraint;
@@ -105,6 +106,7 @@ fn run_cell(params: &SweepParams, cell: &GridCell) -> CellResult {
         shards: params.shards,
         balancer: params.balancer,
         shard_rtts: Vec::new(),
+        autoscale: None,
     };
     let mut mean_ttft = Vec::new();
     let mut p99_ttft = Vec::new();

@@ -7,6 +7,7 @@
 pub mod ablation;
 pub mod ablations2;
 pub mod appendix;
+pub mod autoscale_sweep;
 pub mod characterization;
 pub mod common;
 pub mod endtoend;
@@ -152,6 +153,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "shard-sweep",
             title: "Fleet: balancer comparison across shard counts and arrival rates",
             run: shard_sweep::shard_sweep,
+        },
+        ExperimentDef {
+            id: "autoscale-sweep",
+            title: "Fleet: autoscaling policies vs static provisioning under bursty load",
+            run: autoscale_sweep::autoscale_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

@@ -8,8 +8,9 @@
 //! samples — the balancer RNG stream is disjoint from per-request
 //! streams — so differences in queue delay and tail TTFT are pure
 //! balancing effects, paired cell-for-cell. Cells fan out across cores
-//! via [`common::par_map`] with [`CellSeed`] content-derived seeding, so
-//! results are bit-reproducible and grid-shape independent.
+//! via [`crate::experiments::common::par_map`] with [`CellSeed`]
+//! content-derived seeding, so results are bit-reproducible and
+//! grid-shape independent.
 
 use crate::coordinator::policy::PolicyKind;
 use crate::cost::unified::Constraint;

@@ -1,16 +1,18 @@
 //! `disco` — the DiSCo coordinator CLI.
 //!
-//! Subcommands:
-//!   list                         list available experiments
-//!   exp <id|all> [--quick] [--seeds N] [--requests N] [--out DIR]
-//!   simulate [--service S] [--device D] [--policy P] [--b B]
-//!            [--constraint server|device] [--requests N] [--seed N]
-//!            [--migration] [--queueing] [--trace FILE]
-//!   fleet_sweep / shard_sweep
-//!            parallel sweep grids over the (sharded) fleet simulator
-//!   trace-gen [--n N] [--seed N] [--out FILE] [--workload alpaca|long]
-//!   serve [--variant NAME] [--requests N] [--max-new N] [--scale X]
-//!         run the LIVE loop: real PJRT device model + emulated server
+//! ```text
+//! list                         list available experiments
+//! exp <id|all> [--quick] [--seeds N] [--requests N] [--out DIR]
+//! simulate [--service S] [--device D] [--policy P] [--b B]
+//!          [--constraint server|device] [--requests N] [--seed N]
+//!          [--migration] [--queueing] [--trace FILE]
+//! fleet_sweep / shard_sweep / autoscale_sweep
+//!          parallel sweep grids over the (sharded, autoscaled) fleet
+//! bench    fixed-seed fleet benchmark -> BENCH_fleet.json (CI perf gate)
+//! trace-gen [--n N] [--seed N] [--out FILE] [--workload alpaca|long]
+//! serve [--variant NAME] [--requests N] [--max-new N] [--scale X]
+//!       run the LIVE loop: real PJRT device model + emulated server
+//! ```
 
 use disco::coordinator::policy::PolicyKind;
 use disco::cost::unified::Constraint;
@@ -31,6 +33,8 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "fleet_sweep" | "fleet-sweep" => cmd_fleet_sweep(&args),
         "shard_sweep" | "shard-sweep" => cmd_shard_sweep(&args),
+        "autoscale_sweep" | "autoscale-sweep" => cmd_autoscale_sweep(&args),
+        "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
         _ => {
@@ -60,6 +64,16 @@ fn print_help() {
          \x20             [--shards K1,K2,..] [--balancers b1,b2,..] [--rates R1,..]\n\
          \x20             [--slots N] [--policy P] [--requests N] [--seeds N]\n\
          \x20             [--service S] [--device D]\n\
+         \x20 autoscale_sweep\n\
+         \x20             parallel (policy × rate × cold-start) grid on the autoscaled\n\
+         \x20             fleet [--policies p1,p2,..] [--rates R1,..]\n\
+         \x20             [--coldstarts rtx3060:3,a40:7,fixed:SECS] [--min K] [--max K]\n\
+         \x20             [--slots N] [--cv CV] [--interval SECS] [--balancer B]\n\
+         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
+         \x20             [--service S] [--device D]\n\
+         \x20 bench       fixed-seed fleet benchmark → BENCH_fleet.json\n\
+         \x20             [--requests N] [--reps N] [--out FILE]\n\
+         \x20             [--baseline FILE] [--max-regression FRAC]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
     );
@@ -305,6 +319,161 @@ fn cmd_shard_sweep(args: &Args) -> anyhow::Result<()> {
     let results = run_grid(&params);
     println!("{}", render_grid(&results));
     println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_autoscale_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::autoscale_sweep::{
+        render_grid, run_grid, AutoscaleSweepParams, ColdCase, PolicyAxis,
+    };
+    use disco::sim::autoscaler::ColdStartSpec;
+
+    fn parse_axis(s: &str) -> anyhow::Result<PolicyAxis> {
+        let hint = "static-min|static-max|reactive|ttft";
+        PolicyAxis::parse(s).ok_or_else(|| anyhow::anyhow!("unknown policy '{s}' ({hint})"))
+    }
+    fn parse_cold(s: &str) -> anyhow::Result<ColdCase> {
+        let hint = "rtx3060:B|a40:B|fixed:SECS";
+        ColdStartSpec::parse(s)
+            .map(ColdCase::new)
+            .ok_or_else(|| anyhow::anyhow!("unknown cold-start '{s}' ({hint})"))
+    }
+
+    let defaults = AutoscaleSweepParams::default();
+    let policies = parse_list(args, "policies", defaults.policies, parse_axis)?;
+    let rates = parse_rates(args, defaults.rates)?;
+    let cold_cases = parse_list(args, "coldstarts", defaults.cold_cases, parse_cold)?;
+
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
+    let params = AutoscaleSweepParams {
+        policies,
+        rates,
+        cold_cases,
+        min_shards: args.get_usize("min", defaults.min_shards)?,
+        max_shards: args.get_usize("max", defaults.max_shards)?,
+        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
+        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
+        eval_interval: args.get_f64("interval", defaults.eval_interval)?,
+        burst_cv: args.get_f64("cv", defaults.burst_cv)?,
+        policy: parse_policy(args.get_or("policy", "server-only"))?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    anyhow::ensure!(params.min_shards > 0, "--min must be at least 1");
+    anyhow::ensure!(
+        params.max_shards >= params.min_shards,
+        "--max must be at least --min"
+    );
+    anyhow::ensure!(params.burst_cv > 0.0, "--cv must be positive");
+    anyhow::ensure!(params.eval_interval > 0.0, "--interval must be positive");
+    let n_cells = params.n_cells();
+    println!(
+        "autoscale sweep: {} policies × {} rates × {} cold-starts → {n_cells} cells \
+         (static cells skip the cold axis), shards {}..{} × {} slots ({} balancer), \
+         {} requests × {} seeds per cell",
+        params.policies.len(),
+        params.rates.len(),
+        params.cold_cases.len(),
+        params.min_shards,
+        params.max_shards,
+        params.slots_per_shard,
+        params.balancer.label(),
+        params.n_requests,
+        params.n_seeds
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Fixed-seed fleet benchmark: runs a sharded workload `--reps` times,
+/// reports the best wall time as events/sec plus TTFT percentiles, writes
+/// the JSON artifact CI uploads, and — with `--baseline` — fails when
+/// events/sec regresses more than `--max-regression` below the committed
+/// baseline.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use disco::coordinator::policy::Policy;
+    use disco::sim::fleet::FleetConfig;
+    use disco::stats::describe::Summary;
+    use disco::util::json::Json;
+
+    let n = args.get_usize("requests", 4000)?;
+    let reps = args.get_usize("reps", 3)?.max(1);
+    let seed = args.get_u64("seed", 0xD15C0)?;
+    anyhow::ensure!(n > 0, "--requests must be at least 1");
+
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(n).at_rate(2.0).generate(seed ^ 0xA1FA);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue);
+
+    let mut best = f64::INFINITY;
+    let mut outcome = None;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let out = scenario.run_fleet(&trace, &policy, &fleet);
+        best = best.min(t0.elapsed().as_secs_f64());
+        outcome = Some(out);
+    }
+    let outcome = outcome.expect("reps >= 1");
+    let events = outcome.load.events_processed;
+    let events_per_sec = events as f64 / best.max(1e-12);
+    let ttfts: Vec<f64> = outcome.records.iter().map(|r| r.ttft).collect();
+    let s = Summary::of(&ttfts);
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("requests", Json::num(n as f64)),
+        ("events", Json::num(events as f64)),
+        ("wall_time_s", Json::num(best)),
+        ("events_per_sec", Json::num(events_per_sec)),
+        ("p50_ttft_s", Json::num(s.p50)),
+        ("p99_ttft_s", Json::num(s.p99)),
+        ("seed", Json::num(seed as f64)),
+        ("reps", Json::num(reps as f64)),
+    ]);
+    let out_path = args.get_or("out", "BENCH_fleet.json");
+    std::fs::write(out_path, format!("{json}\n"))?;
+    println!(
+        "bench fleet: {n} requests, {events} events in {best:.3}s \
+         ({events_per_sec:.0} events/s), TTFT p50 {:.3}s p99 {:.3}s → {out_path}",
+        s.p50, s.p99
+    );
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline = Json::parse(&text)?;
+        let base_eps = baseline.req_f64("events_per_sec")?;
+        let max_regression = args.get_f64("max-regression", 0.25)?;
+        let floor = base_eps * (1.0 - max_regression);
+        anyhow::ensure!(
+            events_per_sec >= floor,
+            "perf regression: {events_per_sec:.0} events/s is more than \
+             {:.0}% below the {base_eps:.0} events/s baseline (floor {floor:.0})",
+            max_regression * 100.0
+        );
+        println!(
+            "baseline check ok: {events_per_sec:.0} events/s ≥ floor {floor:.0} \
+             ({base_eps:.0} − {:.0}%)",
+            max_regression * 100.0
+        );
+    }
     Ok(())
 }
 

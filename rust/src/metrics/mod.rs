@@ -103,11 +103,57 @@ pub struct ShardLoad {
     pub admitted: usize,
     /// This shard's concurrent-admission cap (`None` = unlimited).
     pub slots: Option<usize>,
+    /// Seconds this shard existed (creation to retirement or end of
+    /// run). Equals the horizon for every shard of a static fleet; the
+    /// utilization denominators below use it so shards provisioned and
+    /// retired mid-run under autoscaling are judged over their own
+    /// lifetime, not the whole run.
+    pub lifetime_seconds: f64,
+}
+
+/// Kind of shard-autoscaling transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleEventKind {
+    /// A new (cold) shard was provisioned.
+    ScaleOut,
+    /// A cold shard finished loading and joined the balanced set.
+    WarmUp,
+    /// A warm shard became a scale-in victim (no new admissions).
+    DrainStart,
+    /// A draining shard finished its last stream and left the fleet.
+    Retire,
+}
+
+/// One autoscaling transition, timestamped in seconds since the first
+/// arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleEvent {
+    /// Seconds since the first arrival.
+    pub time: f64,
+    /// Index of the shard the transition applies to.
+    pub shard: usize,
+    /// What happened.
+    pub kind: ScaleEventKind,
+}
+
+/// One sample of the shard-count timeline, recorded at the start of the
+/// run and at every lifecycle transition.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCountSample {
+    /// Seconds since the first arrival.
+    pub time: f64,
+    /// Shards admitting new work at this instant.
+    pub warm: usize,
+    /// Shards still being paid for (warm + cold + draining — everything
+    /// short of retired), so integrating this over time agrees with
+    /// `LoadReport::shard_seconds`.
+    pub provisioned: usize,
 }
 
 /// Load-dependent metrics surfaced by the fleet simulator: admission-queue
-/// delays, resource busy time, concurrency over the trace horizon, and
-/// the per-shard breakdown of the server fleet.
+/// delays, resource busy time, concurrency over the trace horizon, the
+/// per-shard breakdown of the server fleet, and — under autoscaling —
+/// the shard-count timeline with its cold-start and shard-second costs.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     /// Server admission-queue delay over requests that dispatched to the
@@ -120,14 +166,33 @@ pub struct LoadReport {
     pub server_busy_seconds: f64,
     /// Total device busy seconds.
     pub device_busy_seconds: f64,
-    /// Simulated horizon: last event time minus the first arrival
-    /// (seconds), so delayed-start traces don't dilute utilization.
+    /// Simulated horizon: last *workload* event (arrival, grant,
+    /// release, completion — autoscaler ticks and warm-ups excluded)
+    /// minus the first arrival (seconds), so neither delayed-start
+    /// traces nor trailing cold starts dilute utilization.
     pub horizon: f64,
     /// Per-shard server concurrency limit, if the pools were bounded.
     pub server_slots: Option<usize>,
-    /// Per-shard breakdown (one entry per server shard; the single-pool
-    /// fleet reports exactly one).
+    /// Per-shard breakdown (one entry per server shard ever provisioned;
+    /// the single-pool fleet reports exactly one).
     pub shards: Vec<ShardLoad>,
+    /// Shard-count timeline: one sample at the start of the run and one
+    /// per lifecycle transition (a static fleet records exactly one).
+    pub shard_timeline: Vec<ShardCountSample>,
+    /// Autoscaling transitions in event order (empty for static fleets).
+    pub scale_events: Vec<ScaleEvent>,
+    /// Total seconds shards spent cold (loading their model) before
+    /// admitting any work.
+    pub cold_start_seconds: f64,
+    /// Provisioned shard-seconds: each shard's lifetime from creation to
+    /// retirement (or end of run), summed — the capacity cost an
+    /// autoscaler trades against tail latency. For a static fleet this
+    /// is `shards × horizon`.
+    pub shard_seconds: f64,
+    /// Discrete events processed by the fleet loop (arrivals, grants,
+    /// releases, probes, autoscaler ticks) — the `disco bench`
+    /// throughput numerator.
+    pub events_processed: u64,
 }
 
 impl LoadReport {
@@ -156,26 +221,44 @@ impl LoadReport {
     }
 
     /// Fleet-wide server utilization in [0,1] (`None` when any pool is
-    /// unlimited). Degenerate inputs — a zero-length horizon or zero
-    /// total capacity — report `Some(0.0)` rather than NaN/∞: an
-    /// instantaneous or capacity-less run did no utilizable work.
+    /// unlimited): busy slot-seconds over the capacity actually
+    /// provisioned — each shard's own lifetime × its slots, so
+    /// autoscaled fleets are not diluted by shards that existed only
+    /// briefly. For static fleets every lifetime equals the horizon and
+    /// this is the classic `busy / (horizon × total_slots)`. Degenerate
+    /// inputs — zero lifetimes or zero capacity — report `Some(0.0)`
+    /// rather than NaN/∞: a capacity-less run did no utilizable work.
     pub fn server_utilization(&self) -> Option<f64> {
-        let slots = self.total_server_slots()?;
-        Some(if self.horizon > 0.0 && slots > 0 {
-            self.server_busy_seconds / (self.horizon * slots as f64)
+        if self.shards.is_empty() {
+            // Hand-built reports without a breakdown: fall back to the
+            // single-pool reading over the horizon.
+            let slots = self.server_slots?;
+            return Some(if self.horizon > 0.0 && slots > 0 {
+                self.server_busy_seconds / (self.horizon * slots as f64)
+            } else {
+                0.0
+            });
+        }
+        let mut denom = 0.0;
+        for s in &self.shards {
+            denom += s.lifetime_seconds.max(0.0) * s.slots? as f64;
+        }
+        Some(if denom > 0.0 {
+            self.server_busy_seconds / denom
         } else {
             0.0
         })
     }
 
-    /// Per-shard utilizations in [0,1], in shard order. Shards with an
-    /// unlimited pool, zero capacity, or a zero-length horizon report 0.0.
+    /// Per-shard utilizations in [0,1], in shard order, each over the
+    /// shard's own lifetime. Shards with an unlimited pool, zero
+    /// capacity, or a zero-length lifetime report 0.0.
     pub fn shard_utilizations(&self) -> Vec<f64> {
         self.shards
             .iter()
             .map(|s| match s.slots {
-                Some(c) if c > 0 && self.horizon > 0.0 => {
-                    s.busy_seconds / (self.horizon * c as f64)
+                Some(c) if c > 0 && s.lifetime_seconds > 0.0 => {
+                    s.busy_seconds / (s.lifetime_seconds * c as f64)
                 }
                 _ => 0.0,
             })
@@ -206,6 +289,46 @@ impl LoadReport {
         } else {
             0.0
         }
+    }
+
+    /// Time-weighted mean warm-shard count over the horizon. Falls back
+    /// to the provisioned shard count when no timeline was recorded
+    /// (hand-built reports) or the horizon is empty.
+    pub fn mean_warm_shards(&self) -> f64 {
+        if self.horizon <= 0.0 || self.shard_timeline.is_empty() {
+            return self.shards.len() as f64;
+        }
+        let mut acc = 0.0;
+        for (i, s) in self.shard_timeline.iter().enumerate() {
+            // Transitions may be stamped after the workload horizon
+            // (e.g. a warm-up completing after the last token); clamp so
+            // the weights always sum to the horizon.
+            let until = self
+                .shard_timeline
+                .get(i + 1)
+                .map_or(self.horizon, |next| next.time)
+                .min(self.horizon);
+            acc += s.warm as f64 * (until - s.time).max(0.0);
+        }
+        acc / self.horizon
+    }
+
+    /// Largest warm-shard count reached during the run (the provisioned
+    /// count when no timeline was recorded).
+    pub fn peak_warm_shards(&self) -> usize {
+        self.shard_timeline
+            .iter()
+            .map(|s| s.warm)
+            .max()
+            .unwrap_or(self.shards.len())
+    }
+
+    /// Number of scale-out transitions (cold shards provisioned).
+    pub fn scale_out_count(&self) -> usize {
+        self.scale_events
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::ScaleOut)
+            .count()
     }
 }
 
@@ -282,10 +405,15 @@ mod tests {
             busy_seconds: busy,
             admitted,
             slots,
+            lifetime_seconds: 0.0, // stamped to the horizon by `load`
         }
     }
 
-    fn load(horizon: f64, busy: f64, shards: Vec<ShardLoad>) -> LoadReport {
+    fn load(horizon: f64, busy: f64, mut shards: Vec<ShardLoad>) -> LoadReport {
+        // Static-fleet shape: every shard lives for the whole horizon.
+        for s in &mut shards {
+            s.lifetime_seconds = horizon;
+        }
         LoadReport {
             server_queue_delay: Summary::of(&[]),
             device_queue_delay: Summary::of(&[]),
@@ -293,7 +421,12 @@ mod tests {
             device_busy_seconds: 1.0,
             horizon,
             server_slots: shards.first().and_then(|s| s.slots),
+            shard_seconds: horizon * shards.len() as f64,
             shards,
+            shard_timeline: Vec::new(),
+            scale_events: Vec::new(),
+            cold_start_seconds: 0.0,
+            events_processed: 0,
         }
     }
 
@@ -326,6 +459,60 @@ mod tests {
         assert_eq!(lr.server_utilization(), None);
         let mixed = load(10.0, 5.0, vec![shard(2.0, 3, Some(1)), shard(3.0, 4, None)]);
         assert_eq!(mixed.server_utilization(), None);
+    }
+
+    /// The warm-shard mean is time-weighted over the timeline: 10 s at
+    /// 1 warm then 10 s at 3 warm averages to 2.0, and the peak is 3.
+    #[test]
+    fn mean_warm_shards_is_time_weighted() {
+        let mut lr = load(20.0, 0.0, vec![shard(0.0, 0, Some(1))]);
+        lr.shard_timeline = vec![
+            ShardCountSample {
+                time: 0.0,
+                warm: 1,
+                provisioned: 1,
+            },
+            ShardCountSample {
+                time: 10.0,
+                warm: 3,
+                provisioned: 3,
+            },
+        ];
+        assert!((lr.mean_warm_shards() - 2.0).abs() < 1e-12);
+        assert_eq!(lr.peak_warm_shards(), 3);
+        // No timeline ⇒ fall back to the shard count.
+        let bare = load(20.0, 0.0, vec![shard(0.0, 0, Some(1)); 4]);
+        assert_eq!(bare.mean_warm_shards(), 4.0);
+        assert_eq!(bare.peak_warm_shards(), 4);
+    }
+
+    #[test]
+    fn scale_out_count_filters_event_kinds() {
+        let mut lr = load(10.0, 0.0, vec![shard(0.0, 0, Some(1))]);
+        assert_eq!(lr.scale_out_count(), 0);
+        lr.scale_events = vec![
+            ScaleEvent {
+                time: 1.0,
+                shard: 1,
+                kind: ScaleEventKind::ScaleOut,
+            },
+            ScaleEvent {
+                time: 3.0,
+                shard: 1,
+                kind: ScaleEventKind::WarmUp,
+            },
+            ScaleEvent {
+                time: 7.0,
+                shard: 0,
+                kind: ScaleEventKind::DrainStart,
+            },
+            ScaleEvent {
+                time: 8.0,
+                shard: 0,
+                kind: ScaleEventKind::Retire,
+            },
+        ];
+        assert_eq!(lr.scale_out_count(), 1);
     }
 
     #[test]

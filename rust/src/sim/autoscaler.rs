@@ -1,0 +1,859 @@
+//! Shard autoscaling: let the fleet's replica count K react to load.
+//!
+//! The paper's cost model leans on the "flexible capacity" of
+//! server-based inference but never prices what flexing costs: spinning
+//! up a replica pays a model-load delay that
+//! [`crate::endpoint::coldstart::ColdStartProfile`] already quantifies
+//! (Appendix B, Table 4). This module supplies the *policy* side of that
+//! trade-off; the *mechanics* (cold shards, draining, retirement) live in
+//! the [`crate::sim::fleet`] event loop.
+//!
+//! An [`Autoscaler`] is evaluated periodically (every
+//! [`AutoscaleConfig::eval_interval`] simulated seconds) against a
+//! [`FleetView`] snapshot and returns a [`ScaleAction`]:
+//!
+//! * **Scale-out** creates a shard that is *cold*: it admits no work
+//!   until a load-time delay from the configured [`ColdStartSpec`]
+//!   elapses, then warms and joins the balanced set.
+//! * **Scale-in** drains a victim shard: no new admissions, existing
+//!   streams finish, then the shard retires and stops accruing
+//!   shard-seconds.
+//!
+//! Three policies ship:
+//!
+//! * [`AutoscalerKind::None`] — never scales; byte-identical to the
+//!   static PR-2 fleet (no evaluation events are even scheduled).
+//! * [`AutoscalerKind::Reactive`] — queue-depth thresholds with
+//!   hysteresis (sustain counts + cooldown), the classic
+//!   utilization-band autoscaler.
+//! * [`AutoscalerKind::TtftTarget`] — scales out when the *predicted*
+//!   admission queue delay (outstanding service seconds over provisioned
+//!   capacity) would breach a TTFT deadline's queue-delay budget.
+//!
+//! Policies are deterministic: any randomness draws from a dedicated
+//! fleet-level stream, disjoint from balancer and per-request streams.
+
+use crate::endpoint::coldstart::ColdStartProfile;
+use crate::sim::balancer::ShardView;
+use crate::util::rng::Rng;
+
+/// Lifecycle of a server shard under autoscaling.
+///
+/// Static fleets stay `Warm` forever; the autoscaled lifecycle is
+/// `Cold → Warm → Draining → Retired` (cold-start, service, scale-in,
+/// gone).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifecyclePhase {
+    /// Loading the model; admits no work until the load delay elapses.
+    Cold,
+    /// In service: the balancer routes new requests here.
+    Warm,
+    /// Scale-in victim: no new admissions, existing streams finish.
+    Draining,
+    /// Fully drained; no longer accrues shard-seconds.
+    Retired,
+}
+
+/// Autoscaler-visible snapshot of one shard at evaluation time.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardStatus {
+    /// The balancer-level occupancy snapshot.
+    pub view: ShardView,
+    /// Where the shard is in its lifecycle.
+    pub phase: LifecyclePhase,
+}
+
+/// Fleet snapshot handed to [`Autoscaler::evaluate`].
+#[derive(Debug)]
+pub struct FleetView<'a> {
+    /// Simulated time of this evaluation (seconds).
+    pub now: f64,
+    /// One status per shard ever provisioned (including retired ones, so
+    /// indices are stable).
+    pub shards: &'a [ShardStatus],
+    /// Concurrent admissions per shard (`None` = unlimited).
+    pub slots_per_shard: Option<usize>,
+    /// The fleet's configured band. The fleet clamps every action to it
+    /// anyway; policies use it to avoid *emitting* actions that would be
+    /// clamped to no-ops (which would still consume their cooldown).
+    pub min_shards: usize,
+    /// Upper bound of the band (see `min_shards`).
+    pub max_shards: usize,
+}
+
+impl FleetView<'_> {
+    /// Shards currently admitting new work.
+    pub fn warm_count(&self) -> usize {
+        self.count(LifecyclePhase::Warm)
+    }
+
+    /// Shards still loading their model.
+    pub fn cold_count(&self) -> usize {
+        self.count(LifecyclePhase::Cold)
+    }
+
+    /// Capacity already paid for: warm shards plus in-flight warm-ups.
+    /// Scaling decisions should use this, not `warm_count`, so a policy
+    /// does not re-fire while a previous scale-out is still loading.
+    pub fn provisioned_count(&self) -> usize {
+        self.warm_count() + self.cold_count()
+    }
+
+    fn count(&self, phase: LifecyclePhase) -> usize {
+        self.shards.iter().filter(|s| s.phase == phase).count()
+    }
+
+    /// Total outstanding requests (running + queued) on live shards.
+    pub fn outstanding(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .map(|s| s.view.outstanding())
+            .sum()
+    }
+
+    /// Total outstanding *estimated service seconds* on live shards (the
+    /// pre-drawn prefill samples of queued + in-service requests).
+    pub fn outstanding_work(&self) -> f64 {
+        self.shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .map(|s| s.view.work)
+            .sum()
+    }
+}
+
+/// What the autoscaler wants done. The fleet clamps every action to the
+/// configured `[min_shards, max_shards]` band before applying it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Keep the current topology.
+    Hold,
+    /// Provision this many new (cold) shards.
+    ScaleOut {
+        /// Number of shards to add.
+        shards: usize,
+    },
+    /// Drain this many warm shards.
+    ScaleIn {
+        /// Number of shards to drain.
+        shards: usize,
+    },
+}
+
+/// A shard-count policy, evaluated periodically by the fleet loop.
+pub trait Autoscaler {
+    /// Short label used in tables and event logs.
+    fn name(&self) -> &'static str;
+
+    /// Inspect the fleet and decide. `rng` is a dedicated fleet-level
+    /// stream (disjoint from balancer and per-request streams), so
+    /// randomized policies stay deterministic without perturbing request
+    /// trajectories.
+    fn evaluate(&mut self, fleet: &FleetView<'_>, rng: &mut Rng) -> ScaleAction;
+}
+
+// ---------------------------------------------------------------------
+// Cold-start model
+// ---------------------------------------------------------------------
+
+/// Where a new shard's load-time delay comes from.
+#[derive(Clone, Copy, Debug)]
+pub enum ColdStartSpec {
+    /// Fixed delay in seconds (tests, what-if sweeps).
+    Fixed(f64),
+    /// Appendix-B load model: `ColdStartProfile::load_time(params_b)`.
+    Model {
+        /// Host platform characteristics (Table 4 fit).
+        profile: ColdStartProfile,
+        /// Model size in billions of parameters.
+        params_b: f64,
+    },
+}
+
+impl ColdStartSpec {
+    /// The Appendix-B default: an A40 host loading a 7B model (~14.2 s
+    /// under the fitted load model; Table 4 measures 13.43 s).
+    pub fn a40_7b() -> ColdStartSpec {
+        ColdStartSpec::Model {
+            profile: ColdStartProfile::a40(),
+            params_b: 7.0,
+        }
+    }
+
+    /// An RTX 3060 host loading a 3B model (~4.4 s).
+    pub fn rtx3060_3b() -> ColdStartSpec {
+        ColdStartSpec::Model {
+            profile: ColdStartProfile::rtx3060(),
+            params_b: 3.0,
+        }
+    }
+
+    /// Seconds a freshly provisioned shard spends cold.
+    pub fn delay(&self) -> f64 {
+        match self {
+            ColdStartSpec::Fixed(s) => s.max(0.0),
+            ColdStartSpec::Model { profile, params_b } => profile.load_time(*params_b),
+        }
+    }
+
+    /// Short label for tables and CSVs.
+    pub fn label(&self) -> String {
+        match self {
+            ColdStartSpec::Fixed(s) => format!("fixed:{s}"),
+            ColdStartSpec::Model { profile, params_b } => {
+                let p = if profile.platform.starts_with("RTX") {
+                    "rtx3060"
+                } else {
+                    "a40"
+                };
+                format!("{p}:{params_b}B")
+            }
+        }
+    }
+
+    /// Parse a CLI spelling: `fixed:SECS`, `rtx3060:PARAMS_B`, or
+    /// `a40:PARAMS_B` (bare `rtx3060` / `a40` default to 3B / 7B).
+    pub fn parse(s: &str) -> Option<ColdStartSpec> {
+        let lower = s.to_ascii_lowercase();
+        let (head, tail) = match lower.split_once(':') {
+            Some((h, t)) => (h, Some(t)),
+            None => (lower.as_str(), None),
+        };
+        let num = |t: Option<&str>, default: f64| -> Option<f64> {
+            match t {
+                None => Some(default),
+                Some(t) => t.trim_end_matches(['b', 'B']).parse::<f64>().ok(),
+            }
+        };
+        match head {
+            "fixed" => Some(ColdStartSpec::Fixed(num(tail, 0.0)?)),
+            "rtx3060" => Some(ColdStartSpec::Model {
+                profile: ColdStartProfile::rtx3060(),
+                params_b: num(tail, 3.0)?,
+            }),
+            "a40" => Some(ColdStartSpec::Model {
+                profile: ColdStartProfile::a40(),
+                params_b: num(tail, 7.0)?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Policies
+// ---------------------------------------------------------------------
+
+/// Queue-depth autoscaler with hysteresis: scale out when outstanding
+/// requests per provisioned shard stay above a high watermark, scale in
+/// when they stay below a low watermark.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReactiveConfig {
+    /// High watermark: outstanding requests per provisioned shard that
+    /// triggers scale-out.
+    pub scale_out_per_shard: f64,
+    /// Low watermark: outstanding requests per provisioned shard below
+    /// which the fleet scales in.
+    pub scale_in_per_shard: f64,
+    /// Consecutive evaluations a watermark must hold before acting
+    /// (hysteresis against transient blips).
+    pub sustain: u32,
+    /// Minimum seconds between scale actions.
+    pub cooldown: f64,
+    /// Most shards added by a single scale-out action.
+    pub max_step: usize,
+}
+
+impl Default for ReactiveConfig {
+    fn default() -> Self {
+        ReactiveConfig {
+            scale_out_per_shard: 3.0,
+            scale_in_per_shard: 0.5,
+            sustain: 2,
+            cooldown: 10.0,
+            max_step: 2,
+        }
+    }
+}
+
+/// Runtime state of the reactive policy.
+#[derive(Debug)]
+pub struct Reactive {
+    cfg: ReactiveConfig,
+    hi_streak: u32,
+    lo_streak: u32,
+    last_action: f64,
+}
+
+impl Reactive {
+    /// Build with the given thresholds.
+    pub fn new(cfg: ReactiveConfig) -> Reactive {
+        Reactive {
+            cfg,
+            hi_streak: 0,
+            lo_streak: 0,
+            last_action: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Autoscaler for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn evaluate(&mut self, fleet: &FleetView<'_>, _rng: &mut Rng) -> ScaleAction {
+        let provisioned = fleet.provisioned_count().max(1);
+        let outstanding = fleet.outstanding();
+        let per = outstanding as f64 / provisioned as f64;
+        if per > self.cfg.scale_out_per_shard {
+            self.hi_streak += 1;
+            self.lo_streak = 0;
+        } else if per < self.cfg.scale_in_per_shard {
+            self.lo_streak += 1;
+            self.hi_streak = 0;
+        } else {
+            self.hi_streak = 0;
+            self.lo_streak = 0;
+        }
+        if fleet.now - self.last_action < self.cfg.cooldown {
+            return ScaleAction::Hold;
+        }
+        // Actions the fleet would clamp to a no-op (already at the band
+        // edge) are not emitted — they must not consume the cooldown a
+        // genuine action will need.
+        if self.hi_streak >= self.cfg.sustain && provisioned < fleet.max_shards {
+            // Enough shards to bring the per-shard load back under the
+            // high watermark, capped by the step size.
+            let desired = (outstanding as f64 / self.cfg.scale_out_per_shard).ceil() as usize;
+            let n = desired
+                .saturating_sub(provisioned)
+                .clamp(1, self.cfg.max_step.max(1));
+            self.hi_streak = 0;
+            self.last_action = fleet.now;
+            return ScaleAction::ScaleOut { shards: n };
+        }
+        if self.lo_streak >= self.cfg.sustain && fleet.warm_count() > fleet.min_shards {
+            self.lo_streak = 0;
+            self.last_action = fleet.now;
+            return ScaleAction::ScaleIn { shards: 1 };
+        }
+        ScaleAction::Hold
+    }
+}
+
+/// Deadline-driven autoscaler: keeps the *predicted* admission queue
+/// delay — outstanding service seconds spread over provisioned capacity —
+/// under a TTFT deadline's queue-delay budget.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TtftTargetConfig {
+    /// Queue-delay budget (seconds) carved out of the TTFT deadline; the
+    /// remainder of the deadline covers the prefill itself.
+    pub target_delay_s: f64,
+    /// Scale in only when the fleet *minus one warm shard* would still
+    /// keep predicted delay under `target_delay_s × scale_in_margin`.
+    pub scale_in_margin: f64,
+    /// Minimum seconds between scale actions.
+    pub cooldown: f64,
+    /// Most shards added by a single scale-out action.
+    pub max_step: usize,
+}
+
+impl Default for TtftTargetConfig {
+    fn default() -> Self {
+        TtftTargetConfig {
+            target_delay_s: 2.0,
+            scale_in_margin: 0.5,
+            cooldown: 5.0,
+            max_step: 4,
+        }
+    }
+}
+
+/// Runtime state of the TTFT-target policy.
+#[derive(Debug)]
+pub struct TtftTarget {
+    cfg: TtftTargetConfig,
+    last_action: f64,
+}
+
+impl TtftTarget {
+    /// Build with the given deadline budget.
+    pub fn new(cfg: TtftTargetConfig) -> TtftTarget {
+        TtftTarget {
+            cfg,
+            last_action: f64::NEG_INFINITY,
+        }
+    }
+
+    fn predicted_delay(work: f64, shards: usize, slots: Option<usize>) -> f64 {
+        let capacity = shards.max(1) as f64 * slots.unwrap_or(1).max(1) as f64;
+        work / capacity
+    }
+}
+
+impl Autoscaler for TtftTarget {
+    fn name(&self) -> &'static str {
+        "ttft-target"
+    }
+
+    fn evaluate(&mut self, fleet: &FleetView<'_>, _rng: &mut Rng) -> ScaleAction {
+        if fleet.now - self.last_action < self.cfg.cooldown {
+            return ScaleAction::Hold;
+        }
+        let work = fleet.outstanding_work();
+        let provisioned = fleet.provisioned_count().max(1);
+        let slots = fleet.slots_per_shard;
+        let predicted = Self::predicted_delay(work, provisioned, slots);
+        // Band-edge guards mirror Reactive's: never emit an action the
+        // fleet would clamp to a no-op, or the cooldown is wasted.
+        if predicted > self.cfg.target_delay_s && provisioned < fleet.max_shards {
+            // Enough capacity to bring the predicted delay back under the
+            // deadline budget (provisioned counts in-flight warm-ups, so
+            // the policy does not re-fire while a cold shard loads).
+            let per_shard = slots.unwrap_or(1).max(1) as f64;
+            let desired = (work / (self.cfg.target_delay_s * per_shard)).ceil() as usize;
+            let n = desired
+                .saturating_sub(provisioned)
+                .clamp(1, self.cfg.max_step.max(1));
+            self.last_action = fleet.now;
+            return ScaleAction::ScaleOut { shards: n };
+        }
+        let warm = fleet.warm_count();
+        if warm > fleet.min_shards.max(1) {
+            let after = Self::predicted_delay(work, warm - 1, slots);
+            if after < self.cfg.target_delay_s * self.cfg.scale_in_margin {
+                self.last_action = fleet.now;
+                return ScaleAction::ScaleIn { shards: 1 };
+            }
+        }
+        ScaleAction::Hold
+    }
+}
+
+// ---------------------------------------------------------------------
+// Selection + fleet-level configuration
+// ---------------------------------------------------------------------
+
+/// Selector for an [`Autoscaler`] policy; experiment grids and CLI flags
+/// carry this tag (plus its tunables) rather than boxed trait objects.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AutoscalerKind {
+    /// Never scale: the static fleet, byte-identical to PR-2 replays.
+    None,
+    /// Queue-depth thresholds with hysteresis.
+    Reactive(ReactiveConfig),
+    /// Predicted-queue-delay deadline policy.
+    TtftTarget(TtftTargetConfig),
+}
+
+impl AutoscalerKind {
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AutoscalerKind::None => "none",
+            AutoscalerKind::Reactive(_) => "reactive",
+            AutoscalerKind::TtftTarget(_) => "ttft-target",
+        }
+    }
+
+    /// Parse a CLI spelling (`none`, `reactive`, `ttft`/`ttft-target`),
+    /// with default tunables.
+    pub fn parse(s: &str) -> Option<AutoscalerKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" | "fixed" | "static" => AutoscalerKind::None,
+            "reactive" | "queue" => AutoscalerKind::Reactive(ReactiveConfig::default()),
+            "ttft" | "ttft-target" | "deadline" => {
+                AutoscalerKind::TtftTarget(TtftTargetConfig::default())
+            }
+            _ => return None,
+        })
+    }
+
+    /// Instantiate the policy (fresh state); `None` for the static kind,
+    /// which schedules no evaluation events at all.
+    pub fn build(&self) -> Option<Box<dyn Autoscaler>> {
+        match self {
+            AutoscalerKind::None => None,
+            AutoscalerKind::Reactive(cfg) => Some(Box::new(Reactive::new(*cfg))),
+            AutoscalerKind::TtftTarget(cfg) => Some(Box::new(TtftTarget::new(*cfg))),
+        }
+    }
+}
+
+impl std::fmt::Display for AutoscalerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Fleet-level autoscaling configuration, attached to
+/// `FleetConfig::autoscale`.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// The scaling policy.
+    pub kind: AutoscalerKind,
+    /// Seconds between autoscaler evaluations.
+    pub eval_interval: f64,
+    /// Never drain below this many warm shards (≥ 1 after normalization;
+    /// this also guarantees the balancer always has an admitting shard).
+    pub min_shards: usize,
+    /// Never provision (warm + cold) beyond this many shards. Caps
+    /// scale-out only; a fleet that *starts* above it is allowed.
+    pub max_shards: usize,
+    /// Load-time delay model for freshly provisioned shards.
+    pub cold_start: ColdStartSpec,
+}
+
+impl AutoscaleConfig {
+    /// The static policy: explicit "autoscaler disabled" configuration,
+    /// byte-identical to omitting autoscaling entirely.
+    pub fn fixed() -> AutoscaleConfig {
+        AutoscaleConfig {
+            kind: AutoscalerKind::None,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    /// Reactive defaults within the given shard band.
+    pub fn reactive(min_shards: usize, max_shards: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            kind: AutoscalerKind::Reactive(ReactiveConfig::default()),
+            min_shards,
+            max_shards,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    /// TTFT-target defaults within the given shard band.
+    pub fn ttft_target(min_shards: usize, max_shards: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            kind: AutoscalerKind::TtftTarget(TtftTargetConfig::default()),
+            min_shards,
+            max_shards,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    /// Clamp degenerate values (non-positive interval, zero minimum,
+    /// inverted band) so the event loop never divides by zero or drains
+    /// its last warm shard.
+    pub fn normalized(&self) -> AutoscaleConfig {
+        let min_shards = self.min_shards.max(1);
+        AutoscaleConfig {
+            kind: self.kind,
+            eval_interval: if self.eval_interval > 0.0 {
+                self.eval_interval
+            } else {
+                1.0
+            },
+            min_shards,
+            max_shards: self.max_shards.max(min_shards),
+            cold_start: self.cold_start,
+        }
+    }
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            kind: AutoscalerKind::None,
+            eval_interval: 1.0,
+            min_shards: 1,
+            max_shards: 8,
+            cold_start: ColdStartSpec::a40_7b(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn status(in_use: usize, queued: usize, work: f64, phase: LifecyclePhase) -> ShardStatus {
+        ShardStatus {
+            view: ShardView {
+                in_use,
+                queued,
+                slots: Some(1),
+                work,
+                admitting: phase == LifecyclePhase::Warm,
+            },
+            phase,
+        }
+    }
+
+    fn view(now: f64, shards: &[ShardStatus]) -> FleetView<'_> {
+        FleetView {
+            now,
+            shards,
+            slots_per_shard: Some(1),
+            min_shards: 1,
+            max_shards: 8,
+        }
+    }
+
+    #[test]
+    fn fleet_view_counts_exclude_retired() {
+        let shards = vec![
+            status(1, 2, 3.0, LifecyclePhase::Warm),
+            status(0, 4, 5.0, LifecyclePhase::Cold),
+            status(1, 0, 1.0, LifecyclePhase::Draining),
+            status(0, 0, 0.0, LifecyclePhase::Retired),
+        ];
+        let v = view(0.0, &shards);
+        assert_eq!(v.warm_count(), 1);
+        assert_eq!(v.cold_count(), 1);
+        assert_eq!(v.provisioned_count(), 2);
+        assert_eq!(v.outstanding(), 8);
+        assert!((v.outstanding_work() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reactive_scales_out_after_sustained_overload_only() {
+        let mut rng = Rng::new(1);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.25,
+            sustain: 2,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        let hot = vec![status(1, 9, 12.0, LifecyclePhase::Warm)];
+        // First overloaded evaluation: streak building, no action yet.
+        assert_eq!(p.evaluate(&view(0.0, &hot), &mut rng), ScaleAction::Hold);
+        // Second: sustained — scale out toward outstanding/watermark.
+        match p.evaluate(&view(1.0, &hot), &mut rng) {
+            ScaleAction::ScaleOut { shards } => assert_eq!(shards, 4), // ceil(10/2)-1
+            other => panic!("expected scale-out, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reactive_blip_resets_streak() {
+        let mut rng = Rng::new(2);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.25,
+            sustain: 2,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        let hot = vec![status(1, 9, 12.0, LifecyclePhase::Warm)];
+        let calm = vec![status(1, 0, 0.5, LifecyclePhase::Warm)];
+        assert_eq!(p.evaluate(&view(0.0, &hot), &mut rng), ScaleAction::Hold);
+        // Load dips back into the dead band: the overload streak resets.
+        assert_eq!(p.evaluate(&view(1.0, &calm), &mut rng), ScaleAction::Hold);
+        assert_eq!(p.evaluate(&view(2.0, &hot), &mut rng), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn reactive_cooldown_blocks_back_to_back_actions() {
+        let mut rng = Rng::new(3);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.25,
+            sustain: 1,
+            cooldown: 10.0,
+            max_step: 1,
+        });
+        let hot = vec![status(1, 9, 12.0, LifecyclePhase::Warm)];
+        assert!(matches!(
+            p.evaluate(&view(0.0, &hot), &mut rng),
+            ScaleAction::ScaleOut { .. }
+        ));
+        // Still overloaded, but inside the cooldown window.
+        assert_eq!(p.evaluate(&view(5.0, &hot), &mut rng), ScaleAction::Hold);
+        assert!(matches!(
+            p.evaluate(&view(10.5, &hot), &mut rng),
+            ScaleAction::ScaleOut { .. }
+        ));
+    }
+
+    #[test]
+    fn reactive_scales_in_when_idle() {
+        let mut rng = Rng::new(4);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 3.0,
+            scale_in_per_shard: 0.5,
+            sustain: 2,
+            cooldown: 0.0,
+            max_step: 2,
+        });
+        let idle = vec![
+            status(0, 0, 0.0, LifecyclePhase::Warm),
+            status(0, 0, 0.0, LifecyclePhase::Warm),
+            status(0, 0, 0.0, LifecyclePhase::Warm),
+        ];
+        assert_eq!(p.evaluate(&view(0.0, &idle), &mut rng), ScaleAction::Hold);
+        assert_eq!(
+            p.evaluate(&view(1.0, &idle), &mut rng),
+            ScaleAction::ScaleIn { shards: 1 }
+        );
+    }
+
+    #[test]
+    fn reactive_counts_cold_shards_as_provisioned() {
+        let mut rng = Rng::new(5);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.25,
+            sustain: 1,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        // 1 warm + 4 cold shards against 10 outstanding: per-shard load is
+        // 2.0, NOT 10.0 — the in-flight warm-ups must suppress re-firing.
+        let ramping = vec![
+            status(1, 9, 12.0, LifecyclePhase::Warm),
+            status(0, 0, 0.0, LifecyclePhase::Cold),
+            status(0, 0, 0.0, LifecyclePhase::Cold),
+            status(0, 0, 0.0, LifecyclePhase::Cold),
+            status(0, 0, 0.0, LifecyclePhase::Cold),
+        ];
+        assert_eq!(p.evaluate(&view(0.0, &ramping), &mut rng), ScaleAction::Hold);
+    }
+
+    /// At the band edge, a would-be action is suppressed entirely — it
+    /// must NOT consume the cooldown a genuine action will need later.
+    #[test]
+    fn band_edge_actions_do_not_burn_cooldown() {
+        let mut rng = Rng::new(8);
+        let mut p = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.5,
+            sustain: 1,
+            cooldown: 10.0,
+            max_step: 4,
+        });
+        let idle = vec![status(0, 0, 0.0, LifecyclePhase::Warm)];
+        let hot = vec![status(1, 9, 12.0, LifecyclePhase::Warm)];
+        fn at_min(shards: &[ShardStatus]) -> FleetView<'_> {
+            FleetView {
+                now: 0.0,
+                shards,
+                slots_per_shard: Some(1),
+                min_shards: 1,
+                max_shards: 8,
+            }
+        }
+        // Idle at warm == min: ScaleIn would be clamped, so Hold.
+        let mut v = at_min(&idle);
+        assert_eq!(p.evaluate(&v, &mut rng), ScaleAction::Hold);
+        // A burst right after must scale out immediately — the swallowed
+        // scale-in did not start the 10 s cooldown.
+        v = at_min(&hot);
+        v.now = 1.0;
+        assert!(matches!(
+            p.evaluate(&v, &mut rng),
+            ScaleAction::ScaleOut { .. }
+        ));
+        // Symmetric guard: overloaded at provisioned == max emits Hold.
+        let mut q = Reactive::new(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.5,
+            sustain: 1,
+            cooldown: 10.0,
+            max_step: 4,
+        });
+        let mut w = at_min(&hot);
+        w.max_shards = 1;
+        assert_eq!(q.evaluate(&w, &mut rng), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn ttft_target_scales_out_on_predicted_breach() {
+        let mut rng = Rng::new(6);
+        let mut p = TtftTarget::new(TtftTargetConfig {
+            target_delay_s: 2.0,
+            scale_in_margin: 0.5,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        // 12 s of outstanding work on one single-slot shard: predicted
+        // delay 12 s ≫ 2 s target ⇒ need ceil(12/2)=6 shards, +5.
+        let hot = vec![status(1, 8, 12.0, LifecyclePhase::Warm)];
+        assert_eq!(
+            p.evaluate(&view(0.0, &hot), &mut rng),
+            ScaleAction::ScaleOut { shards: 5 }
+        );
+    }
+
+    #[test]
+    fn ttft_target_scales_in_only_with_margin() {
+        let mut rng = Rng::new(7);
+        let mut p = TtftTarget::new(TtftTargetConfig {
+            target_delay_s: 2.0,
+            scale_in_margin: 0.5,
+            cooldown: 0.0,
+            max_step: 4,
+        });
+        // Two warm shards, 1.8 s of work: predicted 0.9 s (under target),
+        // but at one shard it would be 1.8 s > 1.0 s margin ⇒ hold.
+        let busyish = vec![
+            status(1, 0, 0.9, LifecyclePhase::Warm),
+            status(1, 0, 0.9, LifecyclePhase::Warm),
+        ];
+        assert_eq!(p.evaluate(&view(0.0, &busyish), &mut rng), ScaleAction::Hold);
+        // Nearly idle: safe to drain one.
+        let idle = vec![
+            status(0, 0, 0.4, LifecyclePhase::Warm),
+            status(0, 0, 0.0, LifecyclePhase::Warm),
+        ];
+        assert_eq!(
+            p.evaluate(&view(1.0, &idle), &mut rng),
+            ScaleAction::ScaleIn { shards: 1 }
+        );
+    }
+
+    #[test]
+    fn cold_start_spec_delay_and_parse_roundtrip() {
+        assert_eq!(ColdStartSpec::Fixed(2.5).delay(), 2.5);
+        assert_eq!(ColdStartSpec::Fixed(-1.0).delay(), 0.0);
+        let a40 = ColdStartSpec::a40_7b();
+        assert!((a40.delay() - ColdStartProfile::a40().load_time(7.0)).abs() < 1e-12);
+        for s in ["fixed:2.5", "rtx3060:3", "a40:7", "rtx3060", "a40", "fixed:0"] {
+            let spec = ColdStartSpec::parse(s).unwrap_or_else(|| panic!("parse {s}"));
+            assert!(spec.delay() >= 0.0);
+        }
+        assert!(ColdStartSpec::parse("nope").is_none());
+        assert!(ColdStartSpec::parse("fixed:abc").is_none());
+        assert_eq!(ColdStartSpec::parse("a40:7B").unwrap().delay(), a40.delay());
+    }
+
+    #[test]
+    fn kind_parse_build_labels() {
+        for (s, label) in [
+            ("none", "none"),
+            ("reactive", "reactive"),
+            ("ttft", "ttft-target"),
+            ("ttft-target", "ttft-target"),
+        ] {
+            let kind = AutoscalerKind::parse(s).unwrap();
+            assert_eq!(kind.label(), label);
+            assert_eq!(kind.to_string(), label);
+            match kind.build() {
+                Some(p) => assert_eq!(p.name(), label),
+                None => assert_eq!(kind, AutoscalerKind::None),
+            }
+        }
+        assert!(AutoscalerKind::parse("bogus").is_none());
+        assert!(AutoscalerKind::None.build().is_none());
+    }
+
+    #[test]
+    fn config_normalization_clamps_degenerate_values() {
+        let cfg = AutoscaleConfig {
+            kind: AutoscalerKind::Reactive(ReactiveConfig::default()),
+            eval_interval: 0.0,
+            min_shards: 0,
+            max_shards: 0,
+            cold_start: ColdStartSpec::Fixed(1.0),
+        }
+        .normalized();
+        assert!(cfg.eval_interval > 0.0);
+        assert_eq!(cfg.min_shards, 1);
+        assert_eq!(cfg.max_shards, 1);
+    }
+}

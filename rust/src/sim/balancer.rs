@@ -4,10 +4,14 @@
 //! K *shards* — replicas with their own admission slots and FIFO queue.
 //! A [`Balancer`] decides, at arrival time, which shard a server-bound
 //! request joins. The balancer sees only a [`ShardView`] snapshot per
-//! shard (live queue length, slots in use, outstanding work estimate);
-//! it never inspects requests, so policies stay O(K) and the per-request
-//! RNG streams are untouched (randomized balancers draw from a dedicated
-//! fleet-level stream).
+//! shard (live queue length, slots in use, outstanding work estimate,
+//! and whether the shard is admitting new work); it never inspects
+//! requests, so policies stay O(K) and the per-request RNG streams are
+//! untouched (randomized balancers draw from a dedicated fleet-level
+//! stream). Under autoscaling, cold (still loading) and draining
+//! (scale-in victim) shards are flagged non-admitting: every balancer
+//! skips them while at least one admitting shard exists, and degrades to
+//! ranking the full set — never panicking — when none does.
 //!
 //! Implementations:
 //!
@@ -38,6 +42,10 @@ pub struct ShardView {
     /// pre-drawn prefill samples of requests queued or currently in
     /// service (retired when the slot frees).
     pub work: f64,
+    /// Whether the shard accepts new work. Cold (still loading),
+    /// draining (scale-in victim), and retired shards are not admitting;
+    /// every balancer must skip them while any admitting shard exists.
+    pub admitting: bool,
 }
 
 impl ShardView {
@@ -48,7 +56,11 @@ impl ShardView {
 }
 
 /// A shard-selection policy. `pick` must return an index in
-/// `0..shards.len()` (`shards` is never empty).
+/// `0..shards.len()` (`shards` is never empty), and must return an
+/// *admitting* shard whenever at least one exists. When no shard admits
+/// (every replica cold or draining — the autoscaled fleet prevents this
+/// by construction, but defensive callers may not), implementations fall
+/// back to ranking every shard instead of panicking.
 pub trait Balancer {
     fn name(&self) -> &'static str;
 
@@ -57,6 +69,35 @@ pub trait Balancer {
     /// disjoint from every per-request stream), so randomized policies
     /// stay deterministic without perturbing request trajectories.
     fn pick(&mut self, shards: &[ShardView], rng: &mut Rng) -> usize;
+}
+
+/// Index minimizing `better` over admitting shards (ties keep the lowest
+/// index); over *all* shards when none admits (degraded fallback — never
+/// panics on a non-empty slice).
+fn argmin_admitting(
+    shards: &[ShardView],
+    better: impl Fn(&ShardView, &ShardView) -> bool,
+) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, s) in shards.iter().enumerate() {
+        if !s.admitting {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if better(s, &shards[b]) => best = Some(i),
+            _ => {}
+        }
+    }
+    best.unwrap_or_else(|| {
+        let mut b = 0;
+        for (i, s) in shards.iter().enumerate().skip(1) {
+            if better(s, &shards[b]) {
+                b = i;
+            }
+        }
+        b
+    })
 }
 
 /// Selector for a [`Balancer`] implementation; the experiment grids and
@@ -119,7 +160,9 @@ impl std::fmt::Display for BalancerKind {
     }
 }
 
-/// Cycle through shards in index order, ignoring load.
+/// Cycle through shards in index order, ignoring load. Non-admitting
+/// shards are skipped (the cursor advances past them); with every shard
+/// admitting the classic cycle is unchanged.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
     next: usize,
@@ -131,14 +174,25 @@ impl Balancer for RoundRobin {
     }
 
     fn pick(&mut self, shards: &[ShardView], _rng: &mut Rng) -> usize {
-        let s = self.next % shards.len();
-        self.next = (s + 1) % shards.len();
+        let k = shards.len();
+        let start = self.next % k;
+        // First admitting shard at or after the cursor; a full fruitless
+        // cycle (no admitting shard anywhere) degrades to the cursor.
+        let mut s = start;
+        for off in 0..k {
+            let c = (start + off) % k;
+            if shards[c].admitting {
+                s = c;
+                break;
+            }
+        }
+        self.next = (s + 1) % k;
         s
     }
 }
 
-/// Join the shard with the fewest outstanding requests (running +
-/// queued); ties break to the lowest index.
+/// Join the admitting shard with the fewest outstanding requests
+/// (running + queued); ties break to the lowest index.
 #[derive(Debug, Default)]
 pub struct JoinShortestQueue;
 
@@ -148,21 +202,33 @@ impl Balancer for JoinShortestQueue {
     }
 
     fn pick(&mut self, shards: &[ShardView], _rng: &mut Rng) -> usize {
-        let mut best = 0;
-        for (i, s) in shards.iter().enumerate().skip(1) {
-            if s.outstanding() < shards[best].outstanding() {
-                best = i;
-            }
-        }
-        best
+        argmin_admitting(shards, |a, b| a.outstanding() < b.outstanding())
     }
 }
 
-/// Sample two distinct shards uniformly; join the less loaded (ties to
-/// the lower index). With one shard it degenerates to that shard without
-/// consuming randomness.
+/// Sample two distinct *admitting* shards uniformly; join the less
+/// loaded (ties to the lower index). With one candidate it degenerates
+/// to that shard without consuming randomness, preserving K=1 replay
+/// parity.
 #[derive(Debug, Default)]
 pub struct PowerOfTwoChoices;
+
+impl PowerOfTwoChoices {
+    /// Index of the `n`-th candidate (admitting shard, or any shard in
+    /// the all-cold fallback).
+    fn nth_candidate(shards: &[ShardView], n: usize, all: bool) -> usize {
+        let mut seen = 0;
+        for (i, s) in shards.iter().enumerate() {
+            if all || s.admitting {
+                if seen == n {
+                    return i;
+                }
+                seen += 1;
+            }
+        }
+        unreachable!("candidate index {n} out of range");
+    }
+}
 
 impl Balancer for PowerOfTwoChoices {
     fn name(&self) -> &'static str {
@@ -170,15 +236,27 @@ impl Balancer for PowerOfTwoChoices {
     }
 
     fn pick(&mut self, shards: &[ShardView], rng: &mut Rng) -> usize {
-        let k = shards.len();
-        if k == 1 {
+        if shards.len() == 1 {
             return 0;
         }
-        let a = rng.below(k as u64) as usize;
-        let mut b = rng.below(k as u64 - 1) as usize;
-        if b >= a {
-            b += 1; // second draw over the remaining k-1 shards
+        let mut m = shards.iter().filter(|s| s.admitting).count();
+        // Degraded fallback: nothing admits, sample over every shard.
+        let all = m == 0;
+        if all {
+            m = shards.len();
         }
+        if m == 1 {
+            return Self::nth_candidate(shards, 0, all);
+        }
+        let a = rng.below(m as u64) as usize;
+        let mut b = rng.below(m as u64 - 1) as usize;
+        if b >= a {
+            b += 1; // second draw over the remaining m-1 candidates
+        }
+        let (a, b) = (
+            Self::nth_candidate(shards, a, all),
+            Self::nth_candidate(shards, b, all),
+        );
         let (la, lb) = (shards[a].outstanding(), shards[b].outstanding());
         if lb < la || (lb == la && b < a) {
             b
@@ -188,8 +266,8 @@ impl Balancer for PowerOfTwoChoices {
     }
 }
 
-/// Join the shard with the least outstanding estimated service seconds
-/// (size-aware JSQ); ties break to the lowest index.
+/// Join the admitting shard with the least outstanding estimated service
+/// seconds (size-aware JSQ); ties break to the lowest index.
 #[derive(Debug, Default)]
 pub struct LeastWork;
 
@@ -199,13 +277,7 @@ impl Balancer for LeastWork {
     }
 
     fn pick(&mut self, shards: &[ShardView], _rng: &mut Rng) -> usize {
-        let mut best = 0;
-        for (i, s) in shards.iter().enumerate().skip(1) {
-            if s.work.total_cmp(&shards[best].work) == std::cmp::Ordering::Less {
-                best = i;
-            }
-        }
-        best
+        argmin_admitting(shards, |a, b| a.work.total_cmp(&b.work) == std::cmp::Ordering::Less)
     }
 }
 
@@ -219,6 +291,14 @@ mod tests {
             queued,
             slots: Some(2),
             work,
+            admitting: true,
+        }
+    }
+
+    fn cold(in_use: usize, queued: usize, work: f64) -> ShardView {
+        ShardView {
+            admitting: false,
+            ..view(in_use, queued, work)
         }
     }
 
@@ -302,6 +382,67 @@ mod tests {
         let mut rng = Rng::new(2);
         let shards = vec![view(0, 9, 1.5), view(5, 0, 0.25), view(1, 1, 3.0)];
         assert_eq!(LeastWork.pick(&shards, &mut rng), 1);
+    }
+
+    /// Every balancer must skip cold/draining shards while an admitting
+    /// one exists — even when the non-admitting shard looks (or is)
+    /// emptier.
+    #[test]
+    fn balancers_skip_non_admitting_shards() {
+        let shards = vec![
+            cold(0, 0, 0.0), // emptiest, but not admitting
+            view(2, 5, 6.0),
+            view(1, 1, 2.0),
+            cold(0, 0, 0.0),
+        ];
+        let mut rng = Rng::new(31);
+        assert_eq!(JoinShortestQueue.pick(&shards, &mut rng), 2);
+        assert_eq!(LeastWork.pick(&shards, &mut rng), 2);
+        let mut rr = RoundRobin::default();
+        // The cursor starts at 0 (cold) and must land on admitting
+        // shards only, cycling 1, 2, 1, 2, …
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(&shards, &mut rng)).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+        for _ in 0..200 {
+            let p = PowerOfTwoChoices.pick(&shards, &mut rng);
+            assert!(shards[p].admitting, "p2c picked non-admitting shard {p}");
+        }
+    }
+
+    /// Degraded fallback: when *no* shard admits (every replica cold or
+    /// draining), balancers must not panic and must return a valid index.
+    #[test]
+    fn balancers_survive_all_cold_fleet() {
+        let shards = vec![cold(1, 4, 5.0), cold(0, 2, 1.0), cold(3, 0, 9.0)];
+        let mut rng = Rng::new(32);
+        // JSQ/least-work fall back to ranking everything.
+        assert_eq!(JoinShortestQueue.pick(&shards, &mut rng), 1);
+        assert_eq!(LeastWork.pick(&shards, &mut rng), 1);
+        let mut rr = RoundRobin::default();
+        for want in [0, 1, 2, 0] {
+            assert_eq!(rr.pick(&shards, &mut rng), want);
+        }
+        for _ in 0..100 {
+            let p = PowerOfTwoChoices.pick(&shards, &mut rng);
+            assert!(p < shards.len());
+        }
+        // Single all-cold shard: still index 0, no panic.
+        let one = vec![cold(0, 7, 3.0)];
+        assert_eq!(JoinShortestQueue.pick(&one, &mut rng), 0);
+        assert_eq!(PowerOfTwoChoices.pick(&one, &mut rng), 0);
+        assert_eq!(RoundRobin::default().pick(&one, &mut rng), 0);
+        assert_eq!(LeastWork.pick(&one, &mut rng), 0);
+    }
+
+    /// With exactly one admitting shard among many, P2C returns it
+    /// without consuming randomness (the single-candidate degeneration).
+    #[test]
+    fn p2c_single_admitting_candidate_consumes_no_randomness() {
+        let shards = vec![cold(0, 0, 0.0), view(3, 3, 4.0), cold(1, 1, 1.0)];
+        let mut a = Rng::new(33);
+        let mut b = Rng::new(33);
+        assert_eq!(PowerOfTwoChoices.pick(&shards, &mut a), 1);
+        assert_eq!(a.next_u64(), b.next_u64(), "rng must be untouched");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! unified cost metering, and single-flight device occupancy.
 //!
 //! Since the fleet refactor there is **one** request code path: the
-//! per-request trajectory lives in [`resolve_request`], parameterized by
+//! per-request trajectory lives in `resolve_request`, parameterized by
 //! the absolute times at which the contended resources (a server shard's
 //! admission slot, the single-flight device) were granted.
 //! [`Scenario::run`] is the degenerate case of the discrete-event loop in

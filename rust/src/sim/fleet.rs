@@ -31,9 +31,25 @@
 //! occupancy snapshots and draw randomness from a dedicated fleet-level
 //! stream, so shard choice never perturbs per-request latency draws.
 //!
+//! # Autoscaling
+//!
+//! K can react to load during a run: an optional
+//! [`AutoscaleConfig`] attaches an [`crate::sim::autoscaler::Autoscaler`]
+//! that is evaluated on periodic `AutoscaleEval` events. Scale-out
+//! provisions a **cold** shard — its admission pool is frozen until a
+//! load-time delay from the configured
+//! [`crate::sim::autoscaler::ColdStartSpec`] elapses (a `ShardWarm`
+//! event) — and scale-in **drains** a warm victim: the balancer stops
+//! routing to it, existing admissions and queued entries finish, then
+//! the shard retires. The shard-count timeline, scale events,
+//! cold-start seconds, and provisioned shard-seconds surface in
+//! [`LoadReport`]. With [`crate::sim::autoscaler::AutoscalerKind::None`]
+//! (or no config at all) no evaluation events are scheduled and the run
+//! is byte-identical to the static PR-2 fleet.
+//!
 //! The per-request trajectory itself (race, cancellation, migration,
 //! delivery smoothing, cost metering) is [`crate::sim::engine`]'s
-//! [`resolve_request`] — one code path shared with the legacy replay,
+//! `resolve_request` — one code path shared with the legacy replay,
 //! which is the degenerate configuration [`FleetConfig::replay`] (one
 //! shard, unlimited slots). With that configuration the fleet loop is
 //! byte-identical to the historical per-request engine: per-request RNG
@@ -46,7 +62,12 @@
 use crate::coordinator::migration::MigrationPlanner;
 use crate::coordinator::policy::Policy;
 use crate::endpoint::ServerEndpoint;
-use crate::metrics::{LoadReport, RequestRecord, ShardLoad};
+use crate::metrics::{
+    LoadReport, RequestRecord, ScaleEvent, ScaleEventKind, ShardCountSample, ShardLoad,
+};
+use crate::sim::autoscaler::{
+    AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
+};
 use crate::sim::balancer::{Balancer, BalancerKind, ShardView};
 use crate::sim::engine::{pre_draw, resolve_request, PreDrawn, ResourceTimes, Scenario};
 use crate::stats::describe::Summary;
@@ -75,6 +96,11 @@ pub struct FleetConfig {
     /// and added to that shard's TTFT (heterogeneous replica placement).
     /// Shorter than `shards` is padded with 0.0; empty = homogeneous.
     pub shard_rtts: Vec<f64>,
+    /// Optional shard autoscaling. `None` — or a config whose kind is
+    /// `AutoscalerKind::None` — keeps the static topology and is
+    /// byte-identical to the PR-2 fleet (no evaluation events are
+    /// scheduled at all).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl FleetConfig {
@@ -87,6 +113,7 @@ impl FleetConfig {
             shards: 1,
             balancer: BalancerKind::RoundRobin,
             shard_rtts: Vec::new(),
+            autoscale: None,
         }
     }
 
@@ -107,12 +134,20 @@ impl FleetConfig {
             shards: shards.max(1),
             balancer,
             shard_rtts: Vec::new(),
+            autoscale: None,
         }
     }
 
     /// Same topology with heterogeneous per-shard RTT offsets.
     pub fn with_shard_rtts(mut self, rtts: Vec<f64>) -> FleetConfig {
         self.shard_rtts = rtts;
+        self
+    }
+
+    /// Attach a shard-autoscaling policy; `shards` becomes the initial
+    /// (warm) replica count.
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> FleetConfig {
+        self.autoscale = Some(autoscale);
         self
     }
 }
@@ -144,6 +179,12 @@ enum EvKind {
     /// The device produced its first token while the request was still
     /// queued for server admission: cancel the server entry and resolve.
     DeviceFirstProbe(usize),
+    /// Periodic autoscaler evaluation tick (only scheduled when a
+    /// scaling policy is attached).
+    AutoscaleEval,
+    /// Cold shard `.0` finished loading its model: unfreeze its pool and
+    /// admit anything already queued on it.
+    ShardWarm(usize),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -193,6 +234,10 @@ struct Pool {
     queue: VecDeque<usize>,
     /// Non-cancelled entries currently in `queue`.
     live: usize,
+    /// A frozen (cold-shard) pool queues every acquire unconditionally;
+    /// nothing admits until the shard's warm-up event unfreezes it.
+    /// Static fleets never freeze, so the PR-2 semantics are untouched.
+    frozen: bool,
 }
 
 impl Pool {
@@ -202,13 +247,27 @@ impl Pool {
             in_use: 0,
             queue: VecDeque::new(),
             live: 0,
+            frozen: false,
         }
     }
 
-    /// Try to acquire; queues and returns false when full. Unlimited
-    /// pools admit immediately but still count `in_use`, so balancers
-    /// see real in-service load even without a slot cap.
+    /// A cold shard's pool: queues everything until unfrozen.
+    fn new_frozen(cap: Option<usize>) -> Pool {
+        Pool {
+            frozen: true,
+            ..Pool::new(cap)
+        }
+    }
+
+    /// Try to acquire; queues and returns false when full (or frozen).
+    /// Unlimited pools admit immediately but still count `in_use`, so
+    /// balancers see real in-service load even without a slot cap.
     fn acquire(&mut self, i: usize) -> bool {
+        if self.frozen {
+            self.queue.push_back(i);
+            self.live += 1;
+            return false;
+        }
         match self.cap {
             None => {
                 self.in_use += 1;
@@ -224,6 +283,29 @@ impl Pool {
                 false
             }
         }
+    }
+
+    /// Admit the next live queued entry if the pool has spare capacity
+    /// and is not frozen (the unit is newly consumed, unlike
+    /// [`Pool::release`] where it transfers). Used when a cold shard
+    /// warms with entries already waiting.
+    fn try_admit(&mut self, cancelled: &[bool]) -> Option<usize> {
+        if self.frozen {
+            return None;
+        }
+        if let Some(cap) = self.cap {
+            if self.in_use >= cap {
+                return None;
+            }
+        }
+        while let Some(j) = self.queue.pop_front() {
+            if !cancelled[j] {
+                self.live = self.live.saturating_sub(1);
+                self.in_use += 1;
+                return Some(j);
+            }
+        }
+        None
     }
 
     /// Release one unit; returns the next non-cancelled queued request to
@@ -267,7 +349,8 @@ struct ReqState {
     resolved: bool,
 }
 
-/// One server shard: a bounded slot pool plus its load accounting.
+/// One server shard: a bounded slot pool plus its load accounting and
+/// autoscaling lifecycle (static fleets stay `Warm` forever).
 struct ShardState {
     pool: Pool,
     /// Extra RTT (seconds) this shard adds to every first token it serves
@@ -281,6 +364,34 @@ struct ShardState {
     busy: f64,
     delays: Vec<f64>,
     admitted: usize,
+    /// Cold → Warm → Draining → Retired under autoscaling.
+    phase: LifecyclePhase,
+    /// Absolute creation time (the first arrival for initial shards), the
+    /// start of this shard's shard-seconds accrual.
+    created_at: f64,
+    /// When a cold shard finishes loading (drives the all-cold routing
+    /// fallback); 0.0 for shards created warm.
+    ready_at: f64,
+    /// Absolute retirement time; `None` while the shard still accrues
+    /// shard-seconds.
+    retired_at: Option<f64>,
+}
+
+impl ShardState {
+    fn new(pool: Pool, rtt: f64, phase: LifecyclePhase, created_at: f64, ready_at: f64) -> Self {
+        ShardState {
+            pool,
+            rtt,
+            work: 0.0,
+            busy: 0.0,
+            delays: Vec::new(),
+            admitted: 0,
+            phase,
+            created_at,
+            ready_at,
+            retired_at: None,
+        }
+    }
 }
 
 struct FleetSim<'a> {
@@ -316,6 +427,24 @@ struct FleetSim<'a> {
     device_delays: Vec<f64>,
     device_busy: f64,
     horizon: f64,
+    /// Normalized autoscaling configuration (None = static fleet).
+    autoscale: Option<AutoscaleConfig>,
+    /// The scaling policy; None for static fleets AND for
+    /// `AutoscalerKind::None`, in which case no evaluation events are
+    /// scheduled and the run is byte-identical to the static fleet.
+    scaler: Option<Box<dyn Autoscaler>>,
+    /// Autoscaler decision stream, disjoint from the balancer stream and
+    /// every per-request stream.
+    arng: Rng,
+    /// Requests resolved so far; evaluation events stop rescheduling once
+    /// every request resolved, so the event loop terminates.
+    resolved_count: usize,
+    scale_events: Vec<ScaleEvent>,
+    timeline: Vec<ShardCountSample>,
+    cold_start_seconds: f64,
+    /// First arrival (absolute); shard-seconds and report timestamps are
+    /// measured from here.
+    t0: f64,
 }
 
 impl<'a> FleetSim<'a> {
@@ -345,9 +474,31 @@ impl<'a> FleetSim<'a> {
         for (i, req) in trace.requests.iter().enumerate() {
             self.push(req.arrival, EvKind::Arrival(i));
         }
+        // Shard lifetimes (and the report's horizon) are measured from
+        // the first arrival.
+        self.t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+        for sh in &mut self.shards {
+            sh.created_at = self.t0;
+        }
+        self.record_timeline(self.t0);
+        if self.scaler.is_some() && !trace.requests.is_empty() {
+            let interval = self
+                .autoscale
+                .as_ref()
+                .expect("scaler implies autoscale config")
+                .eval_interval;
+            self.push(self.t0 + interval, EvKind::AutoscaleEval);
+        }
 
         while let Some(ev) = self.heap.pop() {
-            if ev.time.is_finite() {
+            // Autoscaler bookkeeping (evaluation ticks, warm-ups) does
+            // not advance the workload horizon: a cold start completing
+            // after the last token would otherwise dilute utilization
+            // and over-bill shard-seconds for every surviving shard.
+            // Work a warm-up *admits* still lands in the horizon through
+            // its own resolve/release events.
+            let bookkeeping = matches!(ev.kind, EvKind::AutoscaleEval | EvKind::ShardWarm(_));
+            if ev.time.is_finite() && !bookkeeping {
                 self.horizon = self.horizon.max(ev.time);
             }
             match ev.kind {
@@ -400,6 +551,7 @@ impl<'a> FleetSim<'a> {
                         self.on_server_admit(j, ev.time);
                         self.try_resolve(j, ev.time);
                     }
+                    self.maybe_retire(s, ev.time);
                 }
                 EvKind::DeviceRelease => {
                     let next = self.device_pool.release(&self.device_cancelled);
@@ -439,8 +591,23 @@ impl<'a> FleetSim<'a> {
                         let s = self.shard_of[i].expect("server-bound requests are assigned");
                         self.shards[s].pool.cancel_queued();
                         self.try_resolve(i, ev.time);
+                        // A draining shard whose last live entry was just
+                        // cancelled can retire now.
+                        self.maybe_retire(s, ev.time);
                     }
                 }
+                EvKind::AutoscaleEval => {
+                    self.autoscale_eval(ev.time);
+                    if self.resolved_count < trace.len() {
+                        let interval = self
+                            .autoscale
+                            .as_ref()
+                            .expect("eval events imply autoscale config")
+                            .eval_interval;
+                        self.push(ev.time + interval, EvKind::AutoscaleEval);
+                    }
+                }
+                EvKind::ShardWarm(s) => self.warm_shard(s, ev.time),
             }
         }
 
@@ -452,24 +619,52 @@ impl<'a> FleetSim<'a> {
         // Horizon is measured from the first arrival, not absolute time
         // zero, so traces with a delayed start (e.g. session ramp-up) do
         // not dilute utilization with an idle prefix.
-        let t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+        let t0 = self.t0;
+        let end = self.horizon.max(t0);
         // Fleet-level aggregates derive from the per-shard accounting —
         // one source of truth (Summary sorts internally, so the shard
         // concatenation order is irrelevant).
         let mut all_delays: Vec<f64> = Vec::new();
         let mut server_busy = 0.0;
+        let mut shard_seconds = 0.0;
         let shard_loads: Vec<ShardLoad> = self
             .shards
             .iter()
             .map(|s| {
                 all_delays.extend_from_slice(&s.delays);
                 server_busy += s.busy;
+                // Retirement can be stamped by a post-horizon autoscaler
+                // tick; clamp so draining never bills MORE than staying
+                // warm to the end of the run.
+                let shard_end = s.retired_at.unwrap_or(end).min(end);
+                let lifetime = (shard_end - s.created_at).max(0.0);
+                shard_seconds += lifetime;
                 ShardLoad {
                     queue_delay: Summary::of(&s.delays),
                     busy_seconds: s.busy,
                     admitted: s.admitted,
                     slots: s.pool.cap,
+                    lifetime_seconds: lifetime,
                 }
+            })
+            .collect();
+        // Timeline and scale-event timestamps are reported relative to
+        // the first arrival, like the horizon.
+        let rel = |t: f64| (t - t0).max(0.0);
+        let shard_timeline = self
+            .timeline
+            .iter()
+            .map(|s| ShardCountSample {
+                time: rel(s.time),
+                ..*s
+            })
+            .collect();
+        let scale_events = self
+            .scale_events
+            .iter()
+            .map(|e| ScaleEvent {
+                time: rel(e.time),
+                ..*e
             })
             .collect();
         let load = LoadReport {
@@ -480,6 +675,11 @@ impl<'a> FleetSim<'a> {
             horizon: (self.horizon - t0).max(0.0),
             server_slots: self.fleet.server_slots,
             shards: shard_loads,
+            shard_timeline,
+            scale_events,
+            cold_start_seconds: self.cold_start_seconds,
+            shard_seconds,
+            events_processed: self.seq,
         };
         FleetOutcome { records, load }
     }
@@ -494,28 +694,45 @@ impl<'a> FleetSim<'a> {
 
     /// Balance server-bound request `i` onto a shard and book its work
     /// estimate. With one shard the balancer (and its RNG stream) is
-    /// bypassed entirely, preserving byte-identical K=1 replays.
+    /// bypassed entirely, preserving byte-identical K=1 replays. Cold,
+    /// draining, and retired shards are flagged non-admitting; should
+    /// every shard be non-admitting (unreachable while the autoscaler
+    /// keeps `min_shards ≥ 1` warm, but handled defensively), the
+    /// request joins the cold shard that becomes ready soonest.
     fn assign_shard(&mut self, i: usize) -> usize {
         let s = if self.shards.len() == 1 {
             0
         } else {
             self.views.clear();
+            let mut any_admitting = false;
             for sh in &self.shards {
+                let admitting = sh.phase == LifecyclePhase::Warm;
+                any_admitting |= admitting;
                 self.views.push(ShardView {
                     in_use: sh.pool.in_use,
                     queued: sh.pool.live_queued(),
                     slots: sh.pool.cap,
                     work: sh.work,
+                    admitting,
                 });
             }
-            let pick = self.balancer.pick(&self.views, &mut self.brng);
-            assert!(
-                pick < self.shards.len(),
-                "balancer {} violated its contract: picked shard {pick} of {}",
-                self.balancer.name(),
-                self.shards.len()
-            );
-            pick
+            if any_admitting {
+                let pick = self.balancer.pick(&self.views, &mut self.brng);
+                assert!(
+                    pick < self.shards.len(),
+                    "balancer {} violated its contract: picked shard {pick} of {}",
+                    self.balancer.name(),
+                    self.shards.len()
+                );
+                debug_assert!(
+                    self.views[pick].admitting,
+                    "balancer {} routed to a non-admitting shard {pick}",
+                    self.balancer.name()
+                );
+                pick
+            } else {
+                self.earliest_ready_shard()
+            }
         };
         self.shard_of[i] = Some(s);
         let sample = self
@@ -525,6 +742,25 @@ impl<'a> FleetSim<'a> {
             .expect("server users have a sample");
         self.shards[s].work += sample;
         s
+    }
+
+    /// The cold shard with the earliest warm-up time (ties to the lowest
+    /// index); degrades to shard 0 when nothing is even cold.
+    fn earliest_ready_shard(&self) -> usize {
+        let mut best: Option<usize> = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if sh.phase != LifecyclePhase::Cold {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => sh.ready_at.total_cmp(&self.shards[b].ready_at) == Ordering::Less,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.unwrap_or(0)
     }
 
     fn on_server_admit(&mut self, i: usize, now: f64) {
@@ -574,6 +810,193 @@ impl<'a> FleetSim<'a> {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Autoscaling
+    // -----------------------------------------------------------------
+
+    /// One autoscaler evaluation: snapshot the fleet, ask the policy,
+    /// clamp the action to `[min_shards, max_shards]`, and apply it.
+    fn autoscale_eval(&mut self, now: f64) {
+        let statuses: Vec<ShardStatus> = self
+            .shards
+            .iter()
+            .map(|sh| ShardStatus {
+                view: ShardView {
+                    in_use: sh.pool.in_use,
+                    queued: sh.pool.live_queued(),
+                    slots: sh.pool.cap,
+                    work: sh.work,
+                    admitting: sh.phase == LifecyclePhase::Warm,
+                },
+                phase: sh.phase,
+            })
+            .collect();
+        let cfg = *self.autoscale.as_ref().expect("eval implies config");
+        let view = FleetView {
+            now,
+            shards: &statuses,
+            slots_per_shard: self.fleet.server_slots,
+            min_shards: cfg.min_shards,
+            max_shards: cfg.max_shards,
+        };
+        let action = self
+            .scaler
+            .as_mut()
+            .expect("eval implies a scaling policy")
+            .evaluate(&view, &mut self.arng);
+        match action {
+            ScaleAction::Hold => {}
+            ScaleAction::ScaleOut { shards } => self.scale_out(shards, now, &cfg),
+            ScaleAction::ScaleIn { shards } => self.scale_in(shards, now, &cfg),
+        }
+    }
+
+    /// Provision up to `n` cold shards, keeping the total *paid-for*
+    /// fleet (everything short of retired — draining victims still bill
+    /// shard-seconds) within `max_shards`. Each new shard admits nothing
+    /// until its load-time delay — from the configured `ColdStartSpec` —
+    /// elapses.
+    fn scale_out(&mut self, n: usize, now: f64, cfg: &AutoscaleConfig) {
+        let paid_for = self
+            .shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .count();
+        let room = cfg.max_shards.saturating_sub(paid_for);
+        for _ in 0..n.min(room) {
+            let ready = now + cfg.cold_start.delay();
+            let idx = self.shards.len();
+            // New replicas are homogeneous (no extra RTT) and share the
+            // base server profile.
+            self.shards.push(ShardState::new(
+                Pool::new_frozen(self.fleet.server_slots),
+                0.0,
+                LifecyclePhase::Cold,
+                now,
+                ready,
+            ));
+            self.server_endpoints.push(self.scenario.server.clone());
+            self.scale_events.push(ScaleEvent {
+                time: now,
+                shard: idx,
+                kind: ScaleEventKind::ScaleOut,
+            });
+            self.push(ready, EvKind::ShardWarm(idx));
+        }
+        self.record_timeline(now);
+    }
+
+    /// Drain up to `n` warm shards, never dropping below `min_shards`
+    /// warm (so the balancer always has an admitting candidate). The
+    /// victim is the warm shard with the least outstanding work; ties
+    /// drain the newest shard first.
+    fn scale_in(&mut self, n: usize, now: f64, cfg: &AutoscaleConfig) {
+        for _ in 0..n {
+            let warm: Vec<usize> = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.phase == LifecyclePhase::Warm)
+                .map(|(i, _)| i)
+                .collect();
+            if warm.len() <= cfg.min_shards.max(1) {
+                break;
+            }
+            let mut victim = warm[0];
+            for &i in &warm[1..] {
+                // Least outstanding estimated service seconds (the same
+                // signal LeastWork balances on); exact ties — typically
+                // idle shards at 0.0 — drain the newest first.
+                match self.shards[i].work.total_cmp(&self.shards[victim].work) {
+                    Ordering::Less => victim = i,
+                    Ordering::Equal if i > victim => victim = i,
+                    _ => {}
+                }
+            }
+            self.shards[victim].phase = LifecyclePhase::Draining;
+            self.scale_events.push(ScaleEvent {
+                time: now,
+                shard: victim,
+                kind: ScaleEventKind::DrainStart,
+            });
+            // An already-empty victim retires immediately.
+            self.maybe_retire(victim, now);
+        }
+        self.record_timeline(now);
+    }
+
+    /// A cold shard finished loading: unfreeze its pool, join the
+    /// balanced set, and admit anything already queued on it.
+    fn warm_shard(&mut self, s: usize, now: f64) {
+        if self.shards[s].phase != LifecyclePhase::Cold {
+            return;
+        }
+        self.shards[s].phase = LifecyclePhase::Warm;
+        self.shards[s].pool.frozen = false;
+        self.cold_start_seconds += (now - self.shards[s].created_at).max(0.0);
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::WarmUp,
+        });
+        self.record_timeline(now);
+        while let Some(j) = self.shards[s].pool.try_admit(&self.server_cancelled) {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
+    }
+
+    /// A draining shard retires once its last admission released and no
+    /// live entry remains queued; retirement stops shard-seconds accrual
+    /// (and drops the shard from the timeline's provisioned count).
+    fn maybe_retire(&mut self, s: usize, now: f64) {
+        let sh = &mut self.shards[s];
+        let drained = sh.phase == LifecyclePhase::Draining
+            && sh.pool.in_use == 0
+            && sh.pool.live_queued() == 0;
+        if !drained {
+            return;
+        }
+        sh.phase = LifecyclePhase::Retired;
+        sh.retired_at = Some(now);
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::Retire,
+        });
+        self.record_timeline(now);
+    }
+
+    /// Append a shard-count sample if the counts changed since the last
+    /// one (evaluations that change nothing record nothing).
+    fn record_timeline(&mut self, now: f64) {
+        let warm = self
+            .shards
+            .iter()
+            .filter(|s| s.phase == LifecyclePhase::Warm)
+            .count();
+        // "Provisioned" is capacity still being paid for — everything
+        // short of Retired — so integrating the timeline agrees with
+        // `shard_seconds` (a draining shard bills until its last stream
+        // ends), and scale-out headroom uses the same count, so this
+        // never exceeds `max_shards`.
+        let provisioned = self
+            .shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .count();
+        if let Some(last) = self.timeline.last() {
+            if last.warm == warm && last.provisioned == provisioned {
+                return;
+            }
+        }
+        self.timeline.push(ShardCountSample {
+            time: now,
+            warm,
+            provisioned,
+        });
+    }
+
     /// Resolve the request once every resource it needs is granted or
     /// cancelled.
     fn try_resolve(&mut self, i: usize, now: f64) {
@@ -609,6 +1032,7 @@ impl<'a> FleetSim<'a> {
                 st.server_admit.is_some() && !srv_cancelled,
             )
         };
+        self.resolved_count += 1;
         // The shard's RTT offset folds into the pre-drawn prefill sample
         // so the perceived first token (and the §4.2 race) see the
         // shard's real latency. Work-estimate retirement: admissions stay
@@ -622,9 +1046,18 @@ impl<'a> FleetSim<'a> {
             }
             pre.server_sample = Some(sample + self.shards[s].rtt);
         }
+        // Every shard shares the base profile, so the endpoint handed to
+        // `resolve_request` only distinguishes shards through its RTT —
+        // which feeds the §4.3 migration re-prefill estimate. A draining
+        // or retired shard must not be the re-prefill target (no new
+        // work routes to a dying shard), so those requests fall back to
+        // the base endpoint, i.e. a healthy replica. Static fleets are
+        // always Warm, preserving byte parity.
         let server_ep = match shard {
-            Some(s) => &self.server_endpoints[s],
-            None => &self.scenario.server,
+            Some(s) if self.shards[s].phase == LifecyclePhase::Warm => {
+                &self.server_endpoints[s]
+            }
+            _ => &self.scenario.server,
         };
         let resolved = resolve_request(
             req,
@@ -698,7 +1131,8 @@ pub fn run_fleet(
     let shard_count = fleet.shards.max(1);
     // A zero-slot pool could never admit anyone; normalize once so the
     // pools and the reported LoadReport.server_slots always agree. RTT
-    // offsets are padded/truncated to the shard count.
+    // offsets are padded/truncated to the shard count; autoscale bands
+    // are clamped sane.
     let mut rtts = fleet.shard_rtts.clone();
     rtts.resize(shard_count, 0.0);
     let fleet = FleetConfig {
@@ -707,20 +1141,28 @@ pub fn run_fleet(
         shards: shard_count,
         balancer: fleet.balancer,
         shard_rtts: rtts.clone(),
+        autoscale: fleet.autoscale.map(|a| a.normalized()),
     };
     let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &rtts);
+    // Initial shards are created warm at the first arrival (created_at
+    // is stamped in `run`).
     let shards: Vec<ShardState> = rtts
         .iter()
-        .map(|&rtt| ShardState {
-            pool: Pool::new(fleet.server_slots),
-            rtt,
-            work: 0.0,
-            busy: 0.0,
-            delays: Vec::new(),
-            admitted: 0,
+        .map(|&rtt| {
+            ShardState::new(
+                Pool::new(fleet.server_slots),
+                rtt,
+                LifecyclePhase::Warm,
+                0.0,
+                0.0,
+            )
         })
         .collect();
     let device_pool = Pool::new(if fleet.device_queueing { Some(1) } else { None });
+    // `AutoscaleConfig` is Copy, so the normalized config can live both
+    // in `fleet` (for Debug/consumers) and as the loop's working copy.
+    let autoscale = fleet.autoscale;
+    let scaler = autoscale.as_ref().and_then(|a| a.kind.build());
     let sim = FleetSim {
         scenario,
         trace,
@@ -731,6 +1173,10 @@ pub fn run_fleet(
         // different seed expansion), so balancer draws never perturb
         // request trajectories.
         brng: Rng::new(scenario.cfg.seed ^ 0xBA1A_7CE5_0C4A_11CE),
+        // The autoscaler's own stream, disjoint from both of the above.
+        arng: Rng::new(scenario.cfg.seed ^ 0xA5CA_1E05_EED0_0001),
+        autoscale,
+        scaler,
         fleet,
         server_endpoints,
         heap: BinaryHeap::new(),
@@ -746,6 +1192,11 @@ pub fn run_fleet(
         device_delays: Vec::new(),
         device_busy: 0.0,
         horizon: 0.0,
+        resolved_count: 0,
+        scale_events: Vec::new(),
+        timeline: Vec::new(),
+        cold_start_seconds: 0.0,
+        t0: 0.0,
     };
     sim.run()
 }
@@ -1024,5 +1475,179 @@ mod tests {
             let imb = load.shard_imbalance().unwrap();
             assert!(imb >= 1.0 - 1e-9 && imb.is_finite(), "imbalance {imb}");
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Autoscaling
+    // -----------------------------------------------------------------
+
+    use crate::sim::autoscaler::{AutoscalerKind, ColdStartSpec, ReactiveConfig};
+
+    /// An aggressive reactive config for tests: act on the first
+    /// overloaded/idle evaluation, add up to `max_step` shards at once.
+    fn eager_reactive(min: usize, max: usize, cold: f64) -> AutoscaleConfig {
+        AutoscaleConfig {
+            kind: AutoscalerKind::Reactive(ReactiveConfig {
+                scale_out_per_shard: 2.0,
+                scale_in_per_shard: 0.5,
+                sustain: 1,
+                cooldown: 0.0,
+                max_step: max,
+            }),
+            eval_interval: 0.5,
+            min_shards: min,
+            max_shards: max,
+            cold_start: ColdStartSpec::Fixed(cold),
+        }
+    }
+
+    /// A burst trace: `n_burst` arrivals every 0.25 s, then a calm tail
+    /// that gives the autoscaler room to drain back down.
+    fn burst_then_calm(n_burst: usize, n_calm: usize, seed: u64) -> Trace {
+        let mut t = WorkloadSpec::alpaca(n_burst + n_calm).generate(seed);
+        let mut now = 0.0;
+        for (i, r) in t.requests.iter_mut().enumerate() {
+            r.arrival = now;
+            now += if i < n_burst { 0.25 } else { 3.0 };
+        }
+        t
+    }
+
+    #[test]
+    fn frozen_pool_queues_until_unfrozen() {
+        let mut p = Pool::new_frozen(Some(2));
+        let cancelled = vec![false; 4];
+        // Everything queues while frozen, even with spare capacity.
+        assert!(!p.acquire(0));
+        assert!(!p.acquire(1));
+        assert!(!p.acquire(2));
+        assert_eq!(p.in_use, 0);
+        assert_eq!(p.live_queued(), 3);
+        assert_eq!(p.try_admit(&cancelled), None, "frozen pools admit nothing");
+        // Unfreeze: admissions drain in FIFO order up to the cap.
+        p.frozen = false;
+        assert_eq!(p.try_admit(&cancelled), Some(0));
+        assert_eq!(p.try_admit(&cancelled), Some(1));
+        assert_eq!(p.try_admit(&cancelled), None, "cap reached");
+        assert_eq!(p.in_use, 2);
+        assert_eq!(p.live_queued(), 1);
+        // New acquires behave like a normal bounded pool now.
+        assert!(!p.acquire(3));
+        let next = p.release(&cancelled);
+        assert_eq!(next, Some(2));
+    }
+
+    /// Tentpole parity: attaching an `AutoscalerKind::None` config is
+    /// byte-identical to the plain static fleet — no evaluation events
+    /// are scheduled, so even the event-sequence numbering matches.
+    #[test]
+    fn autoscaler_none_matches_static_fleet() {
+        let sc = scenario(34);
+        let trace = trace_at_gap(150, 0.6, 17);
+        let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+        let static_cfg = FleetConfig::sharded(3, 1, BalancerKind::JoinShortestQueue);
+        let auto_cfg = static_cfg.clone().with_autoscale(AutoscaleConfig::fixed());
+        let a = run_fleet(&sc, &trace, &policy, &static_cfg);
+        let b = run_fleet(&sc, &trace, &policy, &auto_cfg);
+        assert_eq!(a.records, b.records);
+        assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+        assert!(a.load.scale_events.is_empty());
+        assert_eq!(a.load.shard_timeline.len(), 1, "static fleets record one sample");
+        assert!((a.load.shard_seconds - 3.0 * a.load.horizon).abs() < 1e-9);
+    }
+
+    /// Reactive autoscaling under a burst: the fleet scales out (paying
+    /// real cold-start seconds), every request still resolves, queue
+    /// delays beat the static-small fleet, and the calm tail drains the
+    /// extra shards back down (drain → retire).
+    #[test]
+    fn reactive_autoscaler_scales_out_and_drains_back() {
+        let sc = scenario(35);
+        let trace = burst_then_calm(150, 30, 18);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let static_small = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue);
+        let auto_cfg = static_small.clone().with_autoscale(eager_reactive(1, 4, 1.0));
+        let small = run_fleet(&sc, &trace, &policy, &static_small);
+        let auto = run_fleet(&sc, &trace, &policy, &auto_cfg);
+
+        // Liveness: every request resolves even with shards appearing
+        // and retiring mid-run.
+        assert_eq!(auto.records.len(), trace.len());
+        // The burst forces scale-out, and every provisioned shard warms.
+        let outs = auto.load.scale_out_count();
+        assert!(outs >= 1, "burst must trigger scale-out");
+        let warms = auto
+            .load
+            .scale_events
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::WarmUp)
+            .count();
+        assert_eq!(warms, outs, "every cold shard must warm exactly once");
+        assert!(auto.load.cold_start_seconds > 0.0);
+        assert!(auto.load.peak_warm_shards() > 1);
+        assert!(auto.load.peak_warm_shards() <= 4, "max_shards must cap scale-out");
+        // Scaling out must beat the static-small fleet's queueing.
+        assert!(
+            auto.load.server_queue_delay.p99 < small.load.server_queue_delay.p99,
+            "autoscaled p99 queue {:.2}s must beat static K=1 {:.2}s",
+            auto.load.server_queue_delay.p99,
+            small.load.server_queue_delay.p99
+        );
+        // The calm tail drains the fleet back down: drains and retires
+        // happen, and the run costs less than peak-sized provisioning.
+        let drains = auto
+            .load
+            .scale_events
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::DrainStart)
+            .count();
+        let retires = auto
+            .load
+            .scale_events
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::Retire)
+            .count();
+        assert!(drains >= 1, "calm tail must trigger scale-in");
+        assert!(retires >= 1, "drained shards must retire");
+        assert!(retires <= drains);
+        assert!(
+            auto.load.shard_seconds < auto.load.peak_warm_shards() as f64 * auto.load.horizon,
+            "draining must cost less than peak-sized static provisioning"
+        );
+        // Timeline sanity: starts at the initial K, never exceeds the cap.
+        let tl = &auto.load.shard_timeline;
+        assert!(tl.len() >= 3, "timeline must record the scaling story");
+        assert_eq!(tl[0].warm, 1);
+        assert!(tl.iter().all(|s| s.provisioned <= 4 && s.warm <= s.provisioned));
+    }
+
+    /// Autoscaled runs are bit-reproducible: same seed, same topology
+    /// trajectory, same records.
+    #[test]
+    fn autoscaled_run_is_deterministic() {
+        let sc = scenario(36);
+        let trace = burst_then_calm(100, 20, 19);
+        let policy = Policy::simple(PolicyKind::StochS, 0.8, false);
+        let cfg = FleetConfig::sharded(1, 1, BalancerKind::PowerOfTwoChoices)
+            .with_autoscale(eager_reactive(1, 3, 0.8));
+        let a = run_fleet(&sc, &trace, &policy, &cfg);
+        let b = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(a.records, b.records);
+        assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+    }
+
+    /// A zero-second cold start still goes through the cold → warm
+    /// transition (same event order), just instantaneously.
+    #[test]
+    fn zero_delay_cold_start_is_live() {
+        let sc = scenario(37);
+        let trace = burst_then_calm(80, 10, 20);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue)
+            .with_autoscale(eager_reactive(1, 3, 0.0));
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        assert!(out.load.scale_out_count() >= 1);
+        assert_eq!(out.load.cold_start_seconds, 0.0);
     }
 }

@@ -1,6 +1,6 @@
 //! Deterministic workload simulation.
 //!
-//! Four layers, one request code path:
+//! Five layers, one request code path:
 //!
 //! * [`delivery`] models the user-side token consumption schedule (§4.3):
 //!   tokens are paced at the consumption rate `r_c`, a buffer absorbs
@@ -14,7 +14,14 @@
 //! * [`balancer`] is the shard-selection layer: a [`balancer::Balancer`]
 //!   trait with round-robin, join-shortest-queue, power-of-two-choices,
 //!   and least-work implementations, selected by
-//!   [`balancer::BalancerKind`].
+//!   [`balancer::BalancerKind`]. Balancers skip non-admitting (cold or
+//!   draining) shards.
+//! * [`autoscaler`] is the capacity-policy layer: an
+//!   [`autoscaler::Autoscaler`] trait (none / reactive queue-depth /
+//!   TTFT-target) that lets the shard count react to load mid-run, with
+//!   cold-start penalties from [`autoscaler::ColdStartSpec`] (Appendix
+//!   B's load-time model) on scale-out and drain-then-retire semantics
+//!   on scale-in.
 //! * [`fleet`] is the discrete-event loop that produces the resource
 //!   grant times: a binary-heap event queue in which N concurrent
 //!   requests contend for a *sharded* server fleet
@@ -39,6 +46,11 @@
 //!   `with_shard_rtts`. Load-dependent metrics (queue delay, busy
 //!   seconds, utilization, per-shard breakdown, imbalance) surface in
 //!   [`crate::metrics::LoadReport`].
+//! * `FleetConfig::with_autoscale(cfg)` — attach an
+//!   [`autoscaler::AutoscaleConfig`]: K becomes dynamic (scale-out pays
+//!   a cold-start load delay, scale-in drains before retiring), and the
+//!   shard-count timeline, scale events, cold-start seconds, and
+//!   provisioned shard-seconds land in the load report.
 //! * Arrival processes live in `trace::generator`: Poisson and Gamma
 //!   inter-arrivals (`Arrival::Poisson` / `Arrival::Gamma` — CV above or
 //!   below 1 for burstier or smoother-than-Poisson traffic), fixed gaps,
@@ -52,11 +64,13 @@
 //! randomized balancers draw from their own fleet-level stream. The
 //! paper's "mean over 10 runs" becomes a seed sweep.
 
+pub mod autoscaler;
 pub mod balancer;
 pub mod delivery;
 pub mod engine;
 pub mod fleet;
 
+pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
 pub use balancer::{Balancer, BalancerKind, ShardView};
 pub use engine::{Scenario, SimConfig};
 pub use fleet::{FleetConfig, FleetOutcome};

@@ -15,10 +15,12 @@ use disco::experiments::common::{
     avg_cost, avg_mean_ttft, avg_p99_ttft, disco_for, make_policy, run_cell, stoch_for,
 };
 use disco::profiles::{DeviceProfile, ServerProfile};
+use disco::sim::autoscaler::{AutoscaleConfig, AutoscalerKind, ColdStartSpec, ReactiveConfig};
 use disco::sim::balancer::BalancerKind;
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::sim::fleet::FleetConfig;
 use disco::trace::generator::{Arrival, WorkloadSpec};
+use disco::trace::Trace;
 
 /// Fast-tier sizing.
 const N: usize = 400;
@@ -537,6 +539,147 @@ fn jsq_and_p2c_beat_round_robin_p99_queue_delay_at_high_load() {
     assert!(
         p2c < rr,
         "P2C p99 queue delay {p2c:.3} must beat round-robin {rr:.3}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shard autoscaling
+// ---------------------------------------------------------------------
+
+/// Acceptance: `AutoscalerKind::None` with a static K reproduces the
+/// PR-2 static fleet byte-identically under EVERY balancer — attaching a
+/// disabled autoscaler schedules no evaluation events, so records, load
+/// metrics, and even the event-sequence numbering match exactly.
+#[test]
+fn autoscaler_none_reproduces_static_fleet_under_every_balancer() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 61,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(250).at_rate(1.5).generate(47);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    for balancer in BalancerKind::all() {
+        let static_cfg = FleetConfig::sharded(3, 1, balancer);
+        let auto_cfg = static_cfg.clone().with_autoscale(AutoscaleConfig::fixed());
+        let a = scenario.run_fleet(&trace, &policy, &static_cfg);
+        let b = scenario.run_fleet(&trace, &policy, &auto_cfg);
+        assert_eq!(
+            a.records, b.records,
+            "{balancer}: disabled autoscaler must not perturb records"
+        );
+        assert_eq!(
+            format!("{:?}", a.load),
+            format!("{:?}", b.load),
+            "{balancer}: disabled autoscaler must not perturb load metrics"
+        );
+        assert!(b.load.scale_events.is_empty());
+    }
+}
+
+/// A calm → burst → calm arrival pattern over Alpaca payloads: the
+/// burst sustains `burst_rate`× the calm rate long enough that capacity
+/// planning (static vs autoscaled) dominates the tail.
+fn bursty_trace(n_calm: usize, n_burst: usize, burst_gap: f64, seed: u64) -> Trace {
+    let mut t = WorkloadSpec::alpaca(2 * n_calm + n_burst).generate(seed);
+    let mut now = 0.0;
+    for (i, r) in t.requests.iter_mut().enumerate() {
+        r.arrival = now;
+        now += if (n_calm..n_calm + n_burst).contains(&i) {
+            burst_gap
+        } else {
+            2.0
+        };
+    }
+    t
+}
+
+/// Acceptance: on bursty load, reactive autoscaling beats a static-small
+/// fleet on p99 TTFT by a wide margin, lands within 10% of the
+/// static-large fleet's p99, and consumes strictly fewer shard-seconds
+/// than static-large — the capacity-vs-tail-TTFT trade-off the paper's
+/// "flexible capacity" assumption hides, priced with a real cold-start
+/// delay per scale-out.
+#[test]
+fn reactive_autoscaling_beats_static_small_within_static_large_budget() {
+    // Spike-free server profile: the comparison isolates queueing from
+    // the heavy-tail mixture (all three runs share pre-drawn samples
+    // anyway, but spikes would inflate slot-hold variance).
+    let mut profile = ServerProfile::gpt4o_mini();
+    profile.spike_prob = 0.0;
+    let scenario = Scenario::new(
+        profile,
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 67,
+            ..Default::default()
+        },
+    );
+    // 120 s calm at 0.5 req/s, 270 s burst at 5 req/s (≈1.3× the
+    // static-large capacity), 120 s calm again.
+    let trace = bursty_trace(60, 1350, 0.2, 53);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+
+    let small_k = 2;
+    let large_k = 5;
+    let small_cfg = FleetConfig::sharded(small_k, 1, BalancerKind::JoinShortestQueue);
+    let large_cfg = FleetConfig::sharded(large_k, 1, BalancerKind::JoinShortestQueue);
+    let auto_cfg = small_cfg.clone().with_autoscale(AutoscaleConfig {
+        kind: AutoscalerKind::Reactive(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.3,
+            sustain: 1,
+            cooldown: 0.0,
+            max_step: 4,
+        }),
+        eval_interval: 1.0,
+        min_shards: small_k,
+        max_shards: large_k,
+        cold_start: ColdStartSpec::Fixed(2.0),
+    });
+
+    let small = scenario.run_fleet_report(&trace, &policy, &small_cfg);
+    let large = scenario.run_fleet_report(&trace, &policy, &large_cfg);
+    let auto = scenario.run_fleet_report(&trace, &policy, &auto_cfg);
+
+    // The autoscaler actually scaled, paid real cold-start time, and
+    // stayed within its band.
+    assert!(auto.load.scale_out_count() >= 1, "burst must trigger scale-out");
+    assert!(auto.load.cold_start_seconds > 0.0, "cold starts must cost time");
+    assert!(auto.load.peak_warm_shards() <= large_k);
+
+    // Static-small drowns in the burst; static-large rides it out.
+    assert!(
+        small.qoe.ttft.p99 > 4.0 * large.qoe.ttft.p99,
+        "static-small p99 {:.1}s should dwarf static-large {:.1}s",
+        small.qoe.ttft.p99,
+        large.qoe.ttft.p99
+    );
+    // Reactive autoscaling beats static-small decisively…
+    assert!(
+        auto.qoe.ttft.p99 < 0.5 * small.qoe.ttft.p99,
+        "autoscaled p99 {:.1}s must beat static-small {:.1}s",
+        auto.qoe.ttft.p99,
+        small.qoe.ttft.p99
+    );
+    // …lands within 10% of static-large on p99 TTFT…
+    assert!(
+        auto.qoe.ttft.p99 <= 1.10 * large.qoe.ttft.p99,
+        "autoscaled p99 {:.2}s must be within 10% of static-large {:.2}s",
+        auto.qoe.ttft.p99,
+        large.qoe.ttft.p99
+    );
+    // …while consuming strictly fewer shard-seconds.
+    assert!(
+        auto.load.shard_seconds < large.load.shard_seconds,
+        "autoscaled shard-seconds {:.0} must undercut static-large {:.0}",
+        auto.load.shard_seconds,
+        large.load.shard_seconds
     );
 }
 
