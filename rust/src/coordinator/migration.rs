@@ -86,6 +86,21 @@ impl MigrationPlanner {
         savings > overhead
     }
 
+    /// Predicted admission delay on a server shard carrying
+    /// `outstanding_secs` of estimated service with `slots` concurrent
+    /// admissions (`None` = unlimited, no queueing): the same
+    /// work-over-capacity predictor the TTFT-target autoscaler uses.
+    /// Folded into the re-prefill warm-up estimate when migration is
+    /// shard-targeted, so a loaded target inflates `t_m` — and thus the
+    /// Eq. 5 buffer — instead of being silently free.
+    pub fn queue_delay_estimate(&self, outstanding_secs: f64, slots: Option<usize>) -> f64 {
+        match slots {
+            Some(c) if c > 0 => (outstanding_secs / c as f64).max(0.0),
+            Some(_) => outstanding_secs.max(0.0),
+            None => 0.0,
+        }
+    }
+
     /// Build the concrete plan (Eq. 5). `target_expected_ttft` is the
     /// target endpoint's expected warm-up for re-prefilling
     /// `reprefill_len` tokens.
@@ -225,6 +240,39 @@ mod tests {
             .plan(Constraint::Device, EndpointKind::Device, 100, 40, 2.0)
             .unwrap();
         assert_eq!(none.buffer_tokens, 1); // floor of 1 token
+    }
+
+    /// The shard-aware queue-delay predictor degrades gracefully:
+    /// unlimited pools add no queueing, zero-slot pools fall back to the
+    /// raw backlog, and folding a loaded shard's prediction into
+    /// `target_expected_ttft` strictly inflates the Eq. 5 buffer
+    /// relative to an idle one (a loaded migration target must buffer
+    /// more) — the composition the fleet's shard-targeted resolve step
+    /// performs through the target endpoint's `extra_rtt`.
+    #[test]
+    fn queue_delay_estimate_inflates_buffer_with_load() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        assert_eq!(p.queue_delay_estimate(3.0, None), 0.0);
+        assert_eq!(p.queue_delay_estimate(3.0, Some(2)), 1.5);
+        assert_eq!(p.queue_delay_estimate(3.0, Some(0)), 3.0);
+        assert_eq!(p.queue_delay_estimate(-1.0, Some(2)), 0.0);
+        let idle = 0.4 + p.queue_delay_estimate(0.0, Some(1));
+        let loaded = 0.4 + p.queue_delay_estimate(4.0, Some(1));
+        assert!((idle - 0.4).abs() < 1e-12);
+        assert!((loaded - 4.4).abs() < 1e-12);
+        let plan_idle = p
+            .plan(Constraint::Device, EndpointKind::Device, 200, 40, idle)
+            .expect("idle target should migrate");
+        let plan_loaded = p
+            .plan(Constraint::Device, EndpointKind::Device, 200, 40, loaded)
+            .expect("loaded target should still migrate when Eq. 4 holds");
+        assert!(
+            plan_loaded.buffer_tokens > plan_idle.buffer_tokens,
+            "loaded target must buffer more: {} vs {}",
+            plan_loaded.buffer_tokens,
+            plan_idle.buffer_tokens
+        );
+        assert!(plan_loaded.t_m_est > plan_idle.t_m_est);
     }
 
     #[test]

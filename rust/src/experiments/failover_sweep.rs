@@ -1,0 +1,389 @@
+//! Failover sweep: migration storms under shard failure.
+//!
+//! Each cell kills one shard of a K-shard fleet mid-burst (a scheduled
+//! [`crate::sim::fleet::ShardOutage`]) and replays the same
+//! device-constrained workload
+//! under a (migration policy × balancer × outage timing) grid. The
+//! migration-policy axis is the PR's headline comparison: §4.3 disabled,
+//! §4.3 with the legacy base-endpoint re-prefill target, and §4.3 with
+//! shard-targeted re-prefill ([`MigrationTargeting::ShardTargeted`] —
+//! least-work-with-estimate, the mode that also spreads the dead shard's
+//! re-queued streams across the survivors instead of piling them onto a
+//! single replacement). Cells at the same seed replay the identical
+//! trace and latency draws, so TTFT differences are pure
+//! targeting/failover effects. Cells fan out via
+//! [`crate::experiments::common::par_map`] with [`CellSeed`]
+//! content-derived seeding.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, par_map, CellSeed};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::{FleetConfig, MigrationTargeting};
+use crate::trace::generator::{Arrival, WorkloadSpec};
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// Migration-policy axis of the sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationAxis {
+    /// §4.3 disabled entirely (the no-migration baseline).
+    Off,
+    /// Migration on, legacy base-endpoint re-prefill target.
+    Legacy,
+    /// Migration on, shard-targeted re-prefill (least-work-with-estimate).
+    ShardTargeted,
+}
+
+impl MigrationAxis {
+    /// All axes, in report order.
+    pub fn all() -> Vec<MigrationAxis> {
+        vec![
+            MigrationAxis::Off,
+            MigrationAxis::Legacy,
+            MigrationAxis::ShardTargeted,
+        ]
+    }
+
+    /// Short label used in tables and CSVs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MigrationAxis::Off => "off",
+            MigrationAxis::Legacy => "legacy",
+            MigrationAxis::ShardTargeted => "shard-targeted",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<MigrationAxis> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => MigrationAxis::Off,
+            "legacy" | "base" | "base-endpoint" => MigrationAxis::Legacy,
+            "shard" | "targeted" | "shard-targeted" => MigrationAxis::ShardTargeted,
+            _ => return None,
+        })
+    }
+
+    /// Whether the §4.3 controller runs.
+    pub fn migration_enabled(&self) -> bool {
+        !matches!(self, MigrationAxis::Off)
+    }
+
+    /// The fleet-side targeting mode this axis runs.
+    pub fn targeting(&self) -> MigrationTargeting {
+        match self {
+            MigrationAxis::ShardTargeted => MigrationTargeting::ShardTargeted,
+            _ => MigrationTargeting::BaseEndpoint,
+        }
+    }
+}
+
+/// One cell of the failover-sweep grid.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverCell {
+    pub axis: MigrationAxis,
+    pub balancer: BalancerKind,
+    /// When the shard dies, as a fraction of the trace's arrival span.
+    pub outage_frac: f64,
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct FailoverCellResult {
+    pub cell: FailoverCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub p99_queue_delay: f64,
+    /// Migrated requests per run.
+    pub migrated: f64,
+    /// §4.3 re-prefills routed onto a concrete shard.
+    pub migration_targeted: f64,
+    /// Shard-targeted migrations that found no admitting shard.
+    pub migration_fallbacks: f64,
+    /// Queued streams re-routed off the dead shard.
+    pub outage_requeues: f64,
+}
+
+/// Sweep parameters, shared by the `failover-sweep` experiment and the
+/// `failover_sweep` CLI subcommand.
+#[derive(Clone, Debug)]
+pub struct FailoverSweepParams {
+    pub axes: Vec<MigrationAxis>,
+    pub balancers: Vec<BalancerKind>,
+    pub outage_fracs: Vec<f64>,
+    pub shards: usize,
+    pub slots_per_shard: usize,
+    /// Which shard the outage kills.
+    pub outage_shard: usize,
+    /// Burst arrival rate (req/s) — size it past one shard's capacity so
+    /// the dead shard has a queue worth re-routing.
+    pub rate_rps: f64,
+    /// Gamma arrival cv (> 1 = burstier than Poisson).
+    pub burst_cv: f64,
+    /// Dispatch policy every cell runs (a device-constrained racer, so
+    /// device-won streams migrate onto the shard fleet).
+    pub policy: PolicyKind,
+    pub b: f64,
+    pub n_requests: usize,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for FailoverSweepParams {
+    fn default() -> Self {
+        FailoverSweepParams {
+            axes: MigrationAxis::all(),
+            balancers: vec![BalancerKind::RoundRobin, BalancerKind::LeastWork],
+            outage_fracs: vec![0.25, 0.5, 0.75],
+            shards: 4,
+            slots_per_shard: 1,
+            outage_shard: 0,
+            // DeepSeek service ≈ 1.3 s ⇒ ~0.75 rps per slot; 4 rps over
+            // a K=4/1-slot fleet is a sustained ~1.3× overload.
+            rate_rps: 4.0,
+            burst_cv: 2.0,
+            policy: PolicyKind::StochD,
+            b: 1.0,
+            n_requests: 300,
+            n_seeds: 3,
+            service: ServerProfile::deepseek_v25(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+impl FailoverSweepParams {
+    /// Number of grid cells.
+    pub fn n_cells(&self) -> usize {
+        self.axes.len() * self.balancers.len() * self.outage_fracs.len()
+    }
+}
+
+/// Run the (axis × balancer × outage-time) grid in parallel; cells come
+/// back in grid order (axes outer, balancers middle, outage times inner).
+pub fn run_grid(params: &FailoverSweepParams) -> Vec<FailoverCellResult> {
+    let mut cells = Vec::with_capacity(params.n_cells());
+    for &axis in &params.axes {
+        for &balancer in &params.balancers {
+            for &outage_frac in &params.outage_fracs {
+                cells.push(FailoverCell {
+                    axis,
+                    balancer,
+                    outage_frac,
+                });
+            }
+        }
+    }
+    par_map(&cells, |_, cell| run_cell(params, cell))
+}
+
+fn run_cell(params: &FailoverSweepParams, cell: &FailoverCell) -> FailoverCellResult {
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut qd_p99 = Vec::new();
+    let mut migrated = Vec::new();
+    let mut targeted = Vec::new();
+    let mut fallbacks = Vec::new();
+    let mut requeues = Vec::new();
+    for seed in 0..params.n_seeds {
+        // Content-derived seed over the arrival rate only: every axis,
+        // balancer, and outage time at the same seed replays the
+        // identical trace and latency draws (paired comparison).
+        let cell_seed = CellSeed::new(seed).mix_f64(params.rate_rps);
+        let scenario = Scenario::new(
+            params.service.clone(),
+            params.device.clone(),
+            Constraint::Device,
+            SimConfig {
+                seed: cell_seed.scenario(),
+                ..Default::default()
+            },
+        );
+        let spec = WorkloadSpec {
+            arrival: Arrival::Gamma {
+                mean_gap: 1.0 / params.rate_rps,
+                cv: params.burst_cv,
+            },
+            ..WorkloadSpec::alpaca(params.n_requests)
+        };
+        let trace = spec.generate(cell_seed.trace(0xFA110E4));
+        let span = trace
+            .requests
+            .last()
+            .map_or(0.0, |r| r.arrival - trace.requests[0].arrival);
+        let fleet = FleetConfig::sharded(params.shards, params.slots_per_shard, cell.balancer)
+            .with_migration_targeting(cell.axis.targeting())
+            .with_outage(cell.outage_frac * span, params.outage_shard);
+        let policy = make_policy(
+            params.policy,
+            params.b,
+            cell.axis.migration_enabled(),
+            &scenario,
+            &trace,
+            cell_seed.scenario(),
+        );
+        let rep = scenario.run_fleet_report(&trace, &policy, &fleet);
+        mean_ttft.push(rep.qoe.ttft.mean);
+        p99_ttft.push(rep.qoe.ttft.p99);
+        qd_p99.push(rep.load.server_queue_delay.p99);
+        migrated.push(rep.qoe.migrated_requests as f64);
+        targeted.push(rep.load.migration_targeted as f64);
+        fallbacks.push(rep.load.migration_fallbacks as f64);
+        requeues.push(rep.load.outage_requeues as f64);
+    }
+    let avg = crate::stats::describe::mean;
+    FailoverCellResult {
+        cell: *cell,
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        p99_queue_delay: avg(&qd_p99),
+        migrated: avg(&migrated),
+        migration_targeted: avg(&targeted),
+        migration_fallbacks: avg(&fallbacks),
+        outage_requeues: avg(&requeues),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[FailoverCellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.cell.axis.label().to_string(),
+                r.cell.balancer.label().to_string(),
+                format!("{:.2}", r.cell.outage_frac),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.3}", r.p99_queue_delay),
+                format!("{:.1}", r.migrated),
+                format!("{:.1}", r.migration_targeted),
+                format!("{:.1}", r.migration_fallbacks),
+                format!("{:.1}", r.outage_requeues),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "migration",
+            "balancer",
+            "outage@",
+            "mean TTFT",
+            "p99 TTFT",
+            "p99 queue",
+            "migrated",
+            "targeted",
+            "fallbacks",
+            "requeues",
+        ],
+        &rows,
+    )
+}
+
+/// The `failover-sweep` experiment entry: default grid, CSV + table.
+pub fn failover_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = FailoverSweepParams {
+        n_requests: ctx.n_requests.clamp(50, 300),
+        n_seeds: ctx.n_seeds.clamp(1, 3),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "migration",
+        "balancer",
+        "outage_frac",
+        "mean_ttft",
+        "p99_ttft",
+        "p99_queue_delay",
+        "migrated",
+        "migration_targeted",
+        "migration_fallbacks",
+        "outage_requeues",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            r.cell.axis.label().to_string(),
+            r.cell.balancer.label().to_string(),
+            format!("{:.3}", r.cell.outage_frac),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.p99_queue_delay),
+            format!("{:.2}", r.migrated),
+            format!("{:.2}", r.migration_targeted),
+            format!("{:.2}", r.migration_fallbacks),
+            format!("{:.2}", r.outage_requeues),
+        ]);
+    }
+    csv.write(&ctx.csv_path("failover-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> FailoverSweepParams {
+        FailoverSweepParams {
+            axes: vec![MigrationAxis::Legacy, MigrationAxis::ShardTargeted],
+            balancers: vec![BalancerKind::RoundRobin],
+            outage_fracs: vec![0.5],
+            n_requests: 80,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_axes_and_exercises_failover() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].cell.axis, MigrationAxis::Legacy);
+        assert_eq!(results[1].cell.axis, MigrationAxis::ShardTargeted);
+        for r in &results {
+            assert!(r.mean_ttft > 0.0);
+            assert!(r.migrated > 0.0, "{}: migration must fire", r.cell.axis.label());
+        }
+        // Only the shard-targeted axis books re-prefills onto shards.
+        assert_eq!(results[0].migration_targeted, 0.0);
+        assert!(results[1].migration_targeted > 0.0);
+    }
+
+    #[test]
+    fn migration_axis_parse_roundtrips() {
+        for a in MigrationAxis::all() {
+            assert_eq!(MigrationAxis::parse(a.label()), Some(a));
+        }
+        assert_eq!(MigrationAxis::parse("base"), Some(MigrationAxis::Legacy));
+        assert_eq!(
+            MigrationAxis::parse("shard"),
+            Some(MigrationAxis::ShardTargeted)
+        );
+        assert!(MigrationAxis::parse("nope").is_none());
+        assert!(!MigrationAxis::Off.migration_enabled());
+        assert_eq!(
+            MigrationAxis::ShardTargeted.targeting(),
+            MigrationTargeting::ShardTargeted
+        );
+    }
+
+    #[test]
+    fn failover_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_failover_sweep"),
+            n_seeds: 1,
+            n_requests: 60,
+        };
+        let out = failover_sweep(&ctx).unwrap();
+        assert!(out.contains("migration"));
+        let csv = std::fs::read_to_string(ctx.csv_path("failover-sweep")).unwrap();
+        // Header + 3 axes × 2 balancers × 3 outage times.
+        assert_eq!(csv.lines().count(), 1 + 18);
+        assert_eq!(FailoverSweepParams::default().n_cells(), 18);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

@@ -105,8 +105,7 @@ fn run_cell(params: &SweepParams, cell: &GridCell) -> CellResult {
         device_queueing: true,
         shards: params.shards,
         balancer: params.balancer,
-        shard_rtts: Vec::new(),
-        autoscale: None,
+        ..FleetConfig::replay(true)
     };
     let mut mean_ttft = Vec::new();
     let mut p99_ttft = Vec::new();

@@ -11,6 +11,7 @@ pub mod autoscale_sweep;
 pub mod characterization;
 pub mod common;
 pub mod endtoend;
+pub mod failover_sweep;
 pub mod load_sweep;
 pub mod migration_exp;
 pub mod quality_exp;
@@ -158,6 +159,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "autoscale-sweep",
             title: "Fleet: autoscaling policies vs static provisioning under bursty load",
             run: autoscale_sweep::autoscale_sweep,
+        },
+        ExperimentDef {
+            id: "failover-sweep",
+            title: "Fleet: migration targeting under mid-burst shard failure",
+            run: failover_sweep::failover_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

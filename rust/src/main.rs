@@ -34,6 +34,7 @@ fn main() {
         "fleet_sweep" | "fleet-sweep" => cmd_fleet_sweep(&args),
         "shard_sweep" | "shard-sweep" => cmd_shard_sweep(&args),
         "autoscale_sweep" | "autoscale-sweep" => cmd_autoscale_sweep(&args),
+        "failover_sweep" | "failover-sweep" => cmd_failover_sweep(&args),
         "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
@@ -69,6 +70,13 @@ fn print_help() {
          \x20             fleet [--policies p1,p2,..] [--rates R1,..]\n\
          \x20             [--coldstarts rtx3060:3,a40:7,fixed:SECS] [--min K] [--max K]\n\
          \x20             [--slots N] [--cv CV] [--interval SECS] [--balancer B]\n\
+         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
+         \x20             [--service S] [--device D]\n\
+         \x20 failover_sweep\n\
+         \x20             parallel (migration policy × balancer × outage time) grid:\n\
+         \x20             one shard dies mid-burst [--policies off,legacy,shard-targeted]\n\
+         \x20             [--balancers b1,b2,..] [--outage-at F1,F2,..] [--shards K]\n\
+         \x20             [--slots N] [--outage-shard S] [--rate RPS] [--cv CV]\n\
          \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
          \x20             [--service S] [--device D]\n\
          \x20 bench       fixed-seed fleet benchmark → BENCH_fleet.json\n\
@@ -383,6 +391,76 @@ fn cmd_autoscale_sweep(args: &Args) -> anyhow::Result<()> {
         params.max_shards,
         params.slots_per_shard,
         params.balancer.label(),
+        params.n_requests,
+        params.n_seeds
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_failover_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::failover_sweep::{
+        render_grid, run_grid, FailoverSweepParams, MigrationAxis,
+    };
+
+    fn parse_axis(s: &str) -> anyhow::Result<MigrationAxis> {
+        let hint = "off|legacy|shard-targeted";
+        MigrationAxis::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown migration axis '{s}' ({hint})"))
+    }
+
+    let defaults = FailoverSweepParams::default();
+    let axes = parse_list(args, "policies", defaults.axes, parse_axis)?;
+    let balancers = parse_list(args, "balancers", defaults.balancers, parse_balancer)?;
+    let outage_fracs = parse_list(args, "outage-at", defaults.outage_fracs, |f| {
+        f.parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--outage-at expects fractions, got '{f}'"))
+    })?;
+    anyhow::ensure!(
+        outage_fracs.iter().all(|f| (0.0..=1.0).contains(f)),
+        "--outage-at fractions must be in [0,1]"
+    );
+
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
+    let params = FailoverSweepParams {
+        axes,
+        balancers,
+        outage_fracs,
+        shards: args.get_usize("shards", defaults.shards)?,
+        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
+        outage_shard: args.get_usize("outage-shard", defaults.outage_shard)?,
+        rate_rps: args.get_f64("rate", defaults.rate_rps)?,
+        burst_cv: args.get_f64("cv", defaults.burst_cv)?,
+        policy: parse_policy(args.get_or("policy", "stoch-d"))?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    anyhow::ensure!(params.shards > 0, "--shards must be at least 1");
+    anyhow::ensure!(
+        params.outage_shard < params.shards,
+        "--outage-shard must name a provisioned shard"
+    );
+    anyhow::ensure!(params.rate_rps > 0.0, "--rate must be positive");
+    anyhow::ensure!(params.burst_cv > 0.0, "--cv must be positive");
+    let n_cells = params.n_cells();
+    println!(
+        "failover sweep: {} migration axes × {} balancers × {} outage times = {n_cells} \
+         cells, {} shards × {} slots, shard {} dies, {} req/s, {} requests × {} seeds per cell",
+        params.axes.len(),
+        params.balancers.len(),
+        params.outage_fracs.len(),
+        params.shards,
+        params.slots_per_shard,
+        params.outage_shard,
+        params.rate_rps,
         params.n_requests,
         params.n_seeds
     );

@@ -103,6 +103,10 @@ pub struct ShardLoad {
     pub admitted: usize,
     /// This shard's concurrent-admission cap (`None` = unlimited).
     pub slots: Option<usize>,
+    /// §4.3 migrated streams whose re-prefill was routed *into* this
+    /// shard (shard-targeted migration; always 0 under the legacy
+    /// base-endpoint fallback).
+    pub migrated_in: usize,
     /// Seconds this shard existed (creation to retirement or end of
     /// run). Equals the horizon for every shard of a static fleet; the
     /// utilization denominators below use it so shards provisioned and
@@ -122,6 +126,12 @@ pub enum ScaleEventKind {
     DrainStart,
     /// A draining shard finished its last stream and left the fleet.
     Retire,
+    /// An injected failure forced the shard into Draining mid-run
+    /// (queued streams were re-routed; in-flight streams finish under
+    /// connection-draining semantics). Never recorded for a shard that
+    /// is already Draining or Retired — an outage during scale-in is a
+    /// no-op, so nothing double-retires.
+    Outage,
 }
 
 /// One autoscaling transition, timestamped in seconds since the first
@@ -193,6 +203,17 @@ pub struct LoadReport {
     /// releases, probes, autoscaler ticks) — the `disco bench`
     /// throughput numerator.
     pub events_processed: u64,
+    /// §4.3 migrated streams routed onto a specific shard's slot pool
+    /// (shard-targeted migration; 0 under the legacy base-endpoint
+    /// fallback).
+    pub migration_targeted: usize,
+    /// Shard-targeted migrations that found no admitting shard (every
+    /// replica cold/draining/retired) and fell back to the base
+    /// endpoint with the source shard's RTT offset inherited.
+    pub migration_fallbacks: usize,
+    /// Queued (never-admitted) streams re-routed off a shard killed by
+    /// an injected outage.
+    pub outage_requeues: usize,
 }
 
 impl LoadReport {
@@ -330,6 +351,25 @@ impl LoadReport {
             .filter(|e| e.kind == ScaleEventKind::ScaleOut)
             .count()
     }
+
+    /// Number of injected outages that actually took a shard down (an
+    /// outage landing on an already-draining/retired shard is a no-op
+    /// and records nothing).
+    pub fn outage_count(&self) -> usize {
+        self.scale_events
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::Outage)
+            .count()
+    }
+
+    /// Retire transitions for one shard — the double-retire invariant
+    /// checks this never exceeds 1.
+    pub fn retire_count(&self, shard: usize) -> usize {
+        self.scale_events
+            .iter()
+            .filter(|e| e.shard == shard && e.kind == ScaleEventKind::Retire)
+            .count()
+    }
 }
 
 /// QoE report plus the load metrics of the fleet run that produced it.
@@ -405,6 +445,7 @@ mod tests {
             busy_seconds: busy,
             admitted,
             slots,
+            migrated_in: 0,
             lifetime_seconds: 0.0, // stamped to the horizon by `load`
         }
     }
@@ -427,6 +468,9 @@ mod tests {
             scale_events: Vec::new(),
             cold_start_seconds: 0.0,
             events_processed: 0,
+            migration_targeted: 0,
+            migration_fallbacks: 0,
+            outage_requeues: 0,
         }
     }
 
@@ -513,6 +557,16 @@ mod tests {
             },
         ];
         assert_eq!(lr.scale_out_count(), 1);
+        assert_eq!(lr.outage_count(), 0);
+        assert_eq!(lr.retire_count(0), 1);
+        assert_eq!(lr.retire_count(1), 0);
+        lr.scale_events.push(ScaleEvent {
+            time: 9.0,
+            shard: 2,
+            kind: ScaleEventKind::Outage,
+        });
+        assert_eq!(lr.outage_count(), 1);
+        assert_eq!(lr.scale_out_count(), 1, "outages are not scale-outs");
     }
 
     #[test]

@@ -177,6 +177,209 @@ mod tests {
         assert!(migrated_total > 0, "property never exercised a migration");
     }
 
+    /// The §4.3 invariant at FLEET scope, under shard targeting and
+    /// mid-run shard failure: across randomized (K, balancer,
+    /// outage-time, migration-config) inputs, every delivered stream —
+    /// migrated or not, re-queued off a dead shard or not — keeps its
+    /// token accounting intact: no gaps (`tbts.len() + 1 ==
+    /// output_len`), no duplicates (decode-token conservation across
+    /// endpoints), order preserved (strictly positive perceived gaps).
+    /// This is `prop_migrated_stream_no_gaps_no_dups_order_preserved`
+    /// lifted from a single stream to a migration storm on a failing
+    /// fleet.
+    #[test]
+    fn prop_fleet_migration_storm_under_outage_preserves_stream_integrity() {
+        use crate::coordinator::policy::{Policy, PolicyKind};
+        use crate::cost::unified::Constraint;
+        use crate::profiles::{DeviceProfile, ServerProfile};
+        use crate::sim::balancer::BalancerKind;
+        use crate::sim::engine::{Scenario, SimConfig};
+        use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
+        use crate::trace::generator::{Arrival, WorkloadSpec};
+
+        let mut migrated_total = 0usize;
+        let mut requeued_total = 0usize;
+        check(
+            "fleet-outage-migration-integrity",
+            default_cases().clamp(16, 256),
+            |r| {
+                let k = 1 + r.below(4) as usize;
+                let balancers = BalancerKind::all();
+                let balancer = balancers[r.below(balancers.len() as u64) as usize];
+                let targeting = if r.chance(0.5) {
+                    MigrationTargeting::ShardTargeted
+                } else {
+                    MigrationTargeting::BaseEndpoint
+                };
+                let frac = r.f64();
+                let dead = r.below(k as u64) as usize;
+                let slots = 1 + r.below(2) as usize;
+                let bscale = r.f64() * 1.5;
+                let fault = r.chance(0.3);
+                let seed = r.next_u64();
+                (k, balancer, targeting, frac, dead, slots, bscale, fault, seed)
+            },
+            |&(k, balancer, targeting, frac, dead, slots, bscale, fault, seed)| {
+                let mut cfg = SimConfig {
+                    seed,
+                    ..Default::default()
+                };
+                cfg.migration.buffer_scale = bscale;
+                let sc = Scenario::new(
+                    ServerProfile::deepseek_v25(),
+                    DeviceProfile::xiaomi14_qwen0b5(),
+                    Constraint::Device,
+                    cfg,
+                );
+                // ~1.3× overload of the K-shard fleet, so the dead
+                // shard's queue is non-trivial at any outage time.
+                let gap = 1.0 / (0.9 * k as f64);
+                let trace = WorkloadSpec {
+                    arrival: Arrival::Fixed { gap },
+                    ..WorkloadSpec::alpaca(50)
+                }
+                .generate(seed ^ 0x57012);
+                let span = gap * 49.0;
+                let mut fleet = FleetConfig::sharded(k, slots, balancer)
+                    .with_migration_targeting(targeting)
+                    .with_outage(frac * span, dead);
+                if fault {
+                    fleet = fleet.with_shard_fault(
+                        dead,
+                        ShardFault {
+                            spike_prob: 0.3,
+                            spike_scale: 8.0,
+                        },
+                    );
+                }
+                let policy = Policy::simple(PolicyKind::StochD, 0.9, true);
+                let out = run_fleet(&sc, &trace, &policy, &fleet);
+                crate::prop_assert!(
+                    out.records.len() == trace.len(),
+                    "liveness: {} of {} requests resolved",
+                    out.records.len(),
+                    trace.len()
+                );
+                requeued_total += out.load.outage_requeues;
+                for rec in &out.records {
+                    if rec.migrated {
+                        migrated_total += 1;
+                    }
+                    crate::prop_assert!(rec.ttft > 0.0, "req {}: ttft {} <= 0", rec.id, rec.ttft);
+                    crate::prop_assert!(
+                        rec.tbts.len() as u32 + 1 == rec.output_len,
+                        "req {}: gap in stream — {} tbts for {} tokens",
+                        rec.id,
+                        rec.tbts.len(),
+                        rec.output_len
+                    );
+                    crate::prop_assert!(
+                        rec.tbts.iter().all(|&t| t > 0.0),
+                        "req {}: order violated (non-positive perceived gap)",
+                        rec.id
+                    );
+                    let decoded = rec.cost.server_decode_tokens + rec.cost.device_decode_tokens;
+                    crate::prop_assert!(
+                        decoded == rec.output_len as u64,
+                        "req {}: duplicate/lost decode tokens — {decoded} vs {}",
+                        rec.id,
+                        rec.output_len
+                    );
+                }
+                // Failure bookkeeping: the outage fired at most once, the
+                // dead shard retires at most once, shard-seconds do not
+                // leak past the per-shard lifetimes.
+                crate::prop_assert!(
+                    out.load.outage_count() <= 1,
+                    "outage fired {} times",
+                    out.load.outage_count()
+                );
+                for s in 0..out.load.shards.len() {
+                    crate::prop_assert!(
+                        out.load.retire_count(s) <= 1,
+                        "shard {s} retired {} times",
+                        out.load.retire_count(s)
+                    );
+                }
+                let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+                crate::prop_assert!(
+                    (out.load.shard_seconds - lifetimes).abs() < 1e-9,
+                    "shard-seconds leak: {} vs {}",
+                    out.load.shard_seconds,
+                    lifetimes
+                );
+                let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+                crate::prop_assert!(
+                    booked == out.load.migration_targeted,
+                    "booking mismatch: {booked} vs {}",
+                    out.load.migration_targeted
+                );
+                Ok(())
+            },
+        );
+        assert!(migrated_total > 0, "property never exercised a migration");
+        assert!(requeued_total > 0, "property never exercised an outage re-queue");
+    }
+
+    /// The full randomized storm grid (slow tier): every (K, balancer,
+    /// targeting) combination with denser traces and both outage timing
+    /// extremes, plus a bit-reproducibility check per cell.
+    #[test]
+    #[ignore = "exhaustive storm grid; run with --ignored or the slow-tests CI job"]
+    fn prop_fleet_migration_storm_full_grid() {
+        use crate::coordinator::policy::{Policy, PolicyKind};
+        use crate::cost::unified::Constraint;
+        use crate::profiles::{DeviceProfile, ServerProfile};
+        use crate::sim::balancer::BalancerKind;
+        use crate::sim::engine::{Scenario, SimConfig};
+        use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting};
+        use crate::trace::generator::{Arrival, WorkloadSpec};
+
+        let sc = Scenario::new(
+            ServerProfile::deepseek_v25(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Device,
+            SimConfig {
+                seed: 4242,
+                ..Default::default()
+            },
+        );
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        for k in [2usize, 4, 6] {
+            let gap = 1.0 / (0.9 * k as f64);
+            let trace = WorkloadSpec {
+                arrival: Arrival::Fixed { gap },
+                ..WorkloadSpec::alpaca(200)
+            }
+            .generate(777 ^ k as u64);
+            let span = gap * 199.0;
+            for balancer in BalancerKind::all() {
+                for targeting in [
+                    MigrationTargeting::BaseEndpoint,
+                    MigrationTargeting::ShardTargeted,
+                ] {
+                    for frac in [0.1, 0.5, 0.9] {
+                        let fleet = FleetConfig::sharded(k, 1, balancer)
+                            .with_migration_targeting(targeting)
+                            .with_outage(frac * span, k - 1);
+                        let a = run_fleet(&sc, &trace, &policy, &fleet);
+                        assert_eq!(a.records.len(), trace.len());
+                        for rec in &a.records {
+                            assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len);
+                            assert!(rec.tbts.iter().all(|&t| t > 0.0));
+                            assert_eq!(
+                                rec.cost.server_decode_tokens + rec.cost.device_decode_tokens,
+                                rec.output_len as u64
+                            );
+                        }
+                        let b = run_fleet(&sc, &trace, &policy, &fleet);
+                        assert_eq!(a.records, b.records, "{k}/{balancer}/{targeting}/{frac}");
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn passing_property_runs_all_cases() {
         let mut n = 0usize;

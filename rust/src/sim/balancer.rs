@@ -100,6 +100,40 @@ fn argmin_admitting(
     })
 }
 
+/// Pick the shard a §4.3 migrating stream re-prefills on (and the shard
+/// an outage victim re-queues to): **least-work-with-estimate** — the
+/// admitting shard minimizing `outstanding work + extra(i)`, where
+/// `extra` is the caller's per-shard cost estimate (typically the
+/// shard's RTT offset, or the expected re-prefill seconds on that
+/// shard). Ties break to the lowest index.
+///
+/// Unlike [`Balancer::pick`], this returns `None` when **no** shard
+/// admits (every replica cold, draining, or retired): a migrating stream
+/// must never be routed onto a dying shard, so the caller falls back to
+/// the base endpoint instead. Deterministic — consumes no randomness —
+/// so invoking it at resolve time never perturbs the fleet-level
+/// balancer stream.
+pub fn pick_reprefill_target(
+    shards: &[ShardView],
+    extra: impl Fn(usize) -> f64,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, s) in shards.iter().enumerate() {
+        if !s.admitting {
+            continue;
+        }
+        let score = s.work + extra(i);
+        let better = match best {
+            None => true,
+            Some((_, b)) => score.total_cmp(&b) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Selector for a [`Balancer`] implementation; the experiment grids and
 /// CLI flags carry this (Copy) tag rather than boxed trait objects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -443,6 +477,64 @@ mod tests {
         let mut b = Rng::new(33);
         assert_eq!(PowerOfTwoChoices.pick(&shards, &mut a), 1);
         assert_eq!(a.next_u64(), b.next_u64(), "rng must be untouched");
+    }
+
+    /// Shard-targeted re-prefill never selects a non-admitting shard —
+    /// even when the cold/draining shard is the emptiest — and the
+    /// estimate term can override raw outstanding work.
+    #[test]
+    fn reprefill_target_skips_non_admitting_and_weighs_estimate() {
+        let shards = vec![
+            cold(0, 0, 0.0), // emptiest, but cold: must never be picked
+            view(2, 5, 6.0),
+            view(1, 1, 2.0),
+        ];
+        assert_eq!(pick_reprefill_target(&shards, |_| 0.0), Some(2));
+        // A large per-shard estimate (e.g. cross-region RTT) flips the
+        // choice to the busier-but-closer shard.
+        assert_eq!(
+            pick_reprefill_target(&shards, |i| if i == 2 { 10.0 } else { 0.0 }),
+            Some(1)
+        );
+        // Exact ties break to the lowest admitting index.
+        let tied = vec![cold(0, 0, 1.0), view(0, 0, 1.0), view(0, 0, 1.0)];
+        assert_eq!(pick_reprefill_target(&tied, |_| 0.0), Some(1));
+        // Randomized sweep: the pick is always admitting, never panics.
+        let mut rng = Rng::new(77);
+        for _ in 0..300 {
+            let k = 1 + rng.below(6) as usize;
+            let shards: Vec<ShardView> = (0..k)
+                .map(|_| {
+                    let v = view(
+                        rng.below(4) as usize,
+                        rng.below(9) as usize,
+                        rng.f64() * 8.0,
+                    );
+                    if rng.chance(0.4) {
+                        ShardView {
+                            admitting: false,
+                            ..v
+                        }
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            match pick_reprefill_target(&shards, |i| i as f64 * 0.01) {
+                Some(p) => assert!(shards[p].admitting, "picked non-admitting {p}"),
+                None => assert!(shards.iter().all(|s| !s.admitting)),
+            }
+        }
+    }
+
+    /// The all-cold/draining fallback returns `None` (the caller falls
+    /// back to the base endpoint) instead of panicking — including the
+    /// empty-fleet degenerate.
+    #[test]
+    fn reprefill_target_all_cold_is_none_not_panic() {
+        let shards = vec![cold(1, 4, 5.0), cold(0, 2, 1.0)];
+        assert_eq!(pick_reprefill_target(&shards, |_| 0.0), None);
+        assert_eq!(pick_reprefill_target(&[], |_| 0.0), None);
     }
 
     #[test]

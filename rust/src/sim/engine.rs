@@ -213,6 +213,22 @@ pub(crate) struct ResourceTimes {
     pub device_grant: f64,
 }
 
+/// What a §4.3 migration did, surfaced so the fleet loop can book the
+/// migrated stream onto its target shard's slot pool.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MigrationInfo {
+    /// Endpoint generation moved to.
+    pub target: EndpointKind,
+    /// Absolute time the migrated stream's last token is generated —
+    /// when the target shard's occupancy releases.
+    pub end_abs: f64,
+    /// Sampled migration overhead (target re-prefill + RTT), the work
+    /// estimate the target shard carries while the stream runs.
+    pub t_m: f64,
+    /// Tokens the target re-prefilled (prompt + generated prefix).
+    pub reprefill_len: u32,
+}
+
 /// A resolved request trajectory plus the resource-release times the
 /// fleet loop needs to schedule.
 #[derive(Clone, Debug)]
@@ -223,10 +239,18 @@ pub(crate) struct Resolved {
     /// Absolute time the server admission slot frees (None when never
     /// admitted).
     pub server_release: Option<f64>,
+    /// Set when generation migrated endpoints mid-decode (§4.3).
+    pub migration: Option<MigrationInfo>,
 }
 
 /// Simulate one request given its resource-grant times. Times inside are
 /// relative to arrival; `ResourceTimes` converts through absolute time.
+///
+/// `migration_server` is the server endpoint a §4.3 server-bound
+/// re-prefill estimates and samples against — the *target shard* under
+/// shard-targeted migration (its RTT plus any predicted queue delay
+/// folded into `extra_rtt`). `None` falls back to `server`, the
+/// historical single-target behavior, byte-for-byte.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn resolve_request(
     req: &Request,
@@ -234,11 +258,13 @@ pub(crate) fn resolve_request(
     policy: &Policy,
     server: &ServerEndpoint,
     device: &DeviceEndpoint,
+    migration_server: Option<&ServerEndpoint>,
     planner: &MigrationPlanner,
     cfg: &SimConfig,
     times: ResourceTimes,
     rng: &mut Rng,
 ) -> Resolved {
+    let migration_server = migration_server.unwrap_or(server);
     let l = req.prompt_len;
     let n = req.output_len.min(cfg.gen_limit).max(1);
     let r_c = cfg.migration.consumption_rate;
@@ -331,6 +357,7 @@ pub(crate) fn resolve_request(
     // --- migration (§4.3) ----------------------------------------------
     let mut migrated = false;
     let mut migrate_at_idx = 0u32; // tokens produced by the source
+    let mut migration: Option<MigrationInfo> = None;
     if policy.migration {
         if let Some(constraint) = policy.constraint() {
             if let Some(target) = planner.direction(constraint, winner) {
@@ -349,7 +376,7 @@ pub(crate) fn resolve_request(
                     for i in 1..n {
                         let reprefill = l + i;
                         let t_exp = match target {
-                            EndpointKind::Server => server.expected_ttft(reprefill),
+                            EndpointKind::Server => migration_server.expected_ttft(reprefill),
                             EndpointKind::Device => device.expected_ttft(reprefill),
                         };
                         if let Some(plan) =
@@ -365,7 +392,7 @@ pub(crate) fn resolve_request(
                                 let t_m_actual = planner.config.rtt
                                     + match target {
                                         EndpointKind::Server => {
-                                            server.sample_ttft(reprefill, rng)
+                                            migration_server.sample_ttft(reprefill, rng)
                                         }
                                         EndpointKind::Device => {
                                             device.sample_ttft(reprefill, rng)
@@ -377,7 +404,7 @@ pub(crate) fn resolve_request(
                                 gen.push(ready);
                                 let gaps = match target {
                                     EndpointKind::Server => {
-                                        server.sample_gaps(reprefill, n - i - 1, rng)
+                                        migration_server.sample_gaps(reprefill, n - i - 1, rng)
                                     }
                                     EndpointKind::Device => {
                                         device.sample_gaps(reprefill, n - i - 1, rng)
@@ -406,6 +433,12 @@ pub(crate) fn resolve_request(
                                         cost.device_decode_tokens += (n - i) as u64;
                                     }
                                 }
+                                migration = Some(MigrationInfo {
+                                    target,
+                                    end_abs: req.arrival + *gen.last().unwrap(),
+                                    t_m: t_m_actual,
+                                    reprefill_len: reprefill,
+                                });
                                 break;
                             }
                         }
@@ -487,6 +520,7 @@ pub(crate) fn resolve_request(
         record,
         device_busy_until,
         server_release,
+        migration,
     }
 }
 
@@ -701,6 +735,94 @@ mod tests {
         let records = sc.run(&trace, &policy);
         assert!(records[1].ttft < records[0].ttft * 1.5);
         assert_eq!(records[1].device_queue_delay, 0.0);
+    }
+
+    /// Regression for the dying-shard migration fallback: the §4.3
+    /// re-prefill endpoint's RTT must flow into the migrated stream's
+    /// timing (the old fallback silently dropped the victim shard's
+    /// offset, undercounting migration latency). With Eq. 5 buffering
+    /// ablated (`buffer_scale = 0`, one-token floor) and a warm-up far
+    /// above the pacing slack, a +0.5 s RTT on the migration target
+    /// shifts the sampled `t_m`, the last generated token, and the
+    /// delivered completion time by exactly 0.5 s — same handoff index,
+    /// same cost split, same draws.
+    #[test]
+    fn migration_endpoint_rtt_shifts_migrated_stream_by_exactly_delta() {
+        let cfg = SimConfig {
+            migration: MigrationConfig {
+                enabled: true,
+                consumption_rate: 5.0,
+                rtt: 0.05,
+                buffer_scale: 0.0,
+            },
+            ..Default::default()
+        };
+        // Device decode far above server decode: Eq. 4 always favors
+        // migrating device-won streams onto the server.
+        let costs = CostParams {
+            server_prefill: 1e-7,
+            server_decode: 6e-7,
+            device_prefill: 1.2e-7,
+            device_decode: 5e-6,
+        };
+        let planner = MigrationPlanner::new(cfg.migration, costs);
+        let policy = Policy::simple(crate::coordinator::policy::PolicyKind::StochD, 1.0, true);
+        let src = ServerEndpoint::new(ServerProfile::gpt4o_mini());
+        let device = DeviceEndpoint::new(DeviceProfile::pixel7pro_bloom560m());
+        let req = Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 64,
+            output_len: 32,
+        };
+        let pre = PreDrawn {
+            decision: Decision::Both { device_wait: 0.0 },
+            server_sample: Some(9.0), // server loses the race decisively
+            dev_prefill_dur: 0.05,
+        };
+        let times = ResourceTimes {
+            server_admit: None, // cancelled in queue: device won first
+            device_grant: 0.0,
+        };
+        let resolve_with = |rtt: f64| {
+            let target = ServerEndpoint::with_rtt(ServerProfile::gpt4o_mini(), rtt);
+            let mut rng = Rng::new(42);
+            resolve_request(
+                &req,
+                &pre,
+                &policy,
+                &src,
+                &device,
+                Some(&target),
+                &planner,
+                &cfg,
+                times,
+                &mut rng,
+            )
+        };
+        let a = resolve_with(5.0);
+        let b = resolve_with(5.5);
+        assert!(a.record.migrated && b.record.migrated, "both must migrate");
+        let (ma, mb) = (a.migration.unwrap(), b.migration.unwrap());
+        assert_eq!(ma.target, EndpointKind::Server);
+        assert_eq!(ma.reprefill_len, mb.reprefill_len, "handoff index must match");
+        // Identical token split ⇒ identical cost meters.
+        assert_eq!(a.record.cost, b.record.cost);
+        assert!(
+            (mb.t_m - ma.t_m - 0.5).abs() < 1e-9,
+            "t_m must shift by the RTT delta: {} vs {}",
+            ma.t_m,
+            mb.t_m
+        );
+        assert!((mb.end_abs - ma.end_abs - 0.5).abs() < 1e-9);
+        let done = |r: &Resolved| r.record.ttft + r.record.tbts.iter().sum::<f64>();
+        assert!(
+            (done(&b) - done(&a) - 0.5).abs() < 1e-9,
+            "delivered completion must inherit the RTT delta: {} vs {}",
+            done(&a),
+            done(&b)
+        );
+        assert!(b.record.delay_num >= a.record.delay_num);
     }
 
     #[test]

@@ -47,6 +47,34 @@
 //! (or no config at all) no evaluation events are scheduled and the run
 //! is byte-identical to the static PR-2 fleet.
 //!
+//! # Migration-aware shard targeting
+//!
+//! With [`MigrationTargeting::ShardTargeted`], a §4.3 migration that
+//! moves generation *onto* the server no longer re-prefills on an
+//! abstract base endpoint: the resolve step asks the balancer layer for
+//! a target shard ([`crate::sim::balancer::pick_reprefill_target`] —
+//! least-work-with-estimate over admitting shards), estimates `t_m`
+//! against that shard's endpoint plus its predicted queue delay, and
+//! books the migrated stream into the shard's slot pool (a real slot
+//! when one is free, batch-join over-commit otherwise) until the stream
+//! ends (`MigrationRelease`). When no shard admits, the re-prefill
+//! falls back to the base endpoint with the source shard's RTT offset
+//! inherited. The default, [`MigrationTargeting::BaseEndpoint`], keeps
+//! the PR-3 single-target behavior (byte-for-byte up to the dying-shard
+//! RTT fix noted on the variant).
+//!
+//! # Failure injection
+//!
+//! Per-shard degradation ([`ShardFault`]: an extra TTFT spike mixture
+//! applied to requests balanced onto that shard, drawn from a dedicated
+//! fault stream) and scheduled mid-run outages ([`ShardOutage`]: at a
+//! given time since the first arrival, the shard is forced into
+//! Draining — queued streams re-route to surviving shards, in-flight
+//! streams finish under connection-draining semantics, then the shard
+//! retires). An outage on an already-draining or retired shard is a
+//! no-op, so an outage racing autoscaler scale-in can never
+//! double-retire a shard.
+//!
 //! The per-request trajectory itself (race, cancellation, migration,
 //! delivery smoothing, cost metering) is [`crate::sim::engine`]'s
 //! `resolve_request` — one code path shared with the legacy replay,
@@ -61,14 +89,15 @@
 
 use crate::coordinator::migration::MigrationPlanner;
 use crate::coordinator::policy::Policy;
-use crate::endpoint::ServerEndpoint;
+use crate::cost::unified::Constraint;
+use crate::endpoint::{EndpointKind, ServerEndpoint};
 use crate::metrics::{
     LoadReport, RequestRecord, ScaleEvent, ScaleEventKind, ShardCountSample, ShardLoad,
 };
 use crate::sim::autoscaler::{
     AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
 };
-use crate::sim::balancer::{Balancer, BalancerKind, ShardView};
+use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardView};
 use crate::sim::engine::{pre_draw, resolve_request, PreDrawn, ResourceTimes, Scenario};
 use crate::stats::describe::Summary;
 use crate::trace::Trace;
@@ -76,9 +105,88 @@ use crate::util::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
+/// How a §4.3 migration that moves generation onto the server picks its
+/// re-prefill target.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MigrationTargeting {
+    /// The historical single-target behavior: re-prefill estimates and
+    /// samples come from the source shard's endpoint (or the base
+    /// endpoint for device-only streams), and the migrated stream
+    /// occupies no shard. Byte-identical to the PR-3 fleet except for
+    /// the dying-shard fix: a stream resolving on a draining/retired
+    /// shard now keeps that shard's RTT offset instead of silently
+    /// dropping it (see the engine regression test) — identical
+    /// whenever shard RTTs are zero or no shard is draining at resolve
+    /// time.
+    #[default]
+    BaseEndpoint,
+    /// Least-work-with-estimate shard targeting: the resolve step picks
+    /// an admitting shard via
+    /// [`crate::sim::balancer::pick_reprefill_target`], folds the
+    /// shard's RTT and predicted queue delay into the `t_m` estimate,
+    /// and books the migrated stream into that shard's slot pool until
+    /// the stream ends. Falls back to the base endpoint (source RTT
+    /// inherited) when no shard admits.
+    ShardTargeted,
+}
+
+impl MigrationTargeting {
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MigrationTargeting::BaseEndpoint => "base-endpoint",
+            MigrationTargeting::ShardTargeted => "shard-targeted",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<MigrationTargeting> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "base" | "base-endpoint" | "legacy" => MigrationTargeting::BaseEndpoint,
+            "shard" | "shard-targeted" | "targeted" => MigrationTargeting::ShardTargeted,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for MigrationTargeting {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-shard degradation: an *additional* TTFT spike mixture applied to
+/// requests balanced onto the shard, on top of the base server profile
+/// (the §2.3 partial-backend-failure scenario: one replica degrades, the
+/// fleet does not). Spike draws come from a dedicated fault stream, so a
+/// fleet with no faults configured is byte-identical to one without the
+/// feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardFault {
+    /// Probability an arrival on this shard hits the degradation spike.
+    pub spike_prob: f64,
+    /// Median multiplier applied to the pre-drawn prefill sample during
+    /// a spike (log-normal with σ = 0.5, like the profile's own mixture).
+    pub spike_scale: f64,
+}
+
+/// A scheduled mid-run shard outage: at `at` seconds after the first
+/// arrival, the shard is forced into Draining — queued streams re-route
+/// to surviving shards, in-flight streams finish (connection draining),
+/// then the shard retires. A no-op if the shard is already draining,
+/// retired, or not (yet) provisioned.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardOutage {
+    /// Seconds after the first arrival at which the shard fails.
+    pub at: f64,
+    /// Index of the shard to kill.
+    pub shard: usize,
+}
+
 /// Fleet-level resource configuration: the server fleet topology (shard
 /// count, per-shard admission slots, optional per-shard RTT offsets), the
-/// balancer fronting it, and device single-flight modeling.
+/// balancer fronting it, device single-flight modeling, migration
+/// targeting, and failure injection.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
     /// Concurrent admissions *per shard*; `None` = unlimited (the paper's
@@ -101,6 +209,16 @@ pub struct FleetConfig {
     /// byte-identical to the PR-2 fleet (no evaluation events are
     /// scheduled at all).
     pub autoscale: Option<AutoscaleConfig>,
+    /// How server-bound §4.3 re-prefills pick their target. The default
+    /// ([`MigrationTargeting::BaseEndpoint`]) is the PR-3 behavior.
+    pub migration_targeting: MigrationTargeting,
+    /// Per-shard degradation overrides, indexed by shard (`None` =
+    /// healthy). Shorter than `shards` is padded with `None`; shards
+    /// provisioned later by the autoscaler are always healthy.
+    pub shard_faults: Vec<Option<ShardFault>>,
+    /// Scheduled mid-run shard outages (times relative to the first
+    /// arrival). Empty = no failure injection, byte-identical to PR-3.
+    pub outages: Vec<ShardOutage>,
 }
 
 impl FleetConfig {
@@ -114,6 +232,9 @@ impl FleetConfig {
             balancer: BalancerKind::RoundRobin,
             shard_rtts: Vec::new(),
             autoscale: None,
+            migration_targeting: MigrationTargeting::BaseEndpoint,
+            shard_faults: Vec::new(),
+            outages: Vec::new(),
         }
     }
 
@@ -130,11 +251,9 @@ impl FleetConfig {
     pub fn sharded(shards: usize, server_slots: usize, balancer: BalancerKind) -> FleetConfig {
         FleetConfig {
             server_slots: Some(server_slots.max(1)),
-            device_queueing: true,
             shards: shards.max(1),
             balancer,
-            shard_rtts: Vec::new(),
-            autoscale: None,
+            ..FleetConfig::replay(true)
         }
     }
 
@@ -148,6 +267,30 @@ impl FleetConfig {
     /// (warm) replica count.
     pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> FleetConfig {
         self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Select how §4.3 server-bound re-prefills are targeted.
+    pub fn with_migration_targeting(mut self, targeting: MigrationTargeting) -> FleetConfig {
+        self.migration_targeting = targeting;
+        self
+    }
+
+    /// Degrade one shard with an extra TTFT spike mixture. Faults on
+    /// indices at or beyond the static `shards` count are dropped at run
+    /// time (autoscaler-provisioned shards are always healthy).
+    pub fn with_shard_fault(mut self, shard: usize, fault: ShardFault) -> FleetConfig {
+        if self.shard_faults.len() <= shard {
+            self.shard_faults.resize(shard + 1, None);
+        }
+        self.shard_faults[shard] = Some(fault);
+        self
+    }
+
+    /// Schedule a mid-run shard outage (`at` seconds after the first
+    /// arrival).
+    pub fn with_outage(mut self, at: f64, shard: usize) -> FleetConfig {
+        self.outages.push(ShardOutage { at, shard });
         self
     }
 }
@@ -185,6 +328,15 @@ enum EvKind {
     /// Cold shard `.0` finished loading its model: unfreeze its pool and
     /// admit anything already queued on it.
     ShardWarm(usize),
+    /// Injected failure: force shard `.0` into Draining, re-route its
+    /// queued streams, and let in-flight streams finish (connection
+    /// draining). No-op on an already draining/retired/unprovisioned
+    /// shard.
+    Outage(usize),
+    /// Request `.0`'s migrated stream (re-prefilled onto a target shard
+    /// under [`MigrationTargeting::ShardTargeted`]) ended: release its
+    /// occupancy on that shard and retire its work estimate.
+    MigrationRelease(usize),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -332,6 +484,46 @@ impl Pool {
     fn live_queued(&self) -> usize {
         self.live
     }
+
+    /// Occupy one unit for a §4.3 migrated-in stream. Takes a real slot
+    /// when capacity is spare; otherwise joins the running batch
+    /// over-capacity (the handoff time was already committed, so the
+    /// stream cannot queue — it squeezes into the continuous batch and
+    /// is visible to balancers through `in_use`/`work`). Returns whether
+    /// a real slot was taken, which decides the matching release path.
+    fn acquire_overflow(&mut self) -> bool {
+        let real = match self.cap {
+            Some(cap) => self.in_use < cap,
+            None => true,
+        };
+        self.in_use += 1;
+        real
+    }
+
+    /// Release an over-capacity (batch-join) unit. Real slots may have
+    /// freed *underneath* the over-commit in the meantime (their release
+    /// saw an empty queue and simply decremented), leaving this unit
+    /// load-bearing — so after the decrement, any spare capacity admits
+    /// the next live queued entry exactly like a real-slot release would
+    /// have. Skipping that admission would strand the queue forever: no
+    /// later release event exists on the shard.
+    fn release_overflow(&mut self, cancelled: &[bool]) -> Option<usize> {
+        self.in_use = self.in_use.saturating_sub(1);
+        self.try_admit(cancelled)
+    }
+
+    /// Remove every live queued entry (outage re-routing); cancelled
+    /// entries are dropped on the way. Leaves the queue empty.
+    fn drain_queue(&mut self, cancelled: &[bool]) -> Vec<usize> {
+        let mut live = Vec::with_capacity(self.live);
+        while let Some(j) = self.queue.pop_front() {
+            if !cancelled[j] {
+                live.push(j);
+            }
+        }
+        self.live = 0;
+        live
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -347,6 +539,10 @@ struct ReqState {
     server_admit: Option<f64>,
     device_grant: Option<f64>,
     resolved: bool,
+    /// The pre-fault prefill draw, kept when a shard fault degraded
+    /// `pre.server_sample` — an outage re-route restores it (the spike
+    /// belonged to the dead shard, not the stream).
+    base_sample: Option<f64>,
 }
 
 /// One server shard: a bounded slot pool plus its load accounting and
@@ -364,7 +560,11 @@ struct ShardState {
     busy: f64,
     delays: Vec<f64>,
     admitted: usize,
-    /// Cold → Warm → Draining → Retired under autoscaling.
+    /// §4.3 migrated streams routed into this shard's pool
+    /// (shard-targeted migration only).
+    migrated_in: usize,
+    /// Cold → Warm → Draining → Retired under autoscaling (outages force
+    /// Draining mid-run).
     phase: LifecyclePhase,
     /// Absolute creation time (the first arrival for initial shards), the
     /// start of this shard's shard-seconds accrual.
@@ -386,6 +586,7 @@ impl ShardState {
             busy: 0.0,
             delays: Vec::new(),
             admitted: 0,
+            migrated_in: 0,
             phase,
             created_at,
             ready_at,
@@ -436,12 +637,24 @@ struct FleetSim<'a> {
     /// Autoscaler decision stream, disjoint from the balancer stream and
     /// every per-request stream.
     arng: Rng,
+    /// Fault-injection stream (per-shard degradation spikes), disjoint
+    /// from all of the above; never drawn when no fault is configured,
+    /// so healthy fleets stay byte-identical.
+    frng: Rng,
     /// Requests resolved so far; evaluation events stop rescheduling once
     /// every request resolved, so the event loop terminates.
     resolved_count: usize,
     scale_events: Vec<ScaleEvent>,
     timeline: Vec<ShardCountSample>,
     cold_start_seconds: f64,
+    /// Shard occupancy held by request `i`'s migrated-in stream
+    /// (shard-targeted migration): the target shard, whether a real slot
+    /// was taken, and the booked work estimate — released at
+    /// `MigrationRelease`.
+    migration_booking: Vec<Option<(usize, bool, f64)>>,
+    migration_targeted: usize,
+    migration_fallbacks: usize,
+    outage_requeues: usize,
     /// First arrival (absolute); shard-seconds and report timestamps are
     /// measured from here.
     t0: f64,
@@ -481,6 +694,21 @@ impl<'a> FleetSim<'a> {
             sh.created_at = self.t0;
         }
         self.record_timeline(self.t0);
+        // Outage times are relative to the first arrival. Scheduling them
+        // before the first autoscaler evaluation gives outage events the
+        // lower sequence number at any shared timestamp, so an outage
+        // always fires before an autoscaler evaluation scheduled for the
+        // same instant (arrivals, pushed first of all, still precede
+        // both — a request arriving exactly at the outage instant is
+        // balanced, then immediately re-routed with the rest of the
+        // queue).
+        if !trace.requests.is_empty() {
+            for (idx, o) in self.fleet.outages.clone().iter().enumerate() {
+                if o.at.is_finite() {
+                    self.push(self.t0 + o.at.max(0.0), EvKind::Outage(idx));
+                }
+            }
+        }
         if self.scaler.is_some() && !trace.requests.is_empty() {
             let interval = self
                 .autoscale
@@ -491,13 +719,16 @@ impl<'a> FleetSim<'a> {
         }
 
         while let Some(ev) = self.heap.pop() {
-            // Autoscaler bookkeeping (evaluation ticks, warm-ups) does
-            // not advance the workload horizon: a cold start completing
-            // after the last token would otherwise dilute utilization
-            // and over-bill shard-seconds for every surviving shard.
-            // Work a warm-up *admits* still lands in the horizon through
-            // its own resolve/release events.
-            let bookkeeping = matches!(ev.kind, EvKind::AutoscaleEval | EvKind::ShardWarm(_));
+            // Autoscaler/failure bookkeeping (evaluation ticks, warm-ups,
+            // outage injections) does not advance the workload horizon: a
+            // cold start completing after the last token would otherwise
+            // dilute utilization and over-bill shard-seconds for every
+            // surviving shard. Work a warm-up *admits* still lands in the
+            // horizon through its own resolve/release events.
+            let bookkeeping = matches!(
+                ev.kind,
+                EvKind::AutoscaleEval | EvKind::ShardWarm(_) | EvKind::Outage(_)
+            );
             if ev.time.is_finite() && !bookkeeping {
                 self.horizon = self.horizon.max(ev.time);
             }
@@ -522,6 +753,7 @@ impl<'a> FleetSim<'a> {
                         server_admit: None,
                         device_grant: None,
                         resolved: false,
+                        base_sample: None,
                     });
                     if needs_server {
                         let s = self.assign_shard(i);
@@ -608,6 +840,26 @@ impl<'a> FleetSim<'a> {
                     }
                 }
                 EvKind::ShardWarm(s) => self.warm_shard(s, ev.time),
+                EvKind::Outage(idx) => {
+                    let shard = self.fleet.outages[idx].shard;
+                    self.inject_outage(shard, ev.time);
+                }
+                EvKind::MigrationRelease(i) => {
+                    let (s, real_slot, work) = self.migration_booking[i]
+                        .take()
+                        .expect("migration release implies a booking");
+                    self.shards[s].work -= work;
+                    let next = if real_slot {
+                        self.shards[s].pool.release(&self.server_cancelled)
+                    } else {
+                        self.shards[s].pool.release_overflow(&self.server_cancelled)
+                    };
+                    if let Some(j) = next {
+                        self.on_server_admit(j, ev.time);
+                        self.try_resolve(j, ev.time);
+                    }
+                    self.maybe_retire(s, ev.time);
+                }
             }
         }
 
@@ -644,6 +896,7 @@ impl<'a> FleetSim<'a> {
                     busy_seconds: s.busy,
                     admitted: s.admitted,
                     slots: s.pool.cap,
+                    migrated_in: s.migrated_in,
                     lifetime_seconds: lifetime,
                 }
             })
@@ -680,6 +933,9 @@ impl<'a> FleetSim<'a> {
             cold_start_seconds: self.cold_start_seconds,
             shard_seconds,
             events_processed: self.seq,
+            migration_targeted: self.migration_targeted,
+            migration_fallbacks: self.migration_fallbacks,
+            outage_requeues: self.outage_requeues,
         };
         FleetOutcome { records, load }
     }
@@ -692,30 +948,39 @@ impl<'a> FleetSim<'a> {
         self.states[i].as_mut().expect("state exists after arrival")
     }
 
-    /// Balance server-bound request `i` onto a shard and book its work
-    /// estimate. With one shard the balancer (and its RNG stream) is
-    /// bypassed entirely, preserving byte-identical K=1 replays. Cold,
-    /// draining, and retired shards are flagged non-admitting; should
-    /// every shard be non-admitting (unreachable while the autoscaler
-    /// keeps `min_shards ≥ 1` warm, but handled defensively), the
-    /// request joins the cold shard that becomes ready soonest.
+    /// Rebuild the reusable per-shard snapshot buffer (`self.views`);
+    /// returns whether any shard currently admits new work.
+    fn snapshot_views(&mut self) -> bool {
+        self.views.clear();
+        let mut any_admitting = false;
+        for sh in &self.shards {
+            let admitting = sh.phase == LifecyclePhase::Warm;
+            any_admitting |= admitting;
+            self.views.push(ShardView {
+                in_use: sh.pool.in_use,
+                queued: sh.pool.live_queued(),
+                slots: sh.pool.cap,
+                work: sh.work,
+                admitting,
+            });
+        }
+        any_admitting
+    }
+
+    /// Balance server-bound request `i` onto a shard, apply any
+    /// configured per-shard degradation to its pre-drawn sample, and
+    /// book its work estimate. With one shard the balancer (and its RNG
+    /// stream) is bypassed entirely, preserving byte-identical K=1
+    /// replays. Cold, draining, and retired shards are flagged
+    /// non-admitting; should every shard be non-admitting (unreachable
+    /// while the autoscaler keeps `min_shards ≥ 1` warm, but handled
+    /// defensively), the request joins the cold shard that becomes
+    /// ready soonest.
     fn assign_shard(&mut self, i: usize) -> usize {
         let s = if self.shards.len() == 1 {
             0
         } else {
-            self.views.clear();
-            let mut any_admitting = false;
-            for sh in &self.shards {
-                let admitting = sh.phase == LifecyclePhase::Warm;
-                any_admitting |= admitting;
-                self.views.push(ShardView {
-                    in_use: sh.pool.in_use,
-                    queued: sh.pool.live_queued(),
-                    slots: sh.pool.cap,
-                    work: sh.work,
-                    admitting,
-                });
-            }
+            let any_admitting = self.snapshot_views();
             if any_admitting {
                 let pick = self.balancer.pick(&self.views, &mut self.brng);
                 assert!(
@@ -735,17 +1000,33 @@ impl<'a> FleetSim<'a> {
             }
         };
         self.shard_of[i] = Some(s);
-        let sample = self
+        let mut sample = self
             .state(i)
             .pre
             .server_sample
             .expect("server users have a sample");
+        // Per-shard degradation: landing on a faulty shard may multiply
+        // the pre-drawn prefill sample by an extra spike (drawn from the
+        // dedicated fault stream). Applied here — before the work
+        // booking, the first-token probe, or the resolve step read the
+        // sample — so every consumer sees the degraded value, the
+        // LeastWork/queue-delay oracles included.
+        if let Some(&Some(f)) = self.fleet.shard_faults.get(s) {
+            if self.frng.chance(f.spike_prob) {
+                let base = sample;
+                sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
+                let st = self.state_mut(i);
+                st.pre.server_sample = Some(sample);
+                st.base_sample = Some(base);
+            }
+        }
         self.shards[s].work += sample;
         s
     }
 
     /// The cold shard with the earliest warm-up time (ties to the lowest
-    /// index); degrades to shard 0 when nothing is even cold.
+    /// index); degrades to the first non-retired shard — never a retired
+    /// pool, which must take no new work — when nothing is even cold.
     fn earliest_ready_shard(&self) -> usize {
         let mut best: Option<usize> = None;
         for (i, sh) in self.shards.iter().enumerate() {
@@ -760,7 +1041,14 @@ impl<'a> FleetSim<'a> {
                 best = Some(i);
             }
         }
-        best.unwrap_or(0)
+        best.unwrap_or_else(|| {
+            // `maybe_retire` keeps at least one shard non-retired, so
+            // this position exists whenever the fleet has run at all.
+            self.shards
+                .iter()
+                .position(|sh| sh.phase != LifecyclePhase::Retired)
+                .unwrap_or(0)
+        })
     }
 
     fn on_server_admit(&mut self, i: usize, now: f64) {
@@ -949,7 +1237,24 @@ impl<'a> FleetSim<'a> {
     /// A draining shard retires once its last admission released and no
     /// live entry remains queued; retirement stops shard-seconds accrual
     /// (and drops the shard from the timeline's provisioned count).
+    ///
+    /// The **last** non-retired replica never retires: with every other
+    /// shard gone (an outage on a K=1 fleet, or a fleet-wide failure),
+    /// future arrivals still have to land somewhere, so the survivor
+    /// keeps draining — and billing shard-seconds — to the end of the
+    /// run instead of serving traffic "after" retirement (which would
+    /// put busy-seconds past its lifetime and push utilization over 1).
+    /// Autoscaler scale-in always leaves `min_shards ≥ 1` warm, so this
+    /// guard never fires on the PR-3 paths.
     fn maybe_retire(&mut self, s: usize, now: f64) {
+        let others_alive = self
+            .shards
+            .iter()
+            .enumerate()
+            .any(|(i, sh)| i != s && sh.phase != LifecyclePhase::Retired);
+        if !others_alive {
+            return;
+        }
         let sh = &mut self.shards[s];
         let drained = sh.phase == LifecyclePhase::Draining
             && sh.pool.in_use == 0
@@ -965,6 +1270,113 @@ impl<'a> FleetSim<'a> {
             kind: ScaleEventKind::Retire,
         });
         self.record_timeline(now);
+    }
+
+    /// Injected failure: force shard `s` into Draining, re-route its
+    /// queued streams, and let in-flight admissions finish (connection
+    /// draining) before the shard retires. Idempotent by construction —
+    /// a shard already Draining (e.g. an autoscaler scale-in victim) or
+    /// Retired is left untouched, so an outage racing a drain can never
+    /// double-retire or double-bill shard-seconds.
+    fn inject_outage(&mut self, s: usize, now: f64) {
+        if s >= self.shards.len()
+            || matches!(
+                self.shards[s].phase,
+                LifecyclePhase::Draining | LifecyclePhase::Retired
+            )
+        {
+            return;
+        }
+        // A cold victim's pending warm-up becomes a no-op (`warm_shard`
+        // guards on phase); unfreeze the pool so drain semantics — serve
+        // whatever cannot be re-routed — still apply.
+        self.shards[s].phase = LifecyclePhase::Draining;
+        self.shards[s].pool.frozen = false;
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::Outage,
+        });
+        let victims = self.shards[s].pool.drain_queue(&self.server_cancelled);
+        for j in victims {
+            self.requeue(j, s, now);
+        }
+        // Single-shard corner: victims with nowhere to go stayed on the
+        // draining shard — admit what spare capacity allows so the run
+        // always terminates (a drained-but-queued cold pool would
+        // otherwise never grant).
+        while let Some(j) = self.shards[s].pool.try_admit(&self.server_cancelled) {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
+        self.record_timeline(now);
+        self.maybe_retire(s, now);
+    }
+
+    /// Re-route a queued (never-admitted) stream off a failed shard —
+    /// the token-level view of "migrate the dead shard's pending work".
+    /// The placement follows the fleet's migration-targeting mode:
+    /// least-work-with-estimate under `ShardTargeted` (victims spread
+    /// across survivors, each placement visible to the next), the first
+    /// admitting shard under `BaseEndpoint` (the paper's "one server
+    /// target" view — every victim piles onto the same replacement).
+    /// With no admitting shard anywhere the victim joins the
+    /// soonest-ready cold shard; with no live alternative at all it
+    /// stays on the draining source, which serves out its queue.
+    fn requeue(&mut self, j: usize, from: usize, now: f64) {
+        let sample = self
+            .state(j)
+            .pre
+            .server_sample
+            .expect("server users have a sample");
+        let any_admitting = self.snapshot_views();
+        let target = if any_admitting {
+            match self.fleet.migration_targeting {
+                MigrationTargeting::ShardTargeted => {
+                    pick_reprefill_target(&self.views, |i| self.shards[i].rtt)
+                        .expect("an admitting shard exists")
+                }
+                MigrationTargeting::BaseEndpoint => self
+                    .views
+                    .iter()
+                    .position(|v| v.admitting)
+                    .expect("an admitting shard exists"),
+            }
+        } else {
+            let cold = self.earliest_ready_shard();
+            if self.shards[cold].phase == LifecyclePhase::Cold {
+                cold
+            } else {
+                from
+            }
+        };
+        self.shard_of[j] = Some(target);
+        self.shards[from].work -= sample;
+        // A spike drawn from the dead shard's fault belongs to that
+        // shard, not the stream: moving to a new home restores the
+        // pre-fault draw and rolls the *target's* fault instead (all
+        // from the fault stream, so healthy configs are untouched).
+        let mut new_sample = sample;
+        if target != from {
+            if let Some(base) = self.state(j).base_sample {
+                new_sample = base;
+                self.state_mut(j).base_sample = None;
+            }
+            if let Some(&Some(f)) = self.fleet.shard_faults.get(target) {
+                if self.frng.chance(f.spike_prob) {
+                    let base = new_sample;
+                    new_sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
+                    self.state_mut(j).base_sample = Some(base);
+                }
+            }
+            self.state_mut(j).pre.server_sample = Some(new_sample);
+            self.outage_requeues += 1;
+        }
+        self.shards[target].work += new_sample;
+        if self.shards[target].pool.acquire(j) {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
     }
 
     /// Append a shard-count sample if the counts changed since the last
@@ -1046,18 +1458,50 @@ impl<'a> FleetSim<'a> {
             }
             pre.server_sample = Some(sample + self.shards[s].rtt);
         }
-        // Every shard shares the base profile, so the endpoint handed to
-        // `resolve_request` only distinguishes shards through its RTT —
-        // which feeds the §4.3 migration re-prefill estimate. A draining
-        // or retired shard must not be the re-prefill target (no new
-        // work routes to a dying shard), so those requests fall back to
-        // the base endpoint, i.e. a healthy replica. Static fleets are
-        // always Warm, preserving byte parity.
+        // Shard-targeted §4.3 re-prefill: ask the balancer layer for the
+        // least-work admitting shard (deterministic, no RNG consumed —
+        // the fleet balancer stream is untouched), then fold that
+        // shard's RTT *and* its predicted admission delay into the
+        // endpoint the migration planner estimates and samples `t_m`
+        // against. Only server-bound migrations (device-constrained
+        // policies) have a shard to target; when every shard is
+        // cold/draining the pick is None and the re-prefill falls back
+        // to the source endpoint below (RTT inherited), counted in
+        // `migration_fallbacks`.
+        let (mig_pick, mig_ep) = if self.fleet.migration_targeting
+            == MigrationTargeting::ShardTargeted
+            && self.policy.migration
+            && self.policy.constraint() == Some(Constraint::Device)
+        {
+            self.snapshot_views();
+            let pick = pick_reprefill_target(&self.views, |t| self.shards[t].rtt);
+            let ep = match pick {
+                Some(t) => {
+                    let mut ep = self.server_endpoints[t].clone();
+                    ep.extra_rtt += self
+                        .planner
+                        .queue_delay_estimate(self.shards[t].work, self.shards[t].pool.cap);
+                    ep
+                }
+                None => match shard {
+                    Some(s) => self.server_endpoints[s].clone(),
+                    None => self.scenario.server.clone(),
+                },
+            };
+            (pick, Some(ep))
+        } else {
+            (None, None)
+        };
+        // Every shard shares the base profile, so the source endpoint
+        // only distinguishes shards through its RTT. The owning shard's
+        // endpoint is used even when that shard is draining or retired:
+        // under the legacy base-endpoint migration fallback the victim's
+        // RTT offset must still be inherited (dropping it silently
+        // undercounted migration latency — see the engine regression
+        // test). Static fleets are always Warm, preserving byte parity.
         let server_ep = match shard {
-            Some(s) if self.shards[s].phase == LifecyclePhase::Warm => {
-                &self.server_endpoints[s]
-            }
-            _ => &self.scenario.server,
+            Some(s) => &self.server_endpoints[s],
+            None => &self.scenario.server,
         };
         let resolved = resolve_request(
             req,
@@ -1065,6 +1509,7 @@ impl<'a> FleetSim<'a> {
             self.policy,
             server_ep,
             &self.scenario.device,
+            mig_ep.as_ref(),
             &self.planner,
             &self.scenario.cfg,
             times,
@@ -1102,6 +1547,33 @@ impl<'a> FleetSim<'a> {
             }
         }
 
+        // Shard-targeted migration booking: the migrated stream joins
+        // its target shard's slot pool (a real slot when one is spare,
+        // batch-join over-commit otherwise) and carries its sampled
+        // `t_m` as outstanding work until the stream ends — so balancers
+        // and the autoscaler see migrated-in load, and a draining target
+        // cannot retire from under a stream migrating onto it. Booked at
+        // resolve time (slightly before the handoff instant) precisely
+        // to pin the target alive through the handoff.
+        if let Some(info) = resolved.migration {
+            if info.target == EndpointKind::Server {
+                match mig_pick {
+                    Some(t) => {
+                        let real_slot = self.shards[t].pool.acquire_overflow();
+                        self.shards[t].work += info.t_m;
+                        self.shards[t].migrated_in += 1;
+                        self.migration_booking[i] = Some((t, real_slot, info.t_m));
+                        self.migration_targeted += 1;
+                        self.push(info.end_abs.max(now), EvKind::MigrationRelease(i));
+                    }
+                    None if mig_ep.is_some() => self.migration_fallbacks += 1,
+                    // Legacy base-endpoint targeting: no shard is
+                    // involved, nothing to book.
+                    None => {}
+                }
+            }
+        }
+
         self.records[i] = Some(resolved.record);
     }
 }
@@ -1135,6 +1607,10 @@ pub fn run_fleet(
     // are clamped sane.
     let mut rtts = fleet.shard_rtts.clone();
     rtts.resize(shard_count, 0.0);
+    // Faults are padded/truncated to the *static* shard count: shards
+    // the autoscaler provisions later are always healthy, as documented.
+    let mut faults = fleet.shard_faults.clone();
+    faults.resize(shard_count, None);
     let fleet = FleetConfig {
         server_slots: fleet.server_slots.map(|s| s.max(1)),
         device_queueing: fleet.device_queueing,
@@ -1142,6 +1618,9 @@ pub fn run_fleet(
         balancer: fleet.balancer,
         shard_rtts: rtts.clone(),
         autoscale: fleet.autoscale.map(|a| a.normalized()),
+        migration_targeting: fleet.migration_targeting,
+        shard_faults: faults,
+        outages: fleet.outages.clone(),
     };
     let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &rtts);
     // Initial shards are created warm at the first arrival (created_at
@@ -1175,6 +1654,9 @@ pub fn run_fleet(
         brng: Rng::new(scenario.cfg.seed ^ 0xBA1A_7CE5_0C4A_11CE),
         // The autoscaler's own stream, disjoint from both of the above.
         arng: Rng::new(scenario.cfg.seed ^ 0xA5CA_1E05_EED0_0001),
+        // The fault-injection stream (disjoint again); never drawn when
+        // no `ShardFault` is configured.
+        frng: Rng::new(scenario.cfg.seed ^ 0xFA17_1217_EC7E_D001),
         autoscale,
         scaler,
         fleet,
@@ -1196,6 +1678,10 @@ pub fn run_fleet(
         scale_events: Vec::new(),
         timeline: Vec::new(),
         cold_start_seconds: 0.0,
+        migration_booking: (0..n).map(|_| None).collect(),
+        migration_targeted: 0,
+        migration_fallbacks: 0,
+        outage_requeues: 0,
         t0: 0.0,
     };
     sim.run()
@@ -1634,6 +2120,273 @@ mod tests {
         let b = run_fleet(&sc, &trace, &policy, &cfg);
         assert_eq!(a.records, b.records);
         assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+    }
+
+    // -----------------------------------------------------------------
+    // Migration-aware shard targeting + failure injection
+    // -----------------------------------------------------------------
+
+    use crate::metrics::ScaleEventKind as Sek;
+
+    /// A device-constrained scenario whose server is slow enough that the
+    /// device wins the race (so §4.3 migrates decode *onto* the server
+    /// fleet).
+    fn device_constrained_scenario(seed: u64) -> Scenario {
+        Scenario::new(
+            ServerProfile::deepseek_v25(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Device,
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn overflow_pool_books_real_slots_then_batch_joins() {
+        let mut p = Pool::new(Some(2));
+        let cancelled = vec![false; 4];
+        assert!(p.acquire(0));
+        // One spare slot: the first migrated-in stream takes a real one.
+        assert!(p.acquire_overflow(), "spare capacity ⇒ real slot");
+        assert_eq!(p.in_use, 2);
+        // Full: the next joins the batch over-capacity.
+        assert!(!p.acquire_overflow(), "full pool ⇒ batch join");
+        assert_eq!(p.in_use, 3);
+        // A queued arrival waits behind the real slots.
+        assert!(!p.acquire(1));
+        // Over-commit release while still at/over cap frees no slot: the
+        // queue stays put.
+        assert_eq!(p.release_overflow(&cancelled), None);
+        assert_eq!(p.in_use, 2);
+        assert_eq!(p.live_queued(), 1);
+        // Real-slot release transfers the unit to the queued entry.
+        assert_eq!(p.release(&cancelled), Some(1));
+        assert_eq!(p.in_use, 2);
+        // Unlimited pools always report a real slot.
+        let mut u = Pool::new(None);
+        assert!(u.acquire_overflow());
+    }
+
+    /// Liveness regression: an over-commit booking whose real slots
+    /// drained away underneath it becomes load-bearing — releasing it
+    /// must admit the queue, or the queued entry would wait forever (no
+    /// later release event exists on the shard).
+    #[test]
+    fn overflow_release_admits_queue_when_load_bearing() {
+        let mut p = Pool::new(Some(1));
+        let cancelled = vec![false; 3];
+        assert!(p.acquire(0)); // real holder
+        assert!(!p.acquire_overflow(), "full ⇒ batch join");
+        assert_eq!(p.in_use, 2);
+        // The real holder leaves with an empty queue: plain decrement.
+        assert_eq!(p.release(&cancelled), None);
+        assert_eq!(p.in_use, 1);
+        // A new arrival queues behind the (now load-bearing) over-commit.
+        assert!(!p.acquire(1));
+        // Releasing the over-commit must hand the freed capacity over.
+        assert_eq!(p.release_overflow(&cancelled), Some(1));
+        assert_eq!(p.in_use, 1);
+        assert_eq!(p.live_queued(), 0);
+    }
+
+    #[test]
+    fn drain_queue_returns_live_entries_in_fifo_order() {
+        let mut p = Pool::new(Some(1));
+        let mut cancelled = vec![false; 5];
+        assert!(p.acquire(0));
+        for j in 1..5 {
+            assert!(!p.acquire(j));
+        }
+        cancelled[2] = true;
+        p.cancel_queued();
+        assert_eq!(p.drain_queue(&cancelled), vec![1, 3, 4]);
+        assert_eq!(p.live_queued(), 0);
+        assert_eq!(p.in_use, 1, "in-flight admissions are untouched");
+    }
+
+    /// With migration disabled, shard targeting is inert: the
+    /// shard-targeted fleet is byte-identical to the legacy one under
+    /// every balancer (no views are built, no RNG is drawn).
+    #[test]
+    fn shard_targeting_inert_without_migration() {
+        let sc = scenario(38);
+        let trace = trace_at_gap(150, 0.6, 21);
+        let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+        for kind in BalancerKind::all() {
+            let legacy = FleetConfig::sharded(3, 1, kind);
+            let targeted = legacy
+                .clone()
+                .with_migration_targeting(MigrationTargeting::ShardTargeted);
+            let a = run_fleet(&sc, &trace, &policy, &legacy);
+            let b = run_fleet(&sc, &trace, &policy, &targeted);
+            assert_eq!(a.records, b.records, "{kind}: targeting must be inert");
+            assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+            assert_eq!(b.load.migration_targeted, 0);
+            assert_eq!(b.load.migration_fallbacks, 0);
+        }
+    }
+
+    /// Shard-targeted migration routes re-prefills into concrete shards:
+    /// the targeted count matches the per-shard `migrated_in` booking,
+    /// every migration either targeted a shard or took the fallback, and
+    /// the run is bit-reproducible.
+    #[test]
+    fn shard_targeted_migration_books_target_shards() {
+        let sc = device_constrained_scenario(39);
+        let trace = trace_at_gap(150, 1.0, 22);
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        let cfg = FleetConfig::sharded(4, 1, BalancerKind::LeastWork)
+            .with_migration_targeting(MigrationTargeting::ShardTargeted);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        let migrated = out.records.iter().filter(|r| r.migrated).count();
+        assert!(migrated > 0, "scenario must exercise migration");
+        assert!(out.load.migration_targeted > 0, "targeting must fire");
+        assert_eq!(
+            out.load.migration_targeted + out.load.migration_fallbacks,
+            migrated,
+            "every server-bound migration is targeted or falls back"
+        );
+        let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+        assert_eq!(booked, out.load.migration_targeted);
+        // All shards warm throughout a static fleet: no fallbacks.
+        assert_eq!(out.load.migration_fallbacks, 0);
+        let again = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records, again.records);
+        assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+    }
+
+    /// Per-shard fault injection degrades only the faulty shard: on a
+    /// round-robin K=2 fleet with wide gaps (no queueing), requests
+    /// landed on the healthy shard are byte-identical to the fault-free
+    /// run, while the fleet's tail strictly worsens. The fault stream is
+    /// separate, so a no-fault config is untouched.
+    #[test]
+    fn shard_fault_degrades_only_faulty_shard() {
+        let sc = scenario(40);
+        let trace = trace_at_gap(80, 30.0, 23);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let base_cfg = FleetConfig::sharded(2, 4, BalancerKind::RoundRobin);
+        let fault_cfg = base_cfg.clone().with_shard_fault(
+            1,
+            ShardFault {
+                spike_prob: 1.0,
+                spike_scale: 10.0,
+            },
+        );
+        let base = run_fleet(&sc, &trace, &policy, &base_cfg);
+        let fault = run_fleet(&sc, &trace, &policy, &fault_cfg);
+        // Round-robin deals arrivals 0,1,0,1,…: even indices land on the
+        // healthy shard 0 and must be untouched.
+        for (i, (b, f)) in base.records.iter().zip(&fault.records).enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(b, f, "healthy-shard request {i} perturbed");
+            }
+        }
+        let p99 = |o: &FleetOutcome| {
+            Summary::of(&o.records.iter().map(|r| r.ttft).collect::<Vec<_>>()).p99
+        };
+        let mean = |o: &FleetOutcome| {
+            Summary::of(&o.records.iter().map(|r| r.ttft).collect::<Vec<_>>()).mean
+        };
+        assert!(
+            mean(&fault) > mean(&base),
+            "degraded shard must worsen mean TTFT"
+        );
+        assert!(p99(&fault) > p99(&base), "degraded shard must worsen p99");
+    }
+
+    /// A mid-run outage forces the shard into Draining exactly once:
+    /// queued streams re-route to the survivors, the victim finishes its
+    /// in-flight work, retires a single time, and stops accruing
+    /// shard-seconds (no leak: the total equals the per-shard lifetimes).
+    #[test]
+    fn outage_requeues_and_retires_exactly_once() {
+        let sc = device_constrained_scenario(41);
+        let trace = trace_at_gap(100, 0.2, 24);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        for targeting in [
+            MigrationTargeting::BaseEndpoint,
+            MigrationTargeting::ShardTargeted,
+        ] {
+            let cfg = FleetConfig::sharded(3, 1, BalancerKind::RoundRobin)
+                .with_migration_targeting(targeting)
+                .with_outage(10.0, 1);
+            let out = run_fleet(&sc, &trace, &policy, &cfg);
+            assert_eq!(out.records.len(), trace.len(), "{targeting}: liveness");
+            assert_eq!(out.load.outage_count(), 1, "{targeting}");
+            assert!(
+                out.load.outage_requeues > 0,
+                "{targeting}: an overloaded shard must have had a queue to re-route"
+            );
+            assert_eq!(out.load.retire_count(1), 1, "{targeting}: exactly one retire");
+            let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+            assert!(
+                (out.load.shard_seconds - lifetimes).abs() < 1e-9,
+                "{targeting}: shard-seconds must decompose per shard"
+            );
+            assert!(
+                out.load.shards[1].lifetime_seconds < out.load.horizon,
+                "{targeting}: the dead shard must stop billing before the end"
+            );
+        }
+    }
+
+    /// A second outage on the same (already draining) shard is a no-op:
+    /// one Outage event, at most one Retire, no double-billing.
+    #[test]
+    fn double_outage_is_idempotent() {
+        let sc = scenario(42);
+        let trace = trace_at_gap(80, 0.3, 25);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::sharded(2, 1, BalancerKind::JoinShortestQueue)
+            .with_outage(5.0, 1)
+            .with_outage(6.0, 1);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        assert_eq!(out.load.outage_count(), 1, "second outage must be a no-op");
+        assert!(out.load.retire_count(1) <= 1);
+        let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+        assert!((out.load.shard_seconds - lifetimes).abs() < 1e-9);
+    }
+
+    /// Killing the only shard of a K=1 fleet degrades to drain-and-serve
+    /// (there is nowhere to re-route): the run still terminates with
+    /// every request resolved.
+    #[test]
+    fn outage_on_single_shard_fleet_still_terminates() {
+        let sc = scenario(43);
+        let trace = trace_at_gap(40, 0.3, 26);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::bounded(1).with_outage(2.0, 0);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        assert_eq!(out.load.outage_count(), 1);
+        assert_eq!(
+            out.load.outage_requeues, 0,
+            "staying on the draining shard is not a re-route"
+        );
+    }
+
+    /// An outage scheduled onto a shard index that never exists is a
+    /// clean no-op, and outage events are recorded in the scale-event
+    /// stream with the `Outage` kind (not conflated with scale-in).
+    #[test]
+    fn outage_event_bookkeeping() {
+        let sc = scenario(44);
+        let trace = trace_at_gap(60, 0.5, 27);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::sharded(2, 1, BalancerKind::RoundRobin)
+            .with_outage(3.0, 7) // never provisioned: no-op
+            .with_outage(4.0, 0);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        assert_eq!(out.load.outage_count(), 1);
+        let kinds: Vec<Sek> = out.load.scale_events.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&Sek::Outage));
+        assert!(!kinds.contains(&Sek::DrainStart), "outage is not a scale-in");
     }
 
     /// A zero-second cold start still goes through the cold → warm

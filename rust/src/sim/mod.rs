@@ -51,6 +51,13 @@
 //!   a cold-start load delay, scale-in drains before retiring), and the
 //!   shard-count timeline, scale events, cold-start seconds, and
 //!   provisioned shard-seconds land in the load report.
+//! * `FleetConfig::with_migration_targeting(MigrationTargeting::ShardTargeted)`
+//!   — §4.3 server-bound re-prefills pick a least-work admitting shard
+//!   ([`balancer::pick_reprefill_target`]) and occupy its slot pool for
+//!   the migrated stream's lifetime; `with_shard_fault` / `with_outage`
+//!   inject per-shard TTFT degradation and scheduled mid-run shard
+//!   failures (queued streams re-route to survivors, in-flight streams
+//!   finish under connection draining).
 //! * Arrival processes live in `trace::generator`: Poisson and Gamma
 //!   inter-arrivals (`Arrival::Poisson` / `Arrival::Gamma` — CV above or
 //!   below 1 for burstier or smoother-than-Poisson traffic), fixed gaps,
@@ -73,4 +80,4 @@ pub mod fleet;
 pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
 pub use balancer::{Balancer, BalancerKind, ShardView};
 pub use engine::{Scenario, SimConfig};
-pub use fleet::{FleetConfig, FleetOutcome};
+pub use fleet::{FleetConfig, FleetOutcome, MigrationTargeting, ShardFault, ShardOutage};

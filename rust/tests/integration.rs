@@ -15,10 +15,12 @@ use disco::experiments::common::{
     avg_cost, avg_mean_ttft, avg_p99_ttft, disco_for, make_policy, run_cell, stoch_for,
 };
 use disco::profiles::{DeviceProfile, ServerProfile};
-use disco::sim::autoscaler::{AutoscaleConfig, AutoscalerKind, ColdStartSpec, ReactiveConfig};
+use disco::sim::autoscaler::{
+    AutoscaleConfig, AutoscalerKind, ColdStartSpec, ReactiveConfig, TtftTargetConfig,
+};
 use disco::sim::balancer::BalancerKind;
 use disco::sim::engine::{Scenario, SimConfig};
-use disco::sim::fleet::FleetConfig;
+use disco::sim::fleet::{FleetConfig, MigrationTargeting};
 use disco::trace::generator::{Arrival, WorkloadSpec};
 use disco::trace::Trace;
 
@@ -681,6 +683,223 @@ fn reactive_autoscaling_beats_static_small_within_static_large_budget() {
         auto.load.shard_seconds,
         large.load.shard_seconds
     );
+}
+
+// ---------------------------------------------------------------------
+// Migration-aware shard targeting + shard failure injection
+// ---------------------------------------------------------------------
+
+/// Acceptance: on a K=4 fleet with one shard failing mid-burst,
+/// shard-targeted failover (least-work-with-estimate — the dead shard's
+/// queued streams spread across the survivors) beats the legacy
+/// base-endpoint fallback (every victim piles onto the single first
+/// admitting shard, the "one server target" view) on p99 TTFT. Both
+/// runs replay the identical trace, latency draws, and pre-outage
+/// balancing, so the gap is a pure targeting effect.
+#[test]
+fn shard_targeted_failover_beats_base_endpoint_on_p99_ttft() {
+    // Spike-free profile isolates the failover effect from the
+    // heavy-tail mixture.
+    let mut profile = ServerProfile::deepseek_v25();
+    profile.spike_prob = 0.0;
+    let scenario = Scenario::new(
+        profile,
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Device,
+        SimConfig {
+            seed: 71,
+            ..Default::default()
+        },
+    );
+    // 80 s calm at 0.5 req/s, 60 s burst at 4 req/s (~3× the K=4 fleet
+    // capacity), calm tail to drain — shard 0 dies mid-burst with a
+    // queue worth re-routing.
+    let trace = bursty_trace(40, 240, 0.25, 59);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let run = |targeting: MigrationTargeting| {
+        let cfg = FleetConfig::sharded(4, 1, BalancerKind::RoundRobin)
+            .with_migration_targeting(targeting)
+            .with_outage(110.0, 0);
+        scenario.run_fleet_report(&trace, &policy, &cfg)
+    };
+    let legacy = run(MigrationTargeting::BaseEndpoint);
+    let targeted = run(MigrationTargeting::ShardTargeted);
+
+    // Same trace, same pre-outage balancing: the outage kills the same
+    // queue in both runs.
+    assert_eq!(legacy.qoe.n, trace.len());
+    assert_eq!(targeted.qoe.n, trace.len());
+    assert_eq!(legacy.load.outage_count(), 1);
+    assert_eq!(
+        legacy.load.outage_requeues, targeted.load.outage_requeues,
+        "identical pre-outage state ⇒ identical victim count"
+    );
+    assert!(
+        legacy.load.outage_requeues > 3,
+        "a mid-burst outage must strand a real queue, got {}",
+        legacy.load.outage_requeues
+    );
+    assert!(
+        targeted.qoe.ttft.p99 < legacy.qoe.ttft.p99,
+        "shard-targeted p99 {:.2}s must beat base-endpoint {:.2}s",
+        targeted.qoe.ttft.p99,
+        legacy.qoe.ttft.p99
+    );
+    assert!(
+        targeted.qoe.ttft.p99 < 0.95 * legacy.qoe.ttft.p99,
+        "spreading the victims must clearly beat the single-target pile-up: {:.2}s vs {:.2}s",
+        targeted.qoe.ttft.p99,
+        legacy.qoe.ttft.p99
+    );
+
+    // The same storm with §4.3 migration on: re-prefills land on
+    // concrete shards, never a non-admitting one (no fallbacks while
+    // three shards stay warm), and every stream keeps its token
+    // accounting through outage + migration.
+    let racer = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let cfg = FleetConfig::sharded(4, 1, BalancerKind::LeastWork)
+        .with_migration_targeting(MigrationTargeting::ShardTargeted)
+        .with_outage(110.0, 0);
+    let storm = scenario.run_fleet(&trace, &racer, &cfg);
+    assert_eq!(storm.records.len(), trace.len());
+    assert!(storm.load.migration_targeted > 0, "the storm must migrate onto shards");
+    assert_eq!(storm.load.migration_fallbacks, 0);
+    let booked: usize = storm.load.shards.iter().map(|s| s.migrated_in).sum();
+    assert_eq!(booked, storm.load.migration_targeted);
+    for rec in &storm.records {
+        assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len, "gap in stream {}", rec.id);
+        assert!(rec.tbts.iter().all(|&t| t > 0.0), "order violated in stream {}", rec.id);
+        assert_eq!(
+            rec.cost.server_decode_tokens + rec.cost.device_decode_tokens,
+            rec.output_len as u64,
+            "duplicate/lost tokens in stream {}",
+            rec.id
+        );
+    }
+}
+
+/// Parity regression: with failure injection disabled and shard
+/// targeting at the legacy base-endpoint fallback, the new knobs are
+/// inert — `run_fleet` output is byte-identical to the same
+/// configuration with shard targeting enabled when the policy never
+/// migrates, under every `BalancerKind` × `AutoscalerKind`, and every
+/// configuration is bit-reproducible (the PR-2/PR-3 RNG-stream
+/// discipline: targeting consumes no randomness).
+#[test]
+fn targeting_and_failure_knobs_inert_under_every_balancer_and_autoscaler() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 73,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(61);
+    // Migration-free policy: shard targeting must change nothing at all.
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let autoscale = |kind: AutoscalerKind| AutoscaleConfig {
+        kind,
+        eval_interval: 1.0,
+        min_shards: 1,
+        max_shards: 4,
+        cold_start: ColdStartSpec::Fixed(1.0),
+    };
+    let autoscalers = [
+        None,
+        Some(autoscale(AutoscalerKind::None)),
+        Some(autoscale(AutoscalerKind::Reactive(ReactiveConfig::default()))),
+        Some(autoscale(AutoscalerKind::TtftTarget(TtftTargetConfig::default()))),
+    ];
+    for balancer in BalancerKind::all() {
+        for auto in &autoscalers {
+            let mut legacy = FleetConfig::sharded(2, 1, balancer);
+            if let Some(a) = auto {
+                legacy = legacy.with_autoscale(*a);
+            }
+            let targeted = legacy
+                .clone()
+                .with_migration_targeting(MigrationTargeting::ShardTargeted);
+            let a = scenario.run_fleet(&trace, &policy, &legacy);
+            let b = scenario.run_fleet(&trace, &policy, &targeted);
+            assert_eq!(
+                a.records, b.records,
+                "{balancer}/{auto:?}: shard targeting must be inert without migration"
+            );
+            assert_eq!(
+                format!("{:?}", a.load),
+                format!("{:?}", b.load),
+                "{balancer}/{auto:?}: load metrics must be untouched"
+            );
+            assert_eq!(a.load.migration_targeted, 0);
+            assert_eq!(a.load.outage_requeues, 0);
+            assert!(a.load.outage_count() == 0);
+            // Bit-reproducibility under the legacy knobs (the PR-2
+            // parity discipline).
+            let c = scenario.run_fleet(&trace, &policy, &legacy);
+            assert_eq!(a.records, c.records, "{balancer}/{auto:?}: not reproducible");
+        }
+    }
+}
+
+/// Balancer/autoscaler interplay invariant: an outage landing while the
+/// autoscaler is scaling in (and another during the post-burst drain)
+/// never double-retires a shard and never leaks shard-seconds — the
+/// provisioned total always decomposes into per-shard lifetimes.
+#[test]
+fn outage_during_autoscaler_drain_never_double_retires() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 79,
+            ..Default::default()
+        },
+    );
+    // Burst then calm: the reactive policy scales out during the burst
+    // and drains in the calm tail; outages land on the initial shard
+    // mid-burst and on shard 1 in the drain window.
+    let trace = bursty_trace(30, 300, 0.2, 67);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(2, 1, BalancerKind::JoinShortestQueue)
+        .with_autoscale(AutoscaleConfig {
+            kind: AutoscalerKind::Reactive(ReactiveConfig {
+                scale_out_per_shard: 2.0,
+                scale_in_per_shard: 0.5,
+                sustain: 1,
+                cooldown: 0.0,
+                max_step: 3,
+            }),
+            eval_interval: 0.5,
+            min_shards: 1,
+            max_shards: 5,
+            cold_start: ColdStartSpec::Fixed(1.0),
+        })
+        .with_migration_targeting(MigrationTargeting::ShardTargeted)
+        .with_outage(90.0, 0)
+        .with_outage(91.0, 0) // duplicate: must be a no-op
+        .with_outage(160.0, 1); // drain window: may race a scale-in victim
+    let out = scenario.run_fleet(&trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len(), "liveness under outage + autoscaling");
+    assert!(out.load.outage_count() <= 2, "duplicate outage must not fire");
+    for s in 0..out.load.shards.len() {
+        assert!(
+            out.load.retire_count(s) <= 1,
+            "shard {s} retired {} times",
+            out.load.retire_count(s)
+        );
+    }
+    let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+    assert!(
+        (out.load.shard_seconds - lifetimes).abs() < 1e-9,
+        "shard-seconds leak: {} vs {}",
+        out.load.shard_seconds,
+        lifetimes
+    );
+    // The killed initial shard really died mid-run.
+    assert!(out.load.shards[0].lifetime_seconds < out.load.horizon);
 }
 
 // ---------------------------------------------------------------------
