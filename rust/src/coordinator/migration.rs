@@ -93,11 +93,33 @@ impl MigrationPlanner {
     /// Folded into the re-prefill warm-up estimate when migration is
     /// shard-targeted, so a loaded target inflates `t_m` — and thus the
     /// Eq. 5 buffer — instead of being silently free.
+    ///
+    /// Audit note (PR-5 bugfix sweep): callers must pass *queued-ahead*
+    /// work only. A migrated stream books via the batch-join overflow
+    /// path, so a shard with a spare real slot admits it instantly —
+    /// the fleet's `reprefill_queue_delay` short-circuits that case to
+    /// 0 and excludes the migrating stream's own booking from
+    /// `outstanding_secs` (the off-by-one that used to price the stream
+    /// into its own queue; pinned by the idle-fleet byte-parity test in
+    /// `sim::fleet`).
     pub fn queue_delay_estimate(&self, outstanding_secs: f64, slots: Option<usize>) -> f64 {
         match slots {
             Some(c) if c > 0 => (outstanding_secs / c as f64).max(0.0),
             Some(_) => outstanding_secs.max(0.0),
             None => 0.0,
+        }
+    }
+
+    /// Token-denominated admission-delay predictor for continuous
+    /// batching: the queued prompt-token backlog over the shard's
+    /// admission token rate (`prefill_tokens_per_tick / tick_interval`).
+    /// A non-positive rate (defensive; normalized configs cannot produce
+    /// one) predicts no delay rather than an infinite one.
+    pub fn queue_delay_estimate_tokens(&self, queued_tokens: u64, tokens_per_sec: f64) -> f64 {
+        if tokens_per_sec > 0.0 {
+            queued_tokens as f64 / tokens_per_sec
+        } else {
+            0.0
         }
     }
 
@@ -273,6 +295,30 @@ mod tests {
             plan_idle.buffer_tokens
         );
         assert!(plan_loaded.t_m_est > plan_idle.t_m_est);
+    }
+
+    /// The token-denominated predictor (continuous batching): backlog
+    /// over admission rate, with the same buffer-inflation composition
+    /// as the slot predictor, and a defensive zero on degenerate rates.
+    #[test]
+    fn queue_delay_estimate_tokens_prices_backlog() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        assert_eq!(p.queue_delay_estimate_tokens(0, 512.0), 0.0);
+        assert_eq!(p.queue_delay_estimate_tokens(1024, 512.0), 2.0);
+        assert_eq!(p.queue_delay_estimate_tokens(1024, 0.0), 0.0);
+        assert_eq!(p.queue_delay_estimate_tokens(1024, -1.0), 0.0);
+        let idle = 0.4 + p.queue_delay_estimate_tokens(0, 256.0);
+        let loaded = 0.4 + p.queue_delay_estimate_tokens(2048, 256.0);
+        let plan_idle = p
+            .plan(Constraint::Device, EndpointKind::Device, 200, 40, idle)
+            .expect("idle target should migrate");
+        let plan_loaded = p
+            .plan(Constraint::Device, EndpointKind::Device, 200, 40, loaded)
+            .expect("loaded target should still migrate");
+        assert!(
+            plan_loaded.buffer_tokens > plan_idle.buffer_tokens,
+            "a deep token backlog must inflate the Eq. 5 buffer"
+        );
     }
 
     #[test]

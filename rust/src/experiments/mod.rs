@@ -8,6 +8,7 @@ pub mod ablation;
 pub mod ablations2;
 pub mod appendix;
 pub mod autoscale_sweep;
+pub mod batching_sweep;
 pub mod characterization;
 pub mod common;
 pub mod endtoend;
@@ -164,6 +165,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "failover-sweep",
             title: "Fleet: migration targeting under mid-burst shard failure",
             run: failover_sweep::failover_sweep,
+        },
+        ExperimentDef {
+            id: "batching-sweep",
+            title: "Fleet: continuous batching vs slot admission across token budgets",
+            run: batching_sweep::batching_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

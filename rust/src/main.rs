@@ -35,6 +35,7 @@ fn main() {
         "shard_sweep" | "shard-sweep" => cmd_shard_sweep(&args),
         "autoscale_sweep" | "autoscale-sweep" => cmd_autoscale_sweep(&args),
         "failover_sweep" | "failover-sweep" => cmd_failover_sweep(&args),
+        "batching_sweep" | "batching-sweep" => cmd_batching_sweep(&args),
         "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
@@ -79,9 +80,17 @@ fn print_help() {
          \x20             [--slots N] [--outage-shard S] [--rate RPS] [--cv CV]\n\
          \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
          \x20             [--service S] [--device D]\n\
-         \x20 bench       fixed-seed fleet benchmark → BENCH_fleet.json\n\
-         \x20             [--requests N] [--reps N] [--out FILE]\n\
-         \x20             [--baseline FILE] [--max-regression FRAC]\n\
+         \x20 batching_sweep\n\
+         \x20             parallel (token budget × rate × batch curve) grid: continuous\n\
+         \x20             batching vs the slot model [--budgets B1,B2,..] [--rates R1,..]\n\
+         \x20             [--curves flat,knee:8:0.05,linear:0.05] [--tick SECS]\n\
+         \x20             [--max-batch N (0 = unbounded)] [--shards K] [--slots N]\n\
+         \x20             [--balancer B]\n\
+         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
+         \x20             [--service S] [--device D]\n\
+         \x20 bench       fixed-seed fleet benchmarks (slot-legacy + continuous\n\
+         \x20             batching) → BENCH_fleet.json [--requests N] [--reps N]\n\
+         \x20             [--out FILE] [--baseline FILE] [--max-regression FRAC]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
     );
@@ -471,13 +480,85 @@ fn cmd_failover_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Fixed-seed fleet benchmark: runs a sharded workload `--reps` times,
-/// reports the best wall time as events/sec plus TTFT percentiles, writes
-/// the JSON artifact CI uploads, and — with `--baseline` — fails when
-/// events/sec regresses more than `--max-regression` below the committed
-/// baseline.
+fn cmd_batching_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::batching_sweep::{render_grid, run_grid, BatchingSweepParams};
+    use disco::sim::batching::BatchLatencyCurve;
+
+    fn parse_curve(s: &str) -> anyhow::Result<BatchLatencyCurve> {
+        BatchLatencyCurve::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown curve '{s}' (flat|linear:ALPHA|knee:K:ALPHA)")
+        })
+    }
+
+    let defaults = BatchingSweepParams::default();
+    let budgets = parse_list(args, "budgets", defaults.budgets, |b| {
+        b.parse::<u32>()
+            .map_err(|_| anyhow::anyhow!("--budgets expects integers, got '{b}'"))
+    })?;
+    let rates = parse_rates(args, defaults.rates)?;
+    let curves = parse_list(args, "curves", defaults.curves, parse_curve)?;
+    anyhow::ensure!(budgets.iter().all(|&b| b > 0), "budgets must be at least 1");
+
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
+    let params = BatchingSweepParams {
+        budgets,
+        rates,
+        curves,
+        tick_interval: args.get_f64("tick", defaults.tick_interval)?,
+        // CLI sentinel: 0 (the default) means unbounded — distinct from
+        // the library's `normalized()`, which clamps a programmatic
+        // `Some(0)` up to `Some(1)`.
+        max_batch: match args.get_usize("max-batch", 0)? {
+            0 => None,
+            m => Some(m),
+        },
+        shards: args.get_usize("shards", defaults.shards)?,
+        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
+        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
+        policy: parse_policy(args.get_or("policy", "server-only"))?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    anyhow::ensure!(params.shards > 0, "--shards must be at least 1");
+    anyhow::ensure!(params.tick_interval > 0.0, "--tick must be positive");
+    let n_cells = params.n_cells();
+    println!(
+        "batching sweep: {} budgets × {} rates × {} curves = {n_cells} cells, \
+         {} shard(s), tick {}s, slot baseline {} slots/shard ({} balancer), \
+         {} requests × {} seeds per cell",
+        params.budgets.len(),
+        params.rates.len(),
+        params.curves.len(),
+        params.shards,
+        params.tick_interval,
+        params.slots_per_shard,
+        params.balancer.label(),
+        params.n_requests,
+        params.n_seeds
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Fixed-seed fleet benchmarks: runs the slot-legacy sharded workload
+/// AND a continuous-batching workload `--reps` times each, reports the
+/// best wall time as events/sec plus TTFT percentiles, writes the JSON
+/// artifact CI uploads, and — with `--baseline` — fails when either
+/// cell's events/sec regresses more than `--max-regression` below the
+/// committed baseline (`events_per_sec` for the slot loop,
+/// `batching_events_per_sec` for the continuous hot path; a baseline
+/// missing the batching key gates only the slot loop).
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use disco::coordinator::policy::Policy;
+    use disco::sim::batching::{BatchingMode, ContinuousBatchConfig};
     use disco::sim::fleet::FleetConfig;
     use disco::stats::describe::Summary;
     use disco::util::json::Json;
@@ -498,59 +579,124 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     );
     let trace = WorkloadSpec::alpaca(n).at_rate(2.0).generate(seed ^ 0xA1FA);
     let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
-    let fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue);
 
-    let mut best = f64::INFINITY;
-    let mut outcome = None;
-    for _ in 0..reps {
-        let t0 = std::time::Instant::now();
-        let out = scenario.run_fleet(&trace, &policy, &fleet);
-        best = best.min(t0.elapsed().as_secs_f64());
-        outcome = Some(out);
+    struct Cell {
+        name: &'static str,
+        baseline_key: &'static str,
+        events: u64,
+        wall: f64,
+        eps: f64,
+        p50: f64,
+        p99: f64,
     }
-    let outcome = outcome.expect("reps >= 1");
-    let events = outcome.load.events_processed;
-    let events_per_sec = events as f64 / best.max(1e-12);
-    let ttfts: Vec<f64> = outcome.records.iter().map(|r| r.ttft).collect();
-    let s = Summary::of(&ttfts);
+    let mut run_cell = |name: &'static str,
+                        baseline_key: &'static str,
+                        fleet: &FleetConfig|
+     -> Cell {
+        let mut best = f64::INFINITY;
+        let mut outcome = None;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let out = scenario.run_fleet(&trace, &policy, fleet);
+            best = best.min(t0.elapsed().as_secs_f64());
+            outcome = Some(out);
+        }
+        let outcome = outcome.expect("reps >= 1");
+        let events = outcome.load.events_processed;
+        let ttfts: Vec<f64> = outcome.records.iter().map(|r| r.ttft).collect();
+        let s = Summary::of(&ttfts);
+        Cell {
+            name,
+            baseline_key,
+            events,
+            wall: best,
+            eps: events as f64 / best.max(1e-12),
+            p50: s.p50,
+            p99: s.p99,
+        }
+    };
+
+    let slot_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue);
+    // The continuous cell exercises the new hot path: token-gated
+    // admission ticks + batch-priced decode on the same topology.
+    let cont_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
+        .with_batching(BatchingMode::Continuous(ContinuousBatchConfig::default()));
+    let cells = [
+        run_cell("slot-legacy", "events_per_sec", &slot_fleet),
+        run_cell("continuous", "batching_events_per_sec", &cont_fleet),
+    ];
 
     let json = Json::obj(vec![
         ("bench", Json::str("fleet")),
         ("requests", Json::num(n as f64)),
-        ("events", Json::num(events as f64)),
-        ("wall_time_s", Json::num(best)),
-        ("events_per_sec", Json::num(events_per_sec)),
-        ("p50_ttft_s", Json::num(s.p50)),
-        ("p99_ttft_s", Json::num(s.p99)),
         ("seed", Json::num(seed as f64)),
         ("reps", Json::num(reps as f64)),
+        // Top-level legacy keys (the slot loop), kept for older tooling.
+        ("events", Json::num(cells[0].events as f64)),
+        ("wall_time_s", Json::num(cells[0].wall)),
+        ("events_per_sec", Json::num(cells[0].eps)),
+        ("p50_ttft_s", Json::num(cells[0].p50)),
+        ("p99_ttft_s", Json::num(cells[0].p99)),
+        ("batching_events_per_sec", Json::num(cells[1].eps)),
+        (
+            "cells",
+            Json::arr(cells.iter().map(|c| {
+                Json::obj(vec![
+                    ("name", Json::str(c.name)),
+                    ("events", Json::num(c.events as f64)),
+                    ("wall_time_s", Json::num(c.wall)),
+                    ("events_per_sec", Json::num(c.eps)),
+                    ("p50_ttft_s", Json::num(c.p50)),
+                    ("p99_ttft_s", Json::num(c.p99)),
+                ])
+            })),
+        ),
     ]);
     let out_path = args.get_or("out", "BENCH_fleet.json");
     std::fs::write(out_path, format!("{json}\n"))?;
-    println!(
-        "bench fleet: {n} requests, {events} events in {best:.3}s \
-         ({events_per_sec:.0} events/s), TTFT p50 {:.3}s p99 {:.3}s → {out_path}",
-        s.p50, s.p99
-    );
+    for c in &cells {
+        println!(
+            "bench fleet[{}]: {n} requests, {} events in {:.3}s \
+             ({:.0} events/s), TTFT p50 {:.3}s p99 {:.3}s",
+            c.name, c.events, c.wall, c.eps, c.p50, c.p99
+        );
+    }
+    println!("wrote {out_path}");
 
     if let Some(baseline_path) = args.get("baseline") {
         let text = std::fs::read_to_string(baseline_path)
             .map_err(|e| anyhow::anyhow!("reading baseline {baseline_path}: {e}"))?;
         let baseline = Json::parse(&text)?;
-        let base_eps = baseline.req_f64("events_per_sec")?;
         let max_regression = args.get_f64("max-regression", 0.25)?;
-        let floor = base_eps * (1.0 - max_regression);
-        anyhow::ensure!(
-            events_per_sec >= floor,
-            "perf regression: {events_per_sec:.0} events/s is more than \
-             {:.0}% below the {base_eps:.0} events/s baseline (floor {floor:.0})",
-            max_regression * 100.0
-        );
-        println!(
-            "baseline check ok: {events_per_sec:.0} events/s ≥ floor {floor:.0} \
-             ({base_eps:.0} − {:.0}%)",
-            max_regression * 100.0
-        );
+        for c in &cells {
+            let base_eps = match baseline.get(c.baseline_key).and_then(|v| v.as_f64()) {
+                Some(v) => v,
+                None if c.baseline_key != "events_per_sec" => {
+                    println!(
+                        "baseline has no '{}' key; skipping the {} gate",
+                        c.baseline_key, c.name
+                    );
+                    continue;
+                }
+                None => anyhow::bail!("baseline missing numeric field 'events_per_sec'"),
+            };
+            let floor = base_eps * (1.0 - max_regression);
+            anyhow::ensure!(
+                c.eps >= floor,
+                "perf regression in {}: {:.0} events/s is more than {:.0}% below \
+                 the {base_eps:.0} events/s baseline (floor {floor:.0})",
+                c.name,
+                c.eps,
+                max_regression * 100.0
+            );
+            println!(
+                "baseline check ok [{}]: {:.0} events/s ≥ floor {floor:.0} \
+                 ({base_eps:.0} − {:.0}%)",
+                c.name,
+                c.eps,
+                max_regression * 100.0
+            );
+        }
     }
     Ok(())
 }

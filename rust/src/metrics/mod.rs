@@ -97,11 +97,19 @@ impl Report {
 pub struct ShardLoad {
     /// Admission-queue delay over requests this shard admitted (seconds).
     pub queue_delay: Summary,
-    /// Slot-seconds this shard consumed.
+    /// Slot-seconds this shard consumed *within* its capacity
+    /// (admissions plus real-slot migration bookings).
     pub busy_seconds: f64,
+    /// Seconds of §4.3 batch-join occupancy held *above* the shard's
+    /// slot capacity (over-commit bookings — and every migrated-in join
+    /// under continuous batching, where the batch is elastic). Reported
+    /// separately from `busy_seconds` so utilization stays a
+    /// within-capacity ratio instead of quietly exceeding 1.0.
+    pub overcommit_seconds: f64,
     /// Requests this shard admitted (granted a slot).
     pub admitted: usize,
-    /// This shard's concurrent-admission cap (`None` = unlimited).
+    /// This shard's concurrent-admission cap (`None` = unlimited, and
+    /// always `None` under continuous batching).
     pub slots: Option<usize>,
     /// §4.3 migrated streams whose re-prefill was routed *into* this
     /// shard (shard-targeted migration; always 0 under the legacy
@@ -113,6 +121,18 @@ pub struct ShardLoad {
     /// retired mid-run under autoscaling are judged over their own
     /// lifetime, not the whole run.
     pub lifetime_seconds: f64,
+    /// High-water mark of concurrent streams on the shard: the peak
+    /// batch size under continuous batching, peak occupancy (including
+    /// over-commit) under slots.
+    pub peak_in_use: usize,
+    /// Prompt tokens admitted through the shard's token gate
+    /// (continuous batching; 0 under slots).
+    pub prompt_tokens_admitted: u64,
+    /// Prompt-token budget made available by the shard's gate (initial
+    /// allotment plus one per *non-idle* tick — ticks with an untouched
+    /// budget and an empty queue offered no usable capacity and accrue
+    /// none; 0 under slots). The token-budget utilization denominator.
+    pub prompt_token_capacity: u64,
 }
 
 /// Kind of shard-autoscaling transition.
@@ -158,6 +178,19 @@ pub struct ShardCountSample {
     /// short of retired), so integrating this over time agrees with
     /// `LoadReport::shard_seconds`.
     pub provisioned: usize,
+}
+
+/// One sample of a shard's batch-size timeline (continuous batching):
+/// recorded whenever a stream joins or leaves the shard's batch and the
+/// size changed. Empty for slot-legacy runs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSample {
+    /// Seconds since the first arrival.
+    pub time: f64,
+    /// Shard whose batch changed.
+    pub shard: usize,
+    /// Streams in the shard's batch after the change.
+    pub batch: usize,
 }
 
 /// Load-dependent metrics surfaced by the fleet simulator: admission-queue
@@ -214,6 +247,14 @@ pub struct LoadReport {
     /// Queued (never-admitted) streams re-routed off a shard killed by
     /// an injected outage.
     pub outage_requeues: usize,
+    /// Pool releases that found nothing to release (a double release of
+    /// the same unit). Always 0 on a correct event flow; the PR-5
+    /// accounting sweep surfaces these instead of letting
+    /// `saturating_sub` mask them as permanent capacity leaks.
+    pub release_underflows: usize,
+    /// Batch-size timeline across shards (continuous batching only;
+    /// empty for slot-legacy runs), in event order.
+    pub batch_timeline: Vec<BatchSample>,
 }
 
 impl LoadReport {
@@ -249,13 +290,19 @@ impl LoadReport {
     /// this is the classic `busy / (horizon × total_slots)`. Degenerate
     /// inputs — zero lifetimes or zero capacity — report `Some(0.0)`
     /// rather than NaN/∞: a capacity-less run did no utilizable work.
+    ///
+    /// Clamped to 1.0: §4.3 batch-join over-commits occupy pools above
+    /// their cap, and their seconds are reported separately
+    /// ([`ShardLoad::overcommit_seconds`], [`Self::overcommit_seconds`])
+    /// rather than being allowed to push a capacity ratio past 1 and
+    /// skew balancer comparisons.
     pub fn server_utilization(&self) -> Option<f64> {
         if self.shards.is_empty() {
             // Hand-built reports without a breakdown: fall back to the
             // single-pool reading over the horizon.
             let slots = self.server_slots?;
             return Some(if self.horizon > 0.0 && slots > 0 {
-                self.server_busy_seconds / (self.horizon * slots as f64)
+                (self.server_busy_seconds / (self.horizon * slots as f64)).min(1.0)
             } else {
                 0.0
             });
@@ -265,7 +312,7 @@ impl LoadReport {
             denom += s.lifetime_seconds.max(0.0) * s.slots? as f64;
         }
         Some(if denom > 0.0 {
-            self.server_busy_seconds / denom
+            (self.server_busy_seconds / denom).min(1.0)
         } else {
             0.0
         })
@@ -273,17 +320,47 @@ impl LoadReport {
 
     /// Per-shard utilizations in [0,1], in shard order, each over the
     /// shard's own lifetime. Shards with an unlimited pool, zero
-    /// capacity, or a zero-length lifetime report 0.0.
+    /// capacity, or a zero-length lifetime report 0.0. Clamped to 1.0
+    /// (over-commit seconds are reported separately; see
+    /// [`Self::server_utilization`]).
     pub fn shard_utilizations(&self) -> Vec<f64> {
         self.shards
             .iter()
             .map(|s| match s.slots {
                 Some(c) if c > 0 && s.lifetime_seconds > 0.0 => {
-                    s.busy_seconds / (s.lifetime_seconds * c as f64)
+                    (s.busy_seconds / (s.lifetime_seconds * c as f64)).min(1.0)
                 }
                 _ => 0.0,
             })
             .collect()
+    }
+
+    /// Total §4.3 batch-join occupancy seconds held above slot capacity
+    /// across shards (the over-commit complement of busy-seconds).
+    pub fn overcommit_seconds(&self) -> f64 {
+        self.shards.iter().map(|s| s.overcommit_seconds).sum()
+    }
+
+    /// Token-budget utilization in (0, 1]-ish under continuous batching
+    /// (`None` for slot-legacy runs, which have no token gates):
+    /// admitted prompt tokens over the budget made available across all
+    /// shards. Can exceed 1.0 slightly because an oversized prompt is
+    /// admitted against a fresh tick at its full length (documented on
+    /// the gate).
+    pub fn token_budget_utilization(&self) -> Option<f64> {
+        let capacity: u64 = self.shards.iter().map(|s| s.prompt_token_capacity).sum();
+        if capacity == 0 {
+            return None;
+        }
+        let admitted: u64 = self.shards.iter().map(|s| s.prompt_tokens_admitted).sum();
+        Some(admitted as f64 / capacity as f64)
+    }
+
+    /// Largest batch size any shard reached (peak concurrent streams;
+    /// falls back over `peak_in_use` so slot fleets report their peak
+    /// occupancy).
+    pub fn peak_batch(&self) -> usize {
+        self.shards.iter().map(|s| s.peak_in_use).max().unwrap_or(0)
     }
 
     /// Load-imbalance summary: max/mean shard utilization (1.0 = the
@@ -443,10 +520,14 @@ mod tests {
         ShardLoad {
             queue_delay: Summary::of(&[]),
             busy_seconds: busy,
+            overcommit_seconds: 0.0,
             admitted,
             slots,
             migrated_in: 0,
             lifetime_seconds: 0.0, // stamped to the horizon by `load`
+            peak_in_use: 0,
+            prompt_tokens_admitted: 0,
+            prompt_token_capacity: 0,
         }
     }
 
@@ -471,6 +552,8 @@ mod tests {
             migration_targeted: 0,
             migration_fallbacks: 0,
             outage_requeues: 0,
+            release_underflows: 0,
+            batch_timeline: Vec::new(),
         }
     }
 
@@ -567,6 +650,49 @@ mod tests {
         });
         assert_eq!(lr.outage_count(), 1);
         assert_eq!(lr.scale_out_count(), 1, "outages are not scale-outs");
+    }
+
+    /// Bugfix pin (this PR): an over-committed shard — batch-join
+    /// bookings pushing occupancy past the cap — reports utilization
+    /// clamped at 1.0, with the above-capacity seconds surfaced
+    /// separately, so `shard_imbalance` and balancer comparisons are
+    /// never skewed by >1 ratios.
+    #[test]
+    fn overcommitted_shard_clamps_utilization_and_reports_separately() {
+        // One slot for 10 s of lifetime, but 12 busy-seconds booked
+        // within... impossible for real slots; emulate the historical
+        // over-commit leak shape plus 3 s of explicit over-commit.
+        let mut sh = shard(12.0, 5, Some(1));
+        sh.overcommit_seconds = 3.0;
+        sh.peak_in_use = 3;
+        let lr = load(10.0, 12.0, vec![sh, shard(2.0, 1, Some(1))]);
+        let utils = lr.shard_utilizations();
+        assert_eq!(utils[0], 1.0, "over-committed shard must clamp to 1.0");
+        assert!((utils[1] - 0.2).abs() < 1e-12);
+        assert!(lr.server_utilization().unwrap() <= 1.0);
+        let imb = lr.shard_imbalance().unwrap();
+        assert!(
+            imb <= 1.0 / ((1.0 + 0.2) / 2.0) + 1e-12,
+            "imbalance must be computed over clamped ratios, got {imb}"
+        );
+        assert!((lr.overcommit_seconds() - 3.0).abs() < 1e-12);
+        assert_eq!(lr.peak_batch(), 3);
+    }
+
+    /// Token-budget utilization: defined only when a token gate existed
+    /// (continuous batching), admitted over capacity.
+    #[test]
+    fn token_budget_utilization_requires_a_gate() {
+        let plain = load(10.0, 0.0, vec![shard(0.0, 0, Some(1))]);
+        assert_eq!(plain.token_budget_utilization(), None);
+        let mut a = shard(0.0, 4, None);
+        a.prompt_tokens_admitted = 300;
+        a.prompt_token_capacity = 1000;
+        let mut b = shard(0.0, 2, None);
+        b.prompt_tokens_admitted = 200;
+        b.prompt_token_capacity = 1000;
+        let lr = load(10.0, 0.0, vec![a, b]);
+        assert!((lr.token_budget_utilization().unwrap() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -179,26 +179,29 @@ mod tests {
 
     /// The §4.3 invariant at FLEET scope, under shard targeting and
     /// mid-run shard failure: across randomized (K, balancer,
-    /// outage-time, migration-config) inputs, every delivered stream —
-    /// migrated or not, re-queued off a dead shard or not — keeps its
-    /// token accounting intact: no gaps (`tbts.len() + 1 ==
-    /// output_len`), no duplicates (decode-token conservation across
-    /// endpoints), order preserved (strictly positive perceived gaps).
-    /// This is `prop_migrated_stream_no_gaps_no_dups_order_preserved`
-    /// lifted from a single stream to a migration storm on a failing
-    /// fleet.
+    /// outage-time, migration-config, **batching-mode**) inputs, every
+    /// delivered stream — migrated or not, re-queued off a dead shard
+    /// or not, decoding in a batch whose size changes mid-decode as
+    /// neighbors join and leave — keeps its token accounting intact: no
+    /// gaps (`tbts.len() + 1 == output_len`), no duplicates
+    /// (decode-token conservation across endpoints), order preserved
+    /// (strictly positive perceived gaps). This is
+    /// `prop_migrated_stream_no_gaps_no_dups_order_preserved` lifted
+    /// from a single stream to a migration storm on a failing fleet.
     #[test]
     fn prop_fleet_migration_storm_under_outage_preserves_stream_integrity() {
         use crate::coordinator::policy::{Policy, PolicyKind};
         use crate::cost::unified::Constraint;
         use crate::profiles::{DeviceProfile, ServerProfile};
         use crate::sim::balancer::BalancerKind;
+        use crate::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
         use crate::trace::generator::{Arrival, WorkloadSpec};
 
         let mut migrated_total = 0usize;
         let mut requeued_total = 0usize;
+        let mut continuous_total = 0usize;
         check(
             "fleet-outage-migration-integrity",
             default_cases().clamp(16, 256),
@@ -216,10 +219,20 @@ mod tests {
                 let slots = 1 + r.below(2) as usize;
                 let bscale = r.f64() * 1.5;
                 let fault = r.chance(0.3);
+                // Half the storms run under continuous batching:
+                // (budget, curve-selector) — budgets down to 16
+                // tokens/tick force real token queueing, and the curve
+                // mix includes steep slowdowns so batch sizes shifting
+                // mid-decode stress the §4.3 buffer sizing.
+                let batching = if r.chance(0.5) {
+                    Some((16 + r.below(241) as u32, r.below(3) as u8))
+                } else {
+                    None
+                };
                 let seed = r.next_u64();
-                (k, balancer, targeting, frac, dead, slots, bscale, fault, seed)
+                (k, balancer, targeting, frac, dead, slots, bscale, fault, batching, seed)
             },
-            |&(k, balancer, targeting, frac, dead, slots, bscale, fault, seed)| {
+            |&(k, balancer, targeting, frac, dead, slots, bscale, fault, batching, seed)| {
                 let mut cfg = SimConfig {
                     seed,
                     ..Default::default()
@@ -243,6 +256,22 @@ mod tests {
                 let mut fleet = FleetConfig::sharded(k, slots, balancer)
                     .with_migration_targeting(targeting)
                     .with_outage(frac * span, dead);
+                if let Some((budget, curve_sel)) = batching {
+                    let curve = match curve_sel {
+                        0 => BatchLatencyCurve::Flat,
+                        1 => BatchLatencyCurve::Linear { alpha: 0.3 },
+                        _ => BatchLatencyCurve::Knee { knee: 4, alpha: 0.5 },
+                    };
+                    fleet = fleet.with_batching(BatchingMode::Continuous(
+                        ContinuousBatchConfig {
+                            prefill_tokens_per_tick: budget,
+                            tick_interval: 0.25,
+                            max_batch: None,
+                            curve,
+                        },
+                    ));
+                    continuous_total += 1;
+                }
                 if fault {
                     fleet = fleet.with_shard_fault(
                         dead,
@@ -314,11 +343,35 @@ mod tests {
                     "booking mismatch: {booked} vs {}",
                     out.load.migration_targeted
                 );
+                // Accounting sweep invariants: no double releases
+                // anywhere, and continuous-batching telemetry is
+                // internally consistent.
+                crate::prop_assert!(
+                    out.load.release_underflows == 0,
+                    "{} pool release underflows (double release)",
+                    out.load.release_underflows
+                );
+                if batching.is_some() {
+                    let util = out.load.token_budget_utilization();
+                    crate::prop_assert!(
+                        matches!(util, Some(u) if u >= 0.0 && u.is_finite()),
+                        "token utilization must be defined and finite: {util:?}"
+                    );
+                } else {
+                    crate::prop_assert!(
+                        out.load.batch_timeline.is_empty(),
+                        "slot-legacy runs must record no batch timeline"
+                    );
+                }
                 Ok(())
             },
         );
         assert!(migrated_total > 0, "property never exercised a migration");
         assert!(requeued_total > 0, "property never exercised an outage re-queue");
+        assert!(
+            continuous_total > 0,
+            "property never exercised continuous batching"
+        );
     }
 
     /// The full randomized storm grid (slow tier): every (K, balancer,
@@ -331,6 +384,7 @@ mod tests {
         use crate::cost::unified::Constraint;
         use crate::profiles::{DeviceProfile, ServerProfile};
         use crate::sim::balancer::BalancerKind;
+        use crate::sim::batching::{BatchingMode, ContinuousBatchConfig};
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting};
         use crate::trace::generator::{Arrival, WorkloadSpec};
@@ -345,6 +399,10 @@ mod tests {
             },
         );
         let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        let batchings = [
+            BatchingMode::SlotLegacy,
+            BatchingMode::Continuous(ContinuousBatchConfig::default()),
+        ];
         for k in [2usize, 4, 6] {
             let gap = 1.0 / (0.9 * k as f64);
             let trace = WorkloadSpec {
@@ -358,22 +416,30 @@ mod tests {
                     MigrationTargeting::BaseEndpoint,
                     MigrationTargeting::ShardTargeted,
                 ] {
-                    for frac in [0.1, 0.5, 0.9] {
-                        let fleet = FleetConfig::sharded(k, 1, balancer)
-                            .with_migration_targeting(targeting)
-                            .with_outage(frac * span, k - 1);
-                        let a = run_fleet(&sc, &trace, &policy, &fleet);
-                        assert_eq!(a.records.len(), trace.len());
-                        for rec in &a.records {
-                            assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len);
-                            assert!(rec.tbts.iter().all(|&t| t > 0.0));
+                    for batching in batchings {
+                        for frac in [0.1, 0.5, 0.9] {
+                            let fleet = FleetConfig::sharded(k, 1, balancer)
+                                .with_migration_targeting(targeting)
+                                .with_batching(batching)
+                                .with_outage(frac * span, k - 1);
+                            let a = run_fleet(&sc, &trace, &policy, &fleet);
+                            assert_eq!(a.records.len(), trace.len());
+                            for rec in &a.records {
+                                assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len);
+                                assert!(rec.tbts.iter().all(|&t| t > 0.0));
+                                assert_eq!(
+                                    rec.cost.server_decode_tokens
+                                        + rec.cost.device_decode_tokens,
+                                    rec.output_len as u64
+                                );
+                            }
+                            assert_eq!(a.load.release_underflows, 0);
+                            let b = run_fleet(&sc, &trace, &policy, &fleet);
                             assert_eq!(
-                                rec.cost.server_decode_tokens + rec.cost.device_decode_tokens,
-                                rec.output_len as u64
+                                a.records, b.records,
+                                "{k}/{balancer}/{targeting}/{batching}/{frac}"
                             );
                         }
-                        let b = run_fleet(&sc, &trace, &policy, &fleet);
-                        assert_eq!(a.records, b.records, "{k}/{balancer}/{targeting}/{frac}");
                     }
                 }
             }

@@ -79,6 +79,13 @@ pub struct FleetView<'a> {
     pub min_shards: usize,
     /// Upper bound of the band (see `min_shards`).
     pub max_shards: usize,
+    /// Prompt-token admission rate per shard under continuous batching
+    /// (`prefill_tokens_per_tick / tick_interval`); `None` for slot
+    /// fleets. When set, policies re-derive their load signals from the
+    /// token backlog instead of slot occupancy: the queue-depth and
+    /// predicted-delay signals become *seconds of queued prefill work*
+    /// per shard.
+    pub prefill_tokens_per_sec: Option<f64>,
 }
 
 impl FleetView<'_> {
@@ -120,6 +127,38 @@ impl FleetView<'_> {
             .filter(|s| s.phase != LifecyclePhase::Retired)
             .map(|s| s.view.work)
             .sum()
+    }
+
+    /// Streams currently in service on live shards (holding a slot, or
+    /// decoding in the shard batches under continuous batching).
+    pub fn in_service(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .map(|s| s.view.in_use)
+            .sum()
+    }
+
+    /// Total prompt tokens queued for admission on live shards — the
+    /// backlog the token gates still have to clear under continuous
+    /// batching.
+    pub fn queued_prompt_tokens(&self) -> u64 {
+        self.shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .map(|s| s.view.queued_tokens)
+            .sum()
+    }
+
+    /// Seconds of queued prefill work across the fleet under continuous
+    /// batching (`None` for slot fleets): the token backlog over one
+    /// shard's admission rate — the time a single shard would need to
+    /// clear it.
+    pub fn queued_backlog_seconds(&self) -> Option<f64> {
+        match self.prefill_tokens_per_sec {
+            Some(rate) if rate > 0.0 => Some(self.queued_prompt_tokens() as f64 / rate),
+            _ => None,
+        }
     }
 }
 
@@ -305,8 +344,19 @@ impl Autoscaler for Reactive {
 
     fn evaluate(&mut self, fleet: &FleetView<'_>, _rng: &mut Rng) -> ScaleAction {
         let provisioned = fleet.provisioned_count().max(1);
-        let outstanding = fleet.outstanding();
-        let per = outstanding as f64 / provisioned as f64;
+        // Load signal: outstanding requests per provisioned shard on
+        // slot fleets. Under continuous batching the signal is the
+        // *worse* of (a) the prefill backlog — seconds of queued tokens
+        // per shard, the admission pressure — and (b) the decode batch
+        // depth — in-service streams per shard. The token gate admits
+        // prefills freely, so without (b) a saturated batch (deep
+        // batches, degrading TBT, empty admission queue) would be
+        // invisible and the fleet could never scale out on decode load.
+        let demand = match fleet.queued_backlog_seconds() {
+            Some(backlog) => backlog.max(fleet.in_service() as f64),
+            None => fleet.outstanding() as f64,
+        };
+        let per = demand / provisioned as f64;
         if per > self.cfg.scale_out_per_shard {
             self.hi_streak += 1;
             self.lo_streak = 0;
@@ -326,7 +376,7 @@ impl Autoscaler for Reactive {
         if self.hi_streak >= self.cfg.sustain && provisioned < fleet.max_shards {
             // Enough shards to bring the per-shard load back under the
             // high watermark, capped by the step size.
-            let desired = (outstanding as f64 / self.cfg.scale_out_per_shard).ceil() as usize;
+            let desired = (demand / self.cfg.scale_out_per_shard).ceil() as usize;
             let n = desired
                 .saturating_sub(provisioned)
                 .clamp(1, self.cfg.max_step.max(1));
@@ -386,11 +436,6 @@ impl TtftTarget {
             last_action: f64::NEG_INFINITY,
         }
     }
-
-    fn predicted_delay(work: f64, shards: usize, slots: Option<usize>) -> f64 {
-        let capacity = shards.max(1) as f64 * slots.unwrap_or(1).max(1) as f64;
-        work / capacity
-    }
 }
 
 impl Autoscaler for TtftTarget {
@@ -402,18 +447,32 @@ impl Autoscaler for TtftTarget {
         if fleet.now - self.last_action < self.cfg.cooldown {
             return ScaleAction::Hold;
         }
-        let work = fleet.outstanding_work();
         let provisioned = fleet.provisioned_count().max(1);
         let slots = fleet.slots_per_shard;
-        let predicted = Self::predicted_delay(work, provisioned, slots);
+        // The predictor's units: on slot fleets, outstanding service
+        // seconds over provisioned slot capacity; under continuous
+        // batching, the *worse* of the queued prompt-token backlog over
+        // the admission token rate (admission delay) and the
+        // outstanding service seconds (decode saturation — in-batch
+        // streams keep their service estimate until release, so a deep
+        // batch stays visible even with an empty admission queue), each
+        // over one capacity unit per shard.
+        let (work, per_shard_capacity) = match fleet.queued_backlog_seconds() {
+            Some(backlog) => (backlog.max(fleet.outstanding_work()), 1.0),
+            None => (
+                fleet.outstanding_work(),
+                slots.unwrap_or(1).max(1) as f64,
+            ),
+        };
+        let predicted = work / (provisioned as f64 * per_shard_capacity);
         // Band-edge guards mirror Reactive's: never emit an action the
         // fleet would clamp to a no-op, or the cooldown is wasted.
         if predicted > self.cfg.target_delay_s && provisioned < fleet.max_shards {
             // Enough capacity to bring the predicted delay back under the
             // deadline budget (provisioned counts in-flight warm-ups, so
             // the policy does not re-fire while a cold shard loads).
-            let per_shard = slots.unwrap_or(1).max(1) as f64;
-            let desired = (work / (self.cfg.target_delay_s * per_shard)).ceil() as usize;
+            let desired =
+                (work / (self.cfg.target_delay_s * per_shard_capacity)).ceil() as usize;
             let n = desired
                 .saturating_sub(provisioned)
                 .clamp(1, self.cfg.max_step.max(1));
@@ -422,7 +481,7 @@ impl Autoscaler for TtftTarget {
         }
         let warm = fleet.warm_count();
         if warm > fleet.min_shards.max(1) {
-            let after = Self::predicted_delay(work, warm - 1, slots);
+            let after = work / (warm.saturating_sub(1).max(1) as f64 * per_shard_capacity);
             if after < self.cfg.target_delay_s * self.cfg.scale_in_margin {
                 self.last_action = fleet.now;
                 return ScaleAction::ScaleIn { shards: 1 };
@@ -578,6 +637,7 @@ mod tests {
                 queued,
                 slots: Some(1),
                 work,
+                queued_tokens: queued as u64 * 50,
                 admitting: phase == LifecyclePhase::Warm,
             },
             phase,
@@ -591,6 +651,16 @@ mod tests {
             slots_per_shard: Some(1),
             min_shards: 1,
             max_shards: 8,
+            prefill_tokens_per_sec: None,
+        }
+    }
+
+    /// A continuous-batching fleet view: the token rate is set and the
+    /// policies must read backlog in tokens.
+    fn token_view<'a>(now: f64, shards: &'a [ShardStatus], rate: f64) -> FleetView<'a> {
+        FleetView {
+            prefill_tokens_per_sec: Some(rate),
+            ..view(now, shards)
         }
     }
 
@@ -736,6 +806,7 @@ mod tests {
                 slots_per_shard: Some(1),
                 min_shards: 1,
                 max_shards: 8,
+                prefill_tokens_per_sec: None,
             }
         }
         // Idle at warm == min: ScaleIn would be clamped, so Hold.
@@ -805,6 +876,126 @@ mod tests {
             p.evaluate(&view(1.0, &idle), &mut rng),
             ScaleAction::ScaleIn { shards: 1 }
         );
+    }
+
+    /// Continuous batching re-derives the queue-depth signal from the
+    /// token backlog: a fleet whose *request* count looks calm but whose
+    /// queued prompt tokens are deep must trigger reactive scale-out —
+    /// and vice versa, a shallow token backlog holds even with many
+    /// small queued requests.
+    #[test]
+    fn reactive_token_backlog_signal_under_continuous_batching() {
+        let mut rng = Rng::new(9);
+        let cfg = ReactiveConfig {
+            scale_out_per_shard: 2.0, // backlog-seconds per shard
+            scale_in_per_shard: 0.25,
+            sustain: 1,
+            cooldown: 0.0,
+            max_step: 8,
+        };
+        // One queued request of 2 000 tokens at 100 tok/s = 20 s of
+        // backlog per shard ≫ 2 s watermark.
+        let mut deep = vec![status(1, 1, 1.0, LifecyclePhase::Warm)];
+        deep[0].view.queued_tokens = 2000;
+        let mut p = Reactive::new(cfg);
+        match p.evaluate(&token_view(0.0, &deep, 100.0), &mut rng) {
+            ScaleAction::ScaleOut { shards } => {
+                // desired = ceil(20 / 2) = 10, minus 1 provisioned, cap 8.
+                assert_eq!(shards, 8);
+            }
+            other => panic!("deep token backlog must scale out, got {other:?}"),
+        }
+        // Nine queued requests of 10 tokens each = 0.9 s of backlog:
+        // under the watermark even though the request count (9 per
+        // shard) would have fired the legacy signal.
+        let mut shallow = vec![status(1, 9, 12.0, LifecyclePhase::Warm)];
+        shallow[0].view.queued_tokens = 90;
+        let mut q = Reactive::new(cfg);
+        assert_eq!(
+            q.evaluate(&token_view(0.0, &shallow, 100.0), &mut rng),
+            ScaleAction::Hold,
+            "a shallow token backlog must not scale out"
+        );
+        // The same view under slot semantics DOES fire (legacy signal
+        // unchanged).
+        let mut r = Reactive::new(cfg);
+        assert!(matches!(
+            r.evaluate(&view(0.0, &shallow), &mut rng),
+            ScaleAction::ScaleOut { .. }
+        ));
+        // Decode saturation (review fix): a deep batch with an EMPTY
+        // admission queue must still trigger scale-out — the token gate
+        // admits freely, so batch depth is the only congestion signal
+        // left.
+        let mut saturated = vec![status(12, 0, 18.0, LifecyclePhase::Warm)];
+        saturated[0].view.queued_tokens = 0;
+        let mut s = Reactive::new(cfg);
+        match s.evaluate(&token_view(0.0, &saturated, 100.0), &mut rng) {
+            ScaleAction::ScaleOut { shards } => {
+                // demand = max(0, 12) = 12 → desired ceil(12/2) = 6, +5.
+                assert_eq!(shards, 5);
+            }
+            other => panic!("deep batch must scale out, got {other:?}"),
+        }
+    }
+
+    /// TTFT-target under continuous batching predicts admission delay
+    /// from the token backlog over the admission rate.
+    #[test]
+    fn ttft_target_token_backlog_predictor() {
+        let mut rng = Rng::new(10);
+        let mut p = TtftTarget::new(TtftTargetConfig {
+            target_delay_s: 2.0,
+            scale_in_margin: 0.5,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        // 1 200 queued tokens at 100 tok/s = 12 s predicted on one
+        // shard: need ceil(12/2) = 6 shards, +5.
+        let mut hot = vec![status(1, 3, 0.5, LifecyclePhase::Warm)];
+        hot[0].view.queued_tokens = 1200;
+        assert_eq!(
+            p.evaluate(&token_view(0.0, &hot, 100.0), &mut rng),
+            ScaleAction::ScaleOut { shards: 5 }
+        );
+        // Empty backlog on two warm shards: scale-in is safe (predicted
+        // delay 0 with margin to spare).
+        let mut idle = vec![
+            status(1, 0, 0.4, LifecyclePhase::Warm),
+            status(0, 0, 0.0, LifecyclePhase::Warm),
+        ];
+        idle[0].view.queued_tokens = 0;
+        idle[1].view.queued_tokens = 0;
+        assert_eq!(
+            p.evaluate(&token_view(1.0, &idle, 100.0), &mut rng),
+            ScaleAction::ScaleIn { shards: 1 }
+        );
+        // Decode saturation (review fix): with no admission backlog but
+        // 12 s of in-batch service outstanding, the predictor must
+        // still see the congestion and scale out.
+        let mut deep = vec![status(10, 0, 12.0, LifecyclePhase::Warm)];
+        deep[0].view.queued_tokens = 0;
+        let mut q = TtftTarget::new(TtftTargetConfig {
+            target_delay_s: 2.0,
+            scale_in_margin: 0.5,
+            cooldown: 0.0,
+            max_step: 8,
+        });
+        assert_eq!(
+            q.evaluate(&token_view(2.0, &deep, 100.0), &mut rng),
+            ScaleAction::ScaleOut { shards: 5 },
+            "decode saturation must stay visible through outstanding work"
+        );
+        // Helper sanity: the backlog aggregates live shards only.
+        let mixed = vec![
+            status(0, 2, 0.0, LifecyclePhase::Warm),
+            status(0, 4, 0.0, LifecyclePhase::Retired),
+        ];
+        let v = token_view(0.0, &mixed, 100.0);
+        assert_eq!(v.queued_prompt_tokens(), 100);
+        assert_eq!(v.queued_backlog_seconds(), Some(1.0));
+        assert_eq!(v.in_service(), 0);
+        assert_eq!(view(0.0, &mixed).queued_backlog_seconds(), None);
     }
 
     #[test]

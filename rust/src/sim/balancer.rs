@@ -42,6 +42,12 @@ pub struct ShardView {
     /// pre-drawn prefill samples of requests queued or currently in
     /// service (retired when the slot frees).
     pub work: f64,
+    /// Prompt tokens of the live queued entries — the admission-backlog
+    /// signal under continuous batching, where `slots` is `None` and
+    /// the token budget (not a slot count) gates admission. Balancers
+    /// and the autoscaler read backlog in tokens there; always
+    /// maintained (0 on an empty queue) so slot fleets surface it too.
+    pub queued_tokens: u64,
     /// Whether the shard accepts new work. Cold (still loading),
     /// draining (scale-in victim), and retired shards are not admitting;
     /// every balancer must skip them while any admitting shard exists.
@@ -103,9 +109,12 @@ fn argmin_admitting(
 /// Pick the shard a §4.3 migrating stream re-prefills on (and the shard
 /// an outage victim re-queues to): **least-work-with-estimate** — the
 /// admitting shard minimizing `outstanding work + extra(i)`, where
-/// `extra` is the caller's per-shard cost estimate (typically the
-/// shard's RTT offset, or the expected re-prefill seconds on that
-/// shard). Ties break to the lowest index.
+/// `extra` is the caller's per-shard cost estimate: the shard's RTT
+/// offset plus its predicted admission delay — seconds of queued-ahead
+/// slot work under the legacy slot pools, or the queued **prompt-token
+/// backlog over the admission token rate** under continuous batching
+/// (the fleet's `reprefill_queue_delay` builds it either way). Ties
+/// break to the lowest index.
 ///
 /// Unlike [`Balancer::pick`], this returns `None` when **no** shard
 /// admits (every replica cold, draining, or retired): a migrating stream
@@ -325,6 +334,7 @@ mod tests {
             queued,
             slots: Some(2),
             work,
+            queued_tokens: queued as u64 * 10,
             admitting: true,
         }
     }
@@ -525,6 +535,25 @@ mod tests {
                 None => assert!(shards.iter().all(|s| !s.admitting)),
             }
         }
+    }
+
+    /// Token-priced targeting (continuous batching): a shard with less
+    /// outstanding work but a deep queued-token backlog loses the pick
+    /// once the backlog is priced into `extra` — the admission delay a
+    /// migrating re-prefill would actually pay at the token gate.
+    #[test]
+    fn reprefill_target_prices_token_backlog() {
+        let mut shards = vec![view(2, 0, 1.0), view(2, 6, 1.5)];
+        shards[0].queued_tokens = 4000; // deep prefill backlog
+        shards[1].queued_tokens = 0;
+        // Unpriced, shard 0 wins on raw work…
+        assert_eq!(pick_reprefill_target(&shards, |_| 0.0), Some(0));
+        // …but at 512 tokens/s its backlog is ~7.8 s of admission delay.
+        let tokens_per_sec = 512.0;
+        assert_eq!(
+            pick_reprefill_target(&shards, |i| shards[i].queued_tokens as f64 / tokens_per_sec),
+            Some(1)
+        );
     }
 
     /// The all-cold/draining fallback returns `None` (the caller falls

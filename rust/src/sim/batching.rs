@@ -1,0 +1,352 @@
+//! Continuous batching within a shard (the vLLM/Orca serving model).
+//!
+//! The slot model the fleet shipped with (PRs 1–4) holds one admission
+//! slot per stream for the stream's whole lifetime — prefill *and*
+//! decode — so a shard's concurrency is a fixed small integer and
+//! admission blocks on decode completions. Real serving stacks do not
+//! work that way: Orca schedules at iteration granularity and vLLM
+//! admits prefills against a token budget while decode streams share
+//! the accelerator in one continuous batch, paying per-token latency
+//! that grows with the batch size. This module holds the *configuration*
+//! side of that model; the mechanics (tick events, token-gated
+//! admission, batch-occupancy decode slowdown) live in the
+//! [`crate::sim::fleet`] event loop and [`crate::sim::engine`].
+//!
+//! Two admission regimes, selected by [`BatchingMode`] on
+//! `FleetConfig::batching`:
+//!
+//! * [`BatchingMode::SlotLegacy`] (default) — the historical bounded
+//!   slot pool, byte-identical to the pre-batching fleet under every
+//!   balancer × autoscaler (no tick events are scheduled, no slowdown
+//!   factor is applied).
+//! * [`BatchingMode::Continuous`] — prefill admission is gated by a
+//!   prompt-token budget replenished every scheduling tick
+//!   ([`ContinuousBatchConfig::prefill_tokens_per_tick`] /
+//!   [`ContinuousBatchConfig::tick_interval`]); admitted decode streams
+//!   share the shard's batch, and each stream's inter-token gaps are
+//!   scaled by [`BatchLatencyCurve::slowdown`] evaluated at the batch
+//!   size the stream joined (see the approximation note below).
+//!
+//! # Approximation: join-time batch pricing
+//!
+//! A stream's decode pace is priced at the batch size observed when it
+//! is admitted (including itself); streams that join *later* see the
+//! larger batch, but an already-running stream is not repriced
+//! mid-decode. This keeps the engine's one-shot trajectory resolution —
+//! and with it the §4.3 migration walk, delivery smoothing, and cost
+//! metering — intact, at the cost of underestimating slowdown during a
+//! ramp (and overestimating it during a drain). Iteration-level
+//! repricing is the seeded follow-on in ROADMAP.md, alongside chunked
+//! prefill and preemption.
+
+/// Per-token decode latency as a function of the shard's batch size.
+///
+/// `slowdown(b)` multiplies a stream's sampled inter-token gaps; it is
+/// ≥ 1.0 and `slowdown(1) == 1.0`, so a lone stream reproduces the
+/// profiled single-stream decode exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchLatencyCurve {
+    /// No batch interference (an ideally parallel accelerator): every
+    /// batch size decodes at the single-stream rate.
+    Flat,
+    /// Linear interference: `1 + alpha × (b − 1)` — every extra stream
+    /// in the batch costs a fixed fraction of the single-stream gap.
+    Linear {
+        /// Marginal per-stream slowdown.
+        alpha: f64,
+    },
+    /// Hardware-knee shape: batching is free up to `knee` streams
+    /// (parallelism absorbs it), then grows linearly at `alpha` per
+    /// stream — the memory-bandwidth-bound regime of a real GPU.
+    Knee {
+        /// Largest batch size served at the single-stream rate.
+        knee: usize,
+        /// Marginal per-stream slowdown beyond the knee.
+        alpha: f64,
+    },
+}
+
+impl BatchLatencyCurve {
+    /// Multiplier on sampled inter-token gaps for a stream joining a
+    /// batch of `batch` streams (including itself). Always ≥ 1.0;
+    /// `batch ≤ 1` always maps to exactly 1.0.
+    pub fn slowdown(&self, batch: usize) -> f64 {
+        let extra = batch.saturating_sub(1) as f64;
+        match *self {
+            BatchLatencyCurve::Flat => 1.0,
+            BatchLatencyCurve::Linear { alpha } => 1.0 + alpha.max(0.0) * extra,
+            BatchLatencyCurve::Knee { knee, alpha } => {
+                let beyond = batch.saturating_sub(knee.max(1)) as f64;
+                1.0 + alpha.max(0.0) * beyond
+            }
+        }
+    }
+
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> String {
+        match *self {
+            BatchLatencyCurve::Flat => "flat".to_string(),
+            BatchLatencyCurve::Linear { alpha } => format!("linear:{alpha}"),
+            BatchLatencyCurve::Knee { knee, alpha } => format!("knee:{knee}:{alpha}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `flat`, `linear:ALPHA`, or `knee:K:ALPHA`
+    /// (bare `linear` / `knee` take the defaults 0.05 / 8:0.05).
+    /// Trailing fields are rejected — a typo'd arity must error, not
+    /// silently run a different curve.
+    pub fn parse(s: &str) -> Option<BatchLatencyCurve> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let head = parts.next()?;
+        let curve = match head {
+            "flat" => BatchLatencyCurve::Flat,
+            "linear" => {
+                let alpha = match parts.next() {
+                    None => 0.05,
+                    Some(a) => a.parse::<f64>().ok()?,
+                };
+                BatchLatencyCurve::Linear { alpha }
+            }
+            "knee" => {
+                let knee = match parts.next() {
+                    None => 8,
+                    Some(k) => k.parse::<usize>().ok()?,
+                };
+                let alpha = match parts.next() {
+                    None => 0.05,
+                    Some(a) => a.parse::<f64>().ok()?,
+                };
+                BatchLatencyCurve::Knee { knee, alpha }
+            }
+            _ => return None,
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(curve)
+    }
+}
+
+impl std::fmt::Display for BatchLatencyCurve {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Tunables of the continuous-batching admission and decode model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContinuousBatchConfig {
+    /// Prompt tokens a shard may admit per scheduling tick. A prompt
+    /// longer than the whole per-tick budget is admitted when the tick's
+    /// budget is untouched and consumes all of it (no chunked prefill
+    /// yet — see ROADMAP), so oversized prompts cannot starve.
+    pub prefill_tokens_per_tick: u32,
+    /// Seconds between admission ticks (budget replenishment).
+    pub tick_interval: f64,
+    /// Optional cap on concurrently decoding streams per shard (`None`
+    /// = unbounded; the latency curve is then the only brake). A §4.3
+    /// migrated-in stream joins even a full batch — its handoff time is
+    /// already committed.
+    pub max_batch: Option<usize>,
+    /// Per-token decode latency vs batch size.
+    pub curve: BatchLatencyCurve,
+}
+
+impl ContinuousBatchConfig {
+    /// Sustained prompt-token admission rate (tokens/second).
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.prefill_tokens_per_tick as f64 / self.tick_interval
+    }
+
+    /// Clamp degenerate values (zero budget, non-positive tick) so the
+    /// event loop can never stall on an un-replenishable budget.
+    pub fn normalized(&self) -> ContinuousBatchConfig {
+        ContinuousBatchConfig {
+            prefill_tokens_per_tick: self.prefill_tokens_per_tick.max(1),
+            tick_interval: if self.tick_interval > 0.0 {
+                self.tick_interval
+            } else {
+                0.25
+            },
+            max_batch: self.max_batch.map(|m| m.max(1)),
+            curve: self.curve,
+        }
+    }
+}
+
+impl Default for ContinuousBatchConfig {
+    fn default() -> Self {
+        ContinuousBatchConfig {
+            prefill_tokens_per_tick: 128,
+            tick_interval: 0.25,
+            max_batch: None,
+            curve: BatchLatencyCurve::Knee {
+                knee: 8,
+                alpha: 0.05,
+            },
+        }
+    }
+}
+
+/// How a shard admits and serves concurrent streams.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum BatchingMode {
+    /// The historical model: a bounded slot pool per shard, one slot
+    /// held per stream for its whole lifetime. Byte-identical to the
+    /// pre-batching fleet (the parity tests pin this under every
+    /// balancer × autoscaler).
+    #[default]
+    SlotLegacy,
+    /// Continuous batching: token-budget prefill admission + shared
+    /// decode batch with a batch-size-dependent latency curve.
+    Continuous(ContinuousBatchConfig),
+}
+
+impl BatchingMode {
+    /// Whether this mode schedules tick events and token-gated pools.
+    pub fn is_continuous(&self) -> bool {
+        matches!(self, BatchingMode::Continuous(_))
+    }
+
+    /// The continuous config, if any.
+    pub fn continuous(&self) -> Option<&ContinuousBatchConfig> {
+        match self {
+            BatchingMode::Continuous(c) => Some(c),
+            BatchingMode::SlotLegacy => None,
+        }
+    }
+
+    /// Short label used in tables and CSVs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BatchingMode::SlotLegacy => "slot-legacy",
+            BatchingMode::Continuous(_) => "continuous",
+        }
+    }
+
+    /// Clamp the continuous tunables; the legacy mode has none.
+    pub fn normalized(&self) -> BatchingMode {
+        match self {
+            BatchingMode::SlotLegacy => BatchingMode::SlotLegacy,
+            BatchingMode::Continuous(c) => BatchingMode::Continuous(c.normalized()),
+        }
+    }
+}
+
+impl std::fmt::Display for BatchingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slowdown_is_one_for_lone_stream_and_monotone() {
+        let curves = [
+            BatchLatencyCurve::Flat,
+            BatchLatencyCurve::Linear { alpha: 0.1 },
+            BatchLatencyCurve::Knee {
+                knee: 4,
+                alpha: 0.2,
+            },
+        ];
+        for curve in curves {
+            assert_eq!(curve.slowdown(0), 1.0, "{curve}");
+            assert_eq!(curve.slowdown(1), 1.0, "{curve}");
+            let mut prev = 1.0;
+            for b in 2..40 {
+                let s = curve.slowdown(b);
+                assert!(s >= prev, "{curve}: slowdown must be nondecreasing");
+                assert!(s >= 1.0);
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn flat_is_constant_and_knee_is_free_below_knee() {
+        assert_eq!(BatchLatencyCurve::Flat.slowdown(100), 1.0);
+        let knee = BatchLatencyCurve::Knee {
+            knee: 8,
+            alpha: 0.05,
+        };
+        for b in 1..=8 {
+            assert_eq!(knee.slowdown(b), 1.0, "below the knee batching is free");
+        }
+        assert!((knee.slowdown(9) - 1.05).abs() < 1e-12);
+        assert!((knee.slowdown(18) - 1.5).abs() < 1e-12);
+        let lin = BatchLatencyCurve::Linear { alpha: 0.1 };
+        assert!((lin.slowdown(11) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_alpha_clamps_to_no_speedup() {
+        // A mis-tuned curve must never make batching a speedup.
+        let lin = BatchLatencyCurve::Linear { alpha: -0.5 };
+        assert_eq!(lin.slowdown(16), 1.0);
+        let knee = BatchLatencyCurve::Knee {
+            knee: 2,
+            alpha: -1.0,
+        };
+        assert_eq!(knee.slowdown(16), 1.0);
+    }
+
+    #[test]
+    fn curve_parse_roundtrips_labels() {
+        for s in ["flat", "linear:0.05", "knee:8:0.05", "linear", "knee"] {
+            let c = BatchLatencyCurve::parse(s).unwrap_or_else(|| panic!("parse {s}"));
+            assert_eq!(
+                BatchLatencyCurve::parse(&c.label()),
+                Some(c),
+                "label must roundtrip for {s}"
+            );
+        }
+        assert_eq!(BatchLatencyCurve::parse("flat"), Some(BatchLatencyCurve::Flat));
+        assert_eq!(
+            BatchLatencyCurve::parse("knee:4:0.2"),
+            Some(BatchLatencyCurve::Knee {
+                knee: 4,
+                alpha: 0.2
+            })
+        );
+        assert!(BatchLatencyCurve::parse("nope").is_none());
+        assert!(BatchLatencyCurve::parse("linear:abc").is_none());
+        // Trailing fields are arity errors, not silently dropped.
+        assert!(BatchLatencyCurve::parse("flat:0.3").is_none());
+        assert!(BatchLatencyCurve::parse("linear:0.05:oops").is_none());
+        assert!(BatchLatencyCurve::parse("knee:8:0.05:2").is_none());
+    }
+
+    #[test]
+    fn config_normalization_clamps_degenerate_values() {
+        let cfg = ContinuousBatchConfig {
+            prefill_tokens_per_tick: 0,
+            tick_interval: 0.0,
+            max_batch: Some(0),
+            curve: BatchLatencyCurve::Flat,
+        }
+        .normalized();
+        assert_eq!(cfg.prefill_tokens_per_tick, 1);
+        assert!(cfg.tick_interval > 0.0);
+        assert_eq!(cfg.max_batch, Some(1));
+        let good = ContinuousBatchConfig::default();
+        assert_eq!(good.normalized(), good, "sane configs are untouched");
+        assert!((good.tokens_per_sec() - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mode_labels_and_helpers() {
+        assert_eq!(BatchingMode::default(), BatchingMode::SlotLegacy);
+        assert!(!BatchingMode::SlotLegacy.is_continuous());
+        assert!(BatchingMode::SlotLegacy.continuous().is_none());
+        let c = BatchingMode::Continuous(ContinuousBatchConfig::default());
+        assert!(c.is_continuous());
+        assert_eq!(c.label(), "continuous");
+        assert_eq!(BatchingMode::SlotLegacy.label(), "slot-legacy");
+        assert_eq!(c.normalized(), c);
+    }
+}

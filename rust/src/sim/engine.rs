@@ -200,6 +200,32 @@ pub(crate) fn pre_draw(
     }
 }
 
+/// Batch-occupancy context for the resolving stream (continuous
+/// batching within a shard): multipliers the fleet loop derived from
+/// the shard's [`crate::sim::batching::BatchLatencyCurve`] at the batch
+/// size each server-side decode joined. The default (both 1.0 — slot
+/// semantics) leaves every sampled gap bit-identical, preserving the
+/// legacy replay byte-for-byte (IEEE-754 multiplication by 1.0 is
+/// exact).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BatchCtx {
+    /// Multiplier on the winner-side server decode gaps (the batch the
+    /// stream joined at admission).
+    pub decode_slowdown: f64,
+    /// Multiplier on the §4.3 migrated tail's server decode gaps (the
+    /// target shard's batch at booking time).
+    pub migration_decode_slowdown: f64,
+}
+
+impl Default for BatchCtx {
+    fn default() -> Self {
+        BatchCtx {
+            decode_slowdown: 1.0,
+            migration_decode_slowdown: 1.0,
+        }
+    }
+}
+
 /// Absolute times at which the contended resources were granted.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct ResourceTimes {
@@ -251,6 +277,10 @@ pub(crate) struct Resolved {
 /// shard-targeted migration (its RTT plus any predicted queue delay
 /// folded into `extra_rtt`). `None` falls back to `server`, the
 /// historical single-target behavior, byte-for-byte.
+///
+/// `batch` scales server-side decode gaps by the fleet's batch-latency
+/// curve (continuous batching); `BatchCtx::default()` (both factors
+/// 1.0) is the slot-legacy identity.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn resolve_request(
     req: &Request,
@@ -262,6 +292,7 @@ pub(crate) fn resolve_request(
     planner: &MigrationPlanner,
     cfg: &SimConfig,
     times: ResourceTimes,
+    batch: BatchCtx,
     rng: &mut Rng,
 ) -> Resolved {
     let migration_server = migration_server.unwrap_or(server);
@@ -342,15 +373,18 @@ pub(crate) fn resolve_request(
 
     // --- decode -------------------------------------------------------
     // Token i (1-based) generated at gen[i-1]; token 1 at ttft.
+    // Server decode pays the batch slowdown (×1.0 under slot legacy —
+    // bit-exact, so the replay parity is preserved); device decode is
+    // single-flight and never batched.
     let mut gen = Vec::with_capacity(n as usize);
     gen.push(ttft);
     {
-        let gaps = match winner {
-            EndpointKind::Server => server.sample_gaps(l, n - 1, rng),
-            EndpointKind::Device => device.sample_gaps(l, n - 1, rng),
+        let (gaps, scale) = match winner {
+            EndpointKind::Server => (server.sample_gaps(l, n - 1, rng), batch.decode_slowdown),
+            EndpointKind::Device => (device.sample_gaps(l, n - 1, rng), 1.0),
         };
         for g in gaps {
-            gen.push(gen.last().unwrap() + g);
+            gen.push(gen.last().unwrap() + g * scale);
         }
     }
 
@@ -399,19 +433,22 @@ pub(crate) fn resolve_request(
                                         }
                                     };
                                 let ready = t_now + t_m_actual;
-                                // Rebuild the tail from the target.
+                                // Rebuild the tail from the target. A
+                                // server-bound tail decodes inside the
+                                // target shard's batch (×1.0 legacy).
                                 gen.truncate(i as usize);
                                 gen.push(ready);
-                                let gaps = match target {
-                                    EndpointKind::Server => {
-                                        migration_server.sample_gaps(reprefill, n - i - 1, rng)
-                                    }
+                                let (gaps, scale) = match target {
+                                    EndpointKind::Server => (
+                                        migration_server.sample_gaps(reprefill, n - i - 1, rng),
+                                        batch.migration_decode_slowdown,
+                                    ),
                                     EndpointKind::Device => {
-                                        device.sample_gaps(reprefill, n - i - 1, rng)
+                                        (device.sample_gaps(reprefill, n - i - 1, rng), 1.0)
                                     }
                                 };
                                 for g in gaps {
-                                    gen.push(gen.last().unwrap() + g);
+                                    gen.push(gen.last().unwrap() + g * scale);
                                 }
                                 // Costs: source decoded i tokens, target
                                 // re-prefilled and decodes the rest.
@@ -797,6 +834,7 @@ mod tests {
                 &planner,
                 &cfg,
                 times,
+                BatchCtx::default(),
                 &mut rng,
             )
         };
@@ -823,6 +861,69 @@ mod tests {
             done(&b)
         );
         assert!(b.record.delay_num >= a.record.delay_num);
+    }
+
+    /// Batch-occupancy decode pricing: the same request resolved with a
+    /// decode slowdown keeps its TTFT and draws (prefill and the race
+    /// are batch-independent) but stretches every raw generation gap by
+    /// exactly the factor — and the identity factor 1.0 is bit-exact,
+    /// the property the slot-legacy byte-parity rests on.
+    #[test]
+    fn batch_ctx_scales_server_decode_gaps_exactly() {
+        let cfg = SimConfig::default();
+        let sc = scenario(Constraint::Server, 18);
+        let planner = MigrationPlanner::new(cfg.migration, sc.costs);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let req = Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 64,
+            output_len: 32,
+        };
+        let pre = PreDrawn {
+            decision: Decision::ServerOnly,
+            server_sample: Some(0.4),
+            dev_prefill_dur: 0.1,
+        };
+        let times = ResourceTimes {
+            server_admit: Some(0.0),
+            device_grant: f64::INFINITY,
+        };
+        let resolve_with = |slow: f64| {
+            let mut rng = Rng::new(77);
+            resolve_request(
+                &req,
+                &pre,
+                &policy,
+                &sc.server,
+                &sc.device,
+                None,
+                &planner,
+                &cfg,
+                times,
+                BatchCtx {
+                    decode_slowdown: slow,
+                    migration_decode_slowdown: 1.0,
+                },
+                &mut rng,
+            )
+        };
+        let base = resolve_with(1.0);
+        let slowed = resolve_with(3.0);
+        assert_eq!(base.record.ttft.to_bits(), slowed.record.ttft.to_bits());
+        // The slot-hold (admit → last generated token) stretches by the
+        // factor: release − admit = ttft + Σ raw gaps × slowdown.
+        let hold = |r: &Resolved| r.server_release.unwrap() - r.record.ttft;
+        assert!(
+            (hold(&slowed) - 3.0 * hold(&base)).abs() < 1e-9,
+            "decode span must scale exactly: {} vs 3×{}",
+            hold(&slowed),
+            hold(&base)
+        );
+        // Identity is bit-exact (the parity guarantee).
+        let again = resolve_with(1.0);
+        assert_eq!(base.server_release.unwrap().to_bits(), again.server_release.unwrap().to_bits());
+        assert_eq!(base.record, again.record);
     }
 
     #[test]

@@ -63,6 +63,23 @@
 //! the PR-3 single-target behavior (byte-for-byte up to the dying-shard
 //! RTT fix noted on the variant).
 //!
+//! # Batching within a shard
+//!
+//! Each shard serves its admitted streams under a
+//! [`crate::sim::batching::BatchingMode`]. The default,
+//! `SlotLegacy`, is the historical bounded slot pool (one slot per
+//! stream, held for the stream's whole lifetime) and is byte-identical
+//! to the pre-batching fleet. `Continuous` replaces the slot count with
+//! vLLM/Orca-style continuous batching: prefill admission is gated by a
+//! prompt-token budget replenished on periodic `BatchTick` events, and
+//! admitted decode streams share the shard's batch — their sampled
+//! inter-token gaps are scaled by a pluggable
+//! [`crate::sim::batching::BatchLatencyCurve`] evaluated at the batch
+//! size the stream joined. A §4.3 migrated-in stream always joins the
+//! running batch (its handoff time is committed), which continuous
+//! batching makes literal. See `docs/fleet.md` for the model and its
+//! join-time-pricing approximation.
+//!
 //! # Failure injection
 //!
 //! Per-shard degradation ([`ShardFault`]: an extra TTFT spike mixture
@@ -92,13 +109,15 @@ use crate::coordinator::policy::Policy;
 use crate::cost::unified::Constraint;
 use crate::endpoint::{EndpointKind, ServerEndpoint};
 use crate::metrics::{
-    LoadReport, RequestRecord, ScaleEvent, ScaleEventKind, ShardCountSample, ShardLoad,
+    BatchSample, LoadReport, RequestRecord, ScaleEvent, ScaleEventKind, ShardCountSample,
+    ShardLoad,
 };
 use crate::sim::autoscaler::{
     AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
 };
 use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardView};
-use crate::sim::engine::{pre_draw, resolve_request, PreDrawn, ResourceTimes, Scenario};
+use crate::sim::batching::{BatchingMode, ContinuousBatchConfig};
+use crate::sim::engine::{pre_draw, resolve_request, BatchCtx, PreDrawn, ResourceTimes, Scenario};
 use crate::stats::describe::Summary;
 use crate::trace::Trace;
 use crate::util::rng::Rng;
@@ -219,6 +238,13 @@ pub struct FleetConfig {
     /// Scheduled mid-run shard outages (times relative to the first
     /// arrival). Empty = no failure injection, byte-identical to PR-3.
     pub outages: Vec<ShardOutage>,
+    /// How each shard admits and serves concurrent streams. The default
+    /// ([`BatchingMode::SlotLegacy`]) is the historical slot pool,
+    /// byte-identical to the pre-batching fleet; `Continuous` switches
+    /// to token-budget prefill admission and batch-size-dependent
+    /// decode (ignoring `server_slots` — the batch, not a slot count,
+    /// bounds concurrency).
+    pub batching: BatchingMode,
 }
 
 impl FleetConfig {
@@ -235,6 +261,7 @@ impl FleetConfig {
             migration_targeting: MigrationTargeting::BaseEndpoint,
             shard_faults: Vec::new(),
             outages: Vec::new(),
+            batching: BatchingMode::SlotLegacy,
         }
     }
 
@@ -293,6 +320,28 @@ impl FleetConfig {
         self.outages.push(ShardOutage { at, shard });
         self
     }
+
+    /// Select the within-shard batching model. `Continuous` replaces
+    /// the per-shard slot cap with token-budget prefill admission and a
+    /// shared decode batch; `server_slots` is then ignored.
+    pub fn with_batching(mut self, batching: BatchingMode) -> FleetConfig {
+        self.batching = batching;
+        self
+    }
+
+    /// Convenience: a K-shard continuous-batching fleet.
+    pub fn continuous(
+        shards: usize,
+        cfg: ContinuousBatchConfig,
+        balancer: BalancerKind,
+    ) -> FleetConfig {
+        FleetConfig {
+            shards: shards.max(1),
+            balancer,
+            batching: BatchingMode::Continuous(cfg),
+            ..FleetConfig::replay(true)
+        }
+    }
 }
 
 /// Result of a fleet run: per-request records (trace order) plus load
@@ -337,6 +386,12 @@ enum EvKind {
     /// under [`MigrationTargeting::ShardTargeted`]) ended: release its
     /// occupancy on that shard and retire its work estimate.
     MigrationRelease(usize),
+    /// Continuous-batching scheduling tick: replenish every live
+    /// shard's prompt-token admission budget and admit queued prefills
+    /// FIFO while it lasts. Only scheduled under
+    /// [`BatchingMode::Continuous`]; reschedules itself until every
+    /// request has resolved.
+    BatchTick,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -374,22 +429,102 @@ impl Ord for Event {
 // Resource pools
 // ---------------------------------------------------------------------
 
-/// FIFO pool with a (possibly unlimited) concurrency cap. Cancelled
-/// entries are skipped lazily at pop time; a live-entry counter is
-/// maintained incrementally (decremented at cancellation via
-/// [`Pool::cancel_queued`]) so the balancer's per-arrival snapshot is
-/// O(1) per shard instead of an O(queue) rescan.
+/// Continuous-batching admission gate: prefill admission consumes a
+/// prompt-token budget replenished every scheduling tick instead of a
+/// slot. A prompt longer than the whole per-tick budget is admitted
+/// when the tick's budget is untouched (consuming all of it), so
+/// oversized prompts cannot starve behind the gate.
+#[derive(Debug)]
+struct BatchGate {
+    /// Prompt tokens admissible per scheduling tick.
+    budget_per_tick: u64,
+    /// Remaining budget in the current tick.
+    budget_left: u64,
+    /// Optional cap on concurrently decoding streams.
+    max_batch: Option<usize>,
+    /// Prompt tokens actually admitted (token-budget utilization
+    /// numerator).
+    admitted_tokens: u64,
+    /// Budget made available so far: the initial allotment plus one
+    /// `budget_per_tick` per tick (the utilization denominator).
+    capacity_tokens: u64,
+}
+
+impl BatchGate {
+    fn new(cfg: &ContinuousBatchConfig) -> BatchGate {
+        let per = cfg.prefill_tokens_per_tick.max(1) as u64;
+        BatchGate {
+            budget_per_tick: per,
+            budget_left: per,
+            max_batch: cfg.max_batch,
+            admitted_tokens: 0,
+            capacity_tokens: per,
+        }
+    }
+
+    fn admits(&self, in_use: usize, tokens: u32) -> bool {
+        if let Some(mb) = self.max_batch {
+            if in_use >= mb {
+                return false;
+            }
+        }
+        let t = tokens as u64;
+        let fresh = self.budget_left == self.budget_per_tick;
+        t <= self.budget_left || (fresh && t > self.budget_per_tick)
+    }
+
+    fn consume(&mut self, tokens: u32) {
+        self.admitted_tokens += tokens as u64;
+        self.budget_left = self.budget_left.saturating_sub(tokens as u64);
+    }
+
+    fn tick(&mut self) {
+        self.budget_left = self.budget_per_tick;
+        self.capacity_tokens += self.budget_per_tick;
+    }
+}
+
+/// FIFO admission pool. Under slot semantics (`gate == None`) it is a
+/// (possibly unlimited) concurrency cap; under continuous batching the
+/// cap is gone and a [`BatchGate`] token budget gates admission
+/// instead. Cancelled entries are skipped lazily at pop time; live-entry
+/// and queued-token counters are maintained incrementally (adjusted at
+/// cancellation via [`Pool::cancel_queued`]) so the balancer's
+/// per-arrival snapshot is O(1) per shard instead of an O(queue) rescan.
 #[derive(Debug)]
 struct Pool {
     cap: Option<usize>,
     in_use: usize,
+    /// Units of `in_use` booked by §4.3 batch-join over-commits
+    /// (`acquire_overflow` past the cap, or any migrated-in join under
+    /// continuous batching). Tracked separately from real slots so a
+    /// spurious second over-commit release can never free a slot a real
+    /// holder still occupies, and so occupancy and over-commit surface
+    /// separately in [`ShardLoad`].
+    over_commit: usize,
     queue: VecDeque<usize>,
     /// Non-cancelled entries currently in `queue`.
     live: usize,
+    /// Prompt tokens of the live queued entries — the token-backlog
+    /// signal balancers, the autoscaler, and the migration planner read
+    /// under continuous batching.
+    queued_tokens: u64,
     /// A frozen (cold-shard) pool queues every acquire unconditionally;
     /// nothing admits until the shard's warm-up event unfreezes it.
     /// Static fleets never freeze, so the PR-2 semantics are untouched.
     frozen: bool,
+    /// Releases that found nothing to release (a double release).
+    /// Previously `saturating_sub` silently absorbed these, masking the
+    /// bug as a permanent capacity leak; now they are counted (and
+    /// debug-asserted) and surface in `LoadReport::release_underflows`.
+    /// Always 0 on a correct event flow.
+    underflows: usize,
+    /// High-water mark of `in_use`: the peak batch size under
+    /// continuous batching, peak occupancy (incl. over-commit) under
+    /// slots.
+    peak_in_use: usize,
+    /// Continuous-batching token gate (`None` = slot semantics).
+    gate: Option<BatchGate>,
 }
 
 impl Pool {
@@ -397,9 +532,14 @@ impl Pool {
         Pool {
             cap,
             in_use: 0,
+            over_commit: 0,
             queue: VecDeque::new(),
             live: 0,
+            queued_tokens: 0,
             frozen: false,
+            underflows: 0,
+            peak_in_use: 0,
+            gate: None,
         }
     }
 
@@ -411,73 +551,123 @@ impl Pool {
         }
     }
 
-    /// Try to acquire; queues and returns false when full (or frozen).
-    /// Unlimited pools admit immediately but still count `in_use`, so
-    /// balancers see real in-service load even without a slot cap.
-    fn acquire(&mut self, i: usize) -> bool {
-        if self.frozen {
-            self.queue.push_back(i);
-            self.live += 1;
-            return false;
+    /// Attach (or not) a continuous-batching gate.
+    fn with_gate(mut self, gate: Option<BatchGate>) -> Pool {
+        self.gate = gate;
+        self
+    }
+
+    /// Whether an arrival with `tokens` prompt tokens can admit right
+    /// now (ignoring the frozen flag, which callers check first).
+    fn admits_now(&self, tokens: u32) -> bool {
+        match &self.gate {
+            Some(g) => g.admits(self.in_use, tokens),
+            None => match self.cap {
+                None => true,
+                Some(cap) => self.in_use < cap,
+            },
         }
-        match self.cap {
-            None => {
-                self.in_use += 1;
-                true
-            }
-            Some(cap) if self.in_use < cap => {
-                self.in_use += 1;
-                true
-            }
-            _ => {
-                self.queue.push_back(i);
-                self.live += 1;
-                false
-            }
+    }
+
+    /// Consume one admission: bump `in_use` (and the token budget under
+    /// a gate) and track the peak.
+    fn admit_now(&mut self, tokens: u32) {
+        self.in_use += 1;
+        if self.in_use > self.peak_in_use {
+            self.peak_in_use = self.in_use;
         }
+        if let Some(g) = &mut self.gate {
+            g.consume(tokens);
+        }
+    }
+
+    /// Checked release of one `in_use` unit: a double release is
+    /// recorded (and debug-asserted) instead of being silently clamped
+    /// into a permanent capacity leak.
+    fn dec_in_use(&mut self) {
+        debug_assert!(self.in_use > 0, "pool release with nothing in use");
+        if self.in_use == 0 {
+            self.underflows += 1;
+        } else {
+            self.in_use -= 1;
+        }
+    }
+
+    /// Try to acquire; queues and returns false when full, frozen, or
+    /// out of token budget. Unlimited pools admit immediately but still
+    /// count `in_use`, so balancers see real in-service load even
+    /// without a slot cap.
+    ///
+    /// Admission is FIFO: under a token gate a live entry may be queued
+    /// while budget remains (its prompt didn't fit the tick), and a new
+    /// small arrival must queue behind it rather than jump it. Slot
+    /// pools never have a live queue alongside spare capacity (releases
+    /// transfer), so the guard is gated to batch mode and legacy
+    /// behavior is untouched.
+    fn acquire(&mut self, i: usize, tokens: u32) -> bool {
+        let fifo_blocked = self.gate.is_some() && self.live > 0;
+        if !self.frozen && !fifo_blocked && self.admits_now(tokens) {
+            self.admit_now(tokens);
+            return true;
+        }
+        self.queue.push_back(i);
+        self.live += 1;
+        self.queued_tokens += tokens as u64;
+        false
     }
 
     /// Admit the next live queued entry if the pool has spare capacity
-    /// and is not frozen (the unit is newly consumed, unlike
-    /// [`Pool::release`] where it transfers). Used when a cold shard
-    /// warms with entries already waiting.
-    fn try_admit(&mut self, cancelled: &[bool]) -> Option<usize> {
+    /// (or token budget) and is not frozen — the unit is newly
+    /// consumed, unlike the slot-transfer path of [`Pool::release`].
+    /// `tokens[j]` is request `j`'s prompt length.
+    fn try_admit(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
         if self.frozen {
             return None;
         }
-        if let Some(cap) = self.cap {
-            if self.in_use >= cap {
+        loop {
+            let &j = self.queue.front()?;
+            if cancelled[j] {
+                // Cancelled entries left `live` (and `queued_tokens`)
+                // at cancellation time; just drop the dead slot.
+                self.queue.pop_front();
+                continue;
+            }
+            if !self.admits_now(tokens[j]) {
                 return None;
             }
+            self.queue.pop_front();
+            self.live = self.live.saturating_sub(1);
+            self.queued_tokens = self.queued_tokens.saturating_sub(tokens[j] as u64);
+            self.admit_now(tokens[j]);
+            return Some(j);
+        }
+    }
+
+    /// Release one unit; returns the next queued request to admit, if
+    /// any. Under slot semantics the unit *transfers* to the next live
+    /// queued entry; under a batch gate the departing stream only frees
+    /// batch headroom and any admission stays token-gated.
+    fn release(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
+        if self.gate.is_some() {
+            self.dec_in_use();
+            return self.try_admit(cancelled, tokens);
         }
         while let Some(j) = self.queue.pop_front() {
             if !cancelled[j] {
                 self.live = self.live.saturating_sub(1);
-                self.in_use += 1;
+                self.queued_tokens = self.queued_tokens.saturating_sub(tokens[j] as u64);
                 return Some(j);
             }
         }
+        self.dec_in_use();
         None
     }
 
-    /// Release one unit; returns the next non-cancelled queued request to
-    /// grant, if any (the unit transfers to it). Cancelled entries popped
-    /// on the way were already removed from `live` at cancellation time.
-    fn release(&mut self, cancelled: &[bool]) -> Option<usize> {
-        while let Some(j) = self.queue.pop_front() {
-            if !cancelled[j] {
-                self.live = self.live.saturating_sub(1);
-                return Some(j);
-            }
-        }
-        self.in_use = self.in_use.saturating_sub(1);
-        None
-    }
-
-    /// A queued entry was cancelled (its lazily-skipped queue slot is now
-    /// dead): keep the live count in sync.
-    fn cancel_queued(&mut self) {
+    /// A queued entry was cancelled (its lazily-skipped queue slot is
+    /// now dead): keep the live count and token backlog in sync.
+    fn cancel_queued(&mut self, tokens: u32) {
         self.live = self.live.saturating_sub(1);
+        self.queued_tokens = self.queued_tokens.saturating_sub(tokens as u64);
     }
 
     /// Live (non-cancelled) queue length — the balancer's view.
@@ -485,18 +675,31 @@ impl Pool {
         self.live
     }
 
-    /// Occupy one unit for a §4.3 migrated-in stream. Takes a real slot
-    /// when capacity is spare; otherwise joins the running batch
-    /// over-capacity (the handoff time was already committed, so the
-    /// stream cannot queue — it squeezes into the continuous batch and
-    /// is visible to balancers through `in_use`/`work`). Returns whether
-    /// a real slot was taken, which decides the matching release path.
+    /// Prompt tokens queued for admission (live entries only).
+    fn queued_prompt_tokens(&self) -> u64 {
+        self.queued_tokens
+    }
+
+    /// Occupy one unit for a §4.3 migrated-in stream. Under slot
+    /// semantics it takes a real slot when capacity is spare and
+    /// otherwise joins the running batch over-capacity; under
+    /// continuous batching it always joins the batch (the handoff time
+    /// was already committed, so the stream cannot queue — neither the
+    /// token budget nor `max_batch` applies). Returns whether a real
+    /// slot was taken, which decides the matching release path.
     fn acquire_overflow(&mut self) -> bool {
-        let real = match self.cap {
-            Some(cap) => self.in_use < cap,
-            None => true,
+        let real = match (&self.gate, self.cap) {
+            (Some(_), _) => false,
+            (None, Some(cap)) => self.in_use < cap,
+            (None, None) => true,
         };
+        if !real {
+            self.over_commit += 1;
+        }
         self.in_use += 1;
+        if self.in_use > self.peak_in_use {
+            self.peak_in_use = self.in_use;
+        }
         real
     }
 
@@ -507,9 +710,20 @@ impl Pool {
     /// the next live queued entry exactly like a real-slot release would
     /// have. Skipping that admission would strand the queue forever: no
     /// later release event exists on the shard.
-    fn release_overflow(&mut self, cancelled: &[bool]) -> Option<usize> {
-        self.in_use = self.in_use.saturating_sub(1);
-        self.try_admit(cancelled)
+    ///
+    /// A release with no over-commit outstanding is a double release:
+    /// it is refused (counted in `underflows`) instead of decrementing
+    /// `in_use`, which would free a slot a real holder still occupies —
+    /// the accounting bug this PR's sweep fixed.
+    fn release_overflow(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
+        if self.over_commit == 0 {
+            debug_assert!(false, "over-commit release with no over-commit outstanding");
+            self.underflows += 1;
+            return None;
+        }
+        self.over_commit -= 1;
+        self.dec_in_use();
+        self.try_admit(cancelled, tokens)
     }
 
     /// Remove every live queued entry (outage re-routing); cancelled
@@ -522,7 +736,31 @@ impl Pool {
             }
         }
         self.live = 0;
+        self.queued_tokens = 0;
         live
+    }
+
+    /// Replenish the token budget at a scheduling tick (no-op for slot
+    /// pools). An *idle* tick — budget untouched and nothing queued —
+    /// offered no usable capacity and accrues none, so
+    /// `token_budget_utilization` measures budget offered while there
+    /// was work, not the trace's idle tail.
+    fn tick(&mut self) {
+        if let Some(g) = &mut self.gate {
+            let idle = g.budget_left == g.budget_per_tick && self.live == 0;
+            if !idle {
+                g.tick();
+            }
+        }
+    }
+
+    /// (admitted, capacity) prompt-token totals of the gate; zeros for
+    /// slot pools.
+    fn token_totals(&self) -> (u64, u64) {
+        match &self.gate {
+            Some(g) => (g.admitted_tokens, g.capacity_tokens),
+            None => (0, 0),
+        }
     }
 }
 
@@ -543,6 +781,11 @@ struct ReqState {
     /// `pre.server_sample` — an outage re-route restores it (the spike
     /// belonged to the dead shard, not the stream).
     base_sample: Option<f64>,
+    /// Multiplier on this stream's server-side decode gaps: the batch
+    /// latency curve evaluated at the shard's batch size when the
+    /// stream was admitted (1.0 under slot semantics, and until
+    /// admission).
+    decode_slowdown: f64,
 }
 
 /// One server shard: a bounded slot pool plus its load accounting and
@@ -558,11 +801,19 @@ struct ShardState {
     /// that never held one). The `LeastWork` balancer's signal.
     work: f64,
     busy: f64,
+    /// Seconds of §4.3 batch-join occupancy held *above* the shard's
+    /// slot capacity (over-commit bookings; real-slot bookings land in
+    /// `busy`). Reported separately from `busy` so utilization stays a
+    /// within-capacity ratio.
+    overcommit_seconds: f64,
     delays: Vec<f64>,
     admitted: usize,
     /// §4.3 migrated streams routed into this shard's pool
     /// (shard-targeted migration only).
     migrated_in: usize,
+    /// Last batch size recorded in the batch timeline (dedupes
+    /// consecutive identical samples); `None` before the first sample.
+    last_batch: Option<usize>,
     /// Cold → Warm → Draining → Retired under autoscaling (outages force
     /// Draining mid-run).
     phase: LifecyclePhase,
@@ -584,9 +835,11 @@ impl ShardState {
             rtt,
             work: 0.0,
             busy: 0.0,
+            overcommit_seconds: 0.0,
             delays: Vec::new(),
             admitted: 0,
             migrated_in: 0,
+            last_batch: None,
             phase,
             created_at,
             ready_at,
@@ -649,12 +902,21 @@ struct FleetSim<'a> {
     cold_start_seconds: f64,
     /// Shard occupancy held by request `i`'s migrated-in stream
     /// (shard-targeted migration): the target shard, whether a real slot
-    /// was taken, and the booked work estimate — released at
-    /// `MigrationRelease`.
-    migration_booking: Vec<Option<(usize, bool, f64)>>,
+    /// was taken, the booked work estimate, and the booking time —
+    /// released at `MigrationRelease`.
+    migration_booking: Vec<Option<(usize, bool, f64, f64)>>,
     migration_targeted: usize,
     migration_fallbacks: usize,
     outage_requeues: usize,
+    /// Per-request prompt lengths (tokens), indexed like the trace —
+    /// the admission cost the token-gated pools charge.
+    prompt_tokens: Vec<u32>,
+    /// Per-shard admission cap the pools were built with (`None` under
+    /// continuous batching); autoscaler-provisioned shards reuse it.
+    pool_cap: Option<usize>,
+    /// Batch-size timeline samples (continuous batching only; absolute
+    /// times, re-based at report build).
+    batch_samples: Vec<BatchSample>,
     /// First arrival (absolute); shard-seconds and report timestamps are
     /// measured from here.
     t0: f64,
@@ -717,6 +979,11 @@ impl<'a> FleetSim<'a> {
                 .eval_interval;
             self.push(self.t0 + interval, EvKind::AutoscaleEval);
         }
+        if let BatchingMode::Continuous(c) = self.fleet.batching {
+            if !trace.requests.is_empty() {
+                self.push(self.t0 + c.tick_interval, EvKind::BatchTick);
+            }
+        }
 
         while let Some(ev) = self.heap.pop() {
             // Autoscaler/failure bookkeeping (evaluation ticks, warm-ups,
@@ -727,7 +994,10 @@ impl<'a> FleetSim<'a> {
             // horizon through its own resolve/release events.
             let bookkeeping = matches!(
                 ev.kind,
-                EvKind::AutoscaleEval | EvKind::ShardWarm(_) | EvKind::Outage(_)
+                EvKind::AutoscaleEval
+                    | EvKind::ShardWarm(_)
+                    | EvKind::Outage(_)
+                    | EvKind::BatchTick
             );
             if ev.time.is_finite() && !bookkeeping {
                 self.horizon = self.horizon.max(ev.time);
@@ -754,15 +1024,17 @@ impl<'a> FleetSim<'a> {
                         device_grant: None,
                         resolved: false,
                         base_sample: None,
+                        decode_slowdown: 1.0,
                     });
+                    let tokens = self.prompt_tokens[i];
                     if needs_server {
                         let s = self.assign_shard(i);
-                        if self.shards[s].pool.acquire(i) {
+                        if self.shards[s].pool.acquire(i, tokens) {
                             self.on_server_admit(i, ev.time);
                         }
                     }
                     if needs_device
-                        && (!self.fleet.device_queueing || self.device_pool.acquire(i))
+                        && (!self.fleet.device_queueing || self.device_pool.acquire(i, tokens))
                     {
                         self.on_device_grant(i, ev.time);
                     }
@@ -778,15 +1050,21 @@ impl<'a> FleetSim<'a> {
                         .server_sample
                         .expect("server users have a sample");
                     self.shards[s].work -= sample;
-                    let next = self.shards[s].pool.release(&self.server_cancelled);
+                    let next = self
+                        .shards[s]
+                        .pool
+                        .release(&self.server_cancelled, &self.prompt_tokens);
                     if let Some(j) = next {
                         self.on_server_admit(j, ev.time);
                         self.try_resolve(j, ev.time);
                     }
+                    self.record_batch(s, ev.time);
                     self.maybe_retire(s, ev.time);
                 }
                 EvKind::DeviceRelease => {
-                    let next = self.device_pool.release(&self.device_cancelled);
+                    let next = self
+                        .device_pool
+                        .release(&self.device_cancelled, &self.prompt_tokens);
                     if let Some(j) = next {
                         self.on_device_grant(j, ev.time);
                         self.try_resolve(j, ev.time);
@@ -803,7 +1081,8 @@ impl<'a> FleetSim<'a> {
                         // queueing on the request is sitting in it).
                         self.device_cancelled[i] = true;
                         if self.fleet.device_queueing {
-                            self.device_pool.cancel_queued();
+                            let tokens = self.prompt_tokens[i];
+                            self.device_pool.cancel_queued(tokens);
                         }
                         self.try_resolve(i, ev.time);
                     }
@@ -821,7 +1100,8 @@ impl<'a> FleetSim<'a> {
                         // queue.
                         self.server_cancelled[i] = true;
                         let s = self.shard_of[i].expect("server-bound requests are assigned");
-                        self.shards[s].pool.cancel_queued();
+                        let tokens = self.prompt_tokens[i];
+                        self.shards[s].pool.cancel_queued(tokens);
                         self.try_resolve(i, ev.time);
                         // A draining shard whose last live entry was just
                         // cancelled can retire now.
@@ -845,20 +1125,68 @@ impl<'a> FleetSim<'a> {
                     self.inject_outage(shard, ev.time);
                 }
                 EvKind::MigrationRelease(i) => {
-                    let (s, real_slot, work) = self.migration_booking[i]
+                    let (s, real_slot, work, booked_at) = self.migration_booking[i]
                         .take()
                         .expect("migration release implies a booking");
                     self.shards[s].work -= work;
-                    let next = if real_slot {
-                        self.shards[s].pool.release(&self.server_cancelled)
+                    // Booked occupancy splits by where it sat: real
+                    // slots bill into busy-seconds (within capacity),
+                    // batch joins into over-commit seconds — keeping
+                    // utilization a within-capacity ratio.
+                    let held = (ev.time - booked_at).max(0.0);
+                    if real_slot {
+                        self.shards[s].busy += held;
                     } else {
-                        self.shards[s].pool.release_overflow(&self.server_cancelled)
+                        self.shards[s].overcommit_seconds += held;
+                    }
+                    let next = if real_slot {
+                        self.shards[s]
+                            .pool
+                            .release(&self.server_cancelled, &self.prompt_tokens)
+                    } else {
+                        self.shards[s]
+                            .pool
+                            .release_overflow(&self.server_cancelled, &self.prompt_tokens)
                     };
                     if let Some(j) = next {
                         self.on_server_admit(j, ev.time);
                         self.try_resolve(j, ev.time);
                     }
+                    self.record_batch(s, ev.time);
                     self.maybe_retire(s, ev.time);
+                }
+                EvKind::BatchTick => {
+                    let shard_count = self.shards.len();
+                    for s in 0..shard_count {
+                        // Retired shards are gone; cold (frozen) shards
+                        // cannot admit, so ticking them would only
+                        // inflate `prompt_token_capacity` with budget
+                        // nothing could use — they start ticking once
+                        // warm, with their initial allotment intact.
+                        if self.shards[s].phase == LifecyclePhase::Retired
+                            || self.shards[s].pool.frozen
+                        {
+                            continue;
+                        }
+                        self.shards[s].pool.tick();
+                        while let Some(j) = self
+                            .shards[s]
+                            .pool
+                            .try_admit(&self.server_cancelled, &self.prompt_tokens)
+                        {
+                            self.on_server_admit(j, ev.time);
+                            self.try_resolve(j, ev.time);
+                        }
+                    }
+                    if self.resolved_count < trace.len() {
+                        let interval = match self.fleet.batching {
+                            BatchingMode::Continuous(c) => c.tick_interval,
+                            BatchingMode::SlotLegacy => {
+                                unreachable!("ticks imply continuous batching")
+                            }
+                        };
+                        self.push(ev.time + interval, EvKind::BatchTick);
+                    }
                 }
             }
         }
@@ -879,25 +1207,32 @@ impl<'a> FleetSim<'a> {
         let mut all_delays: Vec<f64> = Vec::new();
         let mut server_busy = 0.0;
         let mut shard_seconds = 0.0;
+        let mut release_underflows = self.device_pool.underflows;
         let shard_loads: Vec<ShardLoad> = self
             .shards
             .iter()
             .map(|s| {
                 all_delays.extend_from_slice(&s.delays);
                 server_busy += s.busy;
+                release_underflows += s.pool.underflows;
                 // Retirement can be stamped by a post-horizon autoscaler
                 // tick; clamp so draining never bills MORE than staying
                 // warm to the end of the run.
                 let shard_end = s.retired_at.unwrap_or(end).min(end);
                 let lifetime = (shard_end - s.created_at).max(0.0);
                 shard_seconds += lifetime;
+                let (prompt_tokens_admitted, prompt_token_capacity) = s.pool.token_totals();
                 ShardLoad {
                     queue_delay: Summary::of(&s.delays),
                     busy_seconds: s.busy,
+                    overcommit_seconds: s.overcommit_seconds,
                     admitted: s.admitted,
                     slots: s.pool.cap,
                     migrated_in: s.migrated_in,
                     lifetime_seconds: lifetime,
+                    peak_in_use: s.pool.peak_in_use,
+                    prompt_tokens_admitted,
+                    prompt_token_capacity,
                 }
             })
             .collect();
@@ -920,6 +1255,14 @@ impl<'a> FleetSim<'a> {
                 ..*e
             })
             .collect();
+        let batch_timeline = self
+            .batch_samples
+            .iter()
+            .map(|b| BatchSample {
+                time: rel(b.time),
+                ..*b
+            })
+            .collect();
         let load = LoadReport {
             server_queue_delay: Summary::of(&all_delays),
             device_queue_delay: Summary::of(&self.device_delays),
@@ -936,6 +1279,8 @@ impl<'a> FleetSim<'a> {
             migration_targeted: self.migration_targeted,
             migration_fallbacks: self.migration_fallbacks,
             outage_requeues: self.outage_requeues,
+            release_underflows,
+            batch_timeline,
         };
         FleetOutcome { records, load }
     }
@@ -961,10 +1306,40 @@ impl<'a> FleetSim<'a> {
                 queued: sh.pool.live_queued(),
                 slots: sh.pool.cap,
                 work: sh.work,
+                queued_tokens: sh.pool.queued_prompt_tokens(),
                 admitting,
             });
         }
         any_admitting
+    }
+
+    /// Decode-gap multiplier for a stream joining shard `s`'s batch
+    /// right now (the stream itself already counted in `in_use`). 1.0
+    /// under slot semantics — legacy streams are never repriced.
+    fn batch_slowdown(&self, s: usize) -> f64 {
+        match self.fleet.batching {
+            BatchingMode::Continuous(c) => c.curve.slowdown(self.shards[s].pool.in_use),
+            BatchingMode::SlotLegacy => 1.0,
+        }
+    }
+
+    /// Append a batch-size sample for shard `s` if the size changed
+    /// (continuous batching only; legacy runs record nothing, keeping
+    /// their load reports byte-identical).
+    fn record_batch(&mut self, s: usize, now: f64) {
+        if !self.fleet.batching.is_continuous() {
+            return;
+        }
+        let batch = self.shards[s].pool.in_use;
+        if self.shards[s].last_batch == Some(batch) {
+            return;
+        }
+        self.shards[s].last_batch = Some(batch);
+        self.batch_samples.push(BatchSample {
+            time: now,
+            shard: s,
+            batch,
+        });
     }
 
     /// Balance server-bound request `i` onto a shard, apply any
@@ -1056,9 +1431,14 @@ impl<'a> FleetSim<'a> {
         let s = self.shard_of[i].expect("admitted requests are assigned");
         let rtt = self.shards[s].rtt;
         let dev_cancelled = self.device_cancelled[i];
+        // Price the stream's decode at the batch it joins (itself
+        // included — the pool already counted it). Frozen at admission:
+        // later joins see the bigger batch, this stream is not repriced.
+        let slowdown = self.batch_slowdown(s);
         let (sample, device_pending) = {
             let st = self.state_mut(i);
             st.server_admit = Some(now);
+            st.decode_slowdown = slowdown;
             (
                 st.pre.server_sample.expect("server users have a sample"),
                 st.needs_device && st.device_grant.is_none() && !dev_cancelled,
@@ -1067,6 +1447,7 @@ impl<'a> FleetSim<'a> {
         let delay = (now - arrival).max(0.0);
         self.shards[s].delays.push(delay);
         self.shards[s].admitted += 1;
+        self.record_batch(s, now);
         if device_pending {
             // First token lands at admit + intrinsic prefill (+ shard
             // RTT); if the device is still queued then, it is skipped
@@ -1114,6 +1495,7 @@ impl<'a> FleetSim<'a> {
                     queued: sh.pool.live_queued(),
                     slots: sh.pool.cap,
                     work: sh.work,
+                    queued_tokens: sh.pool.queued_prompt_tokens(),
                     admitting: sh.phase == LifecyclePhase::Warm,
                 },
                 phase: sh.phase,
@@ -1126,6 +1508,11 @@ impl<'a> FleetSim<'a> {
             slots_per_shard: self.fleet.server_slots,
             min_shards: cfg.min_shards,
             max_shards: cfg.max_shards,
+            prefill_tokens_per_sec: self
+                .fleet
+                .batching
+                .continuous()
+                .map(|c| c.tokens_per_sec()),
         };
         let action = self
             .scaler
@@ -1155,9 +1542,10 @@ impl<'a> FleetSim<'a> {
             let ready = now + cfg.cold_start.delay();
             let idx = self.shards.len();
             // New replicas are homogeneous (no extra RTT) and share the
-            // base server profile.
+            // base server profile (and the fleet's batching mode).
+            let gate = self.fleet.batching.continuous().map(BatchGate::new);
             self.shards.push(ShardState::new(
-                Pool::new_frozen(self.fleet.server_slots),
+                Pool::new_frozen(self.pool_cap).with_gate(gate),
                 0.0,
                 LifecyclePhase::Cold,
                 now,
@@ -1228,7 +1616,11 @@ impl<'a> FleetSim<'a> {
             kind: ScaleEventKind::WarmUp,
         });
         self.record_timeline(now);
-        while let Some(j) = self.shards[s].pool.try_admit(&self.server_cancelled) {
+        while let Some(j) = self
+            .shards[s]
+            .pool
+            .try_admit(&self.server_cancelled, &self.prompt_tokens)
+        {
             self.on_server_admit(j, now);
             self.try_resolve(j, now);
         }
@@ -1305,7 +1697,11 @@ impl<'a> FleetSim<'a> {
         // draining shard — admit what spare capacity allows so the run
         // always terminates (a drained-but-queued cold pool would
         // otherwise never grant).
-        while let Some(j) = self.shards[s].pool.try_admit(&self.server_cancelled) {
+        while let Some(j) = self
+            .shards[s]
+            .pool
+            .try_admit(&self.server_cancelled, &self.prompt_tokens)
+        {
             self.on_server_admit(j, now);
             self.try_resolve(j, now);
         }
@@ -1333,8 +1729,10 @@ impl<'a> FleetSim<'a> {
         let target = if any_admitting {
             match self.fleet.migration_targeting {
                 MigrationTargeting::ShardTargeted => {
-                    pick_reprefill_target(&self.views, |i| self.shards[i].rtt)
-                        .expect("an admitting shard exists")
+                    pick_reprefill_target(&self.views, |i| {
+                        self.shards[i].rtt + self.reprefill_queue_delay(i, None, false, 0.0)
+                    })
+                    .expect("an admitting shard exists")
                 }
                 MigrationTargeting::BaseEndpoint => self
                     .views
@@ -1373,10 +1771,54 @@ impl<'a> FleetSim<'a> {
             self.outage_requeues += 1;
         }
         self.shards[target].work += new_sample;
-        if self.shards[target].pool.acquire(j) {
+        let tokens = self.prompt_tokens[j];
+        if self.shards[target].pool.acquire(j, tokens) {
             self.on_server_admit(j, now);
             self.try_resolve(j, now);
         }
+    }
+
+    /// Predicted admission delay a §4.3 re-prefill pays on shard `t`,
+    /// folded into the `t_m` estimate and the reprefill-target pick.
+    /// Audited against actual admission behavior (this PR's bugfix
+    /// sweep):
+    ///
+    /// * a migrated stream books via [`Pool::acquire_overflow`], so with
+    ///   a real slot spare it admits instantly — the estimate is exactly
+    ///   0 (the old work-over-capacity formula charged phantom delay on
+    ///   idle shards, see the `idle_fleet` engine-level test);
+    /// * the migrating stream's own slot booking no longer counts as
+    ///   queued-ahead work when it targets its own shard (the off-by-one
+    ///   that priced the stream into its own queue);
+    /// * under continuous batching the backlog is priced in tokens —
+    ///   queued prompt tokens over the shard's admission token rate.
+    fn reprefill_queue_delay(
+        &self,
+        t: usize,
+        own_shard: Option<usize>,
+        own_booked: bool,
+        own_sample: f64,
+    ) -> f64 {
+        if let BatchingMode::Continuous(c) = self.fleet.batching {
+            return self.planner.queue_delay_estimate_tokens(
+                self.shards[t].pool.queued_prompt_tokens(),
+                c.tokens_per_sec(),
+            );
+        }
+        let pool = &self.shards[t].pool;
+        let spare = match pool.cap {
+            Some(cap) => pool.in_use < cap,
+            None => true,
+        };
+        if spare {
+            return 0.0;
+        }
+        let own = match own_shard {
+            Some(s) if s == t && own_booked => own_sample,
+            _ => 0.0,
+        };
+        self.planner
+            .queue_delay_estimate((self.shards[t].work - own).max(0.0), pool.cap)
     }
 
     /// Append a shard-count sample if the counts changed since the last
@@ -1425,7 +1867,7 @@ impl<'a> FleetSim<'a> {
         }
         let req = self.req(i);
         let shard = self.shard_of[i];
-        let (times, mut pre, mut rng, device_grant, server_was_admitted) = {
+        let (times, mut pre, mut rng, device_grant, server_was_admitted, decode_slowdown) = {
             let st = self.state_mut(i);
             st.resolved = true;
             let times = ResourceTimes {
@@ -1442,9 +1884,14 @@ impl<'a> FleetSim<'a> {
                 st.rng.clone(),
                 st.device_grant,
                 st.server_admit.is_some() && !srv_cancelled,
+                st.decode_slowdown,
             )
         };
         self.resolved_count += 1;
+        // The raw (pre-RTT-fold) prefill sample: the queued-ahead
+        // correction in `reprefill_queue_delay` subtracts it when the
+        // migration targets the stream's own shard.
+        let own_sample = pre.server_sample.unwrap_or(0.0);
         // The shard's RTT offset folds into the pre-drawn prefill sample
         // so the perceived first token (and the §4.2 race) see the
         // shard's real latency. Work-estimate retirement: admissions stay
@@ -1468,29 +1915,46 @@ impl<'a> FleetSim<'a> {
         // cold/draining the pick is None and the re-prefill falls back
         // to the source endpoint below (RTT inherited), counted in
         // `migration_fallbacks`.
-        let (mig_pick, mig_ep) = if self.fleet.migration_targeting
+        let (mig_pick, mig_ep, mig_slowdown) = if self.fleet.migration_targeting
             == MigrationTargeting::ShardTargeted
             && self.policy.migration
             && self.policy.constraint() == Some(Constraint::Device)
         {
             self.snapshot_views();
-            let pick = pick_reprefill_target(&self.views, |t| self.shards[t].rtt);
-            let ep = match pick {
+            // Least-work-with-estimate, the estimate being the shard's
+            // RTT plus its predicted admission delay — priced in queued
+            // prompt tokens under continuous batching.
+            let pick = pick_reprefill_target(&self.views, |t| {
+                self.shards[t].rtt
+                    + self.reprefill_queue_delay(t, shard, server_was_admitted, own_sample)
+            });
+            let (ep, slow) = match pick {
                 Some(t) => {
                     let mut ep = self.server_endpoints[t].clone();
-                    ep.extra_rtt += self
-                        .planner
-                        .queue_delay_estimate(self.shards[t].work, self.shards[t].pool.cap);
-                    ep
+                    ep.extra_rtt +=
+                        self.reprefill_queue_delay(t, shard, server_was_admitted, own_sample);
+                    // The migrated tail decodes in the target's batch:
+                    // price it at the batch it would join (+1 for the
+                    // joining stream itself).
+                    let slow = match self.fleet.batching {
+                        BatchingMode::Continuous(c) => {
+                            c.curve.slowdown(self.shards[t].pool.in_use + 1)
+                        }
+                        BatchingMode::SlotLegacy => 1.0,
+                    };
+                    (ep, slow)
                 }
-                None => match shard {
-                    Some(s) => self.server_endpoints[s].clone(),
-                    None => self.scenario.server.clone(),
-                },
+                None => {
+                    let ep = match shard {
+                        Some(s) => self.server_endpoints[s].clone(),
+                        None => self.scenario.server.clone(),
+                    };
+                    (ep, 1.0)
+                }
             };
-            (pick, Some(ep))
+            (pick, Some(ep), slow)
         } else {
-            (None, None)
+            (None, None, 1.0)
         };
         // Every shard shares the base profile, so the source endpoint
         // only distinguishes shards through its RTT. The owning shard's
@@ -1503,6 +1967,10 @@ impl<'a> FleetSim<'a> {
             Some(s) => &self.server_endpoints[s],
             None => &self.scenario.server,
         };
+        let batch = BatchCtx {
+            decode_slowdown,
+            migration_decode_slowdown: mig_slowdown,
+        };
         let resolved = resolve_request(
             req,
             &pre,
@@ -1513,6 +1981,7 @@ impl<'a> FleetSim<'a> {
             &self.planner,
             &self.scenario.cfg,
             times,
+            batch,
             &mut rng,
         );
 
@@ -1562,8 +2031,9 @@ impl<'a> FleetSim<'a> {
                         let real_slot = self.shards[t].pool.acquire_overflow();
                         self.shards[t].work += info.t_m;
                         self.shards[t].migrated_in += 1;
-                        self.migration_booking[i] = Some((t, real_slot, info.t_m));
+                        self.migration_booking[i] = Some((t, real_slot, info.t_m, now));
                         self.migration_targeted += 1;
+                        self.record_batch(t, now);
                         self.push(info.end_abs.max(now), EvKind::MigrationRelease(i));
                     }
                     None if mig_ep.is_some() => self.migration_fallbacks += 1,
@@ -1611,8 +2081,17 @@ pub fn run_fleet(
     // the autoscaler provisions later are always healthy, as documented.
     let mut faults = fleet.shard_faults.clone();
     faults.resize(shard_count, None);
+    let batching = fleet.batching.normalized();
+    // Under continuous batching the slot cap is gone: the token budget
+    // gates admission and the batch (not a slot count) bounds
+    // concurrency, so pools — and the reported capacity — are uncapped.
+    let pool_cap = if batching.is_continuous() {
+        None
+    } else {
+        fleet.server_slots.map(|s| s.max(1))
+    };
     let fleet = FleetConfig {
-        server_slots: fleet.server_slots.map(|s| s.max(1)),
+        server_slots: pool_cap,
         device_queueing: fleet.device_queueing,
         shards: shard_count,
         balancer: fleet.balancer,
@@ -1621,6 +2100,7 @@ pub fn run_fleet(
         migration_targeting: fleet.migration_targeting,
         shard_faults: faults,
         outages: fleet.outages.clone(),
+        batching,
     };
     let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &rtts);
     // Initial shards are created warm at the first arrival (created_at
@@ -1629,7 +2109,7 @@ pub fn run_fleet(
         .iter()
         .map(|&rtt| {
             ShardState::new(
-                Pool::new(fleet.server_slots),
+                Pool::new(pool_cap).with_gate(batching.continuous().map(BatchGate::new)),
                 rtt,
                 LifecyclePhase::Warm,
                 0.0,
@@ -1638,6 +2118,7 @@ pub fn run_fleet(
         })
         .collect();
     let device_pool = Pool::new(if fleet.device_queueing { Some(1) } else { None });
+    let prompt_tokens: Vec<u32> = trace.requests.iter().map(|r| r.prompt_len).collect();
     // `AutoscaleConfig` is Copy, so the normalized config can live both
     // in `fleet` (for Debug/consumers) and as the loop's working copy.
     let autoscale = fleet.autoscale;
@@ -1682,6 +2163,9 @@ pub fn run_fleet(
         migration_targeted: 0,
         migration_fallbacks: 0,
         outage_requeues: 0,
+        prompt_tokens,
+        pool_cap,
+        batch_samples: Vec::new(),
         t0: 0.0,
     };
     sim.run()
@@ -1999,28 +2483,42 @@ mod tests {
         t
     }
 
+    /// Uniform token weights for Pool unit tests (slot pools ignore the
+    /// values; the queued-token counter still tracks them).
+    fn toks(n: usize) -> Vec<u32> {
+        vec![10; n]
+    }
+
     #[test]
     fn frozen_pool_queues_until_unfrozen() {
         let mut p = Pool::new_frozen(Some(2));
         let cancelled = vec![false; 4];
+        let tokens = toks(4);
         // Everything queues while frozen, even with spare capacity.
-        assert!(!p.acquire(0));
-        assert!(!p.acquire(1));
-        assert!(!p.acquire(2));
+        assert!(!p.acquire(0, 10));
+        assert!(!p.acquire(1, 10));
+        assert!(!p.acquire(2, 10));
         assert_eq!(p.in_use, 0);
         assert_eq!(p.live_queued(), 3);
-        assert_eq!(p.try_admit(&cancelled), None, "frozen pools admit nothing");
+        assert_eq!(p.queued_prompt_tokens(), 30);
+        assert_eq!(
+            p.try_admit(&cancelled, &tokens),
+            None,
+            "frozen pools admit nothing"
+        );
         // Unfreeze: admissions drain in FIFO order up to the cap.
         p.frozen = false;
-        assert_eq!(p.try_admit(&cancelled), Some(0));
-        assert_eq!(p.try_admit(&cancelled), Some(1));
-        assert_eq!(p.try_admit(&cancelled), None, "cap reached");
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(0));
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(1));
+        assert_eq!(p.try_admit(&cancelled, &tokens), None, "cap reached");
         assert_eq!(p.in_use, 2);
         assert_eq!(p.live_queued(), 1);
+        assert_eq!(p.queued_prompt_tokens(), 10);
         // New acquires behave like a normal bounded pool now.
-        assert!(!p.acquire(3));
-        let next = p.release(&cancelled);
+        assert!(!p.acquire(3, 10));
+        let next = p.release(&cancelled, &tokens);
         assert_eq!(next, Some(2));
+        assert_eq!(p.underflows, 0);
     }
 
     /// Tentpole parity: attaching an `AutoscalerKind::None` config is
@@ -2147,22 +2645,26 @@ mod tests {
     fn overflow_pool_books_real_slots_then_batch_joins() {
         let mut p = Pool::new(Some(2));
         let cancelled = vec![false; 4];
-        assert!(p.acquire(0));
+        let tokens = toks(4);
+        assert!(p.acquire(0, 10));
         // One spare slot: the first migrated-in stream takes a real one.
         assert!(p.acquire_overflow(), "spare capacity ⇒ real slot");
         assert_eq!(p.in_use, 2);
+        assert_eq!(p.over_commit, 0);
         // Full: the next joins the batch over-capacity.
         assert!(!p.acquire_overflow(), "full pool ⇒ batch join");
         assert_eq!(p.in_use, 3);
+        assert_eq!(p.over_commit, 1);
+        assert_eq!(p.peak_in_use, 3);
         // A queued arrival waits behind the real slots.
-        assert!(!p.acquire(1));
+        assert!(!p.acquire(1, 10));
         // Over-commit release while still at/over cap frees no slot: the
         // queue stays put.
-        assert_eq!(p.release_overflow(&cancelled), None);
+        assert_eq!(p.release_overflow(&cancelled, &tokens), None);
         assert_eq!(p.in_use, 2);
         assert_eq!(p.live_queued(), 1);
         // Real-slot release transfers the unit to the queued entry.
-        assert_eq!(p.release(&cancelled), Some(1));
+        assert_eq!(p.release(&cancelled, &tokens), Some(1));
         assert_eq!(p.in_use, 2);
         // Unlimited pools always report a real slot.
         let mut u = Pool::new(None);
@@ -2177,33 +2679,190 @@ mod tests {
     fn overflow_release_admits_queue_when_load_bearing() {
         let mut p = Pool::new(Some(1));
         let cancelled = vec![false; 3];
-        assert!(p.acquire(0)); // real holder
+        let tokens = toks(3);
+        assert!(p.acquire(0, 10)); // real holder
         assert!(!p.acquire_overflow(), "full ⇒ batch join");
         assert_eq!(p.in_use, 2);
         // The real holder leaves with an empty queue: plain decrement.
-        assert_eq!(p.release(&cancelled), None);
+        assert_eq!(p.release(&cancelled, &tokens), None);
         assert_eq!(p.in_use, 1);
         // A new arrival queues behind the (now load-bearing) over-commit.
-        assert!(!p.acquire(1));
+        assert!(!p.acquire(1, 10));
         // Releasing the over-commit must hand the freed capacity over.
-        assert_eq!(p.release_overflow(&cancelled), Some(1));
+        assert_eq!(p.release_overflow(&cancelled, &tokens), Some(1));
         assert_eq!(p.in_use, 1);
         assert_eq!(p.live_queued(), 0);
+        assert_eq!(p.underflows, 0);
+    }
+
+    /// Bugfix regression (this PR): a double over-commit release used to
+    /// `saturating_sub` its way into freeing a slot a real holder still
+    /// occupied — admitting the queue twice off one booking and leaking
+    /// capacity for the rest of the run. Now the spurious release is
+    /// refused and counted.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "over-commit release"))]
+    fn double_migration_release_cannot_free_a_slot_twice() {
+        let mut p = Pool::new(Some(1));
+        let cancelled = vec![false; 3];
+        let tokens = toks(3);
+        assert!(p.acquire(0, 10)); // real holder, stays in service
+        assert!(!p.acquire_overflow(), "full ⇒ batch join");
+        assert!(!p.acquire(1, 10), "arrival queues behind the real slot");
+        // Legitimate over-commit release: no spare capacity yet.
+        assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+        assert_eq!(p.in_use, 1);
+        // The DOUBLE release (a bug upstream): in release builds it must
+        // not admit the queued entry — request 0 still holds the only
+        // slot — and must be recorded; in debug builds it asserts.
+        assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+        assert_eq!(p.underflows, 1, "double release must be counted");
+        assert_eq!(p.in_use, 1, "the real holder's unit must survive");
+        assert_eq!(p.live_queued(), 1, "the queue must not be admitted");
+        // The real holder's own release still works normally.
+        assert_eq!(p.release(&cancelled, &tokens), Some(1));
+    }
+
+    /// Bugfix regression (this PR): a plain double release on an empty
+    /// pool is counted instead of silently clamped.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "nothing in use"))]
+    fn double_release_is_counted_not_masked() {
+        let mut p = Pool::new(Some(2));
+        let cancelled = vec![false; 1];
+        let tokens = toks(1);
+        assert!(p.acquire(0, 10));
+        assert_eq!(p.release(&cancelled, &tokens), None);
+        assert_eq!(p.underflows, 0);
+        assert_eq!(p.release(&cancelled, &tokens), None); // the bug
+        assert_eq!(p.underflows, 1);
+        assert_eq!(p.in_use, 0, "no wraparound, no phantom capacity");
     }
 
     #[test]
     fn drain_queue_returns_live_entries_in_fifo_order() {
         let mut p = Pool::new(Some(1));
         let mut cancelled = vec![false; 5];
-        assert!(p.acquire(0));
+        assert!(p.acquire(0, 10));
         for j in 1..5 {
-            assert!(!p.acquire(j));
+            assert!(!p.acquire(j, 10));
         }
         cancelled[2] = true;
-        p.cancel_queued();
+        p.cancel_queued(10);
         assert_eq!(p.drain_queue(&cancelled), vec![1, 3, 4]);
         assert_eq!(p.live_queued(), 0);
+        assert_eq!(p.queued_prompt_tokens(), 0);
         assert_eq!(p.in_use, 1, "in-flight admissions are untouched");
+    }
+
+    // -----------------------------------------------------------------
+    // Continuous batching: the token-gated pool
+    // -----------------------------------------------------------------
+
+    fn batch_pool(budget: u32, max_batch: Option<usize>) -> Pool {
+        let cfg = ContinuousBatchConfig {
+            prefill_tokens_per_tick: budget,
+            tick_interval: 0.25,
+            max_batch,
+            curve: crate::sim::batching::BatchLatencyCurve::Flat,
+        };
+        Pool::new(None).with_gate(Some(BatchGate::new(&cfg)))
+    }
+
+    #[test]
+    fn token_gate_admits_until_budget_exhausts_then_queues() {
+        let mut p = batch_pool(25, None);
+        let cancelled = vec![false; 5];
+        let tokens = vec![10, 10, 10, 10, 10];
+        assert!(p.acquire(0, 10));
+        assert!(p.acquire(1, 10));
+        // 5 tokens left < 10: the third arrival queues.
+        assert!(!p.acquire(2, 10));
+        assert_eq!(p.in_use, 2);
+        assert_eq!(p.live_queued(), 1);
+        assert_eq!(p.queued_prompt_tokens(), 10);
+        // A release frees batch headroom but NOT budget: no slot
+        // transfer happens under the gate.
+        assert_eq!(p.release(&cancelled, &tokens), None);
+        assert_eq!(p.in_use, 1);
+        assert_eq!(p.live_queued(), 1, "budget-gated: release transfers nothing");
+        // The tick replenishes the budget and the queue drains FIFO.
+        p.tick();
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(2));
+        assert_eq!(p.try_admit(&cancelled, &tokens), None, "queue empty");
+        assert_eq!(p.in_use, 2);
+        let (admitted, capacity) = p.token_totals();
+        assert_eq!(admitted, 30);
+        assert_eq!(capacity, 50, "initial allotment + one tick");
+        // A busy tick (budget partially consumed) accrues capacity…
+        p.tick();
+        assert_eq!(p.token_totals().1, 75);
+        // …but an idle tick — full budget, empty queue — does not
+        // (review fix: idle tails must not dilute token utilization).
+        p.tick();
+        assert_eq!(p.token_totals().1, 75, "idle ticks offer no capacity");
+    }
+
+    #[test]
+    fn token_gate_oversized_prompt_takes_a_fresh_tick() {
+        let mut p = batch_pool(32, None);
+        let cancelled = vec![false; 3];
+        let tokens = vec![100, 8, 8];
+        // An oversized prompt admits against a fresh budget, consuming
+        // all of it (no chunked prefill yet) — it cannot starve.
+        assert!(p.acquire(0, 100));
+        assert_eq!(p.in_use, 1);
+        // The emptied budget blocks even small prompts until the tick.
+        assert!(!p.acquire(1, 8));
+        p.tick();
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(1));
+        // A partially-consumed budget does NOT admit oversized prompts
+        // (only a fresh one does): head-of-line waits for its tick.
+        assert!(!p.acquire(2, 100));
+        assert_eq!(p.in_use, 2);
+    }
+
+    /// Review fix: a small arrival must not jump a queued larger prompt
+    /// between ticks — token-gated admission stays FIFO even when the
+    /// remaining budget would cover the newcomer.
+    #[test]
+    fn token_gate_admission_is_fifo_between_ticks() {
+        let mut p = batch_pool(40, None);
+        let cancelled = vec![false; 3];
+        let tokens = vec![10, 35, 5];
+        assert!(p.acquire(0, 10)); // 30 budget left
+        assert!(!p.acquire(1, 35), "35 > 30: queues");
+        // 5 ≤ 30 would fit, but request 1 is ahead: FIFO queues it.
+        assert!(!p.acquire(2, 5), "must not jump the queue");
+        assert_eq!(p.live_queued(), 2);
+        p.tick();
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(1), "FIFO head first");
+        assert_eq!(p.try_admit(&cancelled, &tokens), Some(2));
+        assert_eq!(p.in_use, 3);
+    }
+
+    #[test]
+    fn token_gate_max_batch_caps_concurrency() {
+        let mut p = batch_pool(1000, Some(2));
+        let cancelled = vec![false; 4];
+        let tokens = vec![10; 4];
+        assert!(p.acquire(0, 10));
+        assert!(p.acquire(1, 10));
+        assert!(!p.acquire(2, 10), "max_batch reached");
+        p.tick();
+        assert_eq!(
+            p.try_admit(&cancelled, &tokens),
+            None,
+            "budget alone cannot override max_batch"
+        );
+        // A departure frees batch headroom; the queue drains.
+        assert_eq!(p.release(&cancelled, &tokens), Some(2));
+        assert_eq!(p.in_use, 2);
+        // Migrated-in joins bypass max_batch (handoff committed).
+        assert!(!p.acquire_overflow(), "batch join, never a real slot");
+        assert_eq!(p.in_use, 3);
+        assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+        assert_eq!(p.in_use, 2);
     }
 
     /// With migration disabled, shard targeting is inert: the
@@ -2387,6 +3046,241 @@ mod tests {
         let kinds: Vec<Sek> = out.load.scale_events.iter().map(|e| e.kind).collect();
         assert!(kinds.contains(&Sek::Outage));
         assert!(!kinds.contains(&Sek::DrainStart), "outage is not a scale-in");
+    }
+
+    // -----------------------------------------------------------------
+    // Continuous batching: fleet-level behavior
+    // -----------------------------------------------------------------
+
+    use crate::sim::batching::BatchLatencyCurve;
+
+    fn continuous_cfg(budget: u32, tick: f64, curve: BatchLatencyCurve) -> ContinuousBatchConfig {
+        ContinuousBatchConfig {
+            prefill_tokens_per_tick: budget,
+            tick_interval: tick,
+            max_batch: None,
+            curve,
+        }
+    }
+
+    /// With an effectively unlimited token budget and a flat latency
+    /// curve, continuous batching degenerates to the unlimited-pool
+    /// replay: admission is immediate and decode gaps are unscaled, so
+    /// the records are byte-identical (tick events change only the
+    /// event count, never a draw or a grant time).
+    #[test]
+    fn continuous_infinite_budget_flat_curve_matches_unlimited_replay() {
+        let sc = scenario(45);
+        let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(28);
+        let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+        let legacy = run_fleet(&sc, &trace, &policy, &FleetConfig::replay(false));
+        let cont = FleetConfig {
+            batching: BatchingMode::Continuous(continuous_cfg(
+                u32::MAX,
+                0.5,
+                BatchLatencyCurve::Flat,
+            )),
+            ..FleetConfig::replay(false)
+        };
+        let out = run_fleet(&sc, &trace, &policy, &cont);
+        assert_eq!(legacy.records, out.records);
+        assert_eq!(out.load.server_slots, None);
+        assert!(out.load.events_processed > legacy.load.events_processed, "ticks fired");
+        assert!(out.load.token_budget_utilization().is_some());
+    }
+
+    /// The batch latency curve reaches the perceived stream: with
+    /// concurrent streams in the batch, a steep curve stretches decode
+    /// past the consumption rate — identical TTFTs (prefill and
+    /// admission are curve-independent), strictly longer delivered
+    /// streams.
+    #[test]
+    fn batch_curve_slows_decode_but_not_ttft() {
+        // DeepSeek decode (~30 tok/s) so a realistic slowdown crosses
+        // the r_c = 5 tok/s pacing floor and becomes visible post-
+        // smoothing.
+        let sc = Scenario::new(
+            ServerProfile::deepseek_v25(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Server,
+            SimConfig {
+                seed: 46,
+                ..Default::default()
+            },
+        );
+        let trace = trace_at_gap(24, 0.25, 29);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let run_curve = |curve: BatchLatencyCurve| {
+            let cfg = FleetConfig {
+                batching: BatchingMode::Continuous(continuous_cfg(u32::MAX, 0.25, curve)),
+                ..FleetConfig::replay(false)
+            };
+            run_fleet(&sc, &trace, &policy, &cfg)
+        };
+        let flat = run_curve(BatchLatencyCurve::Flat);
+        let steep = run_curve(BatchLatencyCurve::Linear { alpha: 3.0 });
+        let dur = |o: &FleetOutcome| -> f64 {
+            o.records
+                .iter()
+                .map(|r| r.ttft + r.tbts.iter().sum::<f64>())
+                .sum::<f64>()
+        };
+        for (f, s) in flat.records.iter().zip(&steep.records) {
+            assert_eq!(
+                f.ttft.to_bits(),
+                s.ttft.to_bits(),
+                "prefill/admission must be curve-independent"
+            );
+        }
+        assert!(
+            dur(&steep) > dur(&flat) * 1.2,
+            "a steep batch curve must stretch delivered streams: {:.1}s vs {:.1}s",
+            dur(&steep),
+            dur(&flat)
+        );
+        // Batch-size telemetry recorded the crowding.
+        let peak = steep.load.peak_batch();
+        assert!(peak > 1, "concurrent arrivals must share the batch, peak={peak}");
+        assert!(!steep.load.batch_timeline.is_empty());
+        let times: Vec<f64> = steep.load.batch_timeline.iter().map(|b| b.time).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "timeline in event order");
+    }
+
+    /// Token-gated admission under sustained overload: every request
+    /// still resolves (ticks drain the queue FIFO), queue delays are
+    /// real, and the token-budget utilization is a sane ratio.
+    #[test]
+    fn continuous_overload_queues_on_token_budget_and_stays_live() {
+        let sc = scenario(47);
+        // ~60 tokens/s offered prompts vs a 40 tokens/s budget.
+        let trace = trace_at_gap(120, 0.5, 30);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig {
+            batching: BatchingMode::Continuous(continuous_cfg(
+                20,
+                0.5,
+                BatchLatencyCurve::Knee { knee: 8, alpha: 0.05 },
+            )),
+            ..FleetConfig::replay(false)
+        };
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len(), "liveness under token overload");
+        assert!(
+            out.load.server_queue_delay.max > 0.0,
+            "an overloaded token budget must queue admissions"
+        );
+        let util = out.load.token_budget_utilization().expect("continuous mode");
+        assert!(util > 0.0 && util.is_finite(), "token utilization {util}");
+        assert_eq!(out.load.release_underflows, 0);
+        let again = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records, again.records, "continuous runs are deterministic");
+        assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+    }
+
+    /// Continuous batching composes with the autoscaler: the
+    /// token-backlog/batch-depth signal scales the fleet out under a
+    /// burst, cold shards are provisioned frozen (and accrue no token
+    /// capacity until they warm — the review fix), queued prefills
+    /// drain on warm-up, and the run stays live and bit-reproducible.
+    #[test]
+    fn continuous_batching_with_autoscaler_stays_live() {
+        let sc = scenario(50);
+        let trace = burst_then_calm(100, 20, 33);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let cfg = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue)
+            .with_batching(BatchingMode::Continuous(continuous_cfg(
+                32,
+                0.25,
+                BatchLatencyCurve::Knee { knee: 8, alpha: 0.05 },
+            )))
+            .with_autoscale(eager_reactive(1, 3, 1.0));
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len(), "liveness under burst + scaling");
+        assert!(
+            out.load.scale_out_count() >= 1,
+            "the batch-depth signal must trigger scale-out"
+        );
+        let util = out.load.token_budget_utilization().expect("continuous mode");
+        assert!(util > 0.0 && util.is_finite());
+        assert_eq!(out.load.release_underflows, 0);
+        let again = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records, again.records);
+        assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+    }
+
+    // -----------------------------------------------------------------
+    // Migration queue-delay estimate audit (this PR's bugfix sweep)
+    // -----------------------------------------------------------------
+
+    /// Empty-queue consistency: on an idle fleet a migrating stream
+    /// admits instantly, so the predicted admission delay must be
+    /// exactly 0 — making shard-targeted migration byte-identical to
+    /// the base-endpoint fallback when shard RTTs are zero. The old
+    /// work-over-capacity estimate charged phantom delay for the
+    /// migrating stream's *own* slot booking (the queued-ahead
+    /// off-by-one): at K=1 × 1 slot the only candidate shard is the
+    /// stream's own, whose outstanding work is exactly the stream
+    /// itself, and the old formula priced `own_sample / slots` seconds
+    /// of nonexistent queueing into `t_m`. The K=2 × 4-slot variant
+    /// pins the spare-real-slot rule on truly idle candidates.
+    #[test]
+    fn idle_fleet_shard_targeted_estimate_is_zero_and_matches_base_endpoint() {
+        let sc = device_constrained_scenario(48);
+        let trace = trace_at_gap(60, 40.0, 31);
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        for (k, slots) in [(1usize, 1usize), (2, 4)] {
+            let base = run_fleet(
+                &sc,
+                &trace,
+                &policy,
+                &FleetConfig::sharded(k, slots, BalancerKind::RoundRobin),
+            );
+            let targeted = run_fleet(
+                &sc,
+                &trace,
+                &policy,
+                &FleetConfig::sharded(k, slots, BalancerKind::RoundRobin)
+                    .with_migration_targeting(MigrationTargeting::ShardTargeted),
+            );
+            let migrated = base.records.iter().filter(|r| r.migrated).count();
+            assert!(migrated > 0, "K={k}: scenario must exercise migration");
+            assert!(targeted.load.migration_targeted > 0, "K={k}");
+            assert_eq!(
+                base.records, targeted.records,
+                "K={k}×{slots}: idle-fleet targeting must price zero queue delay"
+            );
+        }
+    }
+
+    /// Draining-shard consistency: a draining shard is never a
+    /// re-prefill target, so its (infinite, really) admission delay is
+    /// never priced — the migration falls back to the base endpoint and
+    /// is counted, instead of booking into a dying pool.
+    #[test]
+    fn draining_fleet_migrations_fall_back_not_priced() {
+        let sc = device_constrained_scenario(49);
+        let trace = trace_at_gap(50, 2.0, 32);
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        let cfg = FleetConfig::bounded(2)
+            .with_migration_targeting(MigrationTargeting::ShardTargeted)
+            .with_outage(0.0, 0);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len());
+        let migrated = out.records.iter().filter(|r| r.migrated).count();
+        assert!(migrated > 0, "scenario must exercise migration");
+        assert!(
+            out.load.migration_fallbacks > 0,
+            "migrations after the outage must fall back, not target the draining shard"
+        );
+        // Only resolutions racing the t=0 outage (the first arrival) can
+        // have targeted a still-warm shard.
+        assert!(
+            out.load.migration_targeted <= 1,
+            "draining shard must not be targeted: {} targeted",
+            out.load.migration_targeted
+        );
+        let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+        assert_eq!(booked, out.load.migration_targeted);
     }
 
     /// A zero-second cold start still goes through the cold → warm

@@ -51,6 +51,13 @@
 //!   a cold-start load delay, scale-in drains before retiring), and the
 //!   shard-count timeline, scale events, cold-start seconds, and
 //!   provisioned shard-seconds land in the load report.
+//! * `FleetConfig::with_batching(BatchingMode::Continuous(..))` — swap
+//!   the per-shard slot pool for continuous batching ([`batching`]):
+//!   prefill admission gated by a prompt-token budget per scheduling
+//!   tick, decode streams sharing the shard's batch with per-token
+//!   latency scaled by a pluggable [`batching::BatchLatencyCurve`]. The
+//!   default [`batching::BatchingMode::SlotLegacy`] is byte-identical
+//!   to the historical slot fleet.
 //! * `FleetConfig::with_migration_targeting(MigrationTargeting::ShardTargeted)`
 //!   — §4.3 server-bound re-prefills pick a least-work admitting shard
 //!   ([`balancer::pick_reprefill_target`]) and occupy its slot pool for
@@ -73,11 +80,13 @@
 
 pub mod autoscaler;
 pub mod balancer;
+pub mod batching;
 pub mod delivery;
 pub mod engine;
 pub mod fleet;
 
 pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
 pub use balancer::{Balancer, BalancerKind, ShardView};
+pub use batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 pub use engine::{Scenario, SimConfig};
 pub use fleet::{FleetConfig, FleetOutcome, MigrationTargeting, ShardFault, ShardOutage};
