@@ -41,6 +41,29 @@ fn main() {
         b.throughput(&r, tokens, "token-events");
     }
 
+    // Fleet event-queue backends on an identical sharded workload: the
+    // wheel-vs-heap ratio here mirrors the `disco bench` gate cells.
+    {
+        use disco::sim::balancer::BalancerKind;
+        use disco::sim::event_queue::EventQueueKind;
+        use disco::sim::fleet::FleetConfig;
+
+        let scenario = Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::pixel7pro_bloom1b1(),
+            Constraint::Server,
+            SimConfig::default(),
+        );
+        let policy = Policy::simple(PolicyKind::StochS, 0.5, false);
+        for kind in EventQueueKind::all() {
+            let fleet = FleetConfig::sharded(8, 2, BalancerKind::JoinShortestQueue)
+                .with_event_queue(kind);
+            let label = format!("fleet/event-queue {} 1K reqs", kind.label());
+            let r = b.run(&label, || scenario.run_fleet(&trace, &policy, &fleet));
+            b.throughput(&r, trace.len() as f64, "requests");
+        }
+    }
+
     // Real PJRT path (skipped when artifacts are absent).
     let dir = disco::runtime::artifacts_dir();
     if dir.join("manifest.json").exists() {

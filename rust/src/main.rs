@@ -549,16 +549,20 @@ fn cmd_batching_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Fixed-seed fleet benchmarks: runs the slot-legacy sharded workload
-/// AND a continuous-batching workload `--reps` times each, reports the
-/// best wall time as events/sec plus TTFT percentiles, writes the JSON
-/// artifact CI uploads, and — with `--baseline` — fails when either
-/// cell's events/sec regresses more than `--max-regression` below the
-/// committed baseline (`events_per_sec` for the slot loop,
-/// `batching_events_per_sec` for the continuous hot path; a baseline
-/// missing the batching key gates only the slot loop).
+/// (timing-wheel default AND binary-heap reference backends), a
+/// continuous-batching workload, and a wide many-shard session workload
+/// `--reps` times each; reports the best wall time as events/sec (and
+/// sessions/sec) plus TTFT percentiles, writes the JSON artifact CI
+/// uploads, and — with `--baseline` — fails when a cell's gated metric
+/// regresses more than `--max-regression` below the committed baseline
+/// (`events_per_sec` for the slot loop, `heap_events_per_sec` for the
+/// reference backend, `batching_events_per_sec` for the continuous hot
+/// path, `sessions_per_sec` for the wide fleet; keys missing from the
+/// baseline skip their gate — except the original `events_per_sec`).
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use disco::coordinator::policy::Policy;
     use disco::sim::batching::{BatchingMode, ContinuousBatchConfig};
+    use disco::sim::event_queue::EventQueueKind;
     use disco::sim::fleet::FleetConfig;
     use disco::stats::describe::Summary;
     use disco::util::json::Json;
@@ -586,6 +590,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         events: u64,
         wall: f64,
         eps: f64,
+        /// Sessions (requests) simulated per wall-clock second — the
+        /// million-user-scale headline metric alongside raw event rate.
+        sps: f64,
         p50: f64,
         p99: f64,
     }
@@ -605,25 +612,36 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let events = outcome.load.events_processed;
         let ttfts: Vec<f64> = outcome.records.iter().map(|r| r.ttft).collect();
         let s = Summary::of(&ttfts);
+        let wall = best.max(1e-12);
         Cell {
             name,
             baseline_key,
             events,
             wall: best,
-            eps: events as f64 / best.max(1e-12),
+            eps: events as f64 / wall,
+            sps: n as f64 / wall,
             p50: s.p50,
             p99: s.p99,
         }
     };
 
     let slot_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue);
-    // The continuous cell exercises the new hot path: token-gated
+    // The same slot workload on the binary-heap reference backend: the
+    // wheel-vs-heap speedup is the tentpole number this bench tracks.
+    let heap_fleet = slot_fleet.clone().with_event_queue(EventQueueKind::Heap);
+    // The continuous cell exercises the batching hot path: token-gated
     // admission ticks + batch-priced decode on the same topology.
     let cont_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
         .with_batching(BatchingMode::Continuous(ContinuousBatchConfig::default()));
+    // The sessions cell: a wide fleet (K = 32) under the incrementally
+    // indexed JSQ balancer — the topology where the old O(K)-per-arrival
+    // rescan hurt most; gated on sessions/sec rather than events/sec.
+    let wide_fleet = FleetConfig::sharded(32, 2, BalancerKind::JoinShortestQueue);
     let cells = [
         run_cell("slot-legacy", "events_per_sec", &slot_fleet),
+        run_cell("slot-legacy-heap", "heap_events_per_sec", &heap_fleet),
         run_cell("continuous", "batching_events_per_sec", &cont_fleet),
+        run_cell("wide-sessions", "sessions_per_sec", &wide_fleet),
     ];
 
     let json = Json::obj(vec![
@@ -637,7 +655,16 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("events_per_sec", Json::num(cells[0].eps)),
         ("p50_ttft_s", Json::num(cells[0].p50)),
         ("p99_ttft_s", Json::num(cells[0].p99)),
-        ("batching_events_per_sec", Json::num(cells[1].eps)),
+        ("heap_events_per_sec", Json::num(cells[1].eps)),
+        ("batching_events_per_sec", Json::num(cells[2].eps)),
+        // The wide-fleet sessions-simulated-per-second headline cell.
+        ("sessions_per_sec", Json::num(cells[3].sps)),
+        // Wheel speedup over the heap reference on the identical
+        // workload (>1 means the new default backend is faster).
+        (
+            "wheel_speedup",
+            Json::num(cells[0].eps / cells[1].eps.max(1e-12)),
+        ),
         (
             "cells",
             Json::arr(cells.iter().map(|c| {
@@ -646,6 +673,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     ("events", Json::num(c.events as f64)),
                     ("wall_time_s", Json::num(c.wall)),
                     ("events_per_sec", Json::num(c.eps)),
+                    ("sessions_per_sec", Json::num(c.sps)),
                     ("p50_ttft_s", Json::num(c.p50)),
                     ("p99_ttft_s", Json::num(c.p99)),
                 ])
@@ -657,10 +685,14 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     for c in &cells {
         println!(
             "bench fleet[{}]: {n} requests, {} events in {:.3}s \
-             ({:.0} events/s), TTFT p50 {:.3}s p99 {:.3}s",
-            c.name, c.events, c.wall, c.eps, c.p50, c.p99
+             ({:.0} events/s, {:.0} sessions/s), TTFT p50 {:.3}s p99 {:.3}s",
+            c.name, c.events, c.wall, c.eps, c.sps, c.p50, c.p99
         );
     }
+    println!(
+        "wheel speedup over heap reference: {:.2}x",
+        cells[0].eps / cells[1].eps.max(1e-12)
+    );
     println!("wrote {out_path}");
 
     if let Some(baseline_path) = args.get("baseline") {
@@ -669,7 +701,14 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let baseline = Json::parse(&text)?;
         let max_regression = args.get_f64("max-regression", 0.25)?;
         for c in &cells {
-            let base_eps = match baseline.get(c.baseline_key).and_then(|v| v.as_f64()) {
+            // The sessions cell gates on sessions/sec; every other cell
+            // gates on raw event rate.
+            let (metric, unit) = if c.baseline_key == "sessions_per_sec" {
+                (c.sps, "sessions/s")
+            } else {
+                (c.eps, "events/s")
+            };
+            let base = match baseline.get(c.baseline_key).and_then(|v| v.as_f64()) {
                 Some(v) => v,
                 None if c.baseline_key != "events_per_sec" => {
                     println!(
@@ -680,20 +719,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 }
                 None => anyhow::bail!("baseline missing numeric field 'events_per_sec'"),
             };
-            let floor = base_eps * (1.0 - max_regression);
+            let floor = base * (1.0 - max_regression);
             anyhow::ensure!(
-                c.eps >= floor,
-                "perf regression in {}: {:.0} events/s is more than {:.0}% below \
-                 the {base_eps:.0} events/s baseline (floor {floor:.0})",
+                metric >= floor,
+                "perf regression in {}: {metric:.0} {unit} is more than {:.0}% below \
+                 the {base:.0} {unit} baseline (floor {floor:.0})",
                 c.name,
-                c.eps,
                 max_regression * 100.0
             );
             println!(
-                "baseline check ok [{}]: {:.0} events/s ≥ floor {floor:.0} \
-                 ({base_eps:.0} − {:.0}%)",
+                "baseline check ok [{}]: {metric:.0} {unit} ≥ floor {floor:.0} \
+                 ({base:.0} − {:.0}%)",
                 c.name,
-                c.eps,
                 max_regression * 100.0
             );
         }

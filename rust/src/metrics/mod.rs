@@ -234,7 +234,8 @@ pub struct LoadReport {
     pub shard_seconds: f64,
     /// Discrete events processed by the fleet loop (arrivals, grants,
     /// releases, probes, autoscaler ticks) — the `disco bench`
-    /// throughput numerator.
+    /// throughput numerator. Counts queue pushes, so it is identical
+    /// under every [`crate::sim::EventQueueKind`] backend.
     pub events_processed: u64,
     /// §4.3 migrated streams routed onto a specific shard's slot pool
     /// (shard-targeted migration; 0 under the legacy base-endpoint

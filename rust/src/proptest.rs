@@ -188,6 +188,12 @@ mod tests {
     /// (strictly positive perceived gaps). This is
     /// `prop_migrated_stream_no_gaps_no_dups_order_preserved` lifted
     /// from a single stream to a migration storm on a failing fleet.
+    ///
+    /// A randomized subset of storms additionally re-runs on the
+    /// binary-heap reference event queue and asserts the run is
+    /// **byte-identical** to the default timing wheel — the event-queue
+    /// determinism contract checked under the nastiest fleet dynamics
+    /// the suite generates.
     #[test]
     fn prop_fleet_migration_storm_under_outage_preserves_stream_integrity() {
         use crate::coordinator::policy::{Policy, PolicyKind};
@@ -196,12 +202,14 @@ mod tests {
         use crate::sim::balancer::BalancerKind;
         use crate::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
         use crate::sim::engine::{Scenario, SimConfig};
+        use crate::sim::event_queue::EventQueueKind;
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
         use crate::trace::generator::{Arrival, WorkloadSpec};
 
         let mut migrated_total = 0usize;
         let mut requeued_total = 0usize;
         let mut continuous_total = 0usize;
+        let mut parity_total = 0usize;
         check(
             "fleet-outage-migration-integrity",
             default_cases().clamp(16, 256),
@@ -229,10 +237,28 @@ mod tests {
                 } else {
                     None
                 };
+                // A third of the storms double as event-queue parity
+                // cases (wheel vs heap, byte-for-byte).
+                let heap_check = r.chance(1.0 / 3.0);
                 let seed = r.next_u64();
-                (k, balancer, targeting, frac, dead, slots, bscale, fault, batching, seed)
+                (
+                    k, balancer, targeting, frac, dead, slots, bscale, fault, batching,
+                    heap_check, seed,
+                )
             },
-            |&(k, balancer, targeting, frac, dead, slots, bscale, fault, batching, seed)| {
+            |&(
+                k,
+                balancer,
+                targeting,
+                frac,
+                dead,
+                slots,
+                bscale,
+                fault,
+                batching,
+                heap_check,
+                seed,
+            )| {
                 let mut cfg = SimConfig {
                     seed,
                     ..Default::default()
@@ -283,6 +309,23 @@ mod tests {
                 }
                 let policy = Policy::simple(PolicyKind::StochD, 0.9, true);
                 let out = run_fleet(&sc, &trace, &policy, &fleet);
+                if heap_check {
+                    let on_heap = run_fleet(
+                        &sc,
+                        &trace,
+                        &policy,
+                        &fleet.clone().with_event_queue(EventQueueKind::Heap),
+                    );
+                    crate::prop_assert!(
+                        out.records == on_heap.records,
+                        "wheel and heap backends popped different request trajectories"
+                    );
+                    crate::prop_assert!(
+                        format!("{:?}", out.load) == format!("{:?}", on_heap.load),
+                        "wheel and heap backends diverged in the load report"
+                    );
+                    parity_total += 1;
+                }
                 crate::prop_assert!(
                     out.records.len() == trace.len(),
                     "liveness: {} of {} requests resolved",
@@ -371,6 +414,10 @@ mod tests {
         assert!(
             continuous_total > 0,
             "property never exercised continuous batching"
+        );
+        assert!(
+            parity_total > 0,
+            "property never exercised the wheel/heap backend parity check"
         );
     }
 

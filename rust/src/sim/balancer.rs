@@ -79,8 +79,9 @@ pub trait Balancer {
 
 /// Index minimizing `better` over admitting shards (ties keep the lowest
 /// index); over *all* shards when none admits (degraded fallback — never
-/// panics on a non-empty slice).
-fn argmin_admitting(
+/// panics on a non-empty slice). `pub(crate)` so the fleet's debug-mode
+/// parity assert can check [`ShardIndex`] picks against the linear scan.
+pub(crate) fn argmin_admitting(
     shards: &[ShardView],
     better: impl Fn(&ShardView, &ShardView) -> bool,
 ) -> usize {
@@ -324,6 +325,127 @@ impl Balancer for LeastWork {
     }
 }
 
+/// One tournament-tree node: the winning shard of a subtree, with the
+/// admission flag and sort key it won on.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct IndexNode {
+    /// Whether the winning shard admits new work.
+    pub admitting: bool,
+    /// The winner's sort key (outstanding count as f64 for JSQ,
+    /// outstanding work seconds for least-work).
+    pub key: f64,
+    /// The winning shard's index (`usize::MAX` on padding subtrees).
+    pub shard: usize,
+}
+
+const PAD: IndexNode = IndexNode {
+    admitting: false,
+    key: f64::INFINITY,
+    shard: usize::MAX,
+};
+
+/// Tournament winner of two sibling subtrees. `a` is the left subtree —
+/// every shard index under it is lower than any under `b` — so returning
+/// `a` on full ties reproduces the lowest-index tie-break of
+/// [`argmin_admitting`]. Otherwise: an admitting subtree beats a
+/// non-admitting one, then the strictly smaller key (`f64::total_cmp`)
+/// wins.
+fn combine(a: IndexNode, b: IndexNode) -> IndexNode {
+    let b_wins = (b.admitting && !a.admitting)
+        || (b.admitting == a.admitting && b.key.total_cmp(&a.key) == std::cmp::Ordering::Less);
+    if b_wins {
+        b
+    } else {
+        a
+    }
+}
+
+/// Incrementally maintained shard-selection index for the deterministic
+/// scan balancers (JSQ and least-work): a flat tournament tree over one
+/// leaf per shard, so the fleet loop answers "which admitting shard has
+/// the minimum key?" in O(1) at the root and repairs it in O(log K) per
+/// changed shard, instead of rescanning all K shards on every arrival.
+///
+/// The fleet marks a shard dirty ([`ShardIndex::mark`]) whenever its
+/// occupancy, queue, work, or lifecycle phase changes, and flushes the
+/// dirty set (recomputing each leaf from live shard state via
+/// [`ShardIndex::update`]) immediately before reading
+/// [`ShardIndex::root`]. Because leaves are recomputed from the same
+/// state a [`ShardView`] snapshot would report, and [`combine`]
+/// reproduces `argmin_admitting`'s exact ordering (admitting-first, then
+/// `total_cmp` on the key, ties to the lowest index), a flushed index
+/// returns byte-for-byte the same pick as the linear scan — the fleet
+/// asserts as much in debug builds.
+///
+/// Keys are `f64`; JSQ's outstanding counts convert exactly (they are
+/// far below 2^53), so `total_cmp` on the converted key orders identically
+/// to `usize` comparison.
+#[derive(Debug)]
+pub(crate) struct ShardIndex {
+    /// Number of real shards; leaves `n..cap` are permanent padding.
+    n: usize,
+    /// Leaf capacity: `n` rounded up to a power of two (min 1).
+    cap: usize,
+    /// Implicit binary tree: root at `1`, leaf `i` at `cap + i`.
+    tree: Vec<IndexNode>,
+    /// Dirty shard ids awaiting a leaf recompute, deduplicated by `flag`.
+    dirty: Vec<usize>,
+    flag: Vec<bool>,
+}
+
+impl ShardIndex {
+    /// Build an index over `n` shards with every real leaf dirty, so the
+    /// first flush populates the tree from live shard state.
+    pub fn new(n: usize) -> ShardIndex {
+        let cap = n.max(1).next_power_of_two();
+        ShardIndex {
+            n,
+            cap,
+            tree: vec![PAD; 2 * cap],
+            dirty: (0..n).collect(),
+            flag: vec![true; n],
+        }
+    }
+
+    /// Mark shard `s` as changed since the last flush (idempotent).
+    pub fn mark(&mut self, s: usize) {
+        if s < self.n && !self.flag[s] {
+            self.flag[s] = true;
+            self.dirty.push(s);
+        }
+    }
+
+    /// Take one dirty shard id, if any (flush loop driver).
+    pub fn pop_dirty(&mut self) -> Option<usize> {
+        let s = self.dirty.pop()?;
+        self.flag[s] = false;
+        Some(s)
+    }
+
+    /// Recompute shard `s`'s leaf and repair the path to the root.
+    pub fn update(&mut self, s: usize, admitting: bool, key: f64) {
+        debug_assert!(s < self.n, "shard {s} out of range {}", self.n);
+        let mut i = self.cap + s;
+        self.tree[i] = IndexNode {
+            admitting,
+            key,
+            shard: s,
+        };
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = combine(self.tree[2 * i], self.tree[2 * i + 1]);
+        }
+    }
+
+    /// The tournament winner over all shards. `admitting == false` means
+    /// *no* shard admits (padding never wins against a real leaf, even a
+    /// non-admitting one, because its key is `+inf`); callers fall back
+    /// to their degraded path in that case rather than using `shard`.
+    pub fn root(&self) -> IndexNode {
+        self.tree[1]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,6 +686,113 @@ mod tests {
         let shards = vec![cold(1, 4, 5.0), cold(0, 2, 1.0)];
         assert_eq!(pick_reprefill_target(&shards, |_| 0.0), None);
         assert_eq!(pick_reprefill_target(&[], |_| 0.0), None);
+    }
+
+    /// Drive a [`ShardIndex`] and the linear `argmin_admitting` scan
+    /// through the same randomized mutation stream: after every flush the
+    /// root must name exactly the shard the scan balancer would pick,
+    /// for both the JSQ key (outstanding as f64) and the least-work key.
+    #[test]
+    fn shard_index_matches_linear_scan_under_random_mutations() {
+        let mut rng = Rng::new(0xD15C);
+        for trial in 0..200 {
+            let k = 1 + rng.below(9) as usize;
+            let mut shards: Vec<ShardView> = (0..k)
+                .map(|_| {
+                    let v = view(
+                        rng.below(4) as usize,
+                        rng.below(12) as usize,
+                        // Quantized so exact key ties are common.
+                        rng.below(5) as f64 * 0.5,
+                    );
+                    ShardView {
+                        admitting: !rng.chance(0.3),
+                        ..v
+                    }
+                })
+                .collect();
+            let mut jsq_idx = ShardIndex::new(k);
+            let mut lw_idx = ShardIndex::new(k);
+            for step in 0..40 {
+                // Mutate a random shard (after the first pass, which
+                // flushes the initial all-dirty state unchanged).
+                if step > 0 {
+                    let s = rng.below(k as u64) as usize;
+                    shards[s] = ShardView {
+                        admitting: !rng.chance(0.3),
+                        ..view(
+                            rng.below(4) as usize,
+                            rng.below(12) as usize,
+                            rng.below(5) as f64 * 0.5,
+                        )
+                    };
+                    jsq_idx.mark(s);
+                    jsq_idx.mark(s); // idempotent double-mark
+                    lw_idx.mark(s);
+                }
+                while let Some(s) = jsq_idx.pop_dirty() {
+                    jsq_idx.update(s, shards[s].admitting, shards[s].outstanding() as f64);
+                }
+                while let Some(s) = lw_idx.pop_dirty() {
+                    lw_idx.update(s, shards[s].admitting, shards[s].work);
+                }
+                let any = shards.iter().any(|s| s.admitting);
+                let (jr, lr) = (jsq_idx.root(), lw_idx.root());
+                assert_eq!(jr.admitting, any, "trial {trial} step {step}: {shards:?}");
+                assert_eq!(lr.admitting, any, "trial {trial} step {step}: {shards:?}");
+                if any {
+                    let want_jsq =
+                        argmin_admitting(&shards, |a, b| a.outstanding() < b.outstanding());
+                    let want_lw = argmin_admitting(&shards, |a, b| {
+                        a.work.total_cmp(&b.work) == std::cmp::Ordering::Less
+                    });
+                    assert_eq!(
+                        jr.shard, want_jsq,
+                        "trial {trial} step {step} JSQ: {shards:?}"
+                    );
+                    assert_eq!(
+                        lr.shard, want_lw,
+                        "trial {trial} step {step} least-work: {shards:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Exact key ties resolve to the lowest shard index, matching the
+    /// scan balancers, including across power-of-two subtree boundaries.
+    #[test]
+    fn shard_index_breaks_ties_to_lowest_index() {
+        for k in [2usize, 3, 5, 8] {
+            let mut idx = ShardIndex::new(k);
+            while let Some(s) = idx.pop_dirty() {
+                idx.update(s, true, 7.0);
+            }
+            assert_eq!(idx.root().shard, 0, "k={k}: all-tied must pick shard 0");
+            // Lower key on the last shard wins; re-tie returns to 0.
+            idx.update(k - 1, true, 3.0);
+            assert_eq!(idx.root().shard, k - 1);
+            idx.update(k - 1, true, 7.0);
+            assert_eq!(idx.root().shard, 0);
+        }
+    }
+
+    /// With no admitting shard, the root reports `admitting == false`
+    /// (the fleet's cue to take its degraded path) — padding leaves never
+    /// masquerade as real shards.
+    #[test]
+    fn shard_index_all_cold_root_reports_non_admitting() {
+        let mut idx = ShardIndex::new(3);
+        while let Some(s) = idx.pop_dirty() {
+            idx.update(s, false, s as f64);
+        }
+        let root = idx.root();
+        assert!(!root.admitting);
+        assert!(root.shard < 3, "winner must still be a real shard");
+        // One shard warms up: it wins regardless of key.
+        idx.update(2, true, 1e9);
+        assert!(idx.root().admitting);
+        assert_eq!(idx.root().shard, 2);
     }
 
     #[test]

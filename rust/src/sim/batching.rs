@@ -217,6 +217,12 @@ impl BatchingMode {
         }
     }
 
+    /// The scheduling-tick interval, when the mode schedules ticks
+    /// (`Continuous` only — `SlotLegacy` never ticks).
+    pub fn tick_interval(&self) -> Option<f64> {
+        self.continuous().map(|c| c.tick_interval)
+    }
+
     /// Short label used in tables and CSVs.
     pub fn label(&self) -> &'static str {
         match self {

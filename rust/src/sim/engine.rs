@@ -269,14 +269,64 @@ pub(crate) struct Resolved {
     pub migration: Option<MigrationInfo>,
 }
 
+/// Borrowed view of the server endpoint a §4.3 server-bound re-prefill
+/// estimates and samples against: the target shard's profile by
+/// reference, plus a pre-combined RTT offset (shard RTT + predicted
+/// admission-queue delay). Replaces the per-resolve `ServerEndpoint`
+/// clone the migration path used to make on every migrated stream — the
+/// float arithmetic mirrors [`ServerEndpoint`]'s `SimEndpoint` impl
+/// operation-for-operation, so records stay byte-identical.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MigrationServer<'a> {
+    profile: &'a ServerProfile,
+    extra_rtt: f64,
+}
+
+impl<'a> MigrationServer<'a> {
+    /// View of an endpoint as-is (fallback target: the stream's own
+    /// shard, or the scenario's base server).
+    pub fn of(ep: &'a ServerEndpoint) -> MigrationServer<'a> {
+        MigrationServer {
+            profile: &ep.profile,
+            extra_rtt: ep.extra_rtt,
+        }
+    }
+
+    /// View of an endpoint with a caller-combined RTT offset (the target
+    /// shard's `extra_rtt` plus its predicted re-prefill queue delay —
+    /// the caller does the addition so the operand order matches the
+    /// historical `ep.extra_rtt += delay` mutation exactly).
+    pub fn with_extra_rtt(ep: &'a ServerEndpoint, extra_rtt: f64) -> MigrationServer<'a> {
+        MigrationServer {
+            profile: &ep.profile,
+            extra_rtt,
+        }
+    }
+
+    /// Mirrors `ServerEndpoint::expected_ttft`.
+    fn expected_ttft(&self, _prompt_len: u32) -> f64 {
+        self.extra_rtt + self.profile.mean_ttft()
+    }
+
+    /// Mirrors `ServerEndpoint::sample_ttft`.
+    fn sample_ttft(&self, _prompt_len: u32, rng: &mut Rng) -> f64 {
+        self.extra_rtt + self.profile.sample_ttft(rng)
+    }
+
+    /// Mirrors `ServerEndpoint::sample_gaps`.
+    fn sample_gaps(&self, _ctx_len: u32, n: u32, rng: &mut Rng) -> Vec<f64> {
+        self.profile.sample_gaps(n, rng)
+    }
+}
+
 /// Simulate one request given its resource-grant times. Times inside are
 /// relative to arrival; `ResourceTimes` converts through absolute time.
 ///
-/// `migration_server` is the server endpoint a §4.3 server-bound
+/// `migration_server` is the borrowed server view a §4.3 server-bound
 /// re-prefill estimates and samples against — the *target shard* under
 /// shard-targeted migration (its RTT plus any predicted queue delay
-/// folded into `extra_rtt`). `None` falls back to `server`, the
-/// historical single-target behavior, byte-for-byte.
+/// pre-combined into the view's `extra_rtt`). `None` falls back to
+/// `server`, the historical single-target behavior, byte-for-byte.
 ///
 /// `batch` scales server-side decode gaps by the fleet's batch-latency
 /// curve (continuous batching); `BatchCtx::default()` (both factors
@@ -288,14 +338,14 @@ pub(crate) fn resolve_request(
     policy: &Policy,
     server: &ServerEndpoint,
     device: &DeviceEndpoint,
-    migration_server: Option<&ServerEndpoint>,
+    migration_server: Option<MigrationServer<'_>>,
     planner: &MigrationPlanner,
     cfg: &SimConfig,
     times: ResourceTimes,
     batch: BatchCtx,
     rng: &mut Rng,
 ) -> Resolved {
-    let migration_server = migration_server.unwrap_or(server);
+    let migration_server = migration_server.unwrap_or(MigrationServer::of(server));
     let l = req.prompt_len;
     let n = req.output_len.min(cfg.gen_limit).max(1);
     let r_c = cfg.migration.consumption_rate;
@@ -830,7 +880,7 @@ mod tests {
                 &policy,
                 &src,
                 &device,
-                Some(&target),
+                Some(MigrationServer::of(&target)),
                 &planner,
                 &cfg,
                 times,

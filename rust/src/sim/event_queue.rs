@@ -1,0 +1,574 @@
+//! Pluggable discrete-event priority queue: a binary-heap reference
+//! backend and a self-tuning calendar-queue / timing-wheel backend that
+//! pops the *byte-identical* `(time, seq)` sequence.
+//!
+//! # Ordering contract
+//!
+//! Events are totally ordered by `(time, seq)` with [`f64::total_cmp`]
+//! on the time and push order (`seq`, assigned by [`EventQueue::push`])
+//! breaking exact time ties. Every backend must pop this exact total
+//! order — the fleet simulator's bit-reproducibility rests on it, and
+//! the parity suite at the bottom of this file asserts it over
+//! randomized storms (heavy ties, far-future spikes, interleaved
+//! push/pop, and non-finite times included).
+//!
+//! # Why the wheel preserves the order exactly
+//!
+//! The wheel never buckets by *real time intervals* — floating-point
+//! interval arithmetic at bucket edges could misplace an event in
+//! either direction. Bucket membership is defined purely by the
+//! computed key
+//!
+//! ```text
+//! key(t) = floor((t − origin) / width) as i64      (width > 0, finite)
+//! ```
+//!
+//! which is a composition of monotone non-decreasing operations
+//! (subtraction of a constant, division by a positive constant, floor,
+//! saturating cast), so for finite times `a ≤ b ⇒ key(a) ≤ key(b)` —
+//! equivalently `key(a) < key(b) ⇒ a < b`, and equal times always get
+//! equal keys. Consequences the pop loop relies on:
+//!
+//! * draining buckets in ascending key order can never pop a later time
+//!   before an earlier one, regardless of where `origin`/`width` landed;
+//! * time ties always share a bucket, where a per-bucket binary heap
+//!   breaks them by `seq` exactly like the reference backend.
+//!
+//! Non-finite times never enter the key function (`NaN as i64` is 0,
+//! which would break monotonicity): per `total_cmp`, negative
+//! non-finite times (−∞, negative NaN) sort before every finite time
+//! and go straight to the current heap, and positive ones (+∞,
+//! positive NaN) sort after everything finite and wait in a dedicated
+//! far heap that only drains once all finite work is gone.
+
+use std::collections::BinaryHeap;
+
+/// Which event-queue backend a fleet run schedules on. Both backends
+/// pop the identical `(time, seq)` total order (see the module docs),
+/// so the choice affects throughput only — never results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventQueueKind {
+    /// Self-tuning calendar queue (timing wheel): O(1) amortized push
+    /// and pop on the dense near-future event population a fleet run
+    /// generates. The default.
+    #[default]
+    Wheel,
+    /// Single global binary heap — the reference implementation the
+    /// wheel is byte-parity-checked against (O(log n) per operation).
+    Heap,
+}
+
+impl EventQueueKind {
+    /// All backends, for parity matrices.
+    pub fn all() -> [EventQueueKind; 2] {
+        [EventQueueKind::Wheel, EventQueueKind::Heap]
+    }
+
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventQueueKind::Wheel => "wheel",
+            EventQueueKind::Heap => "heap",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<EventQueueKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "wheel" | "calendar" | "timing-wheel" => EventQueueKind::Wheel,
+            "heap" | "binary-heap" => EventQueueKind::Heap,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for EventQueueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One scheduled item: `(time, seq)` carries the total order, `item`
+/// the payload. The `Ord` impl is *reversed* (earliest-first under a
+/// max-heap), exactly like the fleet simulator's historical `Event`.
+#[derive(Clone, Copy, Debug)]
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == std::cmp::Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Number of ring buckets. One self-tuned window spans
+/// `NUM_BUCKETS × width` seconds; with `width = span / NUM_BUCKETS` a
+/// single window covers the whole pending population at reseed time,
+/// and the per-bucket heap holds ~`len / NUM_BUCKETS` entries — the
+/// comparison-count win over one global heap.
+const NUM_BUCKETS: usize = 256;
+
+/// The timing-wheel backend. Four regions, partitioned by key:
+///
+/// * `cur` — entries with `key < cur_key` (plus negative non-finite
+///   times): a binary heap, the only pop source. Strictly earlier than
+///   everything outside it (monotone keys), so popping it dry before
+///   advancing is exact.
+/// * `ring` — `NUM_BUCKETS` unsorted buckets covering keys
+///   `[cur_key, cur_key + NUM_BUCKETS)`, one key per slot.
+/// * `overflow` — finite times with `key ≥ cur_key + NUM_BUCKETS`
+///   (or any finite time while unseeded); redistributed into the ring
+///   as the window advances, and the reseed source when the ring runs
+///   dry (that reseed is what makes the calendar self-tuning).
+/// * `far` — positive non-finite times (+∞, positive NaN): after every
+///   finite time per `total_cmp`, drained heap-ordered only when
+///   nothing else remains.
+#[derive(Debug)]
+struct Wheel<T> {
+    cur: BinaryHeap<Entry<T>>,
+    ring: Vec<Vec<Entry<T>>>,
+    ring_count: usize,
+    overflow: Vec<Entry<T>>,
+    far: BinaryHeap<Entry<T>>,
+    origin: f64,
+    width: f64,
+    cur_key: i64,
+    /// Until the first pop the wheel is unseeded: every finite push
+    /// parks in `overflow`, and the first pop reseeds `origin`/`width`
+    /// from the real span of the pending population.
+    seeded: bool,
+    len: usize,
+}
+
+impl<T> Wheel<T> {
+    fn new() -> Wheel<T> {
+        Wheel {
+            cur: BinaryHeap::new(),
+            ring: (0..NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            ring_count: 0,
+            overflow: Vec::new(),
+            far: BinaryHeap::new(),
+            origin: 0.0,
+            width: 1.0,
+            cur_key: 0,
+            seeded: false,
+            len: 0,
+        }
+    }
+
+    /// The monotone bucket key (callers guarantee `time` is finite).
+    /// `as i64` saturates at the i64 range, which keeps monotonicity.
+    fn key(&self, time: f64) -> i64 {
+        ((time - self.origin) / self.width).floor() as i64
+    }
+
+    fn ring_slot(key: i64) -> usize {
+        key.rem_euclid(NUM_BUCKETS as i64) as usize
+    }
+
+    /// Place one entry into the region its key selects. Only called
+    /// while seeded (or during redistribution, which seeds first).
+    fn place(&mut self, e: Entry<T>) {
+        if !e.time.is_finite() {
+            if e.time.is_sign_negative() {
+                // −∞ / negative NaN: before every finite time.
+                self.cur.push(e);
+            } else {
+                self.far.push(e);
+            }
+            return;
+        }
+        let k = self.key(e.time);
+        if k < self.cur_key {
+            self.cur.push(e);
+        } else if k < self.cur_key + NUM_BUCKETS as i64 {
+            self.ring[Self::ring_slot(k)].push(e);
+            self.ring_count += 1;
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    fn push(&mut self, e: Entry<T>) {
+        self.len += 1;
+        if !self.seeded && e.time.is_finite() {
+            self.overflow.push(e);
+        } else {
+            self.place(e);
+        }
+    }
+
+    /// (Re)tune `origin`/`width` to the span of the finite overflow
+    /// population and redistribute it. Called when `cur` and the ring
+    /// are dry but overflow is not — the calendar-queue self-tuning
+    /// step. Correctness does not depend on the tuning (membership is
+    /// key-based), only throughput does.
+    fn reseed(&mut self) {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for e in &self.overflow {
+            if e.time < min {
+                min = e.time;
+            }
+            if e.time > max {
+                max = e.time;
+            }
+        }
+        debug_assert!(min.is_finite(), "overflow holds finite times only");
+        self.origin = min;
+        let w = (max - min) / NUM_BUCKETS as f64;
+        self.width = if w.is_finite() && w > 0.0 { w } else { 1.0 };
+        self.cur_key = 0;
+        self.seeded = true;
+        for e in std::mem::take(&mut self.overflow) {
+            self.place(e);
+        }
+    }
+
+    /// Pull overflow entries that now fit the advanced window into the
+    /// ring. Keeps the invariant that everything left in `overflow` has
+    /// `key ≥ cur_key + NUM_BUCKETS` — without it, a later ring push
+    /// with a smaller key than a parked overflow entry would pop first.
+    fn redistribute_overflow(&mut self) {
+        if self.overflow.is_empty() {
+            return;
+        }
+        let horizon = self.cur_key + NUM_BUCKETS as i64;
+        let mut i = 0;
+        while i < self.overflow.len() {
+            if self.key(self.overflow[i].time) < horizon {
+                let e = self.overflow.swap_remove(i);
+                self.place(e);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry<T>> {
+        loop {
+            if let Some(e) = self.cur.pop() {
+                self.len -= 1;
+                return Some(e);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            if self.ring_count > 0 {
+                // Advance to the next non-empty bucket. Each in-window
+                // key owns exactly one slot, so scanning keys in
+                // ascending order drains the ring in key order.
+                for step in 0..NUM_BUCKETS as i64 {
+                    let k = self.cur_key + step;
+                    let slot = Self::ring_slot(k);
+                    if self.ring[slot].is_empty() {
+                        continue;
+                    }
+                    let bucket = std::mem::take(&mut self.ring[slot]);
+                    self.ring_count -= bucket.len();
+                    for e in bucket {
+                        self.cur.push(e);
+                    }
+                    self.cur_key = k + 1;
+                    self.redistribute_overflow();
+                    break;
+                }
+            } else if !self.overflow.is_empty() {
+                self.reseed();
+            } else {
+                // Only far (+∞ / positive-NaN) entries remain; drain
+                // them heap-ordered.
+                while let Some(e) = self.far.pop() {
+                    self.cur.push(e);
+                }
+                debug_assert!(!self.cur.is_empty(), "len > 0 with every region empty");
+            }
+        }
+    }
+}
+
+/// A discrete-event queue ordered by `(time, seq)`; `seq` is assigned
+/// at push, so same-time events pop in push order under every backend.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    backend: Backend<T>,
+    /// Total pushes so far — also the next `seq`. Surfaces as
+    /// `LoadReport::events_processed` (every pushed event is popped by
+    /// a run that drains the queue).
+    pushed: u64,
+}
+
+#[derive(Debug)]
+enum Backend<T> {
+    Heap(BinaryHeap<Entry<T>>),
+    Wheel(Wheel<T>),
+}
+
+impl<T> EventQueue<T> {
+    pub fn new(kind: EventQueueKind) -> EventQueue<T> {
+        EventQueue {
+            backend: match kind {
+                EventQueueKind::Heap => Backend::Heap(BinaryHeap::new()),
+                EventQueueKind::Wheel => Backend::Wheel(Wheel::new()),
+            },
+            pushed: 0,
+        }
+    }
+
+    /// Schedule `item` at `time`; later pushes at the same time pop
+    /// later (FIFO among ties).
+    pub fn push(&mut self, time: f64, item: T) {
+        let e = Entry {
+            time,
+            seq: self.pushed,
+            item,
+        };
+        self.pushed += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(e),
+            Backend::Wheel(w) => w.push(e),
+        }
+    }
+
+    /// Pop the earliest `(time, seq)` entry.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop(),
+            Backend::Wheel(w) => w.pop(),
+        }?;
+        Some((e.time, e.item))
+    }
+
+    /// Total events pushed over the queue's lifetime.
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Wheel(w) => w.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Drive both backends through the identical push/pop schedule and
+    /// assert the popped `(time-bits, payload)` sequences match bit for
+    /// bit. `schedule` receives a callback per step: `Some(t)` pushes
+    /// at `t`, `None` pops once.
+    fn assert_parity(label: &str, schedule: impl Fn(&mut dyn FnMut(Option<f64>))) {
+        let mut wheel: EventQueue<u64> = EventQueue::new(EventQueueKind::Wheel);
+        let mut heap: EventQueue<u64> = EventQueue::new(EventQueueKind::Heap);
+        let mut next_item = 0u64;
+        let mut step = |op: Option<f64>| match op {
+            Some(t) => {
+                wheel.push(t, next_item);
+                heap.push(t, next_item);
+                next_item += 1;
+            }
+            None => {
+                let w = wheel.pop().map(|(t, i)| (t.to_bits(), i));
+                let h = heap.pop().map(|(t, i)| (t.to_bits(), i));
+                assert_eq!(w, h, "{label}: pop mismatch");
+            }
+        };
+        schedule(&mut step);
+        assert_eq!(wheel.len(), heap.len(), "{label}: len mismatch");
+        loop {
+            let w = wheel.pop().map(|(t, i)| (t.to_bits(), i));
+            let h = heap.pop().map(|(t, i)| (t.to_bits(), i));
+            assert_eq!(w, h, "{label}: drain mismatch");
+            if w.is_none() {
+                break;
+            }
+        }
+        assert_eq!(wheel.pushed(), heap.pushed());
+    }
+
+    #[test]
+    fn storm_uniform_times() {
+        let mut rng = Rng::new(0xE0E0);
+        let times: Vec<f64> = (0..5000).map(|_| rng.f64() * 1000.0).collect();
+        assert_parity("uniform", |step| {
+            for &t in &times {
+                step(Some(t));
+            }
+        });
+    }
+
+    #[test]
+    fn storm_heavy_ties() {
+        // Quantized times: many exact ties, which must pop in push
+        // (seq) order.
+        let mut rng = Rng::new(0x71E5);
+        let times: Vec<f64> = (0..4000).map(|_| (rng.below(40) as f64) * 0.25).collect();
+        assert_parity("ties", |step| {
+            for &t in &times {
+                step(Some(t));
+            }
+        });
+    }
+
+    #[test]
+    fn storm_interleaved_push_pop() {
+        // DES-style: pop advances a clock, pushes land at now + jitter
+        // (with occasional exact-now ties and far-future spikes).
+        let mut rng = Rng::new(0xD15C0);
+        let mut ops: Vec<Option<f64>> = Vec::new();
+        let mut now = 0.0f64;
+        for _ in 0..200 {
+            ops.push(Some(now + rng.f64()));
+        }
+        for _ in 0..6000 {
+            if rng.chance(0.55) {
+                ops.push(None);
+                now += 0.01; // approximate clock advance for new pushes
+            } else {
+                let dt = if rng.chance(0.02) {
+                    1.0e6 + rng.f64() // far-future spike
+                } else if rng.chance(0.1) {
+                    0.0 // exact tie with "now"
+                } else {
+                    rng.f64() * 2.0
+                };
+                ops.push(Some(now + dt));
+            }
+        }
+        assert_parity("interleaved", |step| {
+            for &op in &ops {
+                step(op);
+            }
+        });
+    }
+
+    #[test]
+    fn storm_all_same_time() {
+        assert_parity("same-time", |step| {
+            for _ in 0..1000 {
+                step(Some(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn storm_tiny_and_huge_spans() {
+        // Denormal-scale spans and astronomically wide ones both key
+        // monotonically (the cast saturates); order must survive.
+        assert_parity("spans", |step| {
+            for i in 0..100 {
+                step(Some(1.0 + (i as f64) * f64::EPSILON));
+            }
+            for i in 0..100 {
+                step(Some((i as f64) * 1.0e300));
+            }
+            step(Some(0.5));
+            step(None);
+            step(None);
+        });
+    }
+
+    #[test]
+    fn non_finite_times_follow_total_cmp_order() {
+        // total_cmp: −NaN < −∞ < finite < +∞ < +NaN. The wheel must
+        // agree with the heap on all of them.
+        let nan = f64::NAN;
+        let neg_nan = -f64::NAN;
+        assert_parity("non-finite", |step| {
+            for &t in &[3.0, f64::INFINITY, 1.0, neg_nan, nan, f64::NEG_INFINITY, 2.0] {
+                step(Some(t));
+            }
+            step(None); // pops −NaN
+            step(Some(0.25)); // push after partial drain
+        });
+    }
+
+    #[test]
+    fn push_behind_the_window_pops_first() {
+        // An event scheduled before already-popped times (not produced
+        // by the fleet loop, but the contract covers it): key < cur_key
+        // routes to the current heap and pops next.
+        assert_parity("behind-window", |step| {
+            for i in 0..600 {
+                step(Some(i as f64));
+            }
+            for _ in 0..300 {
+                step(None);
+            }
+            step(Some(100.5)); // far behind the advanced window
+            step(None);
+        });
+    }
+
+    #[test]
+    fn reseed_after_drain_handles_sparse_tail() {
+        // Drain the first dense cluster completely, then a sparse
+        // far-future tail forces a reseed with a very different width.
+        assert_parity("reseed", |step| {
+            for i in 0..500 {
+                step(Some(i as f64 * 0.001));
+            }
+            step(Some(5.0e4));
+            step(Some(9.0e7));
+            for _ in 0..503 {
+                step(None);
+            }
+            step(None); // empty pop
+        });
+    }
+
+    #[test]
+    fn len_and_pushed_track_operations() {
+        let mut q: EventQueue<&'static str> = EventQueue::new(EventQueueKind::Wheel);
+        assert!(q.is_empty());
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pushed(), 2);
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pushed(), 2, "pushed counts lifetime pushes, not len");
+    }
+
+    #[test]
+    fn kind_parse_and_labels_round_trip() {
+        for kind in EventQueueKind::all() {
+            assert_eq!(EventQueueKind::parse(kind.label()), Some(kind));
+            assert_eq!(format!("{kind}"), kind.label());
+        }
+        assert_eq!(EventQueueKind::parse("calendar"), Some(EventQueueKind::Wheel));
+        assert_eq!(EventQueueKind::parse("binary-heap"), Some(EventQueueKind::Heap));
+        assert_eq!(EventQueueKind::parse("bogus"), None);
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Wheel);
+    }
+}

@@ -5,8 +5,9 @@
 //! distributions independently). At fleet scale the interesting effects
 //! are *contention* effects: servers with finite admission capacity build
 //! queues as load rises, and the on-device model can only run one
-//! inference at a time. This module adds exactly that, as a binary-heap
-//! event loop over:
+//! inference at a time. This module adds exactly that, as an event loop
+//! (over a pluggable [`EventQueue`](crate::sim::event_queue::EventQueue)
+//! backend — timing wheel by default, binary heap as the reference) over:
 //!
 //! * **Arrival** events — fork the request's RNG, draw its dispatch
 //!   decision through the unchanged `coordinator::policy`, pre-draw its
@@ -101,8 +102,13 @@
 //! streams are forked in trace order and all latency samples are
 //! pre-drawn at arrival, so resolution timing cannot perturb them.
 //!
-//! Determinism: the heap orders events by `(time, sequence)` with
-//! `f64::total_cmp`, so runs are bit-reproducible from `SimConfig.seed`.
+//! Determinism: the event queue orders events by `(time, sequence)` with
+//! `f64::total_cmp`, so runs are bit-reproducible from `SimConfig.seed` —
+//! and both queue backends ([`EventQueueKind::Wheel`] and
+//! [`EventQueueKind::Heap`], selected by `FleetConfig::event_queue`)
+//! realize the *same* total order, so runs are byte-identical across
+//! backends too (see `docs/fleet.md` § event queue & determinism
+//! contract).
 
 use crate::coordinator::migration::MigrationPlanner;
 use crate::coordinator::policy::Policy;
@@ -115,14 +121,17 @@ use crate::metrics::{
 use crate::sim::autoscaler::{
     AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
 };
-use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardView};
+use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardIndex, ShardView};
 use crate::sim::batching::{BatchingMode, ContinuousBatchConfig};
-use crate::sim::engine::{pre_draw, resolve_request, BatchCtx, PreDrawn, ResourceTimes, Scenario};
+use crate::sim::engine::{
+    pre_draw, resolve_request, BatchCtx, MigrationServer, PreDrawn, ResourceTimes, Scenario,
+};
+use crate::sim::event_queue::{EventQueue, EventQueueKind};
 use crate::stats::describe::Summary;
 use crate::trace::Trace;
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 /// How a §4.3 migration that moves generation onto the server picks its
 /// re-prefill target.
@@ -245,6 +254,12 @@ pub struct FleetConfig {
     /// decode (ignoring `server_slots` — the batch, not a slot count,
     /// bounds concurrency).
     pub batching: BatchingMode,
+    /// Which event-queue backend orders the loop. Both backends realize
+    /// the exact `(time, seq)` total order, so runs are byte-identical
+    /// across them; the default timing wheel is the fast path, the
+    /// binary heap the reference implementation the parity tests pin
+    /// against.
+    pub event_queue: EventQueueKind,
 }
 
 impl FleetConfig {
@@ -262,6 +277,7 @@ impl FleetConfig {
             shard_faults: Vec::new(),
             outages: Vec::new(),
             batching: BatchingMode::SlotLegacy,
+            event_queue: EventQueueKind::default(),
         }
     }
 
@@ -329,6 +345,14 @@ impl FleetConfig {
         self
     }
 
+    /// Select the event-queue backend. The timing wheel (default) and
+    /// the binary heap produce byte-identical runs; the heap exists as
+    /// the reference the parity suite compares against.
+    pub fn with_event_queue(mut self, kind: EventQueueKind) -> FleetConfig {
+        self.event_queue = kind;
+        self
+    }
+
     /// Convenience: a K-shard continuous-batching fleet.
     pub fn continuous(
         shards: usize,
@@ -353,8 +377,12 @@ pub struct FleetOutcome {
 }
 
 // ---------------------------------------------------------------------
-// Event queue
+// Events
 // ---------------------------------------------------------------------
+//
+// The queue itself — `(time, seq)` total ordering, wheel and heap
+// backends — lives in `crate::sim::event_queue`; the fleet only defines
+// its event payload.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EvKind {
@@ -392,37 +420,6 @@ enum EvKind {
     /// [`BatchingMode::Continuous`]; reschedules itself until every
     /// request has resolved.
     BatchTick,
-}
-
-#[derive(Clone, Copy, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
 }
 
 // ---------------------------------------------------------------------
@@ -768,24 +765,58 @@ impl Pool {
 // The simulator
 // ---------------------------------------------------------------------
 
+/// Per-stream state in dense struct-of-arrays (arena) form, keyed by the
+/// request's trace index. The hot loop used to carry this as
+/// `Vec<Option<ReqState>>` — one fat option per request, with the RNG
+/// cloned back out at resolve time; the arena splits it into columns so
+/// each event touches only the cache lines it reads, and the per-request
+/// RNG is mutated **in place** (disjoint-field borrows), never cloned.
+///
+/// Lifecycle: `rng` is pre-forked for every request at run start (trace
+/// order — the determinism contract). `pre` is pushed densely at
+/// arrival: arrival events are pushed first with sequence numbers
+/// `0..n-1` over nondecreasing trace times, so `Arrival(i)` always pops
+/// before `Arrival(j)` for `i < j` and `pre.len()` equals the number of
+/// requests that have arrived. All other columns are pre-sized to the
+/// trace length.
 #[derive(Debug)]
-struct ReqState {
-    pre: PreDrawn,
-    rng: Rng,
-    needs_server: bool,
-    needs_device: bool,
-    server_admit: Option<f64>,
-    device_grant: Option<f64>,
-    resolved: bool,
+struct StreamArena {
+    /// Pre-drawn decision + latency samples (valid once arrived).
+    pre: Vec<PreDrawn>,
+    /// Per-request RNG streams, forked in trace order at run start;
+    /// `pre_draw` consumes from the front, the resolve step continues
+    /// the same stream in place.
+    rng: Vec<Rng>,
+    needs_server: Vec<bool>,
+    needs_device: Vec<bool>,
+    server_admit: Vec<Option<f64>>,
+    device_grant: Vec<Option<f64>>,
+    resolved: Vec<bool>,
     /// The pre-fault prefill draw, kept when a shard fault degraded
-    /// `pre.server_sample` — an outage re-route restores it (the spike
-    /// belonged to the dead shard, not the stream).
-    base_sample: Option<f64>,
-    /// Multiplier on this stream's server-side decode gaps: the batch
+    /// `pre[i].server_sample` — an outage re-route restores it (the
+    /// spike belonged to the dead shard, not the stream).
+    base_sample: Vec<Option<f64>>,
+    /// Multiplier on the stream's server-side decode gaps: the batch
     /// latency curve evaluated at the shard's batch size when the
     /// stream was admitted (1.0 under slot semantics, and until
     /// admission).
-    decode_slowdown: f64,
+    decode_slowdown: Vec<f64>,
+}
+
+impl StreamArena {
+    fn new(n: usize) -> StreamArena {
+        StreamArena {
+            pre: Vec::with_capacity(n),
+            rng: Vec::new(),
+            needs_server: vec![false; n],
+            needs_device: vec![false; n],
+            server_admit: vec![None; n],
+            device_grant: vec![None; n],
+            resolved: vec![false; n],
+            base_sample: vec![None; n],
+            decode_slowdown: vec![1.0; n],
+        }
+    }
 }
 
 /// One server shard: a bounded slot pool plus its load accounting and
@@ -861,9 +892,18 @@ struct FleetSim<'a> {
     /// Fleet-level balancer stream, disjoint from every per-request
     /// stream (randomized balancers must not perturb latency draws).
     brng: Rng,
-    heap: BinaryHeap<Event>,
-    seq: u64,
-    states: Vec<Option<ReqState>>,
+    /// The event queue (wheel or heap backend per
+    /// `FleetConfig::event_queue`); sequence numbers are assigned at
+    /// push, so `queue.pushed()` is the historical `events_processed`.
+    queue: EventQueue<EvKind>,
+    /// Dense per-stream state (SoA), keyed by trace index.
+    arena: StreamArena,
+    /// Incrementally maintained shard-selection index for the
+    /// deterministic scan balancers (JSQ / least-work): `None` for other
+    /// balancers, which snapshot and scan as before. Mutation sites mark
+    /// shards dirty ([`FleetSim::touch_shard`]); picks flush and read
+    /// the root in O(dirty · log K) instead of rescanning all K shards.
+    shard_index: Option<ShardIndex>,
     /// Queue-entry cancellation flags, indexed by request. These live
     /// outside `ReqState` (single source of truth) so `Pool::release`
     /// can consult them while the simulator is otherwise borrowed.
@@ -924,9 +964,17 @@ struct FleetSim<'a> {
 
 impl<'a> FleetSim<'a> {
     fn push(&mut self, time: f64, kind: EvKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Event { time, seq, kind });
+        self.queue.push(time, kind);
+    }
+
+    /// Mark shard `s` stale in the incremental balancer index (no-op
+    /// when the configured balancer keeps none). Called wherever a
+    /// shard's occupancy, queue depth, outstanding work, or lifecycle
+    /// phase changes, so the next pick's flush sees fresh leaves.
+    fn touch_shard(&mut self, s: usize) {
+        if let Some(idx) = &mut self.shard_index {
+            idx.mark(s);
+        }
     }
 
     /// Request `i`, borrowed for the trace lifetime (decoupled from
@@ -938,14 +986,12 @@ impl<'a> FleetSim<'a> {
     fn run(mut self) -> FleetOutcome {
         // Fork per-request RNG streams in trace order (not event order):
         // this pins the root RNG sequence to the trace, matching the
-        // legacy engine draw-for-draw.
+        // legacy engine draw-for-draw. The streams live in the arena and
+        // are consumed in place — pre-draw at arrival, resolve later —
+        // without the per-request clone the loop used to pay.
         let trace = self.trace;
         let mut root = Rng::new(self.scenario.cfg.seed);
-        let mut rngs: Vec<Option<Rng>> = trace
-            .requests
-            .iter()
-            .map(|r| Some(root.fork(r.id)))
-            .collect();
+        self.arena.rng = trace.requests.iter().map(|r| root.fork(r.id)).collect();
         for (i, req) in trace.requests.iter().enumerate() {
             self.push(req.arrival, EvKind::Arrival(i));
         }
@@ -965,7 +1011,10 @@ impl<'a> FleetSim<'a> {
         // balanced, then immediately re-routed with the rest of the
         // queue).
         if !trace.requests.is_empty() {
-            for (idx, o) in self.fleet.outages.clone().iter().enumerate() {
+            // By index, not by cloned list: `ShardOutage` is `Copy`, so
+            // the schedule loop allocates nothing.
+            for idx in 0..self.fleet.outages.len() {
+                let o = self.fleet.outages[idx];
                 if o.at.is_finite() {
                     self.push(self.t0 + o.at.max(0.0), EvKind::Outage(idx));
                 }
@@ -985,7 +1034,7 @@ impl<'a> FleetSim<'a> {
             }
         }
 
-        while let Some(ev) = self.heap.pop() {
+        while let Some((time, kind)) = self.queue.pop() {
             // Autoscaler/failure bookkeeping (evaluation ticks, warm-ups,
             // outage injections) does not advance the workload horizon: a
             // cold start completing after the last token would otherwise
@@ -993,60 +1042,54 @@ impl<'a> FleetSim<'a> {
             // surviving shard. Work a warm-up *admits* still lands in the
             // horizon through its own resolve/release events.
             let bookkeeping = matches!(
-                ev.kind,
+                kind,
                 EvKind::AutoscaleEval
                     | EvKind::ShardWarm(_)
                     | EvKind::Outage(_)
                     | EvKind::BatchTick
             );
-            if ev.time.is_finite() && !bookkeeping {
-                self.horizon = self.horizon.max(ev.time);
+            if time.is_finite() && !bookkeeping {
+                self.horizon = self.horizon.max(time);
             }
-            match ev.kind {
+            match kind {
                 EvKind::Arrival(i) => {
                     let req = self.req(i);
-                    let mut rng = rngs[i].take().expect("arrival fires once");
+                    // Arrivals fire in trace order (pushed first, over
+                    // nondecreasing times), so the pre-draw column grows
+                    // densely.
+                    debug_assert_eq!(i, self.arena.pre.len(), "arrival out of trace order");
                     let pre = pre_draw(
                         req,
                         self.policy,
                         &self.scenario.server,
                         &self.scenario.device,
-                        &mut rng,
+                        &mut self.arena.rng[i],
                     );
                     let needs_server = pre.decision.uses_server();
                     let needs_device = pre.decision.uses_device();
-                    self.states[i] = Some(ReqState {
-                        pre,
-                        rng,
-                        needs_server,
-                        needs_device,
-                        server_admit: None,
-                        device_grant: None,
-                        resolved: false,
-                        base_sample: None,
-                        decode_slowdown: 1.0,
-                    });
+                    self.arena.pre.push(pre);
+                    self.arena.needs_server[i] = needs_server;
+                    self.arena.needs_device[i] = needs_device;
                     let tokens = self.prompt_tokens[i];
                     if needs_server {
                         let s = self.assign_shard(i);
                         if self.shards[s].pool.acquire(i, tokens) {
-                            self.on_server_admit(i, ev.time);
+                            self.on_server_admit(i, time);
                         }
+                        self.touch_shard(s);
                     }
                     if needs_device
                         && (!self.fleet.device_queueing || self.device_pool.acquire(i, tokens))
                     {
-                        self.on_device_grant(i, ev.time);
+                        self.on_device_grant(i, time);
                     }
-                    self.try_resolve(i, ev.time);
+                    self.try_resolve(i, time);
                 }
                 EvKind::ServerRelease(i) => {
                     let s = self.shard_of[i].expect("released requests are assigned");
                     // The slot holder's service ends here — only now does
                     // its work estimate leave the LeastWork signal.
-                    let sample = self
-                        .state(i)
-                        .pre
+                    let sample = self.arena.pre[i]
                         .server_sample
                         .expect("server users have a sample");
                     self.shards[s].work -= sample;
@@ -1054,27 +1097,27 @@ impl<'a> FleetSim<'a> {
                         .shards[s]
                         .pool
                         .release(&self.server_cancelled, &self.prompt_tokens);
+                    self.touch_shard(s);
                     if let Some(j) = next {
-                        self.on_server_admit(j, ev.time);
-                        self.try_resolve(j, ev.time);
+                        self.on_server_admit(j, time);
+                        self.try_resolve(j, time);
                     }
-                    self.record_batch(s, ev.time);
-                    self.maybe_retire(s, ev.time);
+                    self.record_batch(s, time);
+                    self.maybe_retire(s, time);
                 }
                 EvKind::DeviceRelease => {
                     let next = self
                         .device_pool
                         .release(&self.device_cancelled, &self.prompt_tokens);
                     if let Some(j) = next {
-                        self.on_device_grant(j, ev.time);
-                        self.try_resolve(j, ev.time);
+                        self.on_device_grant(j, time);
+                        self.try_resolve(j, time);
                     }
                 }
                 EvKind::ServerFirstProbe(i) => {
-                    let pending = !self.device_cancelled[i] && {
-                        let st = self.state(i);
-                        !st.resolved && st.device_grant.is_none()
-                    };
+                    let pending = !self.device_cancelled[i]
+                        && !self.arena.resolved[i]
+                        && self.arena.device_grant[i].is_none();
                     if pending {
                         // The server answered first: leave the device
                         // queue (`device_grant` is None, so with device
@@ -1084,14 +1127,13 @@ impl<'a> FleetSim<'a> {
                             let tokens = self.prompt_tokens[i];
                             self.device_pool.cancel_queued(tokens);
                         }
-                        self.try_resolve(i, ev.time);
+                        self.try_resolve(i, time);
                     }
                 }
                 EvKind::DeviceFirstProbe(i) => {
-                    let pending = !self.server_cancelled[i] && {
-                        let st = self.state(i);
-                        !st.resolved && st.server_admit.is_none()
-                    };
+                    let pending = !self.server_cancelled[i]
+                        && !self.arena.resolved[i]
+                        && self.arena.server_admit[i].is_none();
                     if pending {
                         // The device answered first: abandon the admission
                         // queue (the provider still bills the dispatched
@@ -1102,27 +1144,28 @@ impl<'a> FleetSim<'a> {
                         let s = self.shard_of[i].expect("server-bound requests are assigned");
                         let tokens = self.prompt_tokens[i];
                         self.shards[s].pool.cancel_queued(tokens);
-                        self.try_resolve(i, ev.time);
+                        self.touch_shard(s);
+                        self.try_resolve(i, time);
                         // A draining shard whose last live entry was just
                         // cancelled can retire now.
-                        self.maybe_retire(s, ev.time);
+                        self.maybe_retire(s, time);
                     }
                 }
                 EvKind::AutoscaleEval => {
-                    self.autoscale_eval(ev.time);
+                    self.autoscale_eval(time);
                     if self.resolved_count < trace.len() {
                         let interval = self
                             .autoscale
                             .as_ref()
                             .expect("eval events imply autoscale config")
                             .eval_interval;
-                        self.push(ev.time + interval, EvKind::AutoscaleEval);
+                        self.push(time + interval, EvKind::AutoscaleEval);
                     }
                 }
-                EvKind::ShardWarm(s) => self.warm_shard(s, ev.time),
+                EvKind::ShardWarm(s) => self.warm_shard(s, time),
                 EvKind::Outage(idx) => {
                     let shard = self.fleet.outages[idx].shard;
-                    self.inject_outage(shard, ev.time);
+                    self.inject_outage(shard, time);
                 }
                 EvKind::MigrationRelease(i) => {
                     let (s, real_slot, work, booked_at) = self.migration_booking[i]
@@ -1133,7 +1176,7 @@ impl<'a> FleetSim<'a> {
                     // slots bill into busy-seconds (within capacity),
                     // batch joins into over-commit seconds — keeping
                     // utilization a within-capacity ratio.
-                    let held = (ev.time - booked_at).max(0.0);
+                    let held = (time - booked_at).max(0.0);
                     if real_slot {
                         self.shards[s].busy += held;
                     } else {
@@ -1148,12 +1191,13 @@ impl<'a> FleetSim<'a> {
                             .pool
                             .release_overflow(&self.server_cancelled, &self.prompt_tokens)
                     };
+                    self.touch_shard(s);
                     if let Some(j) = next {
-                        self.on_server_admit(j, ev.time);
-                        self.try_resolve(j, ev.time);
+                        self.on_server_admit(j, time);
+                        self.try_resolve(j, time);
                     }
-                    self.record_batch(s, ev.time);
-                    self.maybe_retire(s, ev.time);
+                    self.record_batch(s, time);
+                    self.maybe_retire(s, time);
                 }
                 EvKind::BatchTick => {
                     let shard_count = self.shards.len();
@@ -1174,18 +1218,18 @@ impl<'a> FleetSim<'a> {
                             .pool
                             .try_admit(&self.server_cancelled, &self.prompt_tokens)
                         {
-                            self.on_server_admit(j, ev.time);
-                            self.try_resolve(j, ev.time);
+                            self.on_server_admit(j, time);
+                            self.try_resolve(j, time);
                         }
+                        self.touch_shard(s);
                     }
                     if self.resolved_count < trace.len() {
-                        let interval = match self.fleet.batching {
-                            BatchingMode::Continuous(c) => c.tick_interval,
-                            BatchingMode::SlotLegacy => {
-                                unreachable!("ticks imply continuous batching")
-                            }
-                        };
-                        self.push(ev.time + interval, EvKind::BatchTick);
+                        let interval = self
+                            .fleet
+                            .batching
+                            .tick_interval()
+                            .expect("ticks imply continuous batching");
+                        self.push(time + interval, EvKind::BatchTick);
                     }
                 }
             }
@@ -1275,7 +1319,7 @@ impl<'a> FleetSim<'a> {
             scale_events,
             cold_start_seconds: self.cold_start_seconds,
             shard_seconds,
-            events_processed: self.seq,
+            events_processed: self.queue.pushed(),
             migration_targeted: self.migration_targeted,
             migration_fallbacks: self.migration_fallbacks,
             outage_requeues: self.outage_requeues,
@@ -1283,14 +1327,6 @@ impl<'a> FleetSim<'a> {
             batch_timeline,
         };
         FleetOutcome { records, load }
-    }
-
-    fn state(&self, i: usize) -> &ReqState {
-        self.states[i].as_ref().expect("state exists after arrival")
-    }
-
-    fn state_mut(&mut self, i: usize) -> &mut ReqState {
-        self.states[i].as_mut().expect("state exists after arrival")
     }
 
     /// Rebuild the reusable per-shard snapshot buffer (`self.views`);
@@ -1354,6 +1390,13 @@ impl<'a> FleetSim<'a> {
     fn assign_shard(&mut self, i: usize) -> usize {
         let s = if self.shards.len() == 1 {
             0
+        } else if self.shard_index.is_some() {
+            // JSQ / least-work: answer the argmin from the incremental
+            // index instead of snapshotting and rescanning all K shards.
+            // Neither balancer consumes randomness, so skipping
+            // `Balancer::pick` leaves the fleet balancer stream — and
+            // therefore every other draw — byte-identical.
+            self.pick_indexed()
         } else {
             let any_admitting = self.snapshot_views();
             if any_admitting {
@@ -1375,9 +1418,7 @@ impl<'a> FleetSim<'a> {
             }
         };
         self.shard_of[i] = Some(s);
-        let mut sample = self
-            .state(i)
-            .pre
+        let mut sample = self.arena.pre[i]
             .server_sample
             .expect("server users have a sample");
         // Per-shard degradation: landing on a faulty shard may multiply
@@ -1390,13 +1431,71 @@ impl<'a> FleetSim<'a> {
             if self.frng.chance(f.spike_prob) {
                 let base = sample;
                 sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
-                let st = self.state_mut(i);
-                st.pre.server_sample = Some(sample);
-                st.base_sample = Some(base);
+                self.arena.pre[i].server_sample = Some(sample);
+                self.arena.base_sample[i] = Some(base);
             }
         }
         self.shards[s].work += sample;
+        self.touch_shard(s);
         s
+    }
+
+    /// O(dirty · log K) shard pick through the incremental index: flush
+    /// every shard marked stale since the last pick (recomputing its
+    /// leaf from live pool/work/phase state — exactly what a
+    /// [`ShardView`] snapshot would report), then read the tournament
+    /// root. A non-admitting root means no shard admits, the same
+    /// degraded path the scan balancers take. Debug builds re-derive the
+    /// pick from a full snapshot + linear scan and assert equality.
+    fn pick_indexed(&mut self) -> usize {
+        let jsq = self.fleet.balancer == BalancerKind::JoinShortestQueue;
+        let idx = self
+            .shard_index
+            .as_mut()
+            .expect("indexed pick requires an index");
+        while let Some(s) = idx.pop_dirty() {
+            let sh = &self.shards[s];
+            let admitting = sh.phase == LifecyclePhase::Warm;
+            // JSQ orders on outstanding = in_use + queued; counts are
+            // tiny relative to 2^53, so the f64 key orders identically.
+            let key = if jsq {
+                (sh.pool.in_use + sh.pool.live_queued()) as f64
+            } else {
+                sh.work
+            };
+            idx.update(s, admitting, key);
+        }
+        let root = idx.root();
+        let pick = if root.admitting {
+            root.shard
+        } else {
+            self.earliest_ready_shard()
+        };
+        #[cfg(debug_assertions)]
+        {
+            use crate::sim::balancer::argmin_admitting;
+            let any_admitting = self.snapshot_views();
+            assert_eq!(
+                any_admitting, root.admitting,
+                "shard index admitting flag diverged from the snapshot"
+            );
+            if any_admitting {
+                let linear = if jsq {
+                    argmin_admitting(&self.views, |a, b| a.outstanding() < b.outstanding())
+                } else {
+                    argmin_admitting(&self.views, |a, b| {
+                        a.work.total_cmp(&b.work) == Ordering::Less
+                    })
+                };
+                assert_eq!(
+                    pick,
+                    linear,
+                    "shard index diverged from the linear {} scan",
+                    self.fleet.balancer.label()
+                );
+            }
+        }
+        pick
     }
 
     /// The cold shard with the earliest warm-up time (ties to the lowest
@@ -1435,15 +1534,14 @@ impl<'a> FleetSim<'a> {
         // included — the pool already counted it). Frozen at admission:
         // later joins see the bigger batch, this stream is not repriced.
         let slowdown = self.batch_slowdown(s);
-        let (sample, device_pending) = {
-            let st = self.state_mut(i);
-            st.server_admit = Some(now);
-            st.decode_slowdown = slowdown;
-            (
-                st.pre.server_sample.expect("server users have a sample"),
-                st.needs_device && st.device_grant.is_none() && !dev_cancelled,
-            )
-        };
+        self.arena.server_admit[i] = Some(now);
+        self.arena.decode_slowdown[i] = slowdown;
+        let sample = self.arena.pre[i]
+            .server_sample
+            .expect("server users have a sample");
+        let device_pending = self.arena.needs_device[i]
+            && self.arena.device_grant[i].is_none()
+            && !dev_cancelled;
         let delay = (now - arrival).max(0.0);
         self.shards[s].delays.push(delay);
         self.shards[s].admitted += 1;
@@ -1459,20 +1557,16 @@ impl<'a> FleetSim<'a> {
     fn on_device_grant(&mut self, i: usize, now: f64) {
         let req = self.req(i);
         let srv_cancelled = self.server_cancelled[i];
-        let (dev_first_abs, server_pending) = {
-            let st = self.state_mut(i);
-            st.device_grant = Some(now);
-            let device_wait = match st.pre.decision {
-                crate::coordinator::dispatch::Decision::Both { device_wait } => device_wait,
-                _ => 0.0,
-            };
-            let dev_start_rel = device_wait.max((now - req.arrival).max(0.0));
-            let dev_first_abs = req.arrival + dev_start_rel + st.pre.dev_prefill_dur;
-            (
-                dev_first_abs,
-                st.needs_server && st.server_admit.is_none() && !srv_cancelled,
-            )
+        self.arena.device_grant[i] = Some(now);
+        let device_wait = match self.arena.pre[i].decision {
+            crate::coordinator::dispatch::Decision::Both { device_wait } => device_wait,
+            _ => 0.0,
         };
+        let dev_start_rel = device_wait.max((now - req.arrival).max(0.0));
+        let dev_first_abs = req.arrival + dev_start_rel + self.arena.pre[i].dev_prefill_dur;
+        let server_pending = self.arena.needs_server[i]
+            && self.arena.server_admit[i].is_none()
+            && !srv_cancelled;
         self.device_delays.push((now - req.arrival).max(0.0));
         if server_pending && dev_first_abs.is_finite() {
             self.push(dev_first_abs, EvKind::DeviceFirstProbe(i));
@@ -1559,6 +1653,12 @@ impl<'a> FleetSim<'a> {
             });
             self.push(ready, EvKind::ShardWarm(idx));
         }
+        // The index's leaf capacity is sized to the shard count: rebuild
+        // it all-dirty, so the next pick flushes every shard (including
+        // the new cold ones) from live state.
+        if self.shard_index.is_some() {
+            self.shard_index = Some(ShardIndex::new(self.shards.len()));
+        }
         self.record_timeline(now);
     }
 
@@ -1590,6 +1690,7 @@ impl<'a> FleetSim<'a> {
                 }
             }
             self.shards[victim].phase = LifecyclePhase::Draining;
+            self.touch_shard(victim);
             self.scale_events.push(ScaleEvent {
                 time: now,
                 shard: victim,
@@ -1609,6 +1710,7 @@ impl<'a> FleetSim<'a> {
         }
         self.shards[s].phase = LifecyclePhase::Warm;
         self.shards[s].pool.frozen = false;
+        self.touch_shard(s);
         self.cold_start_seconds += (now - self.shards[s].created_at).max(0.0);
         self.scale_events.push(ScaleEvent {
             time: now,
@@ -1656,6 +1758,7 @@ impl<'a> FleetSim<'a> {
         }
         sh.phase = LifecyclePhase::Retired;
         sh.retired_at = Some(now);
+        self.touch_shard(s);
         self.scale_events.push(ScaleEvent {
             time: now,
             shard: s,
@@ -1684,6 +1787,7 @@ impl<'a> FleetSim<'a> {
         // whatever cannot be re-routed — still apply.
         self.shards[s].phase = LifecyclePhase::Draining;
         self.shards[s].pool.frozen = false;
+        self.touch_shard(s);
         self.scale_events.push(ScaleEvent {
             time: now,
             shard: s,
@@ -1720,9 +1824,7 @@ impl<'a> FleetSim<'a> {
     /// soonest-ready cold shard; with no live alternative at all it
     /// stays on the draining source, which serves out its queue.
     fn requeue(&mut self, j: usize, from: usize, now: f64) {
-        let sample = self
-            .state(j)
-            .pre
+        let sample = self.arena.pre[j]
             .server_sample
             .expect("server users have a sample");
         let any_admitting = self.snapshot_views();
@@ -1750,24 +1852,25 @@ impl<'a> FleetSim<'a> {
         };
         self.shard_of[j] = Some(target);
         self.shards[from].work -= sample;
+        self.touch_shard(from);
         // A spike drawn from the dead shard's fault belongs to that
         // shard, not the stream: moving to a new home restores the
         // pre-fault draw and rolls the *target's* fault instead (all
         // from the fault stream, so healthy configs are untouched).
         let mut new_sample = sample;
         if target != from {
-            if let Some(base) = self.state(j).base_sample {
+            if let Some(base) = self.arena.base_sample[j] {
                 new_sample = base;
-                self.state_mut(j).base_sample = None;
+                self.arena.base_sample[j] = None;
             }
             if let Some(&Some(f)) = self.fleet.shard_faults.get(target) {
                 if self.frng.chance(f.spike_prob) {
                     let base = new_sample;
                     new_sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
-                    self.state_mut(j).base_sample = Some(base);
+                    self.arena.base_sample[j] = Some(base);
                 }
             }
-            self.state_mut(j).pre.server_sample = Some(new_sample);
+            self.arena.pre[j].server_sample = Some(new_sample);
             self.outage_requeues += 1;
         }
         self.shards[target].work += new_sample;
@@ -1776,6 +1879,7 @@ impl<'a> FleetSim<'a> {
             self.on_server_admit(j, now);
             self.try_resolve(j, now);
         }
+        self.touch_shard(target);
     }
 
     /// Predicted admission delay a §4.3 re-prefill pays on shard `t`,
@@ -1856,37 +1960,34 @@ impl<'a> FleetSim<'a> {
     fn try_resolve(&mut self, i: usize, now: f64) {
         let srv_cancelled = self.server_cancelled[i];
         let dev_cancelled = self.device_cancelled[i];
-        let ready = {
-            let st = self.state(i);
-            !st.resolved
-                && (!st.needs_server || st.server_admit.is_some() || srv_cancelled)
-                && (!st.needs_device || st.device_grant.is_some() || dev_cancelled)
-        };
+        let ready = !self.arena.resolved[i]
+            && (!self.arena.needs_server[i] || self.arena.server_admit[i].is_some() || srv_cancelled)
+            && (!self.arena.needs_device[i] || self.arena.device_grant[i].is_some() || dev_cancelled);
         if !ready {
             return;
         }
         let req = self.req(i);
         let shard = self.shard_of[i];
-        let (times, mut pre, mut rng, device_grant, server_was_admitted, decode_slowdown) = {
-            let st = self.state_mut(i);
-            st.resolved = true;
-            let times = ResourceTimes {
-                server_admit: if srv_cancelled { None } else { st.server_admit },
-                device_grant: if dev_cancelled {
-                    f64::INFINITY
-                } else {
-                    st.device_grant.unwrap_or(f64::INFINITY)
-                },
-            };
-            (
-                times,
-                st.pre,
-                st.rng.clone(),
-                st.device_grant,
-                st.server_admit.is_some() && !srv_cancelled,
-                st.decode_slowdown,
-            )
+        self.arena.resolved[i] = true;
+        let times = ResourceTimes {
+            server_admit: if srv_cancelled {
+                None
+            } else {
+                self.arena.server_admit[i]
+            },
+            device_grant: if dev_cancelled {
+                f64::INFINITY
+            } else {
+                self.arena.device_grant[i].unwrap_or(f64::INFINITY)
+            },
         };
+        // `pre` is a local working copy (the RTT fold below must not
+        // write back); the RNG stream stays in the arena and is resumed
+        // in place — the old code cloned it here on every request.
+        let mut pre = self.arena.pre[i];
+        let device_grant = self.arena.device_grant[i];
+        let server_was_admitted = self.arena.server_admit[i].is_some() && !srv_cancelled;
+        let decode_slowdown = self.arena.decode_slowdown[i];
         self.resolved_count += 1;
         // The raw (pre-RTT-fold) prefill sample: the queued-ahead
         // correction in `reprefill_queue_delay` subtracts it when the
@@ -1902,6 +2003,7 @@ impl<'a> FleetSim<'a> {
             let sample = pre.server_sample.expect("server users have a sample");
             if !server_was_admitted {
                 self.shards[s].work -= sample;
+                self.touch_shard(s);
             }
             pre.server_sample = Some(sample + self.shards[s].rtt);
         }
@@ -1930,9 +2032,18 @@ impl<'a> FleetSim<'a> {
             });
             let (ep, slow) = match pick {
                 Some(t) => {
-                    let mut ep = self.server_endpoints[t].clone();
-                    ep.extra_rtt +=
+                    // Borrowed view of the target endpoint: the predicted
+                    // queue delay combines with the shard's RTT offset in
+                    // the same operand order as the historical
+                    // `clone + extra_rtt += delay`, so the float result —
+                    // and every downstream byte — is identical, without
+                    // cloning a `ServerEndpoint` per migrated stream.
+                    let delay =
                         self.reprefill_queue_delay(t, shard, server_was_admitted, own_sample);
+                    let ep = MigrationServer::with_extra_rtt(
+                        &self.server_endpoints[t],
+                        self.server_endpoints[t].extra_rtt + delay,
+                    );
                     // The migrated tail decodes in the target's batch:
                     // price it at the batch it would join (+1 for the
                     // joining stream itself).
@@ -1946,8 +2057,8 @@ impl<'a> FleetSim<'a> {
                 }
                 None => {
                     let ep = match shard {
-                        Some(s) => self.server_endpoints[s].clone(),
-                        None => self.scenario.server.clone(),
+                        Some(s) => MigrationServer::of(&self.server_endpoints[s]),
+                        None => MigrationServer::of(&self.scenario.server),
                     };
                     (ep, 1.0)
                 }
@@ -1956,6 +2067,9 @@ impl<'a> FleetSim<'a> {
         } else {
             (None, None, 1.0)
         };
+        // `mig_ep` borrows the endpoint table; remember the mode bit it
+        // encodes before the borrow ends at the resolve call below.
+        let targeting_active = mig_ep.is_some();
         // Every shard shares the base profile, so the source endpoint
         // only distinguishes shards through its RTT. The owning shard's
         // endpoint is used even when that shard is draining or retired:
@@ -1977,12 +2091,12 @@ impl<'a> FleetSim<'a> {
             self.policy,
             server_ep,
             &self.scenario.device,
-            mig_ep.as_ref(),
+            mig_ep,
             &self.planner,
             &self.scenario.cfg,
             times,
             batch,
-            &mut rng,
+            &mut self.arena.rng[i],
         );
 
         // Completion horizon: last delivered token of this stream.
@@ -2031,12 +2145,13 @@ impl<'a> FleetSim<'a> {
                         let real_slot = self.shards[t].pool.acquire_overflow();
                         self.shards[t].work += info.t_m;
                         self.shards[t].migrated_in += 1;
+                        self.touch_shard(t);
                         self.migration_booking[i] = Some((t, real_slot, info.t_m, now));
                         self.migration_targeted += 1;
                         self.record_batch(t, now);
                         self.push(info.end_abs.max(now), EvKind::MigrationRelease(i));
                     }
-                    None if mig_ep.is_some() => self.migration_fallbacks += 1,
+                    None if targeting_active => self.migration_fallbacks += 1,
                     // Legacy base-endpoint targeting: no shard is
                     // involved, nothing to book.
                     None => {}
@@ -2090,22 +2205,29 @@ pub fn run_fleet(
     } else {
         fleet.server_slots.map(|s| s.max(1))
     };
+    // Setup-time clones only: the padded RTT table is *moved* into the
+    // normalized config (the run phase borrows it back), and the outage
+    // schedule is cloned exactly once here — the event loop reads both
+    // in place (this PR's allocation sweep removed the per-run-phase
+    // re-clones).
     let fleet = FleetConfig {
         server_slots: pool_cap,
         device_queueing: fleet.device_queueing,
         shards: shard_count,
         balancer: fleet.balancer,
-        shard_rtts: rtts.clone(),
+        shard_rtts: rtts,
         autoscale: fleet.autoscale.map(|a| a.normalized()),
         migration_targeting: fleet.migration_targeting,
         shard_faults: faults,
         outages: fleet.outages.clone(),
         batching,
+        event_queue: fleet.event_queue,
     };
-    let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &rtts);
+    let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &fleet.shard_rtts);
     // Initial shards are created warm at the first arrival (created_at
     // is stamped in `run`).
-    let shards: Vec<ShardState> = rtts
+    let shards: Vec<ShardState> = fleet
+        .shard_rtts
         .iter()
         .map(|&rtt| {
             ShardState::new(
@@ -2123,6 +2245,16 @@ pub fn run_fleet(
     // in `fleet` (for Debug/consumers) and as the loop's working copy.
     let autoscale = fleet.autoscale;
     let scaler = autoscale.as_ref().and_then(|a| a.kind.build());
+    // The deterministic scan balancers get an incrementally maintained
+    // argmin index (built even at K=1 so autoscaled growth picks it up;
+    // the K=1 fast path bypasses it until the fleet actually grows).
+    let shard_index = match fleet.balancer {
+        BalancerKind::JoinShortestQueue | BalancerKind::LeastWork => {
+            Some(ShardIndex::new(shard_count))
+        }
+        _ => None,
+    };
+    let queue = EventQueue::new(fleet.event_queue);
     let sim = FleetSim {
         scenario,
         trace,
@@ -2142,9 +2274,9 @@ pub fn run_fleet(
         scaler,
         fleet,
         server_endpoints,
-        heap: BinaryHeap::new(),
-        seq: 0,
-        states: (0..n).map(|_| None).collect(),
+        queue,
+        arena: StreamArena::new(n),
+        shard_index,
         server_cancelled: vec![false; n],
         device_cancelled: vec![false; n],
         shards,
@@ -3296,5 +3428,93 @@ mod tests {
         assert_eq!(out.records.len(), trace.len());
         assert!(out.load.scale_out_count() >= 1);
         assert_eq!(out.load.cold_start_seconds, 0.0);
+    }
+
+    /// Regression pin for the hot-path allocation sweep: the migration
+    /// path now *borrows* the target endpoint ([`MigrationServer`])
+    /// instead of cloning a `ServerEndpoint` per resolved stream, and
+    /// the per-request RNG resumes in place instead of being cloned out
+    /// of the state table. Both rewrites must be byte-invisible: a
+    /// migration-heavy run (shard-targeted re-prefills, heterogeneous
+    /// RTTs so `extra_rtt + delay` exercises real float folds, a shard
+    /// fault, and a mid-run outage forcing base-endpoint fallbacks) is
+    /// bit-reproducible and byte-identical across both event-queue
+    /// backends.
+    #[test]
+    fn migration_heavy_run_byte_stable_across_backends() {
+        let sc = device_constrained_scenario(53);
+        let trace = trace_at_gap(150, 1.0, 41);
+        let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+        let cfg = FleetConfig::sharded(3, 2, BalancerKind::LeastWork)
+            .with_shard_rtts(vec![0.0, 0.05, 0.12])
+            .with_migration_targeting(MigrationTargeting::ShardTargeted)
+            .with_shard_fault(
+                1,
+                ShardFault {
+                    spike_prob: 0.3,
+                    spike_scale: 4.0,
+                },
+            )
+            .with_outage(60.0, 2);
+        let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+        // The scenario actually exercises the rewritten paths.
+        assert!(
+            wheel.records.iter().filter(|r| r.migrated).count() > 0,
+            "scenario must exercise migration"
+        );
+        assert!(
+            wheel.load.migration_targeted > 0,
+            "scenario must book shard-targeted re-prefills"
+        );
+        // Bit-reproducible (the RNG resumes exactly where the old clone
+        // did), and byte-identical on the heap reference backend.
+        let again = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(wheel.records, again.records, "not reproducible");
+        let heap = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &cfg.clone().with_event_queue(EventQueueKind::Heap),
+        );
+        assert_eq!(wheel.records, heap.records, "wheel/heap records diverged");
+        assert_eq!(
+            format!("{:?}", wheel.load),
+            format!("{:?}", heap.load),
+            "wheel/heap load reports diverged"
+        );
+    }
+
+    /// The JSQ/least-work incremental index is a pure optimization: a
+    /// churny autoscaled run (scale-out rebuilds, drains, retirements)
+    /// under each indexed balancer is byte-identical across backends and
+    /// reproducible — and the debug-build parity assert inside
+    /// `pick_indexed` re-derives every pick from a full linear scan.
+    #[test]
+    fn indexed_balancers_byte_stable_under_autoscaling_churn() {
+        let sc = scenario(59);
+        let trace = burst_then_calm(120, 40, 43);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        for balancer in [BalancerKind::JoinShortestQueue, BalancerKind::LeastWork] {
+            let cfg = FleetConfig::sharded(2, 1, balancer)
+                .with_autoscale(eager_reactive(1, 5, 0.5))
+                .with_outage(25.0, 0);
+            let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+            assert_eq!(wheel.records.len(), trace.len());
+            let heap = run_fleet(
+                &sc,
+                &trace,
+                &policy,
+                &cfg.clone().with_event_queue(EventQueueKind::Heap),
+            );
+            assert_eq!(
+                wheel.records, heap.records,
+                "{balancer}: wheel/heap records diverged under churn"
+            );
+            assert_eq!(
+                format!("{:?}", wheel.load),
+                format!("{:?}", heap.load),
+                "{balancer}: wheel/heap load reports diverged under churn"
+            );
+        }
     }
 }

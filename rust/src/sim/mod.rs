@@ -23,8 +23,9 @@
 //!   B's load-time model) on scale-out and drain-then-retire semantics
 //!   on scale-in.
 //! * [`fleet`] is the discrete-event loop that produces the resource
-//!   grant times: a binary-heap event queue in which N concurrent
-//!   requests contend for a *sharded* server fleet
+//!   grant times: a pluggable [`event_queue::EventQueue`] (timing wheel
+//!   by default, binary heap as the byte-parity reference) in which N
+//!   concurrent requests contend for a *sharded* server fleet
 //!   (`FleetConfig::shards` replicas, each with
 //!   `FleetConfig::server_slots` admission slots, its own FIFO queue,
 //!   and an optional per-shard RTT offset) and for the single-flight
@@ -73,20 +74,23 @@
 //!   `shuffle_payloads` / `interleave` helpers for randomized replays.
 //!
 //! Every run is reproducible bit-for-bit from `SimConfig.seed`: the event
-//! heap breaks time ties deterministically, per-request RNG streams are
-//! forked in trace order independent of event interleaving, and
-//! randomized balancers draw from their own fleet-level stream. The
-//! paper's "mean over 10 runs" becomes a seed sweep.
+//! queue breaks time ties deterministically under every backend
+//! ([`event_queue::EventQueueKind`]), per-request RNG streams are forked
+//! in trace order independent of event interleaving, and randomized
+//! balancers draw from their own fleet-level stream. The paper's "mean
+//! over 10 runs" becomes a seed sweep.
 
 pub mod autoscaler;
 pub mod balancer;
 pub mod batching;
 pub mod delivery;
 pub mod engine;
+pub mod event_queue;
 pub mod fleet;
 
 pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
 pub use balancer::{Balancer, BalancerKind, ShardView};
 pub use batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 pub use engine::{Scenario, SimConfig};
+pub use event_queue::{EventQueue, EventQueueKind};
 pub use fleet::{FleetConfig, FleetOutcome, MigrationTargeting, ShardFault, ShardOutage};

@@ -21,6 +21,7 @@ use disco::sim::autoscaler::{
 use disco::sim::balancer::BalancerKind;
 use disco::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 use disco::sim::engine::{Scenario, SimConfig};
+use disco::sim::event_queue::EventQueueKind;
 use disco::sim::fleet::{FleetConfig, MigrationTargeting};
 use disco::trace::generator::{Arrival, WorkloadSpec};
 use disco::trace::Trace;
@@ -964,6 +965,72 @@ fn slot_legacy_batching_inert_under_every_balancer_and_autoscaler() {
             assert!(a.load.token_budget_utilization().is_none());
             let c = scenario.run_fleet(&trace, &policy, &default_cfg);
             assert_eq!(a.records, c.records, "{balancer}/{auto:?}: not reproducible");
+        }
+    }
+}
+
+/// Determinism contract of the event-queue refactor: the timing-wheel
+/// backend (the default) and the binary-heap reference realize the same
+/// `(time, seq)` total order, so `run_fleet` is **byte-identical**
+/// across backends — records and the full `LoadReport` — under every
+/// `BalancerKind` × autoscaler × batching mode, and each backend is
+/// individually bit-reproducible.
+#[test]
+fn wheel_and_heap_event_queues_byte_identical_across_parity_matrix() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 89,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(73);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let autoscale = |kind: AutoscalerKind| AutoscaleConfig {
+        kind,
+        eval_interval: 1.0,
+        min_shards: 1,
+        max_shards: 4,
+        cold_start: ColdStartSpec::Fixed(1.0),
+    };
+    let autoscalers = [
+        None,
+        Some(autoscale(AutoscalerKind::None)),
+        Some(autoscale(AutoscalerKind::Reactive(ReactiveConfig::default()))),
+        Some(autoscale(AutoscalerKind::TtftTarget(TtftTargetConfig::default()))),
+    ];
+    let batchings = [
+        BatchingMode::SlotLegacy,
+        BatchingMode::Continuous(ContinuousBatchConfig::default()),
+    ];
+    for balancer in BalancerKind::all() {
+        for auto in &autoscalers {
+            for batching in &batchings {
+                let mut base = FleetConfig::sharded(2, 1, balancer).with_batching(*batching);
+                if let Some(a) = auto {
+                    base = base.with_autoscale(*a);
+                }
+                let wheel = base.clone().with_event_queue(EventQueueKind::Wheel);
+                let heap = base.clone().with_event_queue(EventQueueKind::Heap);
+                let w = scenario.run_fleet(&trace, &policy, &wheel);
+                let h = scenario.run_fleet(&trace, &policy, &heap);
+                assert_eq!(
+                    w.records, h.records,
+                    "{balancer}/{auto:?}/{}: wheel and heap records diverged",
+                    batching.label()
+                );
+                assert_eq!(
+                    format!("{:?}", w.load),
+                    format!("{:?}", h.load),
+                    "{balancer}/{auto:?}/{}: wheel and heap load reports diverged",
+                    batching.label()
+                );
+                // The default spelling is the wheel.
+                let d = scenario.run_fleet(&trace, &policy, &base);
+                assert_eq!(d.records, w.records, "default backend must be the wheel");
+            }
         }
     }
 }
