@@ -11,7 +11,11 @@ use crate::profiles::{DeviceProfile, ServerProfile};
 use crate::sim::engine::{Scenario, SimConfig};
 use crate::trace::generator::WorkloadSpec;
 use crate::trace::Trace;
-use std::sync::atomic::{AtomicUsize, Ordering};
+
+// The scoped-thread runner lives in `util::par` (it now also powers
+// within-cell zone parallelism, `sim/zones.rs`); re-exported here so
+// sweep code keeps its historical import path.
+pub use crate::util::par::{par_map, worker_threads};
 
 /// The budget-ratio grid the sweeps use ("across the whole cost budget
 /// range", Table 2).
@@ -54,65 +58,6 @@ impl CellSeed {
     pub fn trace(self, tag: u64) -> u64 {
         self.0 ^ tag
     }
-}
-
-/// Worker-thread count: `DISCO_THREADS` override, else available cores.
-pub fn worker_threads() -> usize {
-    std::env::var("DISCO_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-        })
-}
-
-/// Map `f` over `items` on scoped worker threads, preserving input order.
-///
-/// Work is distributed by an atomic cursor (cheap dynamic balancing for
-/// uneven cells); outputs are returned in input order regardless of which
-/// thread computed them, so parallel sweeps stay deterministic as long as
-/// `f(i, item)` itself is (all simulator cells are: they seed their own
-/// RNGs). Panics in `f` propagate.
-pub fn par_map<I, O, F>(items: &[I], f: F) -> Vec<O>
-where
-    I: Sync,
-    O: Send,
-    F: Fn(usize, &I) -> O + Sync,
-{
-    let n = items.len();
-    let threads = worker_threads().min(n);
-    if threads <= 1 {
-        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
-    }
-    let cursor = AtomicUsize::new(0);
-    let f = &f;
-    let cursor = &cursor;
-    let mut indexed: Vec<(usize, O)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        out.push((i, f(i, &items[i])));
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("sweep worker panicked"))
-            .collect()
-    });
-    indexed.sort_by_key(|&(i, _)| i);
-    indexed.into_iter().map(|(_, o)| o).collect()
 }
 
 /// Build a policy (planning DiSCo variants from profiled distributions).

@@ -17,6 +17,7 @@ pub mod load_sweep;
 pub mod migration_exp;
 pub mod quality_exp;
 pub mod shard_sweep;
+pub mod zone_sweep;
 
 use std::path::PathBuf;
 
@@ -170,6 +171,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "batching-sweep",
             title: "Fleet: continuous batching vs slot admission across token budgets",
             run: batching_sweep::batching_sweep,
+        },
+        ExperimentDef {
+            id: "zone-sweep",
+            title: "Fleet: zone-partitioned cells across cores (Z × shards × rate)",
+            run: zone_sweep::zone_sweep,
         },
         ExperimentDef {
             id: "abl-alpha",

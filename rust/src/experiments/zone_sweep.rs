@@ -1,0 +1,296 @@
+//! Zone sweep: scaling one cell across cores with the zone-partitioned
+//! fleet (`sim/zones.rs`), over the (zone count × shards-per-zone ×
+//! arrival rate) grid.
+//!
+//! Each cell fixes a zoned topology (Z zones, K shards per zone) and
+//! replays a Poisson workload at the target *aggregate* rate — the
+//! round-robin partition hands each zone ~rate/Z of it. Cells at the
+//! same (K, rate, seed) replay the identical trace whatever Z is, so
+//! the sweep isolates what partitioning itself does to tails and
+//! utilization (zones cannot balance load across each other — the
+//! price of embarrassingly parallel zones). Unlike the other sweeps,
+//! the parallelism here is *within* the cell: zones fan out across
+//! cores via [`crate::util::par::par_map`], and the merged numbers are
+//! byte-identical under any `DISCO_THREADS`.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, CellSeed};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::FleetConfig;
+use crate::sim::zones::{run_zoned_fleet, ZonedFleetConfig};
+use crate::trace::generator::WorkloadSpec;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// One cell of the zone-sweep grid.
+#[derive(Clone, Debug)]
+pub struct ZoneCell {
+    pub zones: usize,
+    pub shards_per_zone: usize,
+    pub rate_rps: f64,
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct ZoneCellResult {
+    pub cell: ZoneCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub p99_queue_delay: f64,
+    pub server_utilization: f64,
+    /// Max/mean per-zone server busy-seconds (1.0 = the round-robin
+    /// partition loaded every zone equally).
+    pub zone_imbalance: f64,
+}
+
+/// Sweep parameters, shared by the `zone-sweep` experiment and the
+/// `zone_sweep` CLI subcommand.
+#[derive(Clone, Debug)]
+pub struct ZoneSweepParams {
+    pub zone_counts: Vec<usize>,
+    pub shards_per_zone: Vec<usize>,
+    /// Aggregate arrival rates (req/s across all zones).
+    pub rates: Vec<f64>,
+    pub slots_per_shard: usize,
+    pub balancer: BalancerKind,
+    pub policy: PolicyKind,
+    pub b: f64,
+    pub n_requests: usize,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for ZoneSweepParams {
+    fn default() -> Self {
+        ZoneSweepParams {
+            zone_counts: vec![1, 2, 4],
+            shards_per_zone: vec![2, 4],
+            rates: vec![1.0, 4.0],
+            slots_per_shard: 1,
+            balancer: BalancerKind::JoinShortestQueue,
+            policy: PolicyKind::ServerOnly,
+            b: 1.0,
+            n_requests: 400,
+            n_seeds: 2,
+            service: ServerProfile::gpt4o_mini(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+/// Run the (Z × K × rate) grid; cells run *serially* here because each
+/// cell already parallelizes internally across its zones (nesting
+/// scoped pools would oversubscribe the machine without changing any
+/// result — determinism is thread-count invariant either way).
+pub fn run_grid(params: &ZoneSweepParams) -> Vec<ZoneCellResult> {
+    let cells: Vec<ZoneCell> = params
+        .zone_counts
+        .iter()
+        .flat_map(|&zones| {
+            params.shards_per_zone.iter().flat_map(move |&shards_per_zone| {
+                params.rates.iter().map(move |&rate_rps| ZoneCell {
+                    zones,
+                    shards_per_zone,
+                    rate_rps,
+                })
+            })
+        })
+        .collect();
+    cells.iter().map(|cell| run_cell(params, cell)).collect()
+}
+
+fn run_cell(params: &ZoneSweepParams, cell: &ZoneCell) -> ZoneCellResult {
+    let fleet = FleetConfig::sharded(cell.shards_per_zone, params.slots_per_shard, params.balancer);
+    let zoned = ZonedFleetConfig::uniform(cell.zones, fleet);
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut qd_p99 = Vec::new();
+    let mut util = Vec::new();
+    let mut imb = Vec::new();
+    for seed in 0..params.n_seeds {
+        // Content-derived seed over (rate, K) — deliberately NOT over
+        // the zone count, so every Z at a (K, rate, seed) cell replays
+        // the identical trace (paired comparison of partitioning).
+        let cell_seed = CellSeed::new(seed)
+            .mix_f64(cell.rate_rps)
+            .mix_u64(cell.shards_per_zone as u64);
+        let scenario = Scenario::new(
+            params.service.clone(),
+            params.device.clone(),
+            Constraint::Server,
+            SimConfig {
+                seed: cell_seed.scenario(),
+                ..Default::default()
+            },
+        );
+        let trace = WorkloadSpec::alpaca(params.n_requests)
+            .at_rate(cell.rate_rps)
+            .generate(cell_seed.trace(0x20ED));
+        let policy = make_policy(
+            params.policy,
+            params.b,
+            false,
+            &scenario,
+            &trace,
+            cell_seed.scenario(),
+        );
+        let out = run_zoned_fleet(&scenario, &trace, &policy, &zoned);
+        let qoe = crate::metrics::Report::from_records(&out.merged.records, policy.constraint());
+        mean_ttft.push(qoe.ttft.mean);
+        p99_ttft.push(qoe.ttft.p99);
+        qd_p99.push(out.merged.load.server_queue_delay.p99);
+        util.push(out.merged.load.server_utilization().unwrap_or(0.0));
+        let busy: Vec<f64> = out.zone_loads.iter().map(|l| l.server_busy_seconds).collect();
+        let mean_busy = crate::stats::describe::mean(&busy);
+        imb.push(if mean_busy > 0.0 {
+            busy.iter().cloned().fold(f64::NEG_INFINITY, f64::max) / mean_busy
+        } else {
+            0.0
+        });
+    }
+    let avg = crate::stats::describe::mean;
+    ZoneCellResult {
+        cell: cell.clone(),
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        p99_queue_delay: avg(&qd_p99),
+        server_utilization: avg(&util),
+        zone_imbalance: avg(&imb),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[ZoneCellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.cell.zones),
+                format!("{}", r.cell.shards_per_zone),
+                format!("{:.2}", r.cell.rate_rps),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.3}", r.p99_queue_delay),
+                format!("{:.2}", r.server_utilization),
+                format!("{:.2}", r.zone_imbalance),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "zones",
+            "shards/zone",
+            "rate (req/s)",
+            "mean TTFT",
+            "p99 TTFT",
+            "p99 queue",
+            "util",
+            "zone imb",
+        ],
+        &rows,
+    )
+}
+
+/// The `zone-sweep` experiment entry: default grid, CSV + table output.
+pub fn zone_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = ZoneSweepParams {
+        n_requests: ctx.n_requests.clamp(50, 400),
+        n_seeds: ctx.n_seeds.clamp(1, 2),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "zones",
+        "shards_per_zone",
+        "rate_rps",
+        "mean_ttft",
+        "p99_ttft",
+        "p99_queue_delay",
+        "server_utilization",
+        "zone_imbalance",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            format!("{}", r.cell.zones),
+            format!("{}", r.cell.shards_per_zone),
+            format!("{:.3}", r.cell.rate_rps),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.p99_queue_delay),
+            format!("{:.4}", r.server_utilization),
+            format!("{:.4}", r.zone_imbalance),
+        ]);
+    }
+    csv.write(&ctx.csv_path("zone-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> ZoneSweepParams {
+        ZoneSweepParams {
+            zone_counts: vec![1, 2],
+            shards_per_zone: vec![2],
+            rates: vec![0.5, 2.0],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_all_axes_in_order() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.cell.zones, params.zone_counts[i / 2]);
+            assert_eq!(r.cell.shards_per_zone, 2);
+            assert_eq!(r.cell.rate_rps, params.rates[i % 2]);
+            assert!(r.mean_ttft > 0.0);
+            assert!(r.server_utilization <= 1.0 + 1e-9);
+            assert!(r.zone_imbalance >= if r.cell.zones > 1 { 1.0 } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn same_cell_reproduces_regardless_of_grid_shape() {
+        let solo = run_grid(&ZoneSweepParams {
+            zone_counts: vec![2],
+            shards_per_zone: vec![2],
+            rates: vec![2.0],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        });
+        let grid = run_grid(&tiny_params());
+        let in_grid = grid
+            .iter()
+            .find(|r| r.cell.zones == 2 && r.cell.rate_rps == 2.0)
+            .unwrap();
+        assert_eq!(solo[0].mean_ttft.to_bits(), in_grid.mean_ttft.to_bits());
+        assert_eq!(solo[0].p99_ttft.to_bits(), in_grid.p99_ttft.to_bits());
+    }
+
+    #[test]
+    fn zone_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_zone_sweep"),
+            n_seeds: 1,
+            n_requests: 50,
+        };
+        let out = zone_sweep(&ctx).unwrap();
+        assert!(out.contains("zones"));
+        let csv = std::fs::read_to_string(ctx.csv_path("zone-sweep")).unwrap();
+        // Header + 3 zone counts × 2 shard counts × 2 rates.
+        assert_eq!(csv.lines().count(), 1 + 12);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

@@ -36,6 +36,7 @@ fn main() {
         "autoscale_sweep" | "autoscale-sweep" => cmd_autoscale_sweep(&args),
         "failover_sweep" | "failover-sweep" => cmd_failover_sweep(&args),
         "batching_sweep" | "batching-sweep" => cmd_batching_sweep(&args),
+        "zone_sweep" | "zone-sweep" => cmd_zone_sweep(&args),
         "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
@@ -88,8 +89,14 @@ fn print_help() {
          \x20             [--balancer B]\n\
          \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
          \x20             [--service S] [--device D]\n\
+         \x20 zone_sweep  (zones × shards/zone × rate) grid on the zone-partitioned\n\
+         \x20             fleet: one cell across all cores, merged bit-reproducibly\n\
+         \x20             (DISCO_THREADS caps workers without changing results)\n\
+         \x20             [--zones Z1,Z2,..] [--shards K1,K2,..] [--rates R1,..]\n\
+         \x20             [--slots N] [--balancer B] [--policy P] [--b B]\n\
+         \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
          \x20 bench       fixed-seed fleet benchmarks (slot-legacy + continuous\n\
-         \x20             batching) → BENCH_fleet.json [--requests N] [--reps N]\n\
+         \x20             batching + zoned) → BENCH_fleet.json [--requests N] [--reps N]\n\
          \x20             [--out FILE] [--baseline FILE] [--max-regression FRAC]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
@@ -548,22 +555,90 @@ fn cmd_batching_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_zone_sweep(args: &Args) -> anyhow::Result<()> {
+    use disco::experiments::zone_sweep::{render_grid, run_grid, ZoneSweepParams};
+
+    let defaults = ZoneSweepParams::default();
+    let zone_counts = parse_list(args, "zones", defaults.zone_counts, |z| {
+        z.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--zones expects integers, got '{z}'"))
+    })?;
+    let shards_per_zone = parse_list(args, "shards", defaults.shards_per_zone, |k| {
+        k.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--shards expects integers, got '{k}'"))
+    })?;
+    let rates = parse_rates(args, defaults.rates)?;
+    anyhow::ensure!(
+        zone_counts.iter().all(|&z| z > 0),
+        "zone counts must be at least 1"
+    );
+    anyhow::ensure!(
+        shards_per_zone.iter().all(|&k| k > 0),
+        "shard counts must be at least 1"
+    );
+
+    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
+    let params = ZoneSweepParams {
+        zone_counts,
+        shards_per_zone,
+        rates,
+        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
+        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
+        policy: parse_policy(args.get_or("policy", "server-only"))?,
+        b: args.get_f64("b", defaults.b)?,
+        n_requests: args.get_usize("requests", defaults.n_requests)?,
+        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
+        service,
+        device,
+    };
+    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
+    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
+    let n_cells = params.zone_counts.len() * params.shards_per_zone.len() * params.rates.len();
+    println!(
+        "zone sweep: {} zone counts × {} shard counts × {} rates = {n_cells} cells, \
+         {} slots/shard ({} balancer), {} requests × {} seeds per cell \
+         ({} worker threads within each cell)",
+        params.zone_counts.len(),
+        params.shards_per_zone.len(),
+        params.rates.len(),
+        params.slots_per_shard,
+        params.balancer.label(),
+        params.n_requests,
+        params.n_seeds,
+        disco::util::par::worker_threads()
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_grid(&params);
+    println!("{}", render_grid(&results));
+    println!(
+        "{} cells in {:.2}s (zones parallel within each cell)",
+        n_cells,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 /// Fixed-seed fleet benchmarks: runs the slot-legacy sharded workload
 /// (timing-wheel default AND binary-heap reference backends), a
-/// continuous-batching workload, and a wide many-shard session workload
-/// `--reps` times each; reports the best wall time as events/sec (and
-/// sessions/sec) plus TTFT percentiles, writes the JSON artifact CI
-/// uploads, and — with `--baseline` — fails when a cell's gated metric
-/// regresses more than `--max-regression` below the committed baseline
-/// (`events_per_sec` for the slot loop, `heap_events_per_sec` for the
-/// reference backend, `batching_events_per_sec` for the continuous hot
-/// path, `sessions_per_sec` for the wide fleet; keys missing from the
-/// baseline skip their gate — except the original `events_per_sec`).
+/// continuous-batching workload, a wide many-shard session workload,
+/// and a zone-partitioned wide workload `--reps` times each; reports
+/// the best wall time as events/sec (and sessions/sec) plus TTFT
+/// percentiles, writes the JSON artifact CI uploads, and — with
+/// `--baseline` — fails when a cell's gated metric regresses more than
+/// `--max-regression` below the committed baseline (`events_per_sec`
+/// for the slot loop, `heap_events_per_sec` for the reference backend,
+/// `batching_events_per_sec` for the continuous hot path,
+/// `sessions_per_sec` for the wide fleet, `zoned_sessions_per_sec` for
+/// the zoned cell; keys missing from the baseline skip their gate —
+/// except the original `events_per_sec`). Each cell declares which
+/// metric its gate reads ([`GateMetric`]), so new cells need no
+/// per-key special case in the gate loop.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use disco::coordinator::policy::Policy;
     use disco::sim::batching::{BatchingMode, ContinuousBatchConfig};
     use disco::sim::event_queue::EventQueueKind;
-    use disco::sim::fleet::FleetConfig;
+    use disco::sim::fleet::{FleetConfig, FleetOutcome};
+    use disco::sim::zones::ZonedFleetConfig;
     use disco::stats::describe::Summary;
     use disco::util::json::Json;
 
@@ -584,9 +659,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let trace = WorkloadSpec::alpaca(n).at_rate(2.0).generate(seed ^ 0xA1FA);
     let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
 
+    /// Which of a cell's metrics its baseline gate (and report line)
+    /// reads — declared per cell instead of special-casing baseline
+    /// keys in the gate loop.
+    #[derive(Clone, Copy)]
+    enum GateMetric {
+        EventsPerSec,
+        SessionsPerSec,
+    }
     struct Cell {
         name: &'static str,
         baseline_key: &'static str,
+        gate: GateMetric,
         events: u64,
         wall: f64,
         eps: f64,
@@ -596,15 +680,24 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         p50: f64,
         p99: f64,
     }
-    let mut run_cell = |name: &'static str,
-                        baseline_key: &'static str,
-                        fleet: &FleetConfig|
+    impl Cell {
+        fn gated(&self) -> (f64, &'static str) {
+            match self.gate {
+                GateMetric::EventsPerSec => (self.eps, "events/s"),
+                GateMetric::SessionsPerSec => (self.sps, "sessions/s"),
+            }
+        }
+    }
+    let run_cell = |name: &'static str,
+                    baseline_key: &'static str,
+                    gate: GateMetric,
+                    run: &dyn Fn() -> FleetOutcome|
      -> Cell {
         let mut best = f64::INFINITY;
         let mut outcome = None;
         for _ in 0..reps {
             let t0 = std::time::Instant::now();
-            let out = scenario.run_fleet(&trace, &policy, fleet);
+            let out = run();
             best = best.min(t0.elapsed().as_secs_f64());
             outcome = Some(out);
         }
@@ -616,6 +709,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         Cell {
             name,
             baseline_key,
+            gate,
             events,
             wall: best,
             eps: events as f64 / wall,
@@ -637,11 +731,42 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // indexed JSQ balancer — the topology where the old O(K)-per-arrival
     // rescan hurt most; gated on sessions/sec rather than events/sec.
     let wide_fleet = FleetConfig::sharded(32, 2, BalancerKind::JoinShortestQueue);
+    // The zoned cell: the same wide topology in each of 4 independent
+    // zones (Z × K = 4 × 32), fanned across cores and merged — the
+    // aggregate sessions/sec one machine sustains when a cell is
+    // allowed to use every core.
+    let zoned_wide = ZonedFleetConfig::uniform(4, wide_fleet.clone());
     let cells = [
-        run_cell("slot-legacy", "events_per_sec", &slot_fleet),
-        run_cell("slot-legacy-heap", "heap_events_per_sec", &heap_fleet),
-        run_cell("continuous", "batching_events_per_sec", &cont_fleet),
-        run_cell("wide-sessions", "sessions_per_sec", &wide_fleet),
+        run_cell(
+            "slot-legacy",
+            "events_per_sec",
+            GateMetric::EventsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &slot_fleet),
+        ),
+        run_cell(
+            "slot-legacy-heap",
+            "heap_events_per_sec",
+            GateMetric::EventsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &heap_fleet),
+        ),
+        run_cell(
+            "continuous",
+            "batching_events_per_sec",
+            GateMetric::EventsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &cont_fleet),
+        ),
+        run_cell(
+            "wide-sessions",
+            "sessions_per_sec",
+            GateMetric::SessionsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &wide_fleet),
+        ),
+        run_cell(
+            "zoned-wide",
+            "zoned_sessions_per_sec",
+            GateMetric::SessionsPerSec,
+            &|| scenario.run_zoned_fleet(&trace, &policy, &zoned_wide).merged,
+        ),
     ];
 
     let json = Json::obj(vec![
@@ -659,6 +784,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("batching_events_per_sec", Json::num(cells[2].eps)),
         // The wide-fleet sessions-simulated-per-second headline cell.
         ("sessions_per_sec", Json::num(cells[3].sps)),
+        // The zone-partitioned wide cell (Z × K = 4 × 32): aggregate
+        // sessions/sec when one bench cell fans across every core.
+        ("zoned_sessions_per_sec", Json::num(cells[4].sps)),
         // Wheel speedup over the heap reference on the identical
         // workload (>1 means the new default backend is faster).
         (
@@ -701,13 +829,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let baseline = Json::parse(&text)?;
         let max_regression = args.get_f64("max-regression", 0.25)?;
         for c in &cells {
-            // The sessions cell gates on sessions/sec; every other cell
-            // gates on raw event rate.
-            let (metric, unit) = if c.baseline_key == "sessions_per_sec" {
-                (c.sps, "sessions/s")
-            } else {
-                (c.eps, "events/s")
-            };
+            // Each cell declares its gated metric; no per-key special
+            // cases here.
+            let (metric, unit) = c.gated();
             let base = match baseline.get(c.baseline_key).and_then(|v| v.as_f64()) {
                 Some(v) => v,
                 None if c.baseline_key != "events_per_sec" => {

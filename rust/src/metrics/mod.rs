@@ -448,6 +448,152 @@ impl LoadReport {
             .filter(|e| e.shard == shard && e.kind == ScaleEventKind::Retire)
             .count()
     }
+
+    /// Fold per-zone load reports into one fleet-wide report
+    /// (`sim/zones.rs`). `parts` pairs each zone's report with that
+    /// zone's t0 offset — the zone's first arrival minus the merged
+    /// run's first arrival — because every time inside a `LoadReport`
+    /// (scale events, timelines, the horizon) is relative to its own
+    /// run's first arrival.
+    ///
+    /// The decomposition contract (pinned by unit tests and the
+    /// migration-storm property):
+    ///
+    /// * additive scalars — busy-seconds (server and device),
+    ///   cold-start seconds, shard-seconds, `events_processed`,
+    ///   migration/outage/underflow counters — are exact sums of the
+    ///   per-zone values;
+    /// * `shards` is the per-zone breakdowns concatenated in zone
+    ///   order, with `scale_events`/`batch_timeline` shard indices
+    ///   remapped by the same cumulative offsets and re-stamped to
+    ///   merged time, then stably time-sorted;
+    /// * `shard_timeline` is the step-function *sum* of the zone
+    ///   timelines (a zone contributes zero before its first sample);
+    /// * the horizon is `max(offset + zone horizon)`;
+    /// * `server_slots` keeps the common per-shard cap when every zone
+    ///   agrees, else `None` (heterogeneous zones have no single cap);
+    /// * queue-delay summaries pool via [`Summary::merge`].
+    ///
+    /// Merging a single zone at offset 0 is the identity (bit-for-bit
+    /// clone), which is what makes a Z=1 zoned run byte-identical to
+    /// the plain fleet.
+    pub fn merge_zones(parts: &[(LoadReport, f64)]) -> LoadReport {
+        if let [(only, off)] = parts {
+            if *off == 0.0 {
+                return only.clone();
+            }
+        }
+        assert!(!parts.is_empty(), "merge_zones needs at least one zone");
+
+        let sum_f = |f: fn(&LoadReport) -> f64| parts.iter().map(|(r, _)| f(r)).sum::<f64>();
+        let sum_u = |f: fn(&LoadReport) -> usize| parts.iter().map(|(r, _)| f(r)).sum::<usize>();
+
+        // Per-zone shard-index bases: zone z's shard s becomes
+        // base[z] + s in the merged breakdown.
+        let mut shard_base = Vec::with_capacity(parts.len());
+        let mut next = 0usize;
+        for (r, _) in parts {
+            shard_base.push(next);
+            next += r.shards.len();
+        }
+
+        let mut shards = Vec::with_capacity(next);
+        let mut scale_events = Vec::new();
+        let mut batch_timeline = Vec::new();
+        for (z, (r, off)) in parts.iter().enumerate() {
+            shards.extend(r.shards.iter().cloned());
+            scale_events.extend(r.scale_events.iter().map(|e| ScaleEvent {
+                time: e.time + off,
+                shard: shard_base[z] + e.shard,
+                kind: e.kind,
+            }));
+            batch_timeline.extend(r.batch_timeline.iter().map(|b| BatchSample {
+                time: b.time + off,
+                shard: shard_base[z] + b.shard,
+                batch: b.batch,
+            }));
+        }
+        // Stable by-time sort: zones are appended in zone order, so
+        // same-instant events across zones keep the (time, zone, seq)
+        // key the record merge uses.
+        scale_events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        batch_timeline.sort_by(|a, b| a.time.total_cmp(&b.time));
+
+        // Step-function sum of the zone shard-count timelines: one
+        // merged sample per distinct transition instant, each zone
+        // contributing its latest sample at or before that instant
+        // (zero before its first).
+        let mut times: Vec<f64> = parts
+            .iter()
+            .flat_map(|(r, off)| r.shard_timeline.iter().map(move |s| s.time + off))
+            .collect();
+        times.sort_by(f64::total_cmp);
+        times.dedup_by(|a, b| a.total_cmp(b) == std::cmp::Ordering::Equal);
+        let shard_timeline: Vec<ShardCountSample> = times
+            .iter()
+            .map(|&t| {
+                let (mut warm, mut provisioned) = (0usize, 0usize);
+                for (r, off) in parts {
+                    if let Some(s) = r
+                        .shard_timeline
+                        .iter()
+                        .take_while(|s| s.time + off <= t)
+                        .last()
+                    {
+                        warm += s.warm;
+                        provisioned += s.provisioned;
+                    }
+                }
+                ShardCountSample {
+                    time: t,
+                    warm,
+                    provisioned,
+                }
+            })
+            .collect();
+
+        let server_slots = {
+            let first = parts[0].0.server_slots;
+            if parts.iter().all(|(r, _)| r.server_slots == first) {
+                first
+            } else {
+                None
+            }
+        };
+
+        LoadReport {
+            server_queue_delay: Summary::merge(
+                &parts
+                    .iter()
+                    .map(|(r, _)| r.server_queue_delay.clone())
+                    .collect::<Vec<_>>(),
+            ),
+            device_queue_delay: Summary::merge(
+                &parts
+                    .iter()
+                    .map(|(r, _)| r.device_queue_delay.clone())
+                    .collect::<Vec<_>>(),
+            ),
+            server_busy_seconds: sum_f(|r| r.server_busy_seconds),
+            device_busy_seconds: sum_f(|r| r.device_busy_seconds),
+            horizon: parts
+                .iter()
+                .map(|(r, off)| off + r.horizon)
+                .fold(0.0, f64::max),
+            server_slots,
+            shards,
+            shard_timeline,
+            scale_events,
+            cold_start_seconds: sum_f(|r| r.cold_start_seconds),
+            shard_seconds: sum_f(|r| r.shard_seconds),
+            events_processed: parts.iter().map(|(r, _)| r.events_processed).sum(),
+            migration_targeted: sum_u(|r| r.migration_targeted),
+            migration_fallbacks: sum_u(|r| r.migration_fallbacks),
+            outage_requeues: sum_u(|r| r.outage_requeues),
+            release_underflows: sum_u(|r| r.release_underflows),
+            batch_timeline,
+        }
+    }
 }
 
 /// QoE report plus the load metrics of the fleet run that produced it.
@@ -694,6 +840,121 @@ mod tests {
         b.prompt_token_capacity = 1000;
         let lr = load(10.0, 0.0, vec![a, b]);
         assert!((lr.token_budget_utilization().unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    /// Satellite decomposition pin: merged additive scalars equal the
+    /// per-zone sums, shard breakdowns concatenate with event indices
+    /// remapped, and the shard-count timeline is the step-function sum.
+    #[test]
+    fn merge_zones_decomposes_as_per_zone_sums() {
+        let mut a = load(10.0, 4.0, vec![shard(4.0, 3, Some(2))]);
+        a.device_busy_seconds = 1.5;
+        a.cold_start_seconds = 0.5;
+        a.events_processed = 100;
+        a.migration_targeted = 2;
+        a.migration_fallbacks = 1;
+        a.outage_requeues = 3;
+        a.release_underflows = 1;
+        a.shard_timeline = vec![ShardCountSample {
+            time: 0.0,
+            warm: 1,
+            provisioned: 1,
+        }];
+        a.scale_events = vec![ScaleEvent {
+            time: 2.0,
+            shard: 0,
+            kind: ScaleEventKind::Outage,
+        }];
+        let mut b = load(8.0, 6.0, vec![shard(2.0, 2, Some(2)), shard(4.0, 5, Some(2))]);
+        b.device_busy_seconds = 0.5;
+        b.events_processed = 50;
+        b.shard_timeline = vec![
+            ShardCountSample {
+                time: 0.0,
+                warm: 2,
+                provisioned: 2,
+            },
+            ShardCountSample {
+                time: 4.0,
+                warm: 3,
+                provisioned: 3,
+            },
+        ];
+        b.scale_events = vec![ScaleEvent {
+            time: 4.0,
+            shard: 1,
+            kind: ScaleEventKind::ScaleOut,
+        }];
+        b.batch_timeline = vec![BatchSample {
+            time: 1.0,
+            shard: 0,
+            batch: 2,
+        }];
+
+        // Zone b starts 3 s after zone a.
+        let m = LoadReport::merge_zones(&[(a.clone(), 0.0), (b.clone(), 3.0)]);
+        assert_eq!(m.server_busy_seconds, a.server_busy_seconds + b.server_busy_seconds);
+        assert_eq!(m.device_busy_seconds, a.device_busy_seconds + b.device_busy_seconds);
+        assert_eq!(m.cold_start_seconds, 0.5);
+        assert_eq!(m.shard_seconds, a.shard_seconds + b.shard_seconds);
+        assert_eq!(m.events_processed, 150);
+        assert_eq!(m.migration_targeted, 2);
+        assert_eq!(m.migration_fallbacks, 1);
+        assert_eq!(m.outage_requeues, 3);
+        assert_eq!(m.release_underflows, 1);
+        // Horizon covers the latest zone end: max(0+10, 3+8) = 11.
+        assert_eq!(m.horizon, 11.0);
+        // Breakdown concatenates in zone order; per-shard fields intact.
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.shards[0].admitted, 3);
+        assert_eq!(m.shards[1].admitted, 2);
+        assert_eq!(m.shards[2].admitted, 5);
+        // Common slot cap survives; heterogeneity degrades to None.
+        assert_eq!(m.server_slots, Some(2));
+        let mut c = b.clone();
+        c.server_slots = Some(4);
+        assert_eq!(
+            LoadReport::merge_zones(&[(a.clone(), 0.0), (c, 3.0)]).server_slots,
+            None
+        );
+        // Events re-stamped to merged time with remapped shard indices,
+        // time-sorted: a's outage at 2.0/shard0, b's scale-out at
+        // 3+4=7.0 on merged shard 1+1=2; b's batch sample at 4.0.
+        assert_eq!(m.scale_events.len(), 2);
+        assert_eq!((m.scale_events[0].time, m.scale_events[0].shard), (2.0, 0));
+        assert_eq!((m.scale_events[1].time, m.scale_events[1].shard), (7.0, 2));
+        assert_eq!(m.scale_events[1].kind, ScaleEventKind::ScaleOut);
+        assert_eq!(m.batch_timeline.len(), 1);
+        assert_eq!((m.batch_timeline[0].time, m.batch_timeline[0].shard), (4.0, 1));
+        // Timeline is the step-function sum: at t=0 only zone a exists
+        // (1 warm); at t=3 zone b's 2 warm join (3); at 3+4=7 zone b
+        // steps to 3 warm (4 total).
+        let tl: Vec<(f64, usize, usize)> = m
+            .shard_timeline
+            .iter()
+            .map(|s| (s.time, s.warm, s.provisioned))
+            .collect();
+        assert_eq!(tl, vec![(0.0, 1, 1), (3.0, 3, 3), (7.0, 4, 4)]);
+    }
+
+    /// Satellite identity pin: merging one zone at offset 0 is a
+    /// bit-for-bit clone — the debug strings match exactly.
+    #[test]
+    fn merge_zones_single_report_is_identity() {
+        let mut a = load(10.0, 4.0, vec![shard(4.0, 3, Some(2)), shard(1.0, 1, Some(2))]);
+        a.events_processed = 42;
+        a.shard_timeline = vec![ShardCountSample {
+            time: 0.0,
+            warm: 2,
+            provisioned: 2,
+        }];
+        a.scale_events = vec![ScaleEvent {
+            time: 1.0,
+            shard: 1,
+            kind: ScaleEventKind::DrainStart,
+        }];
+        let m = LoadReport::merge_zones(&[(a.clone(), 0.0)]);
+        assert_eq!(format!("{a:?}"), format!("{m:?}"));
     }
 
     #[test]

@@ -194,6 +194,13 @@ mod tests {
     /// **byte-identical** to the default timing wheel — the event-queue
     /// determinism contract checked under the nastiest fleet dynamics
     /// the suite generates.
+    ///
+    /// Every storm also replays zone-partitioned (Z ∈ 1..=3 copies of
+    /// the same failing fleet, `sim/zones.rs`): the merged stream must
+    /// keep every invariant above, the merged load report must
+    /// decompose exactly as the sum of its zones, Z=1 must be
+    /// byte-identical to the unzoned run, and the zoned run must
+    /// bit-replay.
     #[test]
     fn prop_fleet_migration_storm_under_outage_preserves_stream_integrity() {
         use crate::coordinator::policy::{Policy, PolicyKind};
@@ -210,6 +217,7 @@ mod tests {
         let mut requeued_total = 0usize;
         let mut continuous_total = 0usize;
         let mut parity_total = 0usize;
+        let mut multizone_total = 0usize;
         check(
             "fleet-outage-migration-integrity",
             default_cases().clamp(16, 256),
@@ -240,10 +248,13 @@ mod tests {
                 // A third of the storms double as event-queue parity
                 // cases (wheel vs heap, byte-for-byte).
                 let heap_check = r.chance(1.0 / 3.0);
+                // Zone-partition axis: replicate the storm fleet into
+                // Z zones and check the merge contract.
+                let zones = 1 + r.below(3) as usize;
                 let seed = r.next_u64();
                 (
                     k, balancer, targeting, frac, dead, slots, bscale, fault, batching,
-                    heap_check, seed,
+                    heap_check, zones, seed,
                 )
             },
             |&(
@@ -257,6 +268,7 @@ mod tests {
                 fault,
                 batching,
                 heap_check,
+                zones,
                 seed,
             )| {
                 let mut cfg = SimConfig {
@@ -406,6 +418,52 @@ mod tests {
                         "slot-legacy runs must record no batch timeline"
                     );
                 }
+                // Zone-partition leg: Z copies of the same storm fleet.
+                let zoned_cfg = crate::sim::zones::ZonedFleetConfig::uniform(zones, fleet.clone());
+                let zout = crate::sim::zones::run_zoned_fleet(&sc, &trace, &policy, &zoned_cfg);
+                if zones == 1 {
+                    crate::prop_assert!(
+                        zout.merged.records == out.records
+                            && format!("{:?}", zout.merged.load) == format!("{:?}", out.load),
+                        "Z=1 zoned run diverged from run_fleet"
+                    );
+                } else {
+                    multizone_total += 1;
+                }
+                crate::prop_assert!(
+                    zout.merged.records.len() == trace.len(),
+                    "zoned liveness: {} of {} requests resolved under Z={zones}",
+                    zout.merged.records.len(),
+                    trace.len()
+                );
+                for rec in &zout.merged.records {
+                    crate::prop_assert!(
+                        rec.tbts.len() as u32 + 1 == rec.output_len
+                            && rec.tbts.iter().all(|&t| t > 0.0),
+                        "req {}: merged stream integrity broke under Z={zones}",
+                        rec.id
+                    );
+                }
+                // Merge decomposition: the folded report's additive
+                // fields are exactly the sums over `zone_loads`.
+                let ev_sum: u64 = zout.zone_loads.iter().map(|l| l.events_processed).sum();
+                let busy_sum: f64 = zout.zone_loads.iter().map(|l| l.server_busy_seconds).sum();
+                let ss_sum: f64 = zout.zone_loads.iter().map(|l| l.shard_seconds).sum();
+                let ru_sum: usize = zout.zone_loads.iter().map(|l| l.release_underflows).sum();
+                crate::prop_assert!(
+                    zout.merged.load.events_processed == ev_sum
+                        && (zout.merged.load.server_busy_seconds - busy_sum).abs() < 1e-9
+                        && (zout.merged.load.shard_seconds - ss_sum).abs() < 1e-9
+                        && zout.merged.load.release_underflows == ru_sum,
+                    "zoned load report does not decompose as the sum of its zones (Z={zones})"
+                );
+                let replay = crate::sim::zones::run_zoned_fleet(&sc, &trace, &policy, &zoned_cfg);
+                crate::prop_assert!(
+                    replay.merged.records == zout.merged.records
+                        && format!("{:?}", replay.merged.load)
+                            == format!("{:?}", zout.merged.load),
+                    "zoned storm is not bit-reproducible (Z={zones})"
+                );
                 Ok(())
             },
         );
@@ -418,6 +476,10 @@ mod tests {
         assert!(
             parity_total > 0,
             "property never exercised the wheel/heap backend parity check"
+        );
+        assert!(
+            multizone_total > 0,
+            "property never exercised a multi-zone partition"
         );
     }
 

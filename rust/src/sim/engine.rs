@@ -136,6 +136,18 @@ impl Scenario {
         fleet::run_fleet(self, trace, policy, fleet)
     }
 
+    /// Run a zone-partitioned fleet: Z independent zones on scoped
+    /// worker threads, merged bit-reproducibly (`sim/zones.rs`). A
+    /// single-zone config is byte-identical to [`Self::run_fleet`].
+    pub fn run_zoned_fleet(
+        &self,
+        trace: &Trace,
+        policy: &Policy,
+        zoned: &crate::sim::zones::ZonedFleetConfig,
+    ) -> crate::sim::zones::ZonedOutcome {
+        crate::sim::zones::run_zoned_fleet(self, trace, policy, zoned)
+    }
+
     /// Run a fleet configuration and aggregate QoE + load metrics.
     pub fn run_fleet_report(
         &self,

@@ -369,7 +369,10 @@ impl FleetConfig {
 }
 
 /// Result of a fleet run: per-request records (trace order) plus load
-/// metrics.
+/// metrics. Zone-partitioned runs (`sim/zones.rs`) merge Z of these —
+/// records re-sorted by the stable `(arrival, zone, seq)` key, load
+/// reports folded via [`LoadReport::merge_zones`] — into one outcome
+/// that is byte-identical at Z=1 to a plain [`run_fleet`] call.
 #[derive(Clone, Debug)]
 pub struct FleetOutcome {
     pub records: Vec<RequestRecord>,

@@ -31,6 +31,14 @@
 //!   and an optional per-shard RTT offset) and for the single-flight
 //!   device. Dispatch and migration decisions flow through
 //!   `coordinator::policy` / `coordinator::migration` unchanged.
+//! * [`zones`] scales one cell across cores: [`zones::ZonedFleetConfig`]
+//!   splits the trace round-robin into Z independent zones (each a full
+//!   fleet with its own shards/balancer/autoscaler/batching and an
+//!   optional zone-wide RTT offset), runs them on scoped worker threads
+//!   (`DISCO_THREADS`-bounded), and merges records and load reports
+//!   bit-reproducibly — per-zone RNG streams derive from the zone id,
+//!   never thread identity, so output is byte-identical for any worker
+//!   count and Z=1 is byte-identical to [`fleet::run_fleet`].
 //!
 //! # Fleet model and knobs
 //!
@@ -87,6 +95,7 @@ pub mod delivery;
 pub mod engine;
 pub mod event_queue;
 pub mod fleet;
+pub mod zones;
 
 pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
 pub use balancer::{Balancer, BalancerKind, ShardView};
@@ -94,3 +103,4 @@ pub use batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 pub use engine::{Scenario, SimConfig};
 pub use event_queue::{EventQueue, EventQueueKind};
 pub use fleet::{FleetConfig, FleetOutcome, MigrationTargeting, ShardFault, ShardOutage};
+pub use zones::{ZoneConfig, ZonedFleetConfig, ZonedOutcome};

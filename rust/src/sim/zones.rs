@@ -1,0 +1,379 @@
+//! Zone-partitioned fleet simulation: one logical cell split into Z
+//! independent zones, run on scoped worker threads, merged
+//! bit-reproducibly.
+//!
+//! A zone is a full [`FleetConfig`] fleet — its own shards, balancer,
+//! autoscaler, batching mode, and an optional zone-wide RTT offset
+//! (geo placement) — serving a deterministic round-robin slice of the
+//! trace. Zones share nothing at run time, so they parallelize
+//! perfectly across cores via [`crate::util::par::par_map`]; the
+//! determinism contract (pinned by `tests/integration.rs` and the
+//! migration-storm property) is:
+//!
+//! * **Thread-count invariance.** Every per-zone RNG stream derives
+//!   from the zone *id* (never thread identity), and merged output is
+//!   assembled in zone order, so results are byte-identical for any
+//!   `DISCO_THREADS` — including fully serial.
+//! * **Z=1 is the plain fleet.** Zone 0's seed mix is the identity and
+//!   the identity partition is the whole trace, so a single-zone run
+//!   is byte-identical to [`run_fleet`] on the same config.
+//!
+//! Cross-zone events (balancing, failover, migration *between* zones)
+//! are deliberately out of scope: zones would then need a shared event
+//! clock, which serializes the loop. The merge layer is the substrate
+//! the geo-distribution direction builds on.
+
+use crate::coordinator::policy::Policy;
+use crate::metrics::LoadReport;
+use crate::sim::engine::Scenario;
+use crate::sim::fleet::{run_fleet, FleetConfig, FleetOutcome};
+use crate::trace::{Request, Trace};
+use crate::util::par::par_map;
+
+/// One zone of a [`ZonedFleetConfig`]: a full fleet plus a zone-wide
+/// extra RTT (seconds) added onto every shard of the zone — last-hop /
+/// cross-region placement, the knob the per-shard `shard_rtts` table
+/// expresses within a zone.
+#[derive(Clone, Debug)]
+pub struct ZoneConfig {
+    pub fleet: FleetConfig,
+    pub rtt_offset: f64,
+}
+
+impl ZoneConfig {
+    pub fn new(fleet: FleetConfig) -> ZoneConfig {
+        ZoneConfig {
+            fleet,
+            rtt_offset: 0.0,
+        }
+    }
+}
+
+/// Z independent zones, each a full fleet serving `1/Z` of the trace.
+#[derive(Clone, Debug)]
+pub struct ZonedFleetConfig {
+    pub zones: Vec<ZoneConfig>,
+}
+
+impl ZonedFleetConfig {
+    /// Z copies of the same fleet config (the homogeneous grid cell).
+    pub fn uniform(z: usize, fleet: FleetConfig) -> ZonedFleetConfig {
+        ZonedFleetConfig {
+            zones: vec![ZoneConfig::new(fleet); z.max(1)],
+        }
+    }
+
+    /// Append a heterogeneous zone.
+    pub fn with_zone(mut self, zone: ZoneConfig) -> ZonedFleetConfig {
+        self.zones.push(zone);
+        self
+    }
+
+    /// Set per-zone RTT offsets (shorter than Z leaves the rest at 0).
+    pub fn with_zone_rtts(mut self, rtts: &[f64]) -> ZonedFleetConfig {
+        for (z, &off) in rtts.iter().enumerate().take(self.zones.len()) {
+            self.zones[z].rtt_offset = off;
+        }
+        self
+    }
+
+    pub fn zone_count(&self) -> usize {
+        self.zones.len()
+    }
+}
+
+/// A zoned run's result: the merged fleet-wide outcome plus the
+/// per-zone load breakdown. The breakdown is carried *alongside* the
+/// merged [`LoadReport`] (not inside it) so a Z=1 merged report stays
+/// bit-identical to the plain fleet's.
+#[derive(Clone, Debug)]
+pub struct ZonedOutcome {
+    /// Fleet-wide outcome: records in `(arrival, zone, seq)` order,
+    /// load folded via [`LoadReport::merge_zones`].
+    pub merged: FleetOutcome,
+    /// Each zone's own load report (times relative to the zone's first
+    /// arrival), in zone order.
+    pub zone_loads: Vec<LoadReport>,
+}
+
+/// Zone z's RNG seed: the [`crate::experiments::common::CellSeed`]
+/// `mix_u64` fold of the zone id into the scenario seed — content-
+/// derived, never thread identity. Zone 0's mix is the identity
+/// (`0.rotate_left(17) * φ = 0`), which is exactly what makes a Z=1
+/// zoned run byte-identical to the unzoned fleet.
+pub fn zone_seed(base: u64, zone: u64) -> u64 {
+    base ^ zone.rotate_left(17).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Deterministic round-robin partition: request at trace position `i`
+/// lands in zone `i % Z`, keeping its id and arrival time. Every
+/// sub-trace is therefore still arrival-sorted (a subsequence of a
+/// sorted list), and Z=1 is the identity partition.
+pub fn partition_trace(trace: &Trace, z: usize) -> Vec<Trace> {
+    let z = z.max(1);
+    let mut parts: Vec<Vec<Request>> = (0..z)
+        .map(|_| Vec::with_capacity(trace.len() / z + 1))
+        .collect();
+    for (i, r) in trace.requests.iter().enumerate() {
+        parts[i % z].push(*r);
+    }
+    parts
+        .into_iter()
+        .map(|reqs| Trace::new(&trace.name, reqs))
+        .collect()
+}
+
+/// Run a trace across Z independent zones on scoped worker threads and
+/// merge the outcomes. See the module docs for the determinism
+/// contract; `DISCO_THREADS` bounds the worker count without ever
+/// changing the result.
+pub fn run_zoned_fleet(
+    scenario: &Scenario,
+    trace: &Trace,
+    policy: &Policy,
+    zoned: &ZonedFleetConfig,
+) -> ZonedOutcome {
+    assert!(!zoned.zones.is_empty(), "a zoned fleet needs at least one zone");
+    let z = zoned.zones.len();
+    let sub_traces = partition_trace(trace, z);
+
+    // Per-zone inputs are fully materialized up front — seed mixed from
+    // the zone id, the zone RTT offset folded into the shard RTT table —
+    // so the worker closure is a pure `run_fleet` call.
+    let cells: Vec<(Scenario, Trace, FleetConfig)> = zoned
+        .zones
+        .iter()
+        .zip(sub_traces.iter())
+        .enumerate()
+        .map(|(zi, (zone, sub))| {
+            let mut sc = scenario.clone();
+            sc.cfg.seed = zone_seed(scenario.cfg.seed, zi as u64);
+            let mut fleet = zone.fleet.clone();
+            if zone.rtt_offset != 0.0 {
+                // Fold the zone offset onto every shard (pad the table
+                // to the shard count first). A zero offset leaves the
+                // config untouched, preserving Z=1 byte-parity.
+                fleet.shard_rtts.resize(fleet.shards.max(1), 0.0);
+                for rtt in &mut fleet.shard_rtts {
+                    *rtt += zone.rtt_offset;
+                }
+            }
+            (sc, sub.clone(), fleet)
+        })
+        .collect();
+
+    let outcomes: Vec<FleetOutcome> =
+        par_map(&cells, |_, (sc, sub, fleet)| run_fleet(sc, sub, policy, fleet));
+
+    // --- Merge. Every LoadReport time is relative to its own run's
+    // first arrival, so each zone carries its t0 offset into the fold.
+    let global_t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+    let parts: Vec<(LoadReport, f64)> = outcomes
+        .iter()
+        .zip(sub_traces.iter())
+        .map(|(out, sub)| {
+            let t0 = sub.requests.first().map_or(global_t0, |r| r.arrival);
+            (out.load.clone(), t0 - global_t0)
+        })
+        .collect();
+    let load = LoadReport::merge_zones(&parts);
+
+    // Records re-sorted by the stable (arrival, zone, seq) key: zones
+    // are concatenated in zone order with each zone's records already
+    // in sub-trace (seq) order, so a *stable* sort on arrival alone
+    // realizes the full key. For Z=1 the input is already sorted and
+    // the sort is the identity permutation — byte-parity with
+    // `run_fleet` holds structurally, not by luck.
+    let mut keyed: Vec<(f64, crate::metrics::RequestRecord)> = outcomes
+        .into_iter()
+        .zip(sub_traces.iter())
+        .flat_map(|(out, sub)| {
+            out.records
+                .into_iter()
+                .zip(sub.requests.iter().map(|r| r.arrival))
+                .map(|(rec, arr)| (arr, rec))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    keyed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let records = keyed.into_iter().map(|(_, rec)| rec).collect();
+
+    ZonedOutcome {
+        merged: FleetOutcome { records, load },
+        zone_loads: parts.into_iter().map(|(r, _)| r).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::cost::unified::Constraint;
+    use crate::profiles::{DeviceProfile, ServerProfile};
+    use crate::sim::balancer::BalancerKind;
+    use crate::sim::engine::SimConfig;
+    use crate::trace::generator::WorkloadSpec;
+
+    fn scenario(seed: u64) -> Scenario {
+        Scenario::new(
+            ServerProfile::gpt4o_mini(),
+            DeviceProfile::xiaomi14_qwen0b5(),
+            Constraint::Server,
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn zone_seed_mix_is_identity_at_zone_zero_and_distinct_otherwise() {
+        assert_eq!(zone_seed(0xD15C0, 0), 0xD15C0);
+        let seeds: Vec<u64> = (0..8).map(|z| zone_seed(0xD15C0, z)).collect();
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "zones {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_round_robin_and_preserves_ids_and_order() {
+        let trace = WorkloadSpec::alpaca(10).generate(3);
+        let parts = partition_trace(&trace, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(Trace::len).sum::<usize>(), 10);
+        assert_eq!(parts[0].len(), 4); // positions 0,3,6,9
+        for (z, part) in parts.iter().enumerate() {
+            for (j, r) in part.requests.iter().enumerate() {
+                assert_eq!(r.id, trace.requests[z + j * 3].id);
+            }
+            // Still arrival-sorted.
+            for w in part.requests.windows(2) {
+                assert!(w[0].arrival <= w[1].arrival);
+            }
+        }
+        // Z=1 is the identity partition.
+        let whole = partition_trace(&trace, 1);
+        assert_eq!(whole.len(), 1);
+        assert_eq!(whole[0].requests.len(), trace.requests.len());
+        assert_eq!(whole[0].requests[5].id, trace.requests[5].id);
+    }
+
+    /// The acceptance pin at module scope: a single-zone run is
+    /// byte-identical to the plain fleet under every balancer.
+    #[test]
+    fn single_zone_is_byte_identical_to_run_fleet_under_every_balancer() {
+        let sc = scenario(0xD15C0);
+        let trace = WorkloadSpec::alpaca(200).generate(7);
+        let policy = Policy::simple(PolicyKind::StochD, 0.9, true);
+        for balancer in BalancerKind::all() {
+            let fleet = FleetConfig::sharded(3, 2, balancer);
+            let plain = run_fleet(&sc, &trace, &policy, &fleet);
+            let zoned = run_zoned_fleet(
+                &sc,
+                &trace,
+                &policy,
+                &ZonedFleetConfig::uniform(1, fleet.clone()),
+            );
+            assert_eq!(plain.records, zoned.merged.records, "{balancer:?}");
+            assert_eq!(
+                format!("{:?}", plain.load),
+                format!("{:?}", zoned.merged.load),
+                "{balancer:?}"
+            );
+            assert_eq!(zoned.zone_loads.len(), 1);
+        }
+    }
+
+    /// Scalars decompose as the sum of their zones, and each zone's
+    /// slice replays independently (content-derived seeding).
+    #[test]
+    fn zoned_run_decomposes_and_zones_replay_in_isolation() {
+        let sc = scenario(42);
+        let trace = WorkloadSpec::alpaca(120).generate(11);
+        let policy = Policy::simple(PolicyKind::StochS, 0.5, true);
+        let fleet = FleetConfig::sharded(2, 1, BalancerKind::JoinShortestQueue);
+        let zoned = run_zoned_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &ZonedFleetConfig::uniform(3, fleet.clone()),
+        );
+        assert_eq!(zoned.merged.records.len(), 120);
+        assert_eq!(zoned.zone_loads.len(), 3);
+        let m = &zoned.merged.load;
+        assert_eq!(
+            m.events_processed,
+            zoned.zone_loads.iter().map(|l| l.events_processed).sum::<u64>()
+        );
+        let busy: f64 = zoned.zone_loads.iter().map(|l| l.server_busy_seconds).sum();
+        assert!((m.server_busy_seconds - busy).abs() < 1e-12);
+        assert_eq!(m.shards.len(), 6, "2 shards × 3 zones concatenate");
+        // Merged records are globally arrival-sorted with ids intact.
+        let mut ids: Vec<u64> = zoned.merged.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 120, "no record lost or duplicated");
+        // Zone 1's slice reproduces bit-for-bit in isolation.
+        let subs = partition_trace(&trace, 3);
+        let mut sc1 = sc.clone();
+        sc1.cfg.seed = zone_seed(sc.cfg.seed, 1);
+        let solo = run_fleet(&sc1, &subs[1], &policy, &fleet);
+        assert_eq!(
+            format!("{:?}", solo.load),
+            format!("{:?}", zoned.zone_loads[1])
+        );
+    }
+
+    /// A zone-wide RTT offset only shifts that zone's shards; offset 0
+    /// leaves the config (and thus the records) untouched.
+    #[test]
+    fn zone_rtt_offset_applies_per_zone() {
+        let sc = scenario(9);
+        let trace = WorkloadSpec::alpaca(80).generate(5);
+        let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+        let fleet = FleetConfig::sharded(2, 2, BalancerKind::RoundRobin);
+        let base = run_zoned_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &ZonedFleetConfig::uniform(2, fleet.clone()),
+        );
+        let offset = run_zoned_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &ZonedFleetConfig::uniform(2, fleet.clone()).with_zone_rtts(&[0.0, 0.25]),
+        );
+        // Zone 0 (offset 0) is untouched…
+        assert_eq!(
+            format!("{:?}", base.zone_loads[0]),
+            format!("{:?}", offset.zone_loads[0])
+        );
+        // …zone 1's server-side first tokens all shifted later.
+        let zone1_ids: Vec<u64> = partition_trace(&trace, 2)[1]
+            .requests
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        let ttft_of = |o: &ZonedOutcome, id: u64| {
+            o.merged
+                .records
+                .iter()
+                .find(|r| r.id == id)
+                .map(|r| r.ttft)
+                .unwrap()
+        };
+        let mut shifted = 0;
+        for &id in &zone1_ids {
+            let b = ttft_of(&base, id);
+            let o = ttft_of(&offset, id);
+            assert!(o >= b - 1e-12, "offset can only delay first tokens");
+            if o > b + 1e-12 {
+                shifted += 1;
+            }
+        }
+        assert!(shifted > 0, "a 250 ms zone offset must move some TTFTs");
+    }
+}

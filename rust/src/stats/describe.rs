@@ -86,6 +86,62 @@ impl Summary {
             max: *sorted.last().unwrap(),
         }
     }
+
+    /// Merge per-partition summaries into one population summary.
+    ///
+    /// `n`, `mean`, `min`, and `max` are exact; `std` pools the
+    /// per-partition variances exactly (the parallel-variance identity
+    /// with the n−1 sample denominator the rest of this module uses).
+    /// Quantiles cannot be reconstructed from summaries alone — the raw
+    /// samples are gone — so `p50`/`p90`/`p99` are the count-weighted
+    /// means of the per-partition quantiles: exact when the partitions
+    /// are identically distributed (the zoned-fleet use case, where a
+    /// trace is round-robin split), an approximation otherwise.
+    ///
+    /// Merging a single summary returns it bit-for-bit (the identity),
+    /// and empty partitions are skipped, so a Z=1 zoned run reports the
+    /// same summaries as the unzoned fleet.
+    pub fn merge(parts: &[Summary]) -> Summary {
+        let live: Vec<&Summary> = parts.iter().filter(|s| s.n > 0).collect();
+        if live.is_empty() {
+            return Summary::of(&[]);
+        }
+        if live.len() == 1 {
+            return live[0].clone();
+        }
+        let n: usize = live.iter().map(|s| s.n).sum();
+        let nf = n as f64;
+        let mean = live.iter().map(|s| s.mean * s.n as f64).sum::<f64>() / nf;
+        // Pooled variance: total sum of squared deviations about the
+        // grand mean = Σ [ (n_i − 1)·s_i² + n_i·(m_i − m)² ], then the
+        // sample (n − 1) denominator.
+        let std = if n < 2 {
+            0.0
+        } else {
+            let ss: f64 = live
+                .iter()
+                .map(|s| {
+                    let ni = s.n as f64;
+                    let d = s.mean - mean;
+                    (ni - 1.0) * s.std * s.std + ni * d * d
+                })
+                .sum();
+            (ss.max(0.0) / (nf - 1.0)).sqrt()
+        };
+        let wq = |pick: fn(&Summary) -> f64| -> f64 {
+            live.iter().map(|s| pick(s) * s.n as f64).sum::<f64>() / nf
+        };
+        Summary {
+            n,
+            mean,
+            std,
+            min: live.iter().map(|s| s.min).fold(f64::INFINITY, f64::min),
+            p50: wq(|s| s.p50),
+            p90: wq(|s| s.p90),
+            p99: wq(|s| s.p99),
+            max: live.iter().map(|s| s.max).fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +179,30 @@ mod tests {
         let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
         let p99 = percentile(&xs, 99.0);
         assert!((p99 - 989.01).abs() < 0.02, "p99={p99}");
+    }
+
+    #[test]
+    fn summary_merge_single_is_identity_and_exact_fields_pool() {
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64 * 0.3).collect();
+        let one = Summary::of(&xs);
+        // Single-part merge is bit-identical (and empty parts are skipped).
+        let merged = Summary::merge(&[one.clone()]);
+        assert_eq!(format!("{one:?}"), format!("{merged:?}"));
+        let merged = Summary::merge(&[Summary::of(&[]), one.clone(), Summary::of(&[])]);
+        assert_eq!(format!("{one:?}"), format!("{merged:?}"));
+        assert_eq!(Summary::merge(&[]).n, 0);
+
+        // Split-vs-whole: n/mean/min/max exact, std pools exactly.
+        let (a, b) = xs.split_at(17);
+        let m = Summary::merge(&[Summary::of(a), Summary::of(b)]);
+        let whole = Summary::of(&xs);
+        assert_eq!(m.n, whole.n);
+        assert!((m.mean - whole.mean).abs() < 1e-12);
+        assert_eq!(m.min, whole.min);
+        assert_eq!(m.max, whole.max);
+        assert!((m.std - whole.std).abs() < 1e-9, "{} vs {}", m.std, whole.std);
+        // Quantiles are a count-weighted approximation; stay ordered.
+        assert!(m.min <= m.p50 && m.p50 <= m.p90 && m.p90 <= m.p99 && m.p99 <= m.max);
     }
 
     #[test]

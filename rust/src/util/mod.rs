@@ -9,6 +9,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 
 /// Format a float with fixed precision, trimming to a compact display.

@@ -1,0 +1,136 @@
+//! Scoped-thread parallel mapping shared by the sweep runner
+//! (across-cell parallelism) and the zoned fleet simulator
+//! (within-cell parallelism, `sim/zones.rs`).
+//!
+//! Determinism is preserved by construction: callers derive every RNG
+//! stream from item content (cell seeds, zone ids) — never from thread
+//! identity — and [`par_map`] lands results by input index, so output is
+//! byte-identical for any worker count, including serial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-thread count: `DISCO_THREADS` override, else available cores.
+///
+/// * unset — all available cores;
+/// * `DISCO_THREADS=0` or `=1` — explicit serial (one worker);
+/// * `DISCO_THREADS=N` — exactly N workers;
+/// * unparsable — a warning is logged and all cores are used (the
+///   unset behavior), so a typo degrades loudly rather than silently
+///   changing the worker count.
+pub fn worker_threads() -> usize {
+    let all_cores = || {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    };
+    match std::env::var("DISCO_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(0) => 1, // explicit serial, not "all cores"
+            Ok(n) => n,
+            Err(_) => {
+                log::warn!("DISCO_THREADS={s:?} is not a number; using all available cores");
+                all_cores()
+            }
+        },
+        Err(_) => all_cores(),
+    }
+}
+
+/// Map `f` over `items` on scoped worker threads, preserving input order.
+///
+/// Work is distributed by an atomic cursor (cheap dynamic balancing for
+/// uneven items); outputs are returned in input order regardless of which
+/// thread computed them, so parallel runs stay deterministic as long as
+/// `f(i, item)` itself is (all simulator cells and zones are: they seed
+/// their own RNGs). Panics in `f` propagate.
+pub fn par_map<I, O, F>(items: &[I], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let n = items.len();
+    let threads = worker_threads().min(n);
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let cursor = &cursor;
+    let mut indexed: Vec<(usize, O)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    });
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, o)| o).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Env-var tests share the process environment; serialize them so a
+    // concurrent test runner cannot interleave set/remove pairs.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn with_disco_threads<R>(val: Option<&str>, body: impl FnOnce() -> R) -> R {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let saved = std::env::var("DISCO_THREADS").ok();
+        match val {
+            Some(v) => std::env::set_var("DISCO_THREADS", v),
+            None => std::env::remove_var("DISCO_THREADS"),
+        }
+        let out = body();
+        match saved {
+            Some(v) => std::env::set_var("DISCO_THREADS", v),
+            None => std::env::remove_var("DISCO_THREADS"),
+        }
+        out
+    }
+
+    #[test]
+    fn worker_threads_parses_explicit_counts() {
+        assert_eq!(with_disco_threads(Some("1"), worker_threads), 1);
+        assert_eq!(with_disco_threads(Some("4"), worker_threads), 4);
+        assert_eq!(with_disco_threads(Some(" 2 "), worker_threads), 2);
+    }
+
+    #[test]
+    fn worker_threads_zero_means_serial_not_all_cores() {
+        assert_eq!(with_disco_threads(Some("0"), worker_threads), 1);
+    }
+
+    #[test]
+    fn worker_threads_garbage_falls_back_to_all_cores() {
+        let cores = with_disco_threads(None, worker_threads);
+        assert!(cores >= 1);
+        assert_eq!(with_disco_threads(Some("lots"), worker_threads), cores);
+        assert_eq!(with_disco_threads(Some(""), worker_threads), cores);
+        assert_eq!(with_disco_threads(Some("-3"), worker_threads), cores);
+    }
+
+    #[test]
+    fn par_map_is_thread_count_invariant() {
+        let items: Vec<u64> = (0..64).collect();
+        let serial = with_disco_threads(Some("1"), || par_map(&items, |_, &x| x * 3 + 1));
+        let parallel = with_disco_threads(Some("4"), || par_map(&items, |_, &x| x * 3 + 1));
+        assert_eq!(serial, parallel);
+    }
+}

@@ -23,6 +23,7 @@ use disco::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfi
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::sim::event_queue::EventQueueKind;
 use disco::sim::fleet::{FleetConfig, MigrationTargeting};
+use disco::sim::zones::ZonedFleetConfig;
 use disco::trace::generator::{Arrival, WorkloadSpec};
 use disco::trace::Trace;
 
@@ -1032,6 +1033,93 @@ fn wheel_and_heap_event_queues_byte_identical_across_parity_matrix() {
                 assert_eq!(d.records, w.records, "default backend must be the wheel");
             }
         }
+    }
+}
+
+/// Zone-partition determinism contract, part 1 (acceptance): a Z=1
+/// [`ZonedFleetConfig`] is byte-identical to plain `run_fleet` — records
+/// AND the full `LoadReport` debug output — under every `BalancerKind`.
+/// `zone_seed(base, 0) == base` makes zone 0 replay the unzoned RNG
+/// streams exactly, so this holds bit-for-bit, not just statistically.
+#[test]
+fn single_zone_fleet_byte_identical_to_run_fleet_across_balancers() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 0x51,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(0x2051);
+    let policy = Policy::simple(PolicyKind::StochD, 0.9, true);
+    for balancer in BalancerKind::all() {
+        let fleet = FleetConfig::sharded(3, 2, balancer);
+        let zoned = ZonedFleetConfig::uniform(1, fleet.clone());
+        let flat = scenario.run_fleet(&trace, &policy, &fleet);
+        let z = scenario.run_zoned_fleet(&trace, &policy, &zoned);
+        assert_eq!(
+            flat.records, z.merged.records,
+            "{balancer}: Z=1 records diverged from run_fleet"
+        );
+        assert_eq!(
+            format!("{:?}", flat.load),
+            format!("{:?}", z.merged.load),
+            "{balancer}: Z=1 load report diverged from run_fleet"
+        );
+        assert_eq!(z.zone_loads.len(), 1);
+    }
+}
+
+/// Zone-partition determinism contract, part 2 (acceptance): a Z=4
+/// zoned run is **byte-identical under `DISCO_THREADS=1` vs `=4`** —
+/// records and the full `LoadReport` debug output — on both the
+/// timing-wheel default and the binary-heap reference event queue.
+/// Worker threads only decide *which core* runs a zone, never what the
+/// zone computes or how the merge orders its output.
+#[test]
+fn zoned_run_byte_identical_across_thread_counts_and_backends() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 0x7AE4,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(N).at_rate(3.0).generate(0x7AE4 ^ 0xA1FA);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let prior = std::env::var("DISCO_THREADS").ok();
+    for backend in [EventQueueKind::Wheel, EventQueueKind::Heap] {
+        let fleet = FleetConfig::sharded(2, 1, BalancerKind::JoinShortestQueue)
+            .with_event_queue(backend);
+        let zoned = ZonedFleetConfig::uniform(4, fleet);
+        std::env::set_var("DISCO_THREADS", "1");
+        let serial = scenario.run_zoned_fleet(&trace, &policy, &zoned);
+        std::env::set_var("DISCO_THREADS", "4");
+        let parallel = scenario.run_zoned_fleet(&trace, &policy, &zoned);
+        assert_eq!(
+            serial.merged.records, parallel.merged.records,
+            "{backend:?}: records depend on DISCO_THREADS"
+        );
+        assert_eq!(
+            format!("{:?}", serial.merged.load),
+            format!("{:?}", parallel.merged.load),
+            "{backend:?}: merged load report depends on DISCO_THREADS"
+        );
+        for (z, (a, b)) in serial.zone_loads.iter().zip(&parallel.zone_loads).enumerate() {
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "{backend:?}: zone {z} load depends on DISCO_THREADS"
+            );
+        }
+    }
+    match prior {
+        Some(v) => std::env::set_var("DISCO_THREADS", v),
+        None => std::env::remove_var("DISCO_THREADS"),
     }
 }
 
