@@ -1,0 +1,358 @@
+//! Paged-KV sweep: page-pool size × prefix caching × session load.
+//!
+//! Each cell runs a multi-user chat workload
+//! ([`SessionSpec::chat`]) on a K-shard fleet under
+//! [`BatchingMode::PagedKv`]. Cells at the same (users, seed) pair
+//! replay the identical trace and latency draws — the paged-KV
+//! subsystem draws no randomness of its own — so the cache-on vs
+//! cache-off columns and the pool-size columns are paired comparisons:
+//! the TTFT gap is a pure memory-model effect. Reported per cell:
+//! TTFT/TBT quantiles, the prefix-cache hit rate, memory-pressure
+//! preemptions, outage-free forced re-prefills (always zero here; the
+//! failover sweep owns outages), and peak page-pool utilization.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, par_map, CellSeed};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
+use crate::sim::batching::BatchLatencyCurve;
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::FleetConfig;
+use crate::sim::kv::KvConfig;
+use crate::trace::generator::SessionSpec;
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// One cell of the KV-sweep grid.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCell {
+    /// KV block-pool size per shard (pages).
+    pub pages: usize,
+    /// Whether the cell runs with prefix caching enabled.
+    pub cached: bool,
+    /// Concurrent chat users (the load axis: aggregate rate is
+    /// `users / mean_think`).
+    pub users: usize,
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct KvCellResult {
+    pub cell: KvCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub p99_tbt: f64,
+    /// Prefix-cache hit rate (0 when caching is off — disabled gates
+    /// count no lookups).
+    pub hit_rate: f64,
+    /// Memory-pressure preemptions across the run (seed-averaged).
+    pub preemptions: f64,
+    /// Forced mid-decode re-prefills (outage-driven; zero here).
+    pub forced_reprefills: f64,
+    /// Peak pages in use over the pool size, worst shard.
+    pub peak_page_util: f64,
+}
+
+/// Sweep parameters, shared by the `kv-sweep` experiment entry and its
+/// tests.
+#[derive(Clone, Debug)]
+pub struct KvSweepParams {
+    pub pages: Vec<usize>,
+    pub cached: Vec<bool>,
+    pub users: Vec<usize>,
+    pub requests_per_user: usize,
+    /// Mean think time between a user's consecutive requests (s).
+    pub mean_think: f64,
+    /// Tokens per KV block.
+    pub block_tokens: u32,
+    /// Prefill tokens admitted per tick per shard (Sarathi chunk).
+    pub chunk_tokens: u32,
+    pub tick_interval: f64,
+    pub curve: BatchLatencyCurve,
+    pub shards: usize,
+    /// Slot count the `sharded` constructor records (unused by the
+    /// paged gate, kept for topology parity with the other sweeps).
+    pub slots_per_shard: usize,
+    pub balancer: BalancerKind,
+    /// Dispatch policy every cell runs (ServerOnly isolates the memory
+    /// model from device-race effects).
+    pub policy: PolicyKind,
+    pub b: f64,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for KvSweepParams {
+    fn default() -> Self {
+        KvSweepParams {
+            // A pool that fits the session working set snugly, one 4×
+            // larger, and one effectively unbounded.
+            pages: vec![48, 192, 4096],
+            cached: vec![true, false],
+            users: vec![4, 12],
+            requests_per_user: 6,
+            mean_think: 2.0,
+            block_tokens: 16,
+            chunk_tokens: 256,
+            tick_interval: 0.25,
+            curve: BatchLatencyCurve::Knee {
+                knee: 8,
+                alpha: 0.05,
+            },
+            shards: 2,
+            slots_per_shard: 2,
+            balancer: BalancerKind::JoinShortestQueue,
+            policy: PolicyKind::ServerOnly,
+            b: 1.0,
+            n_seeds: 2,
+            service: ServerProfile::gpt4o_mini(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+impl KvSweepParams {
+    /// Number of grid cells.
+    pub fn n_cells(&self) -> usize {
+        self.pages.len() * self.cached.len() * self.users.len()
+    }
+
+    fn kv_config(&self, cell: &KvCell) -> KvConfig {
+        KvConfig {
+            pages: cell.pages,
+            block_tokens: self.block_tokens,
+            chunk_tokens: self.chunk_tokens,
+            tick_interval: self.tick_interval,
+            prefix_caching: cell.cached,
+            curve: self.curve,
+        }
+    }
+}
+
+/// The (scenario, trace, policy) triple a (users, seed) pair replays —
+/// shared by every (pages, cached) cell at that pair, so pool-size and
+/// caching comparisons are paired by construction.
+fn cell_workload(
+    params: &KvSweepParams,
+    users: usize,
+    seed: u64,
+) -> (Scenario, crate::trace::Trace, crate::coordinator::policy::Policy) {
+    let cell_seed = CellSeed::new(seed).mix_u64(users as u64);
+    let scenario = Scenario::new(
+        params.service.clone(),
+        params.device.clone(),
+        Constraint::Server,
+        SimConfig {
+            seed: cell_seed.scenario(),
+            ..Default::default()
+        },
+    );
+    let trace = SessionSpec::chat(users, params.requests_per_user, params.mean_think)
+        .generate(cell_seed.trace(0xCAC4E));
+    let policy = make_policy(
+        params.policy,
+        params.b,
+        false,
+        &scenario,
+        &trace,
+        cell_seed.scenario(),
+    );
+    (scenario, trace, policy)
+}
+
+/// Run the (pages × cached × users) grid in parallel; cells come back
+/// in grid order (pages outer, cached middle, users inner).
+pub fn run_grid(params: &KvSweepParams) -> Vec<KvCellResult> {
+    let mut cells = Vec::with_capacity(params.n_cells());
+    for &pages in &params.pages {
+        for &cached in &params.cached {
+            for &users in &params.users {
+                cells.push(KvCell {
+                    pages,
+                    cached,
+                    users,
+                });
+            }
+        }
+    }
+    par_map(&cells, |_, cell| run_cell(params, cell))
+}
+
+fn run_cell(params: &KvSweepParams, cell: &KvCell) -> KvCellResult {
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut p99_tbt = Vec::new();
+    let mut hit_rate = Vec::new();
+    let mut preemptions = Vec::new();
+    let mut forced = Vec::new();
+    let mut peak_util = Vec::new();
+    for seed in 0..params.n_seeds {
+        let (scenario, trace, policy) = cell_workload(params, cell.users, seed);
+        let cfg = FleetConfig::sharded(params.shards, params.slots_per_shard, params.balancer)
+            .with_kv(params.kv_config(cell));
+        let rep = scenario.run_fleet_report(&trace, &policy, &cfg);
+        mean_ttft.push(rep.qoe.ttft.mean);
+        p99_ttft.push(rep.qoe.ttft.p99);
+        p99_tbt.push(rep.qoe.tbt.p99);
+        hit_rate.push(rep.load.prefix_hit_rate().unwrap_or(0.0));
+        preemptions.push(rep.load.kv_preemptions as f64);
+        forced.push(rep.load.kv_forced_reprefills as f64);
+        peak_util.push(
+            rep.load
+                .shards
+                .iter()
+                .map(|s| s.kv_pages_peak as f64 / s.kv_pages_total.max(1) as f64)
+                .fold(0.0, f64::max),
+        );
+    }
+    let avg = crate::stats::describe::mean;
+    KvCellResult {
+        cell: *cell,
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        p99_tbt: avg(&p99_tbt),
+        hit_rate: avg(&hit_rate),
+        preemptions: avg(&preemptions),
+        forced_reprefills: avg(&forced),
+        peak_page_util: avg(&peak_util),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[KvCellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.cell.pages),
+                if r.cell.cached { "cache" } else { "nocache" }.to_string(),
+                format!("{}", r.cell.users),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.3}", r.p99_tbt),
+                format!("{:.2}", r.hit_rate),
+                format!("{:.1}", r.preemptions),
+                format!("{:.1}", r.forced_reprefills),
+                format!("{:.2}", r.peak_page_util),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "pages",
+            "prefix",
+            "users",
+            "mean TTFT",
+            "p99 TTFT",
+            "p99 TBT",
+            "hit rate",
+            "preempt",
+            "reprefill",
+            "peak util",
+        ],
+        &rows,
+    )
+}
+
+/// The `kv-sweep` experiment entry: default grid, CSV + table.
+pub fn kv_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = KvSweepParams {
+        n_seeds: ctx.n_seeds.clamp(1, 2),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "pages",
+        "prefix_caching",
+        "users",
+        "mean_ttft",
+        "p99_ttft",
+        "p99_tbt",
+        "hit_rate",
+        "preemptions",
+        "forced_reprefills",
+        "peak_page_util",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            format!("{}", r.cell.pages),
+            format!("{}", r.cell.cached),
+            format!("{}", r.cell.users),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.p99_tbt),
+            format!("{:.4}", r.hit_rate),
+            format!("{:.2}", r.preemptions),
+            format!("{:.2}", r.forced_reprefills),
+            format!("{:.4}", r.peak_page_util),
+        ]);
+    }
+    csv.write(&ctx.csv_path("kv-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> KvSweepParams {
+        KvSweepParams {
+            pages: vec![64, 2048],
+            cached: vec![true, false],
+            users: vec![6],
+            requests_per_user: 5,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_axes_and_caching_helps() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), 4);
+        // Grid order: pages outer, cached middle, users inner.
+        let (small_on, small_off) = (&results[0], &results[1]);
+        assert!(small_on.cell.cached && !small_off.cell.cached);
+        assert_eq!(small_on.cell.pages, 64);
+        assert!(
+            small_on.hit_rate > 0.0,
+            "session prompts must hit the prefix index"
+        );
+        assert_eq!(small_off.hit_rate, 0.0, "disabled gates count no lookups");
+        // Paired traces: caching can only shrink prefill work.
+        assert!(
+            small_on.mean_ttft <= small_off.mean_ttft,
+            "cache {:.4}s vs nocache {:.4}s",
+            small_on.mean_ttft,
+            small_off.mean_ttft
+        );
+        for r in &results {
+            assert!(r.mean_ttft > 0.0 && r.p99_ttft >= r.mean_ttft * 0.5);
+            // Decode growth may transiently overshoot the pool by a few
+            // pages before the preemption loop frees them, so the peak
+            // can nose past 1.0 under pressure — never run away.
+            assert!(r.peak_page_util > 0.0 && r.peak_page_util < 1.5);
+            assert_eq!(r.forced_reprefills, 0.0, "no outages in this sweep");
+        }
+    }
+
+    #[test]
+    fn kv_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_kv_sweep"),
+            n_seeds: 1,
+            n_requests: 50,
+        };
+        let out = kv_sweep(&ctx).unwrap();
+        assert!(out.contains("hit rate"));
+        let csv = std::fs::read_to_string(ctx.csv_path("kv-sweep")).unwrap();
+        // Header + 3 pools × 2 caching modes × 2 user counts.
+        assert_eq!(csv.lines().count(), 1 + 12);
+        assert_eq!(KvSweepParams::default().n_cells(), 12);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

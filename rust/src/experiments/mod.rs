@@ -13,6 +13,7 @@ pub mod characterization;
 pub mod common;
 pub mod endtoend;
 pub mod failover_sweep;
+pub mod kv_sweep;
 pub mod load_sweep;
 pub mod migration_exp;
 pub mod quality_exp;
@@ -171,6 +172,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "batching-sweep",
             title: "Fleet: continuous batching vs slot admission across token budgets",
             run: batching_sweep::batching_sweep,
+        },
+        ExperimentDef {
+            id: "kv-sweep",
+            title: "Fleet: paged KV pools × prefix caching across session loads",
+            run: kv_sweep::kv_sweep,
         },
         ExperimentDef {
             id: "zone-sweep",

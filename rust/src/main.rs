@@ -6,8 +6,12 @@
 //! simulate [--service S] [--device D] [--policy P] [--b B]
 //!          [--constraint server|device] [--requests N] [--seed N]
 //!          [--migration] [--queueing] [--trace FILE]
-//! fleet_sweep / shard_sweep / autoscale_sweep
-//!          parallel sweep grids over the (sharded, autoscaled) fleet
+//! fleet_sweep
+//!          parallel (arrival-rate × policy) grid on the fleet simulator
+//! shard_sweep / autoscale_sweep / failover_sweep / batching_sweep /
+//! zone_sweep / kv_sweep
+//!          aliases for `exp <id>`: each runs its registry entry with the
+//!          shared --quick/--seeds/--requests/--out context
 //! bench    fixed-seed fleet benchmark -> BENCH_fleet.json (CI perf gate)
 //! trace-gen [--n N] [--seed N] [--out FILE] [--workload alpaca|long]
 //! serve [--variant NAME] [--requests N] [--max-new N] [--scale X]
@@ -22,6 +26,7 @@ use disco::sim::balancer::BalancerKind;
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::trace::generator::WorkloadSpec;
 use disco::util::cli::Args;
+use disco::util::label::ParseLabel;
 
 fn main() {
     disco::util::logging::init();
@@ -32,11 +37,15 @@ fn main() {
         "exp" => cmd_exp(&args),
         "simulate" => cmd_simulate(&args),
         "fleet_sweep" | "fleet-sweep" => cmd_fleet_sweep(&args),
-        "shard_sweep" | "shard-sweep" => cmd_shard_sweep(&args),
-        "autoscale_sweep" | "autoscale-sweep" => cmd_autoscale_sweep(&args),
-        "failover_sweep" | "failover-sweep" => cmd_failover_sweep(&args),
-        "batching_sweep" | "batching-sweep" => cmd_batching_sweep(&args),
-        "zone_sweep" | "zone-sweep" => cmd_zone_sweep(&args),
+        // Legacy sweep subcommands: each is an alias for its registry
+        // entry — the per-sweep arg plumbing they used to duplicate
+        // lives in the experiment defaults now.
+        "shard_sweep" | "shard-sweep" => run_registry("shard-sweep", &args),
+        "autoscale_sweep" | "autoscale-sweep" => run_registry("autoscale-sweep", &args),
+        "failover_sweep" | "failover-sweep" => run_registry("failover-sweep", &args),
+        "batching_sweep" | "batching-sweep" => run_registry("batching-sweep", &args),
+        "zone_sweep" | "zone-sweep" => run_registry("zone-sweep", &args),
+        "kv_sweep" | "kv-sweep" => run_registry("kv-sweep", &args),
         "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
@@ -63,40 +72,16 @@ fn print_help() {
          \x20             [--rates R1,R2,..] [--policies p1,p2,..] [--slots N] [--b B]\n\
          \x20             [--shards K] [--balancer rr|jsq|p2c|least-work]\n\
          \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
-         \x20 shard_sweep parallel (shards × balancer × rate) grid on the sharded fleet\n\
-         \x20             [--shards K1,K2,..] [--balancers b1,b2,..] [--rates R1,..]\n\
-         \x20             [--slots N] [--policy P] [--requests N] [--seeds N]\n\
-         \x20             [--service S] [--device D]\n\
-         \x20 autoscale_sweep\n\
-         \x20             parallel (policy × rate × cold-start) grid on the autoscaled\n\
-         \x20             fleet [--policies p1,p2,..] [--rates R1,..]\n\
-         \x20             [--coldstarts rtx3060:3,a40:7,fixed:SECS] [--min K] [--max K]\n\
-         \x20             [--slots N] [--cv CV] [--interval SECS] [--balancer B]\n\
-         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
-         \x20             [--service S] [--device D]\n\
-         \x20 failover_sweep\n\
-         \x20             parallel (migration policy × balancer × outage time) grid:\n\
-         \x20             one shard dies mid-burst [--policies off,legacy,shard-targeted]\n\
-         \x20             [--balancers b1,b2,..] [--outage-at F1,F2,..] [--shards K]\n\
-         \x20             [--slots N] [--outage-shard S] [--rate RPS] [--cv CV]\n\
-         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
-         \x20             [--service S] [--device D]\n\
-         \x20 batching_sweep\n\
-         \x20             parallel (token budget × rate × batch curve) grid: continuous\n\
-         \x20             batching vs the slot model [--budgets B1,B2,..] [--rates R1,..]\n\
-         \x20             [--curves flat,knee:8:0.05,linear:0.05] [--tick SECS]\n\
-         \x20             [--max-batch N (0 = unbounded)] [--shards K] [--slots N]\n\
-         \x20             [--balancer B]\n\
-         \x20             [--policy P] [--b B] [--requests N] [--seeds N]\n\
-         \x20             [--service S] [--device D]\n\
-         \x20 zone_sweep  (zones × shards/zone × rate) grid on the zone-partitioned\n\
-         \x20             fleet: one cell across all cores, merged bit-reproducibly\n\
-         \x20             (DISCO_THREADS caps workers without changing results)\n\
-         \x20             [--zones Z1,Z2,..] [--shards K1,K2,..] [--rates R1,..]\n\
-         \x20             [--slots N] [--balancer B] [--policy P] [--b B]\n\
-         \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
+         \x20 shard_sweep / autoscale_sweep / failover_sweep / batching_sweep /\n\
+         \x20 zone_sweep / kv_sweep\n\
+         \x20             aliases for `exp <id>`: each runs its registry entry\n\
+         \x20             (shards × balancer × rate, autoscaling policies, mid-burst\n\
+         \x20             shard failure, continuous batching vs slots, zoned cells,\n\
+         \x20             paged-KV pools × prefix caching) with the shared\n\
+         \x20             [--quick] [--seeds N] [--requests N] [--out DIR] context\n\
          \x20 bench       fixed-seed fleet benchmarks (slot-legacy + continuous\n\
-         \x20             batching + zoned) → BENCH_fleet.json [--requests N] [--reps N]\n\
+         \x20             batching + paged-kv + zoned) → BENCH_fleet.json\n\
+         \x20             [--requests N] [--reps N]\n\
          \x20             [--out FILE] [--baseline FILE] [--max-regression FRAC]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
          \x20 serve       live loop: REAL device model via PJRT + emulated server\n"
@@ -115,6 +100,13 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         .positional
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("usage: disco exp <id|all>"))?;
+    run_registry(id, args)
+}
+
+/// Run one registry experiment with the shared context flags
+/// (`--quick`, `--seeds N`, `--requests N`, `--out DIR`) — the single
+/// dispatch path behind `disco exp <id>` and every sweep alias.
+fn run_registry(id: &str, args: &Args) -> anyhow::Result<()> {
     let mut ctx = if args.flag("quick") {
         ExpContext::quick()
     } else {
@@ -231,8 +223,9 @@ fn parse_rates(args: &Args, defaults: Vec<f64>) -> anyhow::Result<Vec<f64>> {
 }
 
 fn parse_balancer(s: &str) -> anyhow::Result<BalancerKind> {
-    BalancerKind::parse(s)
-        .ok_or_else(|| anyhow::anyhow!("unknown balancer '{s}' (rr|jsq|p2c|least-work)"))
+    // One label-parsing convention: the shared trait supplies the
+    // uniform "unknown balancer '…' (valid: …)" error.
+    BalancerKind::from_label(s)
 }
 
 /// Resolve the `--service` / `--device` profile pair shared by the
@@ -290,344 +283,17 @@ fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_shard_sweep(args: &Args) -> anyhow::Result<()> {
-    use disco::experiments::shard_sweep::{render_grid, run_grid, ShardSweepParams};
-
-    let defaults = ShardSweepParams::default();
-    let shard_counts = parse_list(args, "shards", defaults.shard_counts, |k| {
-        k.parse::<usize>()
-            .map_err(|_| anyhow::anyhow!("--shards expects integers, got '{k}'"))
-    })?;
-    // Accept the singular spelling too (`fleet_sweep` uses --balancer);
-    // the Args parser ignores unknown keys, so a near-miss would
-    // otherwise silently sweep every balancer.
-    let balancer_key = if args.get("balancers").is_none() && args.get("balancer").is_some() {
-        "balancer"
-    } else {
-        "balancers"
-    };
-    let balancers = parse_list(args, balancer_key, defaults.balancers, parse_balancer)?;
-    let rates = parse_rates(args, defaults.rates)?;
-    anyhow::ensure!(
-        shard_counts.iter().all(|&k| k > 0),
-        "shard counts must be at least 1"
-    );
-
-    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
-    let params = ShardSweepParams {
-        shard_counts,
-        balancers,
-        rates,
-        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
-        policy: parse_policy(args.get_or("policy", "server-only"))?,
-        b: args.get_f64("b", defaults.b)?,
-        n_requests: args.get_usize("requests", defaults.n_requests)?,
-        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
-        service,
-        device,
-    };
-    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
-    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
-    let n_cells = params.shard_counts.len() * params.balancers.len() * params.rates.len();
-    println!(
-        "shard sweep: {} shard counts × {} balancers × {} rates = {n_cells} cells, \
-         {} slots/shard, {} requests × {} seeds per cell",
-        params.shard_counts.len(),
-        params.balancers.len(),
-        params.rates.len(),
-        params.slots_per_shard,
-        params.n_requests,
-        params.n_seeds
-    );
-    let t0 = std::time::Instant::now();
-    let results = run_grid(&params);
-    println!("{}", render_grid(&results));
-    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
-    Ok(())
-}
-
-fn cmd_autoscale_sweep(args: &Args) -> anyhow::Result<()> {
-    use disco::experiments::autoscale_sweep::{
-        render_grid, run_grid, AutoscaleSweepParams, ColdCase, PolicyAxis,
-    };
-    use disco::sim::autoscaler::ColdStartSpec;
-
-    fn parse_axis(s: &str) -> anyhow::Result<PolicyAxis> {
-        let hint = "static-min|static-max|reactive|ttft";
-        PolicyAxis::parse(s).ok_or_else(|| anyhow::anyhow!("unknown policy '{s}' ({hint})"))
-    }
-    fn parse_cold(s: &str) -> anyhow::Result<ColdCase> {
-        let hint = "rtx3060:B|a40:B|fixed:SECS";
-        ColdStartSpec::parse(s)
-            .map(ColdCase::new)
-            .ok_or_else(|| anyhow::anyhow!("unknown cold-start '{s}' ({hint})"))
-    }
-
-    let defaults = AutoscaleSweepParams::default();
-    let policies = parse_list(args, "policies", defaults.policies, parse_axis)?;
-    let rates = parse_rates(args, defaults.rates)?;
-    let cold_cases = parse_list(args, "coldstarts", defaults.cold_cases, parse_cold)?;
-
-    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
-    let params = AutoscaleSweepParams {
-        policies,
-        rates,
-        cold_cases,
-        min_shards: args.get_usize("min", defaults.min_shards)?,
-        max_shards: args.get_usize("max", defaults.max_shards)?,
-        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
-        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
-        eval_interval: args.get_f64("interval", defaults.eval_interval)?,
-        burst_cv: args.get_f64("cv", defaults.burst_cv)?,
-        policy: parse_policy(args.get_or("policy", "server-only"))?,
-        b: args.get_f64("b", defaults.b)?,
-        n_requests: args.get_usize("requests", defaults.n_requests)?,
-        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
-        service,
-        device,
-    };
-    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
-    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
-    anyhow::ensure!(params.min_shards > 0, "--min must be at least 1");
-    anyhow::ensure!(
-        params.max_shards >= params.min_shards,
-        "--max must be at least --min"
-    );
-    anyhow::ensure!(params.burst_cv > 0.0, "--cv must be positive");
-    anyhow::ensure!(params.eval_interval > 0.0, "--interval must be positive");
-    let n_cells = params.n_cells();
-    println!(
-        "autoscale sweep: {} policies × {} rates × {} cold-starts → {n_cells} cells \
-         (static cells skip the cold axis), shards {}..{} × {} slots ({} balancer), \
-         {} requests × {} seeds per cell",
-        params.policies.len(),
-        params.rates.len(),
-        params.cold_cases.len(),
-        params.min_shards,
-        params.max_shards,
-        params.slots_per_shard,
-        params.balancer.label(),
-        params.n_requests,
-        params.n_seeds
-    );
-    let t0 = std::time::Instant::now();
-    let results = run_grid(&params);
-    println!("{}", render_grid(&results));
-    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
-    Ok(())
-}
-
-fn cmd_failover_sweep(args: &Args) -> anyhow::Result<()> {
-    use disco::experiments::failover_sweep::{
-        render_grid, run_grid, FailoverSweepParams, MigrationAxis,
-    };
-
-    fn parse_axis(s: &str) -> anyhow::Result<MigrationAxis> {
-        let hint = "off|legacy|shard-targeted";
-        MigrationAxis::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown migration axis '{s}' ({hint})"))
-    }
-
-    let defaults = FailoverSweepParams::default();
-    let axes = parse_list(args, "policies", defaults.axes, parse_axis)?;
-    let balancers = parse_list(args, "balancers", defaults.balancers, parse_balancer)?;
-    let outage_fracs = parse_list(args, "outage-at", defaults.outage_fracs, |f| {
-        f.parse::<f64>()
-            .map_err(|_| anyhow::anyhow!("--outage-at expects fractions, got '{f}'"))
-    })?;
-    anyhow::ensure!(
-        outage_fracs.iter().all(|f| (0.0..=1.0).contains(f)),
-        "--outage-at fractions must be in [0,1]"
-    );
-
-    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
-    let params = FailoverSweepParams {
-        axes,
-        balancers,
-        outage_fracs,
-        shards: args.get_usize("shards", defaults.shards)?,
-        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
-        outage_shard: args.get_usize("outage-shard", defaults.outage_shard)?,
-        rate_rps: args.get_f64("rate", defaults.rate_rps)?,
-        burst_cv: args.get_f64("cv", defaults.burst_cv)?,
-        policy: parse_policy(args.get_or("policy", "stoch-d"))?,
-        b: args.get_f64("b", defaults.b)?,
-        n_requests: args.get_usize("requests", defaults.n_requests)?,
-        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
-        service,
-        device,
-    };
-    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
-    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
-    anyhow::ensure!(params.shards > 0, "--shards must be at least 1");
-    anyhow::ensure!(
-        params.outage_shard < params.shards,
-        "--outage-shard must name a provisioned shard"
-    );
-    anyhow::ensure!(params.rate_rps > 0.0, "--rate must be positive");
-    anyhow::ensure!(params.burst_cv > 0.0, "--cv must be positive");
-    let n_cells = params.n_cells();
-    println!(
-        "failover sweep: {} migration axes × {} balancers × {} outage times = {n_cells} \
-         cells, {} shards × {} slots, shard {} dies, {} req/s, {} requests × {} seeds per cell",
-        params.axes.len(),
-        params.balancers.len(),
-        params.outage_fracs.len(),
-        params.shards,
-        params.slots_per_shard,
-        params.outage_shard,
-        params.rate_rps,
-        params.n_requests,
-        params.n_seeds
-    );
-    let t0 = std::time::Instant::now();
-    let results = run_grid(&params);
-    println!("{}", render_grid(&results));
-    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
-    Ok(())
-}
-
-fn cmd_batching_sweep(args: &Args) -> anyhow::Result<()> {
-    use disco::experiments::batching_sweep::{render_grid, run_grid, BatchingSweepParams};
-    use disco::sim::batching::BatchLatencyCurve;
-
-    fn parse_curve(s: &str) -> anyhow::Result<BatchLatencyCurve> {
-        BatchLatencyCurve::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("unknown curve '{s}' (flat|linear:ALPHA|knee:K:ALPHA)")
-        })
-    }
-
-    let defaults = BatchingSweepParams::default();
-    let budgets = parse_list(args, "budgets", defaults.budgets, |b| {
-        b.parse::<u32>()
-            .map_err(|_| anyhow::anyhow!("--budgets expects integers, got '{b}'"))
-    })?;
-    let rates = parse_rates(args, defaults.rates)?;
-    let curves = parse_list(args, "curves", defaults.curves, parse_curve)?;
-    anyhow::ensure!(budgets.iter().all(|&b| b > 0), "budgets must be at least 1");
-
-    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
-    let params = BatchingSweepParams {
-        budgets,
-        rates,
-        curves,
-        tick_interval: args.get_f64("tick", defaults.tick_interval)?,
-        // CLI sentinel: 0 (the default) means unbounded — distinct from
-        // the library's `normalized()`, which clamps a programmatic
-        // `Some(0)` up to `Some(1)`.
-        max_batch: match args.get_usize("max-batch", 0)? {
-            0 => None,
-            m => Some(m),
-        },
-        shards: args.get_usize("shards", defaults.shards)?,
-        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
-        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
-        policy: parse_policy(args.get_or("policy", "server-only"))?,
-        b: args.get_f64("b", defaults.b)?,
-        n_requests: args.get_usize("requests", defaults.n_requests)?,
-        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
-        service,
-        device,
-    };
-    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
-    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
-    anyhow::ensure!(params.shards > 0, "--shards must be at least 1");
-    anyhow::ensure!(params.tick_interval > 0.0, "--tick must be positive");
-    let n_cells = params.n_cells();
-    println!(
-        "batching sweep: {} budgets × {} rates × {} curves = {n_cells} cells, \
-         {} shard(s), tick {}s, slot baseline {} slots/shard ({} balancer), \
-         {} requests × {} seeds per cell",
-        params.budgets.len(),
-        params.rates.len(),
-        params.curves.len(),
-        params.shards,
-        params.tick_interval,
-        params.slots_per_shard,
-        params.balancer.label(),
-        params.n_requests,
-        params.n_seeds
-    );
-    let t0 = std::time::Instant::now();
-    let results = run_grid(&params);
-    println!("{}", render_grid(&results));
-    println!("{} cells in {:.2}s (parallel)", n_cells, t0.elapsed().as_secs_f64());
-    Ok(())
-}
-
-fn cmd_zone_sweep(args: &Args) -> anyhow::Result<()> {
-    use disco::experiments::zone_sweep::{render_grid, run_grid, ZoneSweepParams};
-
-    let defaults = ZoneSweepParams::default();
-    let zone_counts = parse_list(args, "zones", defaults.zone_counts, |z| {
-        z.parse::<usize>()
-            .map_err(|_| anyhow::anyhow!("--zones expects integers, got '{z}'"))
-    })?;
-    let shards_per_zone = parse_list(args, "shards", defaults.shards_per_zone, |k| {
-        k.parse::<usize>()
-            .map_err(|_| anyhow::anyhow!("--shards expects integers, got '{k}'"))
-    })?;
-    let rates = parse_rates(args, defaults.rates)?;
-    anyhow::ensure!(
-        zone_counts.iter().all(|&z| z > 0),
-        "zone counts must be at least 1"
-    );
-    anyhow::ensure!(
-        shards_per_zone.iter().all(|&k| k > 0),
-        "shard counts must be at least 1"
-    );
-
-    let (service, device) = parse_profiles(args, "Xiaomi14/Q-0.5B")?;
-    let params = ZoneSweepParams {
-        zone_counts,
-        shards_per_zone,
-        rates,
-        slots_per_shard: args.get_usize("slots", defaults.slots_per_shard)?,
-        balancer: parse_balancer(args.get_or("balancer", defaults.balancer.label()))?,
-        policy: parse_policy(args.get_or("policy", "server-only"))?,
-        b: args.get_f64("b", defaults.b)?,
-        n_requests: args.get_usize("requests", defaults.n_requests)?,
-        n_seeds: args.get_u64("seeds", defaults.n_seeds)?,
-        service,
-        device,
-    };
-    anyhow::ensure!(params.n_requests > 0, "--requests must be at least 1");
-    anyhow::ensure!(params.n_seeds > 0, "--seeds must be at least 1");
-    let n_cells = params.zone_counts.len() * params.shards_per_zone.len() * params.rates.len();
-    println!(
-        "zone sweep: {} zone counts × {} shard counts × {} rates = {n_cells} cells, \
-         {} slots/shard ({} balancer), {} requests × {} seeds per cell \
-         ({} worker threads within each cell)",
-        params.zone_counts.len(),
-        params.shards_per_zone.len(),
-        params.rates.len(),
-        params.slots_per_shard,
-        params.balancer.label(),
-        params.n_requests,
-        params.n_seeds,
-        disco::util::par::worker_threads()
-    );
-    let t0 = std::time::Instant::now();
-    let results = run_grid(&params);
-    println!("{}", render_grid(&results));
-    println!(
-        "{} cells in {:.2}s (zones parallel within each cell)",
-        n_cells,
-        t0.elapsed().as_secs_f64()
-    );
-    Ok(())
-}
-
 /// Fixed-seed fleet benchmarks: runs the slot-legacy sharded workload
 /// (timing-wheel default AND binary-heap reference backends), a
-/// continuous-batching workload, a wide many-shard session workload,
-/// and a zone-partitioned wide workload `--reps` times each; reports
-/// the best wall time as events/sec (and sessions/sec) plus TTFT
-/// percentiles, writes the JSON artifact CI uploads, and — with
-/// `--baseline` — fails when a cell's gated metric regresses more than
-/// `--max-regression` below the committed baseline (`events_per_sec`
-/// for the slot loop, `heap_events_per_sec` for the reference backend,
-/// `batching_events_per_sec` for the continuous hot path,
+/// continuous-batching workload, a paged-KV workload, a wide many-shard
+/// session workload, and a zone-partitioned wide workload `--reps`
+/// times each; reports the best wall time as events/sec (and
+/// sessions/sec) plus TTFT percentiles, writes the JSON artifact CI
+/// uploads, and — with `--baseline` — fails when a cell's gated metric
+/// regresses more than `--max-regression` below the committed baseline
+/// (`events_per_sec` for the slot loop, `heap_events_per_sec` for the
+/// reference backend, `batching_events_per_sec` for the continuous hot
+/// path, `kv_events_per_sec` for the paged-KV hot path,
 /// `sessions_per_sec` for the wide fleet, `zoned_sessions_per_sec` for
 /// the zoned cell; keys missing from the baseline skip their gate —
 /// except the original `events_per_sec`). Each cell declares which
@@ -638,6 +304,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use disco::sim::batching::{BatchingMode, ContinuousBatchConfig};
     use disco::sim::event_queue::EventQueueKind;
     use disco::sim::fleet::{FleetConfig, FleetOutcome};
+    use disco::sim::kv::KvConfig;
     use disco::sim::zones::ZonedFleetConfig;
     use disco::stats::describe::Summary;
     use disco::util::json::Json;
@@ -727,6 +394,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // admission ticks + batch-priced decode on the same topology.
     let cont_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
         .with_batching(BatchingMode::Continuous(ContinuousBatchConfig::default()));
+    // The paged-KV cell: page accounting + prefix-cache lookups +
+    // memory-pressure checks on every tick and release, same topology.
+    let kv_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
+        .with_kv(KvConfig::default());
     // The sessions cell: a wide fleet (K = 32) under the incrementally
     // indexed JSQ balancer — the topology where the old O(K)-per-arrival
     // rescan hurt most; gated on sessions/sec rather than events/sec.
@@ -756,6 +427,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             &|| scenario.run_fleet(&trace, &policy, &cont_fleet),
         ),
         run_cell(
+            "paged-kv",
+            "kv_events_per_sec",
+            GateMetric::EventsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &kv_fleet),
+        ),
+        run_cell(
             "wide-sessions",
             "sessions_per_sec",
             GateMetric::SessionsPerSec,
@@ -782,11 +459,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("p99_ttft_s", Json::num(cells[0].p99)),
         ("heap_events_per_sec", Json::num(cells[1].eps)),
         ("batching_events_per_sec", Json::num(cells[2].eps)),
+        ("kv_events_per_sec", Json::num(cells[3].eps)),
         // The wide-fleet sessions-simulated-per-second headline cell.
-        ("sessions_per_sec", Json::num(cells[3].sps)),
+        ("sessions_per_sec", Json::num(cells[4].sps)),
         // The zone-partitioned wide cell (Z × K = 4 × 32): aggregate
         // sessions/sec when one bench cell fans across every core.
-        ("zoned_sessions_per_sec", Json::num(cells[4].sps)),
+        ("zoned_sessions_per_sec", Json::num(cells[5].sps)),
         // Wheel speedup over the heap reference on the identical
         // workload (>1 means the new default backend is faster).
         (

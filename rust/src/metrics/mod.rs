@@ -133,6 +133,11 @@ pub struct ShardLoad {
     /// budget and an empty queue offered no usable capacity and accrue
     /// none; 0 under slots). The token-budget utilization denominator.
     pub prompt_token_capacity: u64,
+    /// High-water mark of KV pages in use on the shard (paged-KV
+    /// batching; 0 otherwise).
+    pub kv_pages_peak: usize,
+    /// The shard's total KV page pool (paged-KV batching; 0 otherwise).
+    pub kv_pages_total: usize,
 }
 
 /// Kind of shard-autoscaling transition.
@@ -256,6 +261,19 @@ pub struct LoadReport {
     /// Batch-size timeline across shards (continuous batching only;
     /// empty for slot-legacy runs), in event order.
     pub batch_timeline: Vec<BatchSample>,
+    /// Prefix-cache lookups that found a cached prefix (paged-KV
+    /// batching with prefix caching on; 0 otherwise).
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups performed (one per server-bound prefill
+    /// admission attempt under paged KV; 0 otherwise).
+    pub prefix_lookups: u64,
+    /// Streams evicted mid-decode by KV memory pressure and re-prefilled
+    /// in place (paged-KV batching; 0 otherwise).
+    pub kv_preemptions: usize,
+    /// In-flight streams whose KV was lost to a hard shard outage,
+    /// forcing a mid-decode re-prefill at the migration target (paged-KV
+    /// batching; 0 otherwise).
+    pub kv_forced_reprefills: usize,
 }
 
 impl LoadReport {
@@ -355,6 +373,16 @@ impl LoadReport {
         }
         let admitted: u64 = self.shards.iter().map(|s| s.prompt_tokens_admitted).sum();
         Some(admitted as f64 / capacity as f64)
+    }
+
+    /// Prefix-cache hit rate in [0,1] under paged-KV batching (`None`
+    /// when no lookups were performed — slot/continuous runs, and paged
+    /// runs with prefix caching disabled, count zero lookups).
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        if self.prefix_lookups == 0 {
+            return None;
+        }
+        Some(self.prefix_hits as f64 / self.prefix_lookups as f64)
     }
 
     /// Largest batch size any shard reached (peak concurrent streams;
@@ -592,6 +620,10 @@ impl LoadReport {
             outage_requeues: sum_u(|r| r.outage_requeues),
             release_underflows: sum_u(|r| r.release_underflows),
             batch_timeline,
+            prefix_hits: parts.iter().map(|(r, _)| r.prefix_hits).sum(),
+            prefix_lookups: parts.iter().map(|(r, _)| r.prefix_lookups).sum(),
+            kv_preemptions: sum_u(|r| r.kv_preemptions),
+            kv_forced_reprefills: sum_u(|r| r.kv_forced_reprefills),
         }
     }
 }
@@ -675,6 +707,8 @@ mod tests {
             peak_in_use: 0,
             prompt_tokens_admitted: 0,
             prompt_token_capacity: 0,
+            kv_pages_peak: 0,
+            kv_pages_total: 0,
         }
     }
 
@@ -701,6 +735,10 @@ mod tests {
             outage_requeues: 0,
             release_underflows: 0,
             batch_timeline: Vec::new(),
+            prefix_hits: 0,
+            prefix_lookups: 0,
+            kv_preemptions: 0,
+            kv_forced_reprefills: 0,
         }
     }
 
@@ -855,6 +893,10 @@ mod tests {
         a.migration_fallbacks = 1;
         a.outage_requeues = 3;
         a.release_underflows = 1;
+        a.prefix_hits = 7;
+        a.prefix_lookups = 10;
+        a.kv_preemptions = 2;
+        a.kv_forced_reprefills = 1;
         a.shard_timeline = vec![ShardCountSample {
             time: 0.0,
             warm: 1,
@@ -868,6 +910,10 @@ mod tests {
         let mut b = load(8.0, 6.0, vec![shard(2.0, 2, Some(2)), shard(4.0, 5, Some(2))]);
         b.device_busy_seconds = 0.5;
         b.events_processed = 50;
+        b.prefix_hits = 3;
+        b.prefix_lookups = 10;
+        b.kv_preemptions = 1;
+        b.kv_forced_reprefills = 2;
         b.shard_timeline = vec![
             ShardCountSample {
                 time: 0.0,
@@ -902,6 +948,10 @@ mod tests {
         assert_eq!(m.migration_fallbacks, 1);
         assert_eq!(m.outage_requeues, 3);
         assert_eq!(m.release_underflows, 1);
+        assert_eq!((m.prefix_hits, m.prefix_lookups), (10, 20));
+        assert_eq!(m.prefix_hit_rate(), Some(0.5));
+        assert_eq!(m.kv_preemptions, 3);
+        assert_eq!(m.kv_forced_reprefills, 3);
         // Horizon covers the latest zone end: max(0+10, 3+8) = 11.
         assert_eq!(m.horizon, 11.0);
         // Breakdown concatenates in zone order; per-shard fields intact.

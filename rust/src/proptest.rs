@@ -179,7 +179,9 @@ mod tests {
 
     /// The §4.3 invariant at FLEET scope, under shard targeting and
     /// mid-run shard failure: across randomized (K, balancer,
-    /// outage-time, migration-config, **batching-mode**) inputs, every
+    /// outage-time, migration-config, **batching-mode**, **KV axis** —
+    /// page-pool pressure, memory-pressure preemption, KV-lossy outage
+    /// failover under small paged pools) inputs, every
     /// delivered stream — migrated or not, re-queued off a dead shard
     /// or not, decoding in a batch whose size changes mid-decode as
     /// neighbors join and leave — keeps its token accounting intact: no
@@ -211,11 +213,14 @@ mod tests {
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::event_queue::EventQueueKind;
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
+        use crate::sim::kv::KvConfig;
         use crate::trace::generator::{Arrival, WorkloadSpec};
 
         let mut migrated_total = 0usize;
         let mut requeued_total = 0usize;
         let mut continuous_total = 0usize;
+        let mut paged_total = 0usize;
+        let mut kv_activity_total = 0usize;
         let mut parity_total = 0usize;
         let mut multizone_total = 0usize;
         check(
@@ -235,16 +240,22 @@ mod tests {
                 let slots = 1 + r.below(2) as usize;
                 let bscale = r.f64() * 1.5;
                 let fault = r.chance(0.3);
-                // Half the storms run under continuous batching:
-                // (budget, curve-selector) — budgets down to 16
-                // tokens/tick force real token queueing, and the curve
-                // mix includes steep slowdowns so batch sizes shifting
+                // Batching-mode axis (mode, budget, pages, curve, cache):
+                // a third of the storms run slot-legacy, a third
+                // continuous (budgets down to 16 tokens/tick force real
+                // token queueing), a third paged KV with page pools
+                // small enough (24..72 pages at 16-token blocks) that
+                // decode growth trips memory-pressure preemption and an
+                // outage hits streams with in-flight KV. The curve mix
+                // includes steep slowdowns so batch sizes shifting
                 // mid-decode stress the §4.3 buffer sizing.
-                let batching = if r.chance(0.5) {
-                    Some((16 + r.below(241) as u32, r.below(3) as u8))
-                } else {
-                    None
-                };
+                let batching = (
+                    r.below(3) as u8,
+                    16 + r.below(241) as u32,
+                    24 + r.below(49) as usize,
+                    r.below(3) as u8,
+                    r.chance(0.5),
+                );
                 // A third of the storms double as event-queue parity
                 // cases (wheel vs heap, byte-for-byte).
                 let heap_check = r.chance(1.0 / 3.0);
@@ -294,21 +305,36 @@ mod tests {
                 let mut fleet = FleetConfig::sharded(k, slots, balancer)
                     .with_migration_targeting(targeting)
                     .with_outage(frac * span, dead);
-                if let Some((budget, curve_sel)) = batching {
-                    let curve = match curve_sel {
-                        0 => BatchLatencyCurve::Flat,
-                        1 => BatchLatencyCurve::Linear { alpha: 0.3 },
-                        _ => BatchLatencyCurve::Knee { knee: 4, alpha: 0.5 },
-                    };
-                    fleet = fleet.with_batching(BatchingMode::Continuous(
-                        ContinuousBatchConfig {
-                            prefill_tokens_per_tick: budget,
+                let (mode, budget, pages, curve_sel, cache) = batching;
+                let curve = match curve_sel {
+                    0 => BatchLatencyCurve::Flat,
+                    1 => BatchLatencyCurve::Linear { alpha: 0.3 },
+                    _ => BatchLatencyCurve::Knee { knee: 4, alpha: 0.5 },
+                };
+                match mode {
+                    1 => {
+                        fleet = fleet.with_batching(BatchingMode::Continuous(
+                            ContinuousBatchConfig {
+                                prefill_tokens_per_tick: budget,
+                                tick_interval: 0.25,
+                                max_batch: None,
+                                curve,
+                            },
+                        ));
+                        continuous_total += 1;
+                    }
+                    2 => {
+                        fleet = fleet.with_kv(KvConfig {
+                            pages,
+                            block_tokens: 16,
+                            chunk_tokens: budget,
                             tick_interval: 0.25,
-                            max_batch: None,
+                            prefix_caching: cache,
                             curve,
-                        },
-                    ));
-                    continuous_total += 1;
+                        });
+                        paged_total += 1;
+                    }
+                    _ => {}
                 }
                 if fault {
                     fleet = fleet.with_shard_fault(
@@ -406,7 +432,7 @@ mod tests {
                     "{} pool release underflows (double release)",
                     out.load.release_underflows
                 );
-                if batching.is_some() {
+                if mode != 0 {
                     let util = out.load.token_budget_utilization();
                     crate::prop_assert!(
                         matches!(util, Some(u) if u >= 0.0 && u.is_finite()),
@@ -416,6 +442,31 @@ mod tests {
                     crate::prop_assert!(
                         out.load.batch_timeline.is_empty(),
                         "slot-legacy runs must record no batch timeline"
+                    );
+                }
+                // KV-axis invariants: paged telemetry is internally
+                // consistent, and no KV state leaks into slot/continuous
+                // runs (the subsystem is inert unless selected).
+                if mode == 2 {
+                    kv_activity_total +=
+                        out.load.kv_preemptions + out.load.kv_forced_reprefills;
+                    crate::prop_assert!(
+                        out.load.prefix_hits <= out.load.prefix_lookups,
+                        "prefix hits ({}) exceed lookups ({})",
+                        out.load.prefix_hits,
+                        out.load.prefix_lookups
+                    );
+                    crate::prop_assert!(
+                        out.load.shards.iter().all(|s| s.kv_pages_total > 0),
+                        "paged shards must report their page pool"
+                    );
+                } else {
+                    crate::prop_assert!(
+                        out.load.prefix_lookups == 0
+                            && out.load.kv_preemptions == 0
+                            && out.load.kv_forced_reprefills == 0
+                            && out.load.shards.iter().all(|s| s.kv_pages_total == 0),
+                        "KV telemetry must stay zero outside paged mode"
                     );
                 }
                 // Zone-partition leg: Z copies of the same storm fleet.
@@ -473,6 +524,11 @@ mod tests {
             continuous_total > 0,
             "property never exercised continuous batching"
         );
+        assert!(paged_total > 0, "property never exercised paged KV");
+        assert!(
+            kv_activity_total > 0,
+            "property never exercised KV preemption or forced re-prefill"
+        );
         assert!(
             parity_total > 0,
             "property never exercised the wheel/heap backend parity check"
@@ -496,6 +552,7 @@ mod tests {
         use crate::sim::batching::{BatchingMode, ContinuousBatchConfig};
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting};
+        use crate::sim::kv::KvConfig;
         use crate::trace::generator::{Arrival, WorkloadSpec};
 
         let sc = Scenario::new(
@@ -511,6 +568,10 @@ mod tests {
         let batchings = [
             BatchingMode::SlotLegacy,
             BatchingMode::Continuous(ContinuousBatchConfig::default()),
+            BatchingMode::PagedKv(KvConfig {
+                pages: 48,
+                ..KvConfig::default()
+            }),
         ];
         for k in [2usize, 4, 6] {
             let gap = 1.0 / (0.9 * k as f64);

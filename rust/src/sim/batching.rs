@@ -12,7 +12,7 @@
 //! admission, batch-occupancy decode slowdown) live in the
 //! [`crate::sim::fleet`] event loop and [`crate::sim::engine`].
 //!
-//! Two admission regimes, selected by [`BatchingMode`] on
+//! Three admission regimes, selected by [`BatchingMode`] on
 //! `FleetConfig::batching`:
 //!
 //! * [`BatchingMode::SlotLegacy`] (default) — the historical bounded
@@ -26,6 +26,12 @@
 //!   share the shard's batch, and each stream's inter-token gaps are
 //!   scaled by [`BatchLatencyCurve::slowdown`] evaluated at the batch
 //!   size the stream joined (see the approximation note below).
+//! * [`BatchingMode::PagedKv`] — admission is gated by the shard's
+//!   paged KV block pool ([`crate::sim::kv::KvConfig`]): prefills
+//!   allocate pages, decode grows page usage, memory pressure preempts
+//!   the lowest-priority stream, and prefix-cache hits skip the cached
+//!   fraction of prefill. The tick/batch-pricing machinery is shared
+//!   with `Continuous`; only the admission signal differs.
 //!
 //! # Approximation: join-time batch pricing
 //!
@@ -36,8 +42,10 @@
 //! and with it the §4.3 migration walk, delivery smoothing, and cost
 //! metering — intact, at the cost of underestimating slowdown during a
 //! ramp (and overestimating it during a drain). Iteration-level
-//! repricing is the seeded follow-on in ROADMAP.md, alongside chunked
-//! prefill and preemption.
+//! repricing is the seeded follow-on in ROADMAP.md; chunked prefill
+//! and preemption now live in the paged-KV mode (`sim/kv.rs`).
+
+use crate::sim::kv::KvConfig;
 
 /// Per-token decode latency as a function of the shard's batch size.
 ///
@@ -201,26 +209,65 @@ pub enum BatchingMode {
     /// Continuous batching: token-budget prefill admission + shared
     /// decode batch with a batch-size-dependent latency curve.
     Continuous(ContinuousBatchConfig),
+    /// Paged KV admission: prefills allocate KV block-pool pages,
+    /// decode grows page usage, pressure preempts, prefix-cache hits
+    /// skip prefill (`sim/kv.rs`).
+    PagedKv(KvConfig),
 }
 
 impl BatchingMode {
-    /// Whether this mode schedules tick events and token-gated pools.
+    /// Whether this mode is the continuous token-budget gate.
     pub fn is_continuous(&self) -> bool {
         matches!(self, BatchingMode::Continuous(_))
+    }
+
+    /// Whether this mode is the paged-KV gate.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, BatchingMode::PagedKv(_))
+    }
+
+    /// Whether this mode schedules tick events and gated (unbounded)
+    /// pools — everything except the legacy slot model.
+    pub fn batched(&self) -> bool {
+        !matches!(self, BatchingMode::SlotLegacy)
     }
 
     /// The continuous config, if any.
     pub fn continuous(&self) -> Option<&ContinuousBatchConfig> {
         match self {
             BatchingMode::Continuous(c) => Some(c),
-            BatchingMode::SlotLegacy => None,
+            _ => None,
+        }
+    }
+
+    /// The paged-KV config, if any.
+    pub fn paged(&self) -> Option<&KvConfig> {
+        match self {
+            BatchingMode::PagedKv(k) => Some(k),
+            _ => None,
         }
     }
 
     /// The scheduling-tick interval, when the mode schedules ticks
-    /// (`Continuous` only — `SlotLegacy` never ticks).
+    /// (`Continuous` and `PagedKv` — `SlotLegacy` never ticks).
     pub fn tick_interval(&self) -> Option<f64> {
-        self.continuous().map(|c| c.tick_interval)
+        match self {
+            BatchingMode::SlotLegacy => None,
+            BatchingMode::Continuous(c) => Some(c.tick_interval),
+            BatchingMode::PagedKv(k) => Some(k.tick_interval),
+        }
+    }
+
+    /// Sustained prefill-token admission rate of the mode's gate
+    /// (tokens/second) — the signal the autoscaler's backlog estimate
+    /// and the §4.3 re-prefill queue-delay estimate read. `None` for
+    /// the slot model, whose admission is not token-denominated.
+    pub fn admission_tokens_per_sec(&self) -> Option<f64> {
+        match self {
+            BatchingMode::SlotLegacy => None,
+            BatchingMode::Continuous(c) => Some(c.tokens_per_sec()),
+            BatchingMode::PagedKv(k) => Some(k.tokens_per_sec()),
+        }
     }
 
     /// Short label used in tables and CSVs.
@@ -228,14 +275,16 @@ impl BatchingMode {
         match self {
             BatchingMode::SlotLegacy => "slot-legacy",
             BatchingMode::Continuous(_) => "continuous",
+            BatchingMode::PagedKv(_) => "paged-kv",
         }
     }
 
-    /// Clamp the continuous tunables; the legacy mode has none.
+    /// Clamp the gated modes' tunables; the legacy mode has none.
     pub fn normalized(&self) -> BatchingMode {
         match self {
             BatchingMode::SlotLegacy => BatchingMode::SlotLegacy,
             BatchingMode::Continuous(c) => BatchingMode::Continuous(c.normalized()),
+            BatchingMode::PagedKv(k) => BatchingMode::PagedKv(k.normalized()),
         }
     }
 }
@@ -354,5 +403,16 @@ mod tests {
         assert_eq!(c.label(), "continuous");
         assert_eq!(BatchingMode::SlotLegacy.label(), "slot-legacy");
         assert_eq!(c.normalized(), c);
+        let p = BatchingMode::PagedKv(KvConfig::default());
+        assert!(p.is_paged() && !p.is_continuous());
+        assert!(p.batched() && c.batched() && !BatchingMode::SlotLegacy.batched());
+        assert_eq!(p.label(), "paged-kv");
+        assert_eq!(p.normalized(), p);
+        assert_eq!(p.tick_interval(), Some(0.25));
+        assert_eq!(BatchingMode::SlotLegacy.tick_interval(), None);
+        assert_eq!(BatchingMode::SlotLegacy.admission_tokens_per_sec(), None);
+        assert_eq!(c.admission_tokens_per_sec(), Some(512.0));
+        assert_eq!(p.admission_tokens_per_sec(), Some(1024.0));
+        assert!(p.paged().is_some() && c.paged().is_none());
     }
 }

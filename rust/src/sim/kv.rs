@@ -1,0 +1,453 @@
+//! Paged KV-cache memory model for a shard (the vLLM block-pool view).
+//!
+//! Continuous batching (PR 5) gates admission on an abstract
+//! prompt-token budget; the real constraint in vLLM-class servers is KV
+//! memory. This module models it directly: each shard owns a fixed pool
+//! of equal-sized KV blocks ("pages"). A prefill allocates
+//! `ceil(prompt / block_tokens)` pages up front; decode grows a
+//! stream's usage one token at a time (a new page every `block_tokens`
+//! emitted tokens). Admission blocks when free pages run out, oversized
+//! prompts chunk Sarathi-style across scheduling ticks (the chunk
+//! budget *accrues* while prompts wait instead of resetting), and under
+//! memory pressure the fleet loop preempts the lowest-priority running
+//! stream (evict-and-re-prefill; see `sim/fleet.rs`).
+//!
+//! Layered on top is a per-shard **prefix cache**: a sorted index of
+//! block-aligned prompt lengths this shard has already prefilled. A hit
+//! skips the cached fraction of prefill (shorter TTFT, fewer admission
+//! tokens); hit-rate is surfaced through `LoadReport`. Session traces
+//! (`trace/generator.rs`) share prompt-length distributions per user,
+//! which is what makes the index hit in practice.
+//!
+//! The gate itself is event-free and draws no randomness: the fleet
+//! loop calls [`KvGate::tick`]/[`KvGate::admits`]/[`KvGate::consume`]
+//! from its existing tick machinery, so `SlotLegacy` and `Continuous`
+//! runs are untouched by this module existing.
+
+use crate::sim::batching::BatchLatencyCurve;
+use std::collections::BTreeSet;
+
+/// Tunables of the paged KV admission and memory model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvConfig {
+    /// KV blocks (pages) in the shard's pool.
+    pub pages: usize,
+    /// Tokens of KV state one page holds.
+    pub block_tokens: u32,
+    /// Prefill tokens the shard may process per scheduling tick (the
+    /// Sarathi chunk size). Unlike the continuous-batching budget, this
+    /// budget accrues across non-idle ticks, so a prompt larger than
+    /// one chunk admits after enough ticks instead of jumping the gate.
+    pub chunk_tokens: u32,
+    /// Seconds between scheduling ticks (chunk accrual + page growth +
+    /// pressure checks).
+    pub tick_interval: f64,
+    /// Whether the per-shard prefix cache is consulted.
+    pub prefix_caching: bool,
+    /// Per-token decode latency vs batch size (same shape as
+    /// continuous batching — paged admission changes *who* is in the
+    /// batch, not how a batch decodes).
+    pub curve: BatchLatencyCurve,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            pages: 2048,
+            block_tokens: 16,
+            chunk_tokens: 256,
+            tick_interval: 0.25,
+            prefix_caching: true,
+            curve: BatchLatencyCurve::Knee {
+                knee: 8,
+                alpha: 0.05,
+            },
+        }
+    }
+}
+
+impl KvConfig {
+    /// Sustained prefill throughput of the chunked scheduler
+    /// (tokens/second) — the rate re-prefill delays are priced at.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.chunk_tokens as f64 / self.tick_interval
+    }
+
+    /// Clamp degenerate values (zero pages/blocks/chunks, non-positive
+    /// tick) so the event loop can never stall on an un-replenishable
+    /// budget or divide by a zero block size.
+    pub fn normalized(&self) -> KvConfig {
+        KvConfig {
+            pages: self.pages.max(1),
+            block_tokens: self.block_tokens.max(1),
+            chunk_tokens: self.chunk_tokens.max(1),
+            tick_interval: if self.tick_interval > 0.0 {
+                self.tick_interval
+            } else {
+                0.25
+            },
+            prefix_caching: self.prefix_caching,
+            curve: self.curve,
+        }
+    }
+
+    /// Short label used in tables, CSVs, and CLI flags:
+    /// `PAGES:BLOCK:CHUNK:cache|nocache`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}:{}:{}",
+            self.pages,
+            self.block_tokens,
+            self.chunk_tokens,
+            if self.prefix_caching { "cache" } else { "nocache" }
+        )
+    }
+
+    /// Parse a CLI spelling: `PAGES[:BLOCK[:CHUNK[:cache|nocache]]]`
+    /// (omitted fields take the defaults). Trailing fields are rejected
+    /// — a typo'd arity must error, not silently run a different pool.
+    pub fn parse(s: &str) -> Option<KvConfig> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let mut cfg = KvConfig::default();
+        cfg.pages = parts.next()?.trim().parse::<usize>().ok()?;
+        if let Some(p) = parts.next() {
+            cfg.block_tokens = p.parse::<u32>().ok()?;
+        }
+        if let Some(p) = parts.next() {
+            cfg.chunk_tokens = p.parse::<u32>().ok()?;
+        }
+        if let Some(p) = parts.next() {
+            cfg.prefix_caching = match p {
+                "cache" => true,
+                "nocache" => false,
+                _ => return None,
+            };
+        }
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(cfg)
+    }
+}
+
+impl std::fmt::Display for KvConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Per-shard paged-KV admission gate: page ledger + accruing chunk
+/// budget + prefix index. Owned by the shard's `Pool` in
+/// `sim/fleet.rs`; all timing decisions stay in the fleet event loop.
+#[derive(Debug)]
+pub struct KvGate {
+    cfg: KvConfig,
+    /// Pages currently allocated (prefills + decode growth). May exceed
+    /// `cfg.pages` transiently — decode growth allocates on demand and
+    /// the fleet loop resolves the pressure by preemption at the next
+    /// tick.
+    pages_used: usize,
+    peak_pages: usize,
+    /// Prefill chunk tokens available right now. Accrues one
+    /// `chunk_tokens` per non-idle tick (never resets), so an oversized
+    /// prompt waiting at the queue head accumulates budget across ticks
+    /// — observable Sarathi chunking without splitting the event.
+    budget_left: u64,
+    admitted_tokens: u64,
+    capacity_tokens: u64,
+    /// Block-aligned prompt lengths this shard has prefilled — the
+    /// prefix index. A new prompt's cached prefix is the largest
+    /// indexed length not exceeding its own block-aligned length.
+    index: BTreeSet<u32>,
+    hits: u64,
+    lookups: u64,
+}
+
+impl KvGate {
+    pub fn new(cfg: &KvConfig) -> KvGate {
+        let cfg = cfg.normalized();
+        KvGate {
+            cfg,
+            pages_used: 0,
+            peak_pages: 0,
+            budget_left: cfg.chunk_tokens as u64,
+            admitted_tokens: 0,
+            capacity_tokens: cfg.chunk_tokens as u64,
+            index: BTreeSet::new(),
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.cfg.pages
+    }
+
+    pub fn pages_used(&self) -> usize {
+        self.pages_used
+    }
+
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Pages a context of `tokens` tokens occupies, capped at the pool
+    /// size so a prompt larger than the entire pool can still admit
+    /// when the pool is empty (liveness: it simply owns every page).
+    pub fn pages_for(&self, tokens: u32) -> usize {
+        let b = self.cfg.block_tokens as u64;
+        let need = ((tokens as u64 + b - 1) / b) as usize;
+        need.min(self.cfg.pages)
+    }
+
+    /// Whether a prefill of `tokens` (uncached) tokens admits right
+    /// now: enough free pages for its prefill allocation AND enough
+    /// accrued chunk budget to process the prompt this tick.
+    pub fn admits(&self, tokens: u32) -> bool {
+        self.pages_used + self.pages_for(tokens) <= self.cfg.pages
+            && tokens as u64 <= self.budget_left
+    }
+
+    /// Consume an admission: charge the chunk budget and allocate the
+    /// prefill pages. Callers must have checked [`Self::admits`].
+    pub fn consume(&mut self, tokens: u32) {
+        self.admitted_tokens += tokens as u64;
+        self.budget_left = self.budget_left.saturating_sub(tokens as u64);
+        self.alloc(self.pages_for(tokens));
+    }
+
+    /// Allocate `pages` pages (decode growth / booked re-prefills).
+    pub fn alloc(&mut self, pages: usize) {
+        self.pages_used += pages;
+        if self.pages_used > self.peak_pages {
+            self.peak_pages = self.pages_used;
+        }
+    }
+
+    /// Return `pages` pages to the pool.
+    pub fn free(&mut self, pages: usize) {
+        self.pages_used = self.pages_used.saturating_sub(pages);
+    }
+
+    /// Charge re-prefill work (a preempted or failed-over stream's
+    /// recompute) against the chunk budget without counting it as an
+    /// admission — it delays new prefills, which is the real effect.
+    pub fn charge(&mut self, tokens: u64) {
+        self.budget_left = self.budget_left.saturating_sub(tokens);
+    }
+
+    /// Whether decode growth has pushed the ledger past the pool — the
+    /// fleet loop's preemption trigger.
+    pub fn over_capacity(&self) -> bool {
+        self.pages_used > self.cfg.pages
+    }
+
+    /// Accrue one tick's chunk budget. The caller skips idle ticks
+    /// (nothing queued): accruing while nothing waits would let a later
+    /// burst admit unboundedly in one tick.
+    pub fn tick(&mut self) {
+        self.budget_left += self.cfg.chunk_tokens as u64;
+        self.capacity_tokens += self.cfg.chunk_tokens as u64;
+    }
+
+    /// (admitted prefill tokens, chunk-budget capacity offered) — the
+    /// token-budget utilization numerator/denominator.
+    pub fn token_totals(&self) -> (u64, u64) {
+        (self.admitted_tokens, self.capacity_tokens)
+    }
+
+    /// Prefix-cache lookup for a prompt of `len` tokens: returns the
+    /// cached token count (0 = miss). The cached prefix is the longest
+    /// block-aligned previously-prefilled length not exceeding this
+    /// prompt's block-aligned length, clamped to `len − 1` so at least
+    /// one token always prefills (TTFT stays positive).
+    pub fn prefix_lookup(&mut self, len: u32) -> u32 {
+        if !self.cfg.prefix_caching || len == 0 {
+            return 0;
+        }
+        self.lookups += 1;
+        let aligned = len - len % self.cfg.block_tokens;
+        let cached = self
+            .index
+            .range(..=aligned)
+            .next_back()
+            .copied()
+            .unwrap_or(0)
+            .min(len.saturating_sub(1));
+        if cached > 0 {
+            self.hits += 1;
+        }
+        cached
+    }
+
+    /// Record a prompt of `len` tokens as prefilled on this shard.
+    pub fn prefix_insert(&mut self, len: u32) {
+        if !self.cfg.prefix_caching {
+            return;
+        }
+        let aligned = len - len % self.cfg.block_tokens;
+        if aligned > 0 {
+            self.index.insert(aligned);
+        }
+    }
+
+    /// (prefix-cache hits, lookups) since the gate was created.
+    pub fn prefix_stats(&self) -> (u64, u64) {
+        (self.hits, self.lookups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane_and_normalization_clamps() {
+        let cfg = KvConfig::default();
+        assert_eq!(cfg.normalized(), cfg, "sane configs are untouched");
+        assert!((cfg.tokens_per_sec() - 1024.0).abs() < 1e-9);
+        let bad = KvConfig {
+            pages: 0,
+            block_tokens: 0,
+            chunk_tokens: 0,
+            tick_interval: 0.0,
+            ..KvConfig::default()
+        }
+        .normalized();
+        assert_eq!(bad.pages, 1);
+        assert_eq!(bad.block_tokens, 1);
+        assert_eq!(bad.chunk_tokens, 1);
+        assert!(bad.tick_interval > 0.0);
+    }
+
+    #[test]
+    fn config_parse_roundtrips_and_rejects_trailing_fields() {
+        let cfg = KvConfig::default();
+        assert_eq!(KvConfig::parse(&cfg.label()), Some(cfg));
+        let nc = KvConfig {
+            prefix_caching: false,
+            ..KvConfig::default()
+        };
+        assert_eq!(KvConfig::parse(&nc.label()), Some(nc));
+        // Omitted fields take the defaults.
+        assert_eq!(
+            KvConfig::parse("512"),
+            Some(KvConfig {
+                pages: 512,
+                ..KvConfig::default()
+            })
+        );
+        assert_eq!(
+            KvConfig::parse("512:32:128"),
+            Some(KvConfig {
+                pages: 512,
+                block_tokens: 32,
+                chunk_tokens: 128,
+                ..KvConfig::default()
+            })
+        );
+        assert!(KvConfig::parse("").is_none());
+        assert!(KvConfig::parse("abc").is_none());
+        assert!(KvConfig::parse("512:xyz").is_none());
+        assert!(KvConfig::parse("512:16:256:maybe").is_none());
+        // Trailing fields are arity errors, not silently dropped.
+        assert!(KvConfig::parse("512:16:256:cache:9").is_none());
+    }
+
+    fn gate(pages: usize, block: u32, chunk: u32) -> KvGate {
+        KvGate::new(&KvConfig {
+            pages,
+            block_tokens: block,
+            chunk_tokens: chunk,
+            ..KvConfig::default()
+        })
+    }
+
+    #[test]
+    fn page_accounting_allocates_ceil_and_tracks_peak() {
+        let mut g = gate(10, 16, 1024);
+        assert_eq!(g.pages_for(1), 1);
+        assert_eq!(g.pages_for(16), 1);
+        assert_eq!(g.pages_for(17), 2);
+        // A prompt larger than the whole pool clamps to the pool: it
+        // can admit alone instead of deadlocking.
+        assert_eq!(g.pages_for(1000), 10);
+        g.consume(33); // 3 pages
+        assert_eq!(g.pages_used(), 3);
+        g.alloc(4);
+        assert_eq!(g.pages_used(), 7);
+        assert_eq!(g.peak_pages(), 7);
+        g.free(5);
+        assert_eq!(g.pages_used(), 2);
+        assert_eq!(g.peak_pages(), 7, "peak is a high-water mark");
+        assert!(!g.over_capacity());
+        g.alloc(9);
+        assert!(g.over_capacity());
+    }
+
+    #[test]
+    fn admission_blocks_when_free_pages_run_out() {
+        let mut g = gate(4, 16, 4096);
+        assert!(g.admits(48)); // 3 pages
+        g.consume(48);
+        assert!(!g.admits(32), "2 pages needed, 1 free");
+        assert!(g.admits(16), "1 page still fits");
+        g.free(3);
+        assert!(g.admits(48), "freed pages re-admit");
+    }
+
+    #[test]
+    fn chunk_budget_accrues_across_ticks_for_oversized_prompts() {
+        // Chunk budget 100/tick; a 250-token prompt is bigger than any
+        // single chunk: it must wait until enough budget accrues
+        // (Sarathi chunked prefill across ticks), not jump the gate.
+        let mut g = gate(1000, 16, 100);
+        assert!(!g.admits(250), "initial allotment is one chunk");
+        g.tick();
+        assert!(!g.admits(250), "two chunks still short");
+        g.tick();
+        assert!(g.admits(250), "three chunks cover the prompt");
+        g.consume(250);
+        assert_eq!(g.token_totals(), (250, 300));
+        // Leftover budget (50) still admits a small prompt.
+        assert!(g.admits(50));
+        assert!(!g.admits(51));
+        // Re-prefill charges eat budget without counting as admissions.
+        g.charge(40);
+        assert!(!g.admits(50));
+        assert!(g.admits(10));
+        assert_eq!(g.token_totals(), (250, 300));
+    }
+
+    #[test]
+    fn prefix_index_hits_block_aligned_prefixes() {
+        let mut g = gate(1000, 16, 4096);
+        assert_eq!(g.prefix_lookup(100), 0, "cold index misses");
+        g.prefix_insert(100); // indexes floor(100/16)*16 = 96
+        assert_eq!(g.prefix_lookup(100), 96);
+        assert_eq!(g.prefix_lookup(200), 96, "longest prefix ≤ own length");
+        assert_eq!(g.prefix_lookup(90), 0, "shorter prompts miss (80 < 96)");
+        g.prefix_insert(64);
+        assert_eq!(g.prefix_lookup(90), 64);
+        // A fully-covered prompt still prefills at least one token.
+        assert_eq!(g.prefix_lookup(96), 95);
+        let (hits, lookups) = g.prefix_stats();
+        assert_eq!((hits, lookups), (4, 6));
+    }
+
+    #[test]
+    fn prefix_cache_disabled_never_hits_or_counts() {
+        let mut g = KvGate::new(&KvConfig {
+            prefix_caching: false,
+            ..KvConfig::default()
+        });
+        g.prefix_insert(100);
+        assert_eq!(g.prefix_lookup(100), 0);
+        assert_eq!(g.prefix_stats(), (0, 0));
+    }
+}

@@ -67,6 +67,19 @@
 //!   latency scaled by a pluggable [`batching::BatchLatencyCurve`]. The
 //!   default [`batching::BatchingMode::SlotLegacy`] is byte-identical
 //!   to the historical slot fleet.
+//! * `FleetConfig::with_kv(KvConfig)` — paged KV admission ([`kv`]):
+//!   each shard owns a fixed pool of KV blocks; prefills allocate
+//!   pages, decode grows usage, memory pressure preempts the
+//!   lowest-priority stream (evict-and-re-prefill), prefix-cache hits
+//!   skip the cached fraction of prefill, and a hard outage loses
+//!   in-flight KV, forcing mid-decode re-prefill at the migration
+//!   target.
+//! * Grouped config surface: the flat builder chain is organized into
+//!   [`fleet::ServerSpec`] (shards, rtts, slots, batching/kv),
+//!   [`fleet::ControlSpec`] (balancer, autoscaler, migration targeting,
+//!   event queue), and [`fleet::FaultPlan`] (faults + outages) —
+//!   `with_server` / `with_control` / `with_faults` — with the old
+//!   per-field builders kept as thin delegating shims.
 //! * `FleetConfig::with_migration_targeting(MigrationTargeting::ShardTargeted)`
 //!   — §4.3 server-bound re-prefills pick a least-work admitting shard
 //!   ([`balancer::pick_reprefill_target`]) and occupy its slot pool for
@@ -95,6 +108,7 @@ pub mod delivery;
 pub mod engine;
 pub mod event_queue;
 pub mod fleet;
+pub mod kv;
 pub mod zones;
 
 pub use autoscaler::{AutoscaleConfig, Autoscaler, AutoscalerKind, ColdStartSpec};
@@ -102,5 +116,9 @@ pub use balancer::{Balancer, BalancerKind, ShardView};
 pub use batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 pub use engine::{Scenario, SimConfig};
 pub use event_queue::{EventQueue, EventQueueKind};
-pub use fleet::{FleetConfig, FleetOutcome, MigrationTargeting, ShardFault, ShardOutage};
+pub use fleet::{
+    ControlSpec, FaultPlan, FleetConfig, FleetOutcome, MigrationTargeting, ServerSpec,
+    ShardFault, ShardOutage,
+};
+pub use kv::{KvConfig, KvGate};
 pub use zones::{ZoneConfig, ZonedFleetConfig, ZonedOutcome};

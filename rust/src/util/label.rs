@@ -1,0 +1,211 @@
+//! One label-parsing convention for every CLI-facing enum.
+//!
+//! Each configurable kind in the simulator (`BalancerKind`,
+//! `AutoscalerKind`, `BatchLatencyCurve`, `EventQueueKind`, `KvConfig`)
+//! historically grew its own `parse()` with its own failure behavior.
+//! [`ParseLabel`] pins the shared contract in one place:
+//!
+//! * parsing is case-insensitive on the head keyword;
+//! * **trailing fields are rejected** — a typo'd arity must error, not
+//!   silently run a different configuration (the `knee:4:0.05:9`
+//!   regression);
+//! * failures surface through [`ParseLabel::from_label`] with a uniform
+//!   message that names the label family and lists the valid spellings,
+//!   so every `--balancer`/`--autoscaler`/`--curve`/`--queue`/`--kv`
+//!   flag errors the same way.
+//!
+//! The per-type `parse()` methods remain the implementation (and stay
+//! callable directly); this trait is the convention layer the CLI goes
+//! through.
+
+use crate::sim::autoscaler::AutoscalerKind;
+use crate::sim::balancer::BalancerKind;
+use crate::sim::batching::BatchLatencyCurve;
+use crate::sim::event_queue::EventQueueKind;
+use crate::sim::kv::KvConfig;
+
+/// Uniform label parsing for CLI-facing enums.
+pub trait ParseLabel: Sized {
+    /// Human name of the label family ("balancer", "curve", ...), used
+    /// in error messages.
+    const WHAT: &'static str;
+
+    /// Compact list of valid spellings, used in error messages.
+    const VALID: &'static str;
+
+    /// Parse one spelling. `None` on an unknown keyword, a malformed
+    /// field, or a trailing field.
+    fn parse_label(s: &str) -> Option<Self>;
+
+    /// [`ParseLabel::parse_label`] with the uniform error message:
+    /// `unknown {WHAT} '{s}' (valid: {VALID})`.
+    fn from_label(s: &str) -> anyhow::Result<Self> {
+        Self::parse_label(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown {} '{}' (valid: {})", Self::WHAT, s, Self::VALID)
+        })
+    }
+}
+
+impl ParseLabel for BalancerKind {
+    const WHAT: &'static str = "balancer";
+    const VALID: &'static str = "rr, jsq, p2c, least-work (plus long-form aliases)";
+    fn parse_label(s: &str) -> Option<Self> {
+        BalancerKind::parse(s)
+    }
+}
+
+impl ParseLabel for AutoscalerKind {
+    const WHAT: &'static str = "autoscaler";
+    const VALID: &'static str = "none, reactive, ttft-target (plus aliases)";
+    fn parse_label(s: &str) -> Option<Self> {
+        AutoscalerKind::parse(s)
+    }
+}
+
+impl ParseLabel for BatchLatencyCurve {
+    const WHAT: &'static str = "batch latency curve";
+    const VALID: &'static str = "flat, linear[:ALPHA], knee[:K[:ALPHA]]";
+    fn parse_label(s: &str) -> Option<Self> {
+        BatchLatencyCurve::parse(s)
+    }
+}
+
+impl ParseLabel for EventQueueKind {
+    const WHAT: &'static str = "event queue";
+    const VALID: &'static str = "wheel, heap (plus aliases)";
+    fn parse_label(s: &str) -> Option<Self> {
+        EventQueueKind::parse(s)
+    }
+}
+
+impl ParseLabel for KvConfig {
+    const WHAT: &'static str = "kv config";
+    const VALID: &'static str = "PAGES[:BLOCK[:CHUNK[:cache|nocache]]]";
+    fn parse_label(s: &str) -> Option<Self> {
+        KvConfig::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every canonical label round-trips through the trait, and the
+    /// documented aliases resolve to the same variant.
+    #[test]
+    fn balancer_labels_round_trip() {
+        for kind in BalancerKind::all() {
+            assert_eq!(BalancerKind::parse_label(kind.label()), Some(kind));
+        }
+        for (alias, want) in [
+            ("round-robin", BalancerKind::RoundRobin),
+            ("roundrobin", BalancerKind::RoundRobin),
+            ("join-shortest-queue", BalancerKind::JoinShortestQueue),
+            ("shortest-queue", BalancerKind::JoinShortestQueue),
+            ("power-of-two", BalancerKind::PowerOfTwoChoices),
+            ("power-of-two-choices", BalancerKind::PowerOfTwoChoices),
+            ("lw", BalancerKind::LeastWork),
+            ("leastwork", BalancerKind::LeastWork),
+            ("RR", BalancerKind::RoundRobin),
+        ] {
+            assert_eq!(BalancerKind::parse_label(alias), Some(want), "{alias}");
+        }
+    }
+
+    #[test]
+    fn autoscaler_labels_round_trip() {
+        for (alias, want) in [
+            ("none", "none"),
+            ("fixed", "none"),
+            ("static", "none"),
+            ("reactive", "reactive"),
+            ("queue", "reactive"),
+            ("ttft", "ttft-target"),
+            ("ttft-target", "ttft-target"),
+            ("deadline", "ttft-target"),
+        ] {
+            let got = AutoscalerKind::parse_label(alias).unwrap_or_else(|| {
+                panic!("alias {alias} must parse");
+            });
+            assert_eq!(got.label(), want, "{alias}");
+        }
+    }
+
+    #[test]
+    fn event_queue_labels_round_trip() {
+        for kind in EventQueueKind::all() {
+            assert_eq!(EventQueueKind::parse_label(kind.label()), Some(kind));
+        }
+        assert_eq!(
+            EventQueueKind::parse_label("timing-wheel"),
+            Some(EventQueueKind::Wheel)
+        );
+        assert_eq!(
+            EventQueueKind::parse_label("binary-heap"),
+            Some(EventQueueKind::Heap)
+        );
+    }
+
+    #[test]
+    fn curve_labels_round_trip() {
+        for curve in [
+            BatchLatencyCurve::Flat,
+            BatchLatencyCurve::Linear { alpha: 0.3 },
+            BatchLatencyCurve::Knee { knee: 4, alpha: 0.5 },
+        ] {
+            assert_eq!(BatchLatencyCurve::parse_label(&curve.label()), Some(curve));
+        }
+        // Bare spellings take the documented defaults.
+        assert_eq!(
+            BatchLatencyCurve::parse_label("linear"),
+            Some(BatchLatencyCurve::Linear { alpha: 0.05 })
+        );
+        assert_eq!(
+            BatchLatencyCurve::parse_label("knee"),
+            Some(BatchLatencyCurve::Knee { knee: 8, alpha: 0.05 })
+        );
+    }
+
+    #[test]
+    fn kv_config_labels_round_trip() {
+        let full = KvConfig {
+            pages: 4096,
+            block_tokens: 32,
+            chunk_tokens: 128,
+            prefix_caching: false,
+            ..KvConfig::default()
+        };
+        assert_eq!(KvConfig::parse_label(&full.label()), Some(full));
+        // Short spellings fill the tail with defaults.
+        let short = KvConfig::parse_label("1024").unwrap();
+        assert_eq!(short.pages, 1024);
+        assert_eq!(short.block_tokens, KvConfig::default().block_tokens);
+        assert!(short.prefix_caching);
+        let mid = KvConfig::parse_label("1024:8:64").unwrap();
+        assert_eq!((mid.pages, mid.block_tokens, mid.chunk_tokens), (1024, 8, 64));
+    }
+
+    /// The PR-5 regression class: a trailing field must reject across
+    /// the whole convention, not silently run a different config.
+    #[test]
+    fn trailing_fields_reject_everywhere() {
+        assert_eq!(BatchLatencyCurve::parse_label("knee:4:0.05:9"), None);
+        assert_eq!(BatchLatencyCurve::parse_label("linear:0.05:9"), None);
+        assert_eq!(BatchLatencyCurve::parse_label("flat:1"), None);
+        assert_eq!(KvConfig::parse_label("4096:16:256:cache:x"), None);
+        assert_eq!(BalancerKind::parse_label("rr:extra"), None);
+        assert_eq!(AutoscalerKind::parse_label("reactive:fast"), None);
+        assert_eq!(EventQueueKind::parse_label("wheel:extra"), None);
+    }
+
+    #[test]
+    fn unknown_labels_error_uniformly() {
+        let err = BalancerKind::from_label("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown balancer 'bogus'"), "{err}");
+        assert!(err.contains("valid: rr"), "{err}");
+        let err = KvConfig::from_label("four-thousand").unwrap_err().to_string();
+        assert!(err.contains("unknown kv config"), "{err}");
+        assert!(err.contains("PAGES"), "{err}");
+        assert!(BatchLatencyCurve::from_label("flat").is_ok());
+    }
+}

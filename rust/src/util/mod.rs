@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod label;
 pub mod logging;
 pub mod par;
 pub mod rng;

@@ -22,7 +22,7 @@ use disco::sim::balancer::BalancerKind;
 use disco::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::sim::event_queue::EventQueueKind;
-use disco::sim::fleet::{FleetConfig, MigrationTargeting};
+use disco::sim::fleet::{ControlSpec, FaultPlan, FleetConfig, MigrationTargeting, ServerSpec};
 use disco::sim::zones::ZonedFleetConfig;
 use disco::trace::generator::{Arrival, WorkloadSpec};
 use disco::trace::Trace;
@@ -1031,6 +1031,115 @@ fn wheel_and_heap_event_queues_byte_identical_across_parity_matrix() {
                 // The default spelling is the wheel.
                 let d = scenario.run_fleet(&trace, &policy, &base);
                 assert_eq!(d.records, w.records, "default backend must be the wheel");
+            }
+        }
+    }
+}
+
+/// PR-8 inertness matrix: the paged-KV subsystem and the grouped-config
+/// regrouping (`ServerSpec` / `ControlSpec` / `FaultPlan`) leave every
+/// non-paged run byte-identical. For each balancer × autoscaler ×
+/// {`SlotLegacy`, `Continuous::default`} × event-queue backend, a config
+/// assembled through the historical flat builders and the same config
+/// assembled through the grouped `with_server`/`with_control`/
+/// `with_faults` surface produce identical records AND identical
+/// `LoadReport` debug output — and the KV telemetry added in this PR
+/// stays zeroed outside `BatchingMode::PagedKv`.
+#[test]
+fn kv_subsystem_and_grouped_configs_inert_across_parity_matrix() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 97,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(79);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let autoscale = |kind: AutoscalerKind| AutoscaleConfig {
+        kind,
+        eval_interval: 1.0,
+        min_shards: 1,
+        max_shards: 4,
+        cold_start: ColdStartSpec::Fixed(1.0),
+    };
+    let autoscalers = [
+        None,
+        Some(autoscale(AutoscalerKind::None)),
+        Some(autoscale(AutoscalerKind::Reactive(ReactiveConfig::default()))),
+        Some(autoscale(AutoscalerKind::TtftTarget(TtftTargetConfig::default()))),
+    ];
+    let batchings = [
+        BatchingMode::SlotLegacy,
+        BatchingMode::Continuous(ContinuousBatchConfig::default()),
+    ];
+    for balancer in BalancerKind::all() {
+        for auto in &autoscalers {
+            for batching in &batchings {
+                for queue in EventQueueKind::all() {
+                    // Flat spelling: the historical per-field builders.
+                    let mut flat = FleetConfig::sharded(2, 1, balancer)
+                        .with_batching(*batching)
+                        .with_event_queue(queue)
+                        .with_migration_targeting(MigrationTargeting::ShardTargeted);
+                    if let Some(a) = auto {
+                        flat = flat.with_autoscale(*a);
+                    }
+                    // Grouped spelling: same semantics assembled through
+                    // the three sub-config setters on a throwaway base.
+                    let grouped = FleetConfig::sharded(1, 1, BalancerKind::RoundRobin)
+                        .with_server(ServerSpec {
+                            shards: 2,
+                            server_slots: Some(1),
+                            shard_rtts: Vec::new(),
+                            batching: *batching,
+                        })
+                        .with_control(ControlSpec {
+                            balancer,
+                            autoscale: *auto,
+                            migration_targeting: MigrationTargeting::ShardTargeted,
+                            event_queue: queue,
+                        })
+                        .with_faults(FaultPlan::default());
+                    let a = scenario.run_fleet(&trace, &policy, &flat);
+                    let b = scenario.run_fleet(&trace, &policy, &grouped);
+                    assert_eq!(
+                        a.records, b.records,
+                        "{balancer}/{auto:?}/{}/{queue:?}: grouped config diverged from flat",
+                        batching.label()
+                    );
+                    assert_eq!(
+                        format!("{:?}", a.load),
+                        format!("{:?}", b.load),
+                        "{balancer}/{auto:?}/{}/{queue:?}: load reports diverged",
+                        batching.label()
+                    );
+                    // KV telemetry must be dead outside PagedKv.
+                    assert_eq!(a.load.prefix_lookups, 0, "prefix index active in non-paged mode");
+                    assert_eq!(a.load.kv_preemptions, 0, "preemption in non-paged mode");
+                    assert_eq!(a.load.kv_forced_reprefills, 0, "re-prefill in non-paged mode");
+                    assert!(a.load.prefix_hit_rate().is_none());
+                    for s in &a.load.shards {
+                        assert_eq!(s.kv_pages_total, 0, "page pool allocated in non-paged mode");
+                        assert_eq!(s.kv_pages_peak, 0, "page usage recorded in non-paged mode");
+                    }
+                    // Round-trip: the grouped accessors read back what
+                    // the flat builders wrote.
+                    assert_eq!(
+                        format!("{:?}", flat.server_spec()),
+                        format!("{:?}", grouped.server_spec())
+                    );
+                    assert_eq!(
+                        format!("{:?}", flat.control_spec()),
+                        format!("{:?}", grouped.control_spec())
+                    );
+                    assert_eq!(
+                        format!("{:?}", flat.fault_plan()),
+                        format!("{:?}", grouped.fault_plan())
+                    );
+                }
             }
         }
     }
