@@ -123,6 +123,25 @@ impl MigrationPlanner {
         }
     }
 
+    /// The token predictor re-derived from the *live* batch: under
+    /// iteration-level pricing a shard's scheduler iterations stretch
+    /// with the current batch's slowdown, so the same token backlog
+    /// drains `batch_slowdown` times slower than the nominal admission
+    /// rate predicts. `batch_slowdown` is
+    /// `BatchLatencyCurve::slowdown(current batch)` — exactly 1.0 under
+    /// `Flat` curves and single-stream batches, making this identical
+    /// to [`Self::queue_delay_estimate_tokens`] there (the join-time
+    /// path keeps calling the unscaled predictor, so legacy estimates
+    /// never chase live batches they do not price).
+    pub fn queue_delay_estimate_tokens_at_batch(
+        &self,
+        queued_tokens: u64,
+        tokens_per_sec: f64,
+        batch_slowdown: f64,
+    ) -> f64 {
+        self.queue_delay_estimate_tokens(queued_tokens, tokens_per_sec) * batch_slowdown.max(1.0)
+    }
+
     /// Build the concrete plan (Eq. 5). `target_expected_ttft` is the
     /// target endpoint's expected warm-up for re-prefilling
     /// `reprefill_len` tokens.
@@ -319,6 +338,31 @@ mod tests {
             plan_loaded.buffer_tokens > plan_idle.buffer_tokens,
             "a deep token backlog must inflate the Eq. 5 buffer"
         );
+    }
+
+    /// The live-batch predictor scales the token backlog by the current
+    /// slowdown (iteration-level pricing), degrades to the nominal
+    /// predictor at slowdown 1.0 — bit-for-bit, which is what keeps
+    /// `Flat`-curve repriced runs byte-identical — and clamps sub-1.0
+    /// slowdowns (a curve can never make draining faster than nominal).
+    #[test]
+    fn queue_delay_estimate_at_batch_scales_with_live_slowdown() {
+        let p = MigrationPlanner::new(MigrationConfig::default(), device_constrained_costs());
+        let nominal = p.queue_delay_estimate_tokens(1024, 512.0);
+        assert_eq!(
+            p.queue_delay_estimate_tokens_at_batch(1024, 512.0, 1.0),
+            nominal
+        );
+        assert_eq!(
+            p.queue_delay_estimate_tokens_at_batch(1024, 512.0, 2.5),
+            nominal * 2.5
+        );
+        assert_eq!(
+            p.queue_delay_estimate_tokens_at_batch(1024, 512.0, 0.25),
+            nominal,
+            "sub-1.0 slowdowns clamp to the nominal rate"
+        );
+        assert_eq!(p.queue_delay_estimate_tokens_at_batch(0, 512.0, 3.0), 0.0);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::experiments::common::{make_policy, par_map, CellSeed};
 use crate::experiments::ExpContext;
 use crate::profiles::{DeviceProfile, ServerProfile};
 use crate::sim::balancer::BalancerKind;
-use crate::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
+use crate::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig, PricingMode};
 use crate::sim::engine::{Scenario, SimConfig};
 use crate::sim::fleet::FleetConfig;
 use crate::trace::generator::WorkloadSpec;
@@ -40,10 +40,20 @@ pub struct BatchingCell {
 #[derive(Clone, Debug)]
 pub struct BatchingCellResult {
     pub cell: BatchingCell,
-    /// Continuous-batching QoE.
+    /// Continuous-batching QoE (join-time pricing).
     pub mean_ttft: f64,
     pub p99_ttft: f64,
+    pub mean_tbt: f64,
     pub p99_tbt: f64,
+    /// The same trace re-run under iteration-level repricing
+    /// ([`PricingMode::IterationLevel`]) — the paired column that shows
+    /// what the join-time approximation hides. Flat-curve cells are
+    /// byte-identical across the pair.
+    pub repriced_mean_tbt: f64,
+    pub repriced_p99_tbt: f64,
+    /// Seed-averaged batch-composition repricing passes in the repriced
+    /// run (zero in Flat cells, where slowdowns never change).
+    pub reprice_events: f64,
     /// Largest batch size any shard reached.
     pub peak_batch: f64,
     /// Admitted prompt tokens over the budget made available.
@@ -190,7 +200,11 @@ fn run_cell(
 ) -> BatchingCellResult {
     let mut mean_ttft = Vec::new();
     let mut p99_ttft = Vec::new();
+    let mut mean_tbt = Vec::new();
     let mut p99_tbt = Vec::new();
+    let mut rp_mean_tbt = Vec::new();
+    let mut rp_p99_tbt = Vec::new();
+    let mut rp_events = Vec::new();
     let mut peak = Vec::new();
     let mut token_util = Vec::new();
     for seed in 0..params.n_seeds {
@@ -206,16 +220,31 @@ fn run_cell(
         let cont_rep = scenario.run_fleet_report(&trace, &policy, &continuous);
         mean_ttft.push(cont_rep.qoe.ttft.mean);
         p99_ttft.push(cont_rep.qoe.ttft.p99);
+        mean_tbt.push(cont_rep.qoe.tbt.mean);
         p99_tbt.push(cont_rep.qoe.tbt.p99);
         peak.push(cont_rep.load.peak_batch() as f64);
         token_util.push(cont_rep.load.token_budget_utilization().unwrap_or(0.0));
+        // Paired repriced leg: identical trace, draws, and fleet — the
+        // only difference is iteration-level vs join-time decode pricing.
+        let repriced = scenario.run_fleet_report(
+            &trace,
+            &policy,
+            &continuous.clone().with_pricing(PricingMode::IterationLevel),
+        );
+        rp_mean_tbt.push(repriced.qoe.tbt.mean);
+        rp_p99_tbt.push(repriced.qoe.tbt.p99);
+        rp_events.push(repriced.load.reprice_events as f64);
     }
     let avg = crate::stats::describe::mean;
     BatchingCellResult {
         cell: *cell,
         mean_ttft: avg(&mean_ttft),
         p99_ttft: avg(&p99_ttft),
+        mean_tbt: avg(&mean_tbt),
         p99_tbt: avg(&p99_tbt),
+        repriced_mean_tbt: avg(&rp_mean_tbt),
+        repriced_p99_tbt: avg(&rp_p99_tbt),
+        reprice_events: avg(&rp_events),
         peak_batch: avg(&peak),
         token_utilization: avg(&token_util),
         slot_p99_ttft,
@@ -233,7 +262,11 @@ pub fn render_grid(results: &[BatchingCellResult]) -> String {
                 r.cell.curve.label(),
                 format!("{:.3}", r.mean_ttft),
                 format!("{:.3}", r.p99_ttft),
+                format!("{:.4}", r.mean_tbt),
                 format!("{:.3}", r.p99_tbt),
+                format!("{:.4}", r.repriced_mean_tbt),
+                format!("{:.3}", r.repriced_p99_tbt),
+                format!("{:.0}", r.reprice_events),
                 format!("{:.1}", r.peak_batch),
                 format!("{:.2}", r.token_utilization),
                 format!("{:.3}", r.slot_p99_ttft),
@@ -247,7 +280,11 @@ pub fn render_grid(results: &[BatchingCellResult]) -> String {
             "curve",
             "mean TTFT",
             "p99 TTFT",
+            "mean TBT",
             "p99 TBT",
+            "rp mean TBT",
+            "rp p99 TBT",
+            "reprices",
             "peak batch",
             "token util",
             "slot p99 TTFT",
@@ -270,7 +307,11 @@ pub fn batching_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
         "curve",
         "mean_ttft",
         "p99_ttft",
+        "mean_tbt",
         "p99_tbt",
+        "repriced_mean_tbt",
+        "repriced_p99_tbt",
+        "reprice_events",
         "peak_batch",
         "token_utilization",
         "slot_p99_ttft",
@@ -282,7 +323,11 @@ pub fn batching_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
             r.cell.curve.label(),
             format!("{:.4}", r.mean_ttft),
             format!("{:.4}", r.p99_ttft),
+            format!("{:.4}", r.mean_tbt),
             format!("{:.4}", r.p99_tbt),
+            format!("{:.4}", r.repriced_mean_tbt),
+            format!("{:.4}", r.repriced_p99_tbt),
+            format!("{:.1}", r.reprice_events),
             format!("{:.2}", r.peak_batch),
             format!("{:.4}", r.token_utilization),
             format!("{:.4}", r.slot_p99_ttft),
@@ -317,7 +362,22 @@ mod tests {
             assert!(r.mean_ttft > 0.0);
             assert!(r.token_utilization >= 0.0);
             assert!(r.peak_batch >= 1.0, "streams must enter the batch");
+            if matches!(r.cell.curve, BatchLatencyCurve::Flat) {
+                // Flat cells: repricing is provably inert, so the paired
+                // column is bit-identical to the join-time column.
+                assert_eq!(r.repriced_mean_tbt, r.mean_tbt, "Flat repriced leg diverged");
+                assert_eq!(r.repriced_p99_tbt, r.p99_tbt, "Flat repriced leg diverged");
+                assert_eq!(r.reprice_events, 0.0, "Flat cells must never reprice");
+            }
         }
+        // The overloaded Linear cell churns batch composition, so the
+        // repriced leg must actually re-stamp timelines.
+        let hot_linear = &results[3];
+        assert!(matches!(hot_linear.cell.curve, BatchLatencyCurve::Linear { .. }));
+        assert!(
+            hot_linear.reprice_events > 0.0,
+            "overloaded Linear cell produced no reprice events"
+        );
         // At the overloaded rate the slot baseline queues harder than
         // the token gate admits: continuous p99 must not meaningfully
         // exceed it on this short trace (the big-margin headline claim

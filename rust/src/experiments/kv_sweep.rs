@@ -128,6 +128,7 @@ impl KvSweepParams {
             tick_interval: self.tick_interval,
             prefix_caching: cell.cached,
             curve: self.curve,
+            ..KvConfig::default()
         }
     }
 }

@@ -294,6 +294,7 @@ fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
 /// (`events_per_sec` for the slot loop, `heap_events_per_sec` for the
 /// reference backend, `batching_events_per_sec` for the continuous hot
 /// path, `kv_events_per_sec` for the paged-KV hot path,
+/// `reprice_events_per_sec` for the iteration-level repricing hot path,
 /// `sessions_per_sec` for the wide fleet, `zoned_sessions_per_sec` for
 /// the zoned cell; keys missing from the baseline skip their gate —
 /// except the original `events_per_sec`). Each cell declares which
@@ -301,7 +302,9 @@ fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
 /// per-key special case in the gate loop.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use disco::coordinator::policy::Policy;
-    use disco::sim::batching::{BatchingMode, ContinuousBatchConfig};
+    use disco::sim::batching::{
+        BatchLatencyCurve, BatchingMode, ContinuousBatchConfig, PricingMode,
+    };
     use disco::sim::event_queue::EventQueueKind;
     use disco::sim::fleet::{FleetConfig, FleetOutcome};
     use disco::sim::kv::KvConfig;
@@ -333,6 +336,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     enum GateMetric {
         EventsPerSec,
         SessionsPerSec,
+        /// Batch-composition repricing passes per wall-clock second —
+        /// gates the repriced cell on the repricing hot path actually
+        /// firing (a floor, so the feature can't silently go inert).
+        RepriceEventsPerSec,
     }
     struct Cell {
         name: &'static str,
@@ -344,6 +351,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         /// Sessions (requests) simulated per wall-clock second — the
         /// million-user-scale headline metric alongside raw event rate.
         sps: f64,
+        /// Iteration-level repricing passes per wall-clock second.
+        reprice_eps: f64,
         p50: f64,
         p99: f64,
     }
@@ -352,6 +361,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             match self.gate {
                 GateMetric::EventsPerSec => (self.eps, "events/s"),
                 GateMetric::SessionsPerSec => (self.sps, "sessions/s"),
+                GateMetric::RepriceEventsPerSec => (self.reprice_eps, "reprices/s"),
             }
         }
     }
@@ -381,6 +391,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             wall: best,
             eps: events as f64 / wall,
             sps: n as f64 / wall,
+            reprice_eps: outcome.load.reprice_events as f64 / wall,
             p50: s.p50,
             p99: s.p99,
         }
@@ -398,6 +409,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // memory-pressure checks on every tick and release, same topology.
     let kv_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
         .with_kv(KvConfig::default());
+    // The repriced cell: the continuous topology under iteration-level
+    // pricing with a linear latency curve, so every batch-composition
+    // change re-stamps live decode timelines. Gated on repricing
+    // throughput — if the repricing path goes inert the rate collapses
+    // to zero and the floor catches it.
+    let repriced_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
+        .with_batching(BatchingMode::Continuous(ContinuousBatchConfig {
+            curve: BatchLatencyCurve::Linear { alpha: 0.05 },
+            ..ContinuousBatchConfig::default()
+        }))
+        .with_pricing(PricingMode::IterationLevel);
     // The sessions cell: a wide fleet (K = 32) under the incrementally
     // indexed JSQ balancer — the topology where the old O(K)-per-arrival
     // rescan hurt most; gated on sessions/sec rather than events/sec.
@@ -433,6 +455,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             &|| scenario.run_fleet(&trace, &policy, &kv_fleet),
         ),
         run_cell(
+            "repriced-continuous",
+            "reprice_events_per_sec",
+            GateMetric::RepriceEventsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &repriced_fleet),
+        ),
+        run_cell(
             "wide-sessions",
             "sessions_per_sec",
             GateMetric::SessionsPerSec,
@@ -460,11 +488,14 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("heap_events_per_sec", Json::num(cells[1].eps)),
         ("batching_events_per_sec", Json::num(cells[2].eps)),
         ("kv_events_per_sec", Json::num(cells[3].eps)),
+        // Iteration-level repricing throughput on the repriced cell —
+        // a floor, not a ceiling: zero means the fix went inert.
+        ("reprice_events_per_sec", Json::num(cells[4].reprice_eps)),
         // The wide-fleet sessions-simulated-per-second headline cell.
-        ("sessions_per_sec", Json::num(cells[4].sps)),
+        ("sessions_per_sec", Json::num(cells[5].sps)),
         // The zone-partitioned wide cell (Z × K = 4 × 32): aggregate
         // sessions/sec when one bench cell fans across every core.
-        ("zoned_sessions_per_sec", Json::num(cells[5].sps)),
+        ("zoned_sessions_per_sec", Json::num(cells[6].sps)),
         // Wheel speedup over the heap reference on the identical
         // workload (>1 means the new default backend is faster).
         (

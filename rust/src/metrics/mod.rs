@@ -274,6 +274,22 @@ pub struct LoadReport {
     /// forcing a mid-decode re-prefill at the migration target (paged-KV
     /// batching; 0 otherwise).
     pub kv_forced_reprefills: usize,
+    /// Per-stream repricing operations performed under
+    /// [`crate::sim::batching::PricingMode::IterationLevel`]: one per
+    /// (batch change × affected stream) where the slowdown value
+    /// actually moved. 0 under join-time pricing, `SlotLegacy`, `Flat`
+    /// curves, and batches that never exceed one stream.
+    pub reprice_events: u64,
+    /// Completion-time seconds *added* to streams by repricing onto a
+    /// larger batch (ramp direction), summed over reprice events.
+    pub reprice_stretch_seconds: f64,
+    /// Completion-time seconds *removed* from streams by repricing onto
+    /// a smaller batch (drain direction), summed as a positive total.
+    pub reprice_shrink_seconds: f64,
+    /// Prefix-cache index entries evicted by the per-shard LRU entry
+    /// budget (`KvConfig::prefix_cache_entries`; paged-KV batching with
+    /// prefix caching on; 0 otherwise).
+    pub prefix_evictions: u64,
 }
 
 impl LoadReport {
@@ -624,6 +640,10 @@ impl LoadReport {
             prefix_lookups: parts.iter().map(|(r, _)| r.prefix_lookups).sum(),
             kv_preemptions: sum_u(|r| r.kv_preemptions),
             kv_forced_reprefills: sum_u(|r| r.kv_forced_reprefills),
+            reprice_events: parts.iter().map(|(r, _)| r.reprice_events).sum(),
+            reprice_stretch_seconds: sum_f(|r| r.reprice_stretch_seconds),
+            reprice_shrink_seconds: sum_f(|r| r.reprice_shrink_seconds),
+            prefix_evictions: parts.iter().map(|(r, _)| r.prefix_evictions).sum(),
         }
     }
 }
@@ -739,6 +759,10 @@ mod tests {
             prefix_lookups: 0,
             kv_preemptions: 0,
             kv_forced_reprefills: 0,
+            reprice_events: 0,
+            reprice_stretch_seconds: 0.0,
+            reprice_shrink_seconds: 0.0,
+            prefix_evictions: 0,
         }
     }
 
@@ -897,6 +921,10 @@ mod tests {
         a.prefix_lookups = 10;
         a.kv_preemptions = 2;
         a.kv_forced_reprefills = 1;
+        a.reprice_events = 4;
+        a.reprice_stretch_seconds = 1.25;
+        a.reprice_shrink_seconds = 0.5;
+        a.prefix_evictions = 6;
         a.shard_timeline = vec![ShardCountSample {
             time: 0.0,
             warm: 1,
@@ -914,6 +942,10 @@ mod tests {
         b.prefix_lookups = 10;
         b.kv_preemptions = 1;
         b.kv_forced_reprefills = 2;
+        b.reprice_events = 6;
+        b.reprice_stretch_seconds = 0.75;
+        b.reprice_shrink_seconds = 0.25;
+        b.prefix_evictions = 4;
         b.shard_timeline = vec![
             ShardCountSample {
                 time: 0.0,
@@ -952,6 +984,10 @@ mod tests {
         assert_eq!(m.prefix_hit_rate(), Some(0.5));
         assert_eq!(m.kv_preemptions, 3);
         assert_eq!(m.kv_forced_reprefills, 3);
+        assert_eq!(m.reprice_events, 10);
+        assert_eq!(m.reprice_stretch_seconds, 2.0);
+        assert_eq!(m.reprice_shrink_seconds, 0.75);
+        assert_eq!(m.prefix_evictions, 10);
         // Horizon covers the latest zone end: max(0+10, 3+8) = 11.
         assert_eq!(m.horizon, 11.0);
         // Breakdown concatenates in zone order; per-shard fields intact.

@@ -209,7 +209,9 @@ mod tests {
         use crate::cost::unified::Constraint;
         use crate::profiles::{DeviceProfile, ServerProfile};
         use crate::sim::balancer::BalancerKind;
-        use crate::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
+        use crate::sim::batching::{
+            BatchLatencyCurve, BatchingMode, ContinuousBatchConfig, PricingMode,
+        };
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::event_queue::EventQueueKind;
         use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
@@ -223,6 +225,7 @@ mod tests {
         let mut kv_activity_total = 0usize;
         let mut parity_total = 0usize;
         let mut multizone_total = 0usize;
+        let mut repriced_total = 0usize;
         check(
             "fleet-outage-migration-integrity",
             default_cases().clamp(16, 256),
@@ -259,13 +262,17 @@ mod tests {
                 // A third of the storms double as event-queue parity
                 // cases (wheel vs heap, byte-for-byte).
                 let heap_check = r.chance(1.0 / 3.0);
+                // Repricing axis: half the storms run iteration-level
+                // batch repricing, so every invariant above is also
+                // exercised against the piecewise re-stamped timelines.
+                let repriced = r.chance(0.5);
                 // Zone-partition axis: replicate the storm fleet into
                 // Z zones and check the merge contract.
                 let zones = 1 + r.below(3) as usize;
                 let seed = r.next_u64();
                 (
                     k, balancer, targeting, frac, dead, slots, bscale, fault, batching,
-                    heap_check, zones, seed,
+                    heap_check, repriced, zones, seed,
                 )
             },
             |&(
@@ -279,6 +286,7 @@ mod tests {
                 fault,
                 batching,
                 heap_check,
+                repriced,
                 zones,
                 seed,
             )| {
@@ -331,10 +339,15 @@ mod tests {
                             tick_interval: 0.25,
                             prefix_caching: cache,
                             curve,
+                            ..KvConfig::default()
                         });
                         paged_total += 1;
                     }
                     _ => {}
+                }
+                if repriced && mode != 0 {
+                    fleet = fleet.with_pricing(PricingMode::IterationLevel);
+                    repriced_total += 1;
                 }
                 if fault {
                     fleet = fleet.with_shard_fault(
@@ -469,6 +482,19 @@ mod tests {
                         "KV telemetry must stay zero outside paged mode"
                     );
                 }
+                // Repricing-axis inertness: join-time runs and
+                // slot-legacy runs (where iteration-level pricing is a
+                // declared no-op) must never touch the reprice counters.
+                if !repriced || mode == 0 {
+                    crate::prop_assert!(
+                        out.load.reprice_events == 0
+                            && out.load.reprice_stretch_seconds == 0.0
+                            && out.load.reprice_shrink_seconds == 0.0,
+                        "reprice telemetry must stay zero when repricing is off \
+                         (repriced={repriced}, mode={mode}): {} events",
+                        out.load.reprice_events
+                    );
+                }
                 // Zone-partition leg: Z copies of the same storm fleet.
                 let zoned_cfg = crate::sim::zones::ZonedFleetConfig::uniform(zones, fleet.clone());
                 let zout = crate::sim::zones::run_zoned_fleet(&sc, &trace, &policy, &zoned_cfg);
@@ -536,6 +562,10 @@ mod tests {
         assert!(
             multizone_total > 0,
             "property never exercised a multi-zone partition"
+        );
+        assert!(
+            repriced_total > 0,
+            "property never exercised iteration-level repricing"
         );
     }
 

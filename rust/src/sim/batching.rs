@@ -24,8 +24,8 @@
 //!   ([`ContinuousBatchConfig::prefill_tokens_per_tick`] /
 //!   [`ContinuousBatchConfig::tick_interval`]); admitted decode streams
 //!   share the shard's batch, and each stream's inter-token gaps are
-//!   scaled by [`BatchLatencyCurve::slowdown`] evaluated at the batch
-//!   size the stream joined (see the approximation note below).
+//!   scaled by [`BatchLatencyCurve::slowdown`] (see the pricing
+//!   contract below).
 //! * [`BatchingMode::PagedKv`] — admission is gated by the shard's
 //!   paged KV block pool ([`crate::sim::kv::KvConfig`]): prefills
 //!   allocate pages, decode grows page usage, memory pressure preempts
@@ -33,17 +33,46 @@
 //!   fraction of prefill. The tick/batch-pricing machinery is shared
 //!   with `Continuous`; only the admission signal differs.
 //!
-//! # Approximation: join-time batch pricing
+//! # Decode pricing: join-time vs iteration-level
 //!
-//! A stream's decode pace is priced at the batch size observed when it
-//! is admitted (including itself); streams that join *later* see the
-//! larger batch, but an already-running stream is not repriced
-//! mid-decode. This keeps the engine's one-shot trajectory resolution —
-//! and with it the §4.3 migration walk, delivery smoothing, and cost
-//! metering — intact, at the cost of underestimating slowdown during a
-//! ramp (and overestimating it during a drain). Iteration-level
-//! repricing is the seeded follow-on in ROADMAP.md; chunked prefill
-//! and preemption now live in the paged-KV mode (`sim/kv.rs`).
+//! Under the historical [`PricingMode::JoinTime`] (the default), a
+//! stream's decode pace is priced at the batch size observed when it is
+//! admitted (including itself); streams that join *later* see the
+//! larger batch, but an already-running stream is never repriced
+//! mid-decode. That keeps the engine's one-shot trajectory resolution
+//! intact, at the cost of underestimating slowdown during a ramp (and
+//! overestimating it during a drain).
+//!
+//! [`PricingMode::IterationLevel`] removes the approximation. The
+//! contract:
+//!
+//! * **When repricing fires.** Whenever a shard's batch *size* changes
+//!   — a prefill admits, a stream departs, KV memory pressure preempts
+//!   a victim, a migrated-in tail books onto the shard — every
+//!   still-decoding, non-migrated server stream on that shard whose
+//!   current slowdown differs from `slowdown(new batch)` is repriced.
+//!   Same-size composition changes are skipped: the curve depends only
+//!   on the batch size, so pricing is unchanged by construction.
+//! * **Which tokens are re-stamped.** Only *pending* generation times
+//!   move. Tokens already emitted at the reprice instant keep their
+//!   times; the in-flight gap is split piecewise — the elapsed portion
+//!   stays priced at the old slowdown, the remainder is re-scaled by
+//!   `new/old` — and every later gap re-scales fully. Delivery
+//!   smoothing, the stream's release event, shard busy-seconds, and
+//!   cost metering are all finalized from the repriced timeline when
+//!   the stream completes (deferred finalization in `sim/fleet.rs`).
+//! * **Interaction with KV preemption's stretched gap.** A preempted
+//!   stream's in-flight gap is stretched by its re-prefill delay; that
+//!   stall is *not* decode and must not re-scale. Repricing therefore
+//!   skips streams that are inside their preemption-suspension window;
+//!   they re-enter pricing at the first batch change after the
+//!   suspension ends. Migrated streams' committed handoff tails are
+//!   likewise never repriced.
+//! * **Inertness.** `SlotLegacy` schedules no ticks and prices nothing,
+//!   `Flat` curves price every batch at exactly 1.0, and batches that
+//!   never exceed one stream always price at 1.0 — in all three cases
+//!   `IterationLevel` runs are byte-identical to `JoinTime` runs (a
+//!   reprice only fires when the slowdown value actually changes).
 
 use crate::sim::kv::KvConfig;
 
@@ -295,6 +324,45 @@ impl std::fmt::Display for BatchingMode {
     }
 }
 
+/// How a gated shard prices decode against its batch-latency curve.
+/// See the module-level "Decode pricing" contract. Irrelevant under
+/// [`BatchingMode::SlotLegacy`], which never prices decode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PricingMode {
+    /// Freeze each stream's slowdown at the batch size it joined (the
+    /// historical approximation; never repriced mid-decode).
+    #[default]
+    JoinTime,
+    /// Re-price every running stream's pending inter-token gaps
+    /// whenever its shard's batch size changes.
+    IterationLevel,
+}
+
+impl PricingMode {
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PricingMode::JoinTime => "join-time",
+            PricingMode::IterationLevel => "iteration-level",
+        }
+    }
+
+    /// Parse a CLI spelling (`join-time` / `iteration-level`).
+    pub fn parse(s: &str) -> Option<PricingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "join-time" | "jointime" | "join" => Some(PricingMode::JoinTime),
+            "iteration-level" | "iteration" | "repriced" => Some(PricingMode::IterationLevel),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PricingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -414,5 +482,17 @@ mod tests {
         assert_eq!(c.admission_tokens_per_sec(), Some(512.0));
         assert_eq!(p.admission_tokens_per_sec(), Some(1024.0));
         assert!(p.paged().is_some() && c.paged().is_none());
+    }
+
+    #[test]
+    fn pricing_mode_defaults_labels_and_parse() {
+        assert_eq!(PricingMode::default(), PricingMode::JoinTime);
+        assert_eq!(PricingMode::JoinTime.label(), "join-time");
+        assert_eq!(PricingMode::IterationLevel.label(), "iteration-level");
+        for m in [PricingMode::JoinTime, PricingMode::IterationLevel] {
+            assert_eq!(PricingMode::parse(m.label()), Some(m), "label roundtrip");
+        }
+        assert_eq!(PricingMode::parse("repriced"), Some(PricingMode::IterationLevel));
+        assert!(PricingMode::parse("sometimes").is_none());
     }
 }

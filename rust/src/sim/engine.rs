@@ -279,6 +279,13 @@ pub(crate) struct Resolved {
     pub server_release: Option<f64>,
     /// Set when generation migrated endpoints mid-decode (§4.3).
     pub migration: Option<MigrationInfo>,
+    /// Raw *generation* times of every token, relative to arrival
+    /// (`gen_rel[0]` = TTFT) — the pre-smoothing timeline the record's
+    /// delivered `tbts` were derived from. The fleet's iteration-level
+    /// repricing path re-stamps this vector mid-run and re-smooths it
+    /// at stream completion (deferred finalization); join-time runs
+    /// drop it untouched.
+    pub gen_rel: Vec<f64>,
 }
 
 /// Borrowed view of the server endpoint a §4.3 server-bound re-prefill
@@ -620,6 +627,7 @@ pub(crate) fn resolve_request(
         device_busy_until,
         server_release,
         migration,
+        gen_rel: gen,
     }
 }
 

@@ -141,7 +141,8 @@ use crate::sim::autoscaler::{
     AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
 };
 use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardIndex, ShardView};
-use crate::sim::batching::{BatchingMode, ContinuousBatchConfig};
+use crate::sim::batching::{BatchingMode, ContinuousBatchConfig, PricingMode};
+use crate::sim::delivery;
 use crate::sim::engine::{
     pre_draw, resolve_request, BatchCtx, MigrationServer, PreDrawn, ResourceTimes, Scenario,
 };
@@ -245,6 +246,8 @@ pub struct ServerSpec {
     pub shard_rtts: Vec<f64>,
     /// Slot / continuous-batching / paged-KV admission regime.
     pub batching: BatchingMode,
+    /// Join-time vs iteration-level decode pricing for the gated modes.
+    pub pricing: PricingMode,
 }
 
 impl Default for ServerSpec {
@@ -254,6 +257,7 @@ impl Default for ServerSpec {
             server_slots: None,
             shard_rtts: Vec::new(),
             batching: BatchingMode::SlotLegacy,
+            pricing: PricingMode::JoinTime,
         }
     }
 }
@@ -267,6 +271,12 @@ pub struct ControlSpec {
     pub autoscale: Option<AutoscaleConfig>,
     pub migration_targeting: MigrationTargeting,
     pub event_queue: EventQueueKind,
+    /// Whether §4.3 server-bound re-prefill tails under
+    /// [`MigrationTargeting::BaseEndpoint`] are priced at the source
+    /// shard's batch in the gated modes (`true`, the fixed default) or
+    /// left unpriced at slowdown 1.0 (the documented PR-5 legacy
+    /// quirk, kept reachable for regression pinning).
+    pub price_base_tails: bool,
 }
 
 impl Default for ControlSpec {
@@ -276,6 +286,7 @@ impl Default for ControlSpec {
             autoscale: None,
             migration_targeting: MigrationTargeting::BaseEndpoint,
             event_queue: EventQueueKind::default(),
+            price_base_tails: true,
         }
     }
 }
@@ -366,6 +377,18 @@ pub struct FleetConfig {
     /// binary heap the reference implementation the parity tests pin
     /// against.
     pub event_queue: EventQueueKind,
+    /// Decode pricing for the gated batching modes: freeze each
+    /// stream's slowdown at join time (the historical default) or
+    /// reprice pending gaps at every batch-size change
+    /// ([`PricingMode::IterationLevel`]). Inert under `SlotLegacy`,
+    /// `Flat` curves, and batches that never exceed one stream — the
+    /// repricing parity matrix pins byte-identical runs there.
+    pub pricing: PricingMode,
+    /// Price base-endpoint §4.3 server-bound re-prefill tails at the
+    /// source shard's live batch in the gated modes (default `true`).
+    /// `false` restores the PR-5 legacy quirk (tails decode at
+    /// slowdown 1.0 regardless of the batch they join).
+    pub price_base_tails: bool,
 }
 
 impl FleetConfig {
@@ -384,6 +407,8 @@ impl FleetConfig {
             outages: Vec::new(),
             batching: BatchingMode::SlotLegacy,
             event_queue: EventQueueKind::default(),
+            pricing: PricingMode::JoinTime,
+            price_base_tails: true,
         }
     }
 
@@ -415,6 +440,7 @@ impl FleetConfig {
             server_slots: self.server_slots,
             shard_rtts: self.shard_rtts.clone(),
             batching: self.batching,
+            pricing: self.pricing,
         }
     }
 
@@ -424,6 +450,7 @@ impl FleetConfig {
         self.server_slots = spec.server_slots;
         self.shard_rtts = spec.shard_rtts;
         self.batching = spec.batching;
+        self.pricing = spec.pricing;
         self
     }
 
@@ -435,6 +462,7 @@ impl FleetConfig {
             autoscale: self.autoscale,
             migration_targeting: self.migration_targeting,
             event_queue: self.event_queue,
+            price_base_tails: self.price_base_tails,
         }
     }
 
@@ -444,6 +472,7 @@ impl FleetConfig {
         self.autoscale = spec.autoscale;
         self.migration_targeting = spec.migration_targeting;
         self.event_queue = spec.event_queue;
+        self.price_base_tails = spec.price_base_tails;
         self
     }
 
@@ -534,6 +563,26 @@ impl FleetConfig {
     pub fn with_event_queue(self, kind: EventQueueKind) -> FleetConfig {
         let spec = ControlSpec {
             event_queue: kind,
+            ..self.control_spec()
+        };
+        self.with_control(spec)
+    }
+
+    /// Select join-time vs iteration-level decode pricing for the gated
+    /// batching modes (a no-op under `SlotLegacy`).
+    pub fn with_pricing(self, pricing: PricingMode) -> FleetConfig {
+        let spec = ServerSpec {
+            pricing,
+            ..self.server_spec()
+        };
+        self.with_server(spec)
+    }
+
+    /// Toggle batch pricing of base-endpoint §4.3 re-prefill tails
+    /// (`false` restores the PR-5 legacy unpriced path).
+    pub fn with_base_tail_pricing(self, price_base_tails: bool) -> FleetConfig {
+        let spec = ControlSpec {
+            price_base_tails,
             ..self.control_spec()
         };
         self.with_control(spec)
@@ -1230,6 +1279,25 @@ struct FleetSim<'a> {
     kv_preemptions: usize,
     /// Mid-decode re-prefills forced by a hard outage losing KV.
     kv_forced_reprefills: usize,
+    /// Raw generation timeline of request `i`'s server stream, relative
+    /// to its arrival (`[0]` = TTFT), captured at resolve under
+    /// iteration-level pricing. Empty = not tracked (join-time runs,
+    /// device winners, migrated streams). Batch-change repricing
+    /// re-stamps the pending suffix in place; the record's delivered
+    /// `tbts` are re-derived from it (deferred finalization) when the
+    /// stream's release event validly fires.
+    gen_times: Vec<Vec<f64>>,
+    /// Per-shard lists of streams tracked for iteration-level repricing
+    /// (resolved server winners decoding in that shard's batch).
+    decode_live: Vec<Vec<usize>>,
+    /// Batch-change repricing events applied this run (telemetry).
+    reprice_events: u64,
+    /// Seconds of release-time *stretch* applied by repricing (batch
+    /// grew mid-decode — the ramp direction).
+    reprice_stretch_seconds: f64,
+    /// Seconds of release-time *shrink* applied by repricing (batch
+    /// drained mid-decode).
+    reprice_shrink_seconds: f64,
     /// First arrival (absolute); shard-seconds and report timestamps are
     /// measured from here.
     t0: f64,
@@ -1321,6 +1389,23 @@ impl<'a> FleetSim<'a> {
                     | EvKind::Outage(_)
                     | EvKind::BatchTick
             );
+            // Superseded release events — paged preemption/failover and
+            // iteration-level repricing both re-time a stream's release
+            // by pushing a later (or earlier) event — are dropped
+            // *before* the horizon update: a stale timestamp is not a
+            // workload time, and honoring it would overstate the
+            // horizon whenever repricing shrank a stream (the drain
+            // direction). Only the event whose timestamp matches the
+            // current booking fires, and only once, so a slot never
+            // double-frees.
+            if let EvKind::ServerRelease(i) = kind {
+                if self.release_guard_active()
+                    && (self.kv_release_done[i]
+                        || time.total_cmp(&self.kv_release_at[i]) != Ordering::Equal)
+                {
+                    continue;
+                }
+            }
             if time.is_finite() && !bookkeeping {
                 self.horizon = self.horizon.max(time);
             }
@@ -1363,20 +1448,19 @@ impl<'a> FleetSim<'a> {
                     self.try_resolve(i, time);
                 }
                 EvKind::ServerRelease(i) => {
-                    // Paged KV can supersede a release: preemption and
-                    // KV failover stretch the stream and push a *later*
-                    // release event. Only the event whose timestamp
-                    // matches the current booking fires — and only once
-                    // — so a slot never double-frees.
-                    if self.fleet.batching.is_paged() {
-                        if self.kv_release_done[i]
-                            || time.total_cmp(&self.kv_release_at[i]) != Ordering::Equal
-                        {
-                            continue;
-                        }
+                    // Stale (superseded) releases were dropped before
+                    // the horizon update above; this one is valid. Mark
+                    // it done so preemption, failover, and repricing
+                    // stop considering the stream.
+                    if self.release_guard_active() {
                         self.kv_release_done[i] = true;
                     }
                     let s = self.shard_of[i].expect("released requests are assigned");
+                    // Iteration-level pricing: the stream's delivered
+                    // record finalizes from its (possibly re-stamped)
+                    // generation timeline only now, when no further
+                    // batch change can touch it.
+                    self.finalize_stream(i, s);
                     // The stream's KV pages free with its slot — before
                     // the pool release below, so the admit-next scan
                     // sees the freed pages.
@@ -1573,6 +1657,7 @@ impl<'a> FleetSim<'a> {
         let mut release_underflows = self.device_pool.underflows;
         let mut prefix_hits = 0u64;
         let mut prefix_lookups = 0u64;
+        let mut prefix_evictions = 0u64;
         let shard_loads: Vec<ShardLoad> = self
             .shards
             .iter()
@@ -1592,6 +1677,7 @@ impl<'a> FleetSim<'a> {
                         let (h, l) = g.prefix_stats();
                         prefix_hits += h;
                         prefix_lookups += l;
+                        prefix_evictions += g.prefix_evictions();
                         (g.peak_pages(), g.pages_total())
                     }
                     None => (0, 0),
@@ -1661,6 +1747,10 @@ impl<'a> FleetSim<'a> {
             prefix_lookups,
             kv_preemptions: self.kv_preemptions,
             kv_forced_reprefills: self.kv_forced_reprefills,
+            reprice_events: self.reprice_events,
+            reprice_stretch_seconds: self.reprice_stretch_seconds,
+            reprice_shrink_seconds: self.reprice_shrink_seconds,
+            prefix_evictions,
         };
         FleetOutcome { records, load }
     }
@@ -1696,9 +1786,28 @@ impl<'a> FleetSim<'a> {
         }
     }
 
+    /// Whether this run re-prices running decodes on batch change:
+    /// iteration-level pricing under a gated batching mode. Slot-legacy
+    /// streams are never repriced regardless of the pricing mode.
+    fn reprice_active(&self) -> bool {
+        self.fleet.pricing == PricingMode::IterationLevel && self.fleet.batching.batched()
+    }
+
+    /// Whether `ServerRelease` events can be superseded and must pass
+    /// the timestamp guard: paged KV stretches releases at preemption
+    /// and failover, iteration-level repricing moves them on any batch
+    /// change.
+    fn release_guard_active(&self) -> bool {
+        self.fleet.batching.is_paged() || self.reprice_active()
+    }
+
     /// Append a batch-size sample for shard `s` if the size changed
     /// (continuous batching only; legacy runs record nothing, keeping
-    /// their load reports byte-identical).
+    /// their load reports byte-identical). Under iteration-level
+    /// pricing a size change is exactly the repricing trigger: the
+    /// slowdown curve reads only the batch *size*, so same-size
+    /// composition churn (one stream leaves as another admits) is a
+    /// semantic no-op and is skipped by the dedupe.
     fn record_batch(&mut self, s: usize, now: f64) {
         if !self.fleet.batching.batched() {
             return;
@@ -1713,6 +1822,114 @@ impl<'a> FleetSim<'a> {
             shard: s,
             batch,
         });
+        if self.reprice_active() {
+            self.reprice_shard(s, now);
+        }
+    }
+
+    /// Re-price every tracked stream decoding in shard `s`'s batch at
+    /// the batch's *current* slowdown (iteration-level pricing).
+    fn reprice_shard(&mut self, s: usize, now: f64) {
+        let new_slow = self.batch_slowdown(s);
+        // Snapshot the tracked list: repricing itself never changes
+        // membership (that happens at resolve/release/failover).
+        let live = std::mem::take(&mut self.decode_live[s]);
+        for &j in &live {
+            self.reprice_stream(j, s, now, new_slow);
+        }
+        self.decode_live[s] = live;
+    }
+
+    /// Re-stamp the pending (un-generated) suffix of tracked stream
+    /// `j`'s generation timeline at slowdown `new_slow`, supersede its
+    /// release event, and re-bill the slot seconds. The in-flight gap
+    /// splits piecewise at `now`: the elapsed part is history, only the
+    /// remainder re-scales. Skips streams that are suspended
+    /// (re-prefilling — the stall is not decode time), fully generated,
+    /// or already priced at bit-identical slowdown — the latter keeps
+    /// flat curves and batch-size-1 runs byte-identical with zero
+    /// telemetry.
+    fn reprice_stream(&mut self, j: usize, s: usize, now: f64, new_slow: f64) {
+        if self.kv_release_done[j] || now < self.kv_suspend_until[j] {
+            return;
+        }
+        let old_slow = self.arena.decode_slowdown[j];
+        if new_slow.to_bits() == old_slow.to_bits() {
+            return;
+        }
+        let rel = now - self.trace.requests[j].arrival;
+        let gen = &mut self.gen_times[j];
+        debug_assert!(!gen.is_empty(), "tracked streams carry a timeline");
+        // First still-pending token (strictly after `now`).
+        let cur = gen.iter().take_while(|&&t| t <= rel).count();
+        if cur >= gen.len() {
+            // Fully generated; only the already-scheduled release
+            // remains.
+            return;
+        }
+        let ratio = new_slow / old_slow;
+        let old_last = *gen.last().unwrap();
+        if cur == 0 {
+            // Prefill still running: TTFT is untouched, every decode
+            // gap re-scales whole.
+            let base = gen[0];
+            for t in gen.iter_mut().skip(1) {
+                *t = base + (*t - base) * ratio;
+            }
+        } else {
+            // Split the in-flight gap at `now`; later gaps scale whole.
+            let old_pivot = gen[cur];
+            let new_pivot = rel + (old_pivot - rel) * ratio;
+            gen[cur] = new_pivot;
+            for t in gen.iter_mut().skip(cur + 1) {
+                *t = new_pivot + (*t - old_pivot) * ratio;
+            }
+        }
+        let delta = *gen.last().unwrap() - old_last;
+        self.arena.decode_slowdown[j] = new_slow;
+        // Supersede the pending release: the old event's timestamp no
+        // longer matches `kv_release_at`, so the stale guard drops it.
+        // A shrink past `now` clamps to `now` (the slot cannot free in
+        // the past), keeping the stamped time and the pushed event in
+        // exact agreement.
+        let old_at = self.kv_release_at[j];
+        let at = (old_at + delta).max(now);
+        let shift = at - old_at;
+        self.shards[s].busy += shift;
+        self.kv_release_at[j] = at;
+        self.push(at, EvKind::ServerRelease(j));
+        self.reprice_events += 1;
+        if shift >= 0.0 {
+            self.reprice_stretch_seconds += shift;
+        } else {
+            self.reprice_shrink_seconds -= shift;
+        }
+    }
+
+    /// Deferred finalization of tracked stream `i` on shard `s` at its
+    /// valid release: re-derive the delivered record from the (possibly
+    /// re-stamped) generation timeline and extend the horizon to the
+    /// last delivered token. When no repricing touched the stream the
+    /// timeline is bit-identical to the one the resolve step smoothed,
+    /// so the record — and every downstream byte — is unchanged. A
+    /// no-op for untracked streams (empty timeline).
+    fn finalize_stream(&mut self, i: usize, s: usize) {
+        let gen = std::mem::take(&mut self.gen_times[i]);
+        if gen.is_empty() {
+            return;
+        }
+        self.decode_live[s].retain(|&j| j != i);
+        let r_c = self.scenario.cfg.migration.consumption_rate;
+        let d = delivery::smooth(&gen, r_c);
+        let rec = self.records[i]
+            .as_mut()
+            .expect("tracked streams are resolved");
+        rec.tbts = d.tbts;
+        rec.delay_num = d.delay_num;
+        let done = self.trace.requests[i].arrival + rec.ttft + rec.tbts.iter().sum::<f64>();
+        if done.is_finite() {
+            self.horizon = self.horizon.max(done);
+        }
     }
 
     /// Balance server-bound request `i` onto a shard, apply any
@@ -2026,6 +2243,7 @@ impl<'a> FleetSim<'a> {
                 ready,
             ));
             self.kv_live.push(Vec::new());
+            self.decode_live.push(Vec::new());
             self.server_endpoints.push(self.scenario.server.clone());
             self.scale_events.push(ScaleEvent {
                 time: now,
@@ -2298,9 +2516,20 @@ impl<'a> FleetSim<'a> {
         own_sample: f64,
     ) -> f64 {
         if let Some(rate) = self.fleet.batching.admission_tokens_per_sec() {
-            return self
-                .planner
-                .queue_delay_estimate_tokens(self.shards[t].pool.queued_prompt_tokens(), rate);
+            let queued = self.shards[t].pool.queued_prompt_tokens();
+            if self.reprice_active() {
+                // Iteration-level pricing: the backlog ahead drains at
+                // the pace the *live* batch actually decodes, so the
+                // estimate scales by the target's current slowdown
+                // (×1.0 — bit-exact — on flat curves, keeping
+                // join-time parity).
+                return self.planner.queue_delay_estimate_tokens_at_batch(
+                    queued,
+                    rate,
+                    self.batch_slowdown(t),
+                );
+            }
+            return self.planner.queue_delay_estimate_tokens(queued, rate);
         }
         let pool = &self.shards[t].pool;
         let spare = match pool.cap {
@@ -2322,10 +2551,18 @@ impl<'a> FleetSim<'a> {
     // Paged KV: decode growth, memory-pressure preemption, failover
     // -----------------------------------------------------------------
 
-    /// Tokens of request `j`'s stream delivered by `now`, walking the
-    /// resolved record's delivery timeline (TTFT, then the inter-token
-    /// gaps). 0 before the first token or for unresolved streams.
+    /// Tokens of request `j`'s stream emitted by `now`. Tracked streams
+    /// (iteration-level pricing) count on their raw *generation*
+    /// timeline — KV pages grow with generated tokens, and the
+    /// provisional record still holds resolve-time delivery; everything
+    /// else walks the resolved record's delivery timeline (TTFT, then
+    /// the inter-token gaps). 0 before the first token or for
+    /// unresolved streams.
     fn tokens_emitted(&self, j: usize, now: f64) -> usize {
+        if !self.gen_times[j].is_empty() {
+            let rel = now - self.trace.requests[j].arrival;
+            return self.gen_times[j].iter().take_while(|&&t| t <= rel).count();
+        }
         let rec = match &self.records[j] {
             Some(r) => r,
             None => return 0,
@@ -2435,13 +2672,25 @@ impl<'a> FleetSim<'a> {
             .admission_tokens_per_sec()
             .expect("paged mode has an admission rate");
         let delta = reprefill as f64 / rate;
-        let done = {
-            let rec = self.records[j].as_mut().expect("victims are resolved");
-            rec.tbts[emitted - 1] += delta;
-            self.trace.requests[j].arrival + rec.ttft + rec.tbts.iter().sum::<f64>()
-        };
-        if done.is_finite() {
-            self.horizon = self.horizon.max(done);
+        if self.gen_times[j].is_empty() {
+            let done = {
+                let rec = self.records[j].as_mut().expect("victims are resolved");
+                rec.tbts[emitted - 1] += delta;
+                self.trace.requests[j].arrival + rec.ttft + rec.tbts.iter().sum::<f64>()
+            };
+            if done.is_finite() {
+                self.horizon = self.horizon.max(done);
+            }
+        } else {
+            // Tracked stream (iteration-level pricing): the stall
+            // shifts the pending generation suffix; the delivered
+            // record — and the horizon — pick it up at finalization.
+            let rel = now - self.trace.requests[j].arrival;
+            for t in self.gen_times[j].iter_mut() {
+                if *t > rel {
+                    *t += delta;
+                }
+            }
         }
         // The slot is held `delta` longer on this shard.
         self.shards[s].busy += delta;
@@ -2511,6 +2760,13 @@ impl<'a> FleetSim<'a> {
             }
             match target {
                 Some(t) => {
+                    // A tracked stream (iteration-level pricing) leaves
+                    // the repricing set at the forced migration: its
+                    // delivered record finalizes from the repriced
+                    // timeline first, then the committed tail
+                    // stretches like any other failover victim. No-op
+                    // for untracked streams.
+                    self.finalize_stream(j, s);
                     let delta = self.shards[t].rtt
                         + self.reprefill_queue_delay(t, None, false, 0.0)
                         + reprefill as f64 / rate;
@@ -2571,15 +2827,28 @@ impl<'a> FleetSim<'a> {
                     // draining source, which keeps serving in-flight
                     // work under connection draining.
                     let delta = reprefill as f64 / rate;
-                    let done = {
-                        let rec = self.records[j].as_mut().expect("eligible implies a record");
-                        rec.tbts[emitted - 1] += delta;
-                        self.trace.requests[j].arrival
-                            + rec.ttft
-                            + rec.tbts.iter().sum::<f64>()
-                    };
-                    if done.is_finite() {
-                        self.horizon = self.horizon.max(done);
+                    if self.gen_times[j].is_empty() {
+                        let done = {
+                            let rec =
+                                self.records[j].as_mut().expect("eligible implies a record");
+                            rec.tbts[emitted - 1] += delta;
+                            self.trace.requests[j].arrival
+                                + rec.ttft
+                                + rec.tbts.iter().sum::<f64>()
+                        };
+                        if done.is_finite() {
+                            self.horizon = self.horizon.max(done);
+                        }
+                    } else {
+                        // Tracked stream: the stall shifts the pending
+                        // generation suffix; finalization at the
+                        // (superseded, later) release delivers it.
+                        let rel = now - self.trace.requests[j].arrival;
+                        for t in self.gen_times[j].iter_mut() {
+                            if *t > rel {
+                                *t += delta;
+                            }
+                        }
                     }
                     self.shards[s].busy += delta;
                     if let Some(g) = self.shards[s].pool.kv_mut() {
@@ -2658,7 +2927,19 @@ impl<'a> FleetSim<'a> {
         let mut pre = self.arena.pre[i];
         let device_grant = self.arena.device_grant[i];
         let server_was_admitted = self.arena.server_admit[i].is_some() && !srv_cancelled;
-        let decode_slowdown = self.arena.decode_slowdown[i];
+        let decode_slowdown = if self.reprice_active() && server_was_admitted {
+            // Iteration-level pricing: price the stream at the batch it
+            // actually starts decoding in — resolution can trail
+            // admission when a device grant was pending, and repricing
+            // cannot reach back before the record exists. Bit-identical
+            // under a flat curve, where both prices are 1.0.
+            let s = shard.expect("admitted requests are assigned");
+            let live = self.batch_slowdown(s);
+            self.arena.decode_slowdown[i] = live;
+            live
+        } else {
+            self.arena.decode_slowdown[i]
+        };
         self.resolved_count += 1;
         // The raw (pre-RTT-fold) prefill sample: the queued-ahead
         // correction in `reprefill_queue_delay` subtracts it when the
@@ -2739,7 +3020,31 @@ impl<'a> FleetSim<'a> {
             };
             (pick, Some(ep), slow)
         } else {
-            (None, None, 1.0)
+            // Base-endpoint targeting books no shard, but under a
+            // batched mode the migrated-in tail still decodes inside a
+            // running batch — price it at the source shard's batch
+            // (+1 for the joining tail), mirroring the shard-targeted
+            // formula. `price_base_tails = false` pins the historical
+            // unpriced (×1.0) tail for comparison; slot-legacy and
+            // flat curves yield exactly 1.0 either way, so those runs
+            // are byte-identical under both settings.
+            let slow = if self.fleet.price_base_tails {
+                match shard {
+                    Some(s) => match self.fleet.batching {
+                        BatchingMode::Continuous(c) => {
+                            c.curve.slowdown(self.shards[s].pool.in_use + 1)
+                        }
+                        BatchingMode::PagedKv(k) => {
+                            k.curve.slowdown(self.shards[s].pool.in_use + 1)
+                        }
+                        BatchingMode::SlotLegacy => 1.0,
+                    },
+                    None => 1.0,
+                }
+            } else {
+                1.0
+            };
+            (None, None, slow)
         };
         // `mig_ep` borrows the endpoint table; remember the mode bit it
         // encodes before the borrow ends at the resolve call below.
@@ -2773,10 +3078,26 @@ impl<'a> FleetSim<'a> {
             &mut self.arena.rng[i],
         );
 
+        // Iteration-level pricing tracks resolved server winners still
+        // decoding in their shard's batch: the record stays provisional
+        // until the release event finalizes it from the (re-stamped)
+        // generation timeline. Migrated streams' tails were committed
+        // at handoff pricing and are never repriced.
+        let track = self.reprice_active()
+            && server_was_admitted
+            && resolved.record.winner == EndpointKind::Server
+            && !resolved.record.migrated
+            && !resolved.gen_rel.is_empty();
+
         // Completion horizon: last delivered token of this stream.
-        let done = req.arrival + resolved.record.ttft + resolved.record.tbts.iter().sum::<f64>();
-        if done.is_finite() {
-            self.horizon = self.horizon.max(done);
+        // Tracked streams defer this to finalization — repricing may
+        // still move their completion either way.
+        if !track {
+            let done =
+                req.arrival + resolved.record.ttft + resolved.record.tbts.iter().sum::<f64>();
+            if done.is_finite() {
+                self.horizon = self.horizon.max(done);
+            }
         }
 
         // Server slot accounting + release (on the owning shard).
@@ -2789,11 +3110,12 @@ impl<'a> FleetSim<'a> {
             // pools, where it frees no slot but retires the in-service
             // `in_use`/work signals the balancers read. Release never
             // exceeds the stream's own completion horizon, so replay
-            // horizons are unchanged. Paged mode stamps the release
-            // time so later preemption/failover can supersede it (the
+            // horizons are unchanged. Paged mode and iteration-level
+            // pricing stamp the release time so later preemption,
+            // failover, or repricing can supersede it (the
             // stale-release guard keys on this exact timestamp).
             let at = release.max(now);
-            if self.fleet.batching.is_paged() {
+            if self.release_guard_active() {
                 self.kv_release_at[i] = at;
             }
             self.push(at, EvKind::ServerRelease(i));
@@ -2848,6 +3170,11 @@ impl<'a> FleetSim<'a> {
             }
         }
 
+        if track {
+            let s = shard.expect("admitted requests are assigned");
+            self.gen_times[i] = resolved.gen_rel;
+            self.decode_live[s].push(i);
+        }
         self.records[i] = Some(resolved.record);
     }
 }
@@ -2911,6 +3238,8 @@ pub fn run_fleet(
         shard_faults: faults,
         outages: fleet.outages.clone(),
         batching,
+        pricing: fleet.pricing,
+        price_base_tails: fleet.price_base_tails,
         event_queue: fleet.event_queue,
     };
     let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &fleet.shard_rtts);
@@ -2997,6 +3326,11 @@ pub fn run_fleet(
         kv_mig_pages: vec![0; n],
         kv_preemptions: 0,
         kv_forced_reprefills: 0,
+        gen_times: vec![Vec::new(); n],
+        decode_live: vec![Vec::new(); shard_count],
+        reprice_events: 0,
+        reprice_stretch_seconds: 0.0,
+        reprice_shrink_seconds: 0.0,
         t0: 0.0,
     };
     sim.run()
@@ -4232,6 +4566,7 @@ mod tests {
             tick_interval: 0.25,
             prefix_caching: cache,
             curve: BatchLatencyCurve::Flat,
+            ..KvConfig::default()
         }
     }
 
@@ -4264,12 +4599,14 @@ mod tests {
                 server_slots: Some(2),
                 shard_rtts: vec![0.0, 0.05, 0.12],
                 batching: BatchingMode::PagedKv(kv),
+                pricing: PricingMode::JoinTime,
             })
             .with_control(ControlSpec {
                 balancer: BalancerKind::LeastWork,
                 autoscale: None,
                 migration_targeting: MigrationTargeting::ShardTargeted,
                 event_queue: EventQueueKind::Heap,
+                price_base_tails: true,
             })
             .with_faults(FaultPlan::default().fault(1, fault).outage(30.0, 2));
         assert_eq!(

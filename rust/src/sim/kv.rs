@@ -44,6 +44,12 @@ pub struct KvConfig {
     pub tick_interval: f64,
     /// Whether the per-shard prefix cache is consulted.
     pub prefix_caching: bool,
+    /// Entry budget of the per-shard prefix index. The index used to
+    /// grow unboundedly within a run; it is now LRU-capped at this many
+    /// block-aligned lengths, with evictions surfaced through
+    /// `LoadReport::prefix_evictions`. Not part of the CLI label/parse
+    /// spelling (`PAGES:BLOCK:CHUNK:cache|nocache` keeps its arity).
+    pub prefix_cache_entries: usize,
     /// Per-token decode latency vs batch size (same shape as
     /// continuous batching — paged admission changes *who* is in the
     /// batch, not how a batch decodes).
@@ -58,6 +64,7 @@ impl Default for KvConfig {
             chunk_tokens: 256,
             tick_interval: 0.25,
             prefix_caching: true,
+            prefix_cache_entries: 1024,
             curve: BatchLatencyCurve::Knee {
                 knee: 8,
                 alpha: 0.05,
@@ -87,6 +94,7 @@ impl KvConfig {
                 0.25
             },
             prefix_caching: self.prefix_caching,
+            prefix_cache_entries: self.prefix_cache_entries.max(1),
             curve: self.curve,
         }
     }
@@ -159,7 +167,13 @@ pub struct KvGate {
     /// Block-aligned prompt lengths this shard has prefilled — the
     /// prefix index. A new prompt's cached prefix is the largest
     /// indexed length not exceeding its own block-aligned length.
+    /// LRU-capped at `cfg.prefix_cache_entries`.
     index: BTreeSet<u32>,
+    /// Last-touch stamp per indexed length (monotone `clock` values),
+    /// driving LRU eviction when the entry budget is exceeded.
+    recency: std::collections::HashMap<u32, u64>,
+    clock: u64,
+    evictions: u64,
     hits: u64,
     lookups: u64,
 }
@@ -175,6 +189,9 @@ impl KvGate {
             admitted_tokens: 0,
             capacity_tokens: cfg.chunk_tokens as u64,
             index: BTreeSet::new(),
+            recency: std::collections::HashMap::new(),
+            clock: 0,
+            evictions: 0,
             hits: 0,
             lookups: 0,
         }
@@ -272,33 +289,59 @@ impl KvGate {
         }
         self.lookups += 1;
         let aligned = len - len % self.cfg.block_tokens;
-        let cached = self
-            .index
-            .range(..=aligned)
-            .next_back()
-            .copied()
-            .unwrap_or(0)
-            .min(len.saturating_sub(1));
+        let entry = self.index.range(..=aligned).next_back().copied();
+        if let Some(e) = entry {
+            // A hit refreshes the serving entry's LRU position.
+            self.touch(e);
+        }
+        let cached = entry.unwrap_or(0).min(len.saturating_sub(1));
         if cached > 0 {
             self.hits += 1;
         }
         cached
     }
 
-    /// Record a prompt of `len` tokens as prefilled on this shard.
+    /// Record a prompt of `len` tokens as prefilled on this shard,
+    /// evicting the least-recently-used entry when the insert pushes
+    /// the index past `cfg.prefix_cache_entries`.
     pub fn prefix_insert(&mut self, len: u32) {
         if !self.cfg.prefix_caching {
             return;
         }
         let aligned = len - len % self.cfg.block_tokens;
-        if aligned > 0 {
-            self.index.insert(aligned);
+        if aligned == 0 {
+            return;
         }
+        self.index.insert(aligned);
+        self.touch(aligned);
+        while self.index.len() > self.cfg.prefix_cache_entries {
+            // Stamps are unique (one monotone clock), so the argmin —
+            // and with it the whole eviction order — is deterministic.
+            let lru = self
+                .recency
+                .iter()
+                .min_by_key(|(_, &stamp)| stamp)
+                .map(|(&len, _)| len)
+                .expect("index and recency stay in lockstep");
+            self.index.remove(&lru);
+            self.recency.remove(&lru);
+            self.evictions += 1;
+        }
+    }
+
+    fn touch(&mut self, aligned: u32) {
+        self.clock += 1;
+        self.recency.insert(aligned, self.clock);
     }
 
     /// (prefix-cache hits, lookups) since the gate was created.
     pub fn prefix_stats(&self) -> (u64, u64) {
         (self.hits, self.lookups)
+    }
+
+    /// Prefix-index entries evicted by the LRU entry budget.
+    pub fn prefix_evictions(&self) -> u64 {
+        self.evictions
     }
 }
 
@@ -438,6 +481,41 @@ mod tests {
         assert_eq!(g.prefix_lookup(96), 95);
         let (hits, lookups) = g.prefix_stats();
         assert_eq!((hits, lookups), (4, 6));
+    }
+
+    #[test]
+    fn prefix_index_lru_evicts_at_entry_budget() {
+        let mut g = KvGate::new(&KvConfig {
+            prefix_cache_entries: 2,
+            block_tokens: 16,
+            ..KvConfig::default()
+        });
+        g.prefix_insert(16);
+        g.prefix_insert(32);
+        assert_eq!(g.prefix_evictions(), 0, "within budget");
+        // A third insert evicts the least-recently-used entry (16).
+        g.prefix_insert(48);
+        assert_eq!(g.prefix_evictions(), 1);
+        assert_eq!(g.prefix_lookup(17), 0, "16 was evicted");
+        // A lookup hit refreshes recency: touch 32, insert 64 → the LRU
+        // victim is now 48, not 32.
+        assert_eq!(g.prefix_lookup(33), 32);
+        g.prefix_insert(64);
+        assert_eq!(g.prefix_evictions(), 2);
+        assert_eq!(g.prefix_lookup(49), 32, "48 evicted, 32 kept");
+        // Re-inserting an indexed length refreshes it without eviction.
+        g.prefix_insert(64);
+        assert_eq!(g.prefix_evictions(), 2);
+        // Degenerate budgets clamp to one entry instead of thrashing.
+        assert_eq!(
+            KvConfig {
+                prefix_cache_entries: 0,
+                ..KvConfig::default()
+            }
+            .normalized()
+            .prefix_cache_entries,
+            1
+        );
     }
 
     #[test]

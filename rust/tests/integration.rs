@@ -19,7 +19,7 @@ use disco::sim::autoscaler::{
     AutoscaleConfig, AutoscalerKind, ColdStartSpec, ReactiveConfig, TtftTargetConfig,
 };
 use disco::sim::balancer::BalancerKind;
-use disco::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig};
+use disco::sim::batching::{BatchLatencyCurve, BatchingMode, ContinuousBatchConfig, PricingMode};
 use disco::sim::engine::{Scenario, SimConfig};
 use disco::sim::event_queue::EventQueueKind;
 use disco::sim::fleet::{ControlSpec, FaultPlan, FleetConfig, MigrationTargeting, ServerSpec};
@@ -1095,12 +1095,14 @@ fn kv_subsystem_and_grouped_configs_inert_across_parity_matrix() {
                             server_slots: Some(1),
                             shard_rtts: Vec::new(),
                             batching: *batching,
+                            pricing: PricingMode::JoinTime,
                         })
                         .with_control(ControlSpec {
                             balancer,
                             autoscale: *auto,
                             migration_targeting: MigrationTargeting::ShardTargeted,
                             event_queue: queue,
+                            price_base_tails: true,
                         })
                         .with_faults(FaultPlan::default());
                     let a = scenario.run_fleet(&trace, &policy, &flat);
@@ -1527,4 +1529,301 @@ fn budget_respected_across_full_grid() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Iteration-level batch repricing (ISSUE 9)
+// ---------------------------------------------------------------------
+
+/// Repricing-inert parity matrix: `PricingMode::IterationLevel` must be
+/// **byte-identical** to the default `JoinTime` — records AND the full
+/// `LoadReport` debug output — everywhere the contract declares it a
+/// no-op: `SlotLegacy` (the mode is ignored), `Flat` curves (the ×1.0
+/// repricing ratio is bit-exact and skipped), and runs whose batch
+/// never exceeds one stream (`slowdown(≤1) == 1.0`). Checked across
+/// every balancer × autoscaler × event-queue backend, with the
+/// repricing telemetry asserted dead.
+#[test]
+fn iteration_level_repricing_inert_across_parity_matrix() {
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 101,
+            ..Default::default()
+        },
+    );
+    let dense = WorkloadSpec::alpaca(150).at_rate(2.0).generate(83);
+    // One arrival per 40 s: every stream (≤ 128 tokens) is long gone
+    // before the next lands, so no batch ever holds two streams.
+    let solo = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 40.0 },
+        ..WorkloadSpec::alpaca(12)
+    }
+    .generate(83);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let autoscale = |kind: AutoscalerKind| AutoscaleConfig {
+        kind,
+        eval_interval: 1.0,
+        min_shards: 1,
+        max_shards: 4,
+        cold_start: ColdStartSpec::Fixed(1.0),
+    };
+    let autoscalers = [
+        None,
+        Some(autoscale(AutoscalerKind::None)),
+        Some(autoscale(AutoscalerKind::Reactive(ReactiveConfig::default()))),
+        Some(autoscale(AutoscalerKind::TtftTarget(TtftTargetConfig::default()))),
+    ];
+    let flat_continuous = BatchingMode::Continuous(ContinuousBatchConfig {
+        curve: BatchLatencyCurve::Flat,
+        ..ContinuousBatchConfig::default()
+    });
+    let steep_continuous = BatchingMode::Continuous(ContinuousBatchConfig {
+        curve: BatchLatencyCurve::Linear { alpha: 0.3 },
+        ..ContinuousBatchConfig::default()
+    });
+    let shapes: [(BatchingMode, &Trace, &str); 3] = [
+        (BatchingMode::SlotLegacy, &dense, "slot-legacy"),
+        (flat_continuous, &dense, "flat-curve"),
+        (steep_continuous, &solo, "single-stream"),
+    ];
+    for balancer in BalancerKind::all() {
+        for auto in &autoscalers {
+            for (batching, trace, shape) in &shapes {
+                for queue in EventQueueKind::all() {
+                    let mut base = FleetConfig::sharded(2, 1, balancer)
+                        .with_batching(*batching)
+                        .with_event_queue(queue);
+                    if let Some(a) = auto {
+                        base = base.with_autoscale(*a);
+                    }
+                    let joined = scenario.run_fleet(trace, &policy, &base);
+                    let repriced = scenario.run_fleet(
+                        trace,
+                        &policy,
+                        &base.clone().with_pricing(PricingMode::IterationLevel),
+                    );
+                    assert_eq!(
+                        joined.records, repriced.records,
+                        "{balancer}/{auto:?}/{shape}/{queue:?}: repricing must be inert"
+                    );
+                    assert_eq!(
+                        format!("{:?}", joined.load),
+                        format!("{:?}", repriced.load),
+                        "{balancer}/{auto:?}/{shape}/{queue:?}: load reports diverged"
+                    );
+                    assert_eq!(
+                        repriced.load.reprice_events, 0,
+                        "{balancer}/{auto:?}/{shape}/{queue:?}: phantom reprice events"
+                    );
+                    assert_eq!(repriced.load.reprice_stretch_seconds, 0.0);
+                    assert_eq!(repriced.load.reprice_shrink_seconds, 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// The join-time pricing bias, pinned end-to-end (ISSUE 9 acceptance):
+/// on a Poisson rate step-up with a `Linear` latency curve,
+/// iteration-level repricing makes streams admitted *before* the surge
+/// strictly slower than join-time pricing claims (their remaining gaps
+/// stretch as the batch grows around them) and streams admitted *at
+/// the peak* strictly faster (their gaps shrink as the batch drains) —
+/// on the identical trace and latency draws. TTFT is untouched
+/// (repricing is a decode-only contract), and the repricing telemetry
+/// records both directions.
+#[test]
+fn repricing_fixes_ramp_and_drain_bias_on_rate_step_up() {
+    // A consumption rate far above any generation rate defeats the
+    // delivery-smoothing floor, so perceived TBTs equal raw gaps and
+    // the pricing difference is directly observable.
+    let mut cfg = SimConfig {
+        seed: 131,
+        ..Default::default()
+    };
+    cfg.migration.consumption_rate = 1e6;
+    let scenario = Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        cfg,
+    );
+    // Poisson step-up: a quiet 2 req/s warm-up, then a 10 req/s surge
+    // on one shard, then silence — the drain.
+    let pre = WorkloadSpec::alpaca(14).at_rate(2.0).generate(89);
+    let surge = WorkloadSpec::alpaca(70).at_rate(10.0).generate(907);
+    let n_pre = pre.requests.len() as u64;
+    let step_at = pre.requests.last().unwrap().arrival + 0.4;
+    let mut requests = pre.requests.clone();
+    for r in &surge.requests {
+        requests.push(disco::trace::Request {
+            id: n_pre + r.id,
+            arrival: step_at + r.arrival,
+            ..*r
+        });
+    }
+    let trace = Trace::new("ramp", requests);
+    let n_all = trace.len() as u64;
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let fleet = FleetConfig::sharded(1, 1, BalancerKind::RoundRobin).with_batching(
+        BatchingMode::Continuous(ContinuousBatchConfig {
+            prefill_tokens_per_tick: u32::MAX,
+            tick_interval: 0.25,
+            max_batch: None,
+            curve: BatchLatencyCurve::Linear { alpha: 0.12 },
+        }),
+    );
+    let joined = scenario.run_fleet(&trace, &policy, &fleet);
+    let repriced = scenario.run_fleet(
+        &trace,
+        &policy,
+        &fleet.clone().with_pricing(PricingMode::IterationLevel),
+    );
+    assert_eq!(joined.records.len(), repriced.records.len());
+    // Decode-only contract: identical TTFTs, stream for stream.
+    for (j, r) in joined.records.iter().zip(&repriced.records) {
+        assert_eq!(j.id, r.id);
+        assert_eq!(j.ttft, r.ttft, "req {}: repricing touched TTFT", j.id);
+        assert_eq!(j.tbts.len(), r.tbts.len());
+    }
+    assert!(
+        repriced.load.reprice_events > 0,
+        "a rate step-up under a linear curve must reprice"
+    );
+    assert!(
+        repriced.load.reprice_stretch_seconds > 0.0,
+        "the ramp must stretch pending gaps"
+    );
+    assert!(
+        repriced.load.reprice_shrink_seconds > 0.0,
+        "the drain must shrink pending gaps"
+    );
+    let window_mean = |recs: &[disco::metrics::RequestRecord], lo: u64, hi: u64| -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for rec in recs {
+            if rec.id >= lo && rec.id < hi {
+                sum += rec.tbts.iter().sum::<f64>();
+                n += rec.tbts.len();
+            }
+        }
+        assert!(n > 0, "empty window [{lo}, {hi})");
+        sum / n as f64
+    };
+    // Ramp window: the pre-surge streams. Join-time pricing froze them
+    // at their small admission batches; repricing stretches their
+    // remaining gaps as the surge piles in.
+    let ramp_joined = window_mean(&joined.records, 0, n_pre);
+    let ramp_repriced = window_mean(&repriced.records, 0, n_pre);
+    assert!(
+        ramp_repriced > ramp_joined,
+        "ramp window: repriced mean TBT {ramp_repriced:.4}s must exceed join-time {ramp_joined:.4}s"
+    );
+    // Drain window: the last surge arrivals. Join-time pricing charges
+    // them their near-peak admission batch forever; repricing lets them
+    // speed up as the batch empties.
+    let drain_joined = window_mean(&joined.records, n_all - 15, n_all);
+    let drain_repriced = window_mean(&repriced.records, n_all - 15, n_all);
+    assert!(
+        drain_repriced < drain_joined,
+        "drain window: repriced mean TBT {drain_repriced:.4}s must undercut join-time {drain_joined:.4}s"
+    );
+    // On the same step-up, a Flat curve and the slot model stay
+    // byte-identical across pricing modes (the other half of the
+    // acceptance criterion; the full matrix lives above).
+    let flat = FleetConfig::sharded(1, 1, BalancerKind::RoundRobin).with_batching(
+        BatchingMode::Continuous(ContinuousBatchConfig {
+            prefill_tokens_per_tick: u32::MAX,
+            tick_interval: 0.25,
+            max_batch: None,
+            curve: BatchLatencyCurve::Flat,
+        }),
+    );
+    for base in [flat, FleetConfig::sharded(1, 4, BalancerKind::RoundRobin)] {
+        let a = scenario.run_fleet(&trace, &policy, &base);
+        let b = scenario.run_fleet(
+            &trace,
+            &policy,
+            &base.clone().with_pricing(PricingMode::IterationLevel),
+        );
+        assert_eq!(a.records, b.records, "inert shape diverged on the ramp trace");
+        assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+    }
+}
+
+/// Regression pin for the base-endpoint tail-pricing fix: under
+/// `MigrationTargeting::BaseEndpoint` with a batched mode, §4.3
+/// server-bound re-prefill tails are priced at the source shard's
+/// batch (the `price_base_tails: true` default), while
+/// `with_base_tail_pricing(false)` keeps the historical PR-5 unpriced
+/// path reachable. The flag touches migrated tails only: unmigrated
+/// streams are byte-identical across the flag, every unpriced tail is
+/// weakly faster than its priced twin, and at least one pair actually
+/// differs (the flag is observable).
+#[test]
+fn base_endpoint_tail_pricing_flag_pins_legacy_unpriced_path() {
+    let scenario = Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Device,
+        SimConfig {
+            seed: 113,
+            ..Default::default()
+        },
+    );
+    let trace = WorkloadSpec::alpaca(300).at_rate(3.0).generate(59);
+    // Device-constrained racing with §4.3 migration on: device winners
+    // hand their tails to the (base-endpoint) server mid-decode.
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let fleet = FleetConfig::sharded(2, 2, BalancerKind::JoinShortestQueue).with_batching(
+        BatchingMode::Continuous(ContinuousBatchConfig {
+            curve: BatchLatencyCurve::Linear { alpha: 0.5 },
+            ..ContinuousBatchConfig::default()
+        }),
+    );
+    let priced = scenario.run_fleet(&trace, &policy, &fleet);
+    let unpriced = scenario.run_fleet(
+        &trace,
+        &policy,
+        &fleet.clone().with_base_tail_pricing(false),
+    );
+    assert_eq!(priced.records.len(), unpriced.records.len());
+    let mut migrated = 0usize;
+    let mut differing = 0usize;
+    for (p, u) in priced.records.iter().zip(&unpriced.records) {
+        assert_eq!(p.id, u.id);
+        assert_eq!(
+            p.migrated, u.migrated,
+            "req {}: the flag must not change migration decisions",
+            p.id
+        );
+        if !p.migrated {
+            assert_eq!(p, u, "req {}: flag touched an unmigrated stream", p.id);
+            continue;
+        }
+        migrated += 1;
+        let ps: f64 = p.tbts.iter().sum();
+        let us: f64 = u.tbts.iter().sum();
+        assert!(
+            us <= ps + 1e-9,
+            "req {}: unpriced tail ({us:.4}s) slower than priced ({ps:.4}s)",
+            p.id
+        );
+        assert!(
+            u.delay_num <= p.delay_num,
+            "req {}: unpriced tail delayed more tokens",
+            p.id
+        );
+        if p != u {
+            differing += 1;
+        }
+    }
+    assert!(migrated > 0, "the workload never migrated a stream");
+    assert!(
+        differing > 0,
+        "tail pricing had no observable effect across {migrated} migrations"
+    );
 }
