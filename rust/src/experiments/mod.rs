@@ -16,6 +16,7 @@ pub mod failover_sweep;
 pub mod kv_sweep;
 pub mod load_sweep;
 pub mod migration_exp;
+pub mod pd_sweep;
 pub mod quality_exp;
 pub mod shard_sweep;
 pub mod zone_sweep;
@@ -177,6 +178,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             id: "kv-sweep",
             title: "Fleet: paged KV pools × prefix caching across session loads",
             run: kv_sweep::kv_sweep,
+        },
+        ExperimentDef {
+            id: "pd-sweep",
+            title: "Fleet: prefill/decode disaggregation vs colocated under KV-transfer cost",
+            run: pd_sweep::pd_sweep,
         },
         ExperimentDef {
             id: "zone-sweep",

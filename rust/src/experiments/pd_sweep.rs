@@ -1,0 +1,364 @@
+//! Prefill/decode disaggregation sweep: pool splits vs the colocated
+//! baseline under an explicit KV-transfer cost.
+//!
+//! Each cell serves the same server-bound workload on the same total
+//! shard budget and varies only the fleet shape — colocated (every
+//! shard `Unified`) or a P:D split ([`DisaggSpec`]) — crossed with the
+//! KV-transfer overhead and the offered rate. Cells at the same seed
+//! replay the identical trace and latency draws
+//! ([`CellSeed`] content-derived seeding), so TTFT/TBT differences are
+//! pure topology + transfer-cost effects: the sweep surfaces both the
+//! regime where disaggregation wins tail TTFT (long decode tails pin
+//! colocated slots) and the crossover where a slow interconnect hands
+//! the TBT win back to the colocated fleet.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::experiments::common::{make_policy, par_map, CellSeed};
+use crate::experiments::ExpContext;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::balancer::BalancerKind;
+use crate::sim::engine::{Scenario, SimConfig};
+use crate::sim::fleet::{DisaggSpec, FleetConfig, KvTransferCost};
+use crate::trace::generator::{Arrival, WorkloadSpec};
+use crate::util::csv::CsvWriter;
+use crate::util::render_table;
+
+/// One cell of the P/D-sweep grid.
+#[derive(Clone, Copy, Debug)]
+pub struct PdCell {
+    /// `None` = colocated baseline; `Some((p, d))` = disaggregated.
+    pub split: Option<(usize, usize)>,
+    /// Fixed per-handoff KV-transfer overhead (seconds; ignored by the
+    /// colocated baseline).
+    pub transfer_overhead: f64,
+    /// Offered arrival rate (req/s).
+    pub rate_rps: f64,
+}
+
+impl PdCell {
+    /// Table/CSV label for the fleet-shape axis.
+    pub fn shape_label(&self) -> String {
+        match self.split {
+            None => "unified".to_string(),
+            Some((p, d)) => format!("{p}p{d}d"),
+        }
+    }
+}
+
+/// Seed-averaged results for one cell.
+#[derive(Clone, Debug)]
+pub struct PdCellResult {
+    pub cell: PdCell,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_tbt: f64,
+    /// Prefill→decode handoffs per run.
+    pub handoffs: f64,
+    /// Total injected KV-transfer seconds per run.
+    pub kv_transfer_seconds: f64,
+    /// Handoffs that found no admitting decode shard.
+    pub handoff_fallbacks: f64,
+}
+
+/// Sweep parameters, shared by the `pd-sweep` experiment and the
+/// `pd_sweep` CLI subcommand.
+#[derive(Clone, Debug)]
+pub struct PdSweepParams {
+    /// Fleet shapes: `None` = colocated, `Some((p, d))` = disaggregated.
+    /// Every shape should provision the same total shard count for a
+    /// fair equal-shard-seconds comparison.
+    pub splits: Vec<Option<(usize, usize)>>,
+    /// Per-handoff fixed overheads (seconds) to cross the splits with.
+    pub transfer_overheads: Vec<f64>,
+    /// Seconds of KV transfer per prompt token.
+    pub transfer_per_token: f64,
+    pub rates: Vec<f64>,
+    /// Total shard count of the colocated baseline.
+    pub shards: usize,
+    pub slots_per_shard: usize,
+    pub balancer: BalancerKind,
+    pub policy: PolicyKind,
+    pub b: f64,
+    pub n_requests: usize,
+    pub n_seeds: u64,
+    pub service: ServerProfile,
+    pub device: DeviceProfile,
+}
+
+impl Default for PdSweepParams {
+    fn default() -> Self {
+        PdSweepParams {
+            splits: vec![None, Some((2, 2)), Some((3, 1)), Some((1, 3))],
+            // NVLink-class vs a pathologically slow interconnect: the
+            // second cell exists to show the crossover, not a plausible
+            // deployment.
+            transfer_overheads: vec![0.005, 1.0],
+            transfer_per_token: 2e-6,
+            // DeepSeek prefill ≈ 1.3 s, tail ≈ 3 s ⇒ a 4×1-slot
+            // colocated fleet saturates near 0.9 rps; 1.2 rps overloads
+            // it while a 2-shard prefill pool (≈ 1.5 rps) keeps up.
+            rates: vec![0.6, 1.2],
+            shards: 4,
+            slots_per_shard: 1,
+            balancer: BalancerKind::LeastWork,
+            policy: PolicyKind::ServerOnly,
+            b: 1.0,
+            n_requests: 200,
+            n_seeds: 3,
+            service: ServerProfile::deepseek_v25(),
+            device: DeviceProfile::xiaomi14_qwen0b5(),
+        }
+    }
+}
+
+impl PdSweepParams {
+    /// Number of grid cells: the colocated baseline runs once per rate
+    /// (the transfer cost cannot touch it), each split once per
+    /// (overhead × rate).
+    pub fn n_cells(&self) -> usize {
+        let splits = self.splits.iter().filter(|s| s.is_some()).count();
+        let unified = self.splits.iter().filter(|s| s.is_none()).count();
+        self.rates.len() * (unified + splits * self.transfer_overheads.len())
+    }
+}
+
+/// Run the (rate × shape × transfer-cost) grid in parallel; cells come
+/// back in grid order (rates outer, shapes middle, overheads inner —
+/// the colocated baseline collapses its overhead axis).
+pub fn run_grid(params: &PdSweepParams) -> Vec<PdCellResult> {
+    let mut cells = Vec::with_capacity(params.n_cells());
+    for &rate_rps in &params.rates {
+        for &split in &params.splits {
+            match split {
+                None => cells.push(PdCell {
+                    split,
+                    transfer_overhead: 0.0,
+                    rate_rps,
+                }),
+                Some(_) => {
+                    for &transfer_overhead in &params.transfer_overheads {
+                        cells.push(PdCell {
+                            split,
+                            transfer_overhead,
+                            rate_rps,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    par_map(&cells, |_, cell| run_cell(params, cell))
+}
+
+fn run_cell(params: &PdSweepParams, cell: &PdCell) -> PdCellResult {
+    let mut mean_ttft = Vec::new();
+    let mut p99_ttft = Vec::new();
+    let mut mean_tbt = Vec::new();
+    let mut handoffs = Vec::new();
+    let mut transfer = Vec::new();
+    let mut fallbacks = Vec::new();
+    for seed in 0..params.n_seeds {
+        // Content-derived seed over the rate only: every shape and
+        // transfer cost at the same (seed, rate) replays the identical
+        // trace and latency draws (paired comparison).
+        let cell_seed = CellSeed::new(seed).mix_f64(cell.rate_rps);
+        let scenario = Scenario::new(
+            params.service.clone(),
+            params.device.clone(),
+            Constraint::Server,
+            SimConfig {
+                seed: cell_seed.scenario(),
+                ..Default::default()
+            },
+        );
+        let spec = WorkloadSpec {
+            arrival: Arrival::Fixed {
+                gap: 1.0 / cell.rate_rps,
+            },
+            ..WorkloadSpec::alpaca(params.n_requests)
+        };
+        let trace = spec.generate(cell_seed.trace(0x9D5EE9));
+        let mut fleet =
+            FleetConfig::sharded(params.shards, params.slots_per_shard, params.balancer);
+        if let Some((p, d)) = cell.split {
+            fleet = fleet.with_disagg(DisaggSpec {
+                transfer: KvTransferCost {
+                    per_token: params.transfer_per_token,
+                    overhead: cell.transfer_overhead,
+                },
+                ..DisaggSpec::split(p, d)
+            });
+        }
+        let policy = make_policy(
+            params.policy,
+            params.b,
+            false,
+            &scenario,
+            &trace,
+            cell_seed.scenario(),
+        );
+        let rep = scenario.run_fleet_report(&trace, &policy, &fleet);
+        mean_ttft.push(rep.qoe.ttft.mean);
+        p99_ttft.push(rep.qoe.ttft.p99);
+        mean_tbt.push(rep.qoe.tbt.mean);
+        handoffs.push(rep.load.handoff_count as f64);
+        transfer.push(rep.load.kv_transfer_seconds);
+        fallbacks.push(rep.load.handoff_fallbacks as f64);
+    }
+    let avg = crate::stats::describe::mean;
+    PdCellResult {
+        cell: *cell,
+        mean_ttft: avg(&mean_ttft),
+        p99_ttft: avg(&p99_ttft),
+        mean_tbt: avg(&mean_tbt),
+        handoffs: avg(&handoffs),
+        kv_transfer_seconds: avg(&transfer),
+        handoff_fallbacks: avg(&fallbacks),
+    }
+}
+
+/// Render a grid as the experiment's text table.
+pub fn render_grid(results: &[PdCellResult]) -> String {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.cell.shape_label(),
+                format!("{:.3}", r.cell.transfer_overhead),
+                format!("{:.2}", r.cell.rate_rps),
+                format!("{:.3}", r.mean_ttft),
+                format!("{:.3}", r.p99_ttft),
+                format!("{:.4}", r.mean_tbt),
+                format!("{:.1}", r.handoffs),
+                format!("{:.2}", r.kv_transfer_seconds),
+                format!("{:.1}", r.handoff_fallbacks),
+            ]
+        })
+        .collect();
+    render_table(
+        &[
+            "shape",
+            "xfer@",
+            "rate",
+            "mean TTFT",
+            "p99 TTFT",
+            "mean TBT",
+            "handoffs",
+            "xfer s",
+            "fallbacks",
+        ],
+        &rows,
+    )
+}
+
+/// The `pd-sweep` experiment entry: default grid, CSV + table.
+pub fn pd_sweep(ctx: &ExpContext) -> anyhow::Result<String> {
+    let params = PdSweepParams {
+        n_requests: ctx.n_requests.clamp(50, 200),
+        n_seeds: ctx.n_seeds.clamp(1, 3),
+        ..Default::default()
+    };
+    let results = run_grid(&params);
+    let mut csv = CsvWriter::new(&[
+        "shape",
+        "transfer_overhead",
+        "rate_rps",
+        "mean_ttft",
+        "p99_ttft",
+        "mean_tbt",
+        "handoffs",
+        "kv_transfer_seconds",
+        "handoff_fallbacks",
+    ]);
+    for r in &results {
+        csv.rowd(&[
+            r.cell.shape_label(),
+            format!("{:.4}", r.cell.transfer_overhead),
+            format!("{:.3}", r.cell.rate_rps),
+            format!("{:.4}", r.mean_ttft),
+            format!("{:.4}", r.p99_ttft),
+            format!("{:.5}", r.mean_tbt),
+            format!("{:.2}", r.handoffs),
+            format!("{:.3}", r.kv_transfer_seconds),
+            format!("{:.2}", r.handoff_fallbacks),
+        ]);
+    }
+    csv.write(&ctx.csv_path("pd-sweep"))?;
+    Ok(render_grid(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> PdSweepParams {
+        PdSweepParams {
+            splits: vec![None, Some((2, 2))],
+            transfer_overheads: vec![0.005],
+            rates: vec![1.2],
+            n_requests: 80,
+            n_seeds: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_pairs_unified_against_split_and_counts_handoffs() {
+        let params = tiny_params();
+        let results = run_grid(&params);
+        assert_eq!(results.len(), params.n_cells());
+        assert_eq!(results.len(), 2);
+        let (unified, split) = (&results[0], &results[1]);
+        assert!(unified.cell.split.is_none());
+        assert_eq!(unified.handoffs, 0.0, "colocated cells must not hand off");
+        assert_eq!(unified.kv_transfer_seconds, 0.0);
+        assert!(split.handoffs > 0.0, "split cells must hand off");
+        assert!(split.kv_transfer_seconds > 0.0);
+        assert_eq!(split.handoff_fallbacks, 0.0, "static decode pool always admits");
+        // The acceptance overload: long decode tails pin colocated
+        // slots, so the split wins tail TTFT on the same shard budget.
+        assert!(
+            split.p99_ttft < unified.p99_ttft,
+            "2p2d must beat unified p99 TTFT at 1.2 rps: {:.2} vs {:.2}",
+            split.p99_ttft,
+            unified.p99_ttft
+        );
+    }
+
+    #[test]
+    fn slow_interconnect_loses_the_tbt_comparison() {
+        let params = PdSweepParams {
+            splits: vec![None, Some((2, 2))],
+            transfer_overheads: vec![1.0],
+            rates: vec![0.6],
+            n_requests: 60,
+            n_seeds: 1,
+            ..Default::default()
+        };
+        let results = run_grid(&params);
+        let (unified, split) = (&results[0], &results[1]);
+        assert!(
+            split.mean_tbt > unified.mean_tbt,
+            "a 1 s/handoff interconnect must lose mean TBT: {:.4} vs {:.4}",
+            split.mean_tbt,
+            unified.mean_tbt
+        );
+    }
+
+    #[test]
+    fn pd_sweep_writes_csv() {
+        let ctx = ExpContext {
+            out_dir: std::env::temp_dir().join("disco_exp_pd_sweep"),
+            n_seeds: 1,
+            n_requests: 60,
+        };
+        let out = pd_sweep(&ctx).unwrap();
+        assert!(out.contains("shape"));
+        let csv = std::fs::read_to_string(ctx.csv_path("pd-sweep")).unwrap();
+        // Header + 2 rates × (1 unified + 3 splits × 2 overheads).
+        assert_eq!(csv.lines().count(), 1 + 14);
+        assert_eq!(PdSweepParams::default().n_cells(), 14);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

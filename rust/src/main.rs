@@ -9,7 +9,7 @@
 //! fleet_sweep
 //!          parallel (arrival-rate × policy) grid on the fleet simulator
 //! shard_sweep / autoscale_sweep / failover_sweep / batching_sweep /
-//! zone_sweep / kv_sweep
+//! zone_sweep / kv_sweep / pd_sweep
 //!          aliases for `exp <id>`: each runs its registry entry with the
 //!          shared --quick/--seeds/--requests/--out context
 //! bench    fixed-seed fleet benchmark -> BENCH_fleet.json (CI perf gate)
@@ -46,6 +46,7 @@ fn main() {
         "batching_sweep" | "batching-sweep" => run_registry("batching-sweep", &args),
         "zone_sweep" | "zone-sweep" => run_registry("zone-sweep", &args),
         "kv_sweep" | "kv-sweep" => run_registry("kv-sweep", &args),
+        "pd_sweep" | "pd-sweep" => run_registry("pd-sweep", &args),
         "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "serve" => cmd_serve(&args),
@@ -73,14 +74,15 @@ fn print_help() {
          \x20             [--shards K] [--balancer rr|jsq|p2c|least-work]\n\
          \x20             [--requests N] [--seeds N] [--service S] [--device D]\n\
          \x20 shard_sweep / autoscale_sweep / failover_sweep / batching_sweep /\n\
-         \x20 zone_sweep / kv_sweep\n\
+         \x20 zone_sweep / kv_sweep / pd_sweep\n\
          \x20             aliases for `exp <id>`: each runs its registry entry\n\
          \x20             (shards × balancer × rate, autoscaling policies, mid-burst\n\
          \x20             shard failure, continuous batching vs slots, zoned cells,\n\
-         \x20             paged-KV pools × prefix caching) with the shared\n\
+         \x20             paged-KV pools × prefix caching, prefill/decode\n\
+         \x20             disaggregation × KV-transfer cost) with the shared\n\
          \x20             [--quick] [--seeds N] [--requests N] [--out DIR] context\n\
          \x20 bench       fixed-seed fleet benchmarks (slot-legacy + continuous\n\
-         \x20             batching + paged-kv + zoned) → BENCH_fleet.json\n\
+         \x20             batching + paged-kv + zoned + disaggregated) → BENCH_fleet.json\n\
          \x20             [--requests N] [--reps N]\n\
          \x20             [--out FILE] [--baseline FILE] [--max-regression FRAC]\n\
          \x20 trace-gen   generate a synthetic workload trace (JSONL)\n\
@@ -295,6 +297,7 @@ fn cmd_fleet_sweep(args: &Args) -> anyhow::Result<()> {
 /// reference backend, `batching_events_per_sec` for the continuous hot
 /// path, `kv_events_per_sec` for the paged-KV hot path,
 /// `reprice_events_per_sec` for the iteration-level repricing hot path,
+/// `pd_handoffs_per_sec` for the prefill/decode handoff path,
 /// `sessions_per_sec` for the wide fleet, `zoned_sessions_per_sec` for
 /// the zoned cell; keys missing from the baseline skip their gate —
 /// except the original `events_per_sec`). Each cell declares which
@@ -306,7 +309,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         BatchLatencyCurve, BatchingMode, ContinuousBatchConfig, PricingMode,
     };
     use disco::sim::event_queue::EventQueueKind;
-    use disco::sim::fleet::{FleetConfig, FleetOutcome};
+    use disco::sim::fleet::{DisaggSpec, FleetConfig, FleetOutcome};
     use disco::sim::kv::KvConfig;
     use disco::sim::zones::ZonedFleetConfig;
     use disco::stats::describe::Summary;
@@ -340,6 +343,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         /// gates the repriced cell on the repricing hot path actually
         /// firing (a floor, so the feature can't silently go inert).
         RepriceEventsPerSec,
+        /// Prefill→decode KV handoffs per wall-clock second — gates the
+        /// disaggregated cell on the handoff path actually firing.
+        HandoffsPerSec,
     }
     struct Cell {
         name: &'static str,
@@ -353,6 +359,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         sps: f64,
         /// Iteration-level repricing passes per wall-clock second.
         reprice_eps: f64,
+        /// Prefill→decode handoffs per wall-clock second.
+        handoff_eps: f64,
         p50: f64,
         p99: f64,
     }
@@ -362,6 +370,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 GateMetric::EventsPerSec => (self.eps, "events/s"),
                 GateMetric::SessionsPerSec => (self.sps, "sessions/s"),
                 GateMetric::RepriceEventsPerSec => (self.reprice_eps, "reprices/s"),
+                GateMetric::HandoffsPerSec => (self.handoff_eps, "handoffs/s"),
             }
         }
     }
@@ -392,6 +401,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             eps: events as f64 / wall,
             sps: n as f64 / wall,
             reprice_eps: outcome.load.reprice_events as f64 / wall,
+            handoff_eps: outcome.load.handoff_count as f64 / wall,
             p50: s.p50,
             p99: s.p99,
         }
@@ -420,6 +430,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ..ContinuousBatchConfig::default()
         }))
         .with_pricing(PricingMode::IterationLevel);
+    // The disaggregated cell: the same topology split 2 prefill + 2
+    // decode, so every server-won stream crosses the KV-transfer
+    // handoff (pick, booking, MigrationRelease). Gated on handoff
+    // throughput — a floor, so the handoff path can't silently go inert.
+    let pd_fleet = FleetConfig::sharded(4, 2, BalancerKind::JoinShortestQueue)
+        .with_disagg(DisaggSpec::split(2, 2));
     // The sessions cell: a wide fleet (K = 32) under the incrementally
     // indexed JSQ balancer — the topology where the old O(K)-per-arrival
     // rescan hurt most; gated on sessions/sec rather than events/sec.
@@ -472,6 +488,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             GateMetric::SessionsPerSec,
             &|| scenario.run_zoned_fleet(&trace, &policy, &zoned_wide).merged,
         ),
+        run_cell(
+            "disaggregated",
+            "pd_handoffs_per_sec",
+            GateMetric::HandoffsPerSec,
+            &|| scenario.run_fleet(&trace, &policy, &pd_fleet),
+        ),
     ];
 
     let json = Json::obj(vec![
@@ -496,6 +518,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         // The zone-partitioned wide cell (Z × K = 4 × 32): aggregate
         // sessions/sec when one bench cell fans across every core.
         ("zoned_sessions_per_sec", Json::num(cells[6].sps)),
+        // Prefill→decode handoff throughput on the disaggregated cell —
+        // a floor, not a ceiling: zero means the handoff path went inert.
+        ("pd_handoffs_per_sec", Json::num(cells[7].handoff_eps)),
         // Wheel speedup over the heap reference on the identical
         // workload (>1 means the new default backend is faster).
         (

@@ -138,6 +138,34 @@ pub struct ShardLoad {
     pub kv_pages_peak: usize,
     /// The shard's total KV page pool (paged-KV batching; 0 otherwise).
     pub kv_pages_total: usize,
+    /// The shard's pool role under phase disaggregation
+    /// (`Unified` for every shard of a non-disaggregated fleet).
+    pub role: crate::sim::fleet::PoolRole,
+    /// Streams whose KV was handed *into* this shard by the
+    /// prefill→decode handoff (always 0 outside disaggregation, and
+    /// always 0 on prefill shards).
+    pub handoff_in: usize,
+}
+
+/// Per-pool aggregate of a fleet's shard breakdown (see
+/// [`LoadReport::pool_breakdown`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolBreakdown {
+    /// The pool's role (every shard of a non-disaggregated fleet is
+    /// `Unified`).
+    pub role: crate::sim::fleet::PoolRole,
+    /// Shards that carried this role (including autoscaled ones that
+    /// have since retired).
+    pub shards: usize,
+    /// Within-capacity slot-seconds consumed across the pool.
+    pub busy_seconds: f64,
+    /// Summed shard lifetimes (the pool's provisioned shard-seconds
+    /// numerator base).
+    pub lifetime_seconds: f64,
+    /// Requests admitted across the pool.
+    pub admitted: usize,
+    /// Streams handed *into* the pool by prefill→decode handoff.
+    pub handoff_in: usize,
 }
 
 /// Kind of shard-autoscaling transition.
@@ -287,9 +315,22 @@ pub struct LoadReport {
     /// a smaller batch (drain direction), summed as a positive total.
     pub reprice_shrink_seconds: f64,
     /// Prefix-cache index entries evicted by the per-shard LRU entry
-    /// budget (`KvConfig::prefix_cache_entries`; paged-KV batching with
-    /// prefix caching on; 0 otherwise).
+    /// budget (`KvConfig::prefix_cache_entries`) or by TTL expiry
+    /// (`KvConfig::prefix_cache_ttl`; paged-KV batching with prefix
+    /// caching on; 0 otherwise).
     pub prefix_evictions: u64,
+    /// Streams whose KV was handed from a prefill shard to a decode
+    /// shard (phase disaggregation; 0 otherwise — and provably 0 for
+    /// `PoolRole::Unified` fleets).
+    pub handoff_count: usize,
+    /// Wall-clock seconds of prefill→decode KV transfer delay injected
+    /// into streams (each lands as one stretched inter-token gap;
+    /// phase disaggregation only, 0 otherwise).
+    pub kv_transfer_seconds: f64,
+    /// Handoff-eligible streams that decoded in place on their prefill
+    /// shard because no decode shard was admitting (phase
+    /// disaggregation only, 0 otherwise).
+    pub handoff_fallbacks: usize,
 }
 
 impl LoadReport {
@@ -374,6 +415,35 @@ impl LoadReport {
     /// across shards (the over-commit complement of busy-seconds).
     pub fn overcommit_seconds(&self) -> f64 {
         self.shards.iter().map(|s| s.overcommit_seconds).sum()
+    }
+
+    /// Per-pool aggregates of the shard breakdown, one entry per
+    /// [`crate::sim::fleet::PoolRole`] that has at least one shard, in
+    /// Unified → Prefill → Decode order. Non-disaggregated fleets
+    /// report a single `Unified` entry covering every shard.
+    pub fn pool_breakdown(&self) -> Vec<PoolBreakdown> {
+        use crate::sim::fleet::PoolRole;
+        [PoolRole::Unified, PoolRole::Prefill, PoolRole::Decode]
+            .into_iter()
+            .filter_map(|role| {
+                let mut b = PoolBreakdown {
+                    role,
+                    shards: 0,
+                    busy_seconds: 0.0,
+                    lifetime_seconds: 0.0,
+                    admitted: 0,
+                    handoff_in: 0,
+                };
+                for s in self.shards.iter().filter(|s| s.role == role) {
+                    b.shards += 1;
+                    b.busy_seconds += s.busy_seconds;
+                    b.lifetime_seconds += s.lifetime_seconds;
+                    b.admitted += s.admitted;
+                    b.handoff_in += s.handoff_in;
+                }
+                (b.shards > 0).then_some(b)
+            })
+            .collect()
     }
 
     /// Token-budget utilization in (0, 1]-ish under continuous batching
@@ -644,6 +714,9 @@ impl LoadReport {
             reprice_stretch_seconds: sum_f(|r| r.reprice_stretch_seconds),
             reprice_shrink_seconds: sum_f(|r| r.reprice_shrink_seconds),
             prefix_evictions: parts.iter().map(|(r, _)| r.prefix_evictions).sum(),
+            handoff_count: sum_u(|r| r.handoff_count),
+            kv_transfer_seconds: sum_f(|r| r.kv_transfer_seconds),
+            handoff_fallbacks: sum_u(|r| r.handoff_fallbacks),
         }
     }
 }
@@ -729,6 +802,8 @@ mod tests {
             prompt_token_capacity: 0,
             kv_pages_peak: 0,
             kv_pages_total: 0,
+            role: crate::sim::fleet::PoolRole::Unified,
+            handoff_in: 0,
         }
     }
 
@@ -763,6 +838,9 @@ mod tests {
             reprice_stretch_seconds: 0.0,
             reprice_shrink_seconds: 0.0,
             prefix_evictions: 0,
+            handoff_count: 0,
+            kv_transfer_seconds: 0.0,
+            handoff_fallbacks: 0,
         }
     }
 
@@ -795,6 +873,44 @@ mod tests {
         assert_eq!(lr.server_utilization(), None);
         let mixed = load(10.0, 5.0, vec![shard(2.0, 3, Some(1)), shard(3.0, 4, None)]);
         assert_eq!(mixed.server_utilization(), None);
+    }
+
+    /// `pool_breakdown` groups the shard slice by role in
+    /// Unified → Prefill → Decode order; a uniform fleet collapses to a
+    /// single `Unified` entry covering every shard.
+    #[test]
+    fn pool_breakdown_groups_by_role() {
+        use crate::sim::fleet::PoolRole;
+        let mut lr = load(
+            10.0,
+            6.0,
+            vec![
+                shard(2.0, 3, Some(1)),
+                shard(3.0, 4, Some(1)),
+                shard(1.0, 2, Some(1)),
+            ],
+        );
+        let uni = lr.pool_breakdown();
+        assert_eq!(uni.len(), 1);
+        assert_eq!(uni[0].role, PoolRole::Unified);
+        assert_eq!(uni[0].shards, 3);
+        assert_eq!(uni[0].admitted, 9);
+        lr.shards[0].role = PoolRole::Prefill;
+        lr.shards[1].role = PoolRole::Decode;
+        lr.shards[2].role = PoolRole::Decode;
+        lr.shards[1].handoff_in = 4;
+        let pools = lr.pool_breakdown();
+        assert_eq!(pools.len(), 2);
+        assert_eq!(
+            (pools[0].role, pools[0].shards, pools[0].admitted),
+            (PoolRole::Prefill, 1, 3)
+        );
+        assert_eq!(
+            (pools[1].role, pools[1].shards, pools[1].handoff_in),
+            (PoolRole::Decode, 2, 4)
+        );
+        assert_eq!(pools[1].busy_seconds, 4.0);
+        assert_eq!(pools[1].lifetime_seconds, 20.0);
     }
 
     /// The warm-shard mean is time-weighted over the timeline: 10 s at
@@ -925,6 +1041,9 @@ mod tests {
         a.reprice_stretch_seconds = 1.25;
         a.reprice_shrink_seconds = 0.5;
         a.prefix_evictions = 6;
+        a.handoff_count = 3;
+        a.kv_transfer_seconds = 0.25;
+        a.handoff_fallbacks = 1;
         a.shard_timeline = vec![ShardCountSample {
             time: 0.0,
             warm: 1,
@@ -946,6 +1065,9 @@ mod tests {
         b.reprice_stretch_seconds = 0.75;
         b.reprice_shrink_seconds = 0.25;
         b.prefix_evictions = 4;
+        b.handoff_count = 2;
+        b.kv_transfer_seconds = 0.5;
+        b.handoff_fallbacks = 2;
         b.shard_timeline = vec![
             ShardCountSample {
                 time: 0.0,
@@ -988,6 +1110,9 @@ mod tests {
         assert_eq!(m.reprice_stretch_seconds, 2.0);
         assert_eq!(m.reprice_shrink_seconds, 0.75);
         assert_eq!(m.prefix_evictions, 10);
+        assert_eq!(m.handoff_count, 5);
+        assert_eq!(m.kv_transfer_seconds, 0.75);
+        assert_eq!(m.handoff_fallbacks, 3);
         // Horizon covers the latest zone end: max(0+10, 3+8) = 11.
         assert_eq!(m.horizon, 11.0);
         // Breakdown concatenates in zone order; per-shard fields intact.

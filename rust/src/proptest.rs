@@ -197,6 +197,13 @@ mod tests {
     /// determinism contract checked under the nastiest fleet dynamics
     /// the suite generates.
     ///
+    /// A **P/D-disaggregation axis** splits ~a third of the K ≥ 2
+    /// storms into prefill/decode pools: the same stream invariants
+    /// must survive the extra KV-transfer handoff hop (including an
+    /// outage landing on either pool), the handoff ledger must balance
+    /// (`Σ handoff_in == handoff_count`), and undisaggregated storms
+    /// must report zero handoff telemetry.
+    ///
     /// Every storm also replays zone-partitioned (Z ∈ 1..=3 copies of
     /// the same failing fleet, `sim/zones.rs`): the merged stream must
     /// keep every invariant above, the merged load report must
@@ -214,11 +221,14 @@ mod tests {
         };
         use crate::sim::engine::{Scenario, SimConfig};
         use crate::sim::event_queue::EventQueueKind;
-        use crate::sim::fleet::{run_fleet, FleetConfig, MigrationTargeting, ShardFault};
+        use crate::sim::fleet::{
+            run_fleet, DisaggSpec, FleetConfig, MigrationTargeting, PoolRole, ShardFault,
+        };
         use crate::sim::kv::KvConfig;
         use crate::trace::generator::{Arrival, WorkloadSpec};
 
         let mut migrated_total = 0usize;
+        let mut handoff_total = 0usize;
         let mut requeued_total = 0usize;
         let mut continuous_total = 0usize;
         let mut paged_total = 0usize;
@@ -269,10 +279,19 @@ mod tests {
                 // Zone-partition axis: replicate the storm fleet into
                 // Z zones and check the merge contract.
                 let zones = 1 + r.below(3) as usize;
+                // P/D-disaggregation axis: a third of the K ≥ 2 storms
+                // split the same K shards into a random prefill/decode
+                // partition (Some(p) ⇒ p prefill + k−p decode), so the
+                // outage can land on either pool.
+                let disagg = if k >= 2 && r.chance(1.0 / 3.0) {
+                    Some(1 + r.below(k as u64 - 1) as usize)
+                } else {
+                    None
+                };
                 let seed = r.next_u64();
                 (
                     k, balancer, targeting, frac, dead, slots, bscale, fault, batching,
-                    heap_check, repriced, zones, seed,
+                    (heap_check, repriced, zones, disagg), seed,
                 )
             },
             |&(
@@ -285,9 +304,7 @@ mod tests {
                 bscale,
                 fault,
                 batching,
-                heap_check,
-                repriced,
-                zones,
+                (heap_check, repriced, zones, disagg),
                 seed,
             )| {
                 let mut cfg = SimConfig {
@@ -357,6 +374,9 @@ mod tests {
                             spike_scale: 8.0,
                         },
                     );
+                }
+                if let Some(p) = disagg {
+                    fleet = fleet.with_disagg(DisaggSpec::split(p, k - p));
                 }
                 let policy = Policy::simple(PolicyKind::StochD, 0.9, true);
                 let out = run_fleet(&sc, &trace, &policy, &fleet);
@@ -437,6 +457,37 @@ mod tests {
                     "booking mismatch: {booked} vs {}",
                     out.load.migration_targeted
                 );
+                // P/D-disaggregation axis: the handoff ledger balances
+                // (every counted handoff landed on exactly one decode
+                // target) and stays provably zero without a spec.
+                let handed: usize = out.load.shards.iter().map(|s| s.handoff_in).sum();
+                if let Some(p) = disagg {
+                    crate::prop_assert!(
+                        handed == out.load.handoff_count,
+                        "handoff ledger mismatch: {handed} landed vs {} counted",
+                        out.load.handoff_count
+                    );
+                    crate::prop_assert!(
+                        out.load.shards[..p].iter().all(|s| s.handoff_in == 0),
+                        "a handoff landed on a prefill shard"
+                    );
+                    crate::prop_assert!(
+                        (out.load.handoff_count == 0) == (out.load.kv_transfer_seconds == 0.0),
+                        "transfer seconds and handoff count must move together: {} for {}",
+                        out.load.kv_transfer_seconds,
+                        out.load.handoff_count
+                    );
+                    handoff_total += out.load.handoff_count;
+                } else {
+                    crate::prop_assert!(
+                        out.load.handoff_count == 0
+                            && handed == 0
+                            && out.load.kv_transfer_seconds == 0.0
+                            && out.load.handoff_fallbacks == 0
+                            && out.load.shards.iter().all(|s| s.role == PoolRole::Unified),
+                        "handoff telemetry must stay zero outside disaggregation"
+                    );
+                }
                 // Accounting sweep invariants: no double releases
                 // anywhere, and continuous-batching telemetry is
                 // internally consistent.
@@ -566,6 +617,10 @@ mod tests {
         assert!(
             repriced_total > 0,
             "property never exercised iteration-level repricing"
+        );
+        assert!(
+            handoff_total > 0,
+            "property never exercised a prefill→decode handoff"
         );
     }
 

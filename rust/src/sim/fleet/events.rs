@@ -1,0 +1,540 @@
+//! Event payload and the fleet's discrete-event main loop.
+//!
+//! [`EvKind`] is the queue payload; the `(time, seq)` total order and
+//! both queue backends live in [`crate::sim::event_queue`]. `run`
+//! drains the queue to completion and assembles the `FleetOutcome`.
+
+use super::*;
+
+// ---------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------
+//
+// The queue itself — `(time, seq)` total ordering, wheel and heap
+// backends — lives in `crate::sim::event_queue`; the fleet only defines
+// its event payload.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) enum EvKind {
+    Arrival(usize),
+    /// Request `.0`'s server stream ended: its shard's admission slot
+    /// frees (admit the next queued request) and its work estimate
+    /// retires from the shard.
+    ServerRelease(usize),
+    /// The device frees; grant it to the next queued request.
+    DeviceRelease,
+    /// The server produced its first token while the request was still
+    /// queued for the device: cancel the device entry and resolve.
+    ServerFirstProbe(usize),
+    /// The device produced its first token while the request was still
+    /// queued for server admission: cancel the server entry and resolve.
+    DeviceFirstProbe(usize),
+    /// Periodic autoscaler evaluation tick (only scheduled when a
+    /// scaling policy is attached).
+    AutoscaleEval,
+    /// Cold shard `.0` finished loading its model: unfreeze its pool and
+    /// admit anything already queued on it.
+    ShardWarm(usize),
+    /// Injected failure: force shard `.0` into Draining, re-route its
+    /// queued streams, and let in-flight streams finish (connection
+    /// draining). No-op on an already draining/retired/unprovisioned
+    /// shard.
+    Outage(usize),
+    /// Request `.0`'s migrated stream (re-prefilled onto a target shard
+    /// under [`MigrationTargeting::ShardTargeted`]) ended: release its
+    /// occupancy on that shard and retire its work estimate.
+    MigrationRelease(usize),
+    /// Continuous-batching scheduling tick: replenish every live
+    /// shard's prompt-token admission budget and admit queued prefills
+    /// FIFO while it lasts. Only scheduled under
+    /// [`BatchingMode::Continuous`]; reschedules itself until every
+    /// request has resolved.
+    BatchTick,
+}
+
+impl<'a> FleetSim<'a> {
+
+    pub(super) fn push(&mut self, time: f64, kind: EvKind) {
+        self.queue.push(time, kind);
+    }
+
+    /// Mark shard `s` stale in the incremental balancer index (no-op
+    /// when the configured balancer keeps none). Called wherever a
+    /// shard's occupancy, queue depth, outstanding work, or lifecycle
+    /// phase changes, so the next pick's flush sees fresh leaves.
+    pub(super) fn touch_shard(&mut self, s: usize) {
+        if let Some(idx) = &mut self.shard_index {
+            idx.mark(s);
+        }
+    }
+
+    /// Request `i`, borrowed for the trace lifetime (decoupled from
+    /// `&self`, so the loop can mutate simulator state while holding it).
+    pub(super) fn req(&self, i: usize) -> &'a crate::trace::Request {
+        &self.trace.requests[i]
+    }
+
+    /// Spacing of `AutoscaleEval` events: the configured pool interval,
+    /// or under disaggregation the minimum over the pools that carry a
+    /// scaling policy (one shared tick evaluates both pools). `None`
+    /// when no policy is attached — no events are scheduled at all.
+    pub(super) fn autoscale_interval(&self) -> Option<f64> {
+        let prefill = if self.scaler.is_some() {
+            Some(
+                self.autoscale
+                    .as_ref()
+                    .expect("scaler implies autoscale config")
+                    .eval_interval,
+            )
+        } else {
+            None
+        };
+        let decode = if self.decode_scaler.is_some() {
+            Some(
+                self.decode_autoscale
+                    .as_ref()
+                    .expect("decode scaler implies decode autoscale config")
+                    .eval_interval,
+            )
+        } else {
+            None
+        };
+        match (prefill, decode) {
+            (Some(p), Some(d)) => Some(p.min(d)),
+            (Some(p), None) => Some(p),
+            (None, d) => d,
+        }
+    }
+
+    pub(super) fn run(mut self) -> FleetOutcome {
+        // Fork per-request RNG streams in trace order (not event order):
+        // this pins the root RNG sequence to the trace, matching the
+        // legacy engine draw-for-draw. The streams live in the arena and
+        // are consumed in place — pre-draw at arrival, resolve later —
+        // without the per-request clone the loop used to pay.
+        let trace = self.trace;
+        let mut root = Rng::new(self.scenario.cfg.seed);
+        self.arena.rng = trace.requests.iter().map(|r| root.fork(r.id)).collect();
+        for (i, req) in trace.requests.iter().enumerate() {
+            self.push(req.arrival, EvKind::Arrival(i));
+        }
+        // Shard lifetimes (and the report's horizon) are measured from
+        // the first arrival.
+        self.t0 = trace.requests.first().map_or(0.0, |r| r.arrival);
+        for sh in &mut self.shards {
+            sh.created_at = self.t0;
+        }
+        self.record_timeline(self.t0);
+        // Outage times are relative to the first arrival. Scheduling them
+        // before the first autoscaler evaluation gives outage events the
+        // lower sequence number at any shared timestamp, so an outage
+        // always fires before an autoscaler evaluation scheduled for the
+        // same instant (arrivals, pushed first of all, still precede
+        // both — a request arriving exactly at the outage instant is
+        // balanced, then immediately re-routed with the rest of the
+        // queue).
+        if !trace.requests.is_empty() {
+            // By index, not by cloned list: `ShardOutage` is `Copy`, so
+            // the schedule loop allocates nothing.
+            for idx in 0..self.fleet.outages.len() {
+                let o = self.fleet.outages[idx];
+                if o.at.is_finite() {
+                    self.push(self.t0 + o.at.max(0.0), EvKind::Outage(idx));
+                }
+            }
+        }
+        if !trace.requests.is_empty() {
+            if let Some(interval) = self.autoscale_interval() {
+                self.push(self.t0 + interval, EvKind::AutoscaleEval);
+            }
+        }
+        if let Some(tick) = self.fleet.batching.tick_interval() {
+            if !trace.requests.is_empty() {
+                self.push(self.t0 + tick, EvKind::BatchTick);
+            }
+        }
+
+        while let Some((time, kind)) = self.queue.pop() {
+            // Autoscaler/failure bookkeeping (evaluation ticks, warm-ups,
+            // outage injections) does not advance the workload horizon: a
+            // cold start completing after the last token would otherwise
+            // dilute utilization and over-bill shard-seconds for every
+            // surviving shard. Work a warm-up *admits* still lands in the
+            // horizon through its own resolve/release events.
+            let bookkeeping = matches!(
+                kind,
+                EvKind::AutoscaleEval
+                    | EvKind::ShardWarm(_)
+                    | EvKind::Outage(_)
+                    | EvKind::BatchTick
+            );
+            // Superseded release events — paged preemption/failover and
+            // iteration-level repricing both re-time a stream's release
+            // by pushing a later (or earlier) event — are dropped
+            // *before* the horizon update: a stale timestamp is not a
+            // workload time, and honoring it would overstate the
+            // horizon whenever repricing shrank a stream (the drain
+            // direction). Only the event whose timestamp matches the
+            // current booking fires, and only once, so a slot never
+            // double-frees.
+            if let EvKind::ServerRelease(i) = kind {
+                if self.release_guard_active()
+                    && (self.kv_release_done[i]
+                        || time.total_cmp(&self.kv_release_at[i]) != Ordering::Equal)
+                {
+                    continue;
+                }
+            }
+            if time.is_finite() && !bookkeeping {
+                self.horizon = self.horizon.max(time);
+            }
+            match kind {
+                EvKind::Arrival(i) => {
+                    let req = self.req(i);
+                    // Arrivals fire in trace order (pushed first, over
+                    // nondecreasing times), so the pre-draw column grows
+                    // densely.
+                    debug_assert_eq!(i, self.arena.pre.len(), "arrival out of trace order");
+                    let pre = pre_draw(
+                        req,
+                        self.policy,
+                        &self.scenario.server,
+                        &self.scenario.device,
+                        &mut self.arena.rng[i],
+                    );
+                    let needs_server = pre.decision.uses_server();
+                    let needs_device = pre.decision.uses_device();
+                    self.arena.pre.push(pre);
+                    self.arena.needs_server[i] = needs_server;
+                    self.arena.needs_device[i] = needs_device;
+                    if needs_server {
+                        // `assign_shard` may shrink the admission charge
+                        // to the uncached prompt suffix (paged-KV prefix
+                        // hit), so the server charge reads *after* it.
+                        let s = self.assign_shard(i, time);
+                        let tokens = self.server_tokens[i];
+                        if self.shards[s].pool.acquire(i, tokens) {
+                            self.on_server_admit(i, time);
+                        }
+                        self.touch_shard(s);
+                    }
+                    if needs_device
+                        && (!self.fleet.device_queueing
+                            || self.device_pool.acquire(i, self.prompt_tokens[i]))
+                    {
+                        self.on_device_grant(i, time);
+                    }
+                    self.try_resolve(i, time);
+                }
+                EvKind::ServerRelease(i) => {
+                    // Stale (superseded) releases were dropped before
+                    // the horizon update above; this one is valid. Mark
+                    // it done so preemption, failover, and repricing
+                    // stop considering the stream.
+                    if self.release_guard_active() {
+                        self.kv_release_done[i] = true;
+                    }
+                    let s = self.shard_of[i].expect("released requests are assigned");
+                    // Iteration-level pricing: the stream's delivered
+                    // record finalizes from its (possibly re-stamped)
+                    // generation timeline only now, when no further
+                    // batch change can touch it.
+                    self.finalize_stream(i, s);
+                    // The stream's KV pages free with its slot — before
+                    // the pool release below, so the admit-next scan
+                    // sees the freed pages.
+                    let held = self.kv_pages_held[i];
+                    if held > 0 {
+                        self.kv_pages_held[i] = 0;
+                        if let Some(g) = self.shards[s].pool.kv_mut() {
+                            g.free(held);
+                        }
+                    }
+                    if self.fleet.batching.is_paged() {
+                        self.kv_live[s].retain(|&j| j != i);
+                    }
+                    // The slot holder's service ends here — only now does
+                    // its work estimate leave the LeastWork signal.
+                    let sample = self.arena.pre[i]
+                        .server_sample
+                        .expect("server users have a sample");
+                    self.shards[s].work -= sample;
+                    let next = self
+                        .shards[s]
+                        .pool
+                        .release(&self.server_cancelled, &self.server_tokens);
+                    self.touch_shard(s);
+                    if let Some(j) = next {
+                        self.on_server_admit(j, time);
+                        self.try_resolve(j, time);
+                    }
+                    self.record_batch(s, time);
+                    self.maybe_retire(s, time);
+                }
+                EvKind::DeviceRelease => {
+                    let next = self
+                        .device_pool
+                        .release(&self.device_cancelled, &self.prompt_tokens);
+                    if let Some(j) = next {
+                        self.on_device_grant(j, time);
+                        self.try_resolve(j, time);
+                    }
+                }
+                EvKind::ServerFirstProbe(i) => {
+                    let pending = !self.device_cancelled[i]
+                        && !self.arena.resolved[i]
+                        && self.arena.device_grant[i].is_none();
+                    if pending {
+                        // The server answered first: leave the device
+                        // queue (`device_grant` is None, so with device
+                        // queueing on the request is sitting in it).
+                        self.device_cancelled[i] = true;
+                        if self.fleet.device_queueing {
+                            let tokens = self.prompt_tokens[i];
+                            self.device_pool.cancel_queued(tokens);
+                        }
+                        self.try_resolve(i, time);
+                    }
+                }
+                EvKind::DeviceFirstProbe(i) => {
+                    let pending = !self.server_cancelled[i]
+                        && !self.arena.resolved[i]
+                        && self.arena.server_admit[i].is_none();
+                    if pending {
+                        // The device answered first: abandon the admission
+                        // queue (the provider still bills the dispatched
+                        // prompt; see `resolve_request`). `server_admit`
+                        // is None, so the entry is sitting in its shard's
+                        // queue.
+                        self.server_cancelled[i] = true;
+                        let s = self.shard_of[i].expect("server-bound requests are assigned");
+                        let tokens = self.server_tokens[i];
+                        self.shards[s].pool.cancel_queued(tokens);
+                        self.touch_shard(s);
+                        self.try_resolve(i, time);
+                        // A draining shard whose last live entry was just
+                        // cancelled can retire now.
+                        self.maybe_retire(s, time);
+                    }
+                }
+                EvKind::AutoscaleEval => {
+                    self.autoscale_eval(time);
+                    if self.resolved_count < trace.len() {
+                        let interval = self
+                            .autoscale_interval()
+                            .expect("eval events imply a scaling policy");
+                        self.push(time + interval, EvKind::AutoscaleEval);
+                    }
+                }
+                EvKind::ShardWarm(s) => self.warm_shard(s, time),
+                EvKind::Outage(idx) => {
+                    let shard = self.fleet.outages[idx].shard;
+                    self.inject_outage(shard, time);
+                }
+                EvKind::MigrationRelease(i) => {
+                    let (s, real_slot, work, booked_at) = self.migration_booking[i]
+                        .take()
+                        .expect("migration release implies a booking");
+                    self.shards[s].work -= work;
+                    // Booked occupancy splits by where it sat: real
+                    // slots bill into busy-seconds (within capacity),
+                    // batch joins into over-commit seconds — keeping
+                    // utilization a within-capacity ratio.
+                    let held = (time - booked_at).max(0.0);
+                    if real_slot {
+                        self.shards[s].busy += held;
+                    } else {
+                        self.shards[s].overcommit_seconds += held;
+                    }
+                    // KV pages booked for the migrated-in stream free
+                    // with its occupancy (before the admit-next scan).
+                    let pages = self.kv_mig_pages[i];
+                    if pages > 0 {
+                        self.kv_mig_pages[i] = 0;
+                        if let Some(g) = self.shards[s].pool.kv_mut() {
+                            g.free(pages);
+                        }
+                    }
+                    let next = if real_slot {
+                        self.shards[s]
+                            .pool
+                            .release(&self.server_cancelled, &self.server_tokens)
+                    } else {
+                        self.shards[s]
+                            .pool
+                            .release_overflow(&self.server_cancelled, &self.server_tokens)
+                    };
+                    self.touch_shard(s);
+                    if let Some(j) = next {
+                        self.on_server_admit(j, time);
+                        self.try_resolve(j, time);
+                    }
+                    self.record_batch(s, time);
+                    self.maybe_retire(s, time);
+                }
+                EvKind::BatchTick => {
+                    let paged = self.fleet.batching.is_paged();
+                    let shard_count = self.shards.len();
+                    for s in 0..shard_count {
+                        // Retired shards are gone; cold (frozen) shards
+                        // cannot admit, so ticking them would only
+                        // inflate `prompt_token_capacity` with budget
+                        // nothing could use — they start ticking once
+                        // warm, with their initial allotment intact.
+                        if self.shards[s].phase == LifecyclePhase::Retired
+                            || self.shards[s].pool.frozen
+                        {
+                            continue;
+                        }
+                        self.shards[s].pool.tick();
+                        if paged {
+                            // Decode growth first, then preemption if
+                            // growth blew past the pool — so admission
+                            // below sees the true free-page count.
+                            self.kv_tick_shard(s, time);
+                        }
+                        while let Some(j) = self
+                            .shards[s]
+                            .pool
+                            .try_admit(&self.server_cancelled, &self.server_tokens)
+                        {
+                            self.on_server_admit(j, time);
+                            self.try_resolve(j, time);
+                        }
+                        self.touch_shard(s);
+                    }
+                    if self.resolved_count < trace.len() {
+                        let interval = self
+                            .fleet
+                            .batching
+                            .tick_interval()
+                            .expect("ticks imply a tick-scheduled batching mode");
+                        self.push(time + interval, EvKind::BatchTick);
+                    }
+                }
+            }
+        }
+
+        let records: Vec<RequestRecord> = self
+            .records
+            .into_iter()
+            .map(|r| r.expect("every request resolves"))
+            .collect();
+        // Horizon is measured from the first arrival, not absolute time
+        // zero, so traces with a delayed start (e.g. session ramp-up) do
+        // not dilute utilization with an idle prefix.
+        let t0 = self.t0;
+        let end = self.horizon.max(t0);
+        // Fleet-level aggregates derive from the per-shard accounting —
+        // one source of truth (Summary sorts internally, so the shard
+        // concatenation order is irrelevant).
+        let mut all_delays: Vec<f64> = Vec::new();
+        let mut server_busy = 0.0;
+        let mut shard_seconds = 0.0;
+        let mut release_underflows = self.device_pool.underflows;
+        let mut prefix_hits = 0u64;
+        let mut prefix_lookups = 0u64;
+        let mut prefix_evictions = 0u64;
+        let shard_loads: Vec<ShardLoad> = self
+            .shards
+            .iter()
+            .map(|s| {
+                all_delays.extend_from_slice(&s.delays);
+                server_busy += s.busy;
+                release_underflows += s.pool.underflows;
+                // Retirement can be stamped by a post-horizon autoscaler
+                // tick; clamp so draining never bills MORE than staying
+                // warm to the end of the run.
+                let shard_end = s.retired_at.unwrap_or(end).min(end);
+                let lifetime = (shard_end - s.created_at).max(0.0);
+                shard_seconds += lifetime;
+                let (prompt_tokens_admitted, prompt_token_capacity) = s.pool.token_totals();
+                let (kv_pages_peak, kv_pages_total) = match s.pool.kv() {
+                    Some(g) => {
+                        let (h, l) = g.prefix_stats();
+                        prefix_hits += h;
+                        prefix_lookups += l;
+                        prefix_evictions += g.prefix_evictions();
+                        (g.peak_pages(), g.pages_total())
+                    }
+                    None => (0, 0),
+                };
+                ShardLoad {
+                    queue_delay: Summary::of(&s.delays),
+                    busy_seconds: s.busy,
+                    overcommit_seconds: s.overcommit_seconds,
+                    admitted: s.admitted,
+                    slots: s.pool.cap,
+                    migrated_in: s.migrated_in,
+                    role: s.role,
+                    handoff_in: s.handoff_in,
+                    lifetime_seconds: lifetime,
+                    peak_in_use: s.pool.peak_in_use,
+                    prompt_tokens_admitted,
+                    prompt_token_capacity,
+                    kv_pages_peak,
+                    kv_pages_total,
+                }
+            })
+            .collect();
+        // Timeline and scale-event timestamps are reported relative to
+        // the first arrival, like the horizon.
+        let rel = |t: f64| (t - t0).max(0.0);
+        let shard_timeline = self
+            .timeline
+            .iter()
+            .map(|s| ShardCountSample {
+                time: rel(s.time),
+                ..*s
+            })
+            .collect();
+        let scale_events = self
+            .scale_events
+            .iter()
+            .map(|e| ScaleEvent {
+                time: rel(e.time),
+                ..*e
+            })
+            .collect();
+        let batch_timeline = self
+            .batch_samples
+            .iter()
+            .map(|b| BatchSample {
+                time: rel(b.time),
+                ..*b
+            })
+            .collect();
+        let load = LoadReport {
+            server_queue_delay: Summary::of(&all_delays),
+            device_queue_delay: Summary::of(&self.device_delays),
+            server_busy_seconds: server_busy,
+            device_busy_seconds: self.device_busy,
+            horizon: (self.horizon - t0).max(0.0),
+            server_slots: self.fleet.server_slots,
+            shards: shard_loads,
+            shard_timeline,
+            scale_events,
+            cold_start_seconds: self.cold_start_seconds,
+            shard_seconds,
+            events_processed: self.queue.pushed(),
+            migration_targeted: self.migration_targeted,
+            migration_fallbacks: self.migration_fallbacks,
+            outage_requeues: self.outage_requeues,
+            release_underflows,
+            batch_timeline,
+            prefix_hits,
+            prefix_lookups,
+            kv_preemptions: self.kv_preemptions,
+            kv_forced_reprefills: self.kv_forced_reprefills,
+            reprice_events: self.reprice_events,
+            reprice_stretch_seconds: self.reprice_stretch_seconds,
+            reprice_shrink_seconds: self.reprice_shrink_seconds,
+            prefix_evictions,
+            handoff_count: self.handoff_count,
+            kv_transfer_seconds: self.kv_transfer_seconds,
+            handoff_fallbacks: self.handoff_fallbacks,
+        };
+        FleetOutcome { records, load }
+    }
+
+}

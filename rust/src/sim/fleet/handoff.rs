@@ -1,0 +1,171 @@
+//! KV handoff paths: moving a stream's KV state between shards.
+//!
+//! Today that is the hard-outage failover (in-flight KV lost, forced
+//! mid-decode re-prefill at a migration target); prefill→decode
+//! disaggregation hands off through the same booking machinery.
+
+use super::*;
+
+impl<'a> FleetSim<'a> {
+
+    /// Hard-outage KV loss on shard `s`: every mid-decode stream whose
+    /// KV lived there must re-prefill its full context. When a
+    /// migration target admits, the stream *moves* — its source slot
+    /// frees now and the target is booked through the §4.3 over-commit
+    /// machinery until the stretched stream ends (the forced-migration
+    /// variant of the paper's Eq. 5 buffer sizing) — otherwise it
+    /// re-prefills in place on the draining source. Either way the
+    /// rewrite stretches exactly one inter-token gap, so token
+    /// conservation (no gaps, no duplicates, order) holds by
+    /// construction. Admitted-but-unresolved streams are left to the
+    /// connection-draining path (their prefill re-runs implicitly).
+    pub(super) fn kv_outage_failover(&mut self, s: usize, now: f64) {
+        let live: Vec<usize> = self.kv_live[s].clone();
+        for j in live {
+            if !self.arena.resolved[j] || self.kv_release_done[j] {
+                continue;
+            }
+            let (eligible, tbt_len) = match &self.records[j] {
+                Some(r) => (r.winner == EndpointKind::Server && !r.migrated, r.tbts.len()),
+                None => (false, 0),
+            };
+            let emitted = self.tokens_emitted(j, now);
+            if !eligible || emitted == 0 || emitted > tbt_len {
+                continue;
+            }
+            let reprefill =
+                (self.server_tokens[j] as u64 + emitted as u64).min(u32::MAX as u64) as u32;
+            let rate = self
+                .fleet
+                .batching
+                .admission_tokens_per_sec()
+                .expect("paged mode has an admission rate");
+            // Fresh snapshot per victim: each placement is visible to
+            // the next pick, spreading victims across survivors. Under
+            // disaggregation a mid-decode victim can only land on a
+            // decode shard — prefill shards never decode.
+            let mask = self.fleet.disagg.is_some().then_some(PoolRole::Decode);
+            let any_admitting = self.snapshot_views_role(mask);
+            let target = if any_admitting {
+                pick_reprefill_target(&self.views, |t| {
+                    self.shards[t].rtt + self.reprefill_queue_delay(t, None, false, 0.0)
+                })
+            } else {
+                None
+            };
+            // The lost pages leave the source ledger either way.
+            let held = self.kv_pages_held[j];
+            self.kv_pages_held[j] = 0;
+            if held > 0 {
+                if let Some(g) = self.shards[s].pool.kv_mut() {
+                    g.free(held);
+                }
+            }
+            match target {
+                Some(t) => {
+                    // A tracked stream (iteration-level pricing) leaves
+                    // the repricing set at the forced migration: its
+                    // delivered record finalizes from the repriced
+                    // timeline first, then the committed tail
+                    // stretches like any other failover victim. No-op
+                    // for untracked streams.
+                    self.finalize_stream(j, s);
+                    let delta = self.shards[t].rtt
+                        + self.reprefill_queue_delay(t, None, false, 0.0)
+                        + reprefill as f64 / rate;
+                    let old_rel = self.kv_release_at[j];
+                    let done = {
+                        let rec = self.records[j].as_mut().expect("eligible implies a record");
+                        rec.tbts[emitted - 1] += delta;
+                        self.trace.requests[j].arrival
+                            + rec.ttft
+                            + rec.tbts.iter().sum::<f64>()
+                    };
+                    if done.is_finite() {
+                        self.horizon = self.horizon.max(done);
+                    }
+                    // The source slot frees *now* instead of at the old
+                    // release time: roll back the busy seconds it will
+                    // not serve and retire the stream inline (the
+                    // pending release event is superseded via
+                    // `kv_release_done`).
+                    self.kv_release_done[j] = true;
+                    self.kv_live[s].retain(|&x| x != j);
+                    let sample = self.arena.pre[j]
+                        .server_sample
+                        .expect("server users have a sample");
+                    self.shards[s].work -= sample;
+                    self.shards[s].busy -= (old_rel - now).max(0.0);
+                    let next = self
+                        .shards[s]
+                        .pool
+                        .release(&self.server_cancelled, &self.server_tokens);
+                    self.touch_shard(s);
+                    if let Some(n) = next {
+                        self.on_server_admit(n, now);
+                        self.try_resolve(n, now);
+                    }
+                    self.record_batch(s, now);
+                    // Book the target through the §4.3 machinery: the
+                    // stretched tail occupies it until the new end.
+                    let real_slot = self.shards[t].pool.acquire_overflow();
+                    let booked = (old_rel - now).max(0.0) + delta;
+                    self.shards[t].work += booked;
+                    self.shards[t].migrated_in += 1;
+                    self.migration_targeted += 1;
+                    if let Some(g) = self.shards[t].pool.kv_mut() {
+                        let pages = g.pages_for(reprefill);
+                        g.alloc(pages);
+                        g.charge(reprefill as u64);
+                        self.kv_mig_pages[j] = pages;
+                    }
+                    self.touch_shard(t);
+                    self.migration_booking[j] = Some((t, real_slot, booked, now));
+                    self.record_batch(t, now);
+                    self.push((old_rel + delta).max(now), EvKind::MigrationRelease(j));
+                    self.kv_suspend_until[j] = now + delta;
+                }
+                None => {
+                    // Nowhere to go: re-prefill in place on the
+                    // draining source, which keeps serving in-flight
+                    // work under connection draining.
+                    let delta = reprefill as f64 / rate;
+                    if self.gen_times[j].is_empty() {
+                        let done = {
+                            let rec =
+                                self.records[j].as_mut().expect("eligible implies a record");
+                            rec.tbts[emitted - 1] += delta;
+                            self.trace.requests[j].arrival
+                                + rec.ttft
+                                + rec.tbts.iter().sum::<f64>()
+                        };
+                        if done.is_finite() {
+                            self.horizon = self.horizon.max(done);
+                        }
+                    } else {
+                        // Tracked stream: the stall shifts the pending
+                        // generation suffix; finalization at the
+                        // (superseded, later) release delivers it.
+                        let rel = now - self.trace.requests[j].arrival;
+                        for t in self.gen_times[j].iter_mut() {
+                            if *t > rel {
+                                *t += delta;
+                            }
+                        }
+                    }
+                    self.shards[s].busy += delta;
+                    if let Some(g) = self.shards[s].pool.kv_mut() {
+                        g.charge(reprefill as u64);
+                    }
+                    self.kv_suspend_until[j] = now + delta;
+                    let new_rel = self.kv_release_at[j] + delta;
+                    self.kv_release_at[j] = new_rel;
+                    self.push(new_rel.max(now), EvKind::ServerRelease(j));
+                    self.touch_shard(s);
+                }
+            }
+            self.kv_forced_reprefills += 1;
+        }
+    }
+
+}

@@ -1,0 +1,1187 @@
+//! Discrete-event fleet simulator: N concurrent requests contending for a
+//! sharded server fleet and a single-flight device.
+//!
+//! The paper evaluates per-request (each request sees the profiled latency
+//! distributions independently). At fleet scale the interesting effects
+//! are *contention* effects: servers with finite admission capacity build
+//! queues as load rises, and the on-device model can only run one
+//! inference at a time. This module adds exactly that, as an event loop
+//! (over a pluggable [`EventQueue`](crate::sim::event_queue::EventQueue)
+//! backend — timing wheel by default, binary heap as the reference) over:
+//!
+//! * **Arrival** events — fork the request's RNG, draw its dispatch
+//!   decision through the unchanged `coordinator::policy`, pre-draw its
+//!   latency samples, pick a server shard through the configured
+//!   [`Balancer`], and enqueue it on the resources it needs;
+//! * **grant** transitions — per-shard FIFO pools with `server_slots`
+//!   concurrent admissions each, and a FIFO single-flight device pool;
+//! * **first-token probes** — when one endpoint produces its first token
+//!   while the request is still *queued* on the other endpoint, the
+//!   queued entry is cancelled (the §4.2 wait-time strategy extended
+//!   across the fleet: nobody waits on a resource after the race is won);
+//! * **release** events — slots free at stream end, handoff, or loser
+//!   cancellation, admitting the next queued request on that shard.
+//!
+//! # Shards and balancers
+//!
+//! The server side is a sharded fleet: `K =
+//! FleetConfig::shards` replicas, each with its own bounded slot pool,
+//! FIFO queue, and optional extra RTT (heterogeneous placement), fronted
+//! by a pluggable [`Balancer`] ([`BalancerKind`]: round-robin, JSQ,
+//! power-of-two-choices, least-work). Balancers see only per-shard
+//! occupancy snapshots and draw randomness from a dedicated fleet-level
+//! stream, so shard choice never perturbs per-request latency draws.
+//!
+//! # Autoscaling
+//!
+//! K can react to load during a run: an optional
+//! [`AutoscaleConfig`] attaches an [`crate::sim::autoscaler::Autoscaler`]
+//! that is evaluated on periodic `AutoscaleEval` events. Scale-out
+//! provisions a **cold** shard — its admission pool is frozen until a
+//! load-time delay from the configured
+//! [`crate::sim::autoscaler::ColdStartSpec`] elapses (a `ShardWarm`
+//! event) — and scale-in **drains** a warm victim: the balancer stops
+//! routing to it, existing admissions and queued entries finish, then
+//! the shard retires. The shard-count timeline, scale events,
+//! cold-start seconds, and provisioned shard-seconds surface in
+//! [`LoadReport`]. With [`crate::sim::autoscaler::AutoscalerKind::None`]
+//! (or no config at all) no evaluation events are scheduled and the run
+//! is byte-identical to the static PR-2 fleet.
+//!
+//! # Migration-aware shard targeting
+//!
+//! With [`MigrationTargeting::ShardTargeted`], a §4.3 migration that
+//! moves generation *onto* the server no longer re-prefills on an
+//! abstract base endpoint: the resolve step asks the balancer layer for
+//! a target shard ([`crate::sim::balancer::pick_reprefill_target`] —
+//! least-work-with-estimate over admitting shards), estimates `t_m`
+//! against that shard's endpoint plus its predicted queue delay, and
+//! books the migrated stream into the shard's slot pool (a real slot
+//! when one is free, batch-join over-commit otherwise) until the stream
+//! ends (`MigrationRelease`). When no shard admits, the re-prefill
+//! falls back to the base endpoint with the source shard's RTT offset
+//! inherited. The default, [`MigrationTargeting::BaseEndpoint`], keeps
+//! the PR-3 single-target behavior (byte-for-byte up to the dying-shard
+//! RTT fix noted on the variant).
+//!
+//! # Batching within a shard
+//!
+//! Each shard serves its admitted streams under a
+//! [`crate::sim::batching::BatchingMode`]. The default,
+//! `SlotLegacy`, is the historical bounded slot pool (one slot per
+//! stream, held for the stream's whole lifetime) and is byte-identical
+//! to the pre-batching fleet. `Continuous` replaces the slot count with
+//! vLLM/Orca-style continuous batching: prefill admission is gated by a
+//! prompt-token budget replenished on periodic `BatchTick` events, and
+//! admitted decode streams share the shard's batch — their sampled
+//! inter-token gaps are scaled by a pluggable
+//! [`crate::sim::batching::BatchLatencyCurve`] evaluated at the batch
+//! size the stream joined. A §4.3 migrated-in stream always joins the
+//! running batch (its handoff time is committed), which continuous
+//! batching makes literal. See `docs/fleet.md` for the model and its
+//! join-time-pricing approximation.
+//!
+//! # Paged KV memory (admission, preemption, prefix caching)
+//!
+//! `PagedKv` replaces the abstract token budget with the real vLLM
+//! constraint: each shard owns a fixed pool of KV blocks
+//! ([`crate::sim::kv::KvGate`]). Prefill admission blocks when free
+//! pages run out, oversized prompts accrue chunk budget across ticks
+//! (Sarathi-style), decode growth allocates a page every
+//! `block_tokens` emitted tokens, and when growth pushes the ledger
+//! past the pool the shard preempts its lowest-priority running stream
+//! — the evicted stream stalls for a deterministic re-prefill delay
+//! (its record's inter-token gap stretches; no tokens are lost or
+//! duplicated) and re-grows from zero pages. A per-shard prefix index
+//! over session prompt lengths lets repeat prompts skip the cached
+//! fraction of prefill; a [`ShardOutage`] in paged mode loses in-flight
+//! KV, forcing mid-decode re-prefill at a migration target (the forced
+//! variant of the paper's §4.3 Eq. 5 buffer sizing). All of it is
+//! deterministic and RNG-free, so `SlotLegacy` and `Continuous` runs
+//! are byte-identical to a build without the subsystem.
+//!
+//! # Phase-disaggregated pools (prefill/decode fleets)
+//!
+//! With a [`DisaggSpec`] attached ([`FleetConfig::with_disagg`]), the
+//! fleet splits into two role-typed pools: arrivals route to *prefill*
+//! shards (chosen by the prefill pool's balancer), and once a stream's
+//! first token resolves on the server its KV state hands off to a
+//! *decode* shard chosen by the decode pool's balancer. The transfer is
+//! priced by an explicit [`KvTransferCost`] (fixed handoff overhead +
+//! per-token KV transfer latency) that lands as exactly **one**
+//! stretched inter-token gap — the same contract as KV preemption, so
+//! token conservation (no gaps, no duplicates, order) holds by
+//! construction. The prefill slot frees at first-token time; the decode
+//! shard is booked through the §4.3 over-commit machinery
+//! (`acquire_overflow` → `MigrationRelease`) until the stretched stream
+//! ends. Each pool autoscales independently ([`DisaggSpec`] carries
+//! per-pool [`AutoscaleConfig`]s) and every role-aware surface —
+//! routing, outage requeue, KV failover, §4.3 re-prefill targeting —
+//! masks its candidate set to the right pool. Without a spec every
+//! shard is [`PoolRole::Unified`] and the run is byte-identical to the
+//! pre-disaggregation fleet (no handoff telemetry moves at all).
+//!
+//! # Failure injection
+//!
+//! Per-shard degradation ([`ShardFault`]: an extra TTFT spike mixture
+//! applied to requests balanced onto that shard, drawn from a dedicated
+//! fault stream) and scheduled mid-run outages ([`ShardOutage`]: at a
+//! given time since the first arrival, the shard is forced into
+//! Draining — queued streams re-route to surviving shards, in-flight
+//! streams finish under connection-draining semantics, then the shard
+//! retires). An outage on an already-draining or retired shard is a
+//! no-op, so an outage racing autoscaler scale-in can never
+//! double-retire a shard.
+//!
+//! The per-request trajectory itself (race, cancellation, migration,
+//! delivery smoothing, cost metering) is [`crate::sim::engine`]'s
+//! `resolve_request` — one code path shared with the legacy replay,
+//! which is the degenerate configuration [`FleetConfig::replay`] (one
+//! shard, unlimited slots). With that configuration the fleet loop is
+//! byte-identical to the historical per-request engine: per-request RNG
+//! streams are forked in trace order and all latency samples are
+//! pre-drawn at arrival, so resolution timing cannot perturb them.
+//!
+//! Determinism: the event queue orders events by `(time, sequence)` with
+//! `f64::total_cmp`, so runs are bit-reproducible from `SimConfig.seed` —
+//! and both queue backends ([`EventQueueKind::Wheel`] and
+//! [`EventQueueKind::Heap`], selected by `FleetConfig::event_queue`)
+//! realize the *same* total order, so runs are byte-identical across
+//! backends too (see `docs/fleet.md` § event queue & determinism
+//! contract).
+
+use crate::coordinator::migration::MigrationPlanner;
+use crate::coordinator::policy::Policy;
+use crate::cost::unified::Constraint;
+use crate::endpoint::{EndpointKind, ServerEndpoint};
+use crate::metrics::{
+    BatchSample, LoadReport, RequestRecord, ScaleEvent, ScaleEventKind, ShardCountSample,
+    ShardLoad,
+};
+use crate::sim::autoscaler::{
+    AutoscaleConfig, Autoscaler, FleetView, LifecyclePhase, ScaleAction, ShardStatus,
+};
+use crate::sim::balancer::{pick_reprefill_target, Balancer, BalancerKind, ShardIndex, ShardView};
+use crate::sim::batching::{BatchingMode, ContinuousBatchConfig, PricingMode};
+use crate::sim::delivery;
+use crate::sim::engine::{
+    pre_draw, resolve_request, BatchCtx, MigrationServer, PreDrawn, ResourceTimes, Scenario,
+};
+use crate::sim::event_queue::{EventQueue, EventQueueKind};
+use crate::sim::kv::{KvConfig, KvGate};
+use crate::stats::describe::Summary;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::VecDeque;
+
+/// How a §4.3 migration that moves generation onto the server picks its
+/// re-prefill target.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MigrationTargeting {
+    /// The historical single-target behavior: re-prefill estimates and
+    /// samples come from the source shard's endpoint (or the base
+    /// endpoint for device-only streams), and the migrated stream
+    /// occupies no shard. Byte-identical to the PR-3 fleet except for
+    /// the dying-shard fix: a stream resolving on a draining/retired
+    /// shard now keeps that shard's RTT offset instead of silently
+    /// dropping it (see the engine regression test) — identical
+    /// whenever shard RTTs are zero or no shard is draining at resolve
+    /// time.
+    #[default]
+    BaseEndpoint,
+    /// Least-work-with-estimate shard targeting: the resolve step picks
+    /// an admitting shard via
+    /// [`crate::sim::balancer::pick_reprefill_target`], folds the
+    /// shard's RTT and predicted queue delay into the `t_m` estimate,
+    /// and books the migrated stream into that shard's slot pool until
+    /// the stream ends. Falls back to the base endpoint (source RTT
+    /// inherited) when no shard admits.
+    ShardTargeted,
+}
+
+impl MigrationTargeting {
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MigrationTargeting::BaseEndpoint => "base-endpoint",
+            MigrationTargeting::ShardTargeted => "shard-targeted",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<MigrationTargeting> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "base" | "base-endpoint" | "legacy" => MigrationTargeting::BaseEndpoint,
+            "shard" | "shard-targeted" | "targeted" => MigrationTargeting::ShardTargeted,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for MigrationTargeting {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Which phase of the serving pipeline a shard belongs to. Every shard
+/// is `Unified` (serves both phases) unless the fleet carries a
+/// [`DisaggSpec`]; disaggregated fleets type each shard `Prefill` or
+/// `Decode` and every routing surface masks candidates by role.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PoolRole {
+    /// Serves prefill and decode alike — the classic colocated shard.
+    /// The default; fleets without a [`DisaggSpec`] are all-Unified and
+    /// byte-identical to the pre-disaggregation simulator.
+    #[default]
+    Unified,
+    /// Serves prefill only: arrivals are balanced across this pool, and
+    /// each stream leaves at first-token time via KV handoff.
+    Prefill,
+    /// Serves decode only: receives handed-off streams (booked through
+    /// the §4.3 over-commit machinery) and §4.3/failover re-prefills.
+    Decode,
+}
+
+impl PoolRole {
+    /// Short label used in tables, CSVs, and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PoolRole::Unified => "unified",
+            PoolRole::Prefill => "prefill",
+            PoolRole::Decode => "decode",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<PoolRole> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "unified" | "colocated" => PoolRole::Unified,
+            "prefill" | "p" => PoolRole::Prefill,
+            "decode" | "d" => PoolRole::Decode,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for PoolRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Cost model of moving a stream's KV state from a prefill shard to a
+/// decode shard: a fixed per-handoff overhead (connection setup, block
+/// table exchange) plus a per-token transfer latency over the prompt's
+/// KV footprint. The whole cost lands as one stretched inter-token gap
+/// on the handed-off stream (the first decode gap), so delivered token
+/// streams stay gap-free and duplicate-free by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvTransferCost {
+    /// Seconds of KV-transfer latency per prompt token.
+    pub per_token: f64,
+    /// Fixed seconds added to every handoff regardless of size.
+    pub overhead: f64,
+}
+
+impl Default for KvTransferCost {
+    fn default() -> Self {
+        // Defaults sized for NVLink/RDMA-class interconnects: microseconds
+        // per token, a few ms fixed — small next to decode gaps, not free.
+        KvTransferCost {
+            per_token: 2e-6,
+            overhead: 0.005,
+        }
+    }
+}
+
+impl KvTransferCost {
+    /// Total transfer seconds for a `tokens`-token KV footprint.
+    pub fn cost(&self, tokens: u32) -> f64 {
+        self.overhead + self.per_token * tokens as f64
+    }
+
+    /// Clamp negative components to zero (a negative transfer cost
+    /// would un-stretch gaps and break token conservation).
+    pub fn normalized(&self) -> KvTransferCost {
+        KvTransferCost {
+            per_token: self.per_token.max(0.0),
+            overhead: self.overhead.max(0.0),
+        }
+    }
+}
+
+/// Phase-disaggregation spec: splits the fleet into a prefill pool and
+/// a decode pool with independent balancers and autoscalers, joined by
+/// an explicit KV-transfer handoff. Attached via
+/// [`FleetConfig::with_disagg`]; `None` keeps the unified fleet.
+///
+/// Under a spec, the fleet's total (static) shard count is
+/// `prefill_shards + decode_shards` — the flat `FleetConfig::shards`
+/// field is overridden — with prefill shards occupying the low indices.
+/// Per-shard RTTs, faults, and outages still index the combined vector.
+#[derive(Clone, Copy, Debug)]
+pub struct DisaggSpec {
+    /// Initial prefill-pool shard count (≥ 1 after normalization).
+    pub prefill_shards: usize,
+    /// Initial decode-pool shard count (≥ 1 after normalization).
+    pub decode_shards: usize,
+    /// Balancer fronting the prefill pool (arrivals).
+    pub prefill_balancer: BalancerKind,
+    /// Balancer choosing the decode shard each handoff lands on.
+    pub decode_balancer: BalancerKind,
+    /// Optional autoscaling for the prefill pool.
+    pub prefill_autoscale: Option<AutoscaleConfig>,
+    /// Optional autoscaling for the decode pool.
+    pub decode_autoscale: Option<AutoscaleConfig>,
+    /// KV-transfer cost model applied to every handoff.
+    pub transfer: KvTransferCost,
+}
+
+impl Default for DisaggSpec {
+    fn default() -> Self {
+        DisaggSpec {
+            prefill_shards: 1,
+            decode_shards: 1,
+            prefill_balancer: BalancerKind::RoundRobin,
+            decode_balancer: BalancerKind::LeastWork,
+            prefill_autoscale: None,
+            decode_autoscale: None,
+            transfer: KvTransferCost::default(),
+        }
+    }
+}
+
+impl DisaggSpec {
+    /// A P:D split with default balancers and transfer cost.
+    pub fn split(prefill_shards: usize, decode_shards: usize) -> DisaggSpec {
+        DisaggSpec {
+            prefill_shards,
+            decode_shards,
+            ..DisaggSpec::default()
+        }
+    }
+
+    /// Clamp degenerate pool sizes (each pool needs at least one shard)
+    /// and negative transfer costs.
+    pub fn normalized(&self) -> DisaggSpec {
+        DisaggSpec {
+            prefill_shards: self.prefill_shards.max(1),
+            decode_shards: self.decode_shards.max(1),
+            prefill_balancer: self.prefill_balancer,
+            decode_balancer: self.decode_balancer,
+            prefill_autoscale: self.prefill_autoscale.map(|a| a.normalized()),
+            decode_autoscale: self.decode_autoscale.map(|a| a.normalized()),
+            transfer: self.transfer.normalized(),
+        }
+    }
+
+    /// Total static shard count of the disaggregated fleet.
+    pub fn total_shards(&self) -> usize {
+        self.prefill_shards.max(1) + self.decode_shards.max(1)
+    }
+
+    /// Role of static shard `i` (prefill pool occupies the low indices).
+    pub fn role_of(&self, i: usize) -> PoolRole {
+        if i < self.prefill_shards.max(1) {
+            PoolRole::Prefill
+        } else {
+            PoolRole::Decode
+        }
+    }
+}
+
+/// Per-shard degradation: an *additional* TTFT spike mixture applied to
+/// requests balanced onto the shard, on top of the base server profile
+/// (the §2.3 partial-backend-failure scenario: one replica degrades, the
+/// fleet does not). Spike draws come from a dedicated fault stream, so a
+/// fleet with no faults configured is byte-identical to one without the
+/// feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardFault {
+    /// Probability an arrival on this shard hits the degradation spike.
+    pub spike_prob: f64,
+    /// Median multiplier applied to the pre-drawn prefill sample during
+    /// a spike (log-normal with σ = 0.5, like the profile's own mixture).
+    pub spike_scale: f64,
+}
+
+/// A scheduled mid-run shard outage: at `at` seconds after the first
+/// arrival, the shard is forced into Draining — queued streams re-route
+/// to surviving shards, in-flight streams finish (connection draining),
+/// then the shard retires. A no-op if the shard is already draining,
+/// retired, or not (yet) provisioned.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardOutage {
+    /// Seconds after the first arrival at which the shard fails.
+    pub at: f64,
+    /// Index of the shard to kill.
+    pub shard: usize,
+}
+
+/// Server-side resource spec: fleet topology plus the within-shard
+/// admission regime. One of the three grouped views of [`FleetConfig`]
+/// (`with_server` / `with_control` / `with_faults`); the historical
+/// flat builders delegate through these.
+#[derive(Clone, Debug)]
+pub struct ServerSpec {
+    /// Number of server shards (replicas), K ≥ 1.
+    pub shards: usize,
+    /// Concurrent admissions per shard (`None` = unlimited).
+    pub server_slots: Option<usize>,
+    /// Optional per-shard extra RTT offsets (seconds).
+    pub shard_rtts: Vec<f64>,
+    /// Slot / continuous-batching / paged-KV admission regime.
+    pub batching: BatchingMode,
+    /// Join-time vs iteration-level decode pricing for the gated modes.
+    pub pricing: PricingMode,
+    /// Optional prefill/decode phase disaggregation. `None` (default)
+    /// keeps the unified fleet; `Some` overrides `shards` with the
+    /// spec's combined pool sizes and routes by [`PoolRole`].
+    pub disagg: Option<DisaggSpec>,
+}
+
+impl Default for ServerSpec {
+    fn default() -> Self {
+        ServerSpec {
+            shards: 1,
+            server_slots: None,
+            shard_rtts: Vec::new(),
+            batching: BatchingMode::SlotLegacy,
+            pricing: PricingMode::JoinTime,
+            disagg: None,
+        }
+    }
+}
+
+/// Control-plane spec: how work is routed and capacity managed — the
+/// balancer, optional autoscaler, §4.3 migration targeting, and the
+/// event-queue backend.
+#[derive(Clone, Debug)]
+pub struct ControlSpec {
+    pub balancer: BalancerKind,
+    pub autoscale: Option<AutoscaleConfig>,
+    pub migration_targeting: MigrationTargeting,
+    pub event_queue: EventQueueKind,
+    /// Whether §4.3 server-bound re-prefill tails under
+    /// [`MigrationTargeting::BaseEndpoint`] are priced at the source
+    /// shard's batch in the gated modes (`true`, the fixed default) or
+    /// left unpriced at slowdown 1.0 (the documented PR-5 legacy
+    /// quirk, kept reachable for regression pinning).
+    pub price_base_tails: bool,
+}
+
+impl Default for ControlSpec {
+    fn default() -> Self {
+        ControlSpec {
+            balancer: BalancerKind::RoundRobin,
+            autoscale: None,
+            migration_targeting: MigrationTargeting::BaseEndpoint,
+            event_queue: EventQueueKind::default(),
+            price_base_tails: true,
+        }
+    }
+}
+
+/// Failure-injection plan: per-shard degradation plus scheduled mid-run
+/// outages. The default (empty) plan injects nothing.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Per-shard degradation overrides, indexed by shard.
+    pub shard_faults: Vec<Option<ShardFault>>,
+    /// Scheduled outages (times relative to the first arrival).
+    pub outages: Vec<ShardOutage>,
+}
+
+impl FaultPlan {
+    /// Degrade shard `shard` with an extra TTFT spike mixture.
+    pub fn fault(mut self, shard: usize, fault: ShardFault) -> FaultPlan {
+        if self.shard_faults.len() <= shard {
+            self.shard_faults.resize(shard + 1, None);
+        }
+        self.shard_faults[shard] = Some(fault);
+        self
+    }
+
+    /// Schedule an outage `at` seconds after the first arrival.
+    pub fn outage(mut self, at: f64, shard: usize) -> FaultPlan {
+        self.outages.push(ShardOutage { at, shard });
+        self
+    }
+}
+
+/// Fleet-level resource configuration: the server fleet topology (shard
+/// count, per-shard admission slots, optional per-shard RTT offsets), the
+/// balancer fronting it, device single-flight modeling, migration
+/// targeting, and failure injection.
+///
+/// The surface is organized into three grouped sub-configs —
+/// [`ServerSpec`] (topology + admission regime), [`ControlSpec`]
+/// (balancer / autoscaler / migration / event queue), and [`FaultPlan`]
+/// (degradation + outages) — read back with `server_spec()` /
+/// `control_spec()` / `fault_plan()` and replaced wholesale with
+/// `with_server` / `with_control` / `with_faults`. The flat per-field
+/// builders below are kept as thin shims that delegate through the
+/// grouped API, so historical call sites compile (and run)
+/// byte-identically.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Concurrent admissions *per shard*; `None` = unlimited (the paper's
+    /// independent replay, where server TTFT already folds queueing in
+    /// statistically).
+    pub server_slots: Option<usize>,
+    /// Model the single-flight device across requests.
+    pub device_queueing: bool,
+    /// Number of server shards (replicas), K ≥ 1. K = 1 is the PR-1
+    /// single-pool fleet; balancers are bypassed entirely at K = 1.
+    pub shards: usize,
+    /// How arriving server-bound requests spread across shards.
+    pub balancer: BalancerKind,
+    /// Optional per-shard extra RTT offsets (seconds), indexed by shard
+    /// and added to that shard's TTFT (heterogeneous replica placement).
+    /// Shorter than `shards` is padded with 0.0; empty = homogeneous.
+    pub shard_rtts: Vec<f64>,
+    /// Optional shard autoscaling. `None` — or a config whose kind is
+    /// `AutoscalerKind::None` — keeps the static topology and is
+    /// byte-identical to the PR-2 fleet (no evaluation events are
+    /// scheduled at all).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// How server-bound §4.3 re-prefills pick their target. The default
+    /// ([`MigrationTargeting::BaseEndpoint`]) is the PR-3 behavior.
+    pub migration_targeting: MigrationTargeting,
+    /// Per-shard degradation overrides, indexed by shard (`None` =
+    /// healthy). Shorter than `shards` is padded with `None`; shards
+    /// provisioned later by the autoscaler are always healthy.
+    pub shard_faults: Vec<Option<ShardFault>>,
+    /// Scheduled mid-run shard outages (times relative to the first
+    /// arrival). Empty = no failure injection, byte-identical to PR-3.
+    pub outages: Vec<ShardOutage>,
+    /// How each shard admits and serves concurrent streams. The default
+    /// ([`BatchingMode::SlotLegacy`]) is the historical slot pool,
+    /// byte-identical to the pre-batching fleet; `Continuous` switches
+    /// to token-budget prefill admission and batch-size-dependent
+    /// decode (ignoring `server_slots` — the batch, not a slot count,
+    /// bounds concurrency).
+    pub batching: BatchingMode,
+    /// Which event-queue backend orders the loop. Both backends realize
+    /// the exact `(time, seq)` total order, so runs are byte-identical
+    /// across them; the default timing wheel is the fast path, the
+    /// binary heap the reference implementation the parity tests pin
+    /// against.
+    pub event_queue: EventQueueKind,
+    /// Decode pricing for the gated batching modes: freeze each
+    /// stream's slowdown at join time (the historical default) or
+    /// reprice pending gaps at every batch-size change
+    /// ([`PricingMode::IterationLevel`]). Inert under `SlotLegacy`,
+    /// `Flat` curves, and batches that never exceed one stream — the
+    /// repricing parity matrix pins byte-identical runs there.
+    pub pricing: PricingMode,
+    /// Price base-endpoint §4.3 server-bound re-prefill tails at the
+    /// source shard's live batch in the gated modes (default `true`).
+    /// `false` restores the PR-5 legacy quirk (tails decode at
+    /// slowdown 1.0 regardless of the batch they join).
+    pub price_base_tails: bool,
+    /// Optional prefill/decode phase disaggregation (see [`DisaggSpec`]
+    /// and the module-level *Phase-disaggregated pools* section). The
+    /// default `None` keeps the unified fleet byte-for-byte.
+    pub disagg: Option<DisaggSpec>,
+}
+
+impl FleetConfig {
+    /// The legacy per-request replay configuration (one shard, unlimited
+    /// admission).
+    pub fn replay(device_queueing: bool) -> FleetConfig {
+        FleetConfig {
+            server_slots: None,
+            device_queueing,
+            shards: 1,
+            balancer: BalancerKind::RoundRobin,
+            shard_rtts: Vec::new(),
+            autoscale: None,
+            migration_targeting: MigrationTargeting::BaseEndpoint,
+            shard_faults: Vec::new(),
+            outages: Vec::new(),
+            batching: BatchingMode::SlotLegacy,
+            event_queue: EventQueueKind::default(),
+            pricing: PricingMode::JoinTime,
+            price_base_tails: true,
+            disagg: None,
+        }
+    }
+
+    /// A bounded single-shard server with single-flight device contention
+    /// (the PR-1 fleet shape).
+    pub fn bounded(server_slots: usize) -> FleetConfig {
+        FleetConfig {
+            server_slots: Some(server_slots.max(1)),
+            ..FleetConfig::replay(true)
+        }
+    }
+
+    /// A K-shard fleet with `server_slots` admissions per shard.
+    pub fn sharded(shards: usize, server_slots: usize, balancer: BalancerKind) -> FleetConfig {
+        FleetConfig {
+            server_slots: Some(server_slots.max(1)),
+            shards: shards.max(1),
+            balancer,
+            ..FleetConfig::replay(true)
+        }
+    }
+
+    // --- grouped sub-config surface ---------------------------------
+
+    /// The server-side grouped view: topology + admission regime.
+    pub fn server_spec(&self) -> ServerSpec {
+        ServerSpec {
+            shards: self.shards,
+            server_slots: self.server_slots,
+            shard_rtts: self.shard_rtts.clone(),
+            batching: self.batching,
+            pricing: self.pricing,
+            disagg: self.disagg,
+        }
+    }
+
+    /// Replace the server-side spec wholesale.
+    pub fn with_server(mut self, spec: ServerSpec) -> FleetConfig {
+        self.shards = spec.shards;
+        self.server_slots = spec.server_slots;
+        self.shard_rtts = spec.shard_rtts;
+        self.batching = spec.batching;
+        self.pricing = spec.pricing;
+        self.disagg = spec.disagg;
+        self
+    }
+
+    /// The control-plane grouped view: balancer, autoscaler, migration
+    /// targeting, event queue.
+    pub fn control_spec(&self) -> ControlSpec {
+        ControlSpec {
+            balancer: self.balancer,
+            autoscale: self.autoscale,
+            migration_targeting: self.migration_targeting,
+            event_queue: self.event_queue,
+            price_base_tails: self.price_base_tails,
+        }
+    }
+
+    /// Replace the control-plane spec wholesale.
+    pub fn with_control(mut self, spec: ControlSpec) -> FleetConfig {
+        self.balancer = spec.balancer;
+        self.autoscale = spec.autoscale;
+        self.migration_targeting = spec.migration_targeting;
+        self.event_queue = spec.event_queue;
+        self.price_base_tails = spec.price_base_tails;
+        self
+    }
+
+    /// The failure-injection grouped view: faults + outages.
+    pub fn fault_plan(&self) -> FaultPlan {
+        FaultPlan {
+            shard_faults: self.shard_faults.clone(),
+            outages: self.outages.clone(),
+        }
+    }
+
+    /// Replace the failure-injection plan wholesale.
+    pub fn with_faults(mut self, plan: FaultPlan) -> FleetConfig {
+        self.shard_faults = plan.shard_faults;
+        self.outages = plan.outages;
+        self
+    }
+
+    // --- flat builders (thin shims over the grouped surface) ---------
+
+    /// Same topology with heterogeneous per-shard RTT offsets.
+    pub fn with_shard_rtts(self, rtts: Vec<f64>) -> FleetConfig {
+        let spec = ServerSpec {
+            shard_rtts: rtts,
+            ..self.server_spec()
+        };
+        self.with_server(spec)
+    }
+
+    /// Attach a shard-autoscaling policy; `shards` becomes the initial
+    /// (warm) replica count.
+    pub fn with_autoscale(self, autoscale: AutoscaleConfig) -> FleetConfig {
+        let spec = ControlSpec {
+            autoscale: Some(autoscale),
+            ..self.control_spec()
+        };
+        self.with_control(spec)
+    }
+
+    /// Select how §4.3 server-bound re-prefills are targeted.
+    pub fn with_migration_targeting(self, targeting: MigrationTargeting) -> FleetConfig {
+        let spec = ControlSpec {
+            migration_targeting: targeting,
+            ..self.control_spec()
+        };
+        self.with_control(spec)
+    }
+
+    /// Degrade one shard with an extra TTFT spike mixture. Faults on
+    /// indices at or beyond the static `shards` count are dropped at run
+    /// time (autoscaler-provisioned shards are always healthy).
+    pub fn with_shard_fault(self, shard: usize, fault: ShardFault) -> FleetConfig {
+        let plan = self.fault_plan().fault(shard, fault);
+        self.with_faults(plan)
+    }
+
+    /// Schedule a mid-run shard outage (`at` seconds after the first
+    /// arrival).
+    pub fn with_outage(self, at: f64, shard: usize) -> FleetConfig {
+        let plan = self.fault_plan().outage(at, shard);
+        self.with_faults(plan)
+    }
+
+    /// Select the within-shard batching model. `Continuous` replaces
+    /// the per-shard slot cap with token-budget prefill admission and a
+    /// shared decode batch; `server_slots` is then ignored. `PagedKv`
+    /// gates admission on KV pages instead (see [`Self::with_kv`]).
+    pub fn with_batching(self, batching: BatchingMode) -> FleetConfig {
+        let spec = ServerSpec {
+            batching,
+            ..self.server_spec()
+        };
+        self.with_server(spec)
+    }
+
+    /// Switch the fleet to the paged-KV memory model: per-shard KV
+    /// block pools, Sarathi chunked prefill admission, decode page
+    /// growth with memory-pressure preemption, prefix caching, and
+    /// KV-aware hard failover. Shorthand for
+    /// `with_batching(BatchingMode::PagedKv(cfg))`.
+    pub fn with_kv(self, cfg: KvConfig) -> FleetConfig {
+        self.with_batching(BatchingMode::PagedKv(cfg))
+    }
+
+    /// Split the fleet into role-typed prefill/decode pools joined by
+    /// an explicit KV-transfer handoff (see [`DisaggSpec`]). Overrides
+    /// the flat `shards` count with the spec's combined pool sizes.
+    pub fn with_disagg(self, spec: DisaggSpec) -> FleetConfig {
+        let server = ServerSpec {
+            disagg: Some(spec),
+            ..self.server_spec()
+        };
+        self.with_server(server)
+    }
+
+    /// Select the event-queue backend. The timing wheel (default) and
+    /// the binary heap produce byte-identical runs; the heap exists as
+    /// the reference the parity suite compares against.
+    pub fn with_event_queue(self, kind: EventQueueKind) -> FleetConfig {
+        let spec = ControlSpec {
+            event_queue: kind,
+            ..self.control_spec()
+        };
+        self.with_control(spec)
+    }
+
+    /// Select join-time vs iteration-level decode pricing for the gated
+    /// batching modes (a no-op under `SlotLegacy`).
+    pub fn with_pricing(self, pricing: PricingMode) -> FleetConfig {
+        let spec = ServerSpec {
+            pricing,
+            ..self.server_spec()
+        };
+        self.with_server(spec)
+    }
+
+    /// Toggle batch pricing of base-endpoint §4.3 re-prefill tails
+    /// (`false` restores the PR-5 legacy unpriced path).
+    pub fn with_base_tail_pricing(self, price_base_tails: bool) -> FleetConfig {
+        let spec = ControlSpec {
+            price_base_tails,
+            ..self.control_spec()
+        };
+        self.with_control(spec)
+    }
+
+    /// Convenience: a K-shard continuous-batching fleet.
+    pub fn continuous(
+        shards: usize,
+        cfg: ContinuousBatchConfig,
+        balancer: BalancerKind,
+    ) -> FleetConfig {
+        FleetConfig {
+            shards: shards.max(1),
+            balancer,
+            batching: BatchingMode::Continuous(cfg),
+            ..FleetConfig::replay(true)
+        }
+    }
+}
+
+/// Result of a fleet run: per-request records (trace order) plus load
+/// metrics. Zone-partitioned runs (`sim/zones.rs`) merge Z of these —
+/// records re-sorted by the stable `(arrival, zone, seq)` key, load
+/// reports folded via [`LoadReport::merge_zones`] — into one outcome
+/// that is byte-identical at Z=1 to a plain [`run_fleet`] call.
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    pub records: Vec<RequestRecord>,
+    pub load: LoadReport,
+}
+
+mod events;
+mod handoff;
+mod shard;
+mod stream;
+#[cfg(test)]
+mod tests;
+
+#[allow(unused_imports)]
+use events::*;
+#[allow(unused_imports)]
+use shard::*;
+#[allow(unused_imports)]
+use stream::*;
+
+/// The fleet simulator's whole mutable state; split across the
+/// `events` (queue + main loop), `shard` (pools, lifecycle, routing),
+/// `stream` (arena, grants, repricing, resolve), and `handoff`
+/// (KV transfer) submodules, which all implement methods on it.
+
+struct FleetSim<'a> {
+    scenario: &'a Scenario,
+    trace: &'a Trace,
+    policy: &'a Policy,
+    planner: MigrationPlanner,
+    fleet: FleetConfig,
+    /// Per-shard endpoints (base profile + shard RTT) used for migration
+    /// re-prefill sampling once a request is pinned to a shard.
+    server_endpoints: Vec<ServerEndpoint>,
+    balancer: Box<dyn Balancer>,
+    /// Decode-pool balancer choosing the shard each KV handoff lands on
+    /// (disaggregated fleets only; `None` = unified). Shares the fleet
+    /// balancer stream `brng`.
+    decode_balancer: Option<Box<dyn Balancer>>,
+    /// Fleet-level balancer stream, disjoint from every per-request
+    /// stream (randomized balancers must not perturb latency draws).
+    brng: Rng,
+    /// The event queue (wheel or heap backend per
+    /// `FleetConfig::event_queue`); sequence numbers are assigned at
+    /// push, so `queue.pushed()` is the historical `events_processed`.
+    queue: EventQueue<EvKind>,
+    /// Dense per-stream state (SoA), keyed by trace index.
+    arena: StreamArena,
+    /// Incrementally maintained shard-selection index for the
+    /// deterministic scan balancers (JSQ / least-work): `None` for other
+    /// balancers, which snapshot and scan as before. Mutation sites mark
+    /// shards dirty ([`FleetSim::touch_shard`]); picks flush and read
+    /// the root in O(dirty · log K) instead of rescanning all K shards.
+    shard_index: Option<ShardIndex>,
+    /// Queue-entry cancellation flags, indexed by request. These live
+    /// outside `ReqState` (single source of truth) so `Pool::release`
+    /// can consult them while the simulator is otherwise borrowed.
+    server_cancelled: Vec<bool>,
+    device_cancelled: Vec<bool>,
+    shards: Vec<ShardState>,
+    /// Shard each server-bound request was balanced onto (None until
+    /// arrival, and forever for device-only requests).
+    shard_of: Vec<Option<usize>>,
+    /// Scratch buffer for the per-arrival balancer snapshot (reused so
+    /// the hot path allocates nothing).
+    views: Vec<ShardView>,
+    device_pool: Pool,
+    records: Vec<Option<RequestRecord>>,
+    device_delays: Vec<f64>,
+    device_busy: f64,
+    horizon: f64,
+    /// Normalized autoscaling configuration (None = static fleet).
+    autoscale: Option<AutoscaleConfig>,
+    /// The scaling policy; None for static fleets AND for
+    /// `AutoscalerKind::None`, in which case no evaluation events are
+    /// scheduled and the run is byte-identical to the static fleet.
+    /// Under disaggregation this pair governs the *prefill* pool.
+    scaler: Option<Box<dyn Autoscaler>>,
+    /// Decode-pool autoscaling (disaggregated fleets only); evaluated on
+    /// the same `AutoscaleEval` events against decode-shard statuses.
+    decode_autoscale: Option<AutoscaleConfig>,
+    decode_scaler: Option<Box<dyn Autoscaler>>,
+    /// Autoscaler decision stream, disjoint from the balancer stream and
+    /// every per-request stream.
+    arng: Rng,
+    /// Fault-injection stream (per-shard degradation spikes), disjoint
+    /// from all of the above; never drawn when no fault is configured,
+    /// so healthy fleets stay byte-identical.
+    frng: Rng,
+    /// Requests resolved so far; evaluation events stop rescheduling once
+    /// every request resolved, so the event loop terminates.
+    resolved_count: usize,
+    scale_events: Vec<ScaleEvent>,
+    timeline: Vec<ShardCountSample>,
+    cold_start_seconds: f64,
+    /// Shard occupancy held by request `i`'s migrated-in stream
+    /// (shard-targeted migration): the target shard, whether a real slot
+    /// was taken, the booked work estimate, and the booking time —
+    /// released at `MigrationRelease`.
+    migration_booking: Vec<Option<(usize, bool, f64, f64)>>,
+    migration_targeted: usize,
+    migration_fallbacks: usize,
+    outage_requeues: usize,
+    /// Prefill→decode KV handoffs completed (disaggregation only;
+    /// disjoint from the §4.3 `migration_targeted` counter so the storm
+    /// invariant `sum(migrated_in) == migration_targeted` stays exact).
+    handoff_count: usize,
+    /// Total seconds of KV-transfer delay stretched into handed-off
+    /// streams' first decode gaps.
+    kv_transfer_seconds: f64,
+    /// Handoffs that found no admitting decode shard and decoded in
+    /// place on their prefill shard instead.
+    handoff_fallbacks: usize,
+    /// Per-request prompt lengths (tokens), indexed like the trace —
+    /// the admission cost the token-gated pools charge.
+    prompt_tokens: Vec<u32>,
+    /// Per-shard admission cap the pools were built with (`None` under
+    /// continuous batching); autoscaler-provisioned shards reuse it.
+    pool_cap: Option<usize>,
+    /// Batch-size timeline samples (gated batching modes only; absolute
+    /// times, re-based at report build).
+    batch_samples: Vec<BatchSample>,
+    /// Per-request prompt tokens the *server* pools charge: equal to
+    /// `prompt_tokens` except under paged KV, where a prefix-cache hit
+    /// shrinks the charge to the uncached suffix. Device pools always
+    /// charge the full prompt.
+    server_tokens: Vec<u32>,
+    /// Per-shard lists of admitted, still-decoding streams whose KV
+    /// pages live on that shard (paged KV only; drives decode growth
+    /// and preemption victim selection).
+    kv_live: Vec<Vec<usize>>,
+    /// KV pages currently held by request `i`'s own stream (prefill +
+    /// decode growth) on its shard.
+    kv_pages_held: Vec<usize>,
+    /// Until this absolute time, stream `i` is re-prefilling after a
+    /// preemption/failover and neither grows nor gets preempted again.
+    kv_suspend_until: Vec<f64>,
+    /// Absolute time of request `i`'s *current* `ServerRelease` event.
+    /// Preemption and KV failover push a superseding later release; the
+    /// handler only honors the event whose timestamp matches (the
+    /// stale-release guard), so a slot never double-frees.
+    kv_release_at: Vec<f64>,
+    /// Whether request `i`'s server release already fired (paged mode).
+    kv_release_done: Vec<bool>,
+    /// KV pages booked on a §4.3 migration target for request `i`'s
+    /// migrated-in stream; freed at `MigrationRelease`.
+    kv_mig_pages: Vec<usize>,
+    /// Memory-pressure preemptions (evict-and-re-prefill) this run.
+    kv_preemptions: usize,
+    /// Mid-decode re-prefills forced by a hard outage losing KV.
+    kv_forced_reprefills: usize,
+    /// Raw generation timeline of request `i`'s server stream, relative
+    /// to its arrival (`[0]` = TTFT), captured at resolve under
+    /// iteration-level pricing. Empty = not tracked (join-time runs,
+    /// device winners, migrated streams). Batch-change repricing
+    /// re-stamps the pending suffix in place; the record's delivered
+    /// `tbts` are re-derived from it (deferred finalization) when the
+    /// stream's release event validly fires.
+    gen_times: Vec<Vec<f64>>,
+    /// Per-shard lists of streams tracked for iteration-level repricing
+    /// (resolved server winners decoding in that shard's batch).
+    decode_live: Vec<Vec<usize>>,
+    /// Batch-change repricing events applied this run (telemetry).
+    reprice_events: u64,
+    /// Seconds of release-time *stretch* applied by repricing (batch
+    /// grew mid-decode — the ramp direction).
+    reprice_stretch_seconds: f64,
+    /// Seconds of release-time *shrink* applied by repricing (batch
+    /// drained mid-decode).
+    reprice_shrink_seconds: f64,
+    /// First arrival (absolute); shard-seconds and report timestamps are
+    /// measured from here.
+    t0: f64,
+}
+
+/// Run a trace through the fleet loop. Requests must arrive in
+/// nondecreasing time order (the trace generators guarantee this); ties
+/// are broken in trace order.
+///
+/// # RNG-stream invariant
+///
+/// Per-request RNG streams are forked from `SimConfig.seed` **in trace
+/// order**, tagged by `Request.id` — request `k`'s latency draws depend
+/// on both its position and its id, never on event interleaving. Any
+/// transformation that reorders a trace (randomized replay of session
+/// traces, overlaying several traces) must therefore keep requests
+/// arrival-sorted and reassign ids in the new order; use
+/// [`crate::trace::generator::shuffle_payloads`] /
+/// [`crate::trace::generator::interleave`], which preserve the
+/// invariant by construction.
+pub fn run_fleet(
+    scenario: &Scenario,
+    trace: &Trace,
+    policy: &Policy,
+    fleet: &FleetConfig,
+) -> FleetOutcome {
+    let n = trace.len();
+    // Phase disaggregation overrides the flat shard count with the
+    // combined pool sizes (prefill shards at the low indices) and the
+    // arrival balancer with the prefill pool's.
+    let disagg = fleet.disagg.map(|d| d.normalized());
+    let shard_count = match disagg {
+        Some(d) => d.total_shards(),
+        None => fleet.shards.max(1),
+    };
+    // A zero-slot pool could never admit anyone; normalize once so the
+    // pools and the reported LoadReport.server_slots always agree. RTT
+    // offsets are padded/truncated to the shard count; autoscale bands
+    // are clamped sane.
+    let mut rtts = fleet.shard_rtts.clone();
+    rtts.resize(shard_count, 0.0);
+    // Faults are padded/truncated to the *static* shard count: shards
+    // the autoscaler provisions later are always healthy, as documented.
+    let mut faults = fleet.shard_faults.clone();
+    faults.resize(shard_count, None);
+    let batching = fleet.batching.normalized();
+    // Under a gated batching mode (continuous or paged KV) the slot cap
+    // is gone: the token budget / page ledger gates admission and the
+    // batch (not a slot count) bounds concurrency, so pools — and the
+    // reported capacity — are uncapped.
+    let pool_cap = if batching.batched() {
+        None
+    } else {
+        fleet.server_slots.map(|s| s.max(1))
+    };
+    // Setup-time clones only: the padded RTT table is *moved* into the
+    // normalized config (the run phase borrows it back), and the outage
+    // schedule is cloned exactly once here — the event loop reads both
+    // in place (this PR's allocation sweep removed the per-run-phase
+    // re-clones).
+    let fleet = FleetConfig {
+        server_slots: pool_cap,
+        device_queueing: fleet.device_queueing,
+        shards: shard_count,
+        balancer: match disagg {
+            Some(d) => d.prefill_balancer,
+            None => fleet.balancer,
+        },
+        shard_rtts: rtts,
+        autoscale: match disagg {
+            Some(d) => d.prefill_autoscale,
+            None => fleet.autoscale.map(|a| a.normalized()),
+        },
+        migration_targeting: fleet.migration_targeting,
+        shard_faults: faults,
+        outages: fleet.outages.clone(),
+        batching,
+        pricing: fleet.pricing,
+        price_base_tails: fleet.price_base_tails,
+        event_queue: fleet.event_queue,
+        disagg,
+    };
+    let server_endpoints = ServerEndpoint::shard_fleet(&scenario.server, &fleet.shard_rtts);
+    // Initial shards are created warm at the first arrival (created_at
+    // is stamped in `run`). Under disaggregation each shard is typed by
+    // its index (prefill pool first); unified fleets type every shard
+    // `PoolRole::Unified`.
+    let shards: Vec<ShardState> = fleet
+        .shard_rtts
+        .iter()
+        .enumerate()
+        .map(|(i, &rtt)| {
+            let mut sh = ShardState::new(
+                Pool::new(pool_cap).with_gate_kind(make_gate(&batching)),
+                rtt,
+                LifecyclePhase::Warm,
+                0.0,
+                0.0,
+            );
+            if let Some(d) = disagg {
+                sh.role = d.role_of(i);
+            }
+            sh
+        })
+        .collect();
+    let device_pool = Pool::new(if fleet.device_queueing { Some(1) } else { None });
+    let prompt_tokens: Vec<u32> = trace.requests.iter().map(|r| r.prompt_len).collect();
+    // `AutoscaleConfig` is Copy, so the normalized config can live both
+    // in `fleet` (for Debug/consumers) and as the loop's working copy.
+    let autoscale = fleet.autoscale;
+    let scaler = autoscale.as_ref().and_then(|a| a.kind.build());
+    let decode_autoscale = disagg.and_then(|d| d.decode_autoscale);
+    let decode_scaler = decode_autoscale.as_ref().and_then(|a| a.kind.build());
+    // The deterministic scan balancers get an incrementally maintained
+    // argmin index (built even at K=1 so autoscaled growth picks it up;
+    // the K=1 fast path bypasses it until the fleet actually grows).
+    // Disaggregated fleets skip the index: it ranks the full shard set,
+    // and role-masked routing needs the per-pool snapshot path.
+    let shard_index = if disagg.is_some() {
+        None
+    } else {
+        match fleet.balancer {
+            BalancerKind::JoinShortestQueue | BalancerKind::LeastWork => {
+                Some(ShardIndex::new(shard_count))
+            }
+            _ => None,
+        }
+    };
+    let queue = EventQueue::new(fleet.event_queue);
+    let sim = FleetSim {
+        scenario,
+        trace,
+        policy,
+        planner: MigrationPlanner::new(scenario.cfg.migration, scenario.costs),
+        balancer: fleet.balancer.build(),
+        // Disjoint from the root request-stream RNG by construction (a
+        // different seed expansion), so balancer draws never perturb
+        // request trajectories.
+        brng: Rng::new(scenario.cfg.seed ^ 0xBA1A_7CE5_0C4A_11CE),
+        // The autoscaler's own stream, disjoint from both of the above.
+        arng: Rng::new(scenario.cfg.seed ^ 0xA5CA_1E05_EED0_0001),
+        // The fault-injection stream (disjoint again); never drawn when
+        // no `ShardFault` is configured.
+        frng: Rng::new(scenario.cfg.seed ^ 0xFA17_1217_EC7E_D001),
+        autoscale,
+        scaler,
+        decode_autoscale,
+        decode_scaler,
+        decode_balancer: disagg.map(|d| d.decode_balancer.build()),
+        fleet,
+        server_endpoints,
+        queue,
+        arena: StreamArena::new(n),
+        shard_index,
+        server_cancelled: vec![false; n],
+        device_cancelled: vec![false; n],
+        shards,
+        shard_of: vec![None; n],
+        views: Vec::new(),
+        device_pool,
+        records: (0..n).map(|_| None).collect(),
+        device_delays: Vec::new(),
+        device_busy: 0.0,
+        horizon: 0.0,
+        resolved_count: 0,
+        scale_events: Vec::new(),
+        timeline: Vec::new(),
+        cold_start_seconds: 0.0,
+        migration_booking: (0..n).map(|_| None).collect(),
+        migration_targeted: 0,
+        migration_fallbacks: 0,
+        outage_requeues: 0,
+        handoff_count: 0,
+        kv_transfer_seconds: 0.0,
+        handoff_fallbacks: 0,
+        server_tokens: prompt_tokens.clone(),
+        prompt_tokens,
+        pool_cap,
+        batch_samples: Vec::new(),
+        kv_live: vec![Vec::new(); shard_count],
+        kv_pages_held: vec![0; n],
+        kv_suspend_until: vec![0.0; n],
+        kv_release_at: vec![0.0; n],
+        kv_release_done: vec![false; n],
+        kv_mig_pages: vec![0; n],
+        kv_preemptions: 0,
+        kv_forced_reprefills: 0,
+        gen_times: vec![Vec::new(); n],
+        decode_live: vec![Vec::new(); shard_count],
+        reprice_events: 0,
+        reprice_stretch_seconds: 0.0,
+        reprice_shrink_seconds: 0.0,
+        t0: 0.0,
+    };
+    sim.run()
+}

@@ -1,0 +1,1141 @@
+//! Shard-side state: admission pools and gates, per-shard lifecycle,
+//! routing (balancer picks), autoscaling transitions, outage
+//! injection, and the load/batch telemetry they feed.
+
+use super::*;
+
+// ---------------------------------------------------------------------
+// Resource pools
+// ---------------------------------------------------------------------
+
+/// Continuous-batching admission gate: prefill admission consumes a
+/// prompt-token budget replenished every scheduling tick instead of a
+/// slot. A prompt longer than the whole per-tick budget is admitted
+/// when the tick's budget is untouched (consuming all of it), so
+/// oversized prompts cannot starve behind the gate.
+#[derive(Debug)]
+pub(super) struct BatchGate {
+    /// Prompt tokens admissible per scheduling tick.
+    pub(super) budget_per_tick: u64,
+    /// Remaining budget in the current tick.
+    pub(super) budget_left: u64,
+    /// Optional cap on concurrently decoding streams.
+    pub(super) max_batch: Option<usize>,
+    /// Prompt tokens actually admitted (token-budget utilization
+    /// numerator).
+    pub(super) admitted_tokens: u64,
+    /// Budget made available so far: the initial allotment plus one
+    /// `budget_per_tick` per tick (the utilization denominator).
+    pub(super) capacity_tokens: u64,
+}
+
+impl BatchGate {
+    pub(super) fn new(cfg: &ContinuousBatchConfig) -> BatchGate {
+        let per = cfg.prefill_tokens_per_tick.max(1) as u64;
+        BatchGate {
+            budget_per_tick: per,
+            budget_left: per,
+            max_batch: cfg.max_batch,
+            admitted_tokens: 0,
+            capacity_tokens: per,
+        }
+    }
+
+    pub(super) fn admits(&self, in_use: usize, tokens: u32) -> bool {
+        if let Some(mb) = self.max_batch {
+            if in_use >= mb {
+                return false;
+            }
+        }
+        let t = tokens as u64;
+        let fresh = self.budget_left == self.budget_per_tick;
+        t <= self.budget_left || (fresh && t > self.budget_per_tick)
+    }
+
+    pub(super) fn consume(&mut self, tokens: u32) {
+        self.admitted_tokens += tokens as u64;
+        self.budget_left = self.budget_left.saturating_sub(tokens as u64);
+    }
+
+    pub(super) fn tick(&mut self) {
+        self.budget_left = self.budget_per_tick;
+        self.capacity_tokens += self.budget_per_tick;
+    }
+}
+
+/// Admission gate attached to a pool: the continuous-batching token
+/// budget or the paged-KV page ledger. `None` on the pool = slot
+/// semantics.
+#[derive(Debug)]
+pub(super) enum Gate {
+    Batch(BatchGate),
+    Kv(KvGate),
+}
+
+/// Build the gate matching the fleet's (normalized) batching mode.
+pub(super) fn make_gate(batching: &BatchingMode) -> Option<Gate> {
+    match batching {
+        BatchingMode::SlotLegacy => None,
+        BatchingMode::Continuous(c) => Some(Gate::Batch(BatchGate::new(c))),
+        BatchingMode::PagedKv(k) => Some(Gate::Kv(KvGate::new(k))),
+    }
+}
+
+/// FIFO admission pool. Under slot semantics (`gate == None`) it is a
+/// (possibly unlimited) concurrency cap; under continuous batching the
+/// cap is gone and a [`BatchGate`] token budget gates admission
+/// instead. Cancelled entries are skipped lazily at pop time; live-entry
+/// and queued-token counters are maintained incrementally (adjusted at
+/// cancellation via [`Pool::cancel_queued`]) so the balancer's
+/// per-arrival snapshot is O(1) per shard instead of an O(queue) rescan.
+#[derive(Debug)]
+pub(super) struct Pool {
+    pub(super) cap: Option<usize>,
+    pub(super) in_use: usize,
+    /// Units of `in_use` booked by §4.3 batch-join over-commits
+    /// (`acquire_overflow` past the cap, or any migrated-in join under
+    /// continuous batching). Tracked separately from real slots so a
+    /// spurious second over-commit release can never free a slot a real
+    /// holder still occupies, and so occupancy and over-commit surface
+    /// separately in [`ShardLoad`].
+    pub(super) over_commit: usize,
+    pub(super) queue: VecDeque<usize>,
+    /// Non-cancelled entries currently in `queue`.
+    pub(super) live: usize,
+    /// Prompt tokens of the live queued entries — the token-backlog
+    /// signal balancers, the autoscaler, and the migration planner read
+    /// under continuous batching.
+    pub(super) queued_tokens: u64,
+    /// A frozen (cold-shard) pool queues every acquire unconditionally;
+    /// nothing admits until the shard's warm-up event unfreezes it.
+    /// Static fleets never freeze, so the PR-2 semantics are untouched.
+    pub(super) frozen: bool,
+    /// Releases that found nothing to release (a double release).
+    /// Previously `saturating_sub` silently absorbed these, masking the
+    /// bug as a permanent capacity leak; now they are counted (and
+    /// debug-asserted) and surface in `LoadReport::release_underflows`.
+    /// Always 0 on a correct event flow.
+    pub(super) underflows: usize,
+    /// High-water mark of `in_use`: the peak batch size under
+    /// continuous batching, peak occupancy (incl. over-commit) under
+    /// slots.
+    pub(super) peak_in_use: usize,
+    /// Admission gate: continuous-batching token budget or paged-KV
+    /// page ledger (`None` = slot semantics).
+    pub(super) gate: Option<Gate>,
+}
+
+impl Pool {
+    pub(super) fn new(cap: Option<usize>) -> Pool {
+        Pool {
+            cap,
+            in_use: 0,
+            over_commit: 0,
+            queue: VecDeque::new(),
+            live: 0,
+            queued_tokens: 0,
+            frozen: false,
+            underflows: 0,
+            peak_in_use: 0,
+            gate: None,
+        }
+    }
+
+    /// A cold shard's pool: queues everything until unfrozen.
+    pub(super) fn new_frozen(cap: Option<usize>) -> Pool {
+        Pool {
+            frozen: true,
+            ..Pool::new(cap)
+        }
+    }
+
+    /// Attach (or not) a continuous-batching gate.
+    pub(super) fn with_gate(self, gate: Option<BatchGate>) -> Pool {
+        self.with_gate_kind(gate.map(Gate::Batch))
+    }
+
+    /// Attach (or not) an admission gate of either kind.
+    pub(super) fn with_gate_kind(mut self, gate: Option<Gate>) -> Pool {
+        self.gate = gate;
+        self
+    }
+
+    /// The paged-KV gate, if this pool carries one.
+    pub(super) fn kv(&self) -> Option<&KvGate> {
+        match &self.gate {
+            Some(Gate::Kv(g)) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub(super) fn kv_mut(&mut self) -> Option<&mut KvGate> {
+        match &mut self.gate {
+            Some(Gate::Kv(g)) => Some(g),
+            _ => None,
+        }
+    }
+
+    /// Whether an arrival with `tokens` prompt tokens can admit right
+    /// now (ignoring the frozen flag, which callers check first).
+    pub(super) fn admits_now(&self, tokens: u32) -> bool {
+        match &self.gate {
+            Some(Gate::Batch(g)) => g.admits(self.in_use, tokens),
+            Some(Gate::Kv(g)) => g.admits(tokens),
+            None => match self.cap {
+                None => true,
+                Some(cap) => self.in_use < cap,
+            },
+        }
+    }
+
+    /// Consume one admission: bump `in_use` (and the token budget or
+    /// page ledger under a gate) and track the peak.
+    pub(super) fn admit_now(&mut self, tokens: u32) {
+        self.in_use += 1;
+        if self.in_use > self.peak_in_use {
+            self.peak_in_use = self.in_use;
+        }
+        match &mut self.gate {
+            Some(Gate::Batch(g)) => g.consume(tokens),
+            Some(Gate::Kv(g)) => g.consume(tokens),
+            None => {}
+        }
+    }
+
+    /// Checked release of one `in_use` unit: a double release is
+    /// recorded (and debug-asserted) instead of being silently clamped
+    /// into a permanent capacity leak.
+    pub(super) fn dec_in_use(&mut self) {
+        debug_assert!(self.in_use > 0, "pool release with nothing in use");
+        if self.in_use == 0 {
+            self.underflows += 1;
+        } else {
+            self.in_use -= 1;
+        }
+    }
+
+    /// Try to acquire; queues and returns false when full, frozen, or
+    /// out of token budget. Unlimited pools admit immediately but still
+    /// count `in_use`, so balancers see real in-service load even
+    /// without a slot cap.
+    ///
+    /// Admission is FIFO: under a token gate a live entry may be queued
+    /// while budget remains (its prompt didn't fit the tick), and a new
+    /// small arrival must queue behind it rather than jump it. Slot
+    /// pools never have a live queue alongside spare capacity (releases
+    /// transfer), so the guard is gated to batch mode and legacy
+    /// behavior is untouched.
+    pub(super) fn acquire(&mut self, i: usize, tokens: u32) -> bool {
+        let fifo_blocked = self.gate.is_some() && self.live > 0;
+        if !self.frozen && !fifo_blocked && self.admits_now(tokens) {
+            self.admit_now(tokens);
+            return true;
+        }
+        self.queue.push_back(i);
+        self.live += 1;
+        self.queued_tokens += tokens as u64;
+        false
+    }
+
+    /// Admit the next live queued entry if the pool has spare capacity
+    /// (or token budget) and is not frozen — the unit is newly
+    /// consumed, unlike the slot-transfer path of [`Pool::release`].
+    /// `tokens[j]` is request `j`'s prompt length.
+    pub(super) fn try_admit(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
+        if self.frozen {
+            return None;
+        }
+        loop {
+            let &j = self.queue.front()?;
+            if cancelled[j] {
+                // Cancelled entries left `live` (and `queued_tokens`)
+                // at cancellation time; just drop the dead slot.
+                self.queue.pop_front();
+                continue;
+            }
+            if !self.admits_now(tokens[j]) {
+                return None;
+            }
+            self.queue.pop_front();
+            self.live = self.live.saturating_sub(1);
+            self.queued_tokens = self.queued_tokens.saturating_sub(tokens[j] as u64);
+            self.admit_now(tokens[j]);
+            return Some(j);
+        }
+    }
+
+    /// Release one unit; returns the next queued request to admit, if
+    /// any. Under slot semantics the unit *transfers* to the next live
+    /// queued entry; under a batch gate the departing stream only frees
+    /// batch headroom and any admission stays token-gated.
+    pub(super) fn release(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
+        if self.gate.is_some() {
+            self.dec_in_use();
+            return self.try_admit(cancelled, tokens);
+        }
+        while let Some(j) = self.queue.pop_front() {
+            if !cancelled[j] {
+                self.live = self.live.saturating_sub(1);
+                self.queued_tokens = self.queued_tokens.saturating_sub(tokens[j] as u64);
+                return Some(j);
+            }
+        }
+        self.dec_in_use();
+        None
+    }
+
+    /// A queued entry was cancelled (its lazily-skipped queue slot is
+    /// now dead): keep the live count and token backlog in sync.
+    pub(super) fn cancel_queued(&mut self, tokens: u32) {
+        self.live = self.live.saturating_sub(1);
+        self.queued_tokens = self.queued_tokens.saturating_sub(tokens as u64);
+    }
+
+    /// Live (non-cancelled) queue length — the balancer's view.
+    pub(super) fn live_queued(&self) -> usize {
+        self.live
+    }
+
+    /// Prompt tokens queued for admission (live entries only).
+    pub(super) fn queued_prompt_tokens(&self) -> u64 {
+        self.queued_tokens
+    }
+
+    /// Occupy one unit for a §4.3 migrated-in stream. Under slot
+    /// semantics it takes a real slot when capacity is spare and
+    /// otherwise joins the running batch over-capacity; under
+    /// continuous batching it always joins the batch (the handoff time
+    /// was already committed, so the stream cannot queue — neither the
+    /// token budget nor `max_batch` applies). Returns whether a real
+    /// slot was taken, which decides the matching release path.
+    pub(super) fn acquire_overflow(&mut self) -> bool {
+        let real = match (&self.gate, self.cap) {
+            (Some(_), _) => false,
+            (None, Some(cap)) => self.in_use < cap,
+            (None, None) => true,
+        };
+        if !real {
+            self.over_commit += 1;
+        }
+        self.in_use += 1;
+        if self.in_use > self.peak_in_use {
+            self.peak_in_use = self.in_use;
+        }
+        real
+    }
+
+    /// Release an over-capacity (batch-join) unit. Real slots may have
+    /// freed *underneath* the over-commit in the meantime (their release
+    /// saw an empty queue and simply decremented), leaving this unit
+    /// load-bearing — so after the decrement, any spare capacity admits
+    /// the next live queued entry exactly like a real-slot release would
+    /// have. Skipping that admission would strand the queue forever: no
+    /// later release event exists on the shard.
+    ///
+    /// A release with no over-commit outstanding is a double release:
+    /// it is refused (counted in `underflows`) instead of decrementing
+    /// `in_use`, which would free a slot a real holder still occupies —
+    /// the accounting bug this PR's sweep fixed.
+    pub(super) fn release_overflow(&mut self, cancelled: &[bool], tokens: &[u32]) -> Option<usize> {
+        if self.over_commit == 0 {
+            debug_assert!(false, "over-commit release with no over-commit outstanding");
+            self.underflows += 1;
+            return None;
+        }
+        self.over_commit -= 1;
+        self.dec_in_use();
+        self.try_admit(cancelled, tokens)
+    }
+
+    /// Remove every live queued entry (outage re-routing); cancelled
+    /// entries are dropped on the way. Leaves the queue empty.
+    pub(super) fn drain_queue(&mut self, cancelled: &[bool]) -> Vec<usize> {
+        let mut live = Vec::with_capacity(self.live);
+        while let Some(j) = self.queue.pop_front() {
+            if !cancelled[j] {
+                live.push(j);
+            }
+        }
+        self.live = 0;
+        self.queued_tokens = 0;
+        live
+    }
+
+    /// Replenish the token budget at a scheduling tick (no-op for slot
+    /// pools). An *idle* tick — budget untouched and nothing queued —
+    /// offered no usable capacity and accrues none, so
+    /// `token_budget_utilization` measures budget offered while there
+    /// was work, not the trace's idle tail.
+    pub(super) fn tick(&mut self) {
+        match &mut self.gate {
+            Some(Gate::Batch(g)) => {
+                let idle = g.budget_left == g.budget_per_tick && self.live == 0;
+                if !idle {
+                    g.tick();
+                }
+            }
+            Some(Gate::Kv(g)) => {
+                // The KV chunk budget accrues (never resets), so only
+                // ticks with queued prefill work offer usable capacity;
+                // accruing while nothing waits would let a later burst
+                // admit unboundedly in one tick.
+                if self.live > 0 {
+                    g.tick();
+                }
+            }
+            None => {}
+        }
+    }
+
+    /// (admitted, capacity) prompt-token totals of the gate; zeros for
+    /// slot pools.
+    pub(super) fn token_totals(&self) -> (u64, u64) {
+        match &self.gate {
+            Some(Gate::Batch(g)) => (g.admitted_tokens, g.capacity_tokens),
+            Some(Gate::Kv(g)) => g.token_totals(),
+            None => (0, 0),
+        }
+    }
+}
+
+/// One server shard: a bounded slot pool plus its load accounting and
+/// autoscaling lifecycle (static fleets stay `Warm` forever).
+pub(super) struct ShardState {
+    pub(super) pool: Pool,
+    /// Extra RTT (seconds) this shard adds to every first token it serves
+    /// (offset relative to the scenario's base server endpoint).
+    pub(super) rtt: f64,
+    /// Outstanding estimated service seconds: pre-drawn prefill samples
+    /// of requests assigned to this shard that are queued or still hold
+    /// a slot (retired at `ServerRelease`, or at resolve for entries
+    /// that never held one). The `LeastWork` balancer's signal.
+    pub(super) work: f64,
+    pub(super) busy: f64,
+    /// Seconds of §4.3 batch-join occupancy held *above* the shard's
+    /// slot capacity (over-commit bookings; real-slot bookings land in
+    /// `busy`). Reported separately from `busy` so utilization stays a
+    /// within-capacity ratio.
+    pub(super) overcommit_seconds: f64,
+    pub(super) delays: Vec<f64>,
+    pub(super) admitted: usize,
+    /// §4.3 migrated streams routed into this shard's pool
+    /// (shard-targeted migration only).
+    pub(super) migrated_in: usize,
+    /// Which phase pool the shard serves (always `Unified` outside
+    /// disaggregation; routing surfaces mask candidates by this).
+    pub(super) role: PoolRole,
+    /// Handed-off streams this (decode) shard received via prefill →
+    /// decode KV transfer. Disjoint from `migrated_in`.
+    pub(super) handoff_in: usize,
+    /// Last batch size recorded in the batch timeline (dedupes
+    /// consecutive identical samples); `None` before the first sample.
+    pub(super) last_batch: Option<usize>,
+    /// Cold → Warm → Draining → Retired under autoscaling (outages force
+    /// Draining mid-run).
+    pub(super) phase: LifecyclePhase,
+    /// Absolute creation time (the first arrival for initial shards), the
+    /// start of this shard's shard-seconds accrual.
+    pub(super) created_at: f64,
+    /// When a cold shard finishes loading (drives the all-cold routing
+    /// fallback); 0.0 for shards created warm.
+    pub(super) ready_at: f64,
+    /// Absolute retirement time; `None` while the shard still accrues
+    /// shard-seconds.
+    pub(super) retired_at: Option<f64>,
+}
+
+impl ShardState {
+    pub(super) fn new(pool: Pool, rtt: f64, phase: LifecyclePhase, created_at: f64, ready_at: f64) -> Self {
+        ShardState {
+            pool,
+            rtt,
+            work: 0.0,
+            busy: 0.0,
+            overcommit_seconds: 0.0,
+            delays: Vec::new(),
+            admitted: 0,
+            migrated_in: 0,
+            role: PoolRole::Unified,
+            handoff_in: 0,
+            last_batch: None,
+            phase,
+            created_at,
+            ready_at,
+            retired_at: None,
+        }
+    }
+}
+
+impl<'a> FleetSim<'a> {
+
+    /// Rebuild the reusable per-shard snapshot buffer (`self.views`);
+    /// returns whether any shard currently admits new work.
+    pub(super) fn snapshot_views(&mut self) -> bool {
+        self.snapshot_views_role(None)
+    }
+
+    /// Role-masked snapshot: with `Some(role)`, shards of any other
+    /// role are flagged non-admitting so balancers and re-prefill
+    /// targeting confine themselves to one pool. `None` reproduces the
+    /// unmasked snapshot bit-for-bit (the unified path).
+    pub(super) fn snapshot_views_role(&mut self, role: Option<PoolRole>) -> bool {
+        self.views.clear();
+        let mut any_admitting = false;
+        for sh in &self.shards {
+            let admitting =
+                sh.phase == LifecyclePhase::Warm && role.map_or(true, |r| sh.role == r);
+            any_admitting |= admitting;
+            self.views.push(ShardView {
+                in_use: sh.pool.in_use,
+                queued: sh.pool.live_queued(),
+                slots: sh.pool.cap,
+                work: sh.work,
+                queued_tokens: sh.pool.queued_prompt_tokens(),
+                admitting,
+            });
+        }
+        any_admitting
+    }
+
+    /// The routing mask for work that must stay on shard `s`'s pool:
+    /// `Some(role)` under disaggregation, `None` (no masking — the
+    /// byte-identical historical path) otherwise.
+    pub(super) fn role_mask_of(&self, s: usize) -> Option<PoolRole> {
+        if self.fleet.disagg.is_some() {
+            Some(self.shards[s].role)
+        } else {
+            None
+        }
+    }
+
+    /// Decode-gap multiplier for a stream joining shard `s`'s batch
+    /// right now (the stream itself already counted in `in_use`). 1.0
+    /// under slot semantics — legacy streams are never repriced.
+    pub(super) fn batch_slowdown(&self, s: usize) -> f64 {
+        match self.fleet.batching {
+            BatchingMode::Continuous(c) => c.curve.slowdown(self.shards[s].pool.in_use),
+            BatchingMode::PagedKv(k) => k.curve.slowdown(self.shards[s].pool.in_use),
+            BatchingMode::SlotLegacy => 1.0,
+        }
+    }
+
+    /// Whether this run re-prices running decodes on batch change:
+    /// iteration-level pricing under a gated batching mode. Slot-legacy
+    /// streams are never repriced regardless of the pricing mode.
+    pub(super) fn reprice_active(&self) -> bool {
+        self.fleet.pricing == PricingMode::IterationLevel && self.fleet.batching.batched()
+    }
+
+    /// Whether `ServerRelease` events can be superseded and must pass
+    /// the timestamp guard: paged KV stretches releases at preemption
+    /// and failover, iteration-level repricing moves them on any batch
+    /// change.
+    pub(super) fn release_guard_active(&self) -> bool {
+        self.fleet.batching.is_paged() || self.reprice_active()
+    }
+
+    /// Append a batch-size sample for shard `s` if the size changed
+    /// (continuous batching only; legacy runs record nothing, keeping
+    /// their load reports byte-identical). Under iteration-level
+    /// pricing a size change is exactly the repricing trigger: the
+    /// slowdown curve reads only the batch *size*, so same-size
+    /// composition churn (one stream leaves as another admits) is a
+    /// semantic no-op and is skipped by the dedupe.
+    pub(super) fn record_batch(&mut self, s: usize, now: f64) {
+        if !self.fleet.batching.batched() {
+            return;
+        }
+        let batch = self.shards[s].pool.in_use;
+        if self.shards[s].last_batch == Some(batch) {
+            return;
+        }
+        self.shards[s].last_batch = Some(batch);
+        self.batch_samples.push(BatchSample {
+            time: now,
+            shard: s,
+            batch,
+        });
+        if self.reprice_active() {
+            self.reprice_shard(s, now);
+        }
+    }
+
+    /// Balance server-bound request `i` onto a shard, apply any
+    /// configured per-shard degradation to its pre-drawn sample, and
+    /// book its work estimate. With one shard the balancer (and its RNG
+    /// stream) is bypassed entirely, preserving byte-identical K=1
+    /// replays. Cold, draining, and retired shards are flagged
+    /// non-admitting; should every shard be non-admitting (unreachable
+    /// while the autoscaler keeps `min_shards ≥ 1` warm, but handled
+    /// defensively), the request joins the cold shard that becomes
+    /// ready soonest.
+    pub(super) fn assign_shard(&mut self, i: usize, now: f64) -> usize {
+        // Disaggregated fleets balance arrivals across the *prefill*
+        // pool only (decode shards receive work via handoff, never at
+        // arrival); unified fleets snapshot unmasked, byte-identically.
+        let arrival_mask = self
+            .fleet
+            .disagg
+            .is_some()
+            .then_some(PoolRole::Prefill);
+        let s = if self.shards.len() == 1 {
+            0
+        } else if self.shard_index.is_some() {
+            // JSQ / least-work: answer the argmin from the incremental
+            // index instead of snapshotting and rescanning all K shards.
+            // Neither balancer consumes randomness, so skipping
+            // `Balancer::pick` leaves the fleet balancer stream — and
+            // therefore every other draw — byte-identical. (Never built
+            // under disaggregation, where picks must be role-masked.)
+            self.pick_indexed()
+        } else {
+            let any_admitting = self.snapshot_views_role(arrival_mask);
+            if any_admitting {
+                let pick = self.balancer.pick(&self.views, &mut self.brng);
+                assert!(
+                    pick < self.shards.len(),
+                    "balancer {} violated its contract: picked shard {pick} of {}",
+                    self.balancer.name(),
+                    self.shards.len()
+                );
+                debug_assert!(
+                    self.views[pick].admitting,
+                    "balancer {} routed to a non-admitting shard {pick}",
+                    self.balancer.name()
+                );
+                pick
+            } else {
+                self.earliest_ready_shard()
+            }
+        };
+        self.shard_of[i] = Some(s);
+        let mut sample = self.arena.pre[i]
+            .server_sample
+            .expect("server users have a sample");
+        // Per-shard degradation: landing on a faulty shard may multiply
+        // the pre-drawn prefill sample by an extra spike (drawn from the
+        // dedicated fault stream). Applied here — before the work
+        // booking, the first-token probe, or the resolve step read the
+        // sample — so every consumer sees the degraded value, the
+        // LeastWork/queue-delay oracles included.
+        if let Some(&Some(f)) = self.fleet.shard_faults.get(s) {
+            if self.frng.chance(f.spike_prob) {
+                let base = sample;
+                sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
+                self.arena.pre[i].server_sample = Some(sample);
+                self.arena.base_sample[i] = Some(base);
+            }
+        }
+        sample = self.apply_prefix_cache(i, s, sample, now);
+        self.shards[s].work += sample;
+        self.touch_shard(s);
+        s
+    }
+
+    /// Paged-KV prefix-cache lookup for request `i` landing on shard
+    /// `s`: a hit scales the pre-drawn prefill sample down to the
+    /// uncached fraction and shrinks the admission charge
+    /// (`server_tokens`) to the uncached suffix. Deterministic and
+    /// RNG-free; a no-op (returning `sample` unchanged) outside paged
+    /// mode, so other modes stay byte-identical. Returns the sample
+    /// every downstream consumer should see.
+    pub(super) fn apply_prefix_cache(&mut self, i: usize, s: usize, sample: f64, now: f64) -> f64 {
+        if !self.fleet.batching.is_paged() {
+            return sample;
+        }
+        let len = self.prompt_tokens[i];
+        let cached = match self.shards[s].pool.kv_mut() {
+            Some(g) => g.prefix_lookup(len, now),
+            None => 0,
+        };
+        if cached == 0 {
+            return sample;
+        }
+        // Remember the full-prefill draw: an outage re-route restores
+        // it (the cached prefix lived on this shard, not the stream)
+        // and re-runs the lookup against the new home's index.
+        if self.arena.base_sample[i].is_none() {
+            self.arena.base_sample[i] = Some(sample);
+        }
+        let scaled = sample * (1.0 - cached as f64 / len as f64);
+        self.arena.pre[i].server_sample = Some(scaled);
+        self.server_tokens[i] = (len - cached).max(1);
+        scaled
+    }
+
+    /// O(dirty · log K) shard pick through the incremental index: flush
+    /// every shard marked stale since the last pick (recomputing its
+    /// leaf from live pool/work/phase state — exactly what a
+    /// [`ShardView`] snapshot would report), then read the tournament
+    /// root. A non-admitting root means no shard admits, the same
+    /// degraded path the scan balancers take. Debug builds re-derive the
+    /// pick from a full snapshot + linear scan and assert equality.
+    pub(super) fn pick_indexed(&mut self) -> usize {
+        let jsq = self.fleet.balancer == BalancerKind::JoinShortestQueue;
+        let idx = self
+            .shard_index
+            .as_mut()
+            .expect("indexed pick requires an index");
+        while let Some(s) = idx.pop_dirty() {
+            let sh = &self.shards[s];
+            let admitting = sh.phase == LifecyclePhase::Warm;
+            // JSQ orders on outstanding = in_use + queued; counts are
+            // tiny relative to 2^53, so the f64 key orders identically.
+            let key = if jsq {
+                (sh.pool.in_use + sh.pool.live_queued()) as f64
+            } else {
+                sh.work
+            };
+            idx.update(s, admitting, key);
+        }
+        let root = idx.root();
+        let pick = if root.admitting {
+            root.shard
+        } else {
+            self.earliest_ready_shard()
+        };
+        #[cfg(debug_assertions)]
+        {
+            use crate::sim::balancer::argmin_admitting;
+            let any_admitting = self.snapshot_views();
+            assert_eq!(
+                any_admitting, root.admitting,
+                "shard index admitting flag diverged from the snapshot"
+            );
+            if any_admitting {
+                let linear = if jsq {
+                    argmin_admitting(&self.views, |a, b| a.outstanding() < b.outstanding())
+                } else {
+                    argmin_admitting(&self.views, |a, b| {
+                        a.work.total_cmp(&b.work) == Ordering::Less
+                    })
+                };
+                assert_eq!(
+                    pick,
+                    linear,
+                    "shard index diverged from the linear {} scan",
+                    self.fleet.balancer.label()
+                );
+            }
+        }
+        pick
+    }
+
+    /// The cold shard with the earliest warm-up time (ties to the lowest
+    /// index); degrades to the first non-retired shard — never a retired
+    /// pool, which must take no new work — when nothing is even cold.
+    pub(super) fn earliest_ready_shard(&self) -> usize {
+        let mut best: Option<usize> = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if sh.phase != LifecyclePhase::Cold {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => sh.ready_at.total_cmp(&self.shards[b].ready_at) == Ordering::Less,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.unwrap_or_else(|| {
+            // `maybe_retire` keeps at least one shard non-retired, so
+            // this position exists whenever the fleet has run at all.
+            self.shards
+                .iter()
+                .position(|sh| sh.phase != LifecyclePhase::Retired)
+                .unwrap_or(0)
+        })
+    }
+
+    /// One autoscaler evaluation: snapshot the fleet, ask the policy,
+    /// clamp the action to `[min_shards, max_shards]`, and apply it.
+    /// Unified fleets evaluate the whole shard vector (the historical
+    /// path, byte-identical); disaggregated fleets evaluate each
+    /// configured pool independently against role-filtered statuses —
+    /// prefill first, then decode, so the decision order (and every
+    /// `arng` draw) is deterministic.
+    pub(super) fn autoscale_eval(&mut self, now: f64) {
+        if self.fleet.disagg.is_none() {
+            let cfg = *self.autoscale.as_ref().expect("eval implies config");
+            if self.scaler.is_some() {
+                self.autoscale_eval_pool(now, None, cfg);
+            }
+            return;
+        }
+        if let Some(cfg) = self.autoscale {
+            if self.scaler.is_some() {
+                self.autoscale_eval_pool(now, Some(PoolRole::Prefill), cfg);
+            }
+        }
+        if let Some(cfg) = self.decode_autoscale {
+            if self.decode_scaler.is_some() {
+                self.autoscale_eval_pool(now, Some(PoolRole::Decode), cfg);
+            }
+        }
+    }
+
+    /// Evaluate one pool's scaling policy. `role == None` is the
+    /// unified fleet (all shards, the prefill scaler pair); `Some(r)`
+    /// restricts both the statuses the policy sees and the shards
+    /// scale-out/-in may touch to role `r`. `ScaleAction` carries only
+    /// counts, so the filtered view composes with the role-aware
+    /// apply paths without index translation.
+    fn autoscale_eval_pool(&mut self, now: f64, role: Option<PoolRole>, cfg: AutoscaleConfig) {
+        let statuses: Vec<ShardStatus> = self
+            .shards
+            .iter()
+            .filter(|sh| role.map_or(true, |r| sh.role == r))
+            .map(|sh| ShardStatus {
+                view: ShardView {
+                    in_use: sh.pool.in_use,
+                    queued: sh.pool.live_queued(),
+                    slots: sh.pool.cap,
+                    work: sh.work,
+                    queued_tokens: sh.pool.queued_prompt_tokens(),
+                    admitting: sh.phase == LifecyclePhase::Warm,
+                },
+                phase: sh.phase,
+            })
+            .collect();
+        let view = FleetView {
+            now,
+            shards: &statuses,
+            slots_per_shard: self.fleet.server_slots,
+            min_shards: cfg.min_shards,
+            max_shards: cfg.max_shards,
+            prefill_tokens_per_sec: self.fleet.batching.admission_tokens_per_sec(),
+        };
+        let scaler = match role {
+            Some(PoolRole::Decode) => self.decode_scaler.as_mut(),
+            _ => self.scaler.as_mut(),
+        };
+        let action = scaler
+            .expect("eval implies a scaling policy")
+            .evaluate(&view, &mut self.arng);
+        let pool_role = role.unwrap_or(PoolRole::Unified);
+        match action {
+            ScaleAction::Hold => {}
+            ScaleAction::ScaleOut { shards } => self.scale_out(shards, now, &cfg, pool_role),
+            ScaleAction::ScaleIn { shards } => self.scale_in(shards, now, &cfg, pool_role),
+        }
+    }
+
+    /// Provision up to `n` cold shards of role `role`, keeping the
+    /// pool's *paid-for* fleet (everything short of retired — draining
+    /// victims still bill shard-seconds) within `max_shards`. Each new
+    /// shard admits nothing until its load-time delay — from the
+    /// configured `ColdStartSpec` — elapses. Unified fleets pass
+    /// `PoolRole::Unified` and count every shard, the historical
+    /// behavior; disaggregated pools count and create only their own.
+    pub(super) fn scale_out(&mut self, n: usize, now: f64, cfg: &AutoscaleConfig, role: PoolRole) {
+        let paid_for = self
+            .shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired && s.role == role)
+            .count();
+        let room = cfg.max_shards.saturating_sub(paid_for);
+        for _ in 0..n.min(room) {
+            let ready = now + cfg.cold_start.delay();
+            let idx = self.shards.len();
+            // New replicas are homogeneous (no extra RTT) and share the
+            // base server profile (and the fleet's batching mode, with
+            // a fresh gate — a new shard starts with an empty KV pool
+            // and a cold prefix index).
+            let gate = make_gate(&self.fleet.batching);
+            let mut sh = ShardState::new(
+                Pool::new_frozen(self.pool_cap).with_gate_kind(gate),
+                0.0,
+                LifecyclePhase::Cold,
+                now,
+                ready,
+            );
+            sh.role = role;
+            self.shards.push(sh);
+            self.kv_live.push(Vec::new());
+            self.decode_live.push(Vec::new());
+            self.server_endpoints.push(self.scenario.server.clone());
+            self.scale_events.push(ScaleEvent {
+                time: now,
+                shard: idx,
+                kind: ScaleEventKind::ScaleOut,
+            });
+            self.push(ready, EvKind::ShardWarm(idx));
+        }
+        // The index's leaf capacity is sized to the shard count: rebuild
+        // it all-dirty, so the next pick flushes every shard (including
+        // the new cold ones) from live state.
+        if self.shard_index.is_some() {
+            self.shard_index = Some(ShardIndex::new(self.shards.len()));
+        }
+        self.record_timeline(now);
+    }
+
+    /// Drain up to `n` warm shards of role `role`, never dropping below
+    /// `min_shards` warm in that pool (so the pool's balancer always
+    /// has an admitting candidate). The victim is the warm shard with
+    /// the least outstanding work; ties drain the newest shard first.
+    pub(super) fn scale_in(&mut self, n: usize, now: f64, cfg: &AutoscaleConfig, role: PoolRole) {
+        for _ in 0..n {
+            let warm: Vec<usize> = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.phase == LifecyclePhase::Warm && s.role == role)
+                .map(|(i, _)| i)
+                .collect();
+            if warm.len() <= cfg.min_shards.max(1) {
+                break;
+            }
+            let mut victim = warm[0];
+            for &i in &warm[1..] {
+                // Least outstanding estimated service seconds (the same
+                // signal LeastWork balances on); exact ties — typically
+                // idle shards at 0.0 — drain the newest first.
+                match self.shards[i].work.total_cmp(&self.shards[victim].work) {
+                    Ordering::Less => victim = i,
+                    Ordering::Equal if i > victim => victim = i,
+                    _ => {}
+                }
+            }
+            self.shards[victim].phase = LifecyclePhase::Draining;
+            self.touch_shard(victim);
+            self.scale_events.push(ScaleEvent {
+                time: now,
+                shard: victim,
+                kind: ScaleEventKind::DrainStart,
+            });
+            // An already-empty victim retires immediately.
+            self.maybe_retire(victim, now);
+        }
+        self.record_timeline(now);
+    }
+
+    /// A cold shard finished loading: unfreeze its pool, join the
+    /// balanced set, and admit anything already queued on it.
+    pub(super) fn warm_shard(&mut self, s: usize, now: f64) {
+        if self.shards[s].phase != LifecyclePhase::Cold {
+            return;
+        }
+        self.shards[s].phase = LifecyclePhase::Warm;
+        self.shards[s].pool.frozen = false;
+        self.touch_shard(s);
+        self.cold_start_seconds += (now - self.shards[s].created_at).max(0.0);
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::WarmUp,
+        });
+        self.record_timeline(now);
+        while let Some(j) = self
+            .shards[s]
+            .pool
+            .try_admit(&self.server_cancelled, &self.server_tokens)
+        {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
+    }
+
+    /// A draining shard retires once its last admission released and no
+    /// live entry remains queued; retirement stops shard-seconds accrual
+    /// (and drops the shard from the timeline's provisioned count).
+    ///
+    /// The **last** non-retired replica never retires: with every other
+    /// shard gone (an outage on a K=1 fleet, or a fleet-wide failure),
+    /// future arrivals still have to land somewhere, so the survivor
+    /// keeps draining — and billing shard-seconds — to the end of the
+    /// run instead of serving traffic "after" retirement (which would
+    /// put busy-seconds past its lifetime and push utilization over 1).
+    /// Autoscaler scale-in always leaves `min_shards ≥ 1` warm, so this
+    /// guard never fires on the PR-3 paths.
+    pub(super) fn maybe_retire(&mut self, s: usize, now: f64) {
+        let others_alive = self
+            .shards
+            .iter()
+            .enumerate()
+            .any(|(i, sh)| i != s && sh.phase != LifecyclePhase::Retired);
+        if !others_alive {
+            return;
+        }
+        let sh = &mut self.shards[s];
+        let drained = sh.phase == LifecyclePhase::Draining
+            && sh.pool.in_use == 0
+            && sh.pool.live_queued() == 0;
+        if !drained {
+            return;
+        }
+        sh.phase = LifecyclePhase::Retired;
+        sh.retired_at = Some(now);
+        self.touch_shard(s);
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::Retire,
+        });
+        self.record_timeline(now);
+    }
+
+    /// Injected failure: force shard `s` into Draining, re-route its
+    /// queued streams, and let in-flight admissions finish (connection
+    /// draining) before the shard retires. Idempotent by construction —
+    /// a shard already Draining (e.g. an autoscaler scale-in victim) or
+    /// Retired is left untouched, so an outage racing a drain can never
+    /// double-retire or double-bill shard-seconds.
+    pub(super) fn inject_outage(&mut self, s: usize, now: f64) {
+        if s >= self.shards.len()
+            || matches!(
+                self.shards[s].phase,
+                LifecyclePhase::Draining | LifecyclePhase::Retired
+            )
+        {
+            return;
+        }
+        // A cold victim's pending warm-up becomes a no-op (`warm_shard`
+        // guards on phase); unfreeze the pool so drain semantics — serve
+        // whatever cannot be re-routed — still apply.
+        self.shards[s].phase = LifecyclePhase::Draining;
+        self.shards[s].pool.frozen = false;
+        self.touch_shard(s);
+        self.scale_events.push(ScaleEvent {
+            time: now,
+            shard: s,
+            kind: ScaleEventKind::Outage,
+        });
+        let victims = self.shards[s].pool.drain_queue(&self.server_cancelled);
+        for j in victims {
+            self.requeue(j, s, now);
+        }
+        // KV-aware hard failover: in paged mode the dead shard's
+        // in-flight KV is lost — every mid-decode stream it was serving
+        // must re-prefill, at a migration target when one admits
+        // (forced §4.3 migration) or in place on the draining source
+        // otherwise.
+        if self.fleet.batching.is_paged() {
+            self.kv_outage_failover(s, now);
+        }
+        // Single-shard corner: victims with nowhere to go stayed on the
+        // draining shard — admit what spare capacity allows so the run
+        // always terminates (a drained-but-queued cold pool would
+        // otherwise never grant).
+        while let Some(j) = self
+            .shards[s]
+            .pool
+            .try_admit(&self.server_cancelled, &self.server_tokens)
+        {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
+        self.record_timeline(now);
+        self.maybe_retire(s, now);
+    }
+
+    /// Re-route a queued (never-admitted) stream off a failed shard —
+    /// the token-level view of "migrate the dead shard's pending work".
+    /// The placement follows the fleet's migration-targeting mode:
+    /// least-work-with-estimate under `ShardTargeted` (victims spread
+    /// across survivors, each placement visible to the next), the first
+    /// admitting shard under `BaseEndpoint` (the paper's "one server
+    /// target" view — every victim piles onto the same replacement).
+    /// With no admitting shard anywhere the victim joins the
+    /// soonest-ready cold shard; with no live alternative at all it
+    /// stays on the draining source, which serves out its queue.
+    pub(super) fn requeue(&mut self, j: usize, from: usize, now: f64) {
+        let sample = self.arena.pre[j]
+            .server_sample
+            .expect("server users have a sample");
+        // A queued (never-admitted) stream is prefill-side work: under
+        // disaggregation it may only move within the dead shard's own
+        // pool. Unified fleets pass no mask (byte-identical).
+        let mask = self.role_mask_of(from);
+        let any_admitting = self.snapshot_views_role(mask);
+        let target = if any_admitting {
+            match self.fleet.migration_targeting {
+                MigrationTargeting::ShardTargeted => {
+                    pick_reprefill_target(&self.views, |i| {
+                        self.shards[i].rtt + self.reprefill_queue_delay(i, None, false, 0.0)
+                    })
+                    .expect("an admitting shard exists")
+                }
+                MigrationTargeting::BaseEndpoint => self
+                    .views
+                    .iter()
+                    .position(|v| v.admitting)
+                    .expect("an admitting shard exists"),
+            }
+        } else {
+            let cold = self.earliest_ready_shard();
+            if self.shards[cold].phase == LifecyclePhase::Cold {
+                cold
+            } else {
+                from
+            }
+        };
+        self.shard_of[j] = Some(target);
+        self.shards[from].work -= sample;
+        self.touch_shard(from);
+        // A spike drawn from the dead shard's fault belongs to that
+        // shard, not the stream: moving to a new home restores the
+        // pre-fault draw and rolls the *target's* fault instead (all
+        // from the fault stream, so healthy configs are untouched).
+        let mut new_sample = sample;
+        if target != from {
+            if let Some(base) = self.arena.base_sample[j] {
+                new_sample = base;
+                self.arena.base_sample[j] = None;
+            }
+            if let Some(&Some(f)) = self.fleet.shard_faults.get(target) {
+                if self.frng.chance(f.spike_prob) {
+                    let base = new_sample;
+                    new_sample *= self.frng.lognormal(f.spike_scale.max(1e-12).ln(), 0.5);
+                    self.arena.base_sample[j] = Some(base);
+                }
+            }
+            self.arena.pre[j].server_sample = Some(new_sample);
+            // The cached prefix lived on the dead shard: reset the
+            // admission charge to the full prompt, then consult the new
+            // home's own index (paged mode only; no-ops otherwise).
+            self.server_tokens[j] = self.prompt_tokens[j];
+            new_sample = self.apply_prefix_cache(j, target, new_sample, now);
+            self.outage_requeues += 1;
+        }
+        self.shards[target].work += new_sample;
+        let tokens = self.server_tokens[j];
+        if self.shards[target].pool.acquire(j, tokens) {
+            self.on_server_admit(j, now);
+            self.try_resolve(j, now);
+        }
+        self.touch_shard(target);
+    }
+
+    /// Append a shard-count sample if the counts changed since the last
+    /// one (evaluations that change nothing record nothing).
+    pub(super) fn record_timeline(&mut self, now: f64) {
+        let warm = self
+            .shards
+            .iter()
+            .filter(|s| s.phase == LifecyclePhase::Warm)
+            .count();
+        // "Provisioned" is capacity still being paid for — everything
+        // short of Retired — so integrating the timeline agrees with
+        // `shard_seconds` (a draining shard bills until its last stream
+        // ends), and scale-out headroom uses the same count, so this
+        // never exceeds `max_shards`.
+        let provisioned = self
+            .shards
+            .iter()
+            .filter(|s| s.phase != LifecyclePhase::Retired)
+            .count();
+        if let Some(last) = self.timeline.last() {
+            if last.warm == warm && last.provisioned == provisioned {
+                return;
+            }
+        }
+        self.timeline.push(ShardCountSample {
+            time: now,
+            warm,
+            provisioned,
+        });
+    }
+
+}

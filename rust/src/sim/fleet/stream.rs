@@ -1,0 +1,834 @@
+//! Stream-side state and lifecycle: the per-request arena, resource
+//! grants, paged-KV growth/preemption, iteration-level repricing,
+//! and `try_resolve` — the step that turns granted resources into a
+//! resolved request trajectory.
+
+use super::*;
+
+/// Per-stream state in dense struct-of-arrays (arena) form, keyed by the
+/// request's trace index. The hot loop used to carry this as
+/// `Vec<Option<ReqState>>` — one fat option per request, with the RNG
+/// cloned back out at resolve time; the arena splits it into columns so
+/// each event touches only the cache lines it reads, and the per-request
+/// RNG is mutated **in place** (disjoint-field borrows), never cloned.
+///
+/// Lifecycle: `rng` is pre-forked for every request at run start (trace
+/// order — the determinism contract). `pre` is pushed densely at
+/// arrival: arrival events are pushed first with sequence numbers
+/// `0..n-1` over nondecreasing trace times, so `Arrival(i)` always pops
+/// before `Arrival(j)` for `i < j` and `pre.len()` equals the number of
+/// requests that have arrived. All other columns are pre-sized to the
+/// trace length.
+#[derive(Debug)]
+pub(super) struct StreamArena {
+    /// Pre-drawn decision + latency samples (valid once arrived).
+    pub(super) pre: Vec<PreDrawn>,
+    /// Per-request RNG streams, forked in trace order at run start;
+    /// `pre_draw` consumes from the front, the resolve step continues
+    /// the same stream in place.
+    pub(super) rng: Vec<Rng>,
+    pub(super) needs_server: Vec<bool>,
+    pub(super) needs_device: Vec<bool>,
+    pub(super) server_admit: Vec<Option<f64>>,
+    pub(super) device_grant: Vec<Option<f64>>,
+    pub(super) resolved: Vec<bool>,
+    /// The pre-fault prefill draw, kept when a shard fault degraded
+    /// `pre[i].server_sample` — an outage re-route restores it (the
+    /// spike belonged to the dead shard, not the stream).
+    pub(super) base_sample: Vec<Option<f64>>,
+    /// Multiplier on the stream's server-side decode gaps: the batch
+    /// latency curve evaluated at the shard's batch size when the
+    /// stream was admitted (1.0 under slot semantics, and until
+    /// admission).
+    pub(super) decode_slowdown: Vec<f64>,
+}
+
+impl StreamArena {
+    pub(super) fn new(n: usize) -> StreamArena {
+        StreamArena {
+            pre: Vec::with_capacity(n),
+            rng: Vec::new(),
+            needs_server: vec![false; n],
+            needs_device: vec![false; n],
+            server_admit: vec![None; n],
+            device_grant: vec![None; n],
+            resolved: vec![false; n],
+            base_sample: vec![None; n],
+            decode_slowdown: vec![1.0; n],
+        }
+    }
+}
+
+impl<'a> FleetSim<'a> {
+
+    /// Re-price every tracked stream decoding in shard `s`'s batch at
+    /// the batch's *current* slowdown (iteration-level pricing).
+    pub(super) fn reprice_shard(&mut self, s: usize, now: f64) {
+        let new_slow = self.batch_slowdown(s);
+        // Snapshot the tracked list: repricing itself never changes
+        // membership (that happens at resolve/release/failover).
+        let live = std::mem::take(&mut self.decode_live[s]);
+        for &j in &live {
+            self.reprice_stream(j, s, now, new_slow);
+        }
+        self.decode_live[s] = live;
+    }
+
+    /// Re-stamp the pending (un-generated) suffix of tracked stream
+    /// `j`'s generation timeline at slowdown `new_slow`, supersede its
+    /// release event, and re-bill the slot seconds. The in-flight gap
+    /// splits piecewise at `now`: the elapsed part is history, only the
+    /// remainder re-scales. Skips streams that are suspended
+    /// (re-prefilling — the stall is not decode time), fully generated,
+    /// or already priced at bit-identical slowdown — the latter keeps
+    /// flat curves and batch-size-1 runs byte-identical with zero
+    /// telemetry.
+    pub(super) fn reprice_stream(&mut self, j: usize, s: usize, now: f64, new_slow: f64) {
+        if self.kv_release_done[j] || now < self.kv_suspend_until[j] {
+            return;
+        }
+        let old_slow = self.arena.decode_slowdown[j];
+        if new_slow.to_bits() == old_slow.to_bits() {
+            return;
+        }
+        let rel = now - self.trace.requests[j].arrival;
+        let gen = &mut self.gen_times[j];
+        debug_assert!(!gen.is_empty(), "tracked streams carry a timeline");
+        // First still-pending token (strictly after `now`).
+        let cur = gen.iter().take_while(|&&t| t <= rel).count();
+        if cur >= gen.len() {
+            // Fully generated; only the already-scheduled release
+            // remains.
+            return;
+        }
+        let ratio = new_slow / old_slow;
+        let old_last = *gen.last().unwrap();
+        if cur == 0 {
+            // Prefill still running: TTFT is untouched, every decode
+            // gap re-scales whole.
+            let base = gen[0];
+            for t in gen.iter_mut().skip(1) {
+                *t = base + (*t - base) * ratio;
+            }
+        } else {
+            // Split the in-flight gap at `now`; later gaps scale whole.
+            let old_pivot = gen[cur];
+            let new_pivot = rel + (old_pivot - rel) * ratio;
+            gen[cur] = new_pivot;
+            for t in gen.iter_mut().skip(cur + 1) {
+                *t = new_pivot + (*t - old_pivot) * ratio;
+            }
+        }
+        let delta = *gen.last().unwrap() - old_last;
+        self.arena.decode_slowdown[j] = new_slow;
+        // Supersede the pending release: the old event's timestamp no
+        // longer matches `kv_release_at`, so the stale guard drops it.
+        // A shrink past `now` clamps to `now` (the slot cannot free in
+        // the past), keeping the stamped time and the pushed event in
+        // exact agreement.
+        let old_at = self.kv_release_at[j];
+        let at = (old_at + delta).max(now);
+        let shift = at - old_at;
+        self.shards[s].busy += shift;
+        self.kv_release_at[j] = at;
+        self.push(at, EvKind::ServerRelease(j));
+        self.reprice_events += 1;
+        if shift >= 0.0 {
+            self.reprice_stretch_seconds += shift;
+        } else {
+            self.reprice_shrink_seconds -= shift;
+        }
+    }
+
+    /// Deferred finalization of tracked stream `i` on shard `s` at its
+    /// valid release: re-derive the delivered record from the (possibly
+    /// re-stamped) generation timeline and extend the horizon to the
+    /// last delivered token. When no repricing touched the stream the
+    /// timeline is bit-identical to the one the resolve step smoothed,
+    /// so the record — and every downstream byte — is unchanged. A
+    /// no-op for untracked streams (empty timeline).
+    pub(super) fn finalize_stream(&mut self, i: usize, s: usize) {
+        let gen = std::mem::take(&mut self.gen_times[i]);
+        if gen.is_empty() {
+            return;
+        }
+        self.decode_live[s].retain(|&j| j != i);
+        let r_c = self.scenario.cfg.migration.consumption_rate;
+        let d = delivery::smooth(&gen, r_c);
+        let rec = self.records[i]
+            .as_mut()
+            .expect("tracked streams are resolved");
+        rec.tbts = d.tbts;
+        rec.delay_num = d.delay_num;
+        let done = self.trace.requests[i].arrival + rec.ttft + rec.tbts.iter().sum::<f64>();
+        if done.is_finite() {
+            self.horizon = self.horizon.max(done);
+        }
+    }
+
+    pub(super) fn on_server_admit(&mut self, i: usize, now: f64) {
+        let arrival = self.trace.requests[i].arrival;
+        let s = self.shard_of[i].expect("admitted requests are assigned");
+        let rtt = self.shards[s].rtt;
+        let dev_cancelled = self.device_cancelled[i];
+        // Price the stream's decode at the batch it joins (itself
+        // included — the pool already counted it). Frozen at admission:
+        // later joins see the bigger batch, this stream is not repriced.
+        let slowdown = self.batch_slowdown(s);
+        self.arena.server_admit[i] = Some(now);
+        self.arena.decode_slowdown[i] = slowdown;
+        let sample = self.arena.pre[i]
+            .server_sample
+            .expect("server users have a sample");
+        let device_pending = self.arena.needs_device[i]
+            && self.arena.device_grant[i].is_none()
+            && !dev_cancelled;
+        let delay = (now - arrival).max(0.0);
+        self.shards[s].delays.push(delay);
+        self.shards[s].admitted += 1;
+        if self.fleet.batching.is_paged() {
+            // The pool's gate already allocated this stream's prefill
+            // pages at `admit_now`; mirror the count here so release,
+            // preemption, and failover free exactly what was taken —
+            // then index the prompt for future prefix hits.
+            let tokens = self.server_tokens[i];
+            let full_len = self.trace.requests[i].prompt_len;
+            if let Some(g) = self.shards[s].pool.kv_mut() {
+                self.kv_pages_held[i] = g.pages_for(tokens);
+                g.prefix_insert(full_len, now);
+            }
+            self.kv_live[s].push(i);
+        }
+        self.record_batch(s, now);
+        if device_pending {
+            // First token lands at admit + intrinsic prefill (+ shard
+            // RTT); if the device is still queued then, it is skipped
+            // (§4.2).
+            self.push(now + sample + rtt, EvKind::ServerFirstProbe(i));
+        }
+    }
+
+    pub(super) fn on_device_grant(&mut self, i: usize, now: f64) {
+        let req = self.req(i);
+        let srv_cancelled = self.server_cancelled[i];
+        self.arena.device_grant[i] = Some(now);
+        let device_wait = match self.arena.pre[i].decision {
+            crate::coordinator::dispatch::Decision::Both { device_wait } => device_wait,
+            _ => 0.0,
+        };
+        let dev_start_rel = device_wait.max((now - req.arrival).max(0.0));
+        let dev_first_abs = req.arrival + dev_start_rel + self.arena.pre[i].dev_prefill_dur;
+        let server_pending = self.arena.needs_server[i]
+            && self.arena.server_admit[i].is_none()
+            && !srv_cancelled;
+        self.device_delays.push((now - req.arrival).max(0.0));
+        if server_pending && dev_first_abs.is_finite() {
+            self.push(dev_first_abs, EvKind::DeviceFirstProbe(i));
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Autoscaling
+    // -----------------------------------------------------------------
+
+    /// Predicted admission delay a §4.3 re-prefill pays on shard `t`,
+    /// folded into the `t_m` estimate and the reprefill-target pick.
+    /// Audited against actual admission behavior (this PR's bugfix
+    /// sweep):
+    ///
+    /// * a migrated stream books via [`Pool::acquire_overflow`], so with
+    ///   a real slot spare it admits instantly — the estimate is exactly
+    ///   0 (the old work-over-capacity formula charged phantom delay on
+    ///   idle shards, see the `idle_fleet` engine-level test);
+    /// * the migrating stream's own slot booking no longer counts as
+    ///   queued-ahead work when it targets its own shard (the off-by-one
+    ///   that priced the stream into its own queue);
+    /// * under continuous batching the backlog is priced in tokens —
+    ///   queued prompt tokens over the shard's admission token rate.
+    pub(super) fn reprefill_queue_delay(
+        &self,
+        t: usize,
+        own_shard: Option<usize>,
+        own_booked: bool,
+        own_sample: f64,
+    ) -> f64 {
+        if let Some(rate) = self.fleet.batching.admission_tokens_per_sec() {
+            let queued = self.shards[t].pool.queued_prompt_tokens();
+            if self.reprice_active() {
+                // Iteration-level pricing: the backlog ahead drains at
+                // the pace the *live* batch actually decodes, so the
+                // estimate scales by the target's current slowdown
+                // (×1.0 — bit-exact — on flat curves, keeping
+                // join-time parity).
+                return self.planner.queue_delay_estimate_tokens_at_batch(
+                    queued,
+                    rate,
+                    self.batch_slowdown(t),
+                );
+            }
+            return self.planner.queue_delay_estimate_tokens(queued, rate);
+        }
+        let pool = &self.shards[t].pool;
+        let spare = match pool.cap {
+            Some(cap) => pool.in_use < cap,
+            None => true,
+        };
+        if spare {
+            return 0.0;
+        }
+        let own = match own_shard {
+            Some(s) if s == t && own_booked => own_sample,
+            _ => 0.0,
+        };
+        self.planner
+            .queue_delay_estimate((self.shards[t].work - own).max(0.0), pool.cap)
+    }
+
+    // -----------------------------------------------------------------
+    // Paged KV: decode growth, memory-pressure preemption, failover
+    // -----------------------------------------------------------------
+
+    /// Tokens of request `j`'s stream emitted by `now`. Tracked streams
+    /// (iteration-level pricing) count on their raw *generation*
+    /// timeline — KV pages grow with generated tokens, and the
+    /// provisional record still holds resolve-time delivery; everything
+    /// else walks the resolved record's delivery timeline (TTFT, then
+    /// the inter-token gaps). 0 before the first token or for
+    /// unresolved streams.
+    pub(super) fn tokens_emitted(&self, j: usize, now: f64) -> usize {
+        if !self.gen_times[j].is_empty() {
+            let rel = now - self.trace.requests[j].arrival;
+            return self.gen_times[j].iter().take_while(|&&t| t <= rel).count();
+        }
+        let rec = match &self.records[j] {
+            Some(r) => r,
+            None => return 0,
+        };
+        let mut t = self.trace.requests[j].arrival + rec.ttft;
+        if t > now {
+            return 0;
+        }
+        let mut n = 1usize;
+        for &gap in &rec.tbts {
+            t += gap;
+            if t > now {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// Paged-KV per-tick maintenance for shard `s`: grow each live
+    /// decode stream's page footprint to cover the tokens it has
+    /// emitted (one page per `block_tokens`), then resolve memory
+    /// pressure by preempting lowest-priority streams (latest arrival
+    /// first) until the ledger fits the pool again — or no eligible
+    /// victim remains.
+    pub(super) fn kv_tick_shard(&mut self, s: usize, now: f64) {
+        let live: Vec<usize> = self.kv_live[s].clone();
+        for j in live {
+            if !self.arena.resolved[j]
+                || self.kv_release_done[j]
+                || now < self.kv_suspend_until[j]
+            {
+                continue;
+            }
+            let emitted = self.tokens_emitted(j, now);
+            let total =
+                (self.server_tokens[j] as u64 + emitted as u64).min(u32::MAX as u64) as u32;
+            let held = self.kv_pages_held[j];
+            if let Some(g) = self.shards[s].pool.kv_mut() {
+                let target = g.pages_for(total);
+                if target > held {
+                    g.alloc(target - held);
+                    self.kv_pages_held[j] = target;
+                }
+            }
+        }
+        while self
+            .shards[s]
+            .pool
+            .kv()
+            .map_or(false, |g| g.over_capacity())
+        {
+            match self.kv_victim(s, now) {
+                Some(j) => self.kv_preempt(j, s, now),
+                None => break,
+            }
+        }
+    }
+
+    /// The preemption victim on shard `s`: the *latest-arriving*
+    /// (highest-index) live stream that is resolved, mid-decode (first
+    /// token out, last token pending), server-delivered, unmigrated,
+    /// not already re-prefilling, and actually holding pages.
+    pub(super) fn kv_victim(&self, s: usize, now: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for &j in &self.kv_live[s] {
+            if !self.arena.resolved[j]
+                || self.kv_release_done[j]
+                || now < self.kv_suspend_until[j]
+                || self.kv_pages_held[j] == 0
+            {
+                continue;
+            }
+            let rec = match &self.records[j] {
+                Some(r) => r,
+                None => continue,
+            };
+            if rec.winner != EndpointKind::Server || rec.migrated {
+                continue;
+            }
+            let emitted = self.tokens_emitted(j, now);
+            if emitted == 0 || emitted > rec.tbts.len() {
+                continue;
+            }
+            if best.map_or(true, |b| j > b) {
+                best = Some(j);
+            }
+        }
+        best
+    }
+
+    /// Evict-and-re-prefill stream `j` on shard `s`: free its pages,
+    /// charge the full-context recompute against the shard's chunk
+    /// budget, and stretch the stream's current inter-token gap by the
+    /// deterministic re-prefill delay. The pending release event is
+    /// superseded by a later one (the stale-release guard drops the old
+    /// timestamp), so the no-gaps/no-dups invariant holds: one gap
+    /// stretches, token counts never change.
+    pub(super) fn kv_preempt(&mut self, j: usize, s: usize, now: f64) {
+        let emitted = self.tokens_emitted(j, now);
+        debug_assert!(emitted >= 1, "preemption victims are mid-decode");
+        let reprefill =
+            (self.server_tokens[j] as u64 + emitted as u64).min(u32::MAX as u64) as u32;
+        let rate = self
+            .fleet
+            .batching
+            .admission_tokens_per_sec()
+            .expect("paged mode has an admission rate");
+        let delta = reprefill as f64 / rate;
+        if self.gen_times[j].is_empty() {
+            let done = {
+                let rec = self.records[j].as_mut().expect("victims are resolved");
+                rec.tbts[emitted - 1] += delta;
+                self.trace.requests[j].arrival + rec.ttft + rec.tbts.iter().sum::<f64>()
+            };
+            if done.is_finite() {
+                self.horizon = self.horizon.max(done);
+            }
+        } else {
+            // Tracked stream (iteration-level pricing): the stall
+            // shifts the pending generation suffix; the delivered
+            // record — and the horizon — pick it up at finalization.
+            let rel = now - self.trace.requests[j].arrival;
+            for t in self.gen_times[j].iter_mut() {
+                if *t > rel {
+                    *t += delta;
+                }
+            }
+        }
+        // The slot is held `delta` longer on this shard.
+        self.shards[s].busy += delta;
+        let held = self.kv_pages_held[j];
+        self.kv_pages_held[j] = 0;
+        if let Some(g) = self.shards[s].pool.kv_mut() {
+            g.free(held);
+            g.charge(reprefill as u64);
+        }
+        self.kv_suspend_until[j] = now + delta;
+        let new_rel = self.kv_release_at[j] + delta;
+        self.kv_release_at[j] = new_rel;
+        self.push(new_rel.max(now), EvKind::ServerRelease(j));
+        self.touch_shard(s);
+        self.kv_preemptions += 1;
+    }
+
+    /// Resolve the request once every resource it needs is granted or
+    /// cancelled.
+    pub(super) fn try_resolve(&mut self, i: usize, now: f64) {
+        let srv_cancelled = self.server_cancelled[i];
+        let dev_cancelled = self.device_cancelled[i];
+        let ready = !self.arena.resolved[i]
+            && (!self.arena.needs_server[i] || self.arena.server_admit[i].is_some() || srv_cancelled)
+            && (!self.arena.needs_device[i] || self.arena.device_grant[i].is_some() || dev_cancelled);
+        if !ready {
+            return;
+        }
+        let req = self.req(i);
+        let shard = self.shard_of[i];
+        self.arena.resolved[i] = true;
+        let times = ResourceTimes {
+            server_admit: if srv_cancelled {
+                None
+            } else {
+                self.arena.server_admit[i]
+            },
+            device_grant: if dev_cancelled {
+                f64::INFINITY
+            } else {
+                self.arena.device_grant[i].unwrap_or(f64::INFINITY)
+            },
+        };
+        // `pre` is a local working copy (the RTT fold below must not
+        // write back); the RNG stream stays in the arena and is resumed
+        // in place — the old code cloned it here on every request.
+        let mut pre = self.arena.pre[i];
+        let device_grant = self.arena.device_grant[i];
+        let server_was_admitted = self.arena.server_admit[i].is_some() && !srv_cancelled;
+        // Prefill→decode disaggregation: pick the decode shard this
+        // stream's KV will hand off to *before* pricing, so its decode
+        // gaps are priced at the batch it actually decodes in. The pick
+        // is tentative — device winners, migrated streams, and
+        // single-token streams skip the booking below (a round-robin
+        // decode balancer still advanced; placement stays
+        // deterministic). `None` with the pool fully drained falls back
+        // to decoding in place on the prefill shard.
+        let handoff_pick: Option<usize> = match self.fleet.disagg {
+            Some(_) if server_was_admitted => {
+                let any = self.snapshot_views_role(Some(PoolRole::Decode));
+                if any {
+                    let pick = self
+                        .decode_balancer
+                        .as_mut()
+                        .expect("disaggregation builds a decode balancer")
+                        .pick(&self.views, &mut self.brng);
+                    assert!(
+                        pick < self.shards.len(),
+                        "decode balancer violated its contract: picked shard {pick} of {}",
+                        self.shards.len()
+                    );
+                    Some(pick)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        let decode_slowdown = if let Some(t) = handoff_pick {
+            // The handed-off tail decodes in the *decode* shard's batch
+            // (+1 for the joining stream), never the prefill shard's.
+            let live = match self.fleet.batching {
+                BatchingMode::Continuous(c) => c.curve.slowdown(self.shards[t].pool.in_use + 1),
+                BatchingMode::PagedKv(k) => k.curve.slowdown(self.shards[t].pool.in_use + 1),
+                BatchingMode::SlotLegacy => 1.0,
+            };
+            self.arena.decode_slowdown[i] = live;
+            live
+        } else if self.reprice_active() && server_was_admitted {
+            // Iteration-level pricing: price the stream at the batch it
+            // actually starts decoding in — resolution can trail
+            // admission when a device grant was pending, and repricing
+            // cannot reach back before the record exists. Bit-identical
+            // under a flat curve, where both prices are 1.0.
+            let s = shard.expect("admitted requests are assigned");
+            let live = self.batch_slowdown(s);
+            self.arena.decode_slowdown[i] = live;
+            live
+        } else {
+            self.arena.decode_slowdown[i]
+        };
+        self.resolved_count += 1;
+        // The raw (pre-RTT-fold) prefill sample: the queued-ahead
+        // correction in `reprefill_queue_delay` subtracts it when the
+        // migration targets the stream's own shard.
+        let own_sample = pre.server_sample.unwrap_or(0.0);
+        // The shard's RTT offset folds into the pre-drawn prefill sample
+        // so the perceived first token (and the §4.2 race) see the
+        // shard's real latency. Work-estimate retirement: admissions stay
+        // in the LeastWork signal until their ServerRelease event;
+        // cancelled-in-queue entries (which never held a slot and get no
+        // release) retire now.
+        if let Some(s) = shard {
+            let sample = pre.server_sample.expect("server users have a sample");
+            if !server_was_admitted {
+                self.shards[s].work -= sample;
+                self.touch_shard(s);
+            }
+            pre.server_sample = Some(sample + self.shards[s].rtt);
+        }
+        // Shard-targeted §4.3 re-prefill: ask the balancer layer for the
+        // least-work admitting shard (deterministic, no RNG consumed —
+        // the fleet balancer stream is untouched), then fold that
+        // shard's RTT *and* its predicted admission delay into the
+        // endpoint the migration planner estimates and samples `t_m`
+        // against. Only server-bound migrations (device-constrained
+        // policies) have a shard to target; when every shard is
+        // cold/draining the pick is None and the re-prefill falls back
+        // to the source endpoint below (RTT inherited), counted in
+        // `migration_fallbacks`.
+        let (mig_pick, mig_ep, mig_slowdown) = if self.fleet.migration_targeting
+            == MigrationTargeting::ShardTargeted
+            && self.policy.migration
+            && self.policy.constraint() == Some(Constraint::Device)
+        {
+            // Migrated tails decode; under disaggregation they may only
+            // target the decode pool. Unified fleets snapshot unmasked.
+            let mig_mask = self.fleet.disagg.is_some().then_some(PoolRole::Decode);
+            self.snapshot_views_role(mig_mask);
+            // Least-work-with-estimate, the estimate being the shard's
+            // RTT plus its predicted admission delay — priced in queued
+            // prompt tokens under continuous batching.
+            let pick = pick_reprefill_target(&self.views, |t| {
+                self.shards[t].rtt
+                    + self.reprefill_queue_delay(t, shard, server_was_admitted, own_sample)
+            });
+            let (ep, slow) = match pick {
+                Some(t) => {
+                    // Borrowed view of the target endpoint: the predicted
+                    // queue delay combines with the shard's RTT offset in
+                    // the same operand order as the historical
+                    // `clone + extra_rtt += delay`, so the float result —
+                    // and every downstream byte — is identical, without
+                    // cloning a `ServerEndpoint` per migrated stream.
+                    let delay =
+                        self.reprefill_queue_delay(t, shard, server_was_admitted, own_sample);
+                    let ep = MigrationServer::with_extra_rtt(
+                        &self.server_endpoints[t],
+                        self.server_endpoints[t].extra_rtt + delay,
+                    );
+                    // The migrated tail decodes in the target's batch:
+                    // price it at the batch it would join (+1 for the
+                    // joining stream itself).
+                    let slow = match self.fleet.batching {
+                        BatchingMode::Continuous(c) => {
+                            c.curve.slowdown(self.shards[t].pool.in_use + 1)
+                        }
+                        BatchingMode::PagedKv(k) => {
+                            k.curve.slowdown(self.shards[t].pool.in_use + 1)
+                        }
+                        BatchingMode::SlotLegacy => 1.0,
+                    };
+                    (ep, slow)
+                }
+                None => {
+                    let ep = match shard {
+                        Some(s) => MigrationServer::of(&self.server_endpoints[s]),
+                        None => MigrationServer::of(&self.scenario.server),
+                    };
+                    (ep, 1.0)
+                }
+            };
+            (pick, Some(ep), slow)
+        } else {
+            // Base-endpoint targeting books no shard, but under a
+            // batched mode the migrated-in tail still decodes inside a
+            // running batch — price it at the source shard's batch
+            // (+1 for the joining tail), mirroring the shard-targeted
+            // formula. `price_base_tails = false` pins the historical
+            // unpriced (×1.0) tail for comparison; slot-legacy and
+            // flat curves yield exactly 1.0 either way, so those runs
+            // are byte-identical under both settings.
+            let slow = if self.fleet.price_base_tails {
+                match shard {
+                    Some(s) => match self.fleet.batching {
+                        BatchingMode::Continuous(c) => {
+                            c.curve.slowdown(self.shards[s].pool.in_use + 1)
+                        }
+                        BatchingMode::PagedKv(k) => {
+                            k.curve.slowdown(self.shards[s].pool.in_use + 1)
+                        }
+                        BatchingMode::SlotLegacy => 1.0,
+                    },
+                    None => 1.0,
+                }
+            } else {
+                1.0
+            };
+            (None, None, slow)
+        };
+        // `mig_ep` borrows the endpoint table; remember the mode bit it
+        // encodes before the borrow ends at the resolve call below.
+        let targeting_active = mig_ep.is_some();
+        // Every shard shares the base profile, so the source endpoint
+        // only distinguishes shards through its RTT. The owning shard's
+        // endpoint is used even when that shard is draining or retired:
+        // under the legacy base-endpoint migration fallback the victim's
+        // RTT offset must still be inherited (dropping it silently
+        // undercounted migration latency — see the engine regression
+        // test). Static fleets are always Warm, preserving byte parity.
+        let server_ep = match shard {
+            Some(s) => &self.server_endpoints[s],
+            None => &self.scenario.server,
+        };
+        let batch = BatchCtx {
+            decode_slowdown,
+            migration_decode_slowdown: mig_slowdown,
+        };
+        let mut resolved = resolve_request(
+            req,
+            &pre,
+            self.policy,
+            server_ep,
+            &self.scenario.device,
+            mig_ep,
+            &self.planner,
+            &self.scenario.cfg,
+            times,
+            batch,
+            &mut self.arena.rng[i],
+        );
+
+        // Prefill→decode KV handoff: a server-won stream that prefilled
+        // on a prefill shard ships its KV cache to the picked decode
+        // shard and finishes decoding there. The transfer cost lands as
+        // exactly one stretched inter-token gap (the same contract as
+        // KV preemption), so token counts never change and the stream
+        // invariants hold by construction. §4.3-migrated streams are
+        // excluded (their tail was already re-homed by the planner),
+        // which keeps this booking provably disjoint from the §4.3
+        // booking in `migration_booking` below. With no admitting
+        // decode shard the stream decodes in place on its prefill
+        // shard — counted, not dropped.
+        let mut handoff_done = false;
+        if server_was_admitted
+            && resolved.record.winner == EndpointKind::Server
+            && !resolved.record.migrated
+            && !resolved.record.tbts.is_empty()
+        {
+            if let Some(spec) = self.fleet.disagg {
+                match handoff_pick {
+                    Some(t) => {
+                        let d = spec.transfer.cost(self.prompt_tokens[i]);
+                        resolved.record.tbts[0] += d;
+                        self.kv_transfer_seconds += d;
+                        self.handoff_count += 1;
+                        handoff_done = true;
+                        // Book the decode shard exactly like a §4.3
+                        // migration target: a real slot when spare,
+                        // batch-join over-commit otherwise, plus KV
+                        // pages for the shipped prefix. Freed by the
+                        // shared `MigrationRelease` path at stream end.
+                        let real_slot = self.shards[t].pool.acquire_overflow();
+                        let tail: f64 = resolved.record.tbts.iter().sum();
+                        let first_abs = req.arrival + resolved.record.ttft;
+                        self.shards[t].work += tail;
+                        self.shards[t].handoff_in += 1;
+                        let len = self.prompt_tokens[i];
+                        if let Some(g) = self.shards[t].pool.kv_mut() {
+                            let pages = g.pages_for(len);
+                            g.alloc(pages);
+                            self.kv_mig_pages[i] = pages;
+                        }
+                        self.touch_shard(t);
+                        self.migration_booking[i] = Some((t, real_slot, tail, first_abs.max(now)));
+                        self.record_batch(t, now);
+                        self.push((first_abs + tail).max(now), EvKind::MigrationRelease(i));
+                    }
+                    None => self.handoff_fallbacks += 1,
+                }
+            }
+        }
+
+        // Iteration-level pricing tracks resolved server winners still
+        // decoding in their shard's batch: the record stays provisional
+        // until the release event finalizes it from the (re-stamped)
+        // generation timeline. Migrated streams' tails were committed
+        // at handoff pricing and are never repriced — and neither are
+        // handed-off streams, whose decode gaps were priced at the
+        // decode target's join-time batch above.
+        let track = self.reprice_active()
+            && server_was_admitted
+            && !handoff_done
+            && resolved.record.winner == EndpointKind::Server
+            && !resolved.record.migrated
+            && !resolved.gen_rel.is_empty();
+
+        // Completion horizon: last delivered token of this stream.
+        // Tracked streams defer this to finalization — repricing may
+        // still move their completion either way.
+        if !track {
+            let done =
+                req.arrival + resolved.record.ttft + resolved.record.tbts.iter().sum::<f64>();
+            if done.is_finite() {
+                self.horizon = self.horizon.max(done);
+            }
+        }
+
+        // Server slot accounting + release (on the owning shard).
+        if server_was_admitted {
+            let s = shard.expect("admitted requests are assigned");
+            let admit = times.server_admit.expect("admitted");
+            // Under a handoff the prefill shard frees at first-token
+            // time — its job ends once the KV ships; the decode tail is
+            // billed to the decode shard via the booking above.
+            let release = if handoff_done {
+                (req.arrival + resolved.record.ttft).max(admit)
+            } else {
+                resolved.server_release.unwrap_or(admit).max(admit)
+            };
+            self.shards[s].busy += release - admit;
+            // Every admission gets a release event — also on unlimited
+            // pools, where it frees no slot but retires the in-service
+            // `in_use`/work signals the balancers read. Release never
+            // exceeds the stream's own completion horizon, so replay
+            // horizons are unchanged. Paged mode and iteration-level
+            // pricing stamp the release time so later preemption,
+            // failover, or repricing can supersede it (the
+            // stale-release guard keys on this exact timestamp).
+            let at = release.max(now);
+            if self.release_guard_active() {
+                self.kv_release_at[i] = at;
+            }
+            self.push(at, EvKind::ServerRelease(i));
+        }
+        // (An entry cancelled while still queued holds no slot; the
+        // lazily-skipped queue entry frees nothing.)
+
+        // Device accounting + release.
+        if let (Some(grant), false) = (device_grant, dev_cancelled) {
+            let until = resolved.device_busy_until.unwrap_or(grant).max(grant);
+            self.device_busy += until - grant;
+            if self.fleet.device_queueing {
+                self.push(until.max(now), EvKind::DeviceRelease);
+            }
+        }
+
+        // Shard-targeted migration booking: the migrated stream joins
+        // its target shard's slot pool (a real slot when one is spare,
+        // batch-join over-commit otherwise) and carries its sampled
+        // `t_m` as outstanding work until the stream ends — so balancers
+        // and the autoscaler see migrated-in load, and a draining target
+        // cannot retire from under a stream migrating onto it. Booked at
+        // resolve time (slightly before the handoff instant) precisely
+        // to pin the target alive through the handoff.
+        if let Some(info) = resolved.migration {
+            if info.target == EndpointKind::Server {
+                match mig_pick {
+                    Some(t) => {
+                        let real_slot = self.shards[t].pool.acquire_overflow();
+                        self.shards[t].work += info.t_m;
+                        self.shards[t].migrated_in += 1;
+                        // Paged KV: the migrated-in stream's re-prefill
+                        // occupies pages on the target for its lifetime
+                        // (freed at `MigrationRelease`).
+                        let len = self.prompt_tokens[i];
+                        if let Some(g) = self.shards[t].pool.kv_mut() {
+                            let pages = g.pages_for(len);
+                            g.alloc(pages);
+                            self.kv_mig_pages[i] = pages;
+                        }
+                        self.touch_shard(t);
+                        self.migration_booking[i] = Some((t, real_slot, info.t_m, now));
+                        self.migration_targeted += 1;
+                        self.record_batch(t, now);
+                        self.push(info.end_abs.max(now), EvKind::MigrationRelease(i));
+                    }
+                    None if targeting_active => self.migration_fallbacks += 1,
+                    // Legacy base-endpoint targeting: no shard is
+                    // involved, nothing to book.
+                    None => {}
+                }
+            }
+        }
+
+        if track {
+            let s = shard.expect("admitted requests are assigned");
+            self.gen_times[i] = resolved.gen_rel;
+            self.decode_live[s].push(i);
+        }
+        self.records[i] = Some(resolved.record);
+    }
+
+}

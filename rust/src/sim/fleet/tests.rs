@@ -1,0 +1,1692 @@
+//! Fleet simulator test suite (moved verbatim from the old
+//! monolithic `sim/fleet.rs`; `use super::*` resolves through the
+//! imports in `fleet/mod.rs`).
+
+use super::*;
+use crate::coordinator::policy::PolicyKind;
+use crate::cost::unified::Constraint;
+use crate::profiles::{DeviceProfile, ServerProfile};
+use crate::sim::engine::SimConfig;
+use crate::trace::generator::{Arrival, WorkloadSpec};
+
+fn scenario(seed: u64) -> Scenario {
+    Scenario::new(
+        ServerProfile::gpt4o_mini(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+fn trace_at_gap(n: usize, gap: f64, seed: u64) -> Trace {
+    WorkloadSpec {
+        arrival: Arrival::Fixed { gap },
+        ..WorkloadSpec::alpaca(n)
+    }
+    .generate(seed)
+}
+
+#[test]
+fn unlimited_fleet_is_byte_identical_to_replay() {
+    let sc = scenario(21);
+    let trace = WorkloadSpec::alpaca(300).generate(5);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let legacy = sc.run(&trace, &policy);
+    let fleet = run_fleet(&sc, &trace, &policy, &FleetConfig::replay(false));
+    assert_eq!(legacy, fleet.records);
+}
+
+#[test]
+fn generous_capacity_matches_replay_closely() {
+    // With capacity far above offered load the admission queue never
+    // forms and the bounded fleet reproduces the replay results.
+    let sc = scenario(22);
+    let trace = trace_at_gap(200, 60.0, 6);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let replay = sc.run_report(&trace, &policy);
+    let fleet = sc.run_fleet_report(
+        &trace,
+        &policy,
+        &FleetConfig {
+            server_slots: Some(64),
+            device_queueing: false,
+            ..FleetConfig::replay(false)
+        },
+    );
+    let dm = (fleet.qoe.ttft.mean - replay.ttft.mean).abs() / replay.ttft.mean;
+    let dp = (fleet.qoe.ttft.p99 - replay.ttft.p99).abs() / replay.ttft.p99;
+    assert!(dm < 0.02, "mean TTFT drift {dm:.4}");
+    assert!(dp < 0.02, "p99 TTFT drift {dp:.4}");
+    assert!(fleet.load.server_queue_delay.max < 1e-9);
+}
+
+// (Queue-delay monotonicity in load is asserted once, end-to-end, in
+// tests/integration.rs::fleet_queue_delay_monotone_in_load.)
+
+#[test]
+fn server_utilization_bounded_by_one() {
+    let sc = scenario(24);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let trace = trace_at_gap(120, 0.5, 8);
+    let out = sc.run_fleet_report(&trace, &policy, &FleetConfig::bounded(2));
+    let util = out.load.server_utilization().unwrap();
+    assert!(util > 0.5, "overloaded pool should be busy, util={util:.3}");
+    assert!(util <= 1.0 + 1e-9, "util {util:.3} > 1");
+    assert!(out.load.mean_server_concurrency() <= 2.0 + 1e-9);
+}
+
+#[test]
+fn device_fallback_bounds_overloaded_server() {
+    // A slow server (DeepSeek: ~1.25 s TTFT + ~30 tok/s decode) with
+    // one admission slot at ~1.3× overload queues without bound under
+    // ServerOnly. Racing both endpoints lets the single-flight device
+    // absorb the traffic (short outputs keep its service time under
+    // the arrival gap), so the first token stays bounded AND winning
+    // devices cancel the queued server entries, shedding server load.
+    let sc = Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 25,
+            ..Default::default()
+        },
+    );
+    let spec = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 1.4 },
+        prompt: crate::trace::generator::LengthModel::new(20.0, 0.5, 4, 128),
+        output: crate::trace::generator::LengthModel::new(16.0, 0.3, 4, 32),
+        ..WorkloadSpec::alpaca(120)
+    };
+    let trace = spec.generate(9);
+    let fleet_cfg = FleetConfig {
+        server_slots: Some(1),
+        ..FleetConfig::replay(true)
+    };
+    let server_only = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let race = Policy::simple(PolicyKind::StochS, 1.0, false);
+    let rs = sc.run_fleet_report(&trace, &server_only, &fleet_cfg);
+    let rr = sc.run_fleet_report(&trace, &race, &fleet_cfg);
+    assert!(
+        rs.qoe.ttft.p99 > 3.0 * rr.qoe.ttft.p99,
+        "device fallback should bound p99: ServerOnly {:.2}s vs race {:.2}s",
+        rs.qoe.ttft.p99,
+        rr.qoe.ttft.p99
+    );
+    assert!(
+        rr.qoe.ttft.p99 < 10.0,
+        "raced p99 should stay bounded, got {:.2}s",
+        rr.qoe.ttft.p99
+    );
+}
+
+#[test]
+fn fleet_run_is_deterministic() {
+    let sc = scenario(26);
+    let trace = trace_at_gap(100, 1.0, 10);
+    let policy = Policy::simple(PolicyKind::StochS, 0.8, false);
+    let cfg = FleetConfig::bounded(2);
+    let a = run_fleet(&sc, &trace, &policy, &cfg);
+    let b = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(a.records, b.records);
+}
+
+// -----------------------------------------------------------------
+// Sharded fleet
+// -----------------------------------------------------------------
+
+/// Single-pool parity: a K=1 shard "fleet" must reproduce the PR-1
+/// single-pool records byte-for-byte under every balancer (the
+/// balancer is bypassed at K=1 and its RNG stream never drawn).
+#[test]
+fn k1_shard_matches_single_pool_exactly() {
+    let sc = scenario(27);
+    let trace = trace_at_gap(150, 0.8, 11);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let single = run_fleet(&sc, &trace, &policy, &FleetConfig::bounded(2));
+    for kind in BalancerKind::all() {
+        let cfg = FleetConfig::sharded(1, 2, kind);
+        let sharded = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(
+            single.records, sharded.records,
+            "K=1 {kind} diverged from the single-pool fleet"
+        );
+        assert_eq!(sharded.load.shards.len(), 1);
+    }
+}
+
+/// K shards with S slots each behave like capacity K·S: total
+/// admissions conserved, every request lands on exactly one shard.
+#[test]
+fn shards_conserve_admissions() {
+    let sc = scenario(28);
+    let trace = trace_at_gap(200, 0.5, 12);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    for kind in BalancerKind::all() {
+        let out = run_fleet(&sc, &trace, &policy, &FleetConfig::sharded(4, 1, kind));
+        assert_eq!(out.records.len(), 200);
+        assert_eq!(out.load.shards.len(), 4);
+        let admitted: usize = out.load.shards.iter().map(|s| s.admitted).sum();
+        assert_eq!(admitted, 200, "{kind}: every request admits exactly once");
+        assert_eq!(out.load.total_server_slots(), Some(4));
+        let shard_busy: f64 = out.load.shards.iter().map(|s| s.busy_seconds).sum();
+        assert!(
+            (shard_busy - out.load.server_busy_seconds).abs() < 1e-9,
+            "{kind}: busy-seconds must decompose per shard"
+        );
+        let util = out.load.server_utilization().unwrap();
+        assert!(util <= 1.0 + 1e-9, "{kind}: util {util:.3} > 1");
+    }
+}
+
+/// Round-robin spreads a server-only trace evenly across shards.
+#[test]
+fn round_robin_spreads_evenly() {
+    let sc = scenario(29);
+    let trace = trace_at_gap(120, 2.0, 13);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let out = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &FleetConfig::sharded(4, 2, BalancerKind::RoundRobin),
+    );
+    for s in &out.load.shards {
+        assert_eq!(s.admitted, 30, "RR must deal 120 requests 30/30/30/30");
+    }
+}
+
+/// The power-of-two balancer draws from a seeded fleet-level stream:
+/// identical runs are byte-identical, and the per-shard assignment
+/// depends only on the seed.
+#[test]
+fn power_of_two_is_deterministic_under_fixed_seed() {
+    let sc = scenario(30);
+    let trace = trace_at_gap(150, 0.6, 14);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(4, 1, BalancerKind::PowerOfTwoChoices);
+    let a = run_fleet(&sc, &trace, &policy, &cfg);
+    let b = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(a.records, b.records);
+    let counts = |o: &FleetOutcome| -> Vec<usize> {
+        o.load.shards.iter().map(|s| s.admitted).collect()
+    };
+    assert_eq!(counts(&a), counts(&b), "shard assignment must reproduce");
+    // A different scenario seed re-seeds the balancer stream too.
+    let c = run_fleet(&scenario(31), &trace, &policy, &cfg);
+    assert_ne!(a.records, c.records);
+}
+
+/// Heterogeneous shard RTTs surface in perceived TTFT: a fleet whose
+/// shards all carry +Δ RTT shifts every server-won TTFT by ≥ Δ
+/// relative to the homogeneous fleet.
+#[test]
+fn shard_rtt_offsets_shift_ttft() {
+    let sc = scenario(32);
+    let trace = trace_at_gap(80, 30.0, 15);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let base = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &FleetConfig::sharded(2, 4, BalancerKind::RoundRobin),
+    );
+    let slow = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &FleetConfig::sharded(2, 4, BalancerKind::RoundRobin)
+            .with_shard_rtts(vec![0.25, 0.25]),
+    );
+    for (b, s) in base.records.iter().zip(&slow.records) {
+        assert!(
+            (s.ttft - b.ttft - 0.25).abs() < 1e-9,
+            "uniform +0.25s shard RTT must shift TTFT: {} vs {}",
+            s.ttft,
+            b.ttft
+        );
+    }
+}
+
+/// JSQ keeps shard queues balanced where round-robin lets them
+/// diverge: on the same trace, mean queue delay under JSQ must not
+/// exceed round-robin's, and the imbalance summary must be sane.
+#[test]
+fn jsq_queue_delay_not_worse_than_round_robin() {
+    let sc = scenario(33);
+    let trace = trace_at_gap(300, 0.4, 16);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let run = |kind| {
+        run_fleet(&sc, &trace, &policy, &FleetConfig::sharded(4, 1, kind)).load
+    };
+    let rr = run(BalancerKind::RoundRobin);
+    let jsq = run(BalancerKind::JoinShortestQueue);
+    assert!(
+        jsq.server_queue_delay.mean <= rr.server_queue_delay.mean * 1.02,
+        "JSQ mean queue delay {:.3} should not exceed RR {:.3}",
+        jsq.server_queue_delay.mean,
+        rr.server_queue_delay.mean
+    );
+    for load in [&rr, &jsq] {
+        let imb = load.shard_imbalance().unwrap();
+        assert!(imb >= 1.0 - 1e-9 && imb.is_finite(), "imbalance {imb}");
+    }
+}
+
+// -----------------------------------------------------------------
+// Autoscaling
+// -----------------------------------------------------------------
+
+use crate::sim::autoscaler::{AutoscalerKind, ColdStartSpec, ReactiveConfig};
+
+/// An aggressive reactive config for tests: act on the first
+/// overloaded/idle evaluation, add up to `max_step` shards at once.
+fn eager_reactive(min: usize, max: usize, cold: f64) -> AutoscaleConfig {
+    AutoscaleConfig {
+        kind: AutoscalerKind::Reactive(ReactiveConfig {
+            scale_out_per_shard: 2.0,
+            scale_in_per_shard: 0.5,
+            sustain: 1,
+            cooldown: 0.0,
+            max_step: max,
+        }),
+        eval_interval: 0.5,
+        min_shards: min,
+        max_shards: max,
+        cold_start: ColdStartSpec::Fixed(cold),
+    }
+}
+
+/// A burst trace: `n_burst` arrivals every 0.25 s, then a calm tail
+/// that gives the autoscaler room to drain back down.
+fn burst_then_calm(n_burst: usize, n_calm: usize, seed: u64) -> Trace {
+    let mut t = WorkloadSpec::alpaca(n_burst + n_calm).generate(seed);
+    let mut now = 0.0;
+    for (i, r) in t.requests.iter_mut().enumerate() {
+        r.arrival = now;
+        now += if i < n_burst { 0.25 } else { 3.0 };
+    }
+    t
+}
+
+/// Uniform token weights for Pool unit tests (slot pools ignore the
+/// values; the queued-token counter still tracks them).
+fn toks(n: usize) -> Vec<u32> {
+    vec![10; n]
+}
+
+#[test]
+fn frozen_pool_queues_until_unfrozen() {
+    let mut p = Pool::new_frozen(Some(2));
+    let cancelled = vec![false; 4];
+    let tokens = toks(4);
+    // Everything queues while frozen, even with spare capacity.
+    assert!(!p.acquire(0, 10));
+    assert!(!p.acquire(1, 10));
+    assert!(!p.acquire(2, 10));
+    assert_eq!(p.in_use, 0);
+    assert_eq!(p.live_queued(), 3);
+    assert_eq!(p.queued_prompt_tokens(), 30);
+    assert_eq!(
+        p.try_admit(&cancelled, &tokens),
+        None,
+        "frozen pools admit nothing"
+    );
+    // Unfreeze: admissions drain in FIFO order up to the cap.
+    p.frozen = false;
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(0));
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(1));
+    assert_eq!(p.try_admit(&cancelled, &tokens), None, "cap reached");
+    assert_eq!(p.in_use, 2);
+    assert_eq!(p.live_queued(), 1);
+    assert_eq!(p.queued_prompt_tokens(), 10);
+    // New acquires behave like a normal bounded pool now.
+    assert!(!p.acquire(3, 10));
+    let next = p.release(&cancelled, &tokens);
+    assert_eq!(next, Some(2));
+    assert_eq!(p.underflows, 0);
+}
+
+/// Tentpole parity: attaching an `AutoscalerKind::None` config is
+/// byte-identical to the plain static fleet — no evaluation events
+/// are scheduled, so even the event-sequence numbering matches.
+#[test]
+fn autoscaler_none_matches_static_fleet() {
+    let sc = scenario(34);
+    let trace = trace_at_gap(150, 0.6, 17);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let static_cfg = FleetConfig::sharded(3, 1, BalancerKind::JoinShortestQueue);
+    let auto_cfg = static_cfg.clone().with_autoscale(AutoscaleConfig::fixed());
+    let a = run_fleet(&sc, &trace, &policy, &static_cfg);
+    let b = run_fleet(&sc, &trace, &policy, &auto_cfg);
+    assert_eq!(a.records, b.records);
+    assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+    assert!(a.load.scale_events.is_empty());
+    assert_eq!(a.load.shard_timeline.len(), 1, "static fleets record one sample");
+    assert!((a.load.shard_seconds - 3.0 * a.load.horizon).abs() < 1e-9);
+}
+
+/// Reactive autoscaling under a burst: the fleet scales out (paying
+/// real cold-start seconds), every request still resolves, queue
+/// delays beat the static-small fleet, and the calm tail drains the
+/// extra shards back down (drain → retire).
+#[test]
+fn reactive_autoscaler_scales_out_and_drains_back() {
+    let sc = scenario(35);
+    let trace = burst_then_calm(150, 30, 18);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let static_small = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue);
+    let auto_cfg = static_small.clone().with_autoscale(eager_reactive(1, 4, 1.0));
+    let small = run_fleet(&sc, &trace, &policy, &static_small);
+    let auto = run_fleet(&sc, &trace, &policy, &auto_cfg);
+
+    // Liveness: every request resolves even with shards appearing
+    // and retiring mid-run.
+    assert_eq!(auto.records.len(), trace.len());
+    // The burst forces scale-out, and every provisioned shard warms.
+    let outs = auto.load.scale_out_count();
+    assert!(outs >= 1, "burst must trigger scale-out");
+    let warms = auto
+        .load
+        .scale_events
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::WarmUp)
+        .count();
+    assert_eq!(warms, outs, "every cold shard must warm exactly once");
+    assert!(auto.load.cold_start_seconds > 0.0);
+    assert!(auto.load.peak_warm_shards() > 1);
+    assert!(auto.load.peak_warm_shards() <= 4, "max_shards must cap scale-out");
+    // Scaling out must beat the static-small fleet's queueing.
+    assert!(
+        auto.load.server_queue_delay.p99 < small.load.server_queue_delay.p99,
+        "autoscaled p99 queue {:.2}s must beat static K=1 {:.2}s",
+        auto.load.server_queue_delay.p99,
+        small.load.server_queue_delay.p99
+    );
+    // The calm tail drains the fleet back down: drains and retires
+    // happen, and the run costs less than peak-sized provisioning.
+    let drains = auto
+        .load
+        .scale_events
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::DrainStart)
+        .count();
+    let retires = auto
+        .load
+        .scale_events
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::Retire)
+        .count();
+    assert!(drains >= 1, "calm tail must trigger scale-in");
+    assert!(retires >= 1, "drained shards must retire");
+    assert!(retires <= drains);
+    assert!(
+        auto.load.shard_seconds < auto.load.peak_warm_shards() as f64 * auto.load.horizon,
+        "draining must cost less than peak-sized static provisioning"
+    );
+    // Timeline sanity: starts at the initial K, never exceeds the cap.
+    let tl = &auto.load.shard_timeline;
+    assert!(tl.len() >= 3, "timeline must record the scaling story");
+    assert_eq!(tl[0].warm, 1);
+    assert!(tl.iter().all(|s| s.provisioned <= 4 && s.warm <= s.provisioned));
+}
+
+/// Autoscaled runs are bit-reproducible: same seed, same topology
+/// trajectory, same records.
+#[test]
+fn autoscaled_run_is_deterministic() {
+    let sc = scenario(36);
+    let trace = burst_then_calm(100, 20, 19);
+    let policy = Policy::simple(PolicyKind::StochS, 0.8, false);
+    let cfg = FleetConfig::sharded(1, 1, BalancerKind::PowerOfTwoChoices)
+        .with_autoscale(eager_reactive(1, 3, 0.8));
+    let a = run_fleet(&sc, &trace, &policy, &cfg);
+    let b = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(a.records, b.records);
+    assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+}
+
+// -----------------------------------------------------------------
+// Migration-aware shard targeting + failure injection
+// -----------------------------------------------------------------
+
+use crate::metrics::ScaleEventKind as Sek;
+
+/// A device-constrained scenario whose server is slow enough that the
+/// device wins the race (so §4.3 migrates decode *onto* the server
+/// fleet).
+fn device_constrained_scenario(seed: u64) -> Scenario {
+    Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Device,
+        SimConfig {
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn overflow_pool_books_real_slots_then_batch_joins() {
+    let mut p = Pool::new(Some(2));
+    let cancelled = vec![false; 4];
+    let tokens = toks(4);
+    assert!(p.acquire(0, 10));
+    // One spare slot: the first migrated-in stream takes a real one.
+    assert!(p.acquire_overflow(), "spare capacity ⇒ real slot");
+    assert_eq!(p.in_use, 2);
+    assert_eq!(p.over_commit, 0);
+    // Full: the next joins the batch over-capacity.
+    assert!(!p.acquire_overflow(), "full pool ⇒ batch join");
+    assert_eq!(p.in_use, 3);
+    assert_eq!(p.over_commit, 1);
+    assert_eq!(p.peak_in_use, 3);
+    // A queued arrival waits behind the real slots.
+    assert!(!p.acquire(1, 10));
+    // Over-commit release while still at/over cap frees no slot: the
+    // queue stays put.
+    assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+    assert_eq!(p.in_use, 2);
+    assert_eq!(p.live_queued(), 1);
+    // Real-slot release transfers the unit to the queued entry.
+    assert_eq!(p.release(&cancelled, &tokens), Some(1));
+    assert_eq!(p.in_use, 2);
+    // Unlimited pools always report a real slot.
+    let mut u = Pool::new(None);
+    assert!(u.acquire_overflow());
+}
+
+/// Liveness regression: an over-commit booking whose real slots
+/// drained away underneath it becomes load-bearing — releasing it
+/// must admit the queue, or the queued entry would wait forever (no
+/// later release event exists on the shard).
+#[test]
+fn overflow_release_admits_queue_when_load_bearing() {
+    let mut p = Pool::new(Some(1));
+    let cancelled = vec![false; 3];
+    let tokens = toks(3);
+    assert!(p.acquire(0, 10)); // real holder
+    assert!(!p.acquire_overflow(), "full ⇒ batch join");
+    assert_eq!(p.in_use, 2);
+    // The real holder leaves with an empty queue: plain decrement.
+    assert_eq!(p.release(&cancelled, &tokens), None);
+    assert_eq!(p.in_use, 1);
+    // A new arrival queues behind the (now load-bearing) over-commit.
+    assert!(!p.acquire(1, 10));
+    // Releasing the over-commit must hand the freed capacity over.
+    assert_eq!(p.release_overflow(&cancelled, &tokens), Some(1));
+    assert_eq!(p.in_use, 1);
+    assert_eq!(p.live_queued(), 0);
+    assert_eq!(p.underflows, 0);
+}
+
+/// Bugfix regression (this PR): a double over-commit release used to
+/// `saturating_sub` its way into freeing a slot a real holder still
+/// occupied — admitting the queue twice off one booking and leaking
+/// capacity for the rest of the run. Now the spurious release is
+/// refused and counted.
+#[test]
+#[cfg_attr(debug_assertions, should_panic(expected = "over-commit release"))]
+fn double_migration_release_cannot_free_a_slot_twice() {
+    let mut p = Pool::new(Some(1));
+    let cancelled = vec![false; 3];
+    let tokens = toks(3);
+    assert!(p.acquire(0, 10)); // real holder, stays in service
+    assert!(!p.acquire_overflow(), "full ⇒ batch join");
+    assert!(!p.acquire(1, 10), "arrival queues behind the real slot");
+    // Legitimate over-commit release: no spare capacity yet.
+    assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+    assert_eq!(p.in_use, 1);
+    // The DOUBLE release (a bug upstream): in release builds it must
+    // not admit the queued entry — request 0 still holds the only
+    // slot — and must be recorded; in debug builds it asserts.
+    assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+    assert_eq!(p.underflows, 1, "double release must be counted");
+    assert_eq!(p.in_use, 1, "the real holder's unit must survive");
+    assert_eq!(p.live_queued(), 1, "the queue must not be admitted");
+    // The real holder's own release still works normally.
+    assert_eq!(p.release(&cancelled, &tokens), Some(1));
+}
+
+/// Bugfix regression (this PR): a plain double release on an empty
+/// pool is counted instead of silently clamped.
+#[test]
+#[cfg_attr(debug_assertions, should_panic(expected = "nothing in use"))]
+fn double_release_is_counted_not_masked() {
+    let mut p = Pool::new(Some(2));
+    let cancelled = vec![false; 1];
+    let tokens = toks(1);
+    assert!(p.acquire(0, 10));
+    assert_eq!(p.release(&cancelled, &tokens), None);
+    assert_eq!(p.underflows, 0);
+    assert_eq!(p.release(&cancelled, &tokens), None); // the bug
+    assert_eq!(p.underflows, 1);
+    assert_eq!(p.in_use, 0, "no wraparound, no phantom capacity");
+}
+
+#[test]
+fn drain_queue_returns_live_entries_in_fifo_order() {
+    let mut p = Pool::new(Some(1));
+    let mut cancelled = vec![false; 5];
+    assert!(p.acquire(0, 10));
+    for j in 1..5 {
+        assert!(!p.acquire(j, 10));
+    }
+    cancelled[2] = true;
+    p.cancel_queued(10);
+    assert_eq!(p.drain_queue(&cancelled), vec![1, 3, 4]);
+    assert_eq!(p.live_queued(), 0);
+    assert_eq!(p.queued_prompt_tokens(), 0);
+    assert_eq!(p.in_use, 1, "in-flight admissions are untouched");
+}
+
+// -----------------------------------------------------------------
+// Continuous batching: the token-gated pool
+// -----------------------------------------------------------------
+
+fn batch_pool(budget: u32, max_batch: Option<usize>) -> Pool {
+    let cfg = ContinuousBatchConfig {
+        prefill_tokens_per_tick: budget,
+        tick_interval: 0.25,
+        max_batch,
+        curve: crate::sim::batching::BatchLatencyCurve::Flat,
+    };
+    Pool::new(None).with_gate(Some(BatchGate::new(&cfg)))
+}
+
+#[test]
+fn token_gate_admits_until_budget_exhausts_then_queues() {
+    let mut p = batch_pool(25, None);
+    let cancelled = vec![false; 5];
+    let tokens = vec![10, 10, 10, 10, 10];
+    assert!(p.acquire(0, 10));
+    assert!(p.acquire(1, 10));
+    // 5 tokens left < 10: the third arrival queues.
+    assert!(!p.acquire(2, 10));
+    assert_eq!(p.in_use, 2);
+    assert_eq!(p.live_queued(), 1);
+    assert_eq!(p.queued_prompt_tokens(), 10);
+    // A release frees batch headroom but NOT budget: no slot
+    // transfer happens under the gate.
+    assert_eq!(p.release(&cancelled, &tokens), None);
+    assert_eq!(p.in_use, 1);
+    assert_eq!(p.live_queued(), 1, "budget-gated: release transfers nothing");
+    // The tick replenishes the budget and the queue drains FIFO.
+    p.tick();
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(2));
+    assert_eq!(p.try_admit(&cancelled, &tokens), None, "queue empty");
+    assert_eq!(p.in_use, 2);
+    let (admitted, capacity) = p.token_totals();
+    assert_eq!(admitted, 30);
+    assert_eq!(capacity, 50, "initial allotment + one tick");
+    // A busy tick (budget partially consumed) accrues capacity…
+    p.tick();
+    assert_eq!(p.token_totals().1, 75);
+    // …but an idle tick — full budget, empty queue — does not
+    // (review fix: idle tails must not dilute token utilization).
+    p.tick();
+    assert_eq!(p.token_totals().1, 75, "idle ticks offer no capacity");
+}
+
+#[test]
+fn token_gate_oversized_prompt_takes_a_fresh_tick() {
+    let mut p = batch_pool(32, None);
+    let cancelled = vec![false; 3];
+    let tokens = vec![100, 8, 8];
+    // An oversized prompt admits against a fresh budget, consuming
+    // all of it (no chunked prefill yet) — it cannot starve.
+    assert!(p.acquire(0, 100));
+    assert_eq!(p.in_use, 1);
+    // The emptied budget blocks even small prompts until the tick.
+    assert!(!p.acquire(1, 8));
+    p.tick();
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(1));
+    // A partially-consumed budget does NOT admit oversized prompts
+    // (only a fresh one does): head-of-line waits for its tick.
+    assert!(!p.acquire(2, 100));
+    assert_eq!(p.in_use, 2);
+}
+
+/// Review fix: a small arrival must not jump a queued larger prompt
+/// between ticks — token-gated admission stays FIFO even when the
+/// remaining budget would cover the newcomer.
+#[test]
+fn token_gate_admission_is_fifo_between_ticks() {
+    let mut p = batch_pool(40, None);
+    let cancelled = vec![false; 3];
+    let tokens = vec![10, 35, 5];
+    assert!(p.acquire(0, 10)); // 30 budget left
+    assert!(!p.acquire(1, 35), "35 > 30: queues");
+    // 5 ≤ 30 would fit, but request 1 is ahead: FIFO queues it.
+    assert!(!p.acquire(2, 5), "must not jump the queue");
+    assert_eq!(p.live_queued(), 2);
+    p.tick();
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(1), "FIFO head first");
+    assert_eq!(p.try_admit(&cancelled, &tokens), Some(2));
+    assert_eq!(p.in_use, 3);
+}
+
+#[test]
+fn token_gate_max_batch_caps_concurrency() {
+    let mut p = batch_pool(1000, Some(2));
+    let cancelled = vec![false; 4];
+    let tokens = vec![10; 4];
+    assert!(p.acquire(0, 10));
+    assert!(p.acquire(1, 10));
+    assert!(!p.acquire(2, 10), "max_batch reached");
+    p.tick();
+    assert_eq!(
+        p.try_admit(&cancelled, &tokens),
+        None,
+        "budget alone cannot override max_batch"
+    );
+    // A departure frees batch headroom; the queue drains.
+    assert_eq!(p.release(&cancelled, &tokens), Some(2));
+    assert_eq!(p.in_use, 2);
+    // Migrated-in joins bypass max_batch (handoff committed).
+    assert!(!p.acquire_overflow(), "batch join, never a real slot");
+    assert_eq!(p.in_use, 3);
+    assert_eq!(p.release_overflow(&cancelled, &tokens), None);
+    assert_eq!(p.in_use, 2);
+}
+
+/// With migration disabled, shard targeting is inert: the
+/// shard-targeted fleet is byte-identical to the legacy one under
+/// every balancer (no views are built, no RNG is drawn).
+#[test]
+fn shard_targeting_inert_without_migration() {
+    let sc = scenario(38);
+    let trace = trace_at_gap(150, 0.6, 21);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    for kind in BalancerKind::all() {
+        let legacy = FleetConfig::sharded(3, 1, kind);
+        let targeted = legacy
+            .clone()
+            .with_migration_targeting(MigrationTargeting::ShardTargeted);
+        let a = run_fleet(&sc, &trace, &policy, &legacy);
+        let b = run_fleet(&sc, &trace, &policy, &targeted);
+        assert_eq!(a.records, b.records, "{kind}: targeting must be inert");
+        assert_eq!(format!("{:?}", a.load), format!("{:?}", b.load));
+        assert_eq!(b.load.migration_targeted, 0);
+        assert_eq!(b.load.migration_fallbacks, 0);
+    }
+}
+
+/// Shard-targeted migration routes re-prefills into concrete shards:
+/// the targeted count matches the per-shard `migrated_in` booking,
+/// every migration either targeted a shard or took the fallback, and
+/// the run is bit-reproducible.
+#[test]
+fn shard_targeted_migration_books_target_shards() {
+    let sc = device_constrained_scenario(39);
+    let trace = trace_at_gap(150, 1.0, 22);
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let cfg = FleetConfig::sharded(4, 1, BalancerKind::LeastWork)
+        .with_migration_targeting(MigrationTargeting::ShardTargeted);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    let migrated = out.records.iter().filter(|r| r.migrated).count();
+    assert!(migrated > 0, "scenario must exercise migration");
+    assert!(out.load.migration_targeted > 0, "targeting must fire");
+    assert_eq!(
+        out.load.migration_targeted + out.load.migration_fallbacks,
+        migrated,
+        "every server-bound migration is targeted or falls back"
+    );
+    let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+    assert_eq!(booked, out.load.migration_targeted);
+    // All shards warm throughout a static fleet: no fallbacks.
+    assert_eq!(out.load.migration_fallbacks, 0);
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records, again.records);
+    assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+}
+
+/// Per-shard fault injection degrades only the faulty shard: on a
+/// round-robin K=2 fleet with wide gaps (no queueing), requests
+/// landed on the healthy shard are byte-identical to the fault-free
+/// run, while the fleet's tail strictly worsens. The fault stream is
+/// separate, so a no-fault config is untouched.
+#[test]
+fn shard_fault_degrades_only_faulty_shard() {
+    let sc = scenario(40);
+    let trace = trace_at_gap(80, 30.0, 23);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let base_cfg = FleetConfig::sharded(2, 4, BalancerKind::RoundRobin);
+    let fault_cfg = base_cfg.clone().with_shard_fault(
+        1,
+        ShardFault {
+            spike_prob: 1.0,
+            spike_scale: 10.0,
+        },
+    );
+    let base = run_fleet(&sc, &trace, &policy, &base_cfg);
+    let fault = run_fleet(&sc, &trace, &policy, &fault_cfg);
+    // Round-robin deals arrivals 0,1,0,1,…: even indices land on the
+    // healthy shard 0 and must be untouched.
+    for (i, (b, f)) in base.records.iter().zip(&fault.records).enumerate() {
+        if i % 2 == 0 {
+            assert_eq!(b, f, "healthy-shard request {i} perturbed");
+        }
+    }
+    let p99 = |o: &FleetOutcome| {
+        Summary::of(&o.records.iter().map(|r| r.ttft).collect::<Vec<_>>()).p99
+    };
+    let mean = |o: &FleetOutcome| {
+        Summary::of(&o.records.iter().map(|r| r.ttft).collect::<Vec<_>>()).mean
+    };
+    assert!(
+        mean(&fault) > mean(&base),
+        "degraded shard must worsen mean TTFT"
+    );
+    assert!(p99(&fault) > p99(&base), "degraded shard must worsen p99");
+}
+
+/// A mid-run outage forces the shard into Draining exactly once:
+/// queued streams re-route to the survivors, the victim finishes its
+/// in-flight work, retires a single time, and stops accruing
+/// shard-seconds (no leak: the total equals the per-shard lifetimes).
+#[test]
+fn outage_requeues_and_retires_exactly_once() {
+    let sc = device_constrained_scenario(41);
+    let trace = trace_at_gap(100, 0.2, 24);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    for targeting in [
+        MigrationTargeting::BaseEndpoint,
+        MigrationTargeting::ShardTargeted,
+    ] {
+        let cfg = FleetConfig::sharded(3, 1, BalancerKind::RoundRobin)
+            .with_migration_targeting(targeting)
+            .with_outage(10.0, 1);
+        let out = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(out.records.len(), trace.len(), "{targeting}: liveness");
+        assert_eq!(out.load.outage_count(), 1, "{targeting}");
+        assert!(
+            out.load.outage_requeues > 0,
+            "{targeting}: an overloaded shard must have had a queue to re-route"
+        );
+        assert_eq!(out.load.retire_count(1), 1, "{targeting}: exactly one retire");
+        let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+        assert!(
+            (out.load.shard_seconds - lifetimes).abs() < 1e-9,
+            "{targeting}: shard-seconds must decompose per shard"
+        );
+        assert!(
+            out.load.shards[1].lifetime_seconds < out.load.horizon,
+            "{targeting}: the dead shard must stop billing before the end"
+        );
+    }
+}
+
+/// A second outage on the same (already draining) shard is a no-op:
+/// one Outage event, at most one Retire, no double-billing.
+#[test]
+fn double_outage_is_idempotent() {
+    let sc = scenario(42);
+    let trace = trace_at_gap(80, 0.3, 25);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(2, 1, BalancerKind::JoinShortestQueue)
+        .with_outage(5.0, 1)
+        .with_outage(6.0, 1);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert_eq!(out.load.outage_count(), 1, "second outage must be a no-op");
+    assert!(out.load.retire_count(1) <= 1);
+    let lifetimes: f64 = out.load.shards.iter().map(|s| s.lifetime_seconds).sum();
+    assert!((out.load.shard_seconds - lifetimes).abs() < 1e-9);
+}
+
+/// Killing the only shard of a K=1 fleet degrades to drain-and-serve
+/// (there is nowhere to re-route): the run still terminates with
+/// every request resolved.
+#[test]
+fn outage_on_single_shard_fleet_still_terminates() {
+    let sc = scenario(43);
+    let trace = trace_at_gap(40, 0.3, 26);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::bounded(1).with_outage(2.0, 0);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert_eq!(out.load.outage_count(), 1);
+    assert_eq!(
+        out.load.outage_requeues, 0,
+        "staying on the draining shard is not a re-route"
+    );
+}
+
+/// An outage scheduled onto a shard index that never exists is a
+/// clean no-op, and outage events are recorded in the scale-event
+/// stream with the `Outage` kind (not conflated with scale-in).
+#[test]
+fn outage_event_bookkeeping() {
+    let sc = scenario(44);
+    let trace = trace_at_gap(60, 0.5, 27);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(2, 1, BalancerKind::RoundRobin)
+        .with_outage(3.0, 7) // never provisioned: no-op
+        .with_outage(4.0, 0);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert_eq!(out.load.outage_count(), 1);
+    let kinds: Vec<Sek> = out.load.scale_events.iter().map(|e| e.kind).collect();
+    assert!(kinds.contains(&Sek::Outage));
+    assert!(!kinds.contains(&Sek::DrainStart), "outage is not a scale-in");
+}
+
+// -----------------------------------------------------------------
+// Continuous batching: fleet-level behavior
+// -----------------------------------------------------------------
+
+use crate::sim::batching::BatchLatencyCurve;
+
+fn continuous_cfg(budget: u32, tick: f64, curve: BatchLatencyCurve) -> ContinuousBatchConfig {
+    ContinuousBatchConfig {
+        prefill_tokens_per_tick: budget,
+        tick_interval: tick,
+        max_batch: None,
+        curve,
+    }
+}
+
+/// With an effectively unlimited token budget and a flat latency
+/// curve, continuous batching degenerates to the unlimited-pool
+/// replay: admission is immediate and decode gaps are unscaled, so
+/// the records are byte-identical (tick events change only the
+/// event count, never a draw or a grant time).
+#[test]
+fn continuous_infinite_budget_flat_curve_matches_unlimited_replay() {
+    let sc = scenario(45);
+    let trace = WorkloadSpec::alpaca(200).at_rate(2.0).generate(28);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    let legacy = run_fleet(&sc, &trace, &policy, &FleetConfig::replay(false));
+    let cont = FleetConfig {
+        batching: BatchingMode::Continuous(continuous_cfg(
+            u32::MAX,
+            0.5,
+            BatchLatencyCurve::Flat,
+        )),
+        ..FleetConfig::replay(false)
+    };
+    let out = run_fleet(&sc, &trace, &policy, &cont);
+    assert_eq!(legacy.records, out.records);
+    assert_eq!(out.load.server_slots, None);
+    assert!(out.load.events_processed > legacy.load.events_processed, "ticks fired");
+    assert!(out.load.token_budget_utilization().is_some());
+}
+
+/// The batch latency curve reaches the perceived stream: with
+/// concurrent streams in the batch, a steep curve stretches decode
+/// past the consumption rate — identical TTFTs (prefill and
+/// admission are curve-independent), strictly longer delivered
+/// streams.
+#[test]
+fn batch_curve_slows_decode_but_not_ttft() {
+    // DeepSeek decode (~30 tok/s) so a realistic slowdown crosses
+    // the r_c = 5 tok/s pacing floor and becomes visible post-
+    // smoothing.
+    let sc = Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 46,
+            ..Default::default()
+        },
+    );
+    let trace = trace_at_gap(24, 0.25, 29);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let run_curve = |curve: BatchLatencyCurve| {
+        let cfg = FleetConfig {
+            batching: BatchingMode::Continuous(continuous_cfg(u32::MAX, 0.25, curve)),
+            ..FleetConfig::replay(false)
+        };
+        run_fleet(&sc, &trace, &policy, &cfg)
+    };
+    let flat = run_curve(BatchLatencyCurve::Flat);
+    let steep = run_curve(BatchLatencyCurve::Linear { alpha: 3.0 });
+    let dur = |o: &FleetOutcome| -> f64 {
+        o.records
+            .iter()
+            .map(|r| r.ttft + r.tbts.iter().sum::<f64>())
+            .sum::<f64>()
+    };
+    for (f, s) in flat.records.iter().zip(&steep.records) {
+        assert_eq!(
+            f.ttft.to_bits(),
+            s.ttft.to_bits(),
+            "prefill/admission must be curve-independent"
+        );
+    }
+    assert!(
+        dur(&steep) > dur(&flat) * 1.2,
+        "a steep batch curve must stretch delivered streams: {:.1}s vs {:.1}s",
+        dur(&steep),
+        dur(&flat)
+    );
+    // Batch-size telemetry recorded the crowding.
+    let peak = steep.load.peak_batch();
+    assert!(peak > 1, "concurrent arrivals must share the batch, peak={peak}");
+    assert!(!steep.load.batch_timeline.is_empty());
+    let times: Vec<f64> = steep.load.batch_timeline.iter().map(|b| b.time).collect();
+    assert!(times.windows(2).all(|w| w[0] <= w[1]), "timeline in event order");
+}
+
+/// Token-gated admission under sustained overload: every request
+/// still resolves (ticks drain the queue FIFO), queue delays are
+/// real, and the token-budget utilization is a sane ratio.
+#[test]
+fn continuous_overload_queues_on_token_budget_and_stays_live() {
+    let sc = scenario(47);
+    // ~60 tokens/s offered prompts vs a 40 tokens/s budget.
+    let trace = trace_at_gap(120, 0.5, 30);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig {
+        batching: BatchingMode::Continuous(continuous_cfg(
+            20,
+            0.5,
+            BatchLatencyCurve::Knee { knee: 8, alpha: 0.05 },
+        )),
+        ..FleetConfig::replay(false)
+    };
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len(), "liveness under token overload");
+    assert!(
+        out.load.server_queue_delay.max > 0.0,
+        "an overloaded token budget must queue admissions"
+    );
+    let util = out.load.token_budget_utilization().expect("continuous mode");
+    assert!(util > 0.0 && util.is_finite(), "token utilization {util}");
+    assert_eq!(out.load.release_underflows, 0);
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records, again.records, "continuous runs are deterministic");
+    assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+}
+
+/// Continuous batching composes with the autoscaler: the
+/// token-backlog/batch-depth signal scales the fleet out under a
+/// burst, cold shards are provisioned frozen (and accrue no token
+/// capacity until they warm — the review fix), queued prefills
+/// drain on warm-up, and the run stays live and bit-reproducible.
+#[test]
+fn continuous_batching_with_autoscaler_stays_live() {
+    let sc = scenario(50);
+    let trace = burst_then_calm(100, 20, 33);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue)
+        .with_batching(BatchingMode::Continuous(continuous_cfg(
+            32,
+            0.25,
+            BatchLatencyCurve::Knee { knee: 8, alpha: 0.05 },
+        )))
+        .with_autoscale(eager_reactive(1, 3, 1.0));
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len(), "liveness under burst + scaling");
+    assert!(
+        out.load.scale_out_count() >= 1,
+        "the batch-depth signal must trigger scale-out"
+    );
+    let util = out.load.token_budget_utilization().expect("continuous mode");
+    assert!(util > 0.0 && util.is_finite());
+    assert_eq!(out.load.release_underflows, 0);
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records, again.records);
+    assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+}
+
+// -----------------------------------------------------------------
+// Migration queue-delay estimate audit (this PR's bugfix sweep)
+// -----------------------------------------------------------------
+
+/// Empty-queue consistency: on an idle fleet a migrating stream
+/// admits instantly, so the predicted admission delay must be
+/// exactly 0 — making shard-targeted migration byte-identical to
+/// the base-endpoint fallback when shard RTTs are zero. The old
+/// work-over-capacity estimate charged phantom delay for the
+/// migrating stream's *own* slot booking (the queued-ahead
+/// off-by-one): at K=1 × 1 slot the only candidate shard is the
+/// stream's own, whose outstanding work is exactly the stream
+/// itself, and the old formula priced `own_sample / slots` seconds
+/// of nonexistent queueing into `t_m`. The K=2 × 4-slot variant
+/// pins the spare-real-slot rule on truly idle candidates.
+#[test]
+fn idle_fleet_shard_targeted_estimate_is_zero_and_matches_base_endpoint() {
+    let sc = device_constrained_scenario(48);
+    let trace = trace_at_gap(60, 40.0, 31);
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    for (k, slots) in [(1usize, 1usize), (2, 4)] {
+        let base = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &FleetConfig::sharded(k, slots, BalancerKind::RoundRobin),
+        );
+        let targeted = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &FleetConfig::sharded(k, slots, BalancerKind::RoundRobin)
+                .with_migration_targeting(MigrationTargeting::ShardTargeted),
+        );
+        let migrated = base.records.iter().filter(|r| r.migrated).count();
+        assert!(migrated > 0, "K={k}: scenario must exercise migration");
+        assert!(targeted.load.migration_targeted > 0, "K={k}");
+        assert_eq!(
+            base.records, targeted.records,
+            "K={k}×{slots}: idle-fleet targeting must price zero queue delay"
+        );
+    }
+}
+
+/// Draining-shard consistency: a draining shard is never a
+/// re-prefill target, so its (infinite, really) admission delay is
+/// never priced — the migration falls back to the base endpoint and
+/// is counted, instead of booking into a dying pool.
+#[test]
+fn draining_fleet_migrations_fall_back_not_priced() {
+    let sc = device_constrained_scenario(49);
+    let trace = trace_at_gap(50, 2.0, 32);
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let cfg = FleetConfig::bounded(2)
+        .with_migration_targeting(MigrationTargeting::ShardTargeted)
+        .with_outage(0.0, 0);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    let migrated = out.records.iter().filter(|r| r.migrated).count();
+    assert!(migrated > 0, "scenario must exercise migration");
+    assert!(
+        out.load.migration_fallbacks > 0,
+        "migrations after the outage must fall back, not target the draining shard"
+    );
+    // Only resolutions racing the t=0 outage (the first arrival) can
+    // have targeted a still-warm shard.
+    assert!(
+        out.load.migration_targeted <= 1,
+        "draining shard must not be targeted: {} targeted",
+        out.load.migration_targeted
+    );
+    let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+    assert_eq!(booked, out.load.migration_targeted);
+}
+
+/// A zero-second cold start still goes through the cold → warm
+/// transition (same event order), just instantaneously.
+#[test]
+fn zero_delay_cold_start_is_live() {
+    let sc = scenario(37);
+    let trace = burst_then_calm(80, 10, 20);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::sharded(1, 1, BalancerKind::JoinShortestQueue)
+        .with_autoscale(eager_reactive(1, 3, 0.0));
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert!(out.load.scale_out_count() >= 1);
+    assert_eq!(out.load.cold_start_seconds, 0.0);
+}
+
+/// Regression pin for the hot-path allocation sweep: the migration
+/// path now *borrows* the target endpoint ([`MigrationServer`])
+/// instead of cloning a `ServerEndpoint` per resolved stream, and
+/// the per-request RNG resumes in place instead of being cloned out
+/// of the state table. Both rewrites must be byte-invisible: a
+/// migration-heavy run (shard-targeted re-prefills, heterogeneous
+/// RTTs so `extra_rtt + delay` exercises real float folds, a shard
+/// fault, and a mid-run outage forcing base-endpoint fallbacks) is
+/// bit-reproducible and byte-identical across both event-queue
+/// backends.
+#[test]
+fn migration_heavy_run_byte_stable_across_backends() {
+    let sc = device_constrained_scenario(53);
+    let trace = trace_at_gap(150, 1.0, 41);
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let cfg = FleetConfig::sharded(3, 2, BalancerKind::LeastWork)
+        .with_shard_rtts(vec![0.0, 0.05, 0.12])
+        .with_migration_targeting(MigrationTargeting::ShardTargeted)
+        .with_shard_fault(
+            1,
+            ShardFault {
+                spike_prob: 0.3,
+                spike_scale: 4.0,
+            },
+        )
+        .with_outage(60.0, 2);
+    let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+    // The scenario actually exercises the rewritten paths.
+    assert!(
+        wheel.records.iter().filter(|r| r.migrated).count() > 0,
+        "scenario must exercise migration"
+    );
+    assert!(
+        wheel.load.migration_targeted > 0,
+        "scenario must book shard-targeted re-prefills"
+    );
+    // Bit-reproducible (the RNG resumes exactly where the old clone
+    // did), and byte-identical on the heap reference backend.
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(wheel.records, again.records, "not reproducible");
+    let heap = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &cfg.clone().with_event_queue(EventQueueKind::Heap),
+    );
+    assert_eq!(wheel.records, heap.records, "wheel/heap records diverged");
+    assert_eq!(
+        format!("{:?}", wheel.load),
+        format!("{:?}", heap.load),
+        "wheel/heap load reports diverged"
+    );
+}
+
+/// The JSQ/least-work incremental index is a pure optimization: a
+/// churny autoscaled run (scale-out rebuilds, drains, retirements)
+/// under each indexed balancer is byte-identical across backends and
+/// reproducible — and the debug-build parity assert inside
+/// `pick_indexed` re-derives every pick from a full linear scan.
+#[test]
+fn indexed_balancers_byte_stable_under_autoscaling_churn() {
+    let sc = scenario(59);
+    let trace = burst_then_calm(120, 40, 43);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    for balancer in [BalancerKind::JoinShortestQueue, BalancerKind::LeastWork] {
+        let cfg = FleetConfig::sharded(2, 1, balancer)
+            .with_autoscale(eager_reactive(1, 5, 0.5))
+            .with_outage(25.0, 0);
+        let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(wheel.records.len(), trace.len());
+        let heap = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &cfg.clone().with_event_queue(EventQueueKind::Heap),
+        );
+        assert_eq!(
+            wheel.records, heap.records,
+            "{balancer}: wheel/heap records diverged under churn"
+        );
+        assert_eq!(
+            format!("{:?}", wheel.load),
+            format!("{:?}", heap.load),
+            "{balancer}: wheel/heap load reports diverged under churn"
+        );
+    }
+}
+
+// -----------------------------------------------------------------
+// Paged KV: memory pressure, prefix caching, KV-aware failover,
+// and the grouped config surface
+// -----------------------------------------------------------------
+
+use crate::trace::generator::{LengthModel, SessionSpec};
+
+fn kv_cfg(pages: usize, chunk: u32, cache: bool) -> KvConfig {
+    KvConfig {
+        pages,
+        block_tokens: 16,
+        chunk_tokens: chunk,
+        tick_interval: 0.25,
+        prefix_caching: cache,
+        curve: BatchLatencyCurve::Flat,
+        ..KvConfig::default()
+    }
+}
+
+/// Satellite pin: the grouped sub-config surface (`with_server` /
+/// `with_control` / `with_faults`) and the historical flat builder
+/// chain describe the same fleet — the grouped accessors round-trip
+/// the flat chain, and a migration-heavy paged-KV run (heterogeneous
+/// RTTs, a shard fault, a mid-run outage, the heap backend) is
+/// byte-identical either way.
+#[test]
+fn grouped_config_surface_matches_flat_builder_shims() {
+    let sc = device_constrained_scenario(61);
+    let trace = trace_at_gap(80, 1.0, 44);
+    let policy = Policy::simple(PolicyKind::StochD, 1.0, true);
+    let kv = kv_cfg(256, 4096, true);
+    let fault = ShardFault {
+        spike_prob: 0.3,
+        spike_scale: 4.0,
+    };
+    let flat = FleetConfig::sharded(3, 2, BalancerKind::LeastWork)
+        .with_shard_rtts(vec![0.0, 0.05, 0.12])
+        .with_migration_targeting(MigrationTargeting::ShardTargeted)
+        .with_shard_fault(1, fault)
+        .with_outage(30.0, 2)
+        .with_event_queue(EventQueueKind::Heap)
+        .with_kv(kv);
+    let grouped = FleetConfig::sharded(1, 1, BalancerKind::RoundRobin)
+        .with_server(ServerSpec {
+            shards: 3,
+            server_slots: Some(2),
+            shard_rtts: vec![0.0, 0.05, 0.12],
+            batching: BatchingMode::PagedKv(kv),
+            pricing: PricingMode::JoinTime,
+        })
+        .with_control(ControlSpec {
+            balancer: BalancerKind::LeastWork,
+            autoscale: None,
+            migration_targeting: MigrationTargeting::ShardTargeted,
+            event_queue: EventQueueKind::Heap,
+            price_base_tails: true,
+        })
+        .with_faults(FaultPlan::default().fault(1, fault).outage(30.0, 2));
+    assert_eq!(
+        format!("{:?}", flat.server_spec()),
+        format!("{:?}", grouped.server_spec())
+    );
+    assert_eq!(
+        format!("{:?}", flat.control_spec()),
+        format!("{:?}", grouped.control_spec())
+    );
+    assert_eq!(
+        format!("{:?}", flat.fault_plan()),
+        format!("{:?}", grouped.fault_plan())
+    );
+    let fa = run_fleet(&sc, &trace, &policy, &flat);
+    let fb = run_fleet(&sc, &trace, &policy, &grouped);
+    assert_eq!(fa.records, fb.records, "grouped and flat configs diverged");
+    assert_eq!(format!("{:?}", fa.load), format!("{:?}", fb.load));
+}
+
+/// Tentpole: a page pool sized below the working set preempts the
+/// lowest-priority stream under decode growth — the run stays live,
+/// every stream keeps its token accounting (the §4.3 no-gaps /
+/// no-dups invariant — one inter-token gap stretches, counts never
+/// change), and the run is bit-stable across event-queue backends.
+#[test]
+fn paged_kv_memory_pressure_preempts_and_conserves_streams() {
+    let sc = scenario(62);
+    let spec = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 0.2 },
+        prompt: LengthModel::new(120.0, 0.3, 64, 200),
+        output: LengthModel::new(220.0, 0.3, 120, 320),
+        ..WorkloadSpec::alpaca(40)
+    };
+    let trace = spec.generate(45);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::replay(false).with_kv(kv_cfg(20, 4096, false));
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len(), "liveness under memory pressure");
+    assert!(
+        out.load.kv_preemptions > 0,
+        "a 20-page pool under decode growth must preempt"
+    );
+    assert_eq!(out.load.prefix_hit_rate(), None, "caching off counts no lookups");
+    assert!(out.load.shards[0].kv_pages_peak > 0);
+    assert_eq!(out.load.shards[0].kv_pages_total, 20);
+    for rec in &out.records {
+        assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len, "req {}", rec.id);
+        assert!(rec.tbts.iter().all(|&t| t > 0.0), "req {}", rec.id);
+    }
+    assert_eq!(out.load.release_underflows, 0);
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records, again.records, "preemption must be deterministic");
+    let heap = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &cfg.clone().with_event_queue(EventQueueKind::Heap),
+    );
+    assert_eq!(out.records, heap.records, "wheel/heap diverged under preemption");
+    assert_eq!(format!("{:?}", out.load), format!("{:?}", heap.load));
+}
+
+/// Tentpole: a hard outage in paged mode loses in-flight KV — every
+/// mid-decode stream on the dead shard is forced to re-prefill its
+/// full context, booked onto the migration target through the §4.3
+/// over-commit machinery, and token conservation still holds.
+#[test]
+fn paged_outage_forces_mid_decode_reprefill() {
+    let sc = Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed: 63,
+            ..Default::default()
+        },
+    );
+    let spec = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 0.5 },
+        output: LengthModel::new(250.0, 0.3, 150, 400),
+        ..WorkloadSpec::alpaca(40)
+    };
+    let trace = spec.generate(46);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let base = FleetConfig::sharded(2, 2, BalancerKind::RoundRobin)
+        .with_kv(kv_cfg(4096, 1024, false));
+    let cfg = base.clone().with_outage(8.0, 0);
+    let calm = run_fleet(&sc, &trace, &policy, &base);
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert!(
+        out.load.kv_forced_reprefills > 0,
+        "mid-decode streams on the dead shard must re-prefill"
+    );
+    assert_eq!(calm.load.kv_forced_reprefills, 0, "no outage, no KV loss");
+    // Forced migrations book their targets through the §4.3
+    // machinery, so the booking ledger still balances.
+    let booked: usize = out.load.shards.iter().map(|s| s.migrated_in).sum();
+    assert_eq!(booked, out.load.migration_targeted);
+    for rec in &out.records {
+        assert_eq!(rec.tbts.len() as u32 + 1, rec.output_len, "req {}", rec.id);
+        assert!(rec.tbts.iter().all(|&t| t > 0.0), "req {}", rec.id);
+    }
+    // The forced re-prefill is visible end-to-end: total delivered
+    // stream time strictly exceeds the outage-free run's.
+    let dur = |o: &FleetOutcome| -> f64 {
+        o.records
+            .iter()
+            .map(|r| r.ttft + r.tbts.iter().sum::<f64>())
+            .sum()
+    };
+    assert!(
+        dur(&out) > dur(&calm),
+        "KV loss must stretch delivered streams: {:.3}s vs {:.3}s",
+        dur(&out),
+        dur(&calm)
+    );
+    assert_eq!(out.load.release_underflows, 0);
+    let again = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records, again.records);
+    assert_eq!(format!("{:?}", out.load), format!("{:?}", again.load));
+}
+
+/// Acceptance: prefix caching on a session-heavy trace hits (>0
+/// hit-rate) and strictly lowers mean TTFT vs the same `KvConfig`
+/// with caching off. The cache draws no randomness, so the two runs
+/// share every draw — hits can only shrink prefill samples and
+/// admission charges, never grow them.
+#[test]
+fn prefix_caching_hits_and_strictly_lowers_mean_ttft() {
+    let sc = scenario(64);
+    let trace = SessionSpec::chat(8, 5, 2.0).generate(47);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let on = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &FleetConfig::replay(false).with_kv(kv_cfg(4096, 4096, true)),
+    );
+    let off = run_fleet(
+        &sc,
+        &trace,
+        &policy,
+        &FleetConfig::replay(false).with_kv(kv_cfg(4096, 4096, false)),
+    );
+    assert_eq!(on.records.len(), trace.len());
+    let rate = on.load.prefix_hit_rate().expect("caching on performs lookups");
+    assert!(rate > 0.0, "session prompts must hit the prefix index");
+    assert!(on.load.prefix_hits > 0 && on.load.prefix_lookups >= on.load.prefix_hits);
+    assert_eq!(off.load.prefix_hit_rate(), None, "caching off counts no lookups");
+    let mean = |o: &FleetOutcome| -> f64 {
+        o.records.iter().map(|r| r.ttft).sum::<f64>() / o.records.len() as f64
+    };
+    assert!(
+        mean(&on) < mean(&off),
+        "prefix hits must strictly lower mean TTFT: {:.4} vs {:.4}",
+        mean(&on),
+        mean(&off)
+    );
+    // Per-request: caching never makes any TTFT worse.
+    for (a, b) in on.records.iter().zip(&off.records) {
+        assert!(a.ttft <= b.ttft + 1e-12, "req {} regressed under caching", a.id);
+    }
+}
+
+/// Sarathi chunking: prompts larger than one chunk accrue budget
+/// across ticks instead of jumping the gate — admission queues form
+/// (real queue delay), yet every oversized prompt eventually admits
+/// and the token telemetry stays defined.
+#[test]
+fn oversized_prompts_chunk_across_ticks_and_stay_live() {
+    let sc = scenario(65);
+    let spec = WorkloadSpec {
+        arrival: Arrival::Fixed { gap: 1.0 },
+        prompt: LengthModel::new(200.0, 0.2, 100, 400),
+        ..WorkloadSpec::alpaca(30)
+    };
+    let trace = spec.generate(48);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let cfg = FleetConfig::replay(false).with_kv(kv_cfg(4096, 32, false));
+    let out = run_fleet(&sc, &trace, &policy, &cfg);
+    assert_eq!(out.records.len(), trace.len(), "oversized prompts must still admit");
+    assert!(
+        out.load.server_queue_delay.max > 0.0,
+        "chunked prefill must queue admissions across ticks"
+    );
+    let util = out
+        .load
+        .token_budget_utilization()
+        .expect("paged mode has a token gate");
+    assert!(util > 0.0 && util.is_finite());
+    assert_eq!(out.load.kv_preemptions, 0, "no memory pressure in a 4096-page pool");
+}
+
+// -----------------------------------------------------------------
+// Phase disaggregation: unified-default inertness, prefill→decode
+// handoff, and the KV-transfer-cost crossover
+// -----------------------------------------------------------------
+
+/// DeepSeek-class serving (slow prefill, ~30 tok/s decode) makes the
+/// decode tail dominate slot-holding time — the regime where phase
+/// disaggregation pays.
+fn deepseek_scenario(seed: u64) -> Scenario {
+    Scenario::new(
+        ServerProfile::deepseek_v25(),
+        DeviceProfile::xiaomi14_qwen0b5(),
+        Constraint::Server,
+        SimConfig {
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+fn zero_handoff_telemetry(load: &crate::metrics::LoadReport) {
+    assert_eq!(load.handoff_count, 0, "no handoffs outside disaggregation");
+    assert_eq!(load.kv_transfer_seconds, 0.0);
+    assert_eq!(load.handoff_fallbacks, 0);
+    for s in &load.shards {
+        assert_eq!(s.role, PoolRole::Unified, "undisaggregated shards stay Unified");
+        assert_eq!(s.handoff_in, 0);
+    }
+}
+
+/// With no `DisaggSpec` the role machinery must be provably inert:
+/// across a matrix of balancers × admission regimes (slot-legacy,
+/// continuous, paged KV) × autoscaling, every shard reports `Unified`,
+/// all handoff telemetry stays zero, and the run is byte-identical
+/// across event backends (wheel vs heap) and reproducible.
+#[test]
+fn unified_default_is_inert_across_config_matrix() {
+    let sc = scenario(67);
+    let trace = trace_at_gap(80, 0.5, 51);
+    let policy = Policy::simple(PolicyKind::StochS, 0.7, false);
+    for balancer in [BalancerKind::RoundRobin, BalancerKind::LeastWork] {
+        for batching in [
+            BatchingMode::SlotLegacy,
+            BatchingMode::Continuous(continuous_cfg(600, 0.25, BatchLatencyCurve::Linear {
+                alpha: 0.05,
+            })),
+            BatchingMode::PagedKv(kv_cfg(512, 4096, true)),
+        ] {
+            let mut cfg = FleetConfig::sharded(3, 2, balancer).with_batching(batching);
+            if balancer == BalancerKind::LeastWork {
+                cfg = cfg.with_autoscale(eager_reactive(1, 4, 0.5));
+            }
+            let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+            assert_eq!(wheel.records.len(), trace.len());
+            zero_handoff_telemetry(&wheel.load);
+            let again = run_fleet(&sc, &trace, &policy, &cfg);
+            assert_eq!(wheel.records, again.records, "{balancer}: not reproducible");
+            let heap = run_fleet(
+                &sc,
+                &trace,
+                &policy,
+                &cfg.clone().with_event_queue(EventQueueKind::Heap),
+            );
+            assert_eq!(
+                wheel.records, heap.records,
+                "{balancer}: wheel/heap records diverged"
+            );
+            assert_eq!(
+                format!("{:?}", wheel.load),
+                format!("{:?}", heap.load),
+                "{balancer}: wheel/heap load reports diverged"
+            );
+        }
+    }
+}
+
+/// The acceptance experiment (and its inverse). On a long-decode
+/// overload at equal provisioning — four single-slot shards either
+/// way — the 2P+2D split frees prefill slots at first-token time and
+/// absorbs decode tails through the handoff over-commit booking, so
+/// disaggregation beats the unified fleet on p99 *and* mean TTFT.
+/// With an absurd KV-transfer cost the same split loses on mean TBT
+/// (every handoff stretches a decode gap by 2 s) — the crossover
+/// where colocated serving wins.
+///
+/// Token-stream invariants are asserted exactly: the per-request RNG
+/// streams are config-independent, so the disaggregated run must
+/// reproduce the unified run's gap sequence with *only* `tbts[0]`
+/// stretched by the transfer cost — no gaps lost, none duplicated.
+#[test]
+fn disaggregation_beats_unified_ttft_and_loses_tbt_at_high_transfer_cost() {
+    let sc = deepseek_scenario(71);
+    let trace = trace_at_gap(150, 0.8, 47);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let constraint = policy.constraint();
+    let unified_cfg = FleetConfig::sharded(4, 1, BalancerKind::LeastWork);
+    let disagg_cfg = unified_cfg.clone().with_disagg(DisaggSpec::split(2, 2));
+    let costly_cfg = unified_cfg.clone().with_disagg(DisaggSpec {
+        transfer: KvTransferCost {
+            per_token: 0.0,
+            overhead: 2.0,
+        },
+        ..DisaggSpec::split(2, 2)
+    });
+
+    let unified = run_fleet(&sc, &trace, &policy, &unified_cfg);
+    let disagg = run_fleet(&sc, &trace, &policy, &disagg_cfg);
+    let costly = run_fleet(&sc, &trace, &policy, &costly_cfg);
+
+    // Equal provisioning, typed roles.
+    assert_eq!(unified.load.shards.len(), 4);
+    assert_eq!(disagg.load.shards.len(), 4);
+    for (i, s) in disagg.load.shards.iter().enumerate() {
+        let want = if i < 2 { PoolRole::Prefill } else { PoolRole::Decode };
+        assert_eq!(s.role, want, "shard {i} role");
+    }
+
+    // Every server-won stream handed off; telemetry is consistent and
+    // confined to the decode pool.
+    zero_handoff_telemetry(&unified.load);
+    assert_eq!(disagg.load.handoff_count, trace.len(), "all streams hand off");
+    assert_eq!(disagg.load.handoff_fallbacks, 0, "static decode pool always admits");
+    assert!(disagg.load.kv_transfer_seconds > 0.0);
+    assert_eq!(
+        disagg.load.shards.iter().map(|s| s.handoff_in).sum::<usize>(),
+        disagg.load.handoff_count,
+        "handoffs land on exactly one target each"
+    );
+    assert!(disagg.load.shards[..2].iter().all(|s| s.handoff_in == 0));
+    assert_eq!(disagg.load.migration_targeted, 0, "handoff is not §4.3 migration");
+    // Prefill admits everything; decode shards admit nothing directly.
+    assert!(disagg.load.shards[2..].iter().all(|s| s.admitted == 0));
+    // The costly cell's ledger is exact: overhead-only transfer at 2 s
+    // per handoff.
+    assert_eq!(costly.load.kv_transfer_seconds, 2.0 * costly.load.handoff_count as f64);
+
+    // Stream invariants: same token counts per request, gaps identical
+    // except the first, which is stretched by exactly the transfer cost.
+    for (u, c) in unified.records.iter().zip(&costly.records) {
+        assert_eq!(u.id, c.id);
+        assert_eq!(u.output_len, c.output_len);
+        assert_eq!(u.tbts.len(), c.tbts.len(), "req {}: token count changed", u.id);
+        assert_eq!(c.tbts[0], u.tbts[0] + 2.0, "req {}: transfer lands in gap 0", u.id);
+        assert_eq!(u.tbts[1..], c.tbts[1..], "req {}: later gaps untouched", u.id);
+    }
+
+    let report = |out: &FleetOutcome| crate::metrics::Report::from_records(&out.records, constraint);
+    let (u, d, x) = (report(&unified), report(&disagg), report(&costly));
+    assert!(
+        d.ttft.p99 < u.ttft.p99,
+        "disagg must beat unified p99 TTFT: {:.2} vs {:.2}",
+        d.ttft.p99,
+        u.ttft.p99
+    );
+    assert!(
+        d.ttft.mean < u.ttft.mean,
+        "disagg must beat unified mean TTFT: {:.2} vs {:.2}",
+        d.ttft.mean,
+        u.ttft.mean
+    );
+    // The crossover: a 2 s-per-handoff interconnect erases the TBT
+    // story — unified wins mean TBT, and the cheap interconnect sits
+    // strictly between.
+    assert!(
+        x.tbt.mean > u.tbt.mean,
+        "costly transfer must lose mean TBT: {:.4} vs {:.4}",
+        x.tbt.mean,
+        u.tbt.mean
+    );
+    assert!(d.tbt.mean < x.tbt.mean);
+    assert!(d.tbt.mean >= u.tbt.mean, "handoff can only stretch gaps");
+}
+
+/// Disaggregated runs hold the determinism contract like every other
+/// fleet shape: byte-identical across event-queue backends and
+/// reproducible, under both slot-legacy and paged-KV admission with
+/// decode-pool autoscaling in play. Paged decode targets account the
+/// handed-off KV footprint (pages peak > 0 on decode shards) and free
+/// it at stream end (the run terminates with no stuck pool).
+#[test]
+fn disaggregated_run_byte_stable_across_backends() {
+    let sc = deepseek_scenario(73);
+    let trace = trace_at_gap(100, 0.7, 49);
+    let policy = Policy::simple(PolicyKind::ServerOnly, 1.0, false);
+    let spec = DisaggSpec {
+        decode_autoscale: Some(eager_reactive(1, 3, 0.5)),
+        ..DisaggSpec::split(2, 2)
+    };
+    for cfg in [
+        FleetConfig::sharded(4, 1, BalancerKind::LeastWork).with_disagg(spec),
+        FleetConfig::sharded(4, 1, BalancerKind::LeastWork)
+            .with_kv(kv_cfg(2048, 4096, true))
+            .with_disagg(spec),
+    ] {
+        let wheel = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(wheel.records.len(), trace.len());
+        assert!(wheel.load.handoff_count > 0, "scenario must exercise handoff");
+        if matches!(cfg.batching, BatchingMode::PagedKv(_)) {
+            assert!(
+                wheel
+                    .load
+                    .shards
+                    .iter()
+                    .filter(|s| s.role == PoolRole::Decode)
+                    .any(|s| s.kv_pages_peak > 0),
+                "handed-off KV must occupy decode-pool pages"
+            );
+        }
+        let again = run_fleet(&sc, &trace, &policy, &cfg);
+        assert_eq!(wheel.records, again.records, "not reproducible");
+        let heap = run_fleet(
+            &sc,
+            &trace,
+            &policy,
+            &cfg.clone().with_event_queue(EventQueueKind::Heap),
+        );
+        assert_eq!(wheel.records, heap.records, "wheel/heap records diverged");
+        assert_eq!(
+            format!("{:?}", wheel.load),
+            format!("{:?}", heap.load),
+            "wheel/heap load reports diverged"
+        );
+    }
+}

@@ -50,6 +50,13 @@ pub struct KvConfig {
     /// `LoadReport::prefix_evictions`. Not part of the CLI label/parse
     /// spelling (`PAGES:BLOCK:CHUNK:cache|nocache` keeps its arity).
     pub prefix_cache_entries: usize,
+    /// Optional time-to-live for prefix-index entries, in simulated
+    /// seconds since the entry was last touched (inserted or served).
+    /// `None` (the default) keeps the pure-LRU behavior byte-for-byte;
+    /// `Some(ttl)` additionally expires stale entries at lookup/insert
+    /// time, counting expirations into the same eviction total as LRU.
+    /// Like the entry budget, not part of the label/parse spelling.
+    pub prefix_cache_ttl: Option<f64>,
     /// Per-token decode latency vs batch size (same shape as
     /// continuous batching — paged admission changes *who* is in the
     /// batch, not how a batch decodes).
@@ -65,6 +72,7 @@ impl Default for KvConfig {
             tick_interval: 0.25,
             prefix_caching: true,
             prefix_cache_entries: 1024,
+            prefix_cache_ttl: None,
             curve: BatchLatencyCurve::Knee {
                 knee: 8,
                 alpha: 0.05,
@@ -95,6 +103,7 @@ impl KvConfig {
             },
             prefix_caching: self.prefix_caching,
             prefix_cache_entries: self.prefix_cache_entries.max(1),
+            prefix_cache_ttl: self.prefix_cache_ttl.filter(|t| *t > 0.0),
             curve: self.curve,
         }
     }
@@ -172,6 +181,10 @@ pub struct KvGate {
     /// Last-touch stamp per indexed length (monotone `clock` values),
     /// driving LRU eviction when the entry budget is exceeded.
     recency: std::collections::HashMap<u32, u64>,
+    /// Last-touch *simulated time* per indexed length, driving TTL
+    /// expiry when `cfg.prefix_cache_ttl` is set. Unused (empty checks
+    /// aside) under pure LRU.
+    touched: std::collections::HashMap<u32, f64>,
     clock: u64,
     evictions: u64,
     hits: u64,
@@ -190,6 +203,7 @@ impl KvGate {
             capacity_tokens: cfg.chunk_tokens as u64,
             index: BTreeSet::new(),
             recency: std::collections::HashMap::new(),
+            touched: std::collections::HashMap::new(),
             clock: 0,
             evictions: 0,
             hits: 0,
@@ -282,17 +296,19 @@ impl KvGate {
     /// cached token count (0 = miss). The cached prefix is the longest
     /// block-aligned previously-prefilled length not exceeding this
     /// prompt's block-aligned length, clamped to `len − 1` so at least
-    /// one token always prefills (TTFT stays positive).
-    pub fn prefix_lookup(&mut self, len: u32) -> u32 {
+    /// one token always prefills (TTFT stays positive). `now` is the
+    /// simulated time of the lookup, consulted only under TTL expiry.
+    pub fn prefix_lookup(&mut self, len: u32, now: f64) -> u32 {
         if !self.cfg.prefix_caching || len == 0 {
             return 0;
         }
+        self.expire(now);
         self.lookups += 1;
         let aligned = len - len % self.cfg.block_tokens;
         let entry = self.index.range(..=aligned).next_back().copied();
         if let Some(e) = entry {
             // A hit refreshes the serving entry's LRU position.
-            self.touch(e);
+            self.touch(e, now);
         }
         let cached = entry.unwrap_or(0).min(len.saturating_sub(1));
         if cached > 0 {
@@ -301,19 +317,21 @@ impl KvGate {
         cached
     }
 
-    /// Record a prompt of `len` tokens as prefilled on this shard,
-    /// evicting the least-recently-used entry when the insert pushes
-    /// the index past `cfg.prefix_cache_entries`.
-    pub fn prefix_insert(&mut self, len: u32) {
+    /// Record a prompt of `len` tokens as prefilled on this shard at
+    /// simulated time `now`, evicting the least-recently-used entry
+    /// when the insert pushes the index past `cfg.prefix_cache_entries`
+    /// (and expiring stale entries first under TTL).
+    pub fn prefix_insert(&mut self, len: u32, now: f64) {
         if !self.cfg.prefix_caching {
             return;
         }
+        self.expire(now);
         let aligned = len - len % self.cfg.block_tokens;
         if aligned == 0 {
             return;
         }
         self.index.insert(aligned);
-        self.touch(aligned);
+        self.touch(aligned, now);
         while self.index.len() > self.cfg.prefix_cache_entries {
             // Stamps are unique (one monotone clock), so the argmin —
             // and with it the whole eviction order — is deterministic.
@@ -325,13 +343,44 @@ impl KvGate {
                 .expect("index and recency stay in lockstep");
             self.index.remove(&lru);
             self.recency.remove(&lru);
+            self.touched.remove(&lru);
             self.evictions += 1;
         }
     }
 
-    fn touch(&mut self, aligned: u32) {
+    /// TTL expiry pass: drop every entry whose last touch is older than
+    /// `cfg.prefix_cache_ttl` seconds. The index is ordered, so the
+    /// expiry order — and the eviction count — is deterministic. A
+    /// no-op (no allocation, no counter movement) when TTL is unset.
+    fn expire(&mut self, now: f64) {
+        let Some(ttl) = self.cfg.prefix_cache_ttl else {
+            return;
+        };
+        let stale: Vec<u32> = self
+            .index
+            .iter()
+            .copied()
+            .filter(|len| {
+                self.touched
+                    .get(len)
+                    .map(|&at| now - at > ttl)
+                    .unwrap_or(false)
+            })
+            .collect();
+        for len in stale {
+            self.index.remove(&len);
+            self.recency.remove(&len);
+            self.touched.remove(&len);
+            self.evictions += 1;
+        }
+    }
+
+    fn touch(&mut self, aligned: u32, now: f64) {
         self.clock += 1;
         self.recency.insert(aligned, self.clock);
+        if self.cfg.prefix_cache_ttl.is_some() {
+            self.touched.insert(aligned, now);
+        }
     }
 
     /// (prefix-cache hits, lookups) since the gate was created.
@@ -470,15 +519,15 @@ mod tests {
     #[test]
     fn prefix_index_hits_block_aligned_prefixes() {
         let mut g = gate(1000, 16, 4096);
-        assert_eq!(g.prefix_lookup(100), 0, "cold index misses");
-        g.prefix_insert(100); // indexes floor(100/16)*16 = 96
-        assert_eq!(g.prefix_lookup(100), 96);
-        assert_eq!(g.prefix_lookup(200), 96, "longest prefix ≤ own length");
-        assert_eq!(g.prefix_lookup(90), 0, "shorter prompts miss (80 < 96)");
-        g.prefix_insert(64);
-        assert_eq!(g.prefix_lookup(90), 64);
+        assert_eq!(g.prefix_lookup(100, 0.0), 0, "cold index misses");
+        g.prefix_insert(100, 0.0); // indexes floor(100/16)*16 = 96
+        assert_eq!(g.prefix_lookup(100, 0.0), 96);
+        assert_eq!(g.prefix_lookup(200, 0.0), 96, "longest prefix ≤ own length");
+        assert_eq!(g.prefix_lookup(90, 0.0), 0, "shorter prompts miss (80 < 96)");
+        g.prefix_insert(64, 0.0);
+        assert_eq!(g.prefix_lookup(90, 0.0), 64);
         // A fully-covered prompt still prefills at least one token.
-        assert_eq!(g.prefix_lookup(96), 95);
+        assert_eq!(g.prefix_lookup(96, 0.0), 95);
         let (hits, lookups) = g.prefix_stats();
         assert_eq!((hits, lookups), (4, 6));
     }
@@ -490,21 +539,21 @@ mod tests {
             block_tokens: 16,
             ..KvConfig::default()
         });
-        g.prefix_insert(16);
-        g.prefix_insert(32);
+        g.prefix_insert(16, 0.0);
+        g.prefix_insert(32, 0.0);
         assert_eq!(g.prefix_evictions(), 0, "within budget");
         // A third insert evicts the least-recently-used entry (16).
-        g.prefix_insert(48);
+        g.prefix_insert(48, 0.0);
         assert_eq!(g.prefix_evictions(), 1);
-        assert_eq!(g.prefix_lookup(17), 0, "16 was evicted");
+        assert_eq!(g.prefix_lookup(17, 0.0), 0, "16 was evicted");
         // A lookup hit refreshes recency: touch 32, insert 64 → the LRU
         // victim is now 48, not 32.
-        assert_eq!(g.prefix_lookup(33), 32);
-        g.prefix_insert(64);
+        assert_eq!(g.prefix_lookup(33, 0.0), 32);
+        g.prefix_insert(64, 0.0);
         assert_eq!(g.prefix_evictions(), 2);
-        assert_eq!(g.prefix_lookup(49), 32, "48 evicted, 32 kept");
+        assert_eq!(g.prefix_lookup(49, 0.0), 32, "48 evicted, 32 kept");
         // Re-inserting an indexed length refreshes it without eviction.
-        g.prefix_insert(64);
+        g.prefix_insert(64, 0.0);
         assert_eq!(g.prefix_evictions(), 2);
         // Degenerate budgets clamp to one entry instead of thrashing.
         assert_eq!(
@@ -524,8 +573,42 @@ mod tests {
             prefix_caching: false,
             ..KvConfig::default()
         });
-        g.prefix_insert(100);
-        assert_eq!(g.prefix_lookup(100), 0);
+        g.prefix_insert(100, 0.0);
+        assert_eq!(g.prefix_lookup(100, 0.0), 0);
         assert_eq!(g.prefix_stats(), (0, 0));
+    }
+
+    #[test]
+    fn prefix_index_ttl_expires_stale_entries() {
+        let mut g = KvGate::new(&KvConfig {
+            prefix_cache_ttl: Some(10.0),
+            block_tokens: 16,
+            ..KvConfig::default()
+        });
+        g.prefix_insert(32, 0.0);
+        assert_eq!(g.prefix_lookup(33, 5.0), 32, "within TTL");
+        // The hit at t=5 refreshed the stamp: still live at t=14.
+        assert_eq!(g.prefix_lookup(33, 14.0), 32);
+        // 14 + 10 < 25: expired before this lookup runs.
+        assert_eq!(g.prefix_lookup(33, 25.0), 0, "stale entry expired");
+        assert_eq!(g.prefix_evictions(), 1, "TTL expiry counts as eviction");
+        // Insert-side expiry: an old entry vanishes when a new insert
+        // arrives past its deadline, without needing a lookup.
+        g.prefix_insert(64, 25.0);
+        g.prefix_insert(128, 40.0);
+        assert_eq!(g.prefix_evictions(), 2);
+        assert_eq!(g.prefix_lookup(70, 40.0), 0, "64 expired at insert time");
+        assert_eq!(g.prefix_lookup(130, 40.0), 128);
+        // Non-positive TTLs normalize away instead of evicting
+        // everything on sight.
+        assert_eq!(
+            KvConfig {
+                prefix_cache_ttl: Some(0.0),
+                ..KvConfig::default()
+            }
+            .normalized()
+            .prefix_cache_ttl,
+            None
+        );
     }
 }

@@ -22,6 +22,7 @@ use crate::sim::autoscaler::AutoscalerKind;
 use crate::sim::balancer::BalancerKind;
 use crate::sim::batching::BatchLatencyCurve;
 use crate::sim::event_queue::EventQueueKind;
+use crate::sim::fleet::PoolRole;
 use crate::sim::kv::KvConfig;
 
 /// Uniform label parsing for CLI-facing enums.
@@ -83,6 +84,14 @@ impl ParseLabel for KvConfig {
     const VALID: &'static str = "PAGES[:BLOCK[:CHUNK[:cache|nocache]]]";
     fn parse_label(s: &str) -> Option<Self> {
         KvConfig::parse(s)
+    }
+}
+
+impl ParseLabel for PoolRole {
+    const WHAT: &'static str = "pool role";
+    const VALID: &'static str = "unified (alias colocated), prefill (alias p), decode (alias d)";
+    fn parse_label(s: &str) -> Option<Self> {
+        PoolRole::parse(s)
     }
 }
 
@@ -185,6 +194,21 @@ mod tests {
         assert_eq!((mid.pages, mid.block_tokens, mid.chunk_tokens), (1024, 8, 64));
     }
 
+    #[test]
+    fn pool_role_labels_round_trip() {
+        for role in [PoolRole::Unified, PoolRole::Prefill, PoolRole::Decode] {
+            assert_eq!(PoolRole::parse_label(role.label()), Some(role));
+        }
+        for (alias, want) in [
+            ("colocated", PoolRole::Unified),
+            ("p", PoolRole::Prefill),
+            ("d", PoolRole::Decode),
+            ("DECODE", PoolRole::Decode),
+        ] {
+            assert_eq!(PoolRole::parse_label(alias), Some(want), "{alias}");
+        }
+    }
+
     /// The PR-5 regression class: a trailing field must reject across
     /// the whole convention, not silently run a different config.
     #[test]
@@ -196,6 +220,7 @@ mod tests {
         assert_eq!(BalancerKind::parse_label("rr:extra"), None);
         assert_eq!(AutoscalerKind::parse_label("reactive:fast"), None);
         assert_eq!(EventQueueKind::parse_label("wheel:extra"), None);
+        assert_eq!(PoolRole::parse_label("prefill:extra"), None);
     }
 
     #[test]
